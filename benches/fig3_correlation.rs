@@ -1,0 +1,22 @@
+//! Regenerates paper Fig. 3: correlation between joint-torque variation
+//! and step-wise redundancy (attention mass), per task and pooled.
+//!
+//! Expected shape: clearly positive correlation (the paper's basis for
+//! using torque as a lightweight redundancy surrogate).
+
+use rapid::config::presets::libero_preset;
+use rapid::experiments::{fig3, Backends};
+
+fn main() {
+    let sys = libero_preset();
+    let mut backends = Backends::pjrt_or_analytic(sys.episode.seed);
+    let t0 = std::time::Instant::now();
+    let data = fig3::run(&sys, &mut backends, 4);
+    println!("Joint torque variation vs attention mass:");
+    for (task, dtau, _, r, rho) in &data.series {
+        println!("  {:<16} n={:<5} pearson r = {r:+.3}  spearman = {rho:+.3}", task.name(), dtau.len());
+    }
+    println!("  pooled            pearson r = {:+.3}  spearman = {:+.3}", data.pooled_pearson, data.pooled_spearman);
+    println!("positive correlation: {}", data.pooled_pearson > 0.3);
+    println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,29 @@
+//! Regenerates the paper's §VI-D.1 hyper-parameter discussion: the
+//! latency/offload trade-off over (θ_comp, θ_red), around the paper's
+//! optimum (0.65, 0.35).
+
+use rapid::config::presets::libero_preset;
+use rapid::experiments::{sweep, Backends};
+
+fn main() {
+    let sys = libero_preset();
+    let mut backends = Backends::pjrt_or_analytic(sys.episode.seed);
+    let t0 = std::time::Instant::now();
+    let (table, points) = sweep::run(
+        &sys,
+        &mut backends,
+        &[0.35, 0.5, 0.65, 0.9, 1.3],
+        &[0.2, 0.35, 0.55],
+        2,
+    );
+    print!("{}", table.render());
+    let best = points
+        .iter()
+        .min_by(|a, b| a.total_lat.partial_cmp(&b.total_lat).unwrap())
+        .unwrap();
+    println!(
+        "best total latency {:.1}ms at (theta_comp={:.2}, theta_red={:.2}); paper optimum (0.65, 0.35)",
+        best.total_lat, best.theta_comp, best.theta_red
+    );
+    println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
+}

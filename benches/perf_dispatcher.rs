@@ -1,0 +1,53 @@
+//! L3 hot-path microbenchmarks (§VI-D.2 overhead + EXPERIMENTS.md §Perf):
+//! dispatcher tick cost, decision cost, rolling-stat update, and the
+//! fraction of the 500 Hz sensor budget consumed.
+
+use rapid::benchkit::{header, Bench};
+use rapid::config::SystemConfig;
+use rapid::dispatcher::RapidDispatcher;
+use rapid::experiments::overhead;
+use rapid::robot::{Jv, SensorFrame};
+use rapid::util::RollingStats;
+
+fn main() {
+    let sys = SystemConfig::default();
+    let mut bench = Bench::new().with_budget_ms(1000.0);
+
+    header("rolling statistics");
+    let mut rs = RollingStats::new(sys.dispatcher.window_acc);
+    let mut i = 0u64;
+    bench.run("rolling_stats.push+zscore", || {
+        i = i.wrapping_add(1);
+        rs.push((i % 17) as f64 * 0.1);
+        std::hint::black_box(rs.zscore(1.0, 1e-6));
+    });
+
+    header("dispatcher sensor tick (observe)");
+    let mut d = RapidDispatcher::new(&sys.dispatcher, 1.0 / sys.robot.sensor_hz);
+    let mut step = 0usize;
+    bench.run("dispatcher.observe", || {
+        step += 1;
+        let f = SensorFrame {
+            step,
+            q: Jv::splat(0.1),
+            dq: Jv::splat(0.2 + 0.001 * (step % 7) as f64),
+            tau: Jv::splat(1.0 + 0.01 * (step % 5) as f64),
+        };
+        std::hint::black_box(d.observe(&f));
+    });
+
+    header("dispatcher control decision");
+    bench.run("dispatcher.decide", || {
+        std::hint::black_box(d.decide(false));
+    });
+
+    header("sensor budget share (500 Hz => 2 ms/tick)");
+    let r = overhead::run(&sys, 0.06);
+    println!(
+        "tick {:.0}ns = {:.4}% of budget; state {} bytes; system-level overhead share target 5-7%",
+        r.tick_ns,
+        100.0 * r.tick_budget_frac,
+        r.state_bytes
+    );
+    assert!(r.tick_budget_frac < 0.05, "dispatcher busts the sensor budget");
+}

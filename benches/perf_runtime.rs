@@ -1,0 +1,86 @@
+//! Runtime hot-path benchmarks (EXPERIMENTS.md §Perf): PJRT inference
+//! latency for both variants with device-resident weights, plus the
+//! end-to-end episode driver throughput on both backend kinds.
+
+use rapid::benchkit::{header, Bench};
+use rapid::config::{PolicyKind, SystemConfig};
+use rapid::experiments::Backends;
+use rapid::robot::TaskKind;
+use rapid::serve::run_episode;
+use rapid::{D_PROP, D_VIS};
+
+fn main() {
+    let sys = SystemConfig::default();
+    let mut bench = Bench::new().with_budget_ms(2000.0);
+
+    let obs = {
+        let mut o = [0f32; D_VIS];
+        o[0] = 0.3;
+        o[7] = 0.5;
+        o[15] = 0.5;
+        o
+    };
+    let proprio = [0f32; D_PROP];
+
+    // §Perf before/after: the naive path re-uploads the weight blob on
+    // every call; the shipped runtime keeps weights device-resident.
+    if let Ok(meta) = rapid::runtime::ArtifactMeta::load(rapid::runtime::ArtifactMeta::default_dir()) {
+        if let Ok(client) = rapid::runtime::RuntimeClient::cpu() {
+            header("weights upload cost (naive per-call path, avoided)");
+            let cloud = meta.variant("cloud").unwrap();
+            let host = rapid::runtime::artifact::read_weights(&cloud.weights_path).unwrap();
+            bench.run("naive.cloud.weights_upload", || {
+                std::hint::black_box(
+                    client.raw().buffer_from_host_buffer::<f32>(&host, &[host.len()], None).unwrap(),
+                );
+            });
+        }
+    }
+
+    match Backends::try_pjrt() {
+        Ok(mut b) => {
+            header("PJRT inference (device-resident weights)");
+            bench.run("pjrt.edge.infer", || {
+                std::hint::black_box(b.edge.infer(&obs, &proprio, 1));
+            });
+            bench.run("pjrt.cloud.infer", || {
+                std::hint::black_box(b.cloud.infer(&obs, &proprio, 1));
+            });
+            println!("measured means: edge {:.0}µs cloud {:.0}µs", b.edge.mean_us(), b.cloud.mean_us());
+
+            header("end-to-end episode (PJRT models, RAPID policy)");
+            let mut seed = 0u64;
+            bench.run("episode.pickplace.rapid.pjrt", || {
+                seed += 1;
+                let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
+                std::hint::black_box(run_episode(
+                    &sys,
+                    TaskKind::PickPlace,
+                    strategy,
+                    b.edge.as_mut(),
+                    b.cloud.as_mut(),
+                    seed,
+                    false,
+                ));
+            });
+        }
+        Err(e) => println!("[perf_runtime] PJRT unavailable ({e}); skipping PJRT section"),
+    }
+
+    header("end-to-end episode (analytic models, RAPID policy)");
+    let mut b = Backends::analytic(1);
+    let mut seed = 0u64;
+    bench.run("episode.pickplace.rapid.analytic", || {
+        seed += 1;
+        let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
+        std::hint::black_box(run_episode(
+            &sys,
+            TaskKind::PickPlace,
+            strategy,
+            b.edge.as_mut(),
+            b.cloud.as_mut(),
+            seed,
+            false,
+        ));
+    });
+}

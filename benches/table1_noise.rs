@@ -1,0 +1,23 @@
+//! Regenerates paper Table I: vision-based dynamic strategy under
+//! Standard / Visual Noise / Distraction.
+//!
+//! Expected shape (paper): total latency grows 395 → 520 → 685 ms as noise
+//! forces more offloads; edge residency shrinks; total load constant.
+
+use rapid::config::presets::libero_preset;
+use rapid::experiments::{tab1, Backends};
+
+fn main() {
+    let sys = libero_preset();
+    let mut backends = Backends::pjrt_or_analytic(sys.episode.seed);
+    let t0 = std::time::Instant::now();
+    let (table, rows) = tab1::run(&sys, &mut backends, 4);
+    print!("{}", table.render());
+    println!(
+        "shape checks: monotone latency {}; edge shrinks {}; load constant {}",
+        rows[0].total_lat < rows[1].total_lat && rows[1].total_lat < rows[2].total_lat,
+        rows[2].edge_gb < rows[0].edge_gb,
+        rows.iter().all(|r| (r.total_gb - sys.total_model_gb).abs() < 1e-6),
+    );
+    println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,24 @@
+//! Regenerates paper Table II: attention distribution and step-wise action
+//! redundancy per task (Pick & Place L=50, Drawer L=80, Peg L=60).
+//!
+//! Expected shape: redundant actions > 80%, W_crit ~ 10x W_red.
+
+use rapid::config::presets::libero_preset;
+use rapid::experiments::{tab2, Backends};
+
+fn main() {
+    let sys = libero_preset();
+    let mut backends = Backends::pjrt_or_analytic(sys.episode.seed);
+    let t0 = std::time::Instant::now();
+    let (table, rows) = tab2::run(&sys, &mut backends, 4);
+    print!("{}", table.render());
+    for r in &rows {
+        println!(
+            "{:<16} redundancy-dominant: {}  attention ratio W_crit/W_red = {:.1}x",
+            r.task.name(),
+            r.stats.p_red > 0.7,
+            r.stats.w_crit / r.stats.w_red.max(1e-9)
+        );
+    }
+    println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
+}

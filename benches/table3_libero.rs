@@ -1,0 +1,23 @@
+//! Regenerates paper Table III: edge-cloud collaborative inference on the
+//! LIBERO simulation preset (Edge-Only / Cloud-Only / SAFE / RAPID).
+//!
+//! Expected shape: Cloud-Only < RAPID < SAFE < Edge-Only in total latency;
+//! RAPID edge footprint 2.4 GB; load columns sum to 14.2 GB.
+
+use rapid::config::presets::libero_preset;
+use rapid::experiments::{tab345, Backends};
+
+fn main() {
+    let sys = libero_preset();
+    let mut backends = Backends::pjrt_or_analytic(sys.episode.seed);
+    let t0 = std::time::Instant::now();
+    let (table, rows) = tab345::tab3(&sys, &mut backends, 4);
+    print!("{}", table.render());
+    println!("RAPID speedup vs vision baseline: {:.2}x (paper: 1.69x sim)", rows.speedup_vs_vision());
+    println!(
+        "RAPID speedup vs edge-only: {:.2}x",
+        rows.get(rapid::config::PolicyKind::EdgeOnly).total_lat_mean
+            / rows.get(rapid::config::PolicyKind::Rapid).total_lat_mean
+    );
+    println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
+}

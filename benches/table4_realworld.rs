@@ -1,0 +1,19 @@
+//! Regenerates paper Table IV: the real-world deployment preset
+//! (Edge-Only / Cloud-Only / ISAR / RAPID).
+//!
+//! Expected shape: same ordering as Table III with higher absolute
+//! latencies (slower edge SoC, lossier wireless link); RAPID ≈ 1.73x
+//! faster than the vision baseline.
+
+use rapid::config::presets::realworld_preset;
+use rapid::experiments::{tab345, Backends};
+
+fn main() {
+    let sys = realworld_preset();
+    let mut backends = Backends::pjrt_or_analytic(sys.episode.seed);
+    let t0 = std::time::Instant::now();
+    let (table, rows) = tab345::tab4(&sys, &mut backends, 4);
+    print!("{}", table.render());
+    println!("RAPID speedup vs vision baseline: {:.2}x (paper: 1.73x)", rows.speedup_vs_vision());
+    println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
+}

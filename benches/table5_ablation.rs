@@ -1,0 +1,22 @@
+//! Regenerates paper Table V: ablation of the dual-threshold mechanism.
+//!
+//! Expected shape: full RAPID < w/o θ_comp < w/o θ_red in total latency
+//! (removing the torque trigger hurts most — critical interactions are
+//! exactly what must go to the cloud).
+
+use rapid::config::presets::libero_preset;
+use rapid::config::PolicyKind;
+use rapid::experiments::{tab345, Backends};
+
+fn main() {
+    let sys = libero_preset();
+    let mut backends = Backends::pjrt_or_analytic(sys.episode.seed);
+    let t0 = std::time::Instant::now();
+    let (table, rows) = tab345::tab5(&sys, &mut backends, 4);
+    print!("{}", table.render());
+    let full = rows.get(PolicyKind::Rapid).total_lat_mean;
+    let no_comp = rows.get(PolicyKind::RapidNoComp).total_lat_mean;
+    let no_red = rows.get(PolicyKind::RapidNoRed).total_lat_mean;
+    println!("ordering holds (full < no_comp < no_red): {}", full < no_comp && no_comp < no_red);
+    println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,38 @@
+//! Hyper-parameter study (paper §VI-D.1): sweep the dual thresholds and
+//! the cooldown, reporting the latency/offload trade-off curve.
+//!
+//! ```bash
+//! cargo run --release --example hyperparam_study
+//! ```
+
+use rapid::config::presets::libero_preset;
+use rapid::config::PolicyKind;
+use rapid::experiments::{sweep, Backends};
+use rapid::metrics::aggregate;
+use rapid::robot::tasks::ALL_TASKS;
+use rapid::serve::session::run_policy;
+
+fn main() {
+    let sys = libero_preset();
+    let mut backends = Backends::pjrt_or_analytic(31);
+
+    // threshold grid around the paper's optimum
+    let (table, points) = sweep::run(&sys, &mut backends, &[0.35, 0.65, 1.0], &[0.2, 0.35, 0.6], 2);
+    print!("{}", table.render());
+    let best = points.iter().min_by(|a, b| a.total_lat.partial_cmp(&b.total_lat).unwrap()).unwrap();
+    println!(
+        "best: ({:.2}, {:.2}) @ {:.1}ms — paper reports (0.65, 0.35) as the balance point\n",
+        best.theta_comp, best.theta_red, best.total_lat
+    );
+
+    // cooldown study (paper §V-B: C prevents network flooding)
+    println!("cooldown C sweep (offloads/episode and latency):");
+    for c in [0u32, 4, 12, 24] {
+        let mut s = sys.clone();
+        s.dispatcher.cooldown = c;
+        let res = run_policy(&s, PolicyKind::Rapid, &ALL_TASKS, 2, backends.edge.as_mut(), backends.cloud.as_mut());
+        let row = aggregate(PolicyKind::Rapid, &res.episodes);
+        let offl = res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / res.episodes.len() as f64;
+        println!("  C={c:<3} offloads/ep {offl:>5.1}  total {:.1}ms  success {:.0}%", row.total_lat_mean, 100.0 * row.success_rate);
+    }
+}

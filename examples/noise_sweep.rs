@@ -1,0 +1,55 @@
+//! Compatibility study (paper Tab. I + Fig. 2): how the vision-based
+//! baseline and RAPID respond to increasing visual disturbance. RAPID's
+//! kinematic triggers are environment-agnostic, so its latency should stay
+//! flat where the vision baseline degrades.
+//!
+//! ```bash
+//! cargo run --release --example noise_sweep
+//! ```
+
+use rapid::config::presets::libero_preset;
+use rapid::config::{NoiseLevel, PolicyKind};
+use rapid::experiments::Backends;
+use rapid::metrics::aggregate;
+use rapid::robot::tasks::ALL_TASKS;
+use rapid::serve::session::run_policy;
+use rapid::util::tablefmt::{ms, Table};
+
+fn main() {
+    let mut backends = Backends::pjrt_or_analytic(7);
+    let mut table = Table::new(
+        "Noise compatibility: total latency (and cloud offloads/episode)",
+        &["Noise", "Vision-Based", "RAPID", "Vision offloads/ep", "RAPID offloads/ep"],
+    );
+    let mut vision_lat = Vec::new();
+    let mut rapid_lat = Vec::new();
+    for noise in [NoiseLevel::Standard, NoiseLevel::VisualNoise, NoiseLevel::Distraction] {
+        let mut sys = libero_preset();
+        sys.scene.noise = noise;
+        let mut lat = Vec::new();
+        let mut offl = Vec::new();
+        for kind in [PolicyKind::VisionBased, PolicyKind::Rapid] {
+            let res = run_policy(&sys, kind, &ALL_TASKS, 3, backends.edge.as_mut(), backends.cloud.as_mut());
+            let row = aggregate(kind, &res.episodes);
+            lat.push(row.total_lat_mean);
+            offl.push(res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / res.episodes.len() as f64);
+        }
+        vision_lat.push(lat[0]);
+        rapid_lat.push(lat[1]);
+        table.row(&[
+            noise.name().to_string(),
+            ms(lat[0]),
+            ms(lat[1]),
+            format!("{:.1}", offl[0]),
+            format!("{:.1}", offl[1]),
+        ]);
+    }
+    print!("{}", table.render());
+    let degradation = |v: &[f64]| (v[2] - v[0]) / v[0] * 100.0;
+    println!(
+        "\nlatency degradation Standard -> Distraction: vision {:+.0}%  RAPID {:+.0}%",
+        degradation(&vision_lat),
+        degradation(&rapid_lat)
+    );
+    println!("RAPID is environment-agnostic: {}", degradation(&rapid_lat).abs() < degradation(&vision_lat).abs());
+}

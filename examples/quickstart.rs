@@ -1,0 +1,41 @@
+//! Quickstart: load the AOT-compiled VLA surrogate, run one RAPID episode
+//! on the LIBERO preset, and print the latency/load summary.
+//!
+//! ```bash
+//! make artifacts            # once: python AOT -> artifacts/*.hlo.txt
+//! cargo run --release --example quickstart
+//! ```
+
+use rapid::config::presets::libero_preset;
+use rapid::config::PolicyKind;
+use rapid::experiments::Backends;
+use rapid::robot::TaskKind;
+use rapid::serve::run_episode;
+
+fn main() {
+    let sys = libero_preset();
+    // Real path: PJRT + HLO artifacts (falls back to the analytic surrogate
+    // with a warning if `make artifacts` hasn't been run).
+    let mut backends = Backends::pjrt_or_analytic(42);
+
+    println!("== RAPID quickstart: {} / {} ==", sys.name, TaskKind::PickPlace.name());
+    let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
+    let out = run_episode(&sys, TaskKind::PickPlace, strategy, backends.edge.as_mut(), backends.cloud.as_mut(), 42, true);
+
+    let m = &out.metrics;
+    let (cloud, edge, total) = m.latency_columns();
+    println!("steps executed        : {}", m.steps);
+    println!("edge refills          : {}", m.edge_events);
+    println!("cloud offloads        : {} ({} preemptions)", m.cloud_events, m.preemptions);
+    println!("emulated latency      : cloud {cloud:.1}ms + edge {edge:.1}ms => total {total:.1}ms per event");
+    println!("parameter placement   : edge {:.1}GB / cloud {:.1}GB", m.edge_gb, m.cloud_gb);
+    println!("trigger precision     : {:.2}", m.trigger_precision());
+    println!("task success          : {} (rms tracking error {:.3} rad)", m.success, m.rms_error);
+
+    if let Some(trace) = out.trace {
+        println!("\ntimeline (sparklines over {} steps):", m.steps);
+        println!("  saliency {}", trace.sparkline("saliency", 60));
+        println!("  torque   {}", trace.sparkline("tau_norm", 60));
+        println!("  offload  {}", trace.sparkline("offload", 60));
+    }
+}

@@ -1,0 +1,107 @@
+"""AOT: lower the VLA surrogate variants to HLO *text* + weight blobs.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (per variant v in {edge, cloud}):
+  artifacts/<v>_policy.hlo.txt   — lowered forward pass, tuple output
+  artifacts/<v>_weights.bin      — little-endian f32 flat weight buffer
+  artifacts/meta.json            — dims, shapes, weight layout, checksums
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: M.ModelConfig, use_pallas: bool = True):
+    n_params = M.param_count(cfg)
+
+    def fn(wflat, obs, proprio, instr):
+        return M.forward(cfg, wflat, obs, proprio, instr,
+                         use_pallas=use_pallas)
+
+    specs = (
+        jax.ShapeDtypeStruct((n_params,), jnp.float32),
+        jax.ShapeDtypeStruct((M.D_VIS,), jnp.float32),
+        jax.ShapeDtypeStruct((M.D_PROP,), jnp.float32),
+        jax.ShapeDtypeStruct((M.N_INSTR,), jnp.float32),
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+def build(outdir: str, seed: int = 0, use_pallas: bool = True) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    meta = {
+        "seed": seed,
+        "pallas": use_pallas,
+        "io": {
+            "inputs": ["weights[P]", "obs[64]", "proprio[21]", "instr[8]"],
+            "outputs": ["actions[8,7]", "logits[8,64]", "mass[8]"],
+        },
+        "dims": {
+            "n_joints": M.N_JOINTS, "chunk": M.CHUNK, "vocab": M.VOCAB,
+            "d_vis": M.D_VIS, "d_prop": M.D_PROP, "n_instr": M.N_INSTR,
+        },
+        "variants": {},
+    }
+    for name, cfg in M.CONFIGS.items():
+        hlo = to_hlo_text(lower_variant(cfg, use_pallas))
+        hlo_path = os.path.join(outdir, f"{name}_policy.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+
+        w = M.make_weights(cfg, seed)
+        flat = M.flatten_weights(cfg, w)
+        wpath = os.path.join(outdir, f"{name}_weights.bin")
+        flat.astype("<f4").tofile(wpath)
+
+        offs, total = M.weight_offsets(cfg)
+        meta["variants"][name] = {
+            "d": cfg.d, "heads": cfg.heads, "layers": cfg.layers,
+            "ffn": cfg.ffn, "seq": cfg.seq, "n_params": total,
+            "hlo": os.path.basename(hlo_path),
+            "weights": os.path.basename(wpath),
+            "weights_sha256": hashlib.sha256(flat.tobytes()).hexdigest(),
+            "hlo_bytes": len(hlo),
+        }
+        print(f"[aot] {name}: {total} params, hlo {len(hlo)/1e6:.2f} MB")
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead")
+    args = ap.parse_args()
+    build(args.out, seed=args.seed, use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

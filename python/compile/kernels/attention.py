@@ -1,0 +1,93 @@
+"""Fused multi-head attention as a Pallas kernel (the VLA compute hot-spot).
+
+TPU mental model (see DESIGN.md §2 / §Hardware-Adaptation):
+
+* grid is over heads; each program owns one head's [T, Dh] tiles in VMEM;
+* K/V are streamed in blocks of ``block_k`` rows with an **online softmax**
+  (running row-max `m` and normalizer `l`), i.e. the flash-attention
+  HBM->VMEM schedule expressed with BlockSpec-shaped loads instead of CUDA
+  threadblocks;
+* accumulation is f32 regardless of input dtype (MXU-friendly).
+
+Executed with ``interpret=True`` — real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot run; numerics are validated through
+the interpret path against ``ref.mha_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, block_k: int):
+    """One head per program: online-softmax attention over K/V blocks."""
+    q = q_ref[...].astype(jnp.float32)  # [T, Dh]
+    t = q.shape[0]
+    dh = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    n_blocks = (t + block_k - 1) // block_k
+
+    # Running statistics for the online softmax.
+    m0 = jnp.full((t, 1), NEG_INF, jnp.float32)       # row max
+    l0 = jnp.zeros((t, 1), jnp.float32)               # row normalizer
+    acc0 = jnp.zeros((t, dh), jnp.float32)            # weighted V accumulator
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * block_k
+        kb = pl.load(k_ref, (pl.dslice(start, block_k), slice(None)))
+        vb = pl.load(v_ref, (pl.dslice(start, block_k), slice(None)))
+        bb = pl.load(bias_ref, (slice(None), pl.dslice(start, block_k)))
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        # Mask the ragged tail (block may run past T; dslice clamps, so mask
+        # by absolute column index).
+        cols = start + jax.lax.iota(jnp.int32, block_k)
+        valid = (cols < t)[None, :]
+        s = q @ kb.T * scale + bb.astype(jnp.float32)      # [T, BK]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + p @ vb
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def mha(q, k, v, bias, block_k: int = 128):
+    """Multi-head attention core. q,k,v: [H, T, Dh]; bias: [T, T] -> [H, T, Dh]."""
+    h, t, dh = q.shape
+    bk = min(block_k, t)
+    # Pad the K/V/bias key axis to a block multiple: block loads then never
+    # run past the buffer (pl.dslice clamps the *start* on overrun, which
+    # would desynchronize the kernel's absolute-column mask).
+    tk = ((t + bk - 1) // bk) * bk
+    if tk != t:
+        pad = [(0, 0), (0, tk - t), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        bias = jnp.pad(bias, [(0, 0), (0, tk - t)])
+    kernel = functools.partial(_mha_kernel, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((None, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, tk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, tk), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, t, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, bias)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float32 tolerance under ``interpret=True``.
+The oracles are also used by ``model.py`` (``use_pallas=False``) so the whole
+L2 forward pass can be cross-checked kernel-vs-reference end to end.
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, gamma, eps: float = 1e-6):
+    """RMSNorm: y = x / rms(x) * gamma, row-wise over the last axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(ms + eps)) * gamma
+
+
+def mha_ref(q, k, v, bias):
+    """Multi-head attention core.
+
+    q, k, v: [H, T, Dh]; bias: [T, T] additive attention bias (shared across
+    heads — RAPID uses it for the structured routing prior).
+    Returns [H, T, Dh].
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("htd,hsd->hts", q, k) * scale + bias[None, :, :]
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hts,hsd->htd", probs, v)
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def gated_mlp_ref(x, w1, w3, w2):
+    """Gated (SwiGLU-style) MLP: y = (silu(x @ w1) * (x @ w3)) @ w2."""
+    return (silu(x @ w1) * (x @ w3)) @ w2

@@ -1,0 +1,316 @@
+"""L2: the VLA surrogate model (build-time JAX, calls the Pallas kernels).
+
+Architecture (per DESIGN.md §3): observation encoder -> pre-norm transformer
+backbone (RMSNorm / fused MHA / gated MLP, all Pallas) -> chunked action
+head. One backbone pass amortizes over a k-step action chunk — this *is* the
+paper's action-chunking lever (Eq. 1).
+
+Two variants share the code:
+  * ``edge``  — the small model resident on the edge device (2.4 GB slice in
+    the paper's bookkeeping),
+  * ``cloud`` — the full model served from the cloud (11.8 GB slice).
+
+Outputs per forward pass, consumed by the Rust L3 coordinator:
+  * ``actions``   [k, N]  — joint-space action chunk,
+  * ``logits``    [k, V]  — action-token logits; their Shannon entropy is the
+    vision-based baseline's (SAFE/ISAR) offloading signal,
+  * ``attn_mass`` [k]     — per-action-token attention mass, the paper's
+    step-wise redundancy instrumentation (Table II / Fig. 3).
+
+Weights are **procedurally constructed**, not trained: a seeded random base
+plus structured routing components so the surrogate exhibits the behaviours
+the paper's evaluation depends on (see DESIGN.md §3 for the full argument):
+
+  1. action tokens attend to the semantic observation tokens (structured
+     attention bias) and the joint-error channels are routed through the
+     value path into the action head => actions track the task waypoints;
+  2. action-token logits are computed from the *attended visual values*, so
+     their magnitude scales with observation clarity => visual noise
+     (signal attenuation) flattens the distribution and raises entropy,
+     reproducing the failure mode of vision-based partitioning (Tab. I);
+  3. the renderer's contact-saliency horizon is routed, slot i -> action
+     token i, into the attention-mass head => attention mass peaks at
+     critical interaction steps and is near-zero in approach phases
+     (Tab. II redundancy stats, Fig. 3 torque correlation).
+
+Observation layout (D_VIS = 64 visual feature channels; produced by the Rust
+``scene::renderer`` and mirrored in ``tests/obsgen.py``):
+  [0:7)   normalized joint error to the current waypoint
+  [7:15)  contact-saliency horizon over the next k steps
+  [15]    global interaction saliency
+  [16:64) texture channels (scene-hash pseudo-features, clarity-scaled)
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import mlp as mlp_k
+from .kernels import rmsnorm as rms_k
+from .kernels import ref as ref_k
+
+# ---------------------------------------------------------------------------
+# Fixed interface dims (shared with the Rust side through artifacts/meta.json)
+# ---------------------------------------------------------------------------
+N_JOINTS = 7          # N — DOF of the manipulator
+CHUNK = 8             # k — action-chunk length
+VOCAB = 64            # V — action-token vocabulary for the entropy signal
+D_VIS = 64            # visual feature channels
+D_PROP = 3 * N_JOINTS  # proprio: q, q_dot, tau
+N_INSTR = 8           # instruction one-hot size
+N_VIS_TOK = 8         # visual tokens
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d: int            # model width
+    heads: int
+    layers: int
+    ffn: int
+    act_gain: float = 1.2     # action head gain on routed joint error
+    logit_gain: float = 16.0  # entropy sharpness on clean observations
+    mass_gain: float = 5.0    # saliency -> attention-mass routing gain
+    mass_shift: float = 2.0   # softplus shift (baked static constant)
+    route_gain: float = 2.0   # encoder semantic routing strength
+    bias_gain: float = 6.0    # structured attention-bias strength
+    base_scale: float = 0.02  # random base init scale
+
+    @property
+    def seq(self) -> int:
+        return N_VIS_TOK + 1 + 1 + CHUNK  # visual + proprio + instr + action
+
+    @property
+    def dh(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+
+EDGE = ModelConfig(name="edge", d=64, heads=4, layers=2, ffn=128,
+                   act_gain=0.9, logit_gain=20.0, mass_gain=9.0,
+                   mass_shift=3.5)
+# base_scale ~ 1/sqrt(d): keeps the random-score noise floor constant across
+# widths so the structured routing dominates equally in both variants.
+CLOUD = ModelConfig(name="cloud", d=192, heads=6, layers=6, ffn=384,
+                    logit_gain=28.0, mass_gain=9.0, mass_shift=3.5,
+                    base_scale=0.012)
+
+CONFIGS = {"edge": EDGE, "cloud": CLOUD}
+
+
+# ---------------------------------------------------------------------------
+# Procedural weight construction
+# ---------------------------------------------------------------------------
+
+def _weight_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the flat-buffer layout contract."""
+    d, f, t = cfg.d, cfg.ffn, cfg.seq
+    spec = [
+        ("enc_vis", (N_VIS_TOK, D_VIS, d)),
+        ("enc_prop", (D_PROP, d)),
+        ("enc_instr", (N_INSTR, d)),
+        ("act_query", (CHUNK, d)),
+        ("pos", (t, d)),
+    ]
+    for l in range(cfg.layers):
+        spec += [
+            (f"l{l}.wqkv", (d, 3 * d)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.ln", (d,)),
+            (f"l{l}.w1", (d, f)),
+            (f"l{l}.w3", (d, f)),
+            (f"l{l}.w2", (f, d)),
+        ]
+    spec += [
+        ("attn_bias", (t, t)),
+        ("head_act", (d, N_JOINTS)),
+        ("head_logit", (d, VOCAB)),
+        ("head_mass", (CHUNK, d)),
+    ]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in _weight_spec(cfg))
+
+
+def make_weights(cfg: ModelConfig, seed: int = 0):
+    """Seeded random base + structured routing. Returns {name: np.ndarray}.
+
+    Seed derivation uses crc32 (NOT builtin hash(), which is randomized per
+    process and would make artifacts unreproducible across builds)."""
+    import zlib
+    rng = np.random.default_rng(seed + zlib.crc32(cfg.name.encode()) % (2 ** 16))
+    w = {}
+    for name, shape in _weight_spec(cfg):
+        w[name] = rng.normal(0.0, cfg.base_scale, size=shape).astype(np.float32)
+
+    d = cfg.d
+    g = cfg.route_gain
+
+    # LayerNorm gains start at ~1; the (unstructured) MLP branch is damped
+    # by 1/layers so it refines rather than overwrites the routed signal.
+    for l in range(cfg.layers):
+        w[f"l{l}.ln"] = np.ones(d, np.float32) + w[f"l{l}.ln"]
+        w[f"l{l}.w2"] *= 1.0 / cfg.layers
+
+    # -- Encoder semantic routing -------------------------------------------
+    # visual token 0 <- joint-error channels (obs[0:7])  -> dims [0:7)
+    for j in range(N_JOINTS):
+        w["enc_vis"][0, j, j] += g
+    # visual token 1 <- saliency horizon (obs[7:15))     -> dims [8:16)
+    for i in range(CHUNK):
+        w["enc_vis"][1, 7 + i, 8 + i] += g
+    # visual token 2 <- global saliency (obs[15])        -> dim 16
+    w["enc_vis"][2, 15, 16] += g
+    # visual tokens 3.. read the persistent scene texture with amplified
+    # random projections: scene-content energy (i.e. clarity) survives to
+    # the logit path even when the semantic channels are quiet (a clear
+    # scene keeps the model confident after the arm has converged)
+    for tok in range(3, N_VIS_TOK):
+        w["enc_vis"][tok, 16:, :] *= 10.0
+        # ...but keep the texture projection out of the semantic dims
+        # [0:17): those carry the routed joint-error / saliency signals, and
+        # a large constant texture component there would bias the action
+        # and mass heads for the whole episode.
+        w["enc_vis"][tok, 16:, :17] = 0.0
+    # proprio token routes torque (obs channels 14:21 of proprio = tau)
+    for j in range(N_JOINTS):
+        w["enc_prop"][2 * N_JOINTS + j, 17 + (j % (d - 17))] += 0.3 * g
+
+    # -- Structured attention bias: action queries attend to semantics ------
+    t = cfg.seq
+    a0 = N_VIS_TOK + 2  # first action-token row
+    bias = w["attn_bias"] * 0.1
+    for i in range(CHUNK):
+        bias[a0 + i, 0] += cfg.bias_gain        # joint-error token
+        bias[a0 + i, 1] += cfg.bias_gain        # saliency-horizon token
+        bias[a0 + i, 2] += 0.5 * cfg.bias_gain  # global saliency token
+        bias[a0 + i, N_VIS_TOK] += 0.5 * cfg.bias_gain  # proprio token
+        for tok in range(3, N_VIS_TOK):         # scene-texture tokens
+            bias[a0 + i, tok] += 0.7 * cfg.bias_gain
+    w["attn_bias"] = bias.astype(np.float32)
+
+    # -- Value/output path near-identity so routed channels survive ---------
+    # The attention branch is *unnormalized* (see forward): per-layer output
+    # identity is 1/L so the routed signal sums to ~1x across the stack.
+    for l in range(cfg.layers):
+        wqkv = w[f"l{l}.wqkv"]
+        wqkv[:, 2 * d:3 * d] += np.eye(d, dtype=np.float32)
+        w[f"l{l}.wqkv"] = wqkv
+        w[f"l{l}.wo"] += (1.0 / cfg.layers) * np.eye(d, dtype=np.float32)
+
+    # -- Heads ---------------------------------------------------------------
+    # action head: dims [0:7) (routed joint error) -> joints, tanh outside.
+    for j in range(N_JOINTS):
+        w["head_act"][j, j] += cfg.act_gain
+    # logit head: random but scaled so clean observations give peaked logits.
+    w["head_logit"] = (rng.normal(0.0, 1.0, size=(d, VOCAB)).astype(np.float32)
+                       * cfg.logit_gain / np.sqrt(d))
+    # mass head: per-token selector on the routed saliency-horizon slot.
+    w["head_mass"] *= 0.1
+    for i in range(CHUNK):
+        w["head_mass"][i, 8 + i] += cfg.mass_gain
+        w["head_mass"][i, 16] += 0.3 * cfg.mass_gain
+    return w
+
+
+def flatten_weights(cfg: ModelConfig, w) -> np.ndarray:
+    return np.concatenate([np.asarray(w[name], np.float32).ravel()
+                           for name, _ in _weight_spec(cfg)])
+
+
+def weight_offsets(cfg: ModelConfig):
+    """{name: (offset, shape)} into the flat f32 buffer."""
+    out, off = {}, 0
+    for name, shape in _weight_spec(cfg):
+        n = int(np.prod(shape))
+        out[name] = (off, shape)
+        off += n
+    return out, off
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _unflatten(cfg: ModelConfig, flat):
+    offs, total = weight_offsets(cfg)
+    w = {}
+    for name, (off, shape) in offs.items():
+        n = int(np.prod(shape))
+        w[name] = jnp.reshape(
+            jnp.asarray(flat)[off:off + n].astype(jnp.float32), shape)
+    return w
+
+
+def _attention(cfg, x, wqkv, wo, bias, use_pallas):
+    t, d = x.shape
+    qkv = x @ wqkv                                    # [T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(m):
+        return jnp.transpose(jnp.reshape(m, (t, cfg.heads, cfg.dh)), (1, 0, 2))
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    if use_pallas:
+        oh = attn_k.mha(qh, kh, vh, bias)
+    else:
+        oh = ref_k.mha_ref(qh, kh, vh, bias)
+    o = jnp.reshape(jnp.transpose(oh, (1, 0, 2)), (t, d))
+    return o @ wo
+
+
+def forward(cfg: ModelConfig, weights, obs, proprio, instr,
+            use_pallas: bool = True):
+    """VLA surrogate forward pass.
+
+    weights: flat f32 [P] (or dict); obs: [D_VIS]; proprio: [D_PROP];
+    instr: [N_INSTR] one-hot. Returns (actions [k,N], logits [k,V], mass [k]).
+    """
+    w = weights if isinstance(weights, dict) else _unflatten(cfg, weights)
+    w = {k_: jnp.asarray(v) for k_, v in w.items()}
+
+    obs = jnp.asarray(obs, jnp.float32)
+    proprio = jnp.asarray(proprio, jnp.float32)
+    instr = jnp.asarray(instr, jnp.float32)
+
+    vis_tok = jnp.einsum("c,tcd->td", obs, w["enc_vis"])      # [8, d]
+    prop_tok = (proprio @ w["enc_prop"])[None, :]             # [1, d]
+    instr_tok = (instr @ w["enc_instr"])[None, :]             # [1, d]
+    x = jnp.concatenate([vis_tok, prop_tok, instr_tok, w["act_query"]], 0)
+    x = x + w["pos"]
+
+    rms = rms_k.rmsnorm if use_pallas else ref_k.rmsnorm_ref
+    mlp = mlp_k.gated_mlp if use_pallas else ref_k.gated_mlp_ref
+
+    # Norm-free attention path (scale-carrying: observation clarity must
+    # survive to the heads — see module docstring (2)), normed MLP path.
+    for l in range(cfg.layers):
+        a = _attention(cfg, x, w[f"l{l}.wqkv"], w[f"l{l}.wo"],
+                       w["attn_bias"], use_pallas)
+        x = x + a
+        h2 = rms(x, w[f"l{l}.ln"])
+        x = x + mlp(h2, w[f"l{l}.w1"], w[f"l{l}.w3"], w[f"l{l}.w2"])
+
+    # All heads read the residual stream of the action rows: it accumulates
+    # the routed, clarity-scaled attention values across every layer (the
+    # obs-independent query/pos constants are an order of magnitude smaller).
+    a0 = N_VIS_TOK + 2
+    h_act = x[a0:a0 + CHUNK]
+
+    actions = jnp.tanh(h_act @ w["head_act"])                 # [k, N]
+    logits = h_act @ w["head_logit"]                          # [k, V]
+    mass = jnp.sum(w["head_mass"] * h_act, axis=-1)           # [k]
+    mass = jnp.log1p(jnp.exp(mass - cfg.mass_shift))          # softplus >= 0
+    return actions, logits, mass
+
+
+def entropy(logits):
+    """Shannon entropy (nats) per row — mirrors rust vla::entropy."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(z)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return -jnp.sum(p * jnp.log(p + 1e-12), axis=-1)

@@ -1,0 +1,42 @@
+"""Synthetic observation generator mirroring rust scene::renderer.
+
+Used by the python tests to exercise the model with the same observation
+semantics the Rust L3 driver produces (layout documented in model.py).
+"""
+
+import numpy as np
+
+from compile import model as M
+
+
+SCENE_TEXTURE_STD = 0.45  # mirrors rust scene::renderer::SCENE_TEXTURE_STD
+CLUTTER_STD = 0.10        # occluders are featureless => low-energy clutter
+
+
+def make_obs(joint_err, sal_horizon, saliency, clarity=1.0, seed=0,
+             scene_seed=1234):
+    """Compose an observation vector; clarity in (0,1] attenuates everything
+    and is the renderer's model of visual noise/occlusion. The texture
+    channels carry a *persistent* scene signature (fixed per scene_seed)
+    whose energy scales with clarity."""
+    rng = np.random.default_rng(seed)
+    scene = np.random.default_rng(scene_seed).normal(
+        0.0, SCENE_TEXTURE_STD, M.D_VIS - 16)
+    obs = np.zeros(M.D_VIS, np.float32)
+    obs[0:M.N_JOINTS] = np.asarray(joint_err, np.float32)
+    obs[7:7 + M.CHUNK] = np.asarray(sal_horizon, np.float32)
+    obs[15] = saliency
+    obs[16:] = scene + rng.normal(0.0, 0.05, M.D_VIS - 16)
+    obs *= clarity
+    # low-energy clutter replaces the attenuated texture — it does NOT
+    # restore the semantic channels or the scene signature.
+    obs[16:] += rng.normal(0.0, CLUTTER_STD * (1.0 - clarity), M.D_VIS - 16)
+    return obs
+
+
+def approach_obs(clarity=1.0, seed=0):
+    return make_obs([0.3] * 7, [0.02] * 8, 0.05, clarity, seed)
+
+
+def contact_obs(clarity=1.0, seed=0):
+    return make_obs([0.05] * 7, np.linspace(0.3, 1.0, 8), 0.9, clarity, seed)

@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the repo testing policy: the kernels
+must be correct for *any* admissible geometry, not just the model's.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.attention import mha
+from compile.kernels.mlp import gated_mlp
+from compile.kernels.rmsnorm import rmsnorm
+
+F32 = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(rng, *shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+class TestRmsNorm:
+    def test_basic(self):
+        rng = np.random.default_rng(0)
+        x, g = rand(rng, 18, 64), rand(rng, 64)
+        assert_allclose(np.asarray(rmsnorm(x, g)),
+                        np.asarray(ref.rmsnorm_ref(x, g)), **F32)
+
+    def test_unit_gamma_normalizes(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, 4, 32, scale=7.0)
+        y = np.asarray(rmsnorm(x, np.ones(32, np.float32)))
+        rms = np.sqrt(np.mean(y * y, axis=-1))
+        assert_allclose(rms, np.ones(4), rtol=1e-4, atol=1e-4)
+
+    def test_scale_invariance(self):
+        rng = np.random.default_rng(2)
+        x, g = rand(rng, 3, 16), rand(rng, 16)
+        a = np.asarray(rmsnorm(x, g))
+        b = np.asarray(rmsnorm(100.0 * x, g))
+        assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+    def test_single_row(self):
+        rng = np.random.default_rng(3)
+        x, g = rand(rng, 1, 8), rand(rng, 8)
+        assert_allclose(np.asarray(rmsnorm(x, g)),
+                        np.asarray(ref.rmsnorm_ref(x, g)), **F32)
+
+    def test_row_blocking_boundary(self):
+        """T not a multiple of block_t exercises the ragged grid tail."""
+        rng = np.random.default_rng(4)
+        x, g = rand(rng, 130, 16), rand(rng, 16)
+        assert_allclose(np.asarray(rmsnorm(x, g, block_t=64)),
+                        np.asarray(ref.rmsnorm_ref(x, g)), **F32)
+
+    @settings(max_examples=25, deadline=None)
+    @given(t=st.integers(1, 64), d=st.integers(2, 96), seed=st.integers(0, 99))
+    def test_hypothesis_shapes(self, t, d, seed):
+        rng = np.random.default_rng(seed)
+        x, g = rand(rng, t, d), rand(rng, d)
+        assert_allclose(np.asarray(rmsnorm(x, g)),
+                        np.asarray(ref.rmsnorm_ref(x, g)), **F32)
+
+
+# ---------------------------------------------------------------------------
+# Fused MHA
+# ---------------------------------------------------------------------------
+
+class TestMha:
+    def _check(self, h, t, dh, seed=0, block_k=128, scale=1.0):
+        rng = np.random.default_rng(seed)
+        q, k, v = (rand(rng, h, t, dh, scale=scale) for _ in range(3))
+        bias = rand(rng, t, t, scale=scale)
+        got = np.asarray(mha(q, k, v, bias, block_k=block_k))
+        want = np.asarray(ref.mha_ref(q, k, v, bias))
+        assert_allclose(got, want, **F32)
+
+    def test_model_geometry_edge(self):
+        self._check(4, 18, 16)
+
+    def test_model_geometry_cloud(self):
+        self._check(6, 18, 32)
+
+    def test_single_head(self):
+        self._check(1, 7, 8)
+
+    def test_single_token(self):
+        self._check(2, 1, 4)
+
+    def test_streaming_multiple_k_blocks(self):
+        """T > block_k exercises the online-softmax streaming loop."""
+        self._check(2, 100, 16, block_k=32)
+
+    def test_streaming_ragged_tail(self):
+        """T not a multiple of block_k exercises the tail mask."""
+        self._check(2, 37, 8, block_k=16)
+
+    def test_large_bias_dominates(self):
+        """Structured-routing regime: bias >> scores => probs ~ one-hot."""
+        h, t, dh = 2, 12, 8
+        rng = np.random.default_rng(7)
+        q, k = rand(rng, h, t, dh, scale=0.01), rand(rng, h, t, dh, scale=0.01)
+        v = rand(rng, h, t, dh)
+        bias = np.full((t, t), -30.0, np.float32)
+        bias[:, 3] = 30.0
+        got = np.asarray(mha(q, k, v, bias))
+        want = np.broadcast_to(np.asarray(v)[:, 3:4, :], got.shape)
+        assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_softmax_stability_large_scores(self):
+        self._check(2, 9, 4, scale=30.0)
+
+    def test_permutation_equivariance_over_heads(self):
+        rng = np.random.default_rng(8)
+        q, k, v = (rand(rng, 3, 10, 8) for _ in range(3))
+        bias = rand(rng, 10, 10)
+        out = np.asarray(mha(q, k, v, bias))
+        perm = [2, 0, 1]
+        out_p = np.asarray(mha(q[perm], k[perm], v[perm], bias))
+        assert_allclose(out[perm], out_p, **F32)
+
+    @settings(max_examples=20, deadline=None)
+    @given(h=st.integers(1, 4), t=st.integers(1, 48),
+           dh=st.sampled_from([4, 8, 16]), bk=st.sampled_from([8, 16, 128]),
+           seed=st.integers(0, 99))
+    def test_hypothesis_shapes(self, h, t, dh, bk, seed):
+        self._check(h, t, dh, seed=seed, block_k=bk)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+class TestGatedMlp:
+    def _check(self, t, d, f, seed=0, block_t=128):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, t, d)
+        w1, w3, w2 = rand(rng, d, f), rand(rng, d, f), rand(rng, f, d)
+        got = np.asarray(gated_mlp(x, w1, w3, w2, block_t=block_t))
+        want = np.asarray(ref.gated_mlp_ref(x, w1, w3, w2))
+        # unit-scale inputs make |y| ~ sqrt(d*f); tolerance is relative to
+        # that accumulation scale (XLA may reassociate the reductions)
+        assert_allclose(got, want, rtol=2e-3, atol=1e-3)
+
+    def test_model_geometry_edge(self):
+        self._check(18, 64, 128)
+
+    def test_model_geometry_cloud(self):
+        self._check(18, 192, 384)
+
+    def test_row_blocking(self):
+        self._check(100, 16, 32, block_t=32)
+
+    def test_ragged_rows(self):
+        self._check(37, 8, 16, block_t=16)
+
+    def test_zero_input_is_zero(self):
+        rng = np.random.default_rng(9)
+        w1, w3, w2 = rand(rng, 8, 16), rand(rng, 8, 16), rand(rng, 16, 8)
+        y = np.asarray(gated_mlp(np.zeros((4, 8), np.float32), w1, w3, w2))
+        assert_allclose(y, np.zeros((4, 8)), atol=1e-7, rtol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(t=st.integers(1, 40), d=st.sampled_from([4, 8, 24]),
+           f=st.sampled_from([8, 16, 48]), seed=st.integers(0, 99))
+    def test_hypothesis_shapes(self, t, d, f, seed):
+        self._check(t, d, f, seed=seed)

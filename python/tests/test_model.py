@@ -1,0 +1,192 @@
+"""L2 correctness + constructed-behaviour checks for the VLA surrogate.
+
+Three behaviour families are load-bearing for the paper's evaluation (see
+model.py docstring): action tracking, clarity->entropy monotonicity, and
+saliency->attention-mass routing. Each is asserted here so a regression in
+the weight construction fails fast in `make test`, before any Rust runs.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from tests import obsgen
+
+PROP = np.zeros(M.D_PROP, np.float32)
+INSTR = np.eye(M.N_INSTR, dtype=np.float32)[2]
+
+
+def fwd(cfg, flat, obs, use_pallas=False, prop=PROP):
+    a, l, m = M.forward(cfg, flat, obs, prop, INSTR, use_pallas=use_pallas)
+    return np.asarray(a), np.asarray(l), np.asarray(m)
+
+
+@pytest.fixture(scope="module", params=["edge", "cloud"])
+def variant(request):
+    cfg = M.CONFIGS[request.param]
+    flat = M.flatten_weights(cfg, M.make_weights(cfg, seed=0))
+    return cfg, flat
+
+
+class TestShapes:
+    def test_output_shapes(self, variant):
+        cfg, flat = variant
+        a, l, m = fwd(cfg, flat, obsgen.approach_obs())
+        assert a.shape == (M.CHUNK, M.N_JOINTS)
+        assert l.shape == (M.CHUNK, M.VOCAB)
+        assert m.shape == (M.CHUNK,)
+
+    def test_param_count_matches_flat(self, variant):
+        cfg, flat = variant
+        assert flat.shape == (M.param_count(cfg),)
+
+    def test_weight_offsets_cover_buffer(self, variant):
+        cfg, flat = variant
+        offs, total = M.weight_offsets(cfg)
+        assert total == flat.size
+        ends = sorted(o + int(np.prod(s)) for o, s in offs.values())
+        starts = sorted(o for o, _ in offs.values())
+        assert starts[0] == 0 and ends[-1] == total
+
+    def test_outputs_finite(self, variant):
+        cfg, flat = variant
+        for obs in (obsgen.approach_obs(), obsgen.contact_obs(),
+                    np.zeros(M.D_VIS, np.float32)):
+            a, l, m = fwd(cfg, flat, obs)
+            assert np.isfinite(a).all() and np.isfinite(l).all() \
+                and np.isfinite(m).all()
+
+    def test_actions_bounded(self, variant):
+        cfg, flat = variant
+        a, _, _ = fwd(cfg, flat, obsgen.contact_obs(), prop=np.ones(
+            M.D_PROP, np.float32))
+        assert (np.abs(a) <= 1.0).all()
+
+    def test_mass_nonnegative(self, variant):
+        cfg, flat = variant
+        for seed in range(5):
+            _, _, m = fwd(cfg, flat, obsgen.approach_obs(seed=seed))
+            assert (m >= 0).all()
+
+
+class TestPallasAgreement:
+    """Whole-model pallas-vs-reference agreement (beyond per-kernel tests)."""
+
+    def test_forward_matches_reference(self, variant):
+        cfg, flat = variant
+        obs = obsgen.contact_obs()
+        ref = fwd(cfg, flat, obs, use_pallas=False)
+        pal = fwd(cfg, flat, obs, use_pallas=True)
+        for r, p in zip(ref, pal):
+            assert_allclose(p, r, rtol=5e-5, atol=5e-5)
+
+
+class TestActionTracking:
+    def test_actions_follow_joint_error_sign(self, variant):
+        cfg, flat = variant
+        err = np.array([0.4, -0.4, 0.3, -0.3, 0.2, -0.2, 0.1], np.float32)
+        obs = obsgen.make_obs(err, [0.02] * 8, 0.05)
+        a, _, _ = fwd(cfg, flat, obs)
+        # mean action over the chunk tracks the error direction per joint
+        assert (np.sign(a.mean(0)) == np.sign(err)).mean() >= 6 / 7
+
+    def test_zero_error_small_actions(self, variant):
+        cfg, flat = variant
+        obs = obsgen.make_obs([0.0] * 7, [0.02] * 8, 0.05)
+        a, _, _ = fwd(cfg, flat, obs)
+        assert np.abs(a).mean() < 0.15
+
+    def test_action_magnitude_scales_with_error(self, variant):
+        cfg, flat = variant
+        mags = []
+        for e in (0.1, 0.3, 0.6):
+            obs = obsgen.make_obs([e] * 7, [0.02] * 8, 0.05)
+            a, _, _ = fwd(cfg, flat, obs)
+            mags.append(np.abs(a.mean(0)).mean())
+        assert mags[0] < mags[1] < mags[2]
+
+
+class TestEntropyBehaviour:
+    """The vision-baseline failure mode: noise flattens the distribution."""
+
+    def test_entropy_monotone_in_noise(self, variant):
+        cfg, flat = variant
+        ents = []
+        for clarity in (1.0, 0.7, 0.4, 0.2):
+            _, l, _ = fwd(cfg, flat, obsgen.approach_obs(clarity=clarity))
+            ents.append(float(np.asarray(M.entropy(l)).mean()))
+        assert all(a < b for a, b in zip(ents, ents[1:])), ents
+
+    def test_clean_noisy_separation(self, variant):
+        """Clean vs heavily degraded entropy must separate by >= 0.6 nat —
+        the margin the SAFE/ISAR threshold sits inside. (Approach-phase
+        observations are the *weak-signal* worst case.)"""
+        cfg, flat = variant
+        _, lc, _ = fwd(cfg, flat, obsgen.approach_obs(clarity=1.0))
+        _, ln, _ = fwd(cfg, flat, obsgen.approach_obs(clarity=0.2))
+        e_clean = float(np.asarray(M.entropy(lc)).mean())
+        e_noisy = float(np.asarray(M.entropy(ln)).mean())
+        assert e_noisy - e_clean > 0.6
+
+    def test_entropy_bounded_by_log_vocab(self, variant):
+        cfg, flat = variant
+        for clarity in (1.0, 0.1):
+            _, l, _ = fwd(cfg, flat, obsgen.approach_obs(clarity=clarity))
+            e = np.asarray(M.entropy(l))
+            assert (e >= 0).all() and (e <= np.log(M.VOCAB) + 1e-4).all()
+
+
+class TestAttentionMassRouting:
+    """Step-wise redundancy instrumentation (Tab. II / Fig. 3)."""
+
+    def test_contact_mass_exceeds_approach_mass(self, variant):
+        cfg, flat = variant
+        _, _, m_app = fwd(cfg, flat, obsgen.approach_obs())
+        _, _, m_con = fwd(cfg, flat, obsgen.contact_obs())
+        assert m_con.mean() > 3.0 * m_app.mean()
+
+    def test_mass_tracks_horizon_slot(self, variant):
+        """Saliency routed slot i -> action token i: a peaked horizon
+        produces a peaked mass profile at the same position."""
+        cfg, flat = variant
+        hits = 0
+        for peak in range(2, M.CHUNK):
+            hor = np.full(M.CHUNK, 0.05, np.float32)
+            hor[peak] = 1.0
+            obs = obsgen.make_obs([0.1] * 7, hor, 0.4)
+            _, _, m = fwd(cfg, flat, obs)
+            if int(np.argmax(m)) == peak:
+                hits += 1
+        assert hits >= (M.CHUNK - 2) - 1  # allow one routing miss
+
+    def test_mass_monotone_in_global_saliency(self, variant):
+        cfg, flat = variant
+        means = []
+        for s in (0.1, 0.5, 1.0):
+            obs = obsgen.make_obs([0.1] * 7, [s] * 8, s)
+            _, _, m = fwd(cfg, flat, obs)
+            means.append(m.mean())
+        assert means[0] < means[1] < means[2]
+
+
+class TestDeterminism:
+    def test_same_seed_same_weights(self, variant):
+        cfg, _ = variant
+        f1 = M.flatten_weights(cfg, M.make_weights(cfg, seed=0))
+        f2 = M.flatten_weights(cfg, M.make_weights(cfg, seed=0))
+        assert np.array_equal(f1, f2)
+
+    def test_different_seed_different_weights(self, variant):
+        cfg, _ = variant
+        f1 = M.flatten_weights(cfg, M.make_weights(cfg, seed=0))
+        f2 = M.flatten_weights(cfg, M.make_weights(cfg, seed=1))
+        assert not np.array_equal(f1, f2)
+
+    def test_forward_deterministic(self, variant):
+        cfg, flat = variant
+        obs = obsgen.contact_obs()
+        r1 = fwd(cfg, flat, obs)
+        r2 = fwd(cfg, flat, obs)
+        for a, b in zip(r1, r2):
+            assert np.array_equal(a, b)

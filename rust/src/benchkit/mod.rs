@@ -1,0 +1,129 @@
+//! Minimal benchmarking harness (criterion is unavailable offline):
+//! warm-up, timed iterations, robust summary statistics, and a consistent
+//! report format shared by all `benches/*.rs` (harness = false) binaries.
+
+use crate::util::Summary;
+use std::time::Instant;
+
+/// One benchmark case result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time (ns).
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<42} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(s.mean),
+            fmt_ns(s.p50),
+            fmt_ns(s.p95),
+            fmt_ns(s.min),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with warm-up and a time budget.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget_ms: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, min_iters: 10, max_iters: 10_000, budget_ms: 2_000.0, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget_ms(mut self, ms: f64) -> Self {
+        self.budget_ms = ms;
+        self
+    }
+
+    /// Time `f` repeatedly; returns per-iteration stats.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (times.len() < self.max_iters && start.elapsed().as_secs_f64() * 1e3 < self.budget_ms)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult { name: name.to_string(), iters: times.len(), summary: Summary::of(&times) };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Standard header printed by every bench binary.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_summarizes() {
+        let mut b = Bench { warmup_iters: 1, min_iters: 5, max_iters: 50, budget_ms: 50.0, results: vec![] };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut b = Bench { warmup_iters: 0, min_iters: 2, max_iters: 1_000_000, budget_ms: 30.0, results: vec![] };
+        let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(r.iters < 20, "iters {}", r.iters);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system: a self-contained TOML-subset parser, a JSON parser
+//! (for `artifacts/meta.json`), typed schema structs, and the experiment
+//! presets (LIBERO simulation / real-world deployment) used by the tables.
+
+pub mod json;
+pub mod parse;
+pub mod presets;
+pub mod schema;
+pub mod value;
+
+pub use presets::{libero_preset, realworld_preset};
+pub use schema::*;
+pub use value::Value;

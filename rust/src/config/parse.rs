@@ -1,0 +1,197 @@
+//! A TOML-subset parser sufficient for the repo's config files:
+//! `[section.sub]` headers, `key = value` with strings, numbers, booleans
+//! and flat arrays, `#` comments. No multi-line strings, no table arrays.
+
+use super::value::Value;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error("line {0}: {1}")]
+    At(usize, String),
+}
+
+pub fn parse_toml(src: &str) -> Result<Value, ParseError> {
+    let mut root = Value::table();
+    let mut section = String::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(ParseError::At(ln + 1, "unterminated section header".into()));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                return Err(ParseError::At(ln + 1, "empty section name".into()));
+            }
+            // materialize the (possibly empty) section table
+            root.set(&section, root.get(&section).cloned().unwrap_or_else(Value::table));
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| ParseError::At(ln + 1, format!("expected key = value, got {line:?}")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError::At(ln + 1, "empty key".into()));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| ParseError::At(ln + 1, e))?;
+        let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        root.set(&path, val);
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err("unterminated string".into());
+        }
+        return Ok(Value::Str(unescape(&s[1..s.len() - 1])?));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err("unterminated array".into());
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    s.parse::<f64>().map(Value::Num).map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape: \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let v = parse_toml(
+            r#"
+            top = 1.5
+            [dispatcher]
+            theta_comp = 0.65   # paper optimum
+            theta_red = 0.35
+            enabled = true
+            name = "rapid"
+            [robot.arm]
+            joints = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.f64_or("top", 0.0), 1.5);
+        assert_eq!(v.f64_or("dispatcher.theta_comp", 0.0), 0.65);
+        assert!(v.bool_or("dispatcher.enabled", false));
+        assert_eq!(v.str_or("dispatcher.name", ""), "rapid");
+        assert_eq!(v.usize_or("robot.arm.joints", 0), 7);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse_toml("w = [1.0, 2.0, 3.5]\nnames = [\"a\", \"b\"]").unwrap();
+        let w = v.get("w").unwrap().as_list().unwrap();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[2].as_f64(), Some(3.5));
+        let n = v.get("names").unwrap().as_list().unwrap();
+        assert_eq!(n[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let v = parse_toml("s = \"a#b\" # real comment").unwrap();
+        assert_eq!(v.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbroken").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn escapes() {
+        let v = parse_toml(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(v.str_or("s", ""), "a\nb\t\"c\"");
+    }
+}

@@ -1,0 +1,501 @@
+//! Typed configuration schema. Every struct can be loaded from the TOML
+//! [`Value`] tree (`from_value`) and has paper-calibrated defaults.
+//!
+//! Latency/load accounting model (DESIGN.md §5): emulated device service
+//! times are explicit config (the surrogate is ~10⁻³ of OpenVLA, so wall
+//! clock is recorded separately); edge compute scales linearly with the
+//! parameter fraction resident on the edge.
+
+use super::value::Value;
+
+/// Visual disturbance level (paper Table I rows / §VI-A.2 environments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NoiseLevel {
+    /// Clean, noise-free workspace.
+    Standard,
+    /// Dynamic background lighting variation + camera noise.
+    VisualNoise,
+    /// Irrelevant moving objects / severe occlusions.
+    Distraction,
+}
+
+impl NoiseLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NoiseLevel::Standard => "Standard",
+            NoiseLevel::VisualNoise => "Visual Noise",
+            NoiseLevel::Distraction => "Distraction",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NoiseLevel> {
+        match s.to_ascii_lowercase().as_str() {
+            "standard" | "clean" => Some(NoiseLevel::Standard),
+            "visual_noise" | "noise" | "visual" => Some(NoiseLevel::VisualNoise),
+            "distraction" | "distract" => Some(NoiseLevel::Distraction),
+            _ => None,
+        }
+    }
+}
+
+/// Partitioning strategy selector (paper baselines + ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// Full RAPID dual-threshold dispatcher (ours).
+    Rapid,
+    /// Ablation: w/o θ_comp (acceleration trigger removed).
+    RapidNoComp,
+    /// Ablation: w/o θ_red (torque trigger removed).
+    RapidNoRed,
+    /// Ablation: static OR fusion instead of dynamic phase weights.
+    RapidStaticFusion,
+    /// Full model on the edge device.
+    EdgeOnly,
+    /// Full model in the cloud, edge does I/O only.
+    CloudOnly,
+    /// Vision-based dynamic partitioning via action-distribution entropy
+    /// (SAFE on the LIBERO config, ISAR on the real-world config).
+    VisionBased,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Rapid => "RAPID (Ours)",
+            PolicyKind::RapidNoComp => "w/o theta_comp (Acc.)",
+            PolicyKind::RapidNoRed => "w/o theta_red (Torque)",
+            PolicyKind::RapidStaticFusion => "RAPID (static OR fusion)",
+            PolicyKind::EdgeOnly => "Edge-Only",
+            PolicyKind::CloudOnly => "Cloud-Only",
+            PolicyKind::VisionBased => "Vision-Based",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "rapid" => Some(PolicyKind::Rapid),
+            "rapid_no_comp" | "no_comp" => Some(PolicyKind::RapidNoComp),
+            "rapid_no_red" | "no_red" => Some(PolicyKind::RapidNoRed),
+            "rapid_static" | "static_fusion" => Some(PolicyKind::RapidStaticFusion),
+            "edge" | "edge_only" => Some(PolicyKind::EdgeOnly),
+            "cloud" | "cloud_only" => Some(PolicyKind::CloudOnly),
+            "vision" | "vision_based" | "safe" | "isar" => Some(PolicyKind::VisionBased),
+            _ => None,
+        }
+    }
+}
+
+/// Manipulator / physics parameters.
+#[derive(Debug, Clone)]
+pub struct RobotConfig {
+    /// Control interval Δt in seconds (f_control = 20 Hz).
+    pub dt: f64,
+    /// Proprioceptive polling frequency f_sensor (Hz) — the dispatcher's
+    /// high-rate loop (paper §V-A).
+    pub sensor_hz: f64,
+    /// Per-joint viscous damping.
+    pub damping: f64,
+    /// Gravity magnitude (m/s²).
+    pub gravity: f64,
+    /// Link masses (kg), proximal -> distal.
+    pub link_mass: [f64; crate::N_JOINTS],
+    /// Encoder / torque-sensor noise std.
+    pub sensor_noise: f64,
+    /// Actuator velocity tracking gain.
+    pub track_gain: f64,
+    /// Actuator acceleration (slew) limit in rad/s² — real drives ramp
+    /// smoothly; without this, chunk-boundary action changes would produce
+    /// free-space torque transients bigger than contact ones.
+    pub max_accel: f64,
+}
+
+impl Default for RobotConfig {
+    fn default() -> Self {
+        RobotConfig {
+            dt: 0.05,
+            sensor_hz: 500.0,
+            damping: 0.4,
+            gravity: 9.81,
+            link_mass: [4.0, 3.5, 3.0, 2.0, 1.5, 1.0, 0.5],
+            sensor_noise: 0.002,
+            track_gain: 0.85,
+            max_accel: 6.0,
+        }
+    }
+}
+
+/// Scene / renderer parameters.
+#[derive(Debug, Clone)]
+pub struct SceneConfig {
+    pub noise: NoiseLevel,
+    /// Clarity floor under VisualNoise (1.0 = perfectly clean).
+    pub visual_noise_clarity: f64,
+    /// Probability per step of a distractor occlusion event.
+    pub occlusion_rate: f64,
+    /// Clarity during an occlusion event.
+    pub occlusion_clarity: f64,
+    /// Occlusion event duration in steps.
+    pub occlusion_len: usize,
+}
+
+impl Default for SceneConfig {
+    fn default() -> Self {
+        SceneConfig {
+            noise: NoiseLevel::Standard,
+            visual_noise_clarity: 0.38,
+            occlusion_rate: 0.18,
+            occlusion_clarity: 0.15,
+            occlusion_len: 8,
+        }
+    }
+}
+
+/// Network link between edge and cloud.
+#[derive(Debug, Clone)]
+pub struct LinkConfig {
+    pub rtt_ms: f64,
+    pub bw_mbps: f64,
+    /// Serialized camera observation payload (bytes) for an offload.
+    pub obs_bytes: f64,
+    /// Returned action-chunk payload (bytes).
+    pub chunk_bytes: f64,
+    /// Intermediate-activation payload for split computing (vision-based
+    /// baseline ships features from the split point, not raw pixels).
+    pub activation_bytes: f64,
+    /// Multiplicative latency jitter fraction.
+    pub jitter: f64,
+    /// Extra retransmission probability per transfer under degraded vision
+    /// (distractor scenes saturate the uplink with re-sent frames).
+    pub noise_retrans: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig {
+            rtt_ms: 8.0,
+            bw_mbps: 1000.0,
+            obs_bytes: 1.5e6,
+            chunk_bytes: 4096.0,
+            activation_bytes: 6.0e6,
+            jitter: 0.08,
+            noise_retrans: 0.55,
+        }
+    }
+}
+
+/// Emulated device service-time model (DESIGN.md §5).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// Full 14.2 GB model inference on the edge SoC (ms) — the paper's
+    /// Edge-Only anchor.
+    pub edge_full_ms: f64,
+    /// Full model inference on the cloud A100 (ms, compute only).
+    pub cloud_compute_ms: f64,
+    /// Vision-based routing cost per decision: preprocess + forward pass to
+    /// obtain the action distribution for entropy (paper §III-B.2 — "deep,
+    /// implicit features that require a computationally expensive forward
+    /// pass").
+    pub vision_route_ms: f64,
+    /// Chunk-preemption penalty (discard + state swap) on an offload.
+    pub preempt_ms: f64,
+    /// Camera observation capture latency.
+    pub obs_capture_ms: f64,
+    /// Service-time jitter fraction.
+    pub jitter: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            edge_full_ms: 782.5,
+            cloud_compute_ms: 90.0,
+            vision_route_ms: 48.0,
+            preempt_ms: 25.0,
+            obs_capture_ms: 5.0,
+            jitter: 0.05,
+        }
+    }
+}
+
+/// RAPID dispatcher hyper-parameters (paper §IV / §VI-D.1).
+#[derive(Debug, Clone)]
+pub struct DispatcherConfig {
+    /// Compatibility-optimal (acceleration) threshold θ_comp.
+    pub theta_comp: f64,
+    /// Redundancy-aware (torque) threshold θ_red.
+    pub theta_red: f64,
+    /// Sliding window w_a for acceleration statistics (sensor ticks).
+    pub window_acc: usize,
+    /// Running window for torque statistics (sensor ticks).
+    pub window_tau: usize,
+    /// Short moving-average window w_τ for the torque variation (Eq. 5).
+    pub w_tau: usize,
+    /// Velocity normalizer v_max (Eq. 6).
+    pub v_max: f64,
+    /// Cooldown step limit C (Eq. 8), in control steps.
+    pub cooldown: u32,
+    /// Normalization ε.
+    pub eps: f64,
+    /// Minimum normalized anomaly (in σ) for either side to count as an
+    /// anomaly at all. The θ thresholds are *sensitivities* applied to the
+    /// phase-weighted score; without this gate, sub-σ noise fluctuations
+    /// would satisfy ω·M̂ > θ at θ < 1 on any calm stream.
+    pub z_gate: f64,
+    /// Physical floors: an anomaly must also be physically non-trivial.
+    /// z-scores are scale-free, so a perfectly quiet sensor stream would
+    /// otherwise normalize its own µ-scale noise into "anomalies".
+    /// Units: M_acc in weighted rad/s², M_τ in weighted (N·m)².
+    pub min_m_acc: f64,
+    pub min_m_tau: f64,
+    /// Joint weights W_a (acceleration) — end joints weighted higher.
+    pub w_acc: [f64; crate::N_JOINTS],
+    /// Joint weights W_τ (torque) — wrist joints most contact-sensitive.
+    pub w_torque: [f64; crate::N_JOINTS],
+    /// Ablation: disable the acceleration trigger (w/o θ_comp).
+    pub disable_comp: bool,
+    /// Ablation: disable the torque trigger (w/o θ_red).
+    pub disable_red: bool,
+    /// Ablation: static OR fusion (ω_a = ω_τ = 1) instead of Eq. 6.
+    pub static_fusion: bool,
+}
+
+impl Default for DispatcherConfig {
+    fn default() -> Self {
+        DispatcherConfig {
+            theta_comp: 0.65,
+            theta_red: 0.35,
+            window_acc: 64,
+            window_tau: 256,
+            w_tau: 8,
+            v_max: 1.8,
+            cooldown: 12,
+            eps: 1e-6,
+            z_gate: 2.5,
+            min_m_acc: 0.5,
+            min_m_tau: 0.05,
+            w_acc: [0.5, 0.6, 0.7, 0.85, 1.0, 1.2, 1.4],
+            w_torque: [0.3, 0.4, 0.5, 0.7, 1.0, 1.3, 1.6],
+            disable_comp: false,
+            disable_red: false,
+            static_fusion: false,
+        }
+    }
+}
+
+/// Vision-based baseline (SAFE/ISAR) parameters.
+#[derive(Debug, Clone)]
+pub struct VisionPolicyConfig {
+    /// Entropy offload threshold (nats).
+    pub entropy_threshold: f64,
+    /// Split-point adaptation rate: how aggressively the edge fraction
+    /// shrinks as the running entropy rises (AVERY-style split computing).
+    pub split_adapt: f64,
+    /// Minimum edge-resident parameter fraction.
+    pub min_edge_frac: f64,
+    /// Entropy EWMA smoothing.
+    pub ewma: f64,
+}
+
+impl Default for VisionPolicyConfig {
+    fn default() -> Self {
+        VisionPolicyConfig {
+            entropy_threshold: 3.2,
+            split_adapt: 1.2,
+            min_edge_frac: 0.08,
+            ewma: 0.35,
+        }
+    }
+}
+
+/// Episode / workload parameters.
+#[derive(Debug, Clone)]
+pub struct EpisodeConfig {
+    /// Episodes per task in a suite run.
+    pub episodes: usize,
+    /// Seed for the whole suite.
+    pub seed: u64,
+}
+
+impl Default for EpisodeConfig {
+    fn default() -> Self {
+        EpisodeConfig { episodes: 12, seed: 7 }
+    }
+}
+
+/// Top-level system configuration (one per experiment preset).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub name: String,
+    /// Total VLA model size in GB (14.2 sim / 14.5 real-world).
+    pub total_model_gb: f64,
+    /// Parameter fraction resident on the edge for RAPID (2.4 / 14.2).
+    pub edge_model_gb: f64,
+    /// Edge fraction the vision baseline starts from (4.7 / 14.2).
+    pub vision_edge_gb: f64,
+    /// Edge slices for the ablated variants (paper Table V load columns):
+    /// weakening a trigger degrades critical-phase detection, so the
+    /// deployment compensates with a larger edge-resident slice to keep
+    /// task success — 4.0 GB w/o θ_comp, 5.7 GB w/o θ_red.
+    pub edge_gb_no_comp: f64,
+    pub edge_gb_no_red: f64,
+    pub robot: RobotConfig,
+    pub scene: SceneConfig,
+    pub link: LinkConfig,
+    pub devices: DeviceConfig,
+    pub dispatcher: DispatcherConfig,
+    pub vision: VisionPolicyConfig,
+    pub episode: EpisodeConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            name: "libero".into(),
+            total_model_gb: 14.2,
+            edge_model_gb: 2.4,
+            vision_edge_gb: 4.7,
+            edge_gb_no_comp: 4.0,
+            edge_gb_no_red: 5.7,
+            robot: RobotConfig::default(),
+            scene: SceneConfig::default(),
+            link: LinkConfig::default(),
+            devices: DeviceConfig::default(),
+            dispatcher: DispatcherConfig::default(),
+            vision: VisionPolicyConfig::default(),
+            episode: EpisodeConfig::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Overlay values from a parsed TOML tree onto this config.
+    pub fn apply_value(&mut self, v: &Value) {
+        self.name = v.str_or("name", &self.name).to_string();
+        self.total_model_gb = v.f64_or("total_model_gb", self.total_model_gb);
+        self.edge_model_gb = v.f64_or("edge_model_gb", self.edge_model_gb);
+        self.edge_gb_no_comp = v.f64_or("edge_gb_no_comp", self.edge_gb_no_comp);
+        self.edge_gb_no_red = v.f64_or("edge_gb_no_red", self.edge_gb_no_red);
+        self.vision_edge_gb = v.f64_or("vision_edge_gb", self.vision_edge_gb);
+
+        self.robot.dt = v.f64_or("robot.dt", self.robot.dt);
+        self.robot.sensor_hz = v.f64_or("robot.sensor_hz", self.robot.sensor_hz);
+        self.robot.damping = v.f64_or("robot.damping", self.robot.damping);
+        self.robot.gravity = v.f64_or("robot.gravity", self.robot.gravity);
+        self.robot.sensor_noise = v.f64_or("robot.sensor_noise", self.robot.sensor_noise);
+        self.robot.track_gain = v.f64_or("robot.track_gain", self.robot.track_gain);
+        self.robot.max_accel = v.f64_or("robot.max_accel", self.robot.max_accel);
+
+        if let Some(n) = v.get("scene.noise").and_then(|x| x.as_str()).and_then(NoiseLevel::parse) {
+            self.scene.noise = n;
+        }
+        self.scene.visual_noise_clarity = v.f64_or("scene.visual_noise_clarity", self.scene.visual_noise_clarity);
+        self.scene.occlusion_rate = v.f64_or("scene.occlusion_rate", self.scene.occlusion_rate);
+        self.scene.occlusion_clarity = v.f64_or("scene.occlusion_clarity", self.scene.occlusion_clarity);
+        self.scene.occlusion_len = v.usize_or("scene.occlusion_len", self.scene.occlusion_len);
+
+        self.link.rtt_ms = v.f64_or("link.rtt_ms", self.link.rtt_ms);
+        self.link.bw_mbps = v.f64_or("link.bw_mbps", self.link.bw_mbps);
+        self.link.obs_bytes = v.f64_or("link.obs_bytes", self.link.obs_bytes);
+        self.link.chunk_bytes = v.f64_or("link.chunk_bytes", self.link.chunk_bytes);
+        self.link.activation_bytes = v.f64_or("link.activation_bytes", self.link.activation_bytes);
+        self.link.jitter = v.f64_or("link.jitter", self.link.jitter);
+        self.link.noise_retrans = v.f64_or("link.noise_retrans", self.link.noise_retrans);
+
+        self.devices.edge_full_ms = v.f64_or("devices.edge_full_ms", self.devices.edge_full_ms);
+        self.devices.cloud_compute_ms = v.f64_or("devices.cloud_compute_ms", self.devices.cloud_compute_ms);
+        self.devices.vision_route_ms = v.f64_or("devices.vision_route_ms", self.devices.vision_route_ms);
+        self.devices.preempt_ms = v.f64_or("devices.preempt_ms", self.devices.preempt_ms);
+        self.devices.obs_capture_ms = v.f64_or("devices.obs_capture_ms", self.devices.obs_capture_ms);
+        self.devices.jitter = v.f64_or("devices.jitter", self.devices.jitter);
+
+        self.dispatcher.theta_comp = v.f64_or("dispatcher.theta_comp", self.dispatcher.theta_comp);
+        self.dispatcher.theta_red = v.f64_or("dispatcher.theta_red", self.dispatcher.theta_red);
+        self.dispatcher.window_acc = v.usize_or("dispatcher.window_acc", self.dispatcher.window_acc);
+        self.dispatcher.window_tau = v.usize_or("dispatcher.window_tau", self.dispatcher.window_tau);
+        self.dispatcher.w_tau = v.usize_or("dispatcher.w_tau", self.dispatcher.w_tau);
+        self.dispatcher.v_max = v.f64_or("dispatcher.v_max", self.dispatcher.v_max);
+        self.dispatcher.z_gate = v.f64_or("dispatcher.z_gate", self.dispatcher.z_gate);
+        self.dispatcher.min_m_acc = v.f64_or("dispatcher.min_m_acc", self.dispatcher.min_m_acc);
+        self.dispatcher.min_m_tau = v.f64_or("dispatcher.min_m_tau", self.dispatcher.min_m_tau);
+        self.dispatcher.cooldown = v.usize_or("dispatcher.cooldown", self.dispatcher.cooldown as usize) as u32;
+        self.dispatcher.disable_comp = v.bool_or("dispatcher.disable_comp", self.dispatcher.disable_comp);
+        self.dispatcher.disable_red = v.bool_or("dispatcher.disable_red", self.dispatcher.disable_red);
+        self.dispatcher.static_fusion = v.bool_or("dispatcher.static_fusion", self.dispatcher.static_fusion);
+
+        self.vision.entropy_threshold = v.f64_or("vision.entropy_threshold", self.vision.entropy_threshold);
+        self.vision.split_adapt = v.f64_or("vision.split_adapt", self.vision.split_adapt);
+        self.vision.min_edge_frac = v.f64_or("vision.min_edge_frac", self.vision.min_edge_frac);
+        self.vision.ewma = v.f64_or("vision.ewma", self.vision.ewma);
+
+        self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
+        self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
+    }
+
+    pub fn from_toml(src: &str) -> Result<SystemConfig, super::parse::ParseError> {
+        let v = super::parse::parse_toml(src)?;
+        let mut cfg = SystemConfig::default();
+        cfg.apply_value(&v);
+        Ok(cfg)
+    }
+
+    /// Cloud-resident parameter GB for a given edge-resident GB
+    /// (load-conservation invariant: columns sum to the total).
+    pub fn cloud_gb(&self, edge_gb: f64) -> f64 {
+        (self.total_model_gb - edge_gb).max(0.0)
+    }
+
+    /// Emulated edge inference time for a model slice of `gb` parameters
+    /// (linear in resident parameters, anchored at the Edge-Only number).
+    pub fn edge_infer_ms(&self, gb: f64) -> f64 {
+        self.devices.edge_full_ms * (gb / self.total_model_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_anchors() {
+        let c = SystemConfig::default();
+        assert_eq!(c.total_model_gb, 14.2);
+        assert_eq!(c.dispatcher.theta_comp, 0.65);
+        assert_eq!(c.dispatcher.theta_red, 0.35);
+        assert_eq!(c.devices.edge_full_ms, 782.5);
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[dispatcher]\ntheta_comp = 0.8\n[scene]\nnoise = \"distraction\"",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert_eq!(c.dispatcher.theta_comp, 0.8);
+        assert_eq!(c.scene.noise, NoiseLevel::Distraction);
+        // untouched values keep defaults
+        assert_eq!(c.dispatcher.theta_red, 0.35);
+    }
+
+    #[test]
+    fn load_conservation() {
+        let c = SystemConfig::default();
+        assert!((c.cloud_gb(2.4) + 2.4 - c.total_model_gb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edge_infer_scales_linearly() {
+        let c = SystemConfig::default();
+        let full = c.edge_infer_ms(c.total_model_gb);
+        assert!((full - 782.5).abs() < 1e-9);
+        assert!((c.edge_infer_ms(7.1) - 391.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn policy_kind_parse() {
+        assert_eq!(PolicyKind::parse("safe"), Some(PolicyKind::VisionBased));
+        assert_eq!(PolicyKind::parse("rapid"), Some(PolicyKind::Rapid));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,176 @@
+//! Dynamic config value tree shared by the TOML and JSON parsers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    List(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ValueError {
+    #[error("key not found: {0}")]
+    Missing(String),
+    #[error("type mismatch at {0}: expected {1}")]
+    Type(String, &'static str),
+}
+
+impl Value {
+    pub fn table() -> Value {
+        Value::Table(BTreeMap::new())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|v| *v >= 0.0 && v.fract() == 0.0).map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get("dispatcher.theta_comp")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// Dotted-path insert, creating intermediate tables.
+    pub fn set(&mut self, path: &str, v: Value) {
+        let parts: Vec<&str> = path.split('.').collect();
+        let mut cur = self;
+        for (i, part) in parts.iter().enumerate() {
+            let t = match cur {
+                Value::Table(t) => t,
+                _ => {
+                    *cur = Value::table();
+                    match cur {
+                        Value::Table(t) => t,
+                        _ => unreachable!(),
+                    }
+                }
+            };
+            if i == parts.len() - 1 {
+                t.insert(part.to_string(), v);
+                return;
+            }
+            cur = t.entry(part.to_string()).or_insert_with(Value::table);
+        }
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Num(n) => write!(f, "{n}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::List(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Table(t) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k} = {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dotted_set_get() {
+        let mut v = Value::table();
+        v.set("a.b.c", Value::Num(3.0));
+        assert_eq!(v.get("a.b.c").unwrap().as_f64(), Some(3.0));
+        assert!(v.get("a.b.x").is_none());
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let mut v = Value::table();
+        v.set("x", Value::Num(2.0));
+        assert_eq!(v.f64_or("x", 9.0), 2.0);
+        assert_eq!(v.f64_or("y", 9.0), 9.0);
+        assert_eq!(v.usize_or("x", 7), 2);
+        assert!(v.bool_or("z", true));
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert_eq!(Value::Num(2.5).as_usize(), None);
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+        assert_eq!(Value::Num(4.0).as_usize(), Some(4));
+    }
+}

@@ -1,0 +1,84 @@
+//! Temporal cooldown (paper §V-B, Eq. 8): after an offload the trigger is
+//! masked for C control steps so the fresh chunk can resolve the
+//! interaction before the cloud is queried again (prevents network
+//! flooding during sustained contact).
+
+#[derive(Debug, Clone, Copy)]
+pub struct Cooldown {
+    limit: u32,
+    c: u32,
+}
+
+impl Cooldown {
+    pub fn new(limit: u32) -> Self {
+        Cooldown { limit, c: 0 }
+    }
+
+    /// I_dispatch = I_trigger ∧ (c == 0)   (Eq. 8)
+    pub fn ready(&self) -> bool {
+        self.c == 0
+    }
+
+    /// Arm after an offload: c = C.
+    pub fn arm(&mut self) {
+        self.c = self.limit;
+    }
+
+    /// Per-control-step decay: c = max(c − 1, 0).
+    pub fn tick(&mut self) {
+        self.c = self.c.saturating_sub(1);
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.c
+    }
+
+    pub fn limit(&self) -> u32 {
+        self.limit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_for_exactly_c_steps() {
+        let mut cd = Cooldown::new(3);
+        assert!(cd.ready());
+        cd.arm();
+        assert!(!cd.ready());
+        cd.tick();
+        assert!(!cd.ready());
+        cd.tick();
+        assert!(!cd.ready());
+        cd.tick();
+        assert!(cd.ready());
+    }
+
+    #[test]
+    fn tick_saturates_at_zero() {
+        let mut cd = Cooldown::new(2);
+        cd.tick();
+        cd.tick();
+        assert!(cd.ready());
+        assert_eq!(cd.remaining(), 0);
+    }
+
+    #[test]
+    fn zero_limit_never_masks() {
+        let mut cd = Cooldown::new(0);
+        cd.arm();
+        assert!(cd.ready());
+    }
+
+    #[test]
+    fn rearm_resets() {
+        let mut cd = Cooldown::new(4);
+        cd.arm();
+        cd.tick();
+        cd.tick();
+        cd.arm();
+        assert_eq!(cd.remaining(), 4);
+    }
+}

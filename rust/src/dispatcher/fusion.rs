@@ -1,0 +1,175 @@
+//! Mechanism fusion (paper §IV-C): dynamic phase weights + dual threshold.
+
+use crate::config::DispatcherConfig;
+
+/// Velocity-driven modality weights (Eq. 6): ω_a + ω_τ = 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseWeights {
+    pub w_a: f64,
+    pub w_tau: f64,
+}
+
+/// ω_a = clip(v / v_max, 0, 1), ω_τ = 1 − ω_a. NaN-safe: a non-finite
+/// velocity falls back to the torque-dominated regime (v = 0).
+pub fn phase_weights(v: f64, v_max: f64) -> PhaseWeights {
+    let ratio = if v.is_finite() && v_max > 0.0 { (v / v_max).clamp(0.0, 1.0) } else { 0.0 };
+    PhaseWeights { w_a: ratio, w_tau: 1.0 - ratio }
+}
+
+/// Result of one dual-threshold evaluation (Eq. 7).
+#[derive(Debug, Clone, Copy)]
+pub struct FusionOutcome {
+    pub triggered: bool,
+    /// Which side fired (for trace/ablation analysis).
+    pub by_comp: bool,
+    pub by_red: bool,
+    /// Continuous Action Importance Score S_imp.
+    pub importance: f64,
+    pub weights: PhaseWeights,
+}
+
+/// Evaluate the dynamic dual-threshold trigger (Eq. 7) with ablation flags.
+/// `m_acc_raw` / `m_tau_raw` are the unnormalized scores (Eqs. 4–5) used
+/// by the physical floors.
+pub fn evaluate_full(
+    m_acc_hat: f64,
+    m_tau_hat: f64,
+    m_acc_raw: f64,
+    m_tau_raw: f64,
+    v: f64,
+    cfg: &DispatcherConfig,
+) -> FusionOutcome {
+    let weights = if cfg.static_fusion {
+        // ablation: treat all anomalies equally (logical OR of raw scores)
+        PhaseWeights { w_a: 1.0, w_tau: 1.0 }
+    } else {
+        phase_weights(v, cfg.v_max)
+    };
+    let comp_term = weights.w_a * m_acc_hat;
+    let red_term = weights.w_tau * m_tau_hat;
+    // An anomaly must be (a) statistically significant — z above z_gate —
+    // and (b) physically non-trivial — raw score above the floor
+    // (z-scores are scale-free: a perfectly quiet stream would otherwise
+    // normalize its own µ-scale noise into anomalies). θ then sets the
+    // phase-weighted sensitivity on genuine anomalies (Eq. 7).
+    let by_comp = !cfg.disable_comp
+        && m_acc_hat > cfg.z_gate
+        && m_acc_raw > cfg.min_m_acc
+        && comp_term > cfg.theta_comp;
+    let by_red = !cfg.disable_red
+        && m_tau_hat > cfg.z_gate
+        && m_tau_raw > cfg.min_m_tau
+        && red_term > cfg.theta_red;
+    FusionOutcome {
+        triggered: by_comp || by_red,
+        by_comp,
+        by_red,
+        importance: comp_term + red_term,
+        weights,
+    }
+}
+
+/// Convenience wrapper with the physical floors trivially satisfied
+/// (threshold-logic unit tests and callers without raw scores).
+pub fn evaluate(m_acc_hat: f64, m_tau_hat: f64, v: f64, cfg: &DispatcherConfig) -> FusionOutcome {
+    evaluate_full(m_acc_hat, m_tau_hat, f64::MAX, f64::MAX, v, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DispatcherConfig {
+        DispatcherConfig::default()
+    }
+
+    #[test]
+    fn weights_form_simplex() {
+        for v in [-1.0, 0.0, 0.5, 1.8, 5.0, f64::NAN, f64::INFINITY] {
+            let w = phase_weights(v, 1.8);
+            assert!((w.w_a + w.w_tau - 1.0).abs() < 1e-12);
+            assert!((0.0..=1.0).contains(&w.w_a));
+            assert!((0.0..=1.0).contains(&w.w_tau));
+        }
+    }
+
+    #[test]
+    fn high_speed_acc_dominated() {
+        let w = phase_weights(1.8, 1.8);
+        assert_eq!(w.w_a, 1.0);
+        assert_eq!(w.w_tau, 0.0);
+    }
+
+    #[test]
+    fn low_speed_torque_dominated() {
+        let w = phase_weights(0.0, 1.8);
+        assert_eq!(w.w_a, 0.0);
+        assert_eq!(w.w_tau, 1.0);
+    }
+
+    #[test]
+    fn trigger_fires_on_either_side() {
+        let c = cfg();
+        // fast regime: acceleration spike
+        let fast = evaluate(4.5, 0.0, 2.0, &c);
+        assert!(fast.triggered && fast.by_comp && !fast.by_red);
+        // slow regime: torque spike
+        let slow = evaluate(0.0, 4.5, 0.0, &c);
+        assert!(slow.triggered && slow.by_red && !slow.by_comp);
+        // calm: nothing
+        let calm = evaluate(0.1, 0.1, 0.9, &c);
+        assert!(!calm.triggered);
+    }
+
+    #[test]
+    fn phase_weighting_suppresses_off_phase_modality() {
+        let c = cfg();
+        // a big torque anomaly during *fast transit* is down-weighted
+        let fast_torque = evaluate(0.0, 4.5, 1.8, &c);
+        assert!(!fast_torque.triggered);
+        // the same anomaly at rest triggers
+        let slow_torque = evaluate(0.0, 4.5, 0.0, &c);
+        assert!(slow_torque.triggered);
+    }
+
+    #[test]
+    fn ablation_flags() {
+        let mut c = cfg();
+        c.disable_comp = true;
+        assert!(!evaluate(10.0, 0.0, 2.0, &c).triggered);
+        c.disable_comp = false;
+        c.disable_red = true;
+        assert!(!evaluate(0.0, 10.0, 0.0, &c).triggered);
+    }
+
+    #[test]
+    fn static_fusion_ignores_velocity() {
+        let mut c = cfg();
+        c.static_fusion = true;
+        // torque anomaly triggers even at max speed under static fusion
+        let o = evaluate(0.0, 4.5, 5.0, &c);
+        assert!(o.triggered && o.by_red);
+    }
+
+    #[test]
+    fn threshold_monotonicity() {
+        // raising θ never turns a non-trigger into a trigger
+        let mut lo = cfg();
+        lo.theta_comp = 0.3;
+        let mut hi = cfg();
+        hi.theta_comp = 0.9;
+        for z in [0.0, 0.2, 0.5, 0.8, 1.2, 3.0] {
+            let t_lo = evaluate(z, 0.0, 2.0, &lo).triggered;
+            let t_hi = evaluate(z, 0.0, 2.0, &hi).triggered;
+            assert!(t_lo || !t_hi, "z={z}");
+        }
+    }
+
+    #[test]
+    fn importance_is_weighted_sum() {
+        let c = cfg();
+        let o = evaluate(1.0, 2.0, 0.9, &c);
+        let w = phase_weights(0.9, c.v_max);
+        assert!((o.importance - (w.w_a * 1.0 + w.w_tau * 2.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,110 @@
+//! Cached action-chunk queue Q (Algorithm 1 state).
+
+use crate::robot::Jv;
+use crate::CHUNK;
+use std::collections::VecDeque;
+
+/// Who generated the currently cached chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkSource {
+    Edge,
+    Cloud,
+}
+
+/// FIFO of pending actions with provenance metadata.
+#[derive(Debug, Clone)]
+pub struct ChunkQueue {
+    q: VecDeque<Jv>,
+    source: Option<ChunkSource>,
+    /// Control step at which the current chunk was issued (staleness).
+    issued_at: usize,
+    /// Total actions discarded by preemptions (paper's "action
+    /// interruptions" accounting).
+    pub discarded: u64,
+}
+
+impl ChunkQueue {
+    pub fn new() -> Self {
+        ChunkQueue { q: VecDeque::with_capacity(CHUNK), source: None, issued_at: 0, discarded: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn source(&self) -> Option<ChunkSource> {
+        self.source
+    }
+
+    pub fn issued_at(&self) -> usize {
+        self.issued_at
+    }
+
+    /// Overwrite Q with a fresh chunk (Algorithm 1 line 7): any remaining
+    /// actions are now-stale predictions and are discarded.
+    pub fn overwrite(&mut self, actions: &[Jv], source: ChunkSource, step: usize) {
+        self.discarded += self.q.len() as u64;
+        self.q.clear();
+        self.q.extend(actions.iter().copied());
+        self.source = Some(source);
+        self.issued_at = step;
+    }
+
+    /// Pop the next action (Algorithm 1 line 9).
+    pub fn pop(&mut self) -> Option<Jv> {
+        self.q.pop_front()
+    }
+
+    /// Staleness of the cached chunk in control steps.
+    pub fn staleness(&self, now: usize) -> usize {
+        now.saturating_sub(self.issued_at)
+    }
+}
+
+impl Default for ChunkQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(v: f64) -> Vec<Jv> {
+        vec![Jv::splat(v); CHUNK]
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = ChunkQueue::new();
+        q.overwrite(&[Jv::splat(1.0), Jv::splat(2.0)], ChunkSource::Edge, 0);
+        assert_eq!(q.pop().unwrap()[0], 1.0);
+        assert_eq!(q.pop().unwrap()[0], 2.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn overwrite_counts_discarded() {
+        let mut q = ChunkQueue::new();
+        q.overwrite(&chunk(1.0), ChunkSource::Edge, 0);
+        q.pop();
+        q.pop();
+        q.overwrite(&chunk(2.0), ChunkSource::Cloud, 5);
+        assert_eq!(q.discarded, (CHUNK - 2) as u64);
+        assert_eq!(q.source(), Some(ChunkSource::Cloud));
+        assert_eq!(q.len(), CHUNK);
+    }
+
+    #[test]
+    fn staleness_tracks_issue_step() {
+        let mut q = ChunkQueue::new();
+        q.overwrite(&chunk(0.5), ChunkSource::Cloud, 10);
+        assert_eq!(q.staleness(13), 3);
+        assert_eq!(q.staleness(9), 0); // saturating
+    }
+}

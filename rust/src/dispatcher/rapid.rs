@@ -1,0 +1,251 @@
+//! `RapidDispatcher` — the stateful, low-overhead edge dispatcher of
+//! Algorithm 1. All sensory extraction and statistical updates are local
+//! scalar arithmetic: O(1) per tick, allocation-free after construction.
+
+use super::cooldown::Cooldown;
+use super::fusion::{self, FusionOutcome};
+use crate::config::DispatcherConfig;
+use crate::kinematics::features::KinState;
+use crate::kinematics::window::ScoreWindow;
+use crate::robot::SensorFrame;
+
+/// Per-tick trigger evaluation (Algorithm 1 steps 1–5).
+#[derive(Debug, Clone, Copy)]
+pub struct TriggerEval {
+    pub m_acc_raw: f64,
+    pub m_tau_raw: f64,
+    pub m_acc_hat: f64,
+    pub m_tau_hat: f64,
+    pub velocity: f64,
+    pub outcome: FusionOutcome,
+    /// I_dispatch = I_trigger ∧ (c == 0)  (Eq. 8)
+    pub dispatch: bool,
+}
+
+/// Control-rate decision (Algorithm 1 line 6, under the edge/cloud split
+/// interpretation documented in the module root).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Execute the next cached action.
+    ExecuteCached,
+    /// Queue empty in a redundant phase: refill from the edge model.
+    RefillEdge,
+    /// Critical phase detected: preempt and offload to the cloud.
+    OffloadCloud,
+}
+
+#[derive(Debug, Clone)]
+pub struct RapidDispatcher {
+    cfg: DispatcherConfig,
+    kin: KinState,
+    acc_win: ScoreWindow,
+    tau_win: ScoreWindow,
+    cooldown: Cooldown,
+    last_eval: Option<TriggerEval>,
+    /// Counters for overhead/ablation reporting.
+    pub n_ticks: u64,
+    pub n_triggers: u64,
+    pub n_dispatches: u64,
+}
+
+impl RapidDispatcher {
+    pub fn new(cfg: &DispatcherConfig, dt: f64) -> Self {
+        // Warm-up: a quarter of the window, at least 16 samples (σ estimates
+        // below that are unstable enough to produce spurious >z_gate scores).
+        let warm = (cfg.window_acc / 8).max(8);
+        RapidDispatcher {
+            kin: KinState::new(dt, cfg.w_acc, cfg.w_torque, cfg.w_tau),
+            acc_win: ScoreWindow::new(cfg.window_acc, cfg.eps, warm),
+            tau_win: ScoreWindow::new(cfg.window_tau, cfg.eps, warm),
+            cooldown: Cooldown::new(cfg.cooldown),
+            cfg: cfg.clone(),
+            last_eval: None,
+            n_ticks: 0,
+            n_triggers: 0,
+            n_dispatches: 0,
+        }
+    }
+
+    /// High-rate sensor tick (f_sensor loop, §V-A): ingest a frame, update
+    /// rolling statistics, evaluate the dual threshold. O(1).
+    pub fn observe(&mut self, frame: &SensorFrame) -> TriggerEval {
+        let feats = self.kin.update(frame);
+        let m_acc_hat = self.acc_win.normalize(feats.m_acc);
+        let m_tau_hat = self.tau_win.normalize(feats.m_tau);
+        let outcome =
+            fusion::evaluate_full(m_acc_hat, m_tau_hat, feats.m_acc, feats.m_tau, feats.v, &self.cfg);
+        let dispatch = outcome.triggered && self.cooldown.ready();
+        let eval = TriggerEval {
+            m_acc_raw: feats.m_acc,
+            m_tau_raw: feats.m_tau,
+            m_acc_hat,
+            m_tau_hat,
+            velocity: feats.v,
+            outcome,
+            dispatch,
+        };
+        self.n_ticks += 1;
+        if outcome.triggered {
+            self.n_triggers += 1;
+        }
+        self.last_eval = Some(eval);
+        eval
+    }
+
+    /// Control-rate decision (Algorithm 1 line 6): consumes the latest
+    /// sensor evaluation (the f_sensor loop's interrupt flag).
+    pub fn decide(&mut self, queue_empty: bool) -> Decision {
+        let dispatch = self.last_eval.map(|e| e.dispatch).unwrap_or(false);
+        let d = if dispatch {
+            self.cooldown.arm();
+            self.n_dispatches += 1;
+            Decision::OffloadCloud
+        } else if queue_empty {
+            Decision::RefillEdge
+        } else {
+            Decision::ExecuteCached
+        };
+        self.cooldown.tick();
+        d
+    }
+
+    pub fn last_eval(&self) -> Option<TriggerEval> {
+        self.last_eval
+    }
+
+    pub fn cooldown_remaining(&self) -> u32 {
+        self.cooldown.remaining()
+    }
+
+    pub fn config(&self) -> &DispatcherConfig {
+        &self.cfg
+    }
+
+    pub fn reset(&mut self) {
+        self.kin.reset();
+        self.acc_win = ScoreWindow::new(self.cfg.window_acc, self.cfg.eps, (self.cfg.window_acc / 8).max(8));
+        self.tau_win = ScoreWindow::new(self.cfg.window_tau, self.cfg.eps, (self.cfg.window_acc / 8).max(8));
+        self.cooldown = Cooldown::new(self.cfg.cooldown);
+        self.last_eval = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::Jv;
+
+    fn frame(step: usize, dq: f64, tau: f64) -> SensorFrame {
+        SensorFrame { step, q: Jv::ZERO, dq: Jv::splat(dq), tau: Jv::splat(tau) }
+    }
+
+    fn dispatcher() -> RapidDispatcher {
+        RapidDispatcher::new(&DispatcherConfig::default(), 0.05)
+    }
+
+    /// Feed a calm stream to pass warm-up.
+    fn warm(d: &mut RapidDispatcher, n: usize) {
+        let mut t = 0.0f64;
+        for i in 0..n {
+            t += 0.001;
+            d.observe(&frame(i, 0.2 + 0.001 * (i % 3) as f64, 1.0 + t.sin() * 0.01));
+            d.decide(false);
+        }
+    }
+
+    #[test]
+    fn calm_stream_never_offloads() {
+        let mut d = dispatcher();
+        for i in 0..200 {
+            d.observe(&frame(i, 0.2, 1.0));
+            assert_ne!(d.decide(false), Decision::OffloadCloud);
+        }
+    }
+
+    #[test]
+    fn empty_queue_forces_edge_refill() {
+        let mut d = dispatcher();
+        d.observe(&frame(0, 0.2, 1.0));
+        assert_eq!(d.decide(true), Decision::RefillEdge);
+    }
+
+    #[test]
+    fn torque_spike_at_low_speed_offloads() {
+        let mut d = dispatcher();
+        warm(&mut d, 60);
+        // sudden contact: big Δτ, near-zero velocity
+        d.observe(&frame(60, 0.05, 8.0));
+        assert_eq!(d.decide(false), Decision::OffloadCloud);
+    }
+
+    #[test]
+    fn accel_spike_at_high_speed_offloads() {
+        let mut d = dispatcher();
+        let mut i = 0;
+        // cruise at high speed
+        for _ in 0..60 {
+            d.observe(&frame(i, 1.7, 1.0));
+            d.decide(false);
+            i += 1;
+        }
+        // sudden stop: huge acceleration magnitude, velocity still high at
+        // the differencing instant
+        d.observe(&frame(i, 0.9, 1.0));
+        assert_eq!(d.decide(false), Decision::OffloadCloud);
+    }
+
+    #[test]
+    fn cooldown_masks_consecutive_triggers() {
+        let mut d = dispatcher();
+        warm(&mut d, 60);
+        d.observe(&frame(60, 0.05, 8.0));
+        assert_eq!(d.decide(false), Decision::OffloadCloud);
+        // sustained contact keeps the raw trigger high, but dispatch is
+        // masked for C steps
+        let cd = d.config().cooldown as usize;
+        for j in 0..cd - 1 {
+            d.observe(&frame(61 + j, 0.05, if j % 2 == 0 { 1.0 } else { 8.0 }));
+            assert_ne!(d.decide(false), Decision::OffloadCloud, "step {j}");
+        }
+    }
+
+    #[test]
+    fn queue_empty_during_cooldown_still_refills() {
+        let mut d = dispatcher();
+        warm(&mut d, 60);
+        d.observe(&frame(60, 0.05, 8.0));
+        assert_eq!(d.decide(false), Decision::OffloadCloud);
+        d.observe(&frame(61, 0.05, 1.0));
+        assert_eq!(d.decide(true), Decision::RefillEdge);
+    }
+
+    #[test]
+    fn warmup_never_triggers() {
+        let mut d = dispatcher();
+        // even wild inputs during the first ticks must not dispatch
+        for i in 0..3 {
+            d.observe(&frame(i, 5.0 * (i as f64), 50.0 * (i as f64)));
+            assert_ne!(d.decide(false), Decision::OffloadCloud);
+        }
+    }
+
+    #[test]
+    fn counters_track_activity() {
+        let mut d = dispatcher();
+        warm(&mut d, 60);
+        d.observe(&frame(60, 0.05, 8.0));
+        d.decide(false);
+        assert!(d.n_ticks >= 61);
+        assert!(d.n_triggers >= 1);
+        assert_eq!(d.n_dispatches, 1);
+    }
+
+    #[test]
+    fn reset_restores_warmup_behaviour() {
+        let mut d = dispatcher();
+        warm(&mut d, 60);
+        d.reset();
+        d.observe(&frame(0, 5.0, 50.0));
+        assert_ne!(d.decide(false), Decision::OffloadCloud);
+    }
+}

@@ -1,0 +1,115 @@
+//! Figure 2: (a) the vision-based entropy trace breaches its threshold
+//! under noise during routine motion but stays flat (below threshold) in
+//! clean scenes; (b) kinematic scores peak only at critical interactions.
+
+use super::Backends;
+use crate::config::{NoiseLevel, PolicyKind, SystemConfig};
+use crate::robot::TaskKind;
+use crate::serve::run_episode;
+use crate::util::timeline::Timeline;
+
+pub struct Fig2Data {
+    /// (noise level, entropy trace, phase trace (0=approach,1=interact,2=retract))
+    pub entropy_traces: Vec<(NoiseLevel, Vec<f64>, Vec<f64>)>,
+    /// kinematic trace from a clean RAPID run.
+    pub kinematic: Timeline,
+    pub entropy_threshold: f64,
+}
+
+pub fn run(sys_base: &SystemConfig, backends: &mut Backends) -> Fig2Data {
+    let mut entropy_traces = Vec::new();
+    for noise in [NoiseLevel::Standard, NoiseLevel::VisualNoise, NoiseLevel::Distraction] {
+        let mut sys = sys_base.clone();
+        sys.scene.noise = noise;
+        // concatenate a few episodes so occlusion events are well sampled
+        let mut entropy = Vec::new();
+        let mut phase = Vec::new();
+        for ep in 0..3u64 {
+            let strategy = crate::policy::build(PolicyKind::VisionBased, &sys);
+            let out = run_episode(
+                &sys,
+                TaskKind::PickPlace,
+                strategy,
+                backends.edge.as_mut(),
+                backends.cloud.as_mut(),
+                sys.episode.seed ^ 0xF2 ^ (ep << 8),
+                true,
+            );
+            let tl = out.trace.unwrap();
+            entropy.extend(tl.values("entropy"));
+            phase.extend(tl.values("phase"));
+        }
+        entropy_traces.push((noise, entropy, phase));
+    }
+    // kinematic panel from a clean RAPID episode
+    let sys = sys_base.clone();
+    let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
+    let out = run_episode(
+        &sys,
+        TaskKind::PickPlace,
+        strategy,
+        backends.edge.as_mut(),
+        backends.cloud.as_mut(),
+        sys.episode.seed ^ 0xF2,
+        true,
+    );
+    Fig2Data {
+        entropy_traces,
+        kinematic: out.trace.unwrap(),
+        entropy_threshold: sys_base.vision.entropy_threshold,
+    }
+}
+
+/// Fraction of *approach-phase* steps whose entropy breaches the threshold
+/// — the paper's panel (a) focus: "the entropy frequently breaches the
+/// offloading threshold during routine movements (e.g., the Approach
+/// Phase)" under noise, and stays below it in clean scenes.
+pub fn false_breach_rate(entropy: &[f64], phase: &[f64], threshold: f64) -> f64 {
+    let routine: Vec<usize> = (0..entropy.len()).filter(|&i| phase[i] < 0.5).collect();
+    if routine.is_empty() {
+        return 0.0;
+    }
+    routine.iter().filter(|&&i| entropy[i] > threshold).count() as f64 / routine.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_breaches_grow_with_noise() {
+        let sys = SystemConfig::default();
+        let mut b = Backends::analytic(13);
+        let data = run(&sys, &mut b);
+        let rates: Vec<f64> = data
+            .entropy_traces
+            .iter()
+            .map(|(_, e, c)| false_breach_rate(e, c, data.entropy_threshold))
+            .collect();
+        // clean scene: rarely/never breaches during routine motion
+        assert!(rates[0] < 0.1, "standard false-breach {}", rates[0]);
+        // both disturbance conditions breach substantially more than clean
+        // (visual noise degrades every frame; distraction is episodic, so
+        // its per-step rate is lower but still well above clean)
+        assert!(rates[1] > rates[0] + 0.1, "rates {rates:?}");
+        assert!(rates[2] > rates[0] + 0.05, "rates {rates:?}");
+    }
+
+    #[test]
+    fn kinematic_scores_peak_in_critical_phases() {
+        let sys = SystemConfig::default();
+        let mut b = Backends::analytic(17);
+        let data = run(&sys, &mut b);
+        // Eq. 5's wrist-weighted torque variation, not the raw torque norm:
+        // free-space torque changes live on the heavy proximal joints and
+        // are suppressed by W_τ.
+        let dtau = data.kinematic.values("dtau_w");
+        let crit = data.kinematic.values("critical");
+        let mean = |sel: bool| {
+            let xs: Vec<f64> =
+                (1..dtau.len()).filter(|&i| (crit[i] > 0.5) == sel).map(|i| dtau[i]).collect();
+            xs.iter().sum::<f64>() / xs.len().max(1) as f64
+        };
+        assert!(mean(true) > 1.5 * mean(false), "crit {} vs routine {}", mean(true), mean(false));
+    }
+}

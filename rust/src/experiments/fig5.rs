@@ -1,0 +1,105 @@
+//! Figure 5 case study: a pick-and-place episode timeline showing where
+//! RAPID triggers cloud offloads relative to the task's physical phases
+//! ("pick up the banana and put it into the blue bowl").
+
+use super::Backends;
+use crate::config::{PolicyKind, SystemConfig};
+use crate::robot::TaskKind;
+use crate::serve::run_episode;
+use crate::util::timeline::Timeline;
+
+pub struct Fig5Data {
+    pub trace: Timeline,
+    pub offload_steps: Vec<usize>,
+    pub critical_windows: Vec<(usize, usize)>,
+}
+
+pub fn run(sys: &SystemConfig, backends: &mut Backends) -> Fig5Data {
+    let strategy = crate::policy::build(PolicyKind::Rapid, sys);
+    let out = run_episode(
+        sys,
+        TaskKind::PickPlace,
+        strategy,
+        backends.edge.as_mut(),
+        backends.cloud.as_mut(),
+        sys.episode.seed ^ 0xF5,
+        true,
+    );
+    let trace = out.trace.unwrap();
+    let offload = trace.values("offload");
+    let critical = trace.values("critical");
+    let offload_steps: Vec<usize> = offload.iter().enumerate().filter(|(_, &v)| v > 0.5).map(|(i, _)| i).collect();
+    let mut windows = Vec::new();
+    let mut start = None;
+    for (i, &c) in critical.iter().enumerate() {
+        match (start, c > 0.5) {
+            (None, true) => start = Some(i),
+            (Some(s), false) => {
+                windows.push((s, i - 1));
+                start = None;
+            }
+            _ => {}
+        }
+    }
+    if let Some(s) = start {
+        windows.push((s, critical.len() - 1));
+    }
+    Fig5Data { trace, offload_steps, critical_windows: windows }
+}
+
+/// Render a terminal timeline (used by the bench and the example).
+pub fn render_ascii(data: &Fig5Data, width: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("saliency : {}\n", data.trace.sparkline("saliency", width)));
+    out.push_str(&format!("tau      : {}\n", data.trace.sparkline("tau_norm", width)));
+    out.push_str(&format!("mass     : {}\n", data.trace.sparkline("mass", width)));
+    let n = data.trace.values("offload").len();
+    let mut marks = vec!['·'; width.min(n)];
+    for &s in &data.offload_steps {
+        let pos = s * marks.len() / n.max(1);
+        if pos < marks.len() {
+            marks[pos] = '▲';
+        }
+    }
+    out.push_str(&format!("offloads : {}\n", marks.iter().collect::<String>()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offloads_land_near_critical_windows() {
+        let sys = SystemConfig::default();
+        let mut b = Backends::analytic(23);
+        let data = run(&sys, &mut b);
+        assert!(!data.offload_steps.is_empty(), "no offloads in case study");
+        assert!(!data.critical_windows.is_empty());
+        // at least half of the offloads are within 3 steps of a critical window
+        let near = data
+            .offload_steps
+            .iter()
+            .filter(|&&s| {
+                data.critical_windows
+                    .iter()
+                    .any(|&(a, b_)| s + 3 >= a && s <= b_ + 3)
+            })
+            .count();
+        assert!(
+            near * 2 >= data.offload_steps.len(),
+            "near {near} of {}",
+            data.offload_steps.len()
+        );
+    }
+
+    #[test]
+    fn ascii_render_nonempty() {
+        let sys = SystemConfig::default();
+        let mut b = Backends::analytic(29);
+        let data = run(&sys, &mut b);
+        let s = render_ascii(&data, 50);
+        assert!(s.contains("offloads"));
+        assert!(s.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,51 @@
+//! Experiment generators: one per table/figure in the paper's evaluation
+//! (DESIGN.md §6 maps each to its bench binary). All generators are pure
+//! functions of (config, backends, seed) and return render-ready tables
+//! plus raw data, so benches, examples and the CLI share one code path.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig5;
+pub mod overhead;
+pub mod sweep;
+pub mod tab1;
+pub mod tab2;
+pub mod tab345;
+
+use crate::vla::{AnalyticBackend, Backend};
+
+/// Backend pair used by every experiment.
+pub struct Backends {
+    pub edge: Box<dyn Backend>,
+    pub cloud: Box<dyn Backend>,
+}
+
+impl Backends {
+    /// Fast analytic surrogates (unit tests, smoke runs, sweeps).
+    pub fn analytic(seed: u64) -> Backends {
+        Backends { edge: Box::new(AnalyticBackend::edge(seed)), cloud: Box::new(AnalyticBackend::cloud(seed)) }
+    }
+
+    /// Real AOT-compiled models via PJRT; falls back to analytic (with a
+    /// warning) when artifacts are missing so every binary stays runnable.
+    pub fn pjrt_or_analytic(seed: u64) -> Backends {
+        match Self::try_pjrt() {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("[backends] PJRT unavailable ({e}); using analytic surrogates");
+                Self::analytic(seed)
+            }
+        }
+    }
+
+    pub fn try_pjrt() -> Result<Backends, String> {
+        use crate::runtime::{ArtifactMeta, RuntimeClient};
+        let meta = ArtifactMeta::load(ArtifactMeta::default_dir()).map_err(|e| e.to_string())?;
+        let mut client = RuntimeClient::cpu().map_err(|e| e.to_string())?;
+        let (edge, cloud) = client.load_standard(&meta).map_err(|e| e.to_string())?;
+        Ok(Backends {
+            edge: Box::new(crate::vla::PjrtBackend::new(edge)),
+            cloud: Box::new(crate::vla::PjrtBackend::new(cloud)),
+        })
+    }
+}

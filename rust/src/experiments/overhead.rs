@@ -1,0 +1,83 @@
+//! Overhead analysis (paper §VI-D.2): RAPID's dispatching must stay a
+//! marginal 5–7% of the system budget. Two views:
+//!
+//! * temporal — measured dispatcher CPU time per sensor tick vs the
+//!   f_sensor tick budget (500 Hz ⇒ 2 ms/tick);
+//! * spatial — history buffers + chunk queue footprint in KB.
+
+use crate::config::SystemConfig;
+use crate::dispatcher::RapidDispatcher;
+use crate::robot::{Jv, SensorFrame};
+use std::time::Instant;
+
+pub struct OverheadReport {
+    /// Mean dispatcher cost per sensor tick (ns), measured.
+    pub tick_ns: f64,
+    /// Share of the f_sensor tick budget consumed.
+    pub tick_budget_frac: f64,
+    /// Emulated end-to-end overhead share (overhead_ms / total latency)
+    /// from a RAPID suite run — the paper's 5–7% claim.
+    pub system_overhead_frac: f64,
+    /// Dispatcher state footprint (bytes, analytic).
+    pub state_bytes: usize,
+}
+
+/// Measure the raw dispatcher tick cost over `n` synthetic frames.
+pub fn measure_tick_ns(sys: &SystemConfig, n: usize) -> f64 {
+    let mut d = RapidDispatcher::new(&sys.dispatcher, 1.0 / sys.robot.sensor_hz);
+    let mut frame = SensorFrame { step: 0, q: Jv::ZERO, dq: Jv::splat(0.2), tau: Jv::splat(1.0) };
+    // warm
+    for i in 0..256 {
+        frame.step = i;
+        d.observe(&frame);
+    }
+    let t0 = Instant::now();
+    for i in 0..n {
+        frame.step = i;
+        frame.dq = Jv::splat(0.2 + 0.001 * (i % 7) as f64);
+        frame.tau = Jv::splat(1.0 + 0.01 * (i % 5) as f64);
+        d.observe(&frame);
+        std::hint::black_box(d.last_eval());
+    }
+    t0.elapsed().as_nanos() as f64 / n as f64
+}
+
+/// Analytic dispatcher state footprint.
+pub fn state_bytes(sys: &SystemConfig) -> usize {
+    let d = &sys.dispatcher;
+    // two rolling windows of f64 + the short torque window + queue of k
+    // actions + constants
+    8 * (d.window_acc + d.window_tau + d.w_tau) + crate::CHUNK * crate::N_JOINTS * 8 + 256
+}
+
+pub fn run(sys: &SystemConfig, system_overhead_frac: f64) -> OverheadReport {
+    let tick_ns = measure_tick_ns(sys, 20_000);
+    let budget_ns = 1e9 / sys.robot.sensor_hz;
+    OverheadReport {
+        tick_ns,
+        tick_budget_frac: tick_ns / budget_ns,
+        system_overhead_frac,
+        state_bytes: state_bytes(sys),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatcher_tick_fits_sensor_budget() {
+        let sys = SystemConfig::default();
+        let r = run(&sys, 0.0);
+        // 500 Hz budget = 2 ms; the dispatcher must use well under 5%
+        assert!(r.tick_budget_frac < 0.05, "tick uses {:.3}% of budget", 100.0 * r.tick_budget_frac);
+        assert!(r.tick_ns > 0.0);
+    }
+
+    #[test]
+    fn state_is_kilobytes() {
+        let sys = SystemConfig::default();
+        let b = state_bytes(&sys);
+        assert!(b < 64 * 1024, "state {b} bytes");
+    }
+}

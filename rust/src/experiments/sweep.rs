@@ -1,0 +1,86 @@
+//! Hyper-parameter sweep (paper §VI-D.1): latency/load trade-off across
+//! (θ_comp, θ_red) — high thresholds starve the cloud, low thresholds
+//! flood the network; (0.65, 0.35) is the paper's optimum.
+
+use super::Backends;
+use crate::config::{PolicyKind, SystemConfig};
+use crate::metrics::aggregate;
+use crate::robot::tasks::ALL_TASKS;
+use crate::serve::session::run_policy;
+use crate::util::tablefmt::Table;
+
+pub struct SweepPoint {
+    pub theta_comp: f64,
+    pub theta_red: f64,
+    pub total_lat: f64,
+    pub cloud_events_per_ep: f64,
+    pub success_rate: f64,
+}
+
+pub fn run(
+    sys_base: &SystemConfig,
+    backends: &mut Backends,
+    comps: &[f64],
+    reds: &[f64],
+    episodes: usize,
+) -> (Table, Vec<SweepPoint>) {
+    let mut points = Vec::new();
+    for &tc in comps {
+        for &tr in reds {
+            let mut sys = sys_base.clone();
+            sys.dispatcher.theta_comp = tc;
+            sys.dispatcher.theta_red = tr;
+            let res = run_policy(
+                &sys,
+                PolicyKind::Rapid,
+                &ALL_TASKS,
+                episodes,
+                backends.edge.as_mut(),
+                backends.cloud.as_mut(),
+            );
+            let row = aggregate(PolicyKind::Rapid, &res.episodes);
+            let cloud_events =
+                res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / res.episodes.len() as f64;
+            points.push(SweepPoint {
+                theta_comp: tc,
+                theta_red: tr,
+                total_lat: row.total_lat_mean,
+                cloud_events_per_ep: cloud_events,
+                success_rate: row.success_rate,
+            });
+        }
+    }
+    let mut t = Table::new(
+        "Hyper-parameter sweep (theta_comp x theta_red)",
+        &["theta_comp", "theta_red", "Total Lat.", "Cloud events/ep", "Success"],
+    );
+    for p in &points {
+        t.row(&[
+            format!("{:.2}", p.theta_comp),
+            format!("{:.2}", p.theta_red),
+            format!("{:.1}ms", p.total_lat),
+            format!("{:.1}", p.cloud_events_per_ep),
+            format!("{:.0}%", 100.0 * p.success_rate),
+        ]);
+    }
+    (t, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lower_thresholds_mean_more_offloads() {
+        let sys = SystemConfig::default();
+        let mut b = Backends::analytic(31);
+        let (_, pts) = run(&sys, &mut b, &[0.2, 2.5], &[0.35], 1);
+        // θ_comp = 0.2 must offload at least as much as θ_comp = 2.5
+        assert!(
+            pts[0].cloud_events_per_ep >= pts[1].cloud_events_per_ep,
+            "low {} high {}",
+            pts[0].cloud_events_per_ep,
+            pts[1].cloud_events_per_ep
+        );
+    }
+}

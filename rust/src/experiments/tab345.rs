@@ -1,0 +1,145 @@
+//! Tables III, IV, V: the main comparisons.
+//!
+//! * Table III — LIBERO simulation: Edge-Only / Cloud-Only / SAFE / RAPID.
+//! * Table IV — real-world preset:  Edge-Only / Cloud-Only / ISAR / RAPID.
+//! * Table V  — ablation: w/o θ_comp, w/o θ_red, full RAPID.
+
+use super::Backends;
+use crate::config::{PolicyKind, SystemConfig};
+use crate::metrics::PolicyRow;
+use crate::serve::session::run_suite;
+use crate::util::tablefmt::Table;
+
+pub struct MainRows {
+    pub rows: Vec<PolicyRow>,
+}
+
+impl MainRows {
+    pub fn get(&self, k: PolicyKind) -> &PolicyRow {
+        self.rows.iter().find(|r| r.policy == k).expect("missing policy row")
+    }
+
+    /// End-to-end speedup of RAPID over the vision baseline (the paper's
+    /// 1.73× headline).
+    pub fn speedup_vs_vision(&self) -> f64 {
+        self.get(PolicyKind::VisionBased).total_lat_mean / self.get(PolicyKind::Rapid).total_lat_mean
+    }
+}
+
+fn comparison(
+    sys: &SystemConfig,
+    backends: &mut Backends,
+    kinds: &[PolicyKind],
+    episodes: usize,
+) -> MainRows {
+    let results = run_suite(sys, kinds, episodes, backends.edge.as_mut(), backends.cloud.as_mut());
+    MainRows { rows: results.into_iter().map(|r| r.row).collect() }
+}
+
+fn render(title: &str, rows: &MainRows, names: &[(PolicyKind, &str)]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["Method", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.", "Total Load"],
+    );
+    for (k, name) in names {
+        t.row(&rows.get(*k).table_cells(Some(name)));
+    }
+    t
+}
+
+/// Table III (LIBERO preset expected in `sys`).
+pub fn tab3(sys: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Table, MainRows) {
+    let kinds = [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid];
+    let rows = comparison(sys, backends, &kinds, episodes);
+    let t = render(
+        "TABLE III — Edge-cloud collaborative inference on simulation benchmarks (LIBERO)",
+        &rows,
+        &[
+            (PolicyKind::EdgeOnly, "Edge-Only"),
+            (PolicyKind::CloudOnly, "Cloud-Only"),
+            (PolicyKind::VisionBased, "SAFE (Vision-Based)"),
+            (PolicyKind::Rapid, "RAPID (Ours)"),
+        ],
+    );
+    (t, rows)
+}
+
+/// Table IV (real-world preset expected in `sys`).
+pub fn tab4(sys: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Table, MainRows) {
+    let kinds = [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid];
+    let rows = comparison(sys, backends, &kinds, episodes);
+    let t = render(
+        "TABLE IV — Edge-cloud collaborative inference on real-world environments",
+        &rows,
+        &[
+            (PolicyKind::EdgeOnly, "Edge-Only"),
+            (PolicyKind::CloudOnly, "Cloud-Only"),
+            (PolicyKind::VisionBased, "ISAR (Vision-Based)"),
+            (PolicyKind::Rapid, "RAPID (Ours)"),
+        ],
+    );
+    (t, rows)
+}
+
+/// Table V — dual-threshold ablation on the LIBERO preset.
+pub fn tab5(sys: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Table, MainRows) {
+    let kinds = [PolicyKind::RapidNoComp, PolicyKind::RapidNoRed, PolicyKind::Rapid];
+    let rows = comparison(sys, backends, &kinds, episodes);
+    let t = render(
+        "TABLE V — Ablation of dual-threshold partitioning (LIBERO)",
+        &rows,
+        &[
+            (PolicyKind::RapidNoComp, "w/o theta_comp (Acc.)"),
+            (PolicyKind::RapidNoRed, "w/o theta_red (Torque)"),
+            (PolicyKind::Rapid, "RAPID (Ours)"),
+        ],
+    );
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{libero_preset, realworld_preset};
+
+    #[test]
+    fn tab3_shape_matches_paper() {
+        let sys = libero_preset();
+        let mut b = Backends::analytic(7);
+        let (_, rows) = tab3(&sys, &mut b, 2);
+        let e = rows.get(PolicyKind::EdgeOnly).total_lat_mean;
+        let c = rows.get(PolicyKind::CloudOnly).total_lat_mean;
+        let v = rows.get(PolicyKind::VisionBased).total_lat_mean;
+        let r = rows.get(PolicyKind::Rapid).total_lat_mean;
+        // ordering: cloud < rapid < vision < edge
+        assert!(c < r && r < v && v < e, "c={c:.0} r={r:.0} v={v:.0} e={e:.0}");
+        // RAPID keeps a small edge footprint
+        assert!((rows.get(PolicyKind::Rapid).edge_gb - 2.4).abs() < 1e-6);
+        // speedup over vision in the paper's ballpark (>1.2x)
+        assert!(rows.speedup_vs_vision() > 1.2, "speedup {}", rows.speedup_vs_vision());
+    }
+
+    #[test]
+    fn tab5_ablation_ordering() {
+        let sys = libero_preset();
+        let mut b = Backends::analytic(9);
+        let (_, rows) = tab5(&sys, &mut b, 2);
+        let full = rows.get(PolicyKind::Rapid).total_lat_mean;
+        let no_comp = rows.get(PolicyKind::RapidNoComp).total_lat_mean;
+        let no_red = rows.get(PolicyKind::RapidNoRed).total_lat_mean;
+        // paper: full < w/o comp < w/o red
+        assert!(full < no_comp, "full {full} no_comp {no_comp}");
+        assert!(no_comp < no_red, "no_comp {no_comp} no_red {no_red}");
+    }
+
+    #[test]
+    fn tab4_realworld_slower_than_sim() {
+        let mut b = Backends::analytic(11);
+        let (_, sim_rows) = tab3(&libero_preset(), &mut b, 2);
+        let (_, real_rows) = tab4(&realworld_preset(), &mut b, 2);
+        assert!(
+            real_rows.get(PolicyKind::Rapid).total_lat_mean > sim_rows.get(PolicyKind::Rapid).total_lat_mean * 0.9
+        );
+        assert!((real_rows.get(PolicyKind::Rapid).total_gb - 14.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,150 @@
+//! Raw kinematic scores from the proprioceptive stream.
+//!
+//! * Instantaneous joint acceleration via finite difference (Eq. 2) and the
+//!   weighted acceleration magnitude score M_acc (Eq. 4).
+//! * High-frequency torque variation Δτ and the windowed redundancy state
+//!   score M_τ (Eq. 5).
+//! * Instantaneous joint velocity norm v_t for the dynamic phase weights.
+//!
+//! All O(1) per sensor tick, allocation-free (paper §VI-D.2).
+
+use crate::robot::{Jv, SensorFrame};
+use crate::util::RingBuf;
+use crate::N_JOINTS;
+
+/// Raw per-tick features.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KinFeatures {
+    /// Weighted acceleration magnitude score M_acc (Eq. 4).
+    pub m_acc: f64,
+    /// Windowed torque-variation score M_τ (Eq. 5).
+    pub m_tau: f64,
+    /// Velocity norm v_t = ‖q̇‖₂.
+    pub v: f64,
+}
+
+/// Stateful extractor: previous frame + the short w_τ window of Eq. 5.
+#[derive(Debug, Clone)]
+pub struct KinState {
+    prev: Option<SensorFrame>,
+    dt: f64,
+    w_acc: [f64; N_JOINTS],
+    w_tau: [f64; N_JOINTS],
+    /// |W_τ Δτ|² history over the short moving-average window w_τ.
+    tau_var_win: RingBuf<f64>,
+}
+
+impl KinState {
+    pub fn new(dt: f64, w_acc: [f64; N_JOINTS], w_tau: [f64; N_JOINTS], w_tau_len: usize) -> Self {
+        KinState { prev: None, dt, w_acc, w_tau, tau_var_win: RingBuf::new(w_tau_len.max(1)) }
+    }
+
+    /// Ingest the next sensor frame; returns features (zero for the first
+    /// frame, before a finite difference exists).
+    pub fn update(&mut self, f: &SensorFrame) -> KinFeatures {
+        let out = match &self.prev {
+            None => KinFeatures { m_acc: 0.0, m_tau: 0.0, v: f.dq.norm() },
+            Some(p) => {
+                // Eq. 2 / Eq. 4
+                let ddq = (f.dq - p.dq) * (1.0 / self.dt);
+                let m_acc = ddq.weighted_norm(&self.w_acc);
+                // Eq. 5: moving average of |W_τ Δτ|²
+                let dtau = f.tau - p.tau;
+                let wdt = Jv::from_fn(|i| self.w_tau[i] * dtau[i]);
+                let mag2 = wdt.dot(&wdt);
+                self.tau_var_win.push(mag2);
+                let m_tau = self.tau_var_win.iter().sum::<f64>() / self.tau_var_win.len() as f64;
+                KinFeatures { m_acc, m_tau, v: f.dq.norm() }
+            }
+        };
+        self.prev = Some(*f);
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.prev = None;
+        self.tau_var_win.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DispatcherConfig;
+
+    fn state() -> KinState {
+        let d = DispatcherConfig::default();
+        KinState::new(0.05, d.w_acc, d.w_torque, d.w_tau)
+    }
+
+    fn frame(step: usize, dq: f64, tau: f64) -> SensorFrame {
+        SensorFrame { step, q: Jv::ZERO, dq: Jv::splat(dq), tau: Jv::splat(tau) }
+    }
+
+    #[test]
+    fn first_frame_zero_scores() {
+        let mut s = state();
+        let f = s.update(&frame(0, 0.5, 1.0));
+        assert_eq!(f.m_acc, 0.0);
+        assert_eq!(f.m_tau, 0.0);
+        assert!(f.v > 0.0);
+    }
+
+    #[test]
+    fn constant_motion_zero_accel() {
+        let mut s = state();
+        s.update(&frame(0, 0.5, 1.0));
+        let f = s.update(&frame(1, 0.5, 1.0));
+        assert!(f.m_acc < 1e-12);
+        assert!(f.m_tau < 1e-12);
+    }
+
+    #[test]
+    fn velocity_jump_spikes_m_acc() {
+        let mut s = state();
+        s.update(&frame(0, 0.0, 1.0));
+        let f = s.update(&frame(1, 1.0, 1.0));
+        // ddq = 1.0/0.05 = 20 rad/s² on every joint
+        let expect = Jv::splat(20.0).weighted_norm(&DispatcherConfig::default().w_acc);
+        assert!((f.m_acc - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn torque_jump_raises_m_tau_then_decays() {
+        let mut s = state();
+        s.update(&frame(0, 0.0, 1.0));
+        let f_spike = s.update(&frame(1, 0.0, 4.0));
+        assert!(f_spike.m_tau > 0.0);
+        // hold torque constant: window average decays as the spike ages out
+        let mut last = f_spike.m_tau;
+        for i in 2..12 {
+            let f = s.update(&frame(i, 0.0, 4.0));
+            assert!(f.m_tau <= last + 1e-12);
+            last = f.m_tau;
+        }
+        assert!(last < f_spike.m_tau / 2.0);
+    }
+
+    #[test]
+    fn m_tau_matches_eq5_by_hand() {
+        let d = DispatcherConfig::default();
+        let mut s = KinState::new(0.05, d.w_acc, d.w_torque, 2);
+        s.update(&frame(0, 0.0, 0.0));
+        s.update(&frame(1, 0.0, 1.0)); // Δτ = 1 on all joints
+        let f = s.update(&frame(2, 0.0, 3.0)); // Δτ = 2
+        let e1: f64 = d.w_torque.iter().map(|w| (w * 1.0f64).powi(2)).sum();
+        let e2: f64 = d.w_torque.iter().map(|w| (w * 2.0f64).powi(2)).sum();
+        assert!((f.m_tau - (e1 + e2) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears_history() {
+        let mut s = state();
+        s.update(&frame(0, 0.0, 0.0));
+        s.update(&frame(1, 1.0, 5.0));
+        s.reset();
+        let f = s.update(&frame(2, 9.0, 9.0));
+        assert_eq!(f.m_acc, 0.0);
+        assert_eq!(f.m_tau, 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Kinematic feature extraction (paper §IV-A.1, §IV-B.1): the
+//! environment-agnostic signals RAPID partitions on.
+
+pub mod features;
+pub mod window;
+
+pub use features::{KinFeatures, KinState};

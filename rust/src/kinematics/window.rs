@@ -1,0 +1,83 @@
+//! Paired rolling-statistics windows for the two anomaly scores — a thin,
+//! purpose-named wrapper over [`crate::util::RollingStats`] matching the
+//! paper's (μ_acc, σ_acc) / (μ_τ, σ_τ) bookkeeping in Algorithm 1 step 2.
+
+use crate::util::RollingStats;
+
+/// Rolling normalization state for one score stream.
+#[derive(Debug, Clone)]
+pub struct ScoreWindow {
+    stats: RollingStats,
+    eps: f64,
+    /// Minimum samples before z-scores are considered calibrated; before
+    /// that the window reports 0 (no trigger during warm-up).
+    warmup: usize,
+}
+
+impl ScoreWindow {
+    pub fn new(window: usize, eps: f64, warmup: usize) -> Self {
+        ScoreWindow { stats: RollingStats::new(window), eps, warmup }
+    }
+
+    /// Push the raw score and return the normalized anomaly score
+    /// M̂ = (M - μ)/(σ + ε), or 0 during warm-up.
+    pub fn normalize(&mut self, raw: f64) -> f64 {
+        let z = if self.stats.len() >= self.warmup { self.stats.zscore(raw, self.eps) } else { 0.0 };
+        self.stats.push(raw);
+        z
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.stats.std()
+    }
+
+    pub fn samples(&self) -> usize {
+        self.stats.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_suppresses_triggers() {
+        let mut w = ScoreWindow::new(16, 1e-6, 4);
+        for _ in 0..3 {
+            assert_eq!(w.normalize(100.0), 0.0);
+        }
+        // after warm-up and once the warm-up spikes age out of the window,
+        // a fresh spike normalizes high
+        for _ in 0..20 {
+            w.normalize(1.0);
+        }
+        assert!(w.normalize(50.0) > 3.0);
+    }
+
+    #[test]
+    fn steady_stream_z_near_zero() {
+        let mut w = ScoreWindow::new(32, 1e-6, 4);
+        let mut z_last = f64::NAN;
+        for i in 0..100 {
+            z_last = w.normalize(2.0 + 0.001 * (i % 3) as f64);
+        }
+        assert!(z_last.abs() < 2.0);
+    }
+
+    #[test]
+    fn spike_scales_with_sigma() {
+        // the same absolute spike is a bigger anomaly on a quieter stream
+        let mut quiet = ScoreWindow::new(64, 1e-6, 4);
+        let mut loud = ScoreWindow::new(64, 1e-6, 4);
+        let mut r = crate::util::Pcg32::seeded(3);
+        for _ in 0..64 {
+            quiet.normalize(1.0 + 0.01 * r.normal());
+            loud.normalize(1.0 + 0.5 * r.normal());
+        }
+        assert!(quiet.normalize(3.0) > loud.normalize(3.0));
+    }
+}

@@ -1,0 +1,53 @@
+//! # RAPID — Redundancy-Aware and Compatibility-Optimal Edge-Cloud
+//! # Partitioned Inference for Diverse VLA Models
+//!
+//! Production-quality reproduction of the RAPID paper (CS.DC 2026):
+//! a three-layer Rust + JAX + Pallas serving stack where the Rust L3
+//! coordinator implements the paper's contribution — a kinematic,
+//! environment-agnostic dual-threshold dispatcher that partitions VLA
+//! inference between an edge device and the cloud.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`dispatcher`] — the RAPID trigger (Algorithm 1): rolling kinematic
+//!   statistics, normalized anomaly scores, dynamic phase weights,
+//!   dual-threshold fusion, cooldown, chunk queue.
+//! * [`policy`] — partitioning strategies: RAPID + the paper's baselines
+//!   (Edge-Only, Cloud-Only, vision-entropy SAFE/ISAR).
+//! * [`robot`], [`scene`] — the evaluation substrate: rigid-body N-DOF
+//!   manipulator simulator and synthetic observation renderer.
+//! * [`runtime`], [`vla`] — PJRT CPU client loading the AOT-compiled JAX/
+//!   Pallas VLA surrogate (HLO text artifacts; python never at runtime).
+//! * [`net`], [`serve`] — link model + real TCP cloud server, episode
+//!   driver, batcher, router.
+//! * [`experiments`] — one generator per paper table/figure.
+//!
+//! Python runs once at build time (`make artifacts`); the binary built from
+//! this crate is self-contained afterwards.
+
+pub mod util;
+pub mod config;
+pub mod robot;
+pub mod scene;
+pub mod kinematics;
+pub mod dispatcher;
+pub mod policy;
+pub mod runtime;
+pub mod vla;
+pub mod net;
+pub mod serve;
+pub mod metrics;
+pub mod benchkit;
+pub mod experiments;
+
+/// Degrees of freedom of the simulated manipulator (paper: 7-DOF arm).
+pub const N_JOINTS: usize = 7;
+/// Action-chunk length k (Eq. 1).
+pub const CHUNK: usize = 8;
+/// Action-token vocabulary for the entropy signal.
+pub const VOCAB: usize = 64;
+/// Visual feature channels produced by the renderer.
+pub const D_VIS: usize = 64;
+/// Proprioceptive input dim: q, q_dot, tau.
+pub const D_PROP: usize = 3 * N_JOINTS;
+/// Instruction one-hot size.
+pub const N_INSTR: usize = 8;

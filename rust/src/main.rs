@@ -1,0 +1,301 @@
+//! RAPID CLI — the leader entrypoint.
+//!
+//! ```text
+//! rapid run   [--preset libero|realworld] [--policy rapid|...] [--task pick|drawer|peg]
+//!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
+//!             [--analytic] [--trace out.csv] [--config file.toml]
+//! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|all>
+//! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
+//! rapid info
+//! ```
+//!
+//! (Argument parsing is hand-rolled: no third-party CLI crates exist in
+//! this offline environment.)
+
+use rapid::config::{presets, NoiseLevel, PolicyKind, SystemConfig};
+use rapid::experiments::{self, Backends};
+use rapid::robot::TaskKind;
+use rapid::util::tablefmt::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "RAPID — redundancy-aware edge-cloud partitioned inference for VLA models\n\n\
+         USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
+         \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
+         \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|all>\n\
+         \x20 rapid serve [--addr A] [--batch B] [--analytic]\n\
+         \x20 rapid info\n"
+    );
+}
+
+/// Tiny flag parser: --key value / --flag.
+struct Flags<'a>(&'a [String]);
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.iter().position(|a| a == key).and_then(|i| self.0.get(i + 1)).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.0.iter().any(|a| a == key)
+    }
+}
+
+fn load_sys(flags: &Flags) -> SystemConfig {
+    let mut sys = flags
+        .get("--preset")
+        .and_then(presets::by_name)
+        .unwrap_or_else(presets::libero_preset);
+    if let Some(path) = flags.get("--config") {
+        match std::fs::read_to_string(path) {
+            Ok(src) => match rapid::config::parse::parse_toml(&src) {
+                Ok(v) => sys.apply_value(&v),
+                Err(e) => {
+                    eprintln!("config parse error: {e}");
+                    std::process::exit(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(n) = flags.get("--noise").and_then(NoiseLevel::parse) {
+        sys.scene.noise = n;
+    }
+    if let Some(s) = flags.get("--seed").and_then(|s| s.parse().ok()) {
+        sys.episode.seed = s;
+    }
+    if let Some(e) = flags.get("--episodes").and_then(|s| s.parse().ok()) {
+        sys.episode.episodes = e;
+    }
+    sys
+}
+
+fn backends(flags: &Flags, seed: u64) -> Backends {
+    if flags.has("--analytic") {
+        Backends::analytic(seed)
+    } else {
+        Backends::pjrt_or_analytic(seed)
+    }
+}
+
+fn cmd_run(rest: &[String]) -> i32 {
+    let flags = Flags(rest);
+    let sys = load_sys(&flags);
+    let kind = flags.get("--policy").and_then(PolicyKind::parse).unwrap_or(PolicyKind::Rapid);
+    let task = flags.get("--task").and_then(TaskKind::parse);
+    let mut b = backends(&flags, sys.episode.seed);
+
+    match task {
+        Some(task) => {
+            // single traced episode
+            let strategy = rapid::policy::build(kind, &sys);
+            let out = rapid::serve::run_episode(
+                &sys,
+                task,
+                strategy,
+                b.edge.as_mut(),
+                b.cloud.as_mut(),
+                sys.episode.seed,
+                true,
+            );
+            let m = &out.metrics;
+            let (c, e, t) = m.latency_columns();
+            println!(
+                "task={} policy={} steps={} events(edge/cloud)={}|{} preempt={} success={}",
+                task.name(),
+                kind.name(),
+                m.steps,
+                m.edge_events,
+                m.cloud_events,
+                m.preemptions,
+                m.success
+            );
+            println!("latency: cloud {c:.1}ms + edge {e:.1}ms (+overhead) = total {t:.1}ms/event");
+            println!("loads: edge {:.1}GB cloud {:.1}GB", m.edge_gb, m.cloud_gb);
+            if let Some(path) = flags.get("--trace") {
+                if let Some(tr) = out.trace {
+                    if let Err(err) = tr.save_csv(path) {
+                        eprintln!("trace save failed: {err}");
+                        return 1;
+                    }
+                    println!("trace written to {path}");
+                }
+            }
+        }
+        None => {
+            let episodes = sys.episode.episodes;
+            let res = rapid::serve::session::run_policy(
+                &sys,
+                kind,
+                &rapid::robot::tasks::ALL_TASKS,
+                episodes,
+                b.edge.as_mut(),
+                b.cloud.as_mut(),
+            );
+            let mut t = Table::new(
+                &format!("Suite: {} on preset {}", kind.name(), sys.name),
+                &["Method", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.", "Total Load"],
+            );
+            t.row(&res.row.table_cells(None));
+            print!("{}", t.render());
+            println!(
+                "success {:.0}%  rms_err {:.3}  preemptions/ep {:.1}  trig-precision {:.2}",
+                100.0 * res.row.success_rate,
+                res.row.rms_error,
+                res.row.preemptions,
+                res.row.trigger_precision
+            );
+        }
+    }
+    0
+}
+
+fn cmd_bench(rest: &[String]) -> i32 {
+    let flags = Flags(&rest[1.min(rest.len())..]);
+    let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+    let sys = load_sys(&flags);
+    let mut b = backends(&flags, sys.episode.seed);
+    let eps = sys.episode.episodes.min(6).max(2);
+
+    let run_one = |name: &str, b: &mut Backends| match name {
+        "tab1" => print!("{}", experiments::tab1::run(&sys, b, eps).0.render()),
+        "tab2" => print!("{}", experiments::tab2::run(&sys, b, eps).0.render()),
+        "tab3" => {
+            let (t, rows) = experiments::tab345::tab3(&sys, b, eps);
+            print!("{}", t.render());
+            println!("speedup vs vision: {:.2}x", rows.speedup_vs_vision());
+        }
+        "tab4" => {
+            let real = presets::realworld_preset();
+            let (t, rows) = experiments::tab345::tab4(&real, b, eps);
+            print!("{}", t.render());
+            println!("speedup vs vision: {:.2}x", rows.speedup_vs_vision());
+        }
+        "tab5" => print!("{}", experiments::tab345::tab5(&sys, b, eps).0.render()),
+        "fig2" => {
+            let data = experiments::fig2::run(&sys, b);
+            for (noise, e, c) in &data.entropy_traces {
+                println!(
+                    "{:<13} false-breach rate {:.1}%",
+                    noise.name(),
+                    100.0 * experiments::fig2::false_breach_rate(e, c, data.entropy_threshold)
+                );
+            }
+        }
+        "fig3" => {
+            let data = experiments::fig3::run(&sys, b, eps);
+            for (task, _, _, r, rho) in &data.series {
+                println!("{:<16} pearson r = {r:.3}   spearman = {rho:.3}", task.name());
+            }
+            println!("pooled: r = {:.3}, spearman = {:.3}", data.pooled_pearson, data.pooled_spearman);
+        }
+        "fig5" => {
+            let data = experiments::fig5::run(&sys, b);
+            print!("{}", experiments::fig5::render_ascii(&data, 72));
+        }
+        "sweep" => {
+            let (t, _) = experiments::sweep::run(
+                &sys,
+                b,
+                &[0.35, 0.65, 1.0, 1.5],
+                &[0.2, 0.35, 0.6],
+                (eps / 2).max(1),
+            );
+            print!("{}", t.render());
+        }
+        "overhead" => {
+            let r = experiments::overhead::run(&sys, 0.06);
+            println!(
+                "dispatcher tick: {:.0}ns ({:.3}% of the {}Hz sensor budget); state {} bytes",
+                r.tick_ns,
+                100.0 * r.tick_budget_frac,
+                sys.robot.sensor_hz,
+                r.state_bytes
+            );
+        }
+        other => eprintln!("unknown bench {other}"),
+    };
+
+    if which == "all" {
+        for name in ["tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead"] {
+            println!("\n### {name}");
+            run_one(name, &mut b);
+        }
+    } else {
+        run_one(which, &mut b);
+    }
+    0
+}
+
+fn cmd_serve(rest: &[String]) -> i32 {
+    let flags = Flags(rest);
+    let addr = flags.get("--addr").unwrap_or("127.0.0.1:7070").to_string();
+    let batch = flags.get("--batch").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let analytic = flags.has("--analytic");
+    let server = rapid::net::CloudServer::start(&addr, batch, move || {
+        if analytic {
+            Box::new(rapid::vla::AnalyticBackend::cloud(1)) as Box<dyn rapid::vla::Backend>
+        } else {
+            match Backends::try_pjrt() {
+                Ok(b) => b.cloud,
+                Err(e) => {
+                    eprintln!("[serve] PJRT unavailable ({e}); serving analytic model");
+                    Box::new(rapid::vla::AnalyticBackend::cloud(1))
+                }
+            }
+        }
+    });
+    match server {
+        Ok(s) => {
+            println!("cloud VLA server listening on {} (batch<= {batch}); Ctrl-C to stop", s.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("RAPID reproduction — three-layer rust + JAX + Pallas stack");
+    match rapid::runtime::ArtifactMeta::load(rapid::runtime::ArtifactMeta::default_dir()) {
+        Ok(m) => {
+            println!("artifacts: {:?} (seed {})", m.dir, m.seed);
+            for v in &m.variants {
+                println!("  {}: d={} layers={} params={}", v.name, v.d, v.layers, v.n_params);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    match rapid::runtime::RuntimeClient::cpu() {
+        Ok(c) => println!("pjrt: {} ok", c.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    0
+}

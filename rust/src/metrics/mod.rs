@@ -1,0 +1,7 @@
+//! Latency / load / fluency accounting matching the paper's table columns.
+
+pub mod recorder;
+pub mod summary;
+
+pub use recorder::EpisodeMetrics;
+pub use summary::{aggregate, PolicyRow};

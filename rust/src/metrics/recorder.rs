@@ -1,0 +1,171 @@
+//! Per-episode accounting. The accounting identity (DESIGN.md §7.7):
+//!
+//! total latency contribution = cloud-side + edge-side + routing overhead,
+//!
+//! where the side columns are *amortized per consumed action chunk*
+//! (steps / k). This is what makes wasted work visible: a policy that
+//! floods the cloud with chunks it then discards (the vision baseline
+//! under noise) pays for every generation but only consumes a few — its
+//! per-chunk latency explodes, exactly the behaviour the paper's Tab. I
+//! rows show (395 → 520 → 685 ms at constant load). Edge-Only/Cloud-Only
+//! generate exactly one chunk per chunk consumed, so their columns equal
+//! the per-inference service time, matching the paper's anchors.
+
+use crate::config::PolicyKind;
+use crate::robot::TaskKind;
+
+#[derive(Debug, Clone)]
+pub struct EpisodeMetrics {
+    pub task: TaskKind,
+    pub policy: PolicyKind,
+    pub steps: usize,
+
+    // --- emulated testbed time (ms) ---
+    pub edge_busy_ms: f64,
+    pub cloud_busy_ms: f64,
+    /// Routing/communication overhead: vision preprocessing, split
+    /// re-partitions, retransmission time, dispatcher CPU.
+    pub overhead_ms: f64,
+
+    // --- events ---
+    pub edge_events: u64,
+    pub cloud_events: u64,
+    pub preemptions: u64,
+    pub discarded_actions: u64,
+    pub retransmissions: u64,
+    pub repartitions: u64,
+
+    // --- loads (GB), time-averaged over the episode ---
+    pub edge_gb: f64,
+    pub cloud_gb: f64,
+
+    // --- trigger quality vs ground-truth critical phases ---
+    pub trig_tp: u64,
+    pub trig_fp: u64,
+    pub crit_steps: u64,
+
+    // --- task outcome ---
+    pub rms_error: f64,
+    pub success: bool,
+
+    // --- real measured wall clock (µs) for the §Perf record ---
+    pub measured_edge_us: f64,
+    pub measured_cloud_us: f64,
+    pub dispatcher_cpu_ns: u64,
+}
+
+impl EpisodeMetrics {
+    pub fn new(task: TaskKind, policy: PolicyKind) -> Self {
+        EpisodeMetrics {
+            task,
+            policy,
+            steps: 0,
+            edge_busy_ms: 0.0,
+            cloud_busy_ms: 0.0,
+            overhead_ms: 0.0,
+            edge_events: 0,
+            cloud_events: 0,
+            preemptions: 0,
+            discarded_actions: 0,
+            retransmissions: 0,
+            repartitions: 0,
+            edge_gb: 0.0,
+            cloud_gb: 0.0,
+            trig_tp: 0,
+            trig_fp: 0,
+            crit_steps: 0,
+            rms_error: 0.0,
+            success: false,
+            measured_edge_us: 0.0,
+            measured_cloud_us: 0.0,
+            dispatcher_cpu_ns: 0,
+        }
+    }
+
+    pub fn events(&self) -> u64 {
+        self.edge_events + self.cloud_events
+    }
+
+    /// Chunks actually consumed by the control loop.
+    pub fn chunks_consumed(&self) -> u64 {
+        ((self.steps + crate::CHUNK - 1) / crate::CHUNK).max(1) as u64
+    }
+
+    /// Amortized per-consumed-chunk latency columns (cloud, edge, total).
+    pub fn latency_columns(&self) -> (f64, f64, f64) {
+        let n = self.chunks_consumed() as f64;
+        let cloud = self.cloud_busy_ms / n;
+        let edge = self.edge_busy_ms / n;
+        let total = cloud + edge + self.overhead_ms / n;
+        (cloud, edge, total)
+    }
+
+    /// Trigger precision: TP / (TP + FP).
+    pub fn trigger_precision(&self) -> f64 {
+        let denom = self.trig_tp + self.trig_fp;
+        if denom == 0 {
+            return 1.0;
+        }
+        self.trig_tp as f64 / denom as f64
+    }
+
+    /// Accounting identity check (invariant #7).
+    pub fn identity_holds(&self, total_gb: f64) -> bool {
+        let (c, e, t) = self.latency_columns();
+        let sums = (c + e + self.overhead_ms / self.chunks_consumed() as f64 - t).abs() < 1e-9;
+        let loads = (self.edge_gb + self.cloud_gb - total_gb).abs() < 1e-6;
+        sums && loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> EpisodeMetrics {
+        let mut m = EpisodeMetrics::new(TaskKind::PickPlace, PolicyKind::Rapid);
+        m.steps = 48; // 6 consumed chunks at k = 8
+        m.edge_busy_ms = 800.0;
+        m.cloud_busy_ms = 400.0;
+        m.overhead_ms = 60.0;
+        m.edge_events = 4;
+        m.cloud_events = 2;
+        m.edge_gb = 2.4;
+        m.cloud_gb = 11.8;
+        m
+    }
+
+    #[test]
+    fn columns_amortize_per_consumed_chunk() {
+        let m = m();
+        assert_eq!(m.chunks_consumed(), 6);
+        let (c, e, t) = m.latency_columns();
+        assert!((c - 400.0 / 6.0).abs() < 1e-9);
+        assert!((e - 800.0 / 6.0).abs() < 1e-9);
+        assert!((t - (c + e + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wasted_generations_inflate_per_chunk_latency() {
+        // same busy time, fewer consumed chunks => higher per-chunk cost
+        let mut flood = m();
+        flood.steps = 16; // only 2 chunks consumed for the same work
+        assert!(flood.latency_columns().2 > m().latency_columns().2);
+    }
+
+    #[test]
+    fn identity() {
+        assert!(m().identity_holds(14.2));
+        let mut bad = m();
+        bad.edge_gb = 5.0;
+        assert!(!bad.identity_holds(14.2));
+    }
+
+    #[test]
+    fn zero_events_safe() {
+        let m = EpisodeMetrics::new(TaskKind::PegInsert, PolicyKind::EdgeOnly);
+        let (c, e, t) = m.latency_columns();
+        assert_eq!((c, e, t), (0.0, 0.0, 0.0));
+        assert_eq!(m.trigger_precision(), 1.0);
+    }
+}

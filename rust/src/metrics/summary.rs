@@ -1,0 +1,129 @@
+//! Aggregation of per-episode metrics into paper-style table rows.
+
+use super::recorder::EpisodeMetrics;
+use crate::config::PolicyKind;
+use crate::util::Summary;
+
+/// One table row: a policy summarized over many episodes.
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    pub policy: PolicyKind,
+    pub episodes: usize,
+    pub cloud_lat_ms: f64,
+    pub edge_lat_ms: f64,
+    pub total_lat_mean: f64,
+    pub total_lat_std: f64,
+    pub overhead_ms: f64,
+    pub edge_gb: f64,
+    pub cloud_gb: f64,
+    pub total_gb: f64,
+    pub success_rate: f64,
+    pub rms_error: f64,
+    pub preemptions: f64,
+    pub trigger_precision: f64,
+    pub measured_edge_us: f64,
+    pub measured_cloud_us: f64,
+    pub dispatcher_ns_per_step: f64,
+}
+
+/// Aggregate episodes of a single policy.
+pub fn aggregate(policy: PolicyKind, eps: &[EpisodeMetrics]) -> PolicyRow {
+    assert!(!eps.is_empty(), "no episodes to aggregate");
+    let totals: Vec<f64> = eps.iter().map(|m| m.latency_columns().2).collect();
+    let s = Summary::of(&totals);
+    let mean = |f: &dyn Fn(&EpisodeMetrics) -> f64| -> f64 {
+        eps.iter().map(|m| f(m)).sum::<f64>() / eps.len() as f64
+    };
+    PolicyRow {
+        policy,
+        episodes: eps.len(),
+        cloud_lat_ms: mean(&|m| m.latency_columns().0),
+        edge_lat_ms: mean(&|m| m.latency_columns().1),
+        total_lat_mean: s.mean,
+        total_lat_std: s.std,
+        overhead_ms: mean(&|m| m.overhead_ms / m.chunks_consumed() as f64),
+        edge_gb: mean(&|m| m.edge_gb),
+        cloud_gb: mean(&|m| m.cloud_gb),
+        total_gb: mean(&|m| m.edge_gb + m.cloud_gb),
+        success_rate: mean(&|m| if m.success { 1.0 } else { 0.0 }),
+        rms_error: mean(&|m| m.rms_error),
+        preemptions: mean(&|m| m.preemptions as f64),
+        trigger_precision: mean(&|m| m.trigger_precision()),
+        measured_edge_us: mean(&|m| m.measured_edge_us),
+        measured_cloud_us: mean(&|m| m.measured_cloud_us),
+        dispatcher_ns_per_step: mean(&|m| {
+            if m.steps == 0 {
+                0.0
+            } else {
+                m.dispatcher_cpu_ns as f64 / m.steps as f64
+            }
+        }),
+    }
+}
+
+impl PolicyRow {
+    /// Paper-style row cells: Method | Cloud Lat | Cloud Load | Edge Lat |
+    /// Edge Load | Total Lat ± std | Total Load.
+    pub fn table_cells(&self, name_override: Option<&str>) -> Vec<String> {
+        use crate::util::tablefmt::{gb, ms, ms_pm};
+        let dash = "-".to_string();
+        let name = name_override.unwrap_or(self.policy.name()).to_string();
+        let (cl, cg) = if self.cloud_gb <= 1e-9 && self.cloud_lat_ms <= 1e-9 {
+            (dash.clone(), dash.clone())
+        } else {
+            (ms(self.cloud_lat_ms), gb(self.cloud_gb))
+        };
+        let (el, eg) = if self.edge_gb <= 1e-9 && self.edge_lat_ms <= 1e-9 {
+            (dash.clone(), dash)
+        } else {
+            (ms(self.edge_lat_ms), gb(self.edge_gb))
+        };
+        vec![name, cl, cg, el, eg, ms_pm(self.total_lat_mean, self.total_lat_std), gb(self.total_gb)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::TaskKind;
+
+    fn ep(cloud: f64, edge: f64, ov: f64, e_ev: u64, c_ev: u64) -> EpisodeMetrics {
+        let mut m = EpisodeMetrics::new(TaskKind::PickPlace, PolicyKind::Rapid);
+        m.cloud_busy_ms = cloud;
+        m.edge_busy_ms = edge;
+        m.overhead_ms = ov;
+        m.edge_events = e_ev;
+        m.cloud_events = c_ev;
+        m.edge_gb = 2.4;
+        m.cloud_gb = 11.8;
+        m.steps = 50;
+        m
+    }
+
+    #[test]
+    fn aggregation_means() {
+        let eps = vec![ep(400.0, 800.0, 60.0, 4, 2), ep(600.0, 600.0, 0.0, 3, 3)];
+        let row = aggregate(PolicyKind::Rapid, &eps);
+        assert_eq!(row.episodes, 2);
+        // steps = 50 => ceil(50/8) = 7 consumed chunks per episode
+        let t0 = (400.0 + 800.0 + 60.0) / 7.0;
+        let t1 = 1200.0 / 7.0;
+        assert!((row.total_lat_mean - (t0 + t1) / 2.0).abs() < 1e-9);
+        assert!((row.total_gb - 14.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_cells_format() {
+        let row = aggregate(PolicyKind::Rapid, &[ep(400.0, 800.0, 0.0, 4, 2)]);
+        let cells = row.table_cells(None);
+        assert_eq!(cells.len(), 7);
+        assert!(cells[1].ends_with("ms"));
+        assert_eq!(cells[6], "14.2GB");
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_aggregation_panics() {
+        aggregate(PolicyKind::Rapid, &[]);
+    }
+}

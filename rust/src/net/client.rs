@@ -1,0 +1,126 @@
+//! Blocking TCP client used by the edge process to query the cloud server.
+
+use super::proto::{self, Frame, InferRequest, ProtoError};
+use crate::vla::ModelOut;
+use crate::{D_PROP, D_VIS};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+pub struct CloudClient {
+    stream: TcpStream,
+    /// Measured request round-trip times (µs).
+    pub rtts_us: Vec<u64>,
+}
+
+impl CloudClient {
+    pub fn connect(addr: &str) -> std::io::Result<CloudClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(CloudClient { stream, rtts_us: Vec::new() })
+    }
+
+    /// Round-trip an inference request.
+    pub fn infer(&mut self, obs: &[f32; D_VIS], proprio: &[f32; D_PROP], instr: usize) -> Result<ModelOut, ProtoError> {
+        let t0 = Instant::now();
+        let req = InferRequest { instr: instr as u32, obs: *obs, proprio: *proprio };
+        proto::write_all(&mut self.stream, &proto::encode_infer(&req))?;
+        match proto::read_frame(&mut self.stream)? {
+            Frame::Result(out) => {
+                self.rtts_us.push(t0.elapsed().as_micros() as u64);
+                Ok(out)
+            }
+            other => Err(ProtoError::Malformed(format!("expected result, got {other:?}"))),
+        }
+    }
+
+    /// Liveness probe; returns measured RTT.
+    pub fn ping(&mut self) -> Result<Duration, ProtoError> {
+        let t0 = Instant::now();
+        proto::write_all(&mut self.stream, &proto::encode_tag(proto::TAG_PING))?;
+        match proto::read_frame(&mut self.stream)? {
+            Frame::Pong => Ok(t0.elapsed()),
+            other => Err(ProtoError::Malformed(format!("expected pong, got {other:?}"))),
+        }
+    }
+
+    /// Ask the server to stop accepting connections.
+    pub fn shutdown_server(&mut self) -> Result<(), ProtoError> {
+        proto::write_all(&mut self.stream, &proto::encode_tag(proto::TAG_SHUTDOWN))
+    }
+
+    pub fn mean_rtt_us(&self) -> f64 {
+        if self.rtts_us.is_empty() {
+            0.0
+        } else {
+            self.rtts_us.iter().sum::<u64>() as f64 / self.rtts_us.len() as f64
+        }
+    }
+}
+
+/// A [`CloudClient`] is itself a model backend: inference over the wire.
+/// This is what makes `examples/serve_cluster.rs` a *real* end-to-end
+/// edge-cloud deployment — the episode driver's cloud calls leave the
+/// process over TCP and hit the PJRT-backed server.
+impl crate::vla::Backend for CloudClient {
+    fn name(&self) -> &str {
+        "cloud-tcp"
+    }
+
+    fn infer(&mut self, obs: &[f32; D_VIS], proprio: &[f32; D_PROP], instr: usize) -> crate::vla::ModelOut {
+        CloudClient::infer(self, obs, proprio, instr).expect("cloud RPC failed")
+    }
+
+    fn mean_us(&self) -> f64 {
+        self.mean_rtt_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::server::CloudServer;
+    use crate::vla::AnalyticBackend;
+
+    #[test]
+    fn end_to_end_tcp_roundtrip() {
+        let server = CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(1))).unwrap();
+        let addr = server.addr.to_string();
+        let mut client = CloudClient::connect(&addr).unwrap();
+        assert!(client.ping().is_ok());
+
+        let mut obs = [0f32; D_VIS];
+        obs[0] = 0.4;
+        obs[7] = 0.9;
+        let out = client.infer(&obs, &[0.0; D_PROP], 1).unwrap();
+        assert_eq!(out.actions.len(), crate::CHUNK);
+        assert!(out.mass.iter().all(|m| m.is_finite()));
+        assert!(client.mean_rtt_us() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_clients_served() {
+        let server = CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(2))).unwrap();
+        let addr = server.addr.to_string();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = CloudClient::connect(&addr).unwrap();
+                    let mut obs = [0f32; D_VIS];
+                    obs[0] = 0.1 * i as f32;
+                    for _ in 0..5 {
+                        let out = c.infer(&obs, &[0.0; D_PROP], i).unwrap();
+                        assert_eq!(out.actions.len(), crate::CHUNK);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stats().requests.load(std::sync::atomic::Ordering::Relaxed), 20);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,106 @@
+//! Analytic link model: transfer time = serialization + bandwidth +
+//! propagation, with jitter and clarity-dependent retransmissions
+//! (degraded vision ⇒ bigger/re-sent frames — the communication-overhead
+//! surge the paper's Table I attributes to noisy scenes).
+
+use crate::config::LinkConfig;
+use crate::util::Pcg32;
+
+/// Result of one modeled transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct Transfer {
+    pub ms: f64,
+    pub retransmissions: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Link {
+    cfg: LinkConfig,
+    rng: Pcg32,
+    /// Totals for accounting.
+    pub total_bytes: f64,
+    pub total_retrans: u64,
+}
+
+impl Link {
+    pub fn new(cfg: &LinkConfig, seed: u64) -> Self {
+        Link { cfg: cfg.clone(), rng: Pcg32::new(seed, 0x11_4E), total_bytes: 0.0, total_retrans: 0 }
+    }
+
+    pub fn config(&self) -> &LinkConfig {
+        &self.cfg
+    }
+
+    /// One-way transfer of `bytes` under scene clarity in (0, 1].
+    pub fn transfer(&mut self, bytes: f64, clarity: f64) -> Transfer {
+        let base = bytes * 8.0 / (self.cfg.bw_mbps * 1e6) * 1e3 + self.cfg.rtt_ms / 2.0;
+        let mut ms = base * (1.0 + self.cfg.jitter * self.rng.normal()).max(0.2);
+        // degraded frames are re-sent: each retransmission repeats the
+        // payload time (geometric, clarity-gated)
+        let p = (self.cfg.noise_retrans * (1.0 - clarity.clamp(0.0, 1.0))).clamp(0.0, 0.9);
+        let mut retrans = 0u32;
+        while retrans < 8 && self.rng.chance(p) {
+            ms += base;
+            retrans += 1;
+        }
+        self.total_bytes += bytes * (1.0 + retrans as f64);
+        self.total_retrans += retrans as u64;
+        Transfer { ms, retransmissions: retrans }
+    }
+
+    /// Full offload round trip: observation up, chunk down.
+    pub fn offload_roundtrip(&mut self, obs_bytes: f64, chunk_bytes: f64, clarity: f64) -> Transfer {
+        let up = self.transfer(obs_bytes, clarity);
+        let down = self.transfer(chunk_bytes, 1.0); // the reply is tiny/clean
+        Transfer { ms: up.ms + down.ms, retransmissions: up.retransmissions + down.retransmissions }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link(seed: u64) -> Link {
+        Link::new(&LinkConfig::default(), seed)
+    }
+
+    #[test]
+    fn clean_transfer_near_nominal() {
+        let mut l = link(1);
+        let bytes = 1.5e6;
+        let nominal = bytes * 8.0 / (1000.0 * 1e6) * 1e3 + 4.0;
+        let mean: f64 = (0..300).map(|_| l.transfer(bytes, 1.0).ms).sum::<f64>() / 300.0;
+        assert!((mean - nominal).abs() < nominal * 0.15, "mean {mean} nominal {nominal}");
+    }
+
+    #[test]
+    fn clean_scene_no_retransmissions() {
+        let mut l = link(2);
+        for _ in 0..200 {
+            assert_eq!(l.transfer(1e6, 1.0).retransmissions, 0);
+        }
+    }
+
+    #[test]
+    fn occlusion_causes_retransmissions() {
+        let mut l = link(3);
+        let total: u32 = (0..300).map(|_| l.transfer(1e6, 0.2).retransmissions).sum();
+        assert!(total > 20, "retrans {total}");
+    }
+
+    #[test]
+    fn bigger_payloads_take_longer() {
+        let mut l = link(4);
+        let small: f64 = (0..100).map(|_| l.transfer(1e5, 1.0).ms).sum::<f64>();
+        let big: f64 = (0..100).map(|_| l.transfer(6e6, 1.0).ms).sum::<f64>();
+        assert!(big > small * 2.0);
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut l = link(5);
+        l.transfer(1e6, 0.1);
+        l.transfer(1e6, 0.1);
+        assert!(l.total_bytes >= 2e6);
+    }
+}

@@ -1,0 +1,12 @@
+//! Edge↔cloud networking: an analytic link model for the virtual clock and
+//! a *real* TCP RPC path (length-prefixed binary protocol, thread-pool
+//! server) used by the end-to-end `serve_cluster` example.
+
+pub mod client;
+pub mod link;
+pub mod proto;
+pub mod server;
+
+pub use client::CloudClient;
+pub use link::{Link, Transfer};
+pub use server::CloudServer;

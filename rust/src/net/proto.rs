@@ -1,0 +1,206 @@
+//! Wire protocol for the real TCP edge↔cloud path.
+//!
+//! Length-prefixed binary frames (little-endian):
+//!
+//! ```text
+//! request : [u32 len][u8 tag=1][u32 instr][f32 obs[64]][f32 proprio[21]]
+//! response: [u32 len][u8 tag=2][f32 actions[8*7]][f32 logits[8*64]][f32 mass[8]]
+//! ping    : [u32 len][u8 tag=3]            -> pong [u32 len][u8 tag=4]
+//! shutdown: [u32 len][u8 tag=5]
+//! ```
+
+use crate::vla::ModelOut;
+use crate::{CHUNK, D_PROP, D_VIS, N_JOINTS, VOCAB};
+use std::io::{Read, Write};
+
+pub const TAG_INFER: u8 = 1;
+pub const TAG_RESULT: u8 = 2;
+pub const TAG_PING: u8 = 3;
+pub const TAG_PONG: u8 = 4;
+pub const TAG_SHUTDOWN: u8 = 5;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ProtoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed frame: {0}")]
+    Malformed(String),
+}
+
+/// An inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    pub instr: u32,
+    pub obs: [f32; D_VIS],
+    pub proprio: [f32; D_PROP],
+}
+
+/// Any decoded frame.
+#[derive(Debug)]
+pub enum Frame {
+    Infer(InferRequest),
+    Result(ModelOut),
+    Ping,
+    Pong,
+    Shutdown,
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(b: &[u8], n: usize) -> Result<(Vec<f32>, &[u8]), ProtoError> {
+    if b.len() < 4 * n {
+        return Err(ProtoError::Malformed(format!("need {} f32, have {} bytes", n, b.len())));
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(f32::from_le_bytes([b[4 * i], b[4 * i + 1], b[4 * i + 2], b[4 * i + 3]]));
+    }
+    Ok((out, &b[4 * n..]))
+}
+
+pub fn encode_infer(req: &InferRequest) -> Vec<u8> {
+    let mut body = vec![TAG_INFER];
+    body.extend_from_slice(&req.instr.to_le_bytes());
+    put_f32s(&mut body, &req.obs);
+    put_f32s(&mut body, &req.proprio);
+    frame(body)
+}
+
+pub fn encode_result(out: &ModelOut) -> Vec<u8> {
+    let mut body = vec![TAG_RESULT];
+    for a in &out.actions {
+        for j in 0..N_JOINTS {
+            body.extend_from_slice(&(a[j] as f32).to_le_bytes());
+        }
+    }
+    for row in &out.logits {
+        put_f32s(&mut body, row);
+    }
+    for m in &out.mass {
+        body.extend_from_slice(&(*m as f32).to_le_bytes());
+    }
+    frame(body)
+}
+
+pub fn encode_tag(tag: u8) -> Vec<u8> {
+    frame(vec![tag])
+}
+
+fn frame(body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Read one frame from a stream.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, ProtoError> {
+    let mut len_b = [0u8; 4];
+    r.read_exact(&mut len_b)?;
+    let len = u32::from_le_bytes(len_b) as usize;
+    if len == 0 || len > 16 * 1024 * 1024 {
+        return Err(ProtoError::Malformed(format!("bad frame length {len}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode(&body)
+}
+
+pub fn decode(body: &[u8]) -> Result<Frame, ProtoError> {
+    match body.first() {
+        Some(&TAG_INFER) => {
+            let b = &body[1..];
+            if b.len() < 4 {
+                return Err(ProtoError::Malformed("short infer".into()));
+            }
+            let instr = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            let (obs_v, rest) = get_f32s(&b[4..], D_VIS)?;
+            let (prop_v, rest) = get_f32s(rest, D_PROP)?;
+            if !rest.is_empty() {
+                return Err(ProtoError::Malformed("trailing bytes in infer".into()));
+            }
+            let mut obs = [0f32; D_VIS];
+            obs.copy_from_slice(&obs_v);
+            let mut proprio = [0f32; D_PROP];
+            proprio.copy_from_slice(&prop_v);
+            Ok(Frame::Infer(InferRequest { instr, obs, proprio }))
+        }
+        Some(&TAG_RESULT) => {
+            let b = &body[1..];
+            let (a, rest) = get_f32s(b, CHUNK * N_JOINTS)?;
+            let (l, rest) = get_f32s(rest, CHUNK * VOCAB)?;
+            let (m, rest) = get_f32s(rest, CHUNK)?;
+            if !rest.is_empty() {
+                return Err(ProtoError::Malformed("trailing bytes in result".into()));
+            }
+            Ok(Frame::Result(ModelOut::from_flat(&a, &l, &m)))
+        }
+        Some(&TAG_PING) => Ok(Frame::Ping),
+        Some(&TAG_PONG) => Ok(Frame::Pong),
+        Some(&TAG_SHUTDOWN) => Ok(Frame::Shutdown),
+        other => Err(ProtoError::Malformed(format!("unknown tag {other:?}"))),
+    }
+}
+
+pub fn write_all(w: &mut impl Write, bytes: &[u8]) -> Result<(), ProtoError> {
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_roundtrip() {
+        let req = InferRequest { instr: 3, obs: [0.5; D_VIS], proprio: [-0.25; D_PROP] };
+        let bytes = encode_infer(&req);
+        let mut cursor = std::io::Cursor::new(bytes);
+        match read_frame(&mut cursor).unwrap() {
+            Frame::Infer(got) => assert_eq!(got, req),
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn result_roundtrip() {
+        let a: Vec<f32> = (0..CHUNK * N_JOINTS).map(|i| i as f32 * 0.1).collect();
+        let l: Vec<f32> = (0..CHUNK * VOCAB).map(|i| (i % 13) as f32).collect();
+        let m: Vec<f32> = (0..CHUNK).map(|i| i as f32).collect();
+        let out = ModelOut::from_flat(&a, &l, &m);
+        let bytes = encode_result(&out);
+        let mut cursor = std::io::Cursor::new(bytes);
+        match read_frame(&mut cursor).unwrap() {
+            Frame::Result(got) => {
+                assert_eq!(got.mass, out.mass);
+                assert!((got.actions[2][3] - out.actions[2][3]).abs() < 1e-6);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ping_pong() {
+        let mut c = std::io::Cursor::new(encode_tag(TAG_PING));
+        assert!(matches!(read_frame(&mut c).unwrap(), Frame::Ping));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let mut c = std::io::Cursor::new(vec![5, 0, 0, 0, 99, 0, 0, 0, 0]);
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_length() {
+        let mut bytes = (64 * 1024 * 1024u32).to_le_bytes().to_vec();
+        bytes.push(1);
+        let mut c = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut c).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Real TCP cloud server: accepts edge connections, routes inference
+//! requests to a model worker thread, returns action chunks.
+//!
+//! Architecture (vLLM-router-like, scaled to this repo): connection
+//! handler threads parse frames and enqueue requests on an MPSC channel;
+//! a single model-owner thread (PJRT executables are not `Send`) drains
+//! the queue through the [`crate::serve::Batcher`] and answers via
+//! per-request reply channels. Python is never involved: the worker loads
+//! the AOT HLO artifact directly.
+
+use super::proto::{self, Frame, InferRequest};
+use crate::serve::batcher::Batcher;
+use crate::vla::{Backend, ModelOut};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+/// A queued request with its reply channel.
+pub struct Pending {
+    pub req: InferRequest,
+    pub reply: mpsc::Sender<ModelOut>,
+}
+
+/// Server statistics (shared, lock-free).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+pub struct CloudServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    listener_handle: Option<thread::JoinHandle<()>>,
+    worker_handle: Option<thread::JoinHandle<()>>,
+}
+
+impl CloudServer {
+    /// Start serving on `addr` (use "127.0.0.1:0" for an ephemeral port).
+    /// `make_backend` runs on the worker thread and constructs the model
+    /// (PJRT load + weight upload happens there, once).
+    pub fn start<F>(addr: &str, max_batch: usize, make_backend: F) -> std::io::Result<CloudServer>
+    where
+        F: FnOnce() -> Box<dyn Backend> + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let (tx, rx) = mpsc::channel::<Pending>();
+
+        // model worker: owns the backend, drains the queue in batches
+        let wstats = stats.clone();
+        let worker = thread::spawn(move || {
+            let mut backend = make_backend();
+            let mut batcher = Batcher::new(max_batch);
+            loop {
+                // block for the first request, then opportunistically drain
+                let first = match rx.recv() {
+                    Ok(p) => p,
+                    Err(_) => break, // all senders dropped -> shutdown
+                };
+                batcher.push(first);
+                while batcher.len() < batcher.max_batch() {
+                    match rx.try_recv() {
+                        Ok(p) => batcher.push(p),
+                        Err(_) => break,
+                    }
+                }
+                let batch = batcher.take();
+                wstats.batches.fetch_add(1, Ordering::Relaxed);
+                for p in batch {
+                    let out = backend.infer(&p.req.obs, &p.req.proprio, p.req.instr as usize);
+                    wstats.requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = p.reply.send(out);
+                }
+            }
+        });
+
+        // listener: one handler thread per connection
+        let lstop = stop.clone();
+        let lstats = stats.clone();
+        let listener_handle = thread::spawn(move || {
+            for conn in listener.incoming() {
+                if lstop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let tx = tx.clone();
+                        let hstats = lstats.clone();
+                        let hstop = lstop.clone();
+                        thread::spawn(move || handle_conn(stream, tx, hstats, hstop));
+                    }
+                    Err(_) => {
+                        lstats.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            drop(tx); // release the worker
+        });
+
+        Ok(CloudServer { addr: local, stop, stats, listener_handle: Some(listener_handle), worker_handle: Some(worker) })
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Stop the server and join its threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.listener_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.worker_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<ServerStats>, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    // Bounded read timeout so handler threads notice `stop` and release
+    // their queue sender (otherwise worker shutdown would deadlock on an
+    // idle connection).
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match proto::read_frame(&mut stream) {
+            Ok(Frame::Infer(req)) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(Pending { req, reply: rtx }).is_err() {
+                    break;
+                }
+                match rrx.recv() {
+                    Ok(out) => {
+                        if proto::write_all(&mut stream, &proto::encode_result(&out)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            Ok(Frame::Ping) => {
+                if proto::write_all(&mut stream, &proto::encode_tag(proto::TAG_PONG)).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                break;
+            }
+            Ok(_) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(proto::ProtoError::Io(e))
+                if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) =>
+            {
+                continue; // idle poll tick: recheck the stop flag
+            }
+            Err(_) => break, // peer closed or malformed
+        }
+    }
+}

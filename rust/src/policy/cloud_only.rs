@@ -1,0 +1,50 @@
+//! Cloud-Only baseline: the edge strictly handles sensor observation and
+//! action I/O; every chunk comes from the cloud.
+
+use super::{DecisionCtx, Route, Strategy};
+use crate::config::{PolicyKind, SystemConfig};
+
+#[derive(Debug, Default)]
+pub struct CloudOnly;
+
+impl CloudOnly {
+    pub fn new() -> Self {
+        CloudOnly
+    }
+}
+
+impl Strategy for CloudOnly {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::CloudOnly
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Route {
+        if ctx.queue_empty {
+            Route::CloudOffload
+        } else {
+            Route::Cached
+        }
+    }
+
+    fn edge_gb(&self, _sys: &SystemConfig) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refills_only_from_cloud() {
+        let mut s = CloudOnly::new();
+        assert_eq!(s.decide(&DecisionCtx { step: 0, queue_empty: true, entropy: None }), Route::CloudOffload);
+        assert_eq!(s.decide(&DecisionCtx { step: 1, queue_empty: false, entropy: None }), Route::Cached);
+    }
+
+    #[test]
+    fn zero_edge_load() {
+        let s = CloudOnly::new();
+        assert_eq!(s.edge_gb(&SystemConfig::default()), 0.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Edge-Only baseline: the full VLA runs on the edge device; the queue is
+//! refilled locally every time it drains. No cloud, no triggers.
+
+use super::{DecisionCtx, Route, Strategy};
+use crate::config::{PolicyKind, SystemConfig};
+
+#[derive(Debug, Default)]
+pub struct EdgeOnly;
+
+impl EdgeOnly {
+    pub fn new() -> Self {
+        EdgeOnly
+    }
+}
+
+impl Strategy for EdgeOnly {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::EdgeOnly
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Route {
+        if ctx.queue_empty {
+            Route::EdgeRefill
+        } else {
+            Route::Cached
+        }
+    }
+
+    fn edge_gb(&self, sys: &SystemConfig) -> f64 {
+        sys.total_model_gb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_offloads() {
+        let mut s = EdgeOnly::new();
+        for step in 0..100 {
+            let r = s.decide(&DecisionCtx { step, queue_empty: step % 8 == 0, entropy: None });
+            assert_ne!(r, Route::CloudOffload);
+        }
+    }
+
+    #[test]
+    fn refills_on_empty() {
+        let mut s = EdgeOnly::new();
+        assert_eq!(s.decide(&DecisionCtx { step: 0, queue_empty: true, entropy: None }), Route::EdgeRefill);
+        assert_eq!(s.decide(&DecisionCtx { step: 1, queue_empty: false, entropy: None }), Route::Cached);
+    }
+}

@@ -1,0 +1,127 @@
+//! Partitioning strategies: RAPID (+ ablations) and the paper's baselines.
+
+pub mod cloud_only;
+pub mod edge_only;
+pub mod rapid_policy;
+pub mod vision;
+
+pub use cloud_only::CloudOnly;
+pub use edge_only::EdgeOnly;
+pub use rapid_policy::RapidPolicy;
+pub use vision::VisionPolicy;
+
+use crate::config::{PolicyKind, SystemConfig};
+use crate::robot::SensorFrame;
+
+/// Where the next chunk (if any) comes from this control step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Keep executing the cached chunk.
+    Cached,
+    /// Refill the queue from the edge-resident model.
+    EdgeRefill,
+    /// Preempt and offload to the cloud model.
+    CloudOffload,
+}
+
+/// Context available at a control-step decision.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionCtx {
+    pub step: usize,
+    pub queue_empty: bool,
+    /// Entropy of the action about to execute (vision baseline signal);
+    /// None when the strategy does not request it.
+    pub entropy: Option<f64>,
+}
+
+/// A partitioning strategy: consumes the sensor stream, emits routes.
+pub trait Strategy {
+    fn kind(&self) -> PolicyKind;
+
+    /// High-rate sensor tick (no-op for baselines that ignore kinematics).
+    fn observe(&mut self, _frame: &SensorFrame) {}
+
+    /// Control-rate routing decision.
+    fn decide(&mut self, ctx: &DecisionCtx) -> Route;
+
+    /// Whether the driver must supply per-step entropy (vision baseline).
+    fn needs_entropy(&self) -> bool {
+        false
+    }
+
+    /// Parameter GB currently resident on the edge.
+    fn edge_gb(&self, sys: &SystemConfig) -> f64;
+
+    /// Notification hooks for accounting (split re-partitions etc.).
+    fn on_offload(&mut self, _step: usize) {}
+
+    /// Number of split-point changes (vision baseline repartition cost).
+    fn repartitions(&self) -> u64 {
+        0
+    }
+
+    /// Measured decision CPU time in ns (RAPID reports its dispatcher cost
+    /// — the 5–7% overhead claim is checked against this).
+    fn decision_ns(&self) -> u64 {
+        0
+    }
+}
+
+/// Factory: build the strategy for a [`PolicyKind`].
+pub fn build(kind: PolicyKind, sys: &SystemConfig) -> Box<dyn Strategy> {
+    match kind {
+        PolicyKind::EdgeOnly => Box::new(EdgeOnly::new()),
+        PolicyKind::CloudOnly => Box::new(CloudOnly::new()),
+        PolicyKind::VisionBased => Box::new(VisionPolicy::new(&sys.vision, sys.vision_edge_gb)),
+        PolicyKind::Rapid => Box::new(RapidPolicy::new(&sys.dispatcher, sys.robot.dt)),
+        PolicyKind::RapidNoComp => {
+            let mut d = sys.dispatcher.clone();
+            d.disable_comp = true;
+            Box::new(RapidPolicy::with_kind(&d, sys.robot.dt, PolicyKind::RapidNoComp))
+        }
+        PolicyKind::RapidNoRed => {
+            let mut d = sys.dispatcher.clone();
+            d.disable_red = true;
+            Box::new(RapidPolicy::with_kind(&d, sys.robot.dt, PolicyKind::RapidNoRed))
+        }
+        PolicyKind::RapidStaticFusion => {
+            let mut d = sys.dispatcher.clone();
+            d.static_fusion = true;
+            Box::new(RapidPolicy::with_kind(&d, sys.robot.dt, PolicyKind::RapidStaticFusion))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        let sys = SystemConfig::default();
+        for kind in [
+            PolicyKind::Rapid,
+            PolicyKind::RapidNoComp,
+            PolicyKind::RapidNoRed,
+            PolicyKind::RapidStaticFusion,
+            PolicyKind::EdgeOnly,
+            PolicyKind::CloudOnly,
+            PolicyKind::VisionBased,
+        ] {
+            let s = build(kind, &sys);
+            assert_eq!(s.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn load_conservation_across_strategies() {
+        let sys = SystemConfig::default();
+        for kind in [PolicyKind::Rapid, PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+            let s = build(kind, &sys);
+            let edge = s.edge_gb(&sys);
+            let cloud = sys.cloud_gb(edge);
+            assert!((edge + cloud - sys.total_model_gb).abs() < 1e-9, "{kind:?}");
+            assert!(edge >= 0.0 && edge <= sys.total_model_gb);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! RAPID strategy adapter: wraps [`RapidDispatcher`] behind the common
+//! [`Strategy`] interface (ablation variants share the same adapter with
+//! modified dispatcher flags).
+
+use super::{DecisionCtx, Route, Strategy};
+use crate::config::{DispatcherConfig, PolicyKind, SystemConfig};
+use crate::dispatcher::{Decision, RapidDispatcher, TriggerEval};
+use crate::robot::SensorFrame;
+
+pub struct RapidPolicy {
+    dispatcher: RapidDispatcher,
+    kind: PolicyKind,
+    /// Cumulative decision CPU time (ns) — the *measured* routing overhead
+    /// behind the paper's 5–7% claim.
+    pub decision_ns: u64,
+}
+
+impl RapidPolicy {
+    pub fn new(cfg: &DispatcherConfig, dt: f64) -> Self {
+        Self::with_kind(cfg, dt, PolicyKind::Rapid)
+    }
+
+    pub fn with_kind(cfg: &DispatcherConfig, dt: f64, kind: PolicyKind) -> Self {
+        RapidPolicy { dispatcher: RapidDispatcher::new(cfg, dt), kind, decision_ns: 0 }
+    }
+
+    pub fn last_eval(&self) -> Option<TriggerEval> {
+        self.dispatcher.last_eval()
+    }
+
+    pub fn dispatcher(&self) -> &RapidDispatcher {
+        &self.dispatcher
+    }
+}
+
+impl Strategy for RapidPolicy {
+    fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    fn observe(&mut self, frame: &SensorFrame) {
+        let t0 = std::time::Instant::now();
+        self.dispatcher.observe(frame);
+        self.decision_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Route {
+        let t0 = std::time::Instant::now();
+        let d = self.dispatcher.decide(ctx.queue_empty);
+        self.decision_ns += t0.elapsed().as_nanos() as u64;
+        match d {
+            Decision::ExecuteCached => Route::Cached,
+            Decision::RefillEdge => Route::EdgeRefill,
+            Decision::OffloadCloud => Route::CloudOffload,
+        }
+    }
+
+    fn edge_gb(&self, sys: &SystemConfig) -> f64 {
+        // Ablated variants compensate for weaker triggers with a larger
+        // edge slice (the paper's Table V load columns; see schema docs).
+        match self.kind {
+            PolicyKind::RapidNoComp => sys.edge_gb_no_comp,
+            PolicyKind::RapidNoRed => sys.edge_gb_no_red,
+            _ => sys.edge_model_gb,
+        }
+    }
+
+    fn decision_ns(&self) -> u64 {
+        self.decision_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::Jv;
+
+    fn frame(step: usize, dq: f64, tau: f64) -> SensorFrame {
+        SensorFrame { step, q: Jv::ZERO, dq: Jv::splat(dq), tau: Jv::splat(tau) }
+    }
+
+    #[test]
+    fn routes_follow_dispatcher() {
+        let sys = SystemConfig::default();
+        let mut p = RapidPolicy::new(&sys.dispatcher, sys.robot.dt);
+        // calm warm-up
+        for i in 0..60 {
+            p.observe(&frame(i, 0.2, 1.0));
+            assert_eq!(p.decide(&DecisionCtx { step: i, queue_empty: false, entropy: None }), Route::Cached);
+        }
+        // contact spike at rest -> offload
+        p.observe(&frame(60, 0.05, 9.0));
+        assert_eq!(
+            p.decide(&DecisionCtx { step: 60, queue_empty: false, entropy: None }),
+            Route::CloudOffload
+        );
+    }
+
+    #[test]
+    fn measures_decision_overhead() {
+        let sys = SystemConfig::default();
+        let mut p = RapidPolicy::new(&sys.dispatcher, sys.robot.dt);
+        for i in 0..100 {
+            p.observe(&frame(i, 0.2, 1.0));
+            p.decide(&DecisionCtx { step: i, queue_empty: false, entropy: None });
+        }
+        assert!(p.decision_ns > 0);
+        // O(1) arithmetic: must stay well under 50µs per tick on any host
+        assert!(p.decision_ns / 100 < 50_000, "per-tick {}ns", p.decision_ns / 100);
+    }
+
+    #[test]
+    fn ablation_kinds_report_themselves() {
+        let sys = SystemConfig::default();
+        let mut d = sys.dispatcher.clone();
+        d.disable_red = true;
+        let p = RapidPolicy::with_kind(&d, sys.robot.dt, PolicyKind::RapidNoRed);
+        assert_eq!(p.kind(), PolicyKind::RapidNoRed);
+    }
+}

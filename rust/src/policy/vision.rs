@@ -1,0 +1,155 @@
+//! Vision-based dynamic partitioning baseline (SAFE / ISAR / AVERY-style):
+//! offloads to the cloud when the Shannon entropy of the action
+//! distribution exceeds a threshold, and adapts its split point (the
+//! parameter fraction resident on the edge) to the running entropy level —
+//! higher sustained entropy pushes more of the model to the cloud
+//! (the behaviour Table I measures under increasing noise).
+
+use super::{DecisionCtx, Route, Strategy};
+use crate::config::{PolicyKind, SystemConfig, VisionPolicyConfig};
+
+pub struct VisionPolicy {
+    cfg: VisionPolicyConfig,
+    /// Baseline edge-resident GB in a clean scene.
+    base_edge_gb: f64,
+    /// EWMA of observed entropy.
+    ewma_h: f64,
+    initialized: bool,
+    /// Current split fraction of the clean-scene edge residency in (0, 1].
+    split_frac: f64,
+    repartitions: u64,
+}
+
+impl VisionPolicy {
+    pub fn new(cfg: &VisionPolicyConfig, base_edge_gb: f64) -> Self {
+        VisionPolicy {
+            cfg: cfg.clone(),
+            base_edge_gb,
+            ewma_h: 0.0,
+            initialized: false,
+            split_frac: 1.0,
+            repartitions: 0,
+        }
+    }
+
+    /// Update the adaptive split point from the running entropy. A change
+    /// of more than 5% of residency is a re-partition event (model layers
+    /// must be shipped — expensive, charged by the driver).
+    fn adapt_split(&mut self) {
+        // map entropy above threshold to a shrinking edge share
+        let over = (self.ewma_h - self.cfg.entropy_threshold).max(0.0);
+        let target = (1.0 - self.cfg.split_adapt * over).max(self.cfg.min_edge_frac / (self.base_edge_gb / 14.2));
+        let target = target.clamp(0.05, 1.0);
+        if (target - self.split_frac).abs() > 0.05 {
+            self.split_frac = target;
+            self.repartitions += 1;
+        }
+    }
+
+    pub fn ewma_entropy(&self) -> f64 {
+        self.ewma_h
+    }
+}
+
+impl Strategy for VisionPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::VisionBased
+    }
+
+    fn needs_entropy(&self) -> bool {
+        true
+    }
+
+    fn decide(&mut self, ctx: &DecisionCtx) -> Route {
+        if let Some(h) = ctx.entropy {
+            if self.initialized {
+                self.ewma_h = (1.0 - self.cfg.ewma) * self.ewma_h + self.cfg.ewma * h;
+            } else {
+                self.ewma_h = h;
+                self.initialized = true;
+            }
+            self.adapt_split();
+            // trigger on the smoothed signal: isolated single-step entropy
+            // blips don't preempt, sustained uncertainty does
+            if self.ewma_h > self.cfg.entropy_threshold {
+                return Route::CloudOffload;
+            }
+        }
+        if ctx.queue_empty {
+            Route::EdgeRefill
+        } else {
+            Route::Cached
+        }
+    }
+
+    fn edge_gb(&self, _sys: &SystemConfig) -> f64 {
+        self.base_edge_gb * self.split_frac
+    }
+
+    fn repartitions(&self) -> u64 {
+        self.repartitions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> VisionPolicy {
+        VisionPolicy::new(&VisionPolicyConfig::default(), 4.7)
+    }
+
+    fn ctx(entropy: f64, queue_empty: bool) -> DecisionCtx {
+        DecisionCtx { step: 0, queue_empty, entropy: Some(entropy) }
+    }
+
+    #[test]
+    fn low_entropy_stays_on_edge() {
+        let mut p = policy();
+        for _ in 0..50 {
+            assert_eq!(p.decide(&ctx(2.8, false)), Route::Cached);
+        }
+        let sys = SystemConfig::default();
+        assert!((p.edge_gb(&sys) - 4.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_entropy_offloads() {
+        let mut p = policy();
+        assert_eq!(p.decide(&ctx(4.0, false)), Route::CloudOffload);
+    }
+
+    #[test]
+    fn sustained_noise_shrinks_edge_residency() {
+        let mut p = policy();
+        let sys = SystemConfig::default();
+        let before = p.edge_gb(&sys);
+        for _ in 0..100 {
+            p.decide(&ctx(4.05, false));
+        }
+        let after = p.edge_gb(&sys);
+        assert!(after < before * 0.8, "edge residency {before} -> {after}");
+        assert!(p.repartitions() >= 1);
+        assert!(after >= 0.0);
+    }
+
+    #[test]
+    fn recovery_when_scene_clears() {
+        let mut p = policy();
+        let sys = SystemConfig::default();
+        for _ in 0..100 {
+            p.decide(&ctx(4.05, false));
+        }
+        let degraded = p.edge_gb(&sys);
+        for _ in 0..200 {
+            p.decide(&ctx(2.5, false));
+        }
+        assert!(p.edge_gb(&sys) > degraded);
+    }
+
+    #[test]
+    fn empty_queue_refills_when_calm() {
+        let mut p = policy();
+        assert_eq!(p.decide(&ctx(2.5, true)), Route::EdgeRefill);
+    }
+}

@@ -1,0 +1,106 @@
+//! Contact / external-torque model.
+//!
+//! During `Interact` segments the end effector experiences external torques:
+//! an impact transient at contact onset, sustained interaction force with
+//! high-frequency variation (sliding friction, micro-slips), concentrated on
+//! the wrist joints. This is the physical signal behind the paper's
+//! redundancy-aware trigger (Δτ spikes at low redundancy phases, Fig. 3).
+
+use super::trajectory::RefTrajectory;
+use super::types::Jv;
+use crate::util::Pcg32;
+use crate::N_JOINTS;
+
+/// Distribution of contact load over joints: wrist-dominated.
+const CONTACT_DIST: [f64; N_JOINTS] = [0.05, 0.08, 0.12, 0.25, 0.5, 0.85, 1.0];
+
+#[derive(Debug, Clone)]
+pub struct ContactModel {
+    rng: Pcg32,
+    /// Steps since contact onset (None = no contact).
+    onset: Option<usize>,
+    /// Base torque magnitude (N·m) at contact intensity 1.
+    pub magnitude: f64,
+}
+
+impl ContactModel {
+    pub fn new(seed: u64) -> Self {
+        ContactModel { rng: Pcg32::new(seed, 0xC0), onset: None, magnitude: 5.5 }
+    }
+
+    /// External torque at step t of the reference trajectory.
+    pub fn tau_ext(&mut self, traj: &RefTrajectory, t: usize) -> Jv {
+        let intensity = traj.contact_at(t);
+        if intensity <= 0.0 {
+            self.onset = None;
+            return Jv::ZERO;
+        }
+        let since = match self.onset {
+            Some(s0) => t.saturating_sub(s0),
+            None => {
+                self.onset = Some(t);
+                0
+            }
+        };
+        // Impact transient: sharp spike in the first contact steps decaying
+        // into the sustained level.
+        let impact = if since == 0 { 2.2 } else { 1.0 + 1.2 * (-(since as f64) / 1.5).exp() };
+        let sustained = self.magnitude * intensity;
+        let mut out = Jv::ZERO;
+        for j in 0..N_JOINTS {
+            // high-frequency variation: micro-slips and friction chatter
+            let chatter = self.rng.normal_ms(0.0, 0.35 * sustained * CONTACT_DIST[j]);
+            out[j] = sustained * CONTACT_DIST[j] * impact + chatter;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::tasks::TaskKind;
+
+    fn traj() -> RefTrajectory {
+        RefTrajectory::build(TaskKind::PickPlace, Jv::ZERO)
+    }
+
+    #[test]
+    fn zero_in_free_space() {
+        let tr = traj();
+        let mut cm = ContactModel::new(1);
+        // step 0 is deep in the approach phase
+        assert_eq!(cm.tau_ext(&tr, 0).norm(), 0.0);
+    }
+
+    #[test]
+    fn spike_at_contact_onset() {
+        let tr = traj();
+        let mut cm = ContactModel::new(2);
+        let first_crit = (0..tr.len()).find(|&i| tr.phase[i].is_critical()).unwrap();
+        let onset = cm.tau_ext(&tr, first_crit).norm();
+        let later = cm.tau_ext(&tr, first_crit + 3).norm();
+        assert!(onset > later, "impact {onset} vs sustained {later}");
+        assert!(onset > 0.0);
+    }
+
+    #[test]
+    fn wrist_dominated() {
+        let tr = traj();
+        let mut cm = ContactModel::new(3);
+        let first_crit = (0..tr.len()).find(|&i| tr.phase[i].is_critical()).unwrap();
+        let tau = cm.tau_ext(&tr, first_crit);
+        assert!(tau[6].abs() > tau[0].abs());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let tr = traj();
+        let mut a = ContactModel::new(9);
+        let mut b = ContactModel::new(9);
+        let first_crit = (0..tr.len()).find(|&i| tr.phase[i].is_critical()).unwrap();
+        for t in first_crit..first_crit + 4 {
+            assert_eq!(a.tau_ext(&tr, t).0, b.tau_ext(&tr, t).0);
+        }
+    }
+}

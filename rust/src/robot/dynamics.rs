@@ -1,0 +1,146 @@
+//! Simplified rigid-body manipulator dynamics (paper Eq. 3):
+//!
+//! τ = M(q)·q̈ + C(q,q̇)·q̇ + G(q) + τ_ext
+//!
+//! The structure (configuration-dependent inertia, velocity-product
+//! Coriolis terms, gravity loading decreasing toward distal joints) is what
+//! matters for RAPID — the torque signal must have a realistic composition
+//! so that isolating the interaction component via Δτ (paper §IV-B.1)
+//! is a meaningful operation.
+
+use super::types::Jv;
+use crate::config::RobotConfig;
+use crate::N_JOINTS;
+
+/// Manipulator dynamics parameterized by link masses / damping / gravity.
+#[derive(Debug, Clone)]
+pub struct Dynamics {
+    cfg: RobotConfig,
+    /// Effective link lengths (m).
+    link_len: [f64; N_JOINTS],
+}
+
+impl Dynamics {
+    pub fn new(cfg: &RobotConfig) -> Self {
+        Dynamics { cfg: cfg.clone(), link_len: [0.30, 0.28, 0.25, 0.22, 0.15, 0.10, 0.08] }
+    }
+
+    /// Diagonal of the mass/inertia matrix M(q): distal mass seen by joint
+    /// i, modulated by configuration (folded arm has lower inertia).
+    pub fn mass_diag(&self, q: &Jv) -> Jv {
+        Jv::from_fn(|i| {
+            // inertia of everything distal of joint i
+            let distal: f64 = (i..N_JOINTS)
+                .map(|j| self.cfg.link_mass[j] * self.link_len[j] * self.link_len[j])
+                .sum();
+            // configuration dependence: elbow-like modulation
+            let mod_cfg = 1.0 + 0.35 * (q[i.min(N_JOINTS - 2)]).cos().abs();
+            (0.02 + distal) * mod_cfg
+        })
+    }
+
+    /// M(q)·a including weak nearest-neighbour inertial coupling.
+    pub fn mass_mul(&self, q: &Jv, a: &Jv) -> Jv {
+        let diag = self.mass_diag(q);
+        Jv::from_fn(|i| {
+            let mut v = diag[i] * a[i];
+            if i > 0 {
+                v += 0.15 * diag[i] * a[i - 1];
+            }
+            if i + 1 < N_JOINTS {
+                v += 0.15 * diag[i + 1] * a[i + 1];
+            }
+            v
+        })
+    }
+
+    /// C(q, q̇)·q̇ — Coriolis/centrifugal velocity products + viscous
+    /// damping folded in (quadratic in joint speed, sign-following).
+    pub fn coriolis(&self, q: &Jv, dq: &Jv) -> Jv {
+        let diag = self.mass_diag(q);
+        Jv::from_fn(|i| {
+            let neighbor = if i + 1 < N_JOINTS { dq[i + 1] } else { 0.0 };
+            0.12 * diag[i] * dq[i] * dq[i].abs() + 0.05 * diag[i] * dq[i] * neighbor
+                + self.cfg.damping * dq[i]
+        })
+    }
+
+    /// Gravity torque G(q): joints support all distal links; shoulder-like
+    /// joints see the largest moments, wrist joints almost none.
+    pub fn gravity(&self, q: &Jv) -> Jv {
+        let g = self.cfg.gravity;
+        Jv::from_fn(|i| {
+            let moment: f64 = (i..N_JOINTS)
+                .map(|j| self.cfg.link_mass[j] * self.link_len[j] * 0.5)
+                .sum();
+            g * moment * q[i].cos() * if i % 2 == 0 { 1.0 } else { 0.4 }
+        })
+    }
+
+    /// Inverse dynamics: required torque for (q, q̇, q̈) plus external τ.
+    pub fn torque(&self, q: &Jv, dq: &Jv, ddq: &Jv, tau_ext: &Jv) -> Jv {
+        self.mass_mul(q, ddq) + self.coriolis(q, dq) + self.gravity(q) + *tau_ext
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dyn_default() -> Dynamics {
+        Dynamics::new(&RobotConfig::default())
+    }
+
+    #[test]
+    fn mass_diag_positive_and_decreasing_outward() {
+        let d = dyn_default();
+        let m = d.mass_diag(&Jv::ZERO);
+        for i in 0..N_JOINTS {
+            assert!(m[i] > 0.0);
+        }
+        // proximal joints see more distal inertia
+        assert!(m[0] > m[5]);
+    }
+
+    #[test]
+    fn gravity_loads_proximal_joints_most() {
+        let d = dyn_default();
+        let g = d.gravity(&Jv::ZERO);
+        assert!(g[0].abs() > g[6].abs());
+    }
+
+    #[test]
+    fn zero_motion_zero_coriolis() {
+        let d = dyn_default();
+        let c = d.coriolis(&Jv::splat(0.3), &Jv::ZERO);
+        assert!(c.norm() < 1e-12);
+    }
+
+    #[test]
+    fn torque_composition_additive_in_ext() {
+        let d = dyn_default();
+        let q = Jv::splat(0.2);
+        let dq = Jv::splat(0.1);
+        let ddq = Jv::splat(0.5);
+        let t0 = d.torque(&q, &dq, &ddq, &Jv::ZERO);
+        let ext = Jv::splat(2.0);
+        let t1 = d.torque(&q, &dq, &ddq, &ext);
+        assert!(((t1 - t0) - ext).norm() < 1e-12);
+    }
+
+    #[test]
+    fn acceleration_raises_torque() {
+        let d = dyn_default();
+        let q = Jv::splat(0.1);
+        let t_slow = d.torque(&q, &Jv::ZERO, &Jv::splat(0.1), &Jv::ZERO);
+        let t_fast = d.torque(&q, &Jv::ZERO, &Jv::splat(2.0), &Jv::ZERO);
+        assert!((t_fast - d.gravity(&q)).norm() > (t_slow - d.gravity(&q)).norm());
+    }
+
+    #[test]
+    fn torque_finite_for_extreme_state() {
+        let d = dyn_default();
+        let t = d.torque(&Jv::splat(3.1), &Jv::splat(10.0), &Jv::splat(50.0), &Jv::splat(5.0));
+        assert!(t.is_finite());
+    }
+}

@@ -1,0 +1,20 @@
+//! Rigid-body N-DOF manipulator simulation substrate.
+//!
+//! The paper evaluates RAPID on a physical 7-DOF arm and the LIBERO
+//! benchmark; this module is the substitute substrate (DESIGN.md §3): a
+//! manipulator with simplified rigid-body dynamics
+//! `τ = M(q)q̈ + C(q,q̇)q̇ + G(q) + τ_ext` (paper Eq. 3), phase-structured
+//! task trajectories (approach → interact → retract) and a contact model
+//! producing the torque transients the redundancy-aware trigger keys on.
+
+pub mod contact;
+pub mod dynamics;
+pub mod sim;
+pub mod tasks;
+pub mod trajectory;
+pub mod types;
+
+pub use sim::{RobotSim, SensorFrame};
+pub use tasks::{Phase, TaskKind};
+pub use trajectory::RefTrajectory;
+pub use types::Jv;

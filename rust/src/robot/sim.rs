@@ -1,0 +1,211 @@
+//! The manipulator simulator: integrates commanded actions, runs the
+//! rigid-body dynamics, and emits proprioceptive sensor frames — the
+//! environment-agnostic signal stream RAPID partitions on.
+
+use super::contact::ContactModel;
+use super::dynamics::Dynamics;
+use super::tasks::TaskKind;
+use super::trajectory::RefTrajectory;
+use super::types::Jv;
+use crate::config::RobotConfig;
+use crate::util::Pcg32;
+
+/// One proprioceptive sample (what the f_sensor loop reads).
+#[derive(Debug, Clone, Copy)]
+pub struct SensorFrame {
+    /// Control step index.
+    pub step: usize,
+    /// Joint positions (rad).
+    pub q: Jv,
+    /// Joint velocities (rad/s).
+    pub dq: Jv,
+    /// Joint torques (N·m) from the joint torque sensors.
+    pub tau: Jv,
+}
+
+/// Simulated N-DOF manipulator executing one task episode.
+#[derive(Debug, Clone)]
+pub struct RobotSim {
+    pub traj: RefTrajectory,
+    dynamics: Dynamics,
+    contact: ContactModel,
+    cfg: RobotConfig,
+    rng: Pcg32,
+    q: Jv,
+    dq: Jv,
+    step: usize,
+    /// Cumulative squared tracking error (success metric).
+    err_accum: f64,
+}
+
+impl RobotSim {
+    pub fn new(task: TaskKind, cfg: &RobotConfig, seed: u64) -> Self {
+        let start = Jv::ZERO;
+        RobotSim {
+            traj: RefTrajectory::build(task, start),
+            dynamics: Dynamics::new(cfg),
+            contact: ContactModel::new(seed ^ 0xC0_11_7A),
+            cfg: cfg.clone(),
+            rng: Pcg32::new(seed, 0x51_3),
+            q: start,
+            dq: Jv::ZERO,
+            step: 0,
+            err_accum: 0.0,
+        }
+    }
+
+    pub fn step_index(&self) -> usize {
+        self.step
+    }
+
+    pub fn done(&self) -> bool {
+        self.step >= self.traj.len()
+    }
+
+    pub fn q(&self) -> Jv {
+        self.q
+    }
+
+    /// Joint error to the *lookahead* reference target (what the renderer
+    /// puts in obs[0:7), before clarity attenuation). The policy plans an
+    /// action chunk ahead, so its visual target is ~half a chunk out; this
+    /// also gives the tracking loop the gain it needs at reference speed.
+    pub fn joint_error(&self) -> Jv {
+        self.traj.target(self.step + crate::CHUNK) - self.q
+    }
+
+    /// Execute one control step with a commanded action (normalized joint
+    /// velocity command in [-1, 1] per joint) and return the sensor frame.
+    pub fn apply(&mut self, action: Jv) -> SensorFrame {
+        let dt = self.cfg.dt;
+        // first-order actuator with slew-rate limiting: track the
+        // commanded velocity but never exceed max_accel
+        let v_cmd = action.clamp(-1.0, 1.0) * 2.0; // rad/s scale
+        let max_dv = self.cfg.max_accel * dt;
+        let dq_new = Jv::from_fn(|i| {
+            let dv = ((v_cmd[i] - self.dq[i]) * self.cfg.track_gain).clamp(-max_dv, max_dv);
+            self.dq[i] + dv
+        });
+        let ddq = (dq_new - self.dq) * (1.0 / dt);
+        self.dq = dq_new;
+        self.q += self.dq * dt;
+
+        let tau_ext = self.contact.tau_ext(&self.traj, self.step);
+        let tau = self.dynamics.torque(&self.q, &self.dq, &ddq, &tau_ext);
+        // torque sensor noise
+        let tau_meas = Jv::from_fn(|i| tau[i] + self.rng.normal_ms(0.0, self.cfg.sensor_noise));
+        let q_meas = Jv::from_fn(|i| self.q[i] + self.rng.normal_ms(0.0, self.cfg.sensor_noise * 0.2));
+        let dq_meas = Jv::from_fn(|i| self.dq[i] + self.rng.normal_ms(0.0, self.cfg.sensor_noise));
+
+        let err = self.joint_error().norm();
+        self.err_accum += err * err;
+
+        let frame = SensorFrame { step: self.step, q: q_meas, dq: dq_meas, tau: tau_meas };
+        self.step += 1;
+        frame
+    }
+
+    /// RMS tracking error over the episode so far (accuracy proxy).
+    pub fn rms_error(&self) -> f64 {
+        if self.step == 0 {
+            return 0.0;
+        }
+        (self.err_accum / self.step as f64).sqrt()
+    }
+
+    /// Episode "success": final configuration close to the last waypoint
+    /// and bounded RMS error (tracking-quality proxy for task success).
+    pub fn success(&self) -> bool {
+        let final_err = (self.traj.q_ref[self.traj.q_ref.len() - 1] - self.q).norm();
+        final_err < 0.3 && self.rms_error() < 0.6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::tasks::ALL_TASKS;
+
+    fn run_tracking(task: TaskKind, seed: u64) -> RobotSim {
+        let cfg = RobotConfig::default();
+        let mut sim = RobotSim::new(task, &cfg, seed);
+        while !sim.done() {
+            // ideal tracking controller: act on the joint error directly
+            let err = sim.joint_error();
+            let a = Jv::from_fn(|i| (err[i] * 2.5).clamp(-1.0, 1.0));
+            sim.apply(a);
+        }
+        sim
+    }
+
+    #[test]
+    fn ideal_controller_completes_all_tasks() {
+        for t in ALL_TASKS {
+            let sim = run_tracking(t, 4);
+            assert!(sim.success(), "{}: rms {}", t.name(), sim.rms_error());
+        }
+    }
+
+    #[test]
+    fn zero_action_fails_task() {
+        let cfg = RobotConfig::default();
+        let mut sim = RobotSim::new(TaskKind::PickPlace, &cfg, 5);
+        while !sim.done() {
+            sim.apply(Jv::ZERO);
+        }
+        assert!(!sim.success());
+    }
+
+    #[test]
+    fn torque_spikes_in_interact_phase() {
+        let sim_run = |seed| -> (f64, f64) {
+            let cfg = RobotConfig::default();
+            let mut sim = RobotSim::new(TaskKind::PickPlace, &cfg, seed);
+            let mut crit = Vec::new();
+            let mut red = Vec::new();
+            let mut prev_tau = Jv::ZERO;
+            while !sim.done() {
+                let step = sim.step_index();
+                let err = sim.joint_error();
+                let a = Jv::from_fn(|i| (err[i] * 2.5).clamp(-1.0, 1.0));
+                let f = sim.apply(a);
+                let dtau = (f.tau - prev_tau).norm();
+                prev_tau = f.tau;
+                if step > 0 {
+                    if sim.traj.phase_at(step).is_critical() {
+                        crit.push(dtau);
+                    } else {
+                        red.push(dtau);
+                    }
+                }
+            }
+            let m = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+            (m(&crit), m(&red))
+        };
+        let (crit, red) = sim_run(6);
+        assert!(crit > 2.0 * red, "Δτ critical {crit} vs redundant {red}");
+    }
+
+    #[test]
+    fn sensor_frames_finite_and_ordered() {
+        let cfg = RobotConfig::default();
+        let mut sim = RobotSim::new(TaskKind::DrawerOpen, &cfg, 7);
+        let mut last = None;
+        while !sim.done() {
+            let f = sim.apply(Jv::splat(0.1));
+            assert!(f.q.is_finite() && f.dq.is_finite() && f.tau.is_finite());
+            if let Some(l) = last {
+                assert_eq!(f.step, l + 1);
+            }
+            last = Some(f.step);
+        }
+    }
+
+    #[test]
+    fn deterministic_episodes() {
+        let a = run_tracking(TaskKind::PegInsert, 11);
+        let b = run_tracking(TaskKind::PegInsert, 11);
+        assert_eq!(a.q().0, b.q().0);
+        assert_eq!(a.rms_error(), b.rms_error());
+    }
+}

@@ -1,0 +1,167 @@
+//! Task library: the paper's three representative manipulation tasks
+//! (§VI-A.2) with the sequence lengths of Table II.
+//!
+//! Each task is a sequence of waypoint segments annotated with a motion
+//! phase. Phases drive (a) the contact model (torque transients only during
+//! `Interact`), (b) the renderer's saliency channels, and (c) the ground
+//! truth used to score trigger precision.
+
+use super::types::Jv;
+use crate::N_JOINTS;
+
+/// Motion phase of a trajectory segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Free-space transit toward the interaction site (high redundancy).
+    Approach,
+    /// Critical physical interaction: grasp / pull / insert (low redundancy).
+    Interact,
+    /// Post-interaction transit (high redundancy).
+    Retract,
+}
+
+impl Phase {
+    pub fn is_critical(&self) -> bool {
+        matches!(self, Phase::Interact)
+    }
+}
+
+/// One waypoint segment: move to `target` over `steps` control steps.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub target: Jv,
+    pub steps: usize,
+    pub phase: Phase,
+    /// Contact intensity while in this segment (0 in free space).
+    pub contact: f64,
+}
+
+/// The three paper tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    PickPlace,
+    DrawerOpen,
+    PegInsert,
+}
+
+pub const ALL_TASKS: [TaskKind; 3] = [TaskKind::PickPlace, TaskKind::DrawerOpen, TaskKind::PegInsert];
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::PickPlace => "Pick & Place",
+            TaskKind::DrawerOpen => "Drawer Opening",
+            TaskKind::PegInsert => "Peg Insertion",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "pick" | "pickplace" | "pick_place" => Some(TaskKind::PickPlace),
+            "drawer" | "drawer_open" => Some(TaskKind::DrawerOpen),
+            "peg" | "peg_insert" => Some(TaskKind::PegInsert),
+            _ => None,
+        }
+    }
+
+    /// Instruction-embedding index fed to the VLA model.
+    pub fn instr_id(&self) -> usize {
+        match self {
+            TaskKind::PickPlace => 1,
+            TaskKind::DrawerOpen => 2,
+            TaskKind::PegInsert => 3,
+        }
+    }
+
+    /// Episode length L in control steps (Table II).
+    pub fn seq_len(&self) -> usize {
+        self.segments().iter().map(|s| s.steps).sum()
+    }
+
+    /// Waypoint plan. Targets are joint configurations (radians); the
+    /// segment structure produces Table II's critical-action ratios
+    /// (~13–19% of steps in `Interact` phases).
+    pub fn segments(&self) -> Vec<Segment> {
+        // Amplitudes scaled so the reference stays within the actuator
+        // authority of an open-loop-chunked policy (tabletop-scale motions).
+        let j = |v: [f64; N_JOINTS]| Jv(v) * 0.6;
+        match self {
+            // L = 50: approach 20, grasp 5, transfer 14, place 4, retract 7
+            TaskKind::PickPlace => vec![
+                Segment { target: j([0.8, 0.5, -0.4, 0.9, 0.2, 0.6, 0.3]), steps: 20, phase: Phase::Approach, contact: 0.0 },
+                Segment { target: j([0.85, 0.55, -0.42, 0.95, 0.25, 0.7, 0.45]), steps: 5, phase: Phase::Interact, contact: 1.0 },
+                Segment { target: j([-0.3, 0.3, 0.2, 0.5, -0.2, 0.4, 0.45]), steps: 14, phase: Phase::Approach, contact: 0.15 },
+                Segment { target: j([-0.35, 0.25, 0.25, 0.45, -0.25, 0.35, 0.1]), steps: 4, phase: Phase::Interact, contact: 0.9 },
+                Segment { target: j([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0]), steps: 7, phase: Phase::Retract, contact: 0.0 },
+            ],
+            // L = 80: long approach 30, handle grasp 5, pull 6, release 20 + 19
+            TaskKind::DrawerOpen => vec![
+                Segment { target: j([0.6, 0.7, -0.5, 1.1, 0.1, 0.8, 0.2]), steps: 30, phase: Phase::Approach, contact: 0.0 },
+                Segment { target: j([0.62, 0.75, -0.52, 1.15, 0.12, 0.85, 0.4]), steps: 5, phase: Phase::Interact, contact: 1.0 },
+                Segment { target: j([0.45, 0.6, -0.45, 0.95, 0.1, 0.7, 0.4]), steps: 6, phase: Phase::Interact, contact: 0.8 },
+                Segment { target: j([0.2, 0.3, -0.2, 0.6, 0.0, 0.4, 0.1]), steps: 20, phase: Phase::Retract, contact: 0.0 },
+                Segment { target: j([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0]), steps: 19, phase: Phase::Retract, contact: 0.0 },
+            ],
+            // L = 60: approach 22, align 6, insert 5, seat 2, retract 25
+            TaskKind::PegInsert => vec![
+                Segment { target: j([0.5, 0.4, -0.3, 0.8, 0.3, 0.5, 0.25]), steps: 22, phase: Phase::Approach, contact: 0.0 },
+                Segment { target: j([0.52, 0.45, -0.32, 0.85, 0.32, 0.55, 0.3]), steps: 6, phase: Phase::Interact, contact: 0.6 },
+                Segment { target: j([0.52, 0.5, -0.33, 0.9, 0.33, 0.6, 0.3]), steps: 5, phase: Phase::Interact, contact: 1.0 },
+                Segment { target: j([0.52, 0.52, -0.33, 0.92, 0.33, 0.62, 0.3]), steps: 2, phase: Phase::Interact, contact: 1.2 },
+                Segment { target: j([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0]), steps: 25, phase: Phase::Retract, contact: 0.0 },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_lengths_match_table_ii() {
+        assert_eq!(TaskKind::PickPlace.seq_len(), 50);
+        assert_eq!(TaskKind::DrawerOpen.seq_len(), 80);
+        assert_eq!(TaskKind::PegInsert.seq_len(), 60);
+    }
+
+    #[test]
+    fn critical_ratio_in_paper_band() {
+        // Table II: critical actions are 13.6% – 18.8% of steps.
+        for t in ALL_TASKS {
+            let total = t.seq_len() as f64;
+            let crit: usize = t
+                .segments()
+                .iter()
+                .filter(|s| s.phase.is_critical())
+                .map(|s| s.steps)
+                .sum();
+            let ratio = crit as f64 / total;
+            assert!((0.10..=0.22).contains(&ratio), "{}: {ratio}", t.name());
+        }
+    }
+
+    #[test]
+    fn contact_only_in_interact_phases_mostly() {
+        for t in ALL_TASKS {
+            for s in t.segments() {
+                if s.phase == Phase::Interact {
+                    assert!(s.contact > 0.0);
+                }
+                if s.contact >= 0.5 {
+                    assert!(s.phase.is_critical());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn instr_ids_distinct() {
+        let ids: Vec<usize> = ALL_TASKS.iter().map(|t| t.instr_id()).collect();
+        assert_eq!(ids.len(), 3);
+        assert!(ids.iter().all(|&i| i < crate::N_INSTR));
+        let mut d = ids.clone();
+        d.dedup();
+        assert_eq!(d.len(), 3);
+    }
+}

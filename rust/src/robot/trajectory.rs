@@ -1,0 +1,191 @@
+//! Reference trajectory generation: min-jerk interpolation through the task
+//! waypoints, plus the ground-truth phase / contact / saliency schedules the
+//! renderer and contact model consume.
+
+use super::tasks::{Phase, Segment, TaskKind};
+use super::types::Jv;
+
+/// Precomputed reference for one episode.
+#[derive(Debug, Clone)]
+pub struct RefTrajectory {
+    /// Reference joint positions per control step (len = L + 1).
+    pub q_ref: Vec<Jv>,
+    /// Phase per step (len = L).
+    pub phase: Vec<Phase>,
+    /// Contact intensity per step (len = L).
+    pub contact: Vec<f64>,
+    /// Interaction saliency per step in [0, 1] — geometric
+    /// proximity-to-contact profile (len = L).
+    pub saliency: Vec<f64>,
+    pub task: TaskKind,
+}
+
+/// Min-jerk scalar profile s(u) with s(0)=0, s(1)=1, zero vel/acc at ends.
+pub fn min_jerk(u: f64) -> f64 {
+    let u = u.clamp(0.0, 1.0);
+    u * u * u * (10.0 - 15.0 * u + 6.0 * u * u)
+}
+
+impl RefTrajectory {
+    pub fn build(task: TaskKind, start: Jv) -> RefTrajectory {
+        let segments = task.segments();
+        let total: usize = segments.iter().map(|s| s.steps).sum();
+        let mut q_ref = Vec::with_capacity(total + 1);
+        let mut phase = Vec::with_capacity(total);
+        let mut contact = Vec::with_capacity(total);
+        q_ref.push(start);
+        let mut from = start;
+        for seg in &segments {
+            for s in 1..=seg.steps {
+                let u = min_jerk(s as f64 / seg.steps as f64);
+                q_ref.push(from + (seg.target - from) * u);
+                phase.push(seg.phase);
+                contact.push(seg.contact);
+            }
+            from = seg.target;
+        }
+        let saliency = Self::saliency_profile(&segments);
+        RefTrajectory { q_ref, phase, contact, saliency, task }
+    }
+
+    /// Saliency ramps up approaching an `Interact` segment (the policy
+    /// anticipates contact from the scene geometry), saturates during the
+    /// interaction, and decays afterwards.
+    fn saliency_profile(segments: &[Segment]) -> Vec<f64> {
+        let total: usize = segments.iter().map(|s| s.steps).sum();
+        // per-step base: contact intensity of the segment (clamped to 1)
+        let mut base = Vec::with_capacity(total);
+        for seg in segments {
+            for _ in 0..seg.steps {
+                base.push(if seg.phase.is_critical() { seg.contact.clamp(0.6, 1.0) } else { 0.0f64 });
+            }
+        }
+        // anticipation ramp: look ahead up to `ramp` steps (kept short so
+        // the redundancy statistics match Table II's ~80/20 split)
+        let ramp = 3usize;
+        let mut sal = vec![0.0f64; total];
+        for t in 0..total {
+            let mut v: f64 = base[t];
+            for d in 1..=ramp {
+                if t + d < total && base[t + d] > 0.0 {
+                    v = v.max(base[t + d] * (1.0 - d as f64 / (ramp + 1) as f64));
+                }
+            }
+            // residual decay after contact
+            if v == 0.0 && t > 0 {
+                v = (sal[t - 1] - 0.4).max(0.04);
+            }
+            sal[t] = v.clamp(0.0, 1.0).max(0.04);
+        }
+        sal
+    }
+
+    pub fn len(&self) -> usize {
+        self.phase.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phase.is_empty()
+    }
+
+    /// Reference target at step t (clamped to the end).
+    pub fn target(&self, t: usize) -> Jv {
+        self.q_ref[(t + 1).min(self.q_ref.len() - 1)]
+    }
+
+    /// Saliency at step t (clamped).
+    pub fn saliency_at(&self, t: usize) -> f64 {
+        self.saliency[t.min(self.saliency.len() - 1)]
+    }
+
+    /// Saliency horizon for the next `k` steps starting at t (obs channel
+    /// [7:15) — what the model's attention-mass head is routed from).
+    pub fn saliency_horizon(&self, t: usize, k: usize) -> Vec<f64> {
+        (0..k).map(|i| self.saliency_at(t + i)).collect()
+    }
+
+    pub fn phase_at(&self, t: usize) -> Phase {
+        self.phase[t.min(self.phase.len() - 1)]
+    }
+
+    pub fn contact_at(&self, t: usize) -> f64 {
+        self.contact[t.min(self.contact.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::tasks::ALL_TASKS;
+
+    #[test]
+    fn min_jerk_boundary() {
+        assert_eq!(min_jerk(0.0), 0.0);
+        assert!((min_jerk(1.0) - 1.0).abs() < 1e-12);
+        assert!(min_jerk(0.5) > 0.4 && min_jerk(0.5) < 0.6);
+        // monotone
+        let mut prev = 0.0;
+        for i in 1..=100 {
+            let v = min_jerk(i as f64 / 100.0);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn trajectory_lengths_consistent() {
+        for t in ALL_TASKS {
+            let tr = RefTrajectory::build(t, Jv::ZERO);
+            assert_eq!(tr.len(), t.seq_len());
+            assert_eq!(tr.q_ref.len(), t.seq_len() + 1);
+            assert_eq!(tr.saliency.len(), t.seq_len());
+        }
+    }
+
+    #[test]
+    fn trajectory_reaches_waypoints() {
+        let t = TaskKind::PickPlace;
+        let tr = RefTrajectory::build(t, Jv::ZERO);
+        let segs = t.segments();
+        let mut idx = 0;
+        for seg in &segs {
+            idx += seg.steps;
+            assert!((tr.q_ref[idx] - seg.target).norm() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn saliency_peaks_in_critical_phases() {
+        for t in ALL_TASKS {
+            let tr = RefTrajectory::build(t, Jv::ZERO);
+            let crit_mean: f64 = {
+                let xs: Vec<f64> = (0..tr.len()).filter(|&i| tr.phase[i].is_critical()).map(|i| tr.saliency[i]).collect();
+                xs.iter().sum::<f64>() / xs.len() as f64
+            };
+            let red_mean: f64 = {
+                let xs: Vec<f64> = (0..tr.len()).filter(|&i| !tr.phase[i].is_critical()).map(|i| tr.saliency[i]).collect();
+                xs.iter().sum::<f64>() / xs.len() as f64
+            };
+            assert!(crit_mean > 2.0 * red_mean, "{}: crit {crit_mean} red {red_mean}", t.name());
+        }
+    }
+
+    #[test]
+    fn saliency_anticipates_contact() {
+        let t = TaskKind::PickPlace;
+        let tr = RefTrajectory::build(t, Jv::ZERO);
+        // the step just before the first Interact segment should already
+        // have elevated saliency
+        let first_crit = (0..tr.len()).find(|&i| tr.phase[i].is_critical()).unwrap();
+        assert!(tr.saliency[first_crit - 1] > 0.3);
+        assert!(tr.saliency[first_crit.saturating_sub(12)] < 0.3);
+    }
+
+    #[test]
+    fn horizon_clamps_at_end() {
+        let tr = RefTrajectory::build(TaskKind::PegInsert, Jv::ZERO);
+        let h = tr.saliency_horizon(tr.len() - 2, 8);
+        assert_eq!(h.len(), 8);
+        assert!(h.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,157 @@
+//! Joint-space vector type for the N-DOF manipulator.
+
+use crate::N_JOINTS;
+use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Sub};
+
+/// A joint-space vector (positions, velocities, torques, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Jv(pub [f64; N_JOINTS]);
+
+impl Jv {
+    pub const ZERO: Jv = Jv([0.0; N_JOINTS]);
+
+    pub fn splat(v: f64) -> Jv {
+        Jv([v; N_JOINTS])
+    }
+
+    pub fn from_fn(mut f: impl FnMut(usize) -> f64) -> Jv {
+        let mut out = [0.0; N_JOINTS];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        Jv(out)
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.0.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn dot(&self, other: &Jv) -> f64 {
+        self.0.iter().zip(other.0.iter()).map(|(a, b)| a * b).sum()
+    }
+
+    /// Element-wise product (used for joint weighting W_a, W_τ).
+    pub fn hadamard(&self, other: &Jv) -> Jv {
+        Jv::from_fn(|i| self.0[i] * other.0[i])
+    }
+
+    /// Weighted L2 norm ‖W x‖₂ with diagonal weights (paper Eq. 4).
+    pub fn weighted_norm(&self, w: &[f64; N_JOINTS]) -> f64 {
+        self.0
+            .iter()
+            .zip(w.iter())
+            .map(|(x, wi)| {
+                let v = wi * x;
+                v * v
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn scale(&self, s: f64) -> Jv {
+        Jv::from_fn(|i| self.0[i] * s)
+    }
+
+    pub fn clamp(&self, lo: f64, hi: f64) -> Jv {
+        Jv::from_fn(|i| self.0[i].clamp(lo, hi))
+    }
+
+    pub fn abs_max(&self) -> f64 {
+        self.0.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.0.iter().all(|x| x.is_finite())
+    }
+
+    pub fn as_slice(&self) -> &[f64; N_JOINTS] {
+        &self.0
+    }
+}
+
+impl Add for Jv {
+    type Output = Jv;
+    fn add(self, rhs: Jv) -> Jv {
+        Jv::from_fn(|i| self.0[i] + rhs.0[i])
+    }
+}
+
+impl AddAssign for Jv {
+    fn add_assign(&mut self, rhs: Jv) {
+        for i in 0..N_JOINTS {
+            self.0[i] += rhs.0[i];
+        }
+    }
+}
+
+impl Sub for Jv {
+    type Output = Jv;
+    fn sub(self, rhs: Jv) -> Jv {
+        Jv::from_fn(|i| self.0[i] - rhs.0[i])
+    }
+}
+
+impl Mul<f64> for Jv {
+    type Output = Jv;
+    fn mul(self, s: f64) -> Jv {
+        self.scale(s)
+    }
+}
+
+impl Index<usize> for Jv {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        &self.0[i]
+    }
+}
+
+impl IndexMut<usize> for Jv {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.0[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Jv::splat(2.0);
+        let b = Jv::from_fn(|i| i as f64);
+        let c = a + b;
+        assert_eq!(c[3], 5.0);
+        let d = c - a;
+        assert_eq!(d[3], 3.0);
+        assert_eq!((a * 0.5)[0], 1.0);
+    }
+
+    #[test]
+    fn norms() {
+        let v = Jv([3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!((v.norm() - 5.0).abs() < 1e-12);
+        let w = [2.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        assert!((v.weighted_norm(&w) - (36.0f64 + 16.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_norm_end_joint_sensitivity() {
+        // The same disturbance on an end joint must score higher than on a
+        // base joint under the paper's W_a weighting.
+        let w = crate::config::DispatcherConfig::default().w_acc;
+        let mut base = Jv::ZERO;
+        base[0] = 1.0;
+        let mut end = Jv::ZERO;
+        end[6] = 1.0;
+        assert!(end.weighted_norm(&w) > base.weighted_norm(&w));
+    }
+
+    #[test]
+    fn clamp_and_absmax() {
+        let v = Jv([-3.0, 0.5, 9.0, 0.0, 0.0, 0.0, 0.0]);
+        let c = v.clamp(-1.0, 1.0);
+        assert_eq!(c[0], -1.0);
+        assert_eq!(c[2], 1.0);
+        assert_eq!(v.abs_max(), 9.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Artifact discovery: parse `artifacts/meta.json`, locate HLO text and
+//! weight blobs, and validate weight checksums/sizes.
+
+use crate::config::json::parse_json;
+use crate::config::Value;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("artifact dir not found: {0}")]
+    Missing(PathBuf),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("meta.json: {0}")]
+    Meta(String),
+    #[error("weights size mismatch for {variant}: file has {file_params} f32, meta says {meta_params}")]
+    WeightsSize { variant: String, file_params: usize, meta_params: usize },
+}
+
+/// Per-variant artifact description.
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub name: String,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub n_params: usize,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+}
+
+/// Parsed `meta.json` + resolved paths.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub chunk: usize,
+    pub n_joints: usize,
+    pub vocab: usize,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl ArtifactMeta {
+    /// Load and validate from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactMeta, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        if !meta_path.exists() {
+            return Err(ArtifactError::Missing(dir));
+        }
+        let text = std::fs::read_to_string(&meta_path)?;
+        let v = parse_json(&text).map_err(|e| ArtifactError::Meta(e.to_string()))?;
+
+        let dims = v.get("dims").ok_or_else(|| ArtifactError::Meta("missing dims".into()))?;
+        let variants_tbl = v
+            .get("variants")
+            .and_then(Value::as_table)
+            .ok_or_else(|| ArtifactError::Meta("missing variants".into()))?;
+
+        let mut variants = Vec::new();
+        for (name, vv) in variants_tbl {
+            let hlo = vv.str_or("hlo", "");
+            let weights = vv.str_or("weights", "");
+            let vm = VariantMeta {
+                name: name.clone(),
+                d: vv.usize_or("d", 0),
+                heads: vv.usize_or("heads", 0),
+                layers: vv.usize_or("layers", 0),
+                n_params: vv.usize_or("n_params", 0),
+                hlo_path: dir.join(hlo),
+                weights_path: dir.join(weights),
+            };
+            if !vm.hlo_path.exists() {
+                return Err(ArtifactError::Meta(format!("{name}: hlo file missing: {:?}", vm.hlo_path)));
+            }
+            let wsize = std::fs::metadata(&vm.weights_path)?.len() as usize;
+            if wsize != 4 * vm.n_params {
+                return Err(ArtifactError::WeightsSize {
+                    variant: name.clone(),
+                    file_params: wsize / 4,
+                    meta_params: vm.n_params,
+                });
+            }
+            variants.push(vm);
+        }
+        variants.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(ArtifactMeta {
+            dir,
+            seed: v.f64_or("seed", 0.0) as u64,
+            chunk: dims.usize_or("chunk", crate::CHUNK),
+            n_joints: dims.usize_or("n_joints", crate::N_JOINTS),
+            vocab: dims.usize_or("vocab", crate::VOCAB),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Default artifact directory: `$RAPID_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RAPID_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// Read a little-endian f32 weight blob.
+pub fn read_weights(path: impl AsRef<Path>) -> Result<Vec<f32>, ArtifactError> {
+    let bytes = std::fs::read(path)?;
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        ArtifactMeta::default_dir().join("meta.json").exists()
+    }
+
+    #[test]
+    fn loads_real_meta_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = ArtifactMeta::load(ArtifactMeta::default_dir()).unwrap();
+        assert_eq!(m.chunk, crate::CHUNK);
+        assert_eq!(m.n_joints, crate::N_JOINTS);
+        assert!(m.variant("edge").is_some());
+        assert!(m.variant("cloud").is_some());
+        let edge = m.variant("edge").unwrap();
+        let w = read_weights(&edge.weights_path).unwrap();
+        assert_eq!(w.len(), edge.n_params);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(matches!(ArtifactMeta::load("/nonexistent-dir-xyz"), Err(ArtifactError::Missing(_))));
+    }
+}

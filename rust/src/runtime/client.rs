@@ -1,0 +1,77 @@
+//! PJRT CPU client wrapper with a compile cache.
+//!
+//! The underlying `xla::PjRtClient` is created once per process (PJRT CPU
+//! clients are heavyweight); executables are cached by artifact path.
+
+use super::artifact::{ArtifactMeta, VariantMeta};
+use super::executor::PolicyExecutable;
+use std::collections::HashMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error(transparent)]
+    Artifact(#[from] super::artifact::ArtifactError),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self, RuntimeError> {
+        Ok(RuntimeClient { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn compile_hlo_text(&mut self, path: &std::path::Path) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.cache.insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Build a [`PolicyExecutable`] for one model variant: compiles the HLO
+    /// and uploads the weights to a device-resident buffer.
+    pub fn load_variant(&mut self, meta: &VariantMeta) -> Result<PolicyExecutable, RuntimeError> {
+        let exe = self.compile_hlo_text(&meta.hlo_path)?;
+        PolicyExecutable::new(self, exe, meta)
+    }
+
+    /// Convenience: load both standard variants from an artifact dir.
+    pub fn load_standard(
+        &mut self,
+        artifacts: &ArtifactMeta,
+    ) -> Result<(PolicyExecutable, PolicyExecutable), RuntimeError> {
+        let edge = artifacts
+            .variant("edge")
+            .ok_or_else(|| RuntimeError::Xla("no edge variant in meta.json".into()))?
+            .clone();
+        let cloud = artifacts
+            .variant("cloud")
+            .ok_or_else(|| RuntimeError::Xla("no cloud variant in meta.json".into()))?
+            .clone();
+        Ok((self.load_variant(&edge)?, self.load_variant(&cloud)?))
+    }
+}

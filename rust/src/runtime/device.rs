@@ -1,0 +1,110 @@
+//! Virtual device clock: converts events into *emulated testbed time*.
+//!
+//! The surrogate VLA is ~10⁻³ the size of OpenVLA, so raw wall clock on
+//! this machine is meaningless for the paper's tables. `DeviceClock`
+//! advances a virtual time using the calibrated service-time model of
+//! `DeviceConfig` (DESIGN.md §5) with deterministic jitter; the *measured*
+//! PJRT times are tracked separately by [`super::PolicyExecutable`].
+
+use crate::config::{DeviceConfig, SystemConfig};
+use crate::util::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct DeviceClock {
+    cfg: DeviceConfig,
+    rng: Pcg32,
+    /// Virtual time elapsed (ms).
+    pub now_ms: f64,
+}
+
+impl DeviceClock {
+    pub fn new(cfg: &DeviceConfig, seed: u64) -> Self {
+        DeviceClock { cfg: cfg.clone(), rng: Pcg32::new(seed, 0xDE_7), now_ms: 0.0 }
+    }
+
+    fn jittered(&mut self, base_ms: f64) -> f64 {
+        (base_ms * (1.0 + self.cfg.jitter * self.rng.normal())).max(0.0)
+    }
+
+    /// Edge inference with `gb` parameters resident (linear scaling
+    /// anchored at the Edge-Only full-model time).
+    pub fn edge_infer(&mut self, sys: &SystemConfig, gb: f64) -> f64 {
+        let t = self.jittered(sys.edge_infer_ms(gb));
+        self.now_ms += t;
+        t
+    }
+
+    /// Cloud-side compute for a full-model inference.
+    pub fn cloud_compute(&mut self) -> f64 {
+        let t = self.jittered(self.cfg.cloud_compute_ms);
+        self.now_ms += t;
+        t
+    }
+
+    /// Vision-based routing cost (preprocess + distribution extraction).
+    pub fn vision_route(&mut self) -> f64 {
+        let t = self.jittered(self.cfg.vision_route_ms);
+        self.now_ms += t;
+        t
+    }
+
+    pub fn preempt(&mut self) -> f64 {
+        let t = self.jittered(self.cfg.preempt_ms);
+        self.now_ms += t;
+        t
+    }
+
+    pub fn obs_capture(&mut self) -> f64 {
+        let t = self.jittered(self.cfg.obs_capture_ms);
+        self.now_ms += t;
+        t
+    }
+
+    /// Advance by an externally computed duration (e.g. link transfer).
+    pub fn advance(&mut self, ms: f64) {
+        self.now_ms += ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_infer_anchored() {
+        let sys = SystemConfig::default();
+        let mut c = DeviceClock::new(&sys.devices, 1);
+        let xs: Vec<f64> = (0..200).map(|_| c.edge_infer(&sys, sys.total_model_gb)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 782.5).abs() < 25.0, "mean {mean}");
+        assert!(c.now_ms > 0.0);
+    }
+
+    #[test]
+    fn small_slice_proportionally_cheaper() {
+        let sys = SystemConfig::default();
+        let mut c = DeviceClock::new(&sys.devices, 2);
+        let small: f64 = (0..100).map(|_| c.edge_infer(&sys, 2.4)).sum::<f64>() / 100.0;
+        assert!(small < 200.0 && small > 90.0, "small {small}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let sys = SystemConfig::default();
+        let mut a = DeviceClock::new(&sys.devices, 3);
+        let mut b = DeviceClock::new(&sys.devices, 3);
+        for _ in 0..10 {
+            assert_eq!(a.cloud_compute(), b.cloud_compute());
+        }
+    }
+
+    #[test]
+    fn times_nonnegative() {
+        let sys = SystemConfig::default();
+        let mut c = DeviceClock::new(&sys.devices, 4);
+        for _ in 0..1000 {
+            assert!(c.preempt() >= 0.0);
+            assert!(c.obs_capture() >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! `PolicyExecutable`: one compiled VLA variant + device-resident weights.
+//!
+//! Weights are uploaded ONCE per session as a `PjRtBuffer` and every
+//! inference goes through `execute_b` with buffer arguments — re-uploading
+//! the 2.3 M-parameter cloud weight blob per call would dominate the hot
+//! path (see EXPERIMENTS.md §Perf for the measured before/after).
+
+use super::artifact::{read_weights, VariantMeta};
+use super::client::{RuntimeClient, RuntimeError};
+use crate::vla::ModelOut;
+use crate::{CHUNK, D_PROP, D_VIS, N_INSTR, N_JOINTS, VOCAB};
+use std::rc::Rc;
+use std::time::Instant;
+
+pub struct PolicyExecutable {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    weights: xla::PjRtBuffer,
+    pub variant: String,
+    pub n_params: usize,
+    /// Cumulative measured execution time (µs) and call count — the real
+    /// wall-clock numbers recorded alongside the emulated testbed times.
+    pub total_us: u64,
+    pub calls: u64,
+}
+
+impl PolicyExecutable {
+    pub fn new(
+        client: &mut RuntimeClient,
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        meta: &VariantMeta,
+    ) -> Result<Self, RuntimeError> {
+        let host = read_weights(&meta.weights_path)?;
+        let weights = client.raw().buffer_from_host_buffer::<f32>(&host, &[host.len()], None)?;
+        Ok(PolicyExecutable {
+            exe,
+            weights,
+            variant: meta.name.clone(),
+            n_params: meta.n_params,
+            total_us: 0,
+            calls: 0,
+        })
+    }
+
+    /// Run one inference. `instr` is the instruction-embedding index.
+    pub fn infer(
+        &mut self,
+        obs: &[f32; D_VIS],
+        proprio: &[f32; D_PROP],
+        instr: usize,
+    ) -> Result<ModelOut, RuntimeError> {
+        let t0 = Instant::now();
+        let client = self.exe.client().clone();
+        let obs_b = client.buffer_from_host_buffer::<f32>(obs, &[D_VIS], None)?;
+        let prop_b = client.buffer_from_host_buffer::<f32>(proprio, &[D_PROP], None)?;
+        let mut ins = [0f32; N_INSTR];
+        ins[instr.min(N_INSTR - 1)] = 1.0;
+        let ins_b = client.buffer_from_host_buffer::<f32>(&ins, &[N_INSTR], None)?;
+
+        let result = self.exe.execute_b(&[&self.weights, &obs_b, &prop_b, &ins_b])?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (actions, logits, mass)
+        let (a_l, l_l, m_l) = lit.to_tuple3()?;
+        let actions = a_l.to_vec::<f32>()?;
+        let logits = l_l.to_vec::<f32>()?;
+        let mass = m_l.to_vec::<f32>()?;
+        debug_assert_eq!(actions.len(), CHUNK * N_JOINTS);
+        debug_assert_eq!(logits.len(), CHUNK * VOCAB);
+        debug_assert_eq!(mass.len(), CHUNK);
+
+        let us = t0.elapsed().as_micros() as u64;
+        self.total_us += us;
+        self.calls += 1;
+        Ok(ModelOut::from_flat(&actions, &logits, &mass))
+    }
+
+    /// Mean measured execution time per call (µs).
+    pub fn mean_us(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_us as f64 / self.calls as f64
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python is never on this path — the artifacts are self-contained.
+
+pub mod artifact;
+pub mod client;
+pub mod device;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, VariantMeta};
+pub use client::RuntimeClient;
+pub use device::DeviceClock;
+pub use executor::PolicyExecutable;

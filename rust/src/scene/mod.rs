@@ -1,0 +1,15 @@
+//! Synthetic scene: observation renderer + visual disturbance models.
+//!
+//! The renderer emits the 64-channel observation vector the VLA surrogate
+//! was constructed against (layout documented in `python/compile/model.py`
+//! and mirrored in `python/tests/obsgen.py`). Visual noise is modeled as
+//! *signal attenuation + clutter* — occlusion and contrast loss scale every
+//! channel down and replace texture with occluder texture — which provably
+//! flattens the surrogate's action logits (the vision baseline's failure
+//! mode in Tab. I / Fig. 2).
+
+pub mod noise;
+pub mod renderer;
+
+pub use noise::NoiseModel;
+pub use renderer::Renderer;

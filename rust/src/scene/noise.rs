@@ -1,0 +1,108 @@
+//! Visual disturbance models producing a per-step scene clarity in (0, 1].
+
+use crate::config::{NoiseLevel, SceneConfig};
+use crate::util::Pcg32;
+
+/// Stateful clarity process for one episode.
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    cfg: SceneConfig,
+    rng: Pcg32,
+    /// Remaining steps of an active distractor occlusion.
+    occlusion_left: usize,
+}
+
+impl NoiseModel {
+    pub fn new(cfg: &SceneConfig, seed: u64) -> Self {
+        NoiseModel { cfg: cfg.clone(), rng: Pcg32::new(seed, 0x5CE_E), occlusion_left: 0 }
+    }
+
+    /// Scene clarity at a control step. `interacting` marks steps where the
+    /// gripper itself partially occludes the target (a small, *physical*
+    /// clarity dip present even in clean scenes).
+    pub fn clarity(&mut self, interacting: bool) -> f64 {
+        let base = match self.cfg.noise {
+            NoiseLevel::Standard => 1.0,
+            NoiseLevel::VisualNoise => {
+                // flickering lighting/camera noise: clarity wanders around
+                // the configured floor
+                let c = self.cfg.visual_noise_clarity;
+                (c + 0.18 * self.rng.normal()).clamp(0.15, 0.9)
+            }
+            NoiseLevel::Distraction => {
+                if self.occlusion_left > 0 {
+                    self.occlusion_left -= 1;
+                    self.cfg.occlusion_clarity
+                } else if self.rng.chance(self.cfg.occlusion_rate) {
+                    self.occlusion_left = self.cfg.occlusion_len.saturating_sub(1);
+                    self.cfg.occlusion_clarity
+                } else {
+                    1.0
+                }
+            }
+        };
+        let gripper = if interacting { 0.88 } else { 1.0 };
+        (base * gripper).clamp(0.05, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(noise: NoiseLevel) -> SceneConfig {
+        SceneConfig { noise, ..SceneConfig::default() }
+    }
+
+    #[test]
+    fn standard_is_clean() {
+        let mut nm = NoiseModel::new(&cfg(NoiseLevel::Standard), 1);
+        for _ in 0..100 {
+            assert_eq!(nm.clarity(false), 1.0);
+        }
+    }
+
+    #[test]
+    fn standard_interaction_dips_slightly() {
+        let mut nm = NoiseModel::new(&cfg(NoiseLevel::Standard), 1);
+        let c = nm.clarity(true);
+        assert!(c < 1.0 && c > 0.8);
+    }
+
+    #[test]
+    fn visual_noise_degrades_mean_clarity() {
+        let mut nm = NoiseModel::new(&cfg(NoiseLevel::VisualNoise), 2);
+        let mean: f64 = (0..500).map(|_| nm.clarity(false)).sum::<f64>() / 500.0;
+        assert!(mean < 0.7, "mean clarity {mean}");
+        assert!(mean > 0.2);
+    }
+
+    #[test]
+    fn distraction_produces_occlusion_runs() {
+        let mut nm = NoiseModel::new(&cfg(NoiseLevel::Distraction), 3);
+        let cs: Vec<f64> = (0..400).map(|_| nm.clarity(false)).collect();
+        let occluded = cs.iter().filter(|&&c| c < 0.5).count();
+        assert!(occluded > 20, "occluded steps {occluded}");
+        // occlusions come in runs of the configured length
+        let mut run = 0;
+        let mut max_run = 0;
+        for &c in &cs {
+            if c < 0.5 {
+                run += 1;
+                max_run = max_run.max(run);
+            } else {
+                run = 0;
+            }
+        }
+        assert!(max_run >= 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = NoiseModel::new(&cfg(NoiseLevel::Distraction), 9);
+        let mut b = NoiseModel::new(&cfg(NoiseLevel::Distraction), 9);
+        for _ in 0..100 {
+            assert_eq!(a.clarity(false), b.clarity(false));
+        }
+    }
+}

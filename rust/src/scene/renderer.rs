@@ -1,0 +1,163 @@
+//! Observation renderer: simulator state -> 64-channel visual feature
+//! vector, matching the layout the surrogate weights were constructed
+//! against (python/compile/model.py):
+//!
+//! ```text
+//! [0:7)   normalized joint error to the current waypoint
+//! [7:15)  contact-saliency horizon over the next k steps
+//! [15]    global interaction saliency
+//! [16:64) texture channels (scene-hash pseudo-features, clarity-scaled)
+//! ```
+
+use super::noise::NoiseModel;
+use crate::robot::RobotSim;
+use crate::util::Pcg32;
+use crate::{CHUNK, D_VIS, N_JOINTS};
+
+#[derive(Debug, Clone)]
+pub struct Renderer {
+    noise: NoiseModel,
+    rng: Pcg32,
+    /// Persistent scene texture: the workspace's visual content is static
+    /// across an episode. Its *energy* is what a confident VLA sees —
+    /// occluders/flicker attenuate it (occluders are featureless blobs, so
+    /// the replacement clutter is low-energy).
+    scene_texture: [f32; D_VIS - 16],
+    /// Last rendered clarity (exposed for trace/debug).
+    pub last_clarity: f64,
+}
+
+/// Per-channel std of the persistent scene texture.
+pub const SCENE_TEXTURE_STD: f64 = 0.45;
+/// Per-channel std of occluder clutter (featureless => low energy).
+pub const CLUTTER_STD: f64 = 0.10;
+
+impl Renderer {
+    pub fn new(noise: NoiseModel, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0x0B5);
+        let mut scene_texture = [0f32; D_VIS - 16];
+        for t in scene_texture.iter_mut() {
+            *t = rng.normal_ms(0.0, SCENE_TEXTURE_STD) as f32;
+        }
+        Renderer { noise, rng, scene_texture, last_clarity: 1.0 }
+    }
+
+    /// Render the observation for the simulator's current step.
+    pub fn render(&mut self, sim: &RobotSim) -> [f32; D_VIS] {
+        let t = sim.step_index();
+        let interacting = sim.traj.phase_at(t).is_critical();
+        let clarity = self.noise.clarity(interacting);
+        self.last_clarity = clarity;
+
+        let mut obs = [0.0f32; D_VIS];
+        let err = sim.joint_error();
+        for j in 0..N_JOINTS {
+            obs[j] = err[j].clamp(-1.5, 1.5) as f32;
+        }
+        let horizon = sim.traj.saliency_horizon(t, CHUNK);
+        for (i, s) in horizon.iter().enumerate() {
+            obs[7 + i] = *s as f32;
+        }
+        obs[15] = sim.traj.saliency_at(t) as f32;
+        // texture: the persistent scene content + small sensor noise
+        for (o, s) in obs.iter_mut().skip(16).zip(self.scene_texture.iter()) {
+            *o = *s + self.rng.normal_ms(0.0, 0.05) as f32;
+        }
+        // attenuation: occlusion hides semantics AND texture...
+        for o in obs.iter_mut() {
+            *o *= clarity as f32;
+        }
+        // ...and low-energy occluder clutter replaces the texture signal
+        // without restoring the semantic channels.
+        for o in obs.iter_mut().take(D_VIS).skip(16) {
+            *o += self.rng.normal_ms(0.0, CLUTTER_STD * (1.0 - clarity)) as f32;
+        }
+        obs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NoiseLevel, RobotConfig, SceneConfig};
+    use crate::robot::TaskKind;
+
+    fn renderer(noise: NoiseLevel, seed: u64) -> Renderer {
+        let scfg = SceneConfig { noise, ..SceneConfig::default() };
+        Renderer::new(NoiseModel::new(&scfg, seed), seed)
+    }
+
+    fn sim() -> RobotSim {
+        RobotSim::new(TaskKind::PickPlace, &RobotConfig::default(), 3)
+    }
+
+    #[test]
+    fn layout_semantics_clean_scene() {
+        let s = sim();
+        let mut r = renderer(NoiseLevel::Standard, 1);
+        let obs = r.render(&s);
+        // joint error channels match the sim
+        let err = s.joint_error();
+        for j in 0..N_JOINTS {
+            assert!((obs[j] as f64 - err[j].clamp(-1.5, 1.5)).abs() < 1e-6);
+        }
+        // saliency channels in [0,1]
+        for i in 7..16 {
+            assert!((0.0..=1.0).contains(&(obs[i] as f64)));
+        }
+        assert_eq!(r.last_clarity, 1.0);
+    }
+
+    #[test]
+    fn noise_attenuates_semantic_channels() {
+        let s = sim();
+        let mut clean = renderer(NoiseLevel::Standard, 1);
+        let mut noisy = renderer(NoiseLevel::VisualNoise, 1);
+        let o_clean = clean.render(&s);
+        let o_noisy = noisy.render(&s);
+        let sem = |o: &[f32; D_VIS]| -> f64 { o[..16].iter().map(|v| (*v as f64).abs()).sum() };
+        assert!(sem(&o_noisy) < sem(&o_clean));
+    }
+
+    #[test]
+    fn occlusion_suppresses_scene_texture_energy() {
+        let s = sim();
+        let mut clean_r = renderer(NoiseLevel::Standard, 5);
+        let clean_tex: f64 =
+            clean_r.render(&s)[16..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let mut noisy = renderer(NoiseLevel::Distraction, 5);
+        let mut found = false;
+        for _ in 0..200 {
+            let o = noisy.render(&s);
+            if noisy.last_clarity < 0.5 {
+                let tex: f64 = o[16..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+                assert!(tex < 0.5 * clean_tex, "occluded {tex} vs clean {clean_tex}");
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "no occlusion in 200 frames");
+    }
+
+    #[test]
+    fn scene_texture_is_persistent_across_frames() {
+        let s = sim();
+        let mut r = renderer(NoiseLevel::Standard, 6);
+        let a = r.render(&s);
+        let b = r.render(&s);
+        // frame-to-frame texture correlation must be high (same scene)
+        let dot: f64 = a[16..].iter().zip(b[16..].iter()).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let na: f64 = a[16..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let nb: f64 = b[16..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(dot / (na * nb) > 0.9);
+    }
+
+    #[test]
+    fn observations_finite() {
+        let s = sim();
+        let mut r = renderer(NoiseLevel::Distraction, 7);
+        for _ in 0..50 {
+            assert!(r.render(&s).iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Cloud-side request batcher: accumulates pending requests up to a batch
+//! bound, preserving FIFO order. The surrogate executes B=1 per call, so a
+//! batch is drained sequentially; batching still amortizes queue wake-ups
+//! and gives the server its backpressure boundary.
+
+use crate::net::server::Pending;
+
+pub struct Batcher {
+    buf: Vec<Pending>,
+    max_batch: usize,
+    /// Lifetime statistics.
+    pub total_batches: u64,
+    pub total_requests: u64,
+    pub max_observed: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Self {
+        Batcher { buf: Vec::new(), max_batch: max_batch.max(1), total_batches: 0, total_requests: 0, max_observed: 0 }
+    }
+
+    pub fn push(&mut self, p: Pending) {
+        self.buf.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Take the current batch (FIFO order preserved).
+    pub fn take(&mut self) -> Vec<Pending> {
+        self.total_batches += 1;
+        self.total_requests += self.buf.len() as u64;
+        self.max_observed = self.max_observed.max(self.buf.len());
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Mean requests per batch so far.
+    pub fn mean_batch(&self) -> f64 {
+        if self.total_batches == 0 {
+            0.0
+        } else {
+            self.total_requests as f64 / self.total_batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::proto::InferRequest;
+    use std::sync::mpsc;
+
+    fn pending(instr: u32) -> Pending {
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            req: InferRequest { instr, obs: [0.0; crate::D_VIS], proprio: [0.0; crate::D_PROP] },
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_preserved() {
+        let mut b = Batcher::new(8);
+        for i in 0..5 {
+            b.push(pending(i));
+        }
+        let batch = b.take();
+        let ids: Vec<u32> = batch.iter().map(|p| p.req.instr).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut b = Batcher::new(4);
+        b.push(pending(0));
+        b.push(pending(1));
+        b.take();
+        b.push(pending(2));
+        b.take();
+        assert_eq!(b.total_batches, 2);
+        assert_eq!(b.total_requests, 3);
+        assert_eq!(b.max_observed, 2);
+        assert!((b.mean_batch() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_batch_is_one() {
+        let b = Batcher::new(0);
+        assert_eq!(b.max_batch(), 1);
+    }
+}

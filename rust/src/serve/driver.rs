@@ -1,0 +1,309 @@
+//! The episode driver: one task episode under one partitioning strategy.
+//!
+//! Per control step (f_control): ingest the proprioceptive frame (the
+//! f_sensor evaluation collapses to control rate in simulation — the real
+//! 500 Hz loop is exercised by `examples/serve_cluster.rs` and the
+//! dispatcher perf bench), route via the strategy, execute chunk
+//! generations on the *real* AOT-compiled models, advance the virtual
+//! testbed clock per DESIGN.md §5, and step the simulator.
+//!
+//! Backend selection rule: chunk content comes from the *cloud-grade*
+//! model whenever the generating slice holds the majority of parameters
+//! (Edge-Only runs the full 14.2 GB model locally — slow but full quality);
+//! otherwise from the edge-grade model.
+
+use crate::config::SystemConfig;
+use crate::dispatcher::{ChunkQueue, ChunkSource};
+use crate::metrics::EpisodeMetrics;
+use crate::net::Link;
+use crate::policy::{DecisionCtx, Route, Strategy};
+use crate::robot::{RobotSim, TaskKind};
+use crate::runtime::DeviceClock;
+use crate::scene::{NoiseModel, Renderer};
+use crate::util::timeline::Timeline;
+use crate::vla::{obs::proprio_vec, Backend};
+use std::collections::VecDeque;
+
+/// Extra routing cost charged per retransmission (reassembly + re-route).
+const RETRANS_PENALTY_MS: f64 = 40.0;
+/// Cost of moving the split point (vision baseline re-partition: model
+/// layers must be shipped and re-warmed).
+const REPARTITION_MS: f64 = 150.0;
+
+pub struct EpisodeOutput {
+    pub metrics: EpisodeMetrics,
+    pub trace: Option<Timeline>,
+}
+
+/// Run one episode. `edge`/`cloud` are the two model grades (see module
+/// docs for the selection rule).
+pub fn run_episode(
+    sys: &SystemConfig,
+    task: TaskKind,
+    mut strategy: Box<dyn Strategy>,
+    edge: &mut dyn Backend,
+    cloud: &mut dyn Backend,
+    seed: u64,
+    want_trace: bool,
+) -> EpisodeOutput {
+    let kind = strategy.kind();
+    let mut sim = RobotSim::new(task, &sys.robot, seed);
+    let mut renderer = Renderer::new(NoiseModel::new(&sys.scene, seed ^ 0x9e37), seed ^ 0x517);
+    let mut clock = DeviceClock::new(&sys.devices, seed ^ 0xDC);
+    let mut link = Link::new(&sys.link, seed ^ 0x71);
+    let mut queue = ChunkQueue::new();
+    // side channels (entropy, mass) parallel to the action queue
+    let mut side: VecDeque<(f64, f64)> = VecDeque::new();
+    let mut metrics = EpisodeMetrics::new(task, kind);
+    let mut trace = if want_trace { Some(Timeline::new()) } else { None };
+
+    let mut last_frame = crate::robot::SensorFrame {
+        step: 0,
+        q: sim.q(),
+        dq: crate::robot::Jv::ZERO,
+        tau: crate::robot::Jv::ZERO,
+    };
+    let mut edge_gb_accum = 0.0f64;
+    let mut prev_repartitions = 0u64;
+    let mut prev_tau = crate::robot::Jv::ZERO;
+
+    while !sim.done() {
+        let t = sim.step_index();
+        strategy.observe(&last_frame);
+
+        // entropy of the action about to execute (vision baseline signal)
+        let next_entropy = side.front().map(|&(h, _)| h);
+        let ctx = DecisionCtx {
+            step: t,
+            queue_empty: queue.is_empty(),
+            entropy: if strategy.needs_entropy() { next_entropy } else { None },
+        };
+        let route = strategy.decide(&ctx);
+        // Invariant #1: an empty queue must force a refill.
+        let route = if queue.is_empty() && route == Route::Cached { Route::EdgeRefill } else { route };
+
+        match route {
+            Route::Cached => {}
+            Route::EdgeRefill | Route::CloudOffload => {
+                let obs = renderer.render(&sim);
+                let clarity = renderer.last_clarity;
+                let proprio = proprio_vec(&last_frame);
+                let instr = task.instr_id();
+
+                if route == Route::CloudOffload {
+                    if !queue.is_empty() {
+                        metrics.preemptions += 1;
+                        metrics.overhead_ms += clock.preempt();
+                    }
+                    let t_cap = clock.obs_capture();
+                    // split-computing baselines ship intermediate activations
+                    // from the split point; RAPID ships the raw observation
+                    let payload = if strategy.needs_entropy() { sys.link.activation_bytes } else { sys.link.obs_bytes };
+                    let xfer = link.offload_roundtrip(payload, sys.link.chunk_bytes, clarity);
+                    clock.advance(xfer.ms);
+                    let t_compute = clock.cloud_compute();
+                    metrics.cloud_busy_ms += t_cap + xfer.ms + t_compute;
+                    metrics.cloud_events += 1;
+                    metrics.retransmissions += xfer.retransmissions as u64;
+                    metrics.overhead_ms += xfer.retransmissions as f64 * RETRANS_PENALTY_MS;
+                    strategy.on_offload(t);
+
+                    let t0 = std::time::Instant::now();
+                    let out = cloud.infer(&obs, &proprio, instr);
+                    metrics.measured_cloud_us += t0.elapsed().as_micros() as f64;
+
+                    // ground truth: was this offload near a critical phase?
+                    let near_crit = (0..3).any(|d| sim.traj.phase_at(t + d).is_critical())
+                        || (t > 0 && sim.traj.phase_at(t - 1).is_critical());
+                    if near_crit {
+                        metrics.trig_tp += 1;
+                    } else {
+                        metrics.trig_fp += 1;
+                    }
+
+                    side.clear();
+                    for i in 0..out.actions.len() {
+                        side.push_back((out.entropy(i), out.mass[i]));
+                    }
+                    queue.overwrite(&out.actions, ChunkSource::Cloud, t);
+                    metrics.discarded_actions = queue.discarded;
+                } else {
+                    // routine edge refill
+                    let gb = strategy.edge_gb(sys);
+                    let t_infer = clock.edge_infer(sys, gb);
+                    metrics.edge_busy_ms += t_infer;
+                    metrics.edge_events += 1;
+                    if strategy.needs_entropy() {
+                        // vision preprocessing / distribution extraction
+                        metrics.overhead_ms += clock.vision_route();
+                    }
+                    let full_grade = gb >= 0.5 * sys.total_model_gb;
+                    let t0 = std::time::Instant::now();
+                    let out = if full_grade { cloud.infer(&obs, &proprio, instr) } else { edge.infer(&obs, &proprio, instr) };
+                    metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
+                    side.clear();
+                    for i in 0..out.actions.len() {
+                        side.push_back((out.entropy(i), out.mass[i]));
+                    }
+                    queue.overwrite(&out.actions, ChunkSource::Edge, t);
+                    metrics.discarded_actions = queue.discarded;
+                }
+
+                // split re-partitions (vision baseline): charge each change
+                let rp = strategy.repartitions();
+                if rp > prev_repartitions {
+                    metrics.overhead_ms += (rp - prev_repartitions) as f64 * REPARTITION_MS;
+                    metrics.repartitions += rp - prev_repartitions;
+                    prev_repartitions = rp;
+                }
+            }
+        }
+
+        // Invariant #1 (hard): never dispatch from an empty queue.
+        let action = queue.pop().expect("queue must be non-empty after routing");
+        let (h, mass) = side.pop_front().unwrap_or((0.0, 0.0));
+
+        if let Some(tl) = trace.as_mut() {
+            let ts = t as u64;
+            tl.record("entropy", ts, h);
+            tl.record("mass", ts, mass);
+            tl.record("clarity", ts, renderer.last_clarity);
+            tl.record("offload", ts, if route == Route::CloudOffload { 1.0 } else { 0.0 });
+            tl.record("refill", ts, if route == Route::EdgeRefill { 1.0 } else { 0.0 });
+            tl.record("critical", ts, if sim.traj.phase_at(t).is_critical() { 1.0 } else { 0.0 });
+            tl.record(
+                "phase",
+                ts,
+                match sim.traj.phase_at(t) {
+                    crate::robot::Phase::Approach => 0.0,
+                    crate::robot::Phase::Interact => 1.0,
+                    crate::robot::Phase::Retract => 2.0,
+                },
+            );
+            tl.record("saliency", ts, sim.traj.saliency_at(t));
+            tl.record("velocity", ts, last_frame.dq.norm());
+            tl.record("tau_norm", ts, last_frame.tau.norm());
+            // Eq. 5's signal: wrist-weighted torque variation |W_τ Δτ|
+            tl.record("dtau_w", ts, (last_frame.tau - prev_tau).weighted_norm(&sys.dispatcher.w_torque));
+        }
+        prev_tau = last_frame.tau;
+
+        if sim.traj.phase_at(t).is_critical() {
+            metrics.crit_steps += 1;
+        }
+        edge_gb_accum += strategy.edge_gb(sys);
+
+        last_frame = sim.apply(action);
+        clock.advance(sys.robot.dt * 1e3);
+        metrics.steps += 1;
+    }
+
+    metrics.edge_gb = edge_gb_accum / metrics.steps.max(1) as f64;
+    metrics.cloud_gb = sys.cloud_gb(metrics.edge_gb);
+    metrics.rms_error = sim.rms_error();
+    metrics.success = sim.success();
+    // measured dispatcher CPU time (RAPID strategies report it; 0 otherwise)
+    metrics.dispatcher_cpu_ns = strategy.decision_ns();
+
+    EpisodeOutput { metrics, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::vla::AnalyticBackend;
+
+    fn run(kind: PolicyKind, task: TaskKind, seed: u64) -> EpisodeMetrics {
+        let sys = SystemConfig::default();
+        let strategy = crate::policy::build(kind, &sys);
+        let mut edge = AnalyticBackend::edge(seed);
+        let mut cloud = AnalyticBackend::cloud(seed);
+        run_episode(&sys, task, strategy, &mut edge, &mut cloud, seed, false).metrics
+    }
+
+    #[test]
+    fn all_policies_complete_episodes() {
+        for kind in [
+            PolicyKind::Rapid,
+            PolicyKind::EdgeOnly,
+            PolicyKind::CloudOnly,
+            PolicyKind::VisionBased,
+            PolicyKind::RapidNoComp,
+            PolicyKind::RapidNoRed,
+        ] {
+            let m = run(kind, TaskKind::PickPlace, 3);
+            assert_eq!(m.steps, TaskKind::PickPlace.seq_len(), "{kind:?}");
+            assert!(m.events() > 0, "{kind:?}");
+            assert!(m.identity_holds(14.2), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn edge_only_never_uses_cloud() {
+        let m = run(PolicyKind::EdgeOnly, TaskKind::DrawerOpen, 4);
+        assert_eq!(m.cloud_events, 0);
+        assert_eq!(m.cloud_busy_ms, 0.0);
+        assert!((m.edge_gb - 14.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cloud_only_never_uses_edge() {
+        let m = run(PolicyKind::CloudOnly, TaskKind::DrawerOpen, 4);
+        assert_eq!(m.edge_events, 0);
+        assert_eq!(m.edge_gb, 0.0);
+        assert!(m.cloud_events > 0);
+    }
+
+    #[test]
+    fn rapid_splits_between_edge_and_cloud() {
+        let m = run(PolicyKind::Rapid, TaskKind::PickPlace, 5);
+        assert!(m.edge_events > 0, "edge events {}", m.edge_events);
+        assert!(m.cloud_events > 0, "cloud events {}", m.cloud_events);
+        assert!((m.edge_gb - 2.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rapid_total_latency_beats_edge_only() {
+        let sys = SystemConfig::default();
+        let mut rapid_tot = 0.0;
+        let mut edge_tot = 0.0;
+        for seed in 0..4 {
+            rapid_tot += run(PolicyKind::Rapid, TaskKind::PickPlace, seed).latency_columns().2;
+            edge_tot += run(PolicyKind::EdgeOnly, TaskKind::PickPlace, seed).latency_columns().2;
+        }
+        assert!(rapid_tot < edge_tot, "rapid {rapid_tot} vs edge {edge_tot}");
+        let _ = sys;
+    }
+
+    #[test]
+    fn deterministic_metrics() {
+        let a = run(PolicyKind::Rapid, TaskKind::PegInsert, 11);
+        let b = run(PolicyKind::Rapid, TaskKind::PegInsert, 11);
+        assert_eq!(a.latency_columns().2, b.latency_columns().2);
+        assert_eq!(a.cloud_events, b.cloud_events);
+    }
+
+    #[test]
+    fn trace_contains_expected_series() {
+        let sys = SystemConfig::default();
+        let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
+        let mut edge = AnalyticBackend::edge(1);
+        let mut cloud = AnalyticBackend::cloud(1);
+        let out = run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 1, true);
+        let tl = out.trace.unwrap();
+        for name in ["entropy", "mass", "clarity", "offload", "critical", "saliency"] {
+            assert_eq!(tl.values(name).len(), TaskKind::PickPlace.seq_len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn rapid_offloads_cluster_near_critical_phases() {
+        let sys = SystemConfig::default();
+        let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
+        let mut edge = AnalyticBackend::edge(2);
+        let mut cloud = AnalyticBackend::cloud(2);
+        let out = run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 2, true);
+        assert!(out.metrics.trigger_precision() > 0.5, "precision {}", out.metrics.trigger_precision());
+    }
+}

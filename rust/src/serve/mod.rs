@@ -1,0 +1,14 @@
+//! Serving layer: the episode driver (closed control loop over sim +
+//! renderer + strategy + models + link + virtual clock), the multi-episode
+//! session runner, and the cloud-side batcher/router.
+
+pub mod batcher;
+pub mod driver;
+pub mod router;
+pub mod sensorloop;
+pub mod session;
+
+pub use batcher::Batcher;
+pub use driver::{run_episode, EpisodeOutput};
+pub use sensorloop::{SensorLoop, TriggerFlag};
+pub use session::{run_suite, SuiteResult};

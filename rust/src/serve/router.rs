@@ -1,0 +1,107 @@
+//! Request router over multiple cloud workers: least-outstanding with
+//! round-robin tie-break (the standard serving-router policy, scaled to
+//! this repo's single-host deployment).
+
+/// Tracks outstanding work per worker and picks targets.
+#[derive(Debug, Clone)]
+pub struct Router {
+    outstanding: Vec<u64>,
+    rr: usize,
+    pub dispatched: u64,
+}
+
+impl Router {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Router { outstanding: vec![0; workers], rr: 0, dispatched: 0 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Pick the worker with the fewest outstanding requests (round-robin
+    /// over ties) and account the dispatch.
+    pub fn pick(&mut self) -> usize {
+        let n = self.outstanding.len();
+        let min = *self.outstanding.iter().min().unwrap();
+        // rotate the starting index so ties spread evenly
+        let mut chosen = self.rr % n;
+        for off in 0..n {
+            let i = (self.rr + off) % n;
+            if self.outstanding[i] == min {
+                chosen = i;
+                break;
+            }
+        }
+        self.rr = (chosen + 1) % n;
+        self.outstanding[chosen] += 1;
+        self.dispatched += 1;
+        chosen
+    }
+
+    /// Mark a request complete on a worker.
+    pub fn complete(&mut self, worker: usize) {
+        assert!(worker < self.outstanding.len());
+        assert!(self.outstanding[worker] > 0, "completing idle worker");
+        self.outstanding[worker] -= 1;
+    }
+
+    pub fn outstanding(&self, worker: usize) -> u64 {
+        self.outstanding[worker]
+    }
+
+    /// Max load imbalance across workers.
+    pub fn imbalance(&self) -> u64 {
+        let max = *self.outstanding.iter().max().unwrap();
+        let min = *self.outstanding.iter().min().unwrap();
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spreads_round_robin_when_idle() {
+        let mut r = Router::new(3);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        // each worker picked twice
+        for w in 0..3 {
+            assert_eq!(picks.iter().filter(|&&p| p == w).count(), 2);
+        }
+    }
+
+    #[test]
+    fn prefers_least_loaded() {
+        let mut r = Router::new(2);
+        let a = r.pick();
+        let b = r.pick();
+        assert_ne!(a, b);
+        r.complete(a);
+        // a is now idle, b busy -> next pick must be a
+        assert_eq!(r.pick(), a);
+    }
+
+    #[test]
+    fn imbalance_bounded_under_completion() {
+        let mut r = Router::new(4);
+        let mut picks = Vec::new();
+        for i in 0..100 {
+            picks.push(r.pick());
+            if i % 2 == 1 {
+                let w = picks.remove(0);
+                r.complete(w);
+            }
+        }
+        assert!(r.imbalance() <= 1, "imbalance {}", r.imbalance());
+    }
+
+    #[test]
+    #[should_panic]
+    fn completing_idle_worker_panics() {
+        let mut r = Router::new(2);
+        r.complete(0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Multi-episode suite runner: tasks × episodes × policies, aggregated to
+//! paper-style rows.
+
+use super::driver::run_episode;
+use crate::config::{PolicyKind, SystemConfig};
+use crate::metrics::{aggregate, EpisodeMetrics, PolicyRow};
+use crate::robot::tasks::ALL_TASKS;
+use crate::robot::TaskKind;
+use crate::vla::Backend;
+
+/// Results of a suite run for one policy.
+pub struct SuiteResult {
+    pub policy: PolicyKind,
+    pub episodes: Vec<EpisodeMetrics>,
+    pub row: PolicyRow,
+}
+
+/// Run `episodes` per task for one policy.
+pub fn run_policy(
+    sys: &SystemConfig,
+    kind: PolicyKind,
+    tasks: &[TaskKind],
+    episodes: usize,
+    edge: &mut dyn Backend,
+    cloud: &mut dyn Backend,
+) -> SuiteResult {
+    let mut all = Vec::new();
+    for (ti, &task) in tasks.iter().enumerate() {
+        for ep in 0..episodes {
+            let seed = sys.episode.seed ^ ((ti as u64) << 32) ^ (ep as u64) ^ ((kind as u64) << 16);
+            let strategy = crate::policy::build(kind, sys);
+            let out = run_episode(sys, task, strategy, edge, cloud, seed, false);
+            all.push(out.metrics);
+        }
+    }
+    let row = aggregate(kind, &all);
+    SuiteResult { policy: kind, episodes: all, row }
+}
+
+/// Run the full suite over several policies.
+pub fn run_suite(
+    sys: &SystemConfig,
+    kinds: &[PolicyKind],
+    episodes: usize,
+    edge: &mut dyn Backend,
+    cloud: &mut dyn Backend,
+) -> Vec<SuiteResult> {
+    kinds
+        .iter()
+        .map(|&k| run_policy(sys, k, &ALL_TASKS, episodes, edge, cloud))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vla::AnalyticBackend;
+
+    #[test]
+    fn suite_orders_policies_as_the_paper() {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = 21;
+        let mut edge = AnalyticBackend::edge(1);
+        let mut cloud = AnalyticBackend::cloud(1);
+        let results = run_suite(
+            &sys,
+            &[PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid],
+            2,
+            &mut edge,
+            &mut cloud,
+        );
+        let total = |k: PolicyKind| {
+            results.iter().find(|r| r.policy == k).unwrap().row.total_lat_mean
+        };
+        let edge_t = total(PolicyKind::EdgeOnly);
+        let cloud_t = total(PolicyKind::CloudOnly);
+        let vision_t = total(PolicyKind::VisionBased);
+        let rapid_t = total(PolicyKind::Rapid);
+        // paper ordering: Cloud < RAPID < Vision < Edge
+        assert!(cloud_t < rapid_t, "cloud {cloud_t} rapid {rapid_t}");
+        assert!(rapid_t < vision_t, "rapid {rapid_t} vision {vision_t}");
+        assert!(vision_t < edge_t, "vision {vision_t} edge {edge_t}");
+    }
+
+    #[test]
+    fn per_episode_counts() {
+        let sys = SystemConfig::default();
+        let mut edge = AnalyticBackend::edge(2);
+        let mut cloud = AnalyticBackend::cloud(2);
+        let r = run_policy(&sys, PolicyKind::Rapid, &ALL_TASKS, 2, &mut edge, &mut cloud);
+        assert_eq!(r.episodes.len(), 6);
+        assert_eq!(r.row.episodes, 6);
+    }
+}

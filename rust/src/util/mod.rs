@@ -1,0 +1,13 @@
+//! Self-contained utility substrates (no third-party crates are available
+//! in this offline environment, so the PRNG, rolling statistics, ring
+//! buffer, table formatting and CSV timeline are implemented here).
+
+pub mod rng;
+pub mod ringbuf;
+pub mod stats;
+pub mod tablefmt;
+pub mod timeline;
+
+pub use rng::Pcg32;
+pub use ringbuf::RingBuf;
+pub use stats::{RollingStats, Summary, Welford};

@@ -1,0 +1,121 @@
+//! Fixed-capacity ring buffer used by the sliding-window statistics and the
+//! dispatcher's history buffers ("low-dimensional arrays consuming mere
+//! kilobytes" — paper §VI-D.2). Allocation-free after construction.
+
+#[derive(Debug, Clone)]
+pub struct RingBuf<T> {
+    buf: Vec<T>,
+    cap: usize,
+    head: usize, // next write position
+    len: usize,
+}
+
+impl<T: Copy + Default> RingBuf<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring buffer capacity must be positive");
+        RingBuf { buf: vec![T::default(); cap], cap, head: 0, len: 0 }
+    }
+
+    /// Push a value, returning the evicted element once full.
+    pub fn push(&mut self, v: T) -> Option<T> {
+        let evicted = if self.len == self.cap { Some(self.buf[self.head]) } else { None };
+        self.buf[self.head] = v;
+        self.head = (self.head + 1) % self.cap;
+        if self.len < self.cap {
+            self.len += 1;
+        }
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// i-th most recent element (0 = newest). None if out of range.
+    pub fn recent(&self, i: usize) -> Option<T> {
+        if i >= self.len {
+            return None;
+        }
+        let idx = (self.head + self.cap - 1 - i) % self.cap;
+        Some(self.buf[idx])
+    }
+
+    /// Iterate oldest -> newest.
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        (0..self.len).map(move |i| {
+            let idx = (self.head + self.cap - self.len + i) % self.cap;
+            self.buf[idx]
+        })
+    }
+
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_evicts_fifo() {
+        let mut rb = RingBuf::new(3);
+        assert_eq!(rb.push(1), None);
+        assert_eq!(rb.push(2), None);
+        assert_eq!(rb.push(3), None);
+        assert!(rb.is_full());
+        assert_eq!(rb.push(4), Some(1));
+        assert_eq!(rb.push(5), Some(2));
+        let v: Vec<i32> = rb.iter().collect();
+        assert_eq!(v, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn recent_indexing() {
+        let mut rb = RingBuf::new(4);
+        for i in 0..6 {
+            rb.push(i);
+        }
+        assert_eq!(rb.recent(0), Some(5));
+        assert_eq!(rb.recent(3), Some(2));
+        assert_eq!(rb.recent(4), None);
+    }
+
+    #[test]
+    fn iter_order_before_full() {
+        let mut rb = RingBuf::new(5);
+        rb.push(10);
+        rb.push(20);
+        let v: Vec<i32> = rb.iter().collect();
+        assert_eq!(v, vec![10, 20]);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut rb = RingBuf::new(2);
+        rb.push(1);
+        rb.push(2);
+        rb.clear();
+        assert!(rb.is_empty());
+        assert_eq!(rb.recent(0), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = RingBuf::<f64>::new(0);
+    }
+}

@@ -1,0 +1,298 @@
+//! Rolling (sliding-window) statistics and summary statistics.
+//!
+//! `RollingStats` is the paper's "dynamic sliding window statistics":
+//! it maintains mean μ and standard deviation σ of a score stream over a
+//! window w, in O(1) per update, and is what normalizes the anomaly scores
+//! M̂ = (M - μ) / (σ + ε) in Algorithm 1 step 3.
+
+use super::ringbuf::RingBuf;
+
+/// O(1) sliding-window mean/std via running sums with periodic exact
+/// recomputation to bound floating-point drift.
+#[derive(Debug, Clone)]
+pub struct RollingStats {
+    window: RingBuf<f64>,
+    sum: f64,
+    sumsq: f64,
+    pushes: u64,
+    /// Recompute exactly every this many pushes (drift control).
+    refresh_every: u64,
+}
+
+impl RollingStats {
+    pub fn new(window: usize) -> Self {
+        RollingStats {
+            window: RingBuf::new(window),
+            sum: 0.0,
+            sumsq: 0.0,
+            pushes: 0,
+            refresh_every: 4096,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if let Some(old) = self.window.push(v) {
+            self.sum -= old;
+            self.sumsq -= old * old;
+        }
+        self.sum += v;
+        self.sumsq += v * v;
+        self.pushes += 1;
+        if self.pushes % self.refresh_every == 0 {
+            self.recompute();
+        }
+    }
+
+    fn recompute(&mut self) {
+        self.sum = self.window.iter().sum();
+        self.sumsq = self.window.iter().map(|x| x * x).sum();
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    /// Mean over the current window (0 before any sample).
+    pub fn mean(&self) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        self.sum / self.window.len() as f64
+    }
+
+    /// Population standard deviation over the current window (>= 0).
+    pub fn std(&self) -> f64 {
+        let n = self.window.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let var = (self.sumsq / n as f64 - mean * mean).max(0.0);
+        var.sqrt()
+    }
+
+    /// Normalized anomaly score (M - μ) / (σ + ε) — Algorithm 1 step 3.
+    pub fn zscore(&self, v: f64, eps: f64) -> f64 {
+        (v - self.mean()) / (self.std() + eps)
+    }
+}
+
+/// Streaming mean/variance without a window (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Batch summary with order statistics (used by benchkit and the tables).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0, p99: 0.0 };
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| -> f64 {
+            let idx = (p * (n - 1) as f64).round() as usize;
+            s[idx.min(n - 1)]
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+        }
+    }
+}
+
+/// Pearson correlation coefficient (Fig. 3: torque vs redundancy).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n as f64;
+    let my = y.iter().sum::<f64>() / n as f64;
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..n {
+        let a = x[i] - mx;
+        let b = y[i] - my;
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        return 0.0;
+    }
+    num / (dx * dy).sqrt()
+}
+
+/// Spearman rank correlation (robust variant reported alongside Pearson).
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    fn ranks(v: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        let mut i = 0;
+        while i < idx.len() {
+            let mut j = i;
+            while j + 1 < idx.len() && v[idx[j + 1]] == v[idx[i]] {
+                j += 1;
+            }
+            let avg = (i + j) as f64 / 2.0;
+            for k in i..=j {
+                r[idx[k]] = avg;
+            }
+            i = j + 1;
+        }
+        r
+    }
+    pearson(&ranks(x), &ranks(y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rolling_matches_naive() {
+        let mut rs = RollingStats::new(5);
+        let data = [1.0, 4.0, 2.0, 8.0, 5.0, 7.0, 3.0, 6.0, 1.5, 9.0];
+        for (i, &v) in data.iter().enumerate() {
+            rs.push(v);
+            let lo = i.saturating_sub(4);
+            let win = &data[lo..=i];
+            let mean = win.iter().sum::<f64>() / win.len() as f64;
+            let var = win.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / win.len() as f64;
+            assert!((rs.mean() - mean).abs() < 1e-9, "step {i}");
+            assert!((rs.std() - var.sqrt()).abs() < 1e-9, "step {i}");
+        }
+    }
+
+    #[test]
+    fn rolling_std_nonnegative_on_constant() {
+        let mut rs = RollingStats::new(8);
+        for _ in 0..100 {
+            rs.push(3.3333);
+        }
+        assert!(rs.std() >= 0.0);
+        assert!(rs.std() < 1e-9);
+    }
+
+    #[test]
+    fn zscore_of_mean_is_zero() {
+        let mut rs = RollingStats::new(4);
+        for v in [2.0, 4.0, 6.0, 8.0] {
+            rs.push(v);
+        }
+        assert!((rs.zscore(5.0, 1e-6)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 100.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-9);
+        assert!((w.var() - var).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p95 - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rolling_drift_refresh() {
+        let mut rs = RollingStats::new(3);
+        rs.refresh_every = 10;
+        for i in 0..1000 {
+            rs.push((i % 7) as f64 * 1e6);
+        }
+        // last window: 996%7=2, 997%7=3, 998%7=4 -> wait, 0..1000 ends at 999
+        let w = [(997 % 7) as f64 * 1e6, (998 % 7) as f64 * 1e6, (999 % 7) as f64 * 1e6];
+        let mean = w.iter().sum::<f64>() / 3.0;
+        assert!((rs.mean() - mean).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,153 @@
+//! ASCII table formatting for the paper-style experiment tables.
+
+/// A simple left/right-aligned table builder printing paper-style rows.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub footnote: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            footnote: String::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn footnote(&mut self, s: &str) -> &mut Self {
+        self.footnote = s.to_string();
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let sep: String = w.iter().map(|n| format!("+{}", "-".repeat(n + 2))).collect::<String>() + "+";
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("| {:width$} ", c, width = w[i]));
+            }
+            line.push('|');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.footnote.is_empty() {
+            out.push_str(&format!("Note: {}\n", self.footnote));
+        }
+        out
+    }
+
+    /// Render as CSV (for downstream plotting).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",") + "\n";
+        for r in &self.rows {
+            out += &(r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",") + "\n");
+        }
+        out
+    }
+}
+
+/// Format milliseconds as the paper does: "222.9ms" / "222.9 ± 11.4ms".
+pub fn ms(v: f64) -> String {
+    format!("{v:.1}ms")
+}
+
+pub fn ms_pm(mean: f64, std: f64) -> String {
+    format!("{mean:.1} ± {std:.1}ms")
+}
+
+/// Format gigabytes: "14.2GB".
+pub fn gb(v: f64) -> String {
+    format!("{v:.1}GB")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", 100.0 * v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["Method", "Lat."]);
+        t.row_strs(&["Edge-Only", "782.5ms"]);
+        t.row_strs(&["RAPID", "222.9ms"]);
+        let s = t.render();
+        assert!(s.contains("| Edge-Only | 782.5ms |"));
+        assert!(s.contains("| RAPID     | 222.9ms |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row_strs(&["x,y", "q\"z"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(222.94), "222.9ms");
+        assert_eq!(ms_pm(222.9, 11.4), "222.9 ± 11.4ms");
+        assert_eq!(gb(14.2), "14.2GB");
+        assert_eq!(pct(0.057), "5.7%");
+    }
+}

@@ -1,0 +1,140 @@
+//! Named time-series recording (Fig. 2 / Fig. 5 trace dumps).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+/// Records multiple named series indexed by step, dumps aligned CSV.
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    series: BTreeMap<String, Vec<(u64, f64)>>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, step: u64, value: f64) {
+        self.series.entry(name.to_string()).or_default().push((step, value));
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[(u64, f64)]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    /// Values of one series in step order (ignoring gaps).
+    pub fn values(&self, name: &str) -> Vec<f64> {
+        self.series.get(name).map(|v| v.iter().map(|&(_, x)| x).collect()).unwrap_or_default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.series.values().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Step-aligned CSV: one column per series, blank where missing.
+    pub fn to_csv(&self) -> String {
+        let mut steps: Vec<u64> = Vec::new();
+        for v in self.series.values() {
+            for &(s, _) in v {
+                steps.push(s);
+            }
+        }
+        steps.sort_unstable();
+        steps.dedup();
+        let maps: Vec<(&String, BTreeMap<u64, f64>)> = self
+            .series
+            .iter()
+            .map(|(k, v)| (k, v.iter().cloned().collect()))
+            .collect();
+        let mut out = String::from("step");
+        for (k, _) in &maps {
+            out += &format!(",{k}");
+        }
+        out.push('\n');
+        for s in steps {
+            out += &s.to_string();
+            for (_, m) in &maps {
+                match m.get(&s) {
+                    Some(v) => out += &format!(",{v}"),
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    /// Poor-man's terminal sparkline of a series (for example binaries).
+    pub fn sparkline(&self, name: &str, width: usize) -> String {
+        let vals = self.values(name);
+        if vals.is_empty() {
+            return String::new();
+        }
+        let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let (lo, hi) = vals.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &v| (a.min(v), b.max(v)));
+        let span = (hi - lo).max(1e-12);
+        let w = width.min(vals.len()).max(1);
+        let mut out = String::new();
+        for c in 0..w {
+            // endpoint-inclusive sampling: the last cell shows the last value
+            let idx = if w == 1 { 0 } else { c * (vals.len() - 1) / (w - 1) };
+            let v = vals[idx];
+            let g = (((v - lo) / span) * 7.0).round() as usize;
+            out.push(glyphs[g.min(7)]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_values() {
+        let mut t = Timeline::new();
+        t.record("a", 0, 1.0);
+        t.record("a", 1, 2.0);
+        t.record("b", 1, 5.0);
+        assert_eq!(t.values("a"), vec![1.0, 2.0]);
+        assert_eq!(t.values("b"), vec![5.0]);
+        assert_eq!(t.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn csv_alignment() {
+        let mut t = Timeline::new();
+        t.record("x", 0, 1.0);
+        t.record("y", 1, 2.0);
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,x,y");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "1,,2");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let mut t = Timeline::new();
+        for i in 0..64 {
+            t.record("s", i, i as f64);
+        }
+        let sl = t.sparkline("s", 8);
+        assert_eq!(sl.chars().count(), 8);
+        assert!(sl.starts_with('▁'));
+        assert!(sl.ends_with('█'));
+    }
+}

@@ -1,0 +1,94 @@
+//! Episode-level attention-redundancy analysis (paper Table II / §III-B).
+//!
+//! Per-step attention masses are normalized over the episode; steps with
+//! normalized weight below the uniform baseline 1/L are classified as
+//! redundant, matching the paper's criterion.
+
+/// Redundancy statistics for one episode-long attention-mass series.
+#[derive(Debug, Clone, Copy)]
+pub struct RedundancyStats {
+    /// Sequence length L.
+    pub len: usize,
+    /// Uniform baseline 1/L.
+    pub uniform: f64,
+    /// Proportion of redundant actions (weight < 1/L).
+    pub p_red: f64,
+    /// Proportion of critical actions (weight ≥ 1/L).
+    pub p_crit: f64,
+    /// Mean normalized weight of redundant actions.
+    pub w_red: f64,
+    /// Mean normalized weight of critical actions.
+    pub w_crit: f64,
+}
+
+/// Normalize a raw attention-mass series to sum 1 and compute Table II
+/// statistics. Returns None for empty/degenerate input.
+pub fn redundancy_stats(mass: &[f64]) -> Option<RedundancyStats> {
+    let n = mass.len();
+    if n == 0 {
+        return None;
+    }
+    let total: f64 = mass.iter().sum();
+    if !(total.is_finite()) || total <= 0.0 {
+        return None;
+    }
+    let uniform = 1.0 / n as f64;
+    let weights: Vec<f64> = mass.iter().map(|m| m / total).collect();
+    let (mut red, mut crit) = (Vec::new(), Vec::new());
+    for w in weights {
+        if w < uniform {
+            red.push(w);
+        } else {
+            crit.push(w);
+        }
+    }
+    let mean = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+    Some(RedundancyStats {
+        len: n,
+        uniform,
+        p_red: red.len() as f64 / n as f64,
+        p_crit: crit.len() as f64 / n as f64,
+        w_red: mean(&red),
+        w_crit: mean(&crit),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_series_all_critical() {
+        // equal weights sit exactly at 1/L => classified critical (>=)
+        let s = redundancy_stats(&vec![1.0; 10]).unwrap();
+        assert_eq!(s.p_crit, 1.0);
+        assert_eq!(s.p_red, 0.0);
+    }
+
+    #[test]
+    fn peaked_series_mostly_redundant() {
+        let mut mass = vec![0.01; 50];
+        for m in mass.iter_mut().take(50).skip(41) {
+            *m = 1.0;
+        }
+        let s = redundancy_stats(&mass).unwrap();
+        assert!(s.p_red > 0.8, "p_red {}", s.p_red);
+        assert!(s.w_crit > 5.0 * s.w_red, "w_crit {} w_red {}", s.w_crit, s.w_red);
+        assert_eq!(s.len, 50);
+        assert!((s.uniform - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partitions_are_exhaustive() {
+        let mass: Vec<f64> = (1..=37).map(|i| i as f64).collect();
+        let s = redundancy_stats(&mass).unwrap();
+        assert!((s.p_red + s.p_crit - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(redundancy_stats(&[]).is_none());
+        assert!(redundancy_stats(&[0.0, 0.0]).is_none());
+        assert!(redundancy_stats(&[f64::NAN, 1.0]).is_none());
+    }
+}

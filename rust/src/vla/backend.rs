@@ -1,0 +1,190 @@
+//! Model backend abstraction.
+//!
+//! * [`PjrtBackend`] — the real path: AOT-compiled HLO executed via PJRT.
+//! * [`AnalyticBackend`] — a pure-Rust mirror of the surrogate's
+//!   *constructed semantics* (same observation contract, same qualitative
+//!   behaviours) used by unit/property tests and fast sweeps where the
+//!   numeric model is not the object under test.
+
+use crate::robot::Jv;
+use crate::util::Pcg32;
+use crate::vla::chunk::ModelOut;
+use crate::{CHUNK, D_PROP, D_VIS, VOCAB};
+
+pub trait Backend {
+    fn name(&self) -> &str;
+
+    /// One forward pass: obs (clarity-attenuated visual features), proprio,
+    /// instruction index -> action chunk + side channels.
+    fn infer(&mut self, obs: &[f32; D_VIS], proprio: &[f32; D_PROP], instr: usize) -> ModelOut;
+
+    /// Mean measured wall-clock per call (µs), if tracked.
+    fn mean_us(&self) -> f64 {
+        0.0
+    }
+}
+
+/// PJRT-backed inference (the production path).
+pub struct PjrtBackend {
+    pub exe: crate::runtime::PolicyExecutable,
+}
+
+impl PjrtBackend {
+    pub fn new(exe: crate::runtime::PolicyExecutable) -> Self {
+        PjrtBackend { exe }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.exe.variant
+    }
+
+    fn infer(&mut self, obs: &[f32; D_VIS], proprio: &[f32; D_PROP], instr: usize) -> ModelOut {
+        self.exe.infer(obs, proprio, instr).expect("pjrt inference failed")
+    }
+
+    fn mean_us(&self) -> f64 {
+        self.exe.mean_us()
+    }
+}
+
+/// Analytic mirror of the constructed surrogate (model.py docstring §1–3):
+/// actions track the joint-error channels, logit sharpness scales with
+/// observation signal magnitude, attention mass follows the routed
+/// saliency horizon.
+pub struct AnalyticBackend {
+    label: String,
+    /// Fixed random logit directions (per vocab entry), seeded.
+    logit_dirs: Vec<[f32; VOCAB]>,
+    act_gain: f64,
+    logit_gain: f64,
+    mass_gain: f64,
+    mass_shift: f64,
+    noise: Pcg32,
+    noise_scale: f64,
+}
+
+impl AnalyticBackend {
+    pub fn new(label: &str, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0xAB);
+        let mut dirs = Vec::with_capacity(CHUNK);
+        for _ in 0..CHUNK {
+            let mut row = [0f32; VOCAB];
+            for r in row.iter_mut() {
+                *r = rng.normal() as f32;
+            }
+            dirs.push(row);
+        }
+        let cloudish = label.contains("cloud");
+        AnalyticBackend {
+            label: label.to_string(),
+            logit_dirs: dirs,
+            act_gain: if cloudish { 1.2 } else { 0.9 },
+            logit_gain: if cloudish { 3.4 } else { 2.8 },
+            mass_gain: 9.0,
+            mass_shift: 3.5,
+            noise: rng.fork(7),
+            noise_scale: if cloudish { 0.02 } else { 0.05 },
+        }
+    }
+
+    pub fn edge(seed: u64) -> Self {
+        Self::new("edge-analytic", seed)
+    }
+
+    pub fn cloud(seed: u64) -> Self {
+        Self::new("cloud-analytic", seed ^ 0xC10)
+    }
+}
+
+impl Backend for AnalyticBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn infer(&mut self, obs: &[f32; D_VIS], _proprio: &[f32; D_PROP], instr: usize) -> ModelOut {
+        // visual confidence signal: semantic content + persistent scene
+        // texture energy (normalized to its clean-scene expectation) —
+        // mirrors what the constructed PJRT surrogate's attention routes
+        // into the logit path
+        let sem: f64 = obs[..16].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let tex: f64 = obs[16..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let tex_clean = crate::scene::renderer::SCENE_TEXTURE_STD * ((D_VIS - 16) as f64).sqrt();
+        let sig = 0.5 * sem + 1.0 * (tex / tex_clean).min(1.5);
+        let mut actions = Vec::with_capacity(CHUNK);
+        let mut logits = Vec::with_capacity(CHUNK);
+        let mut mass = Vec::with_capacity(CHUNK);
+        for i in 0..CHUNK {
+            // actions: routed joint error + small model noise
+            actions.push(Jv::from_fn(|j| {
+                (self.act_gain * obs[j] as f64 + self.noise_scale * self.noise.normal()).tanh()
+            }));
+            // logits: fixed random direction scaled by signal magnitude
+            let mut row = [0f32; VOCAB];
+            let sharp = (self.logit_gain * sig) as f32;
+            for (v, d) in row.iter_mut().zip(self.logit_dirs[i].iter()) {
+                *v = sharp * d + 0.03 * (instr as f32 + 1.0) * d.signum();
+            }
+            logits.push(row);
+            // mass: softplus of routed saliency-horizon slot (same mapping
+            // the constructed PJRT surrogate realizes: softplus(g·sal − c))
+            let sal = obs[7 + i] as f64;
+            let x = self.mass_gain * sal - self.mass_shift;
+            mass.push((1.0 + x.exp()).ln());
+        }
+        ModelOut { actions, logits, mass }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::N_JOINTS;
+
+    fn obs_with(err: f64, sal: f64, clarity: f64) -> [f32; D_VIS] {
+        let mut o = [0f32; D_VIS];
+        for j in 0..N_JOINTS {
+            o[j] = err as f32;
+        }
+        for i in 0..CHUNK {
+            o[7 + i] = sal as f32;
+        }
+        o[15] = sal as f32;
+        for v in o.iter_mut().skip(16) {
+            *v = 0.3;
+        }
+        for v in o.iter_mut() {
+            *v *= clarity as f32;
+        }
+        o
+    }
+
+    #[test]
+    fn mirrors_entropy_behaviour() {
+        let mut b = AnalyticBackend::cloud(1);
+        let clean = b.infer(&obs_with(0.3, 0.1, 1.0), &[0.0; D_PROP], 1);
+        let noisy = b.infer(&obs_with(0.3, 0.1, 0.2), &[0.0; D_PROP], 1);
+        assert!(noisy.mean_entropy() > clean.mean_entropy() + 0.3);
+    }
+
+    #[test]
+    fn mirrors_mass_behaviour() {
+        let mut b = AnalyticBackend::cloud(2);
+        let calm = b.infer(&obs_with(0.3, 0.05, 1.0), &[0.0; D_PROP], 1);
+        let crit = b.infer(&obs_with(0.1, 0.9, 1.0), &[0.0; D_PROP], 1);
+        let m = |o: &ModelOut| o.mass.iter().sum::<f64>() / CHUNK as f64;
+        assert!(m(&crit) > 3.0 * m(&calm));
+    }
+
+    #[test]
+    fn mirrors_action_tracking() {
+        let mut b = AnalyticBackend::edge(3);
+        let out = b.infer(&obs_with(0.4, 0.1, 1.0), &[0.0; D_PROP], 1);
+        let mean_a: f64 = out.actions.iter().map(|a| a[0]).sum::<f64>() / CHUNK as f64;
+        assert!(mean_a > 0.15, "mean action {mean_a}");
+        let out_neg = b.infer(&obs_with(-0.4, 0.1, 1.0), &[0.0; D_PROP], 1);
+        let mean_n: f64 = out_neg.actions.iter().map(|a| a[0]).sum::<f64>() / CHUNK as f64;
+        assert!(mean_n < -0.15);
+    }
+}

@@ -1,0 +1,70 @@
+//! Model output container: an action chunk plus the per-token side
+//! channels (logits for entropy, attention mass for redundancy).
+
+use crate::robot::Jv;
+use crate::vla::entropy::shannon_entropy;
+use crate::{CHUNK, N_JOINTS, VOCAB};
+
+#[derive(Debug, Clone)]
+pub struct ModelOut {
+    /// Action chunk: k normalized joint-velocity commands.
+    pub actions: Vec<Jv>,
+    /// Per-token action logits [k][V].
+    pub logits: Vec<[f32; VOCAB]>,
+    /// Per-token attention mass (redundancy instrumentation).
+    pub mass: Vec<f64>,
+}
+
+impl ModelOut {
+    /// Assemble from the flat buffers the PJRT tuple returns.
+    pub fn from_flat(actions: &[f32], logits: &[f32], mass: &[f32]) -> ModelOut {
+        assert_eq!(actions.len(), CHUNK * N_JOINTS);
+        assert_eq!(logits.len(), CHUNK * VOCAB);
+        assert_eq!(mass.len(), CHUNK);
+        let acts = (0..CHUNK)
+            .map(|i| Jv::from_fn(|j| actions[i * N_JOINTS + j] as f64))
+            .collect();
+        let lgs = (0..CHUNK)
+            .map(|i| {
+                let mut row = [0f32; VOCAB];
+                row.copy_from_slice(&logits[i * VOCAB..(i + 1) * VOCAB]);
+                row
+            })
+            .collect();
+        ModelOut { actions: acts, logits: lgs, mass: mass.iter().map(|&m| m as f64).collect() }
+    }
+
+    /// Shannon entropy (nats) of action token i's distribution — the
+    /// vision baseline's offloading signal.
+    pub fn entropy(&self, i: usize) -> f64 {
+        shannon_entropy(&self.logits[i.min(CHUNK - 1)])
+    }
+
+    /// Mean entropy over the chunk.
+    pub fn mean_entropy(&self) -> f64 {
+        (0..CHUNK).map(|i| self.entropy(i)).sum::<f64>() / CHUNK as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_flat_roundtrip() {
+        let actions: Vec<f32> = (0..CHUNK * N_JOINTS).map(|i| i as f32 * 0.01).collect();
+        let logits: Vec<f32> = (0..CHUNK * VOCAB).map(|i| (i % 7) as f32).collect();
+        let mass: Vec<f32> = (0..CHUNK).map(|i| i as f32).collect();
+        let out = ModelOut::from_flat(&actions, &logits, &mass);
+        assert_eq!(out.actions.len(), CHUNK);
+        assert!((out.actions[1][2] - (1 * N_JOINTS + 2) as f64 * 0.01).abs() < 1e-6);
+        assert_eq!(out.mass[3], 3.0);
+        assert!(out.entropy(0) > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        ModelOut::from_flat(&[0.0; 3], &[0.0; CHUNK * VOCAB], &[0.0; CHUNK]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Shannon entropy of an action-token logit row (nats) — mirrors
+//! `python/compile/model.py::entropy` bit-for-bit in structure.
+
+/// Numerically stable softmax entropy.
+pub fn shannon_entropy(logits: &[f32]) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    if !max.is_finite() {
+        return 0.0;
+    }
+    let mut z = 0.0f64;
+    let mut ez_sum = 0.0f64;
+    for &l in logits {
+        let e = ((l as f64) - max).exp();
+        ez_sum += e;
+        z += e * ((l as f64) - max);
+    }
+    // H = log(sum e^z) - E[z]
+    ez_sum.max(1e-300).ln() - z / ez_sum.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_log_n() {
+        let logits = vec![0.0f32; 64];
+        assert!((shannon_entropy(&logits) - (64f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peaked_is_near_zero() {
+        let mut logits = vec![0.0f32; 64];
+        logits[3] = 50.0;
+        assert!(shannon_entropy(&logits) < 1e-6);
+    }
+
+    #[test]
+    fn scaling_decreases_entropy() {
+        let base: Vec<f32> = (0..64).map(|i| ((i * 37) % 13) as f32 * 0.1).collect();
+        let hot: Vec<f32> = base.iter().map(|x| x * 10.0).collect();
+        assert!(shannon_entropy(&hot) < shannon_entropy(&base));
+    }
+
+    #[test]
+    fn shift_invariant() {
+        let a: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + 100.0).collect();
+        assert!((shannon_entropy(&a) - shannon_entropy(&b)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn large_values_stable() {
+        let logits = vec![1e30f32, -1e30, 0.0];
+        let h = shannon_entropy(&logits);
+        assert!(h.is_finite() && h >= 0.0);
+    }
+}

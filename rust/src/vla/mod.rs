@@ -1,0 +1,12 @@
+//! VLA model interface on the Rust side: model outputs, entropy, the
+//! backend abstraction (PJRT-backed or analytic), and observation assembly.
+
+pub mod attention;
+pub mod backend;
+pub mod chunk;
+pub mod entropy;
+pub mod obs;
+
+pub use backend::{AnalyticBackend, Backend, PjrtBackend};
+pub use chunk::ModelOut;
+pub use entropy::shannon_entropy;

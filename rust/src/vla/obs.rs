@@ -1,0 +1,31 @@
+//! Observation assembly: sensor frame -> proprio input vector.
+
+use crate::robot::SensorFrame;
+use crate::{D_PROP, N_JOINTS};
+
+/// Pack (q, q̇, τ) into the model's proprio input layout.
+pub fn proprio_vec(f: &SensorFrame) -> [f32; D_PROP] {
+    let mut out = [0f32; D_PROP];
+    for j in 0..N_JOINTS {
+        out[j] = f.q[j] as f32;
+        out[N_JOINTS + j] = f.dq[j] as f32;
+        out[2 * N_JOINTS + j] = f.tau[j] as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::Jv;
+
+    #[test]
+    fn layout() {
+        let f = SensorFrame { step: 0, q: Jv::splat(1.0), dq: Jv::splat(2.0), tau: Jv::splat(3.0) };
+        let p = proprio_vec(&f);
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[N_JOINTS], 2.0);
+        assert_eq!(p[2 * N_JOINTS], 3.0);
+        assert_eq!(p.len(), D_PROP);
+    }
+}

@@ -1,0 +1,50 @@
+//! The shipped config files must parse and produce sane systems.
+
+use rapid::config::{NoiseLevel, SystemConfig};
+
+fn load(path: &str) -> SystemConfig {
+    let src = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    SystemConfig::from_toml(&src).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+#[test]
+fn libero_toml_matches_builtin_preset() {
+    let cfg = load("configs/libero.toml");
+    let builtin = rapid::config::presets::libero_preset();
+    assert_eq!(cfg.total_model_gb, builtin.total_model_gb);
+    assert_eq!(cfg.dispatcher.theta_comp, builtin.dispatcher.theta_comp);
+    assert_eq!(cfg.dispatcher.theta_red, builtin.dispatcher.theta_red);
+    assert_eq!(cfg.devices.edge_full_ms, builtin.devices.edge_full_ms);
+    assert_eq!(cfg.scene.noise, NoiseLevel::Standard);
+}
+
+#[test]
+fn realworld_toml_matches_builtin_preset() {
+    let cfg = load("configs/realworld.toml");
+    let builtin = rapid::config::presets::realworld_preset();
+    assert_eq!(cfg.total_model_gb, builtin.total_model_gb);
+    assert_eq!(cfg.devices.edge_full_ms, builtin.devices.edge_full_ms);
+    assert_eq!(cfg.link.rtt_ms, builtin.link.rtt_ms);
+}
+
+#[test]
+fn stress_toml_loads_and_runs_an_episode() {
+    let cfg = load("configs/stress_noise.toml");
+    assert_eq!(cfg.scene.noise, NoiseLevel::Distraction);
+    assert_eq!(cfg.link.bw_mbps, 200.0);
+    // the stress scenario must still complete an episode
+    let strategy = rapid::policy::build(rapid::config::PolicyKind::Rapid, &cfg);
+    let mut edge = rapid::vla::AnalyticBackend::edge(1);
+    let mut cloud = rapid::vla::AnalyticBackend::cloud(1);
+    let out = rapid::serve::run_episode(
+        &cfg,
+        rapid::robot::TaskKind::PickPlace,
+        strategy,
+        &mut edge,
+        &mut cloud,
+        1,
+        false,
+    );
+    assert_eq!(out.metrics.steps, 50);
+    assert!(out.metrics.identity_holds(cfg.total_model_gb));
+}

@@ -1,0 +1,138 @@
+//! End-to-end integration: suite-level behaviour across policies, the real
+//! TCP edge-cloud path inside the episode driver, and cross-noise
+//! compatibility — the system-level claims of the paper, checked in CI.
+
+use rapid::config::{NoiseLevel, PolicyKind, SystemConfig};
+use rapid::metrics::aggregate;
+use rapid::net::{CloudClient, CloudServer};
+use rapid::robot::tasks::ALL_TASKS;
+use rapid::robot::TaskKind;
+use rapid::serve::session::run_policy;
+use rapid::vla::AnalyticBackend;
+
+#[test]
+fn suite_reproduces_paper_ordering_and_loads() {
+    let mut sys = SystemConfig::default();
+    sys.episode.seed = 33;
+    let mut edge = AnalyticBackend::edge(1);
+    let mut cloud = AnalyticBackend::cloud(1);
+    let mut rows = Vec::new();
+    for kind in [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid] {
+        let r = run_policy(&sys, kind, &ALL_TASKS, 3, &mut edge, &mut cloud);
+        rows.push(aggregate(kind, &r.episodes));
+    }
+    let get = |k: PolicyKind| rows.iter().find(|r| r.policy == k).unwrap();
+    // ordering: Cloud < RAPID < Vision < Edge
+    assert!(get(PolicyKind::CloudOnly).total_lat_mean < get(PolicyKind::Rapid).total_lat_mean);
+    assert!(get(PolicyKind::Rapid).total_lat_mean < get(PolicyKind::VisionBased).total_lat_mean);
+    assert!(get(PolicyKind::VisionBased).total_lat_mean < get(PolicyKind::EdgeOnly).total_lat_mean);
+    // edge-only anchored at the configured device time
+    assert!((get(PolicyKind::EdgeOnly).total_lat_mean - 782.5).abs() < 40.0);
+    // loads conserved everywhere
+    for r in &rows {
+        assert!((r.total_gb - sys.total_model_gb).abs() < 1e-6, "{:?}", r.policy);
+    }
+    // RAPID keeps the paper's small edge footprint
+    assert!((get(PolicyKind::Rapid).edge_gb - 2.4).abs() < 1e-9);
+}
+
+#[test]
+fn rapid_is_noise_compatible_where_vision_is_not() {
+    let mut edge = AnalyticBackend::edge(2);
+    let mut cloud = AnalyticBackend::cloud(2);
+    let mut vision = Vec::new();
+    let mut rapid_l = Vec::new();
+    for noise in [NoiseLevel::Standard, NoiseLevel::Distraction] {
+        let mut sys = SystemConfig::default();
+        sys.scene.noise = noise;
+        sys.episode.seed = 5;
+        let v = run_policy(&sys, PolicyKind::VisionBased, &ALL_TASKS, 2, &mut edge, &mut cloud);
+        vision.push(aggregate(PolicyKind::VisionBased, &v.episodes).total_lat_mean);
+        let r = run_policy(&sys, PolicyKind::Rapid, &ALL_TASKS, 2, &mut edge, &mut cloud);
+        rapid_l.push(aggregate(PolicyKind::Rapid, &r.episodes).total_lat_mean);
+    }
+    let vision_deg = (vision[1] - vision[0]) / vision[0];
+    let rapid_deg = (rapid_l[1] - rapid_l[0]) / rapid_l[0];
+    // vision degrades substantially; RAPID stays (relatively) flat
+    assert!(vision_deg > 0.25, "vision degradation {vision_deg}");
+    assert!(rapid_deg.abs() < vision_deg, "rapid {rapid_deg} vs vision {vision_deg}");
+}
+
+#[test]
+fn rapid_matches_vision_accuracy_with_far_fewer_cloud_queries() {
+    // the accuracy/efficiency claim: RAPID places its (few) cloud queries
+    // at critical moments and keeps tracking quality comparable to the
+    // vision baseline that floods the cloud under noise
+    let mut sys = SystemConfig::default();
+    sys.scene.noise = NoiseLevel::VisualNoise;
+    sys.episode.seed = 11;
+    let mut edge = AnalyticBackend::edge(3);
+    let mut cloud = AnalyticBackend::cloud(3);
+    let v = run_policy(&sys, PolicyKind::VisionBased, &ALL_TASKS, 3, &mut edge, &mut cloud);
+    let r = run_policy(&sys, PolicyKind::Rapid, &ALL_TASKS, 3, &mut edge, &mut cloud);
+    let v_row = aggregate(PolicyKind::VisionBased, &v.episodes);
+    let r_row = aggregate(PolicyKind::Rapid, &r.episodes);
+    let v_queries: f64 = v.episodes.iter().map(|m| m.cloud_events as f64).sum();
+    let r_queries: f64 = r.episodes.iter().map(|m| m.cloud_events as f64).sum();
+    assert!(
+        r_row.rms_error <= v_row.rms_error + 0.15,
+        "rapid rms {} vs vision {}",
+        r_row.rms_error,
+        v_row.rms_error
+    );
+    assert!(r_queries < 0.7 * v_queries, "rapid {r_queries} vs vision {v_queries} queries");
+    // and RAPID's queries are better placed
+    assert!(r_row.trigger_precision >= 0.5, "precision {}", r_row.trigger_precision);
+}
+
+#[test]
+fn episode_driver_over_real_tcp() {
+    // the driver's cloud calls leave the process over TCP (CloudClient is a
+    // Backend) and hit a real server worker
+    let server = CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(9))).unwrap();
+    let addr = server.addr.to_string();
+    let mut edge = AnalyticBackend::edge(9);
+    let mut client = CloudClient::connect(&addr).unwrap();
+
+    let sys = SystemConfig::default();
+    let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
+    let out = rapid::serve::run_episode(&sys, TaskKind::DrawerOpen, strategy, &mut edge, &mut client, 77, false);
+    assert_eq!(out.metrics.steps, TaskKind::DrawerOpen.seq_len());
+    assert!(out.metrics.cloud_events > 0);
+    assert_eq!(
+        server.stats().requests.load(std::sync::atomic::Ordering::Relaxed),
+        out.metrics.cloud_events
+    );
+    assert!(!client.rtts_us.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn cooldown_throttles_cloud_queries() {
+    // paper §V-B: C prevents network flooding during sustained contact
+    let mut edge = AnalyticBackend::edge(4);
+    let mut cloud = AnalyticBackend::cloud(4);
+    let mut count_offloads = |cooldown: u32| -> f64 {
+        let mut sys = SystemConfig::default();
+        sys.dispatcher.cooldown = cooldown;
+        sys.episode.seed = 9;
+        let r = run_policy(&sys, PolicyKind::Rapid, &[TaskKind::PegInsert], 3, &mut edge, &mut cloud);
+        r.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / r.episodes.len() as f64
+    };
+    let no_cd = count_offloads(0);
+    let with_cd = count_offloads(16);
+    assert!(with_cd <= no_cd, "cooldown increased offloads: {with_cd} > {no_cd}");
+}
+
+#[test]
+fn ablations_degrade_gracefully_not_catastrophically() {
+    let sys = SystemConfig::default();
+    let mut edge = AnalyticBackend::edge(6);
+    let mut cloud = AnalyticBackend::cloud(6);
+    for kind in [PolicyKind::RapidNoComp, PolicyKind::RapidNoRed, PolicyKind::RapidStaticFusion] {
+        let r = run_policy(&sys, kind, &ALL_TASKS, 2, &mut edge, &mut cloud);
+        let row = aggregate(kind, &r.episodes);
+        assert!(row.total_lat_mean.is_finite());
+        assert!(row.total_lat_mean < 782.5, "{kind:?} worse than edge-only");
+    }
+}

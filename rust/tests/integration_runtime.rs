@@ -1,0 +1,137 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts, run
+//! the real models, and verify the constructed behaviours survive the
+//! python -> HLO text -> PJRT round trip. Skipped (with a notice) when
+//! `make artifacts` has not been run.
+
+use rapid::experiments::Backends;
+use rapid::robot::{RobotSim, TaskKind};
+use rapid::scene::{NoiseModel, Renderer};
+use rapid::{CHUNK, D_PROP, D_VIS, N_JOINTS};
+
+fn pjrt() -> Option<Backends> {
+    match Backends::try_pjrt() {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn obs_with(err: f64, sal: f64, clarity: f64) -> [f32; D_VIS] {
+    // renderer-equivalent synthetic observation with a persistent texture
+    let mut rng = rapid::util::Pcg32::seeded(99);
+    let mut o = [0f32; D_VIS];
+    for j in 0..N_JOINTS {
+        o[j] = err as f32;
+    }
+    for i in 0..CHUNK {
+        o[7 + i] = sal as f32;
+    }
+    o[15] = sal as f32;
+    for v in o.iter_mut().skip(16) {
+        *v = rng.normal_ms(0.0, rapid::scene::renderer::SCENE_TEXTURE_STD) as f32;
+    }
+    for v in o.iter_mut() {
+        *v *= clarity as f32;
+    }
+    o
+}
+
+#[test]
+fn pjrt_outputs_have_contract_shapes_and_are_finite() {
+    let Some(mut b) = pjrt() else { return };
+    let out = b.cloud.infer(&obs_with(0.3, 0.5, 1.0), &[0.1; D_PROP], 1);
+    assert_eq!(out.actions.len(), CHUNK);
+    assert_eq!(out.logits.len(), CHUNK);
+    assert_eq!(out.mass.len(), CHUNK);
+    for a in &out.actions {
+        assert!(a.is_finite());
+        assert!(a.abs_max() <= 1.0);
+    }
+    assert!(out.mass.iter().all(|m| m.is_finite() && *m >= 0.0));
+}
+
+#[test]
+fn pjrt_inference_is_deterministic() {
+    let Some(mut b) = pjrt() else { return };
+    let obs = obs_with(0.2, 0.4, 0.8);
+    let a = b.cloud.infer(&obs, &[0.0; D_PROP], 2);
+    let c = b.cloud.infer(&obs, &[0.0; D_PROP], 2);
+    assert_eq!(a.mass, c.mass);
+    assert_eq!(a.logits[0], c.logits[0]);
+}
+
+#[test]
+fn pjrt_entropy_rises_with_visual_degradation() {
+    let Some(mut b) = pjrt() else { return };
+    for backend in [&mut b.edge, &mut b.cloud] {
+        let clean = backend.infer(&obs_with(0.3, 0.1, 1.0), &[0.0; D_PROP], 1).mean_entropy();
+        let noisy = backend.infer(&obs_with(0.3, 0.1, 0.25), &[0.0; D_PROP], 1).mean_entropy();
+        assert!(noisy > clean + 0.4, "{}: clean {clean} noisy {noisy}", backend.name());
+    }
+}
+
+#[test]
+fn pjrt_mass_tracks_saliency() {
+    let Some(mut b) = pjrt() else { return };
+    let calm = b.cloud.infer(&obs_with(0.3, 0.05, 1.0), &[0.0; D_PROP], 1);
+    let hot = b.cloud.infer(&obs_with(0.1, 0.9, 1.0), &[0.0; D_PROP], 1);
+    let mean = |o: &rapid::vla::ModelOut| o.mass.iter().sum::<f64>() / CHUNK as f64;
+    assert!(mean(&hot) > 3.0 * mean(&calm), "hot {} calm {}", mean(&hot), mean(&calm));
+}
+
+#[test]
+fn pjrt_actions_track_joint_error_sign() {
+    let Some(mut b) = pjrt() else { return };
+    let pos = b.cloud.infer(&obs_with(0.5, 0.1, 1.0), &[0.0; D_PROP], 1);
+    let neg = b.cloud.infer(&obs_with(-0.5, 0.1, 1.0), &[0.0; D_PROP], 1);
+    let mean_j0 = |o: &rapid::vla::ModelOut| o.actions.iter().map(|a| a[0]).sum::<f64>() / CHUNK as f64;
+    assert!(mean_j0(&pos) > 0.1);
+    assert!(mean_j0(&neg) < -0.1);
+}
+
+#[test]
+fn pjrt_full_episode_with_renderer_succeeds() {
+    let Some(mut b) = pjrt() else { return };
+    let sys = rapid::config::SystemConfig::default();
+    let strategy = rapid::policy::build(rapid::config::PolicyKind::Rapid, &sys);
+    let out = rapid::serve::run_episode(
+        &sys,
+        TaskKind::PickPlace,
+        strategy,
+        b.edge.as_mut(),
+        b.cloud.as_mut(),
+        42,
+        false,
+    );
+    assert_eq!(out.metrics.steps, TaskKind::PickPlace.seq_len());
+    assert!(out.metrics.success, "rms {}", out.metrics.rms_error);
+    assert!(out.metrics.cloud_events > 0);
+    assert!(out.metrics.measured_cloud_us > 0.0);
+}
+
+#[test]
+fn renderer_observations_drive_pjrt_entropy_separation() {
+    // end-to-end: real renderer obs (not synthetic) through the real model
+    let Some(mut b) = pjrt() else { return };
+    let rcfg = rapid::config::RobotConfig::default();
+    let sim = RobotSim::new(TaskKind::PickPlace, &rcfg, 7);
+
+    let mut scene_clean = rapid::config::SceneConfig::default();
+    scene_clean.noise = rapid::config::NoiseLevel::Standard;
+    let mut clean_r = Renderer::new(NoiseModel::new(&scene_clean, 3), 3);
+
+    let mut scene_noisy = scene_clean.clone();
+    scene_noisy.noise = rapid::config::NoiseLevel::VisualNoise;
+    let mut noisy_r = Renderer::new(NoiseModel::new(&scene_noisy, 3), 3);
+
+    let proprio = [0f32; D_PROP];
+    let h_clean = b.cloud.infer(&clean_r.render(&sim), &proprio, 1).mean_entropy();
+    let mut noisy_sum = 0.0;
+    for _ in 0..5 {
+        noisy_sum += b.cloud.infer(&noisy_r.render(&sim), &proprio, 1).mean_entropy();
+    }
+    let h_noisy = noisy_sum / 5.0;
+    assert!(h_noisy > h_clean + 0.3, "clean {h_clean} noisy {h_noisy}");
+}

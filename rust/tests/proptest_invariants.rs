@@ -1,0 +1,240 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §7).
+//!
+//! No proptest crate exists in this offline environment, so this file
+//! carries a minimal property-testing harness: seeded random generators
+//! drive each property over many cases; a failure reports the seed so the
+//! case replays deterministically.
+
+use rapid::config::{DispatcherConfig, NoiseLevel, PolicyKind, SystemConfig};
+use rapid::dispatcher::{fusion, Cooldown, RapidDispatcher};
+use rapid::robot::{Jv, SensorFrame, TaskKind};
+use rapid::util::{Pcg32, RollingStats};
+
+const P_SEED_BASE: u64 = 0x5EED_CAFE;
+
+/// Run a property over `$cases` seeded inputs; panic with the replayable
+/// seed on the first failure.
+macro_rules! seeded_forall {
+    ($name:expr, $cases:expr, $prop:expr) => {
+        for seed in 0..$cases as u64 {
+            let mut rng = Pcg32::new(P_SEED_BASE ^ seed.wrapping_mul(0x9E3779B97F4A7C15), seed);
+            if let Err(msg) = ($prop)(&mut rng) {
+                panic!("property {} failed for seed {}: {}", $name, seed, msg);
+            }
+        }
+    };
+}
+
+fn random_frame(rng: &mut Pcg32, step: usize) -> SensorFrame {
+    SensorFrame {
+        step,
+        q: Jv::from_fn(|_| rng.range(-3.0, 3.0)),
+        dq: Jv::from_fn(|_| rng.range(-2.5, 2.5)),
+        tau: Jv::from_fn(|_| rng.range(-20.0, 20.0)),
+    }
+}
+
+/// Invariant #3: phase weights form a simplex for arbitrary velocity.
+#[test]
+fn prop_phase_weights_simplex() {
+    seeded_forall!("weights_simplex", 500, |rng: &mut Pcg32| {
+        let v = match rng.below(10) {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            2 => -1.0,
+            _ => rng.range(0.0, 10.0),
+        };
+        let vmax = rng.range(0.1, 5.0);
+        let w = fusion::phase_weights(v, vmax);
+        if !((w.w_a + w.w_tau - 1.0).abs() < 1e-12 && (0.0..=1.0).contains(&w.w_a)) {
+            return Err(format!("v={v} vmax={vmax} -> {w:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #4: rolling stats match a naive recompute on random streams.
+#[test]
+fn prop_rolling_stats_match_naive() {
+    seeded_forall!("rolling_naive", 100, |rng: &mut Pcg32| {
+        let window = 1 + rng.below(64) as usize;
+        let n = 10 + rng.below(200) as usize;
+        let mut rs = RollingStats::new(window);
+        let mut data = Vec::new();
+        for i in 0..n {
+            let mu = rng.range(-5.0, 5.0);
+            let v = rng.normal_ms(mu, 3.0);
+            data.push(v);
+            rs.push(v);
+            let lo = (i + 1).saturating_sub(window);
+            let win = &data[lo..=i];
+            let mean = win.iter().sum::<f64>() / win.len() as f64;
+            let var = win.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / win.len() as f64;
+            if (rs.mean() - mean).abs() > 1e-6 {
+                return Err(format!("mean {} vs {} at i={i} w={window}", rs.mean(), mean));
+            }
+            if (rs.std() - var.sqrt()).abs() > 1e-6 {
+                return Err(format!("std at i={i} w={window}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #2: after a dispatch, no second dispatch within C steps even
+/// under adversarial sensor streams (unless C = 0).
+#[test]
+fn prop_cooldown_masks_dispatches() {
+    seeded_forall!("cooldown", 60, |rng: &mut Pcg32| {
+        let mut cfg = DispatcherConfig::default();
+        cfg.cooldown = 1 + rng.below(20);
+        let mut d = RapidDispatcher::new(&cfg, 0.05);
+        let mut last_dispatch: Option<usize> = None;
+        for step in 0..400 {
+            d.observe(&random_frame(rng, step));
+            let decision = d.decide(rng.chance(0.2));
+            if decision == rapid::dispatcher::Decision::OffloadCloud {
+                if let Some(prev) = last_dispatch {
+                    let gap = step - prev;
+                    if gap < cfg.cooldown as usize {
+                        return Err(format!("dispatch gap {gap} < C={}", cfg.cooldown));
+                    }
+                }
+                last_dispatch = Some(step);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #5: on any fixed trace, raising both thresholds never
+/// increases the number of dispatches.
+#[test]
+fn prop_threshold_monotonicity() {
+    seeded_forall!("threshold_monotone", 30, |rng: &mut Pcg32| {
+        // one shared random trace
+        let trace: Vec<SensorFrame> = (0..300).map(|i| random_frame(rng, i)).collect();
+        let queue_empty: Vec<bool> = (0..300).map(|_| rng.chance(0.12)).collect();
+        let count = |tc: f64, tr: f64| -> u64 {
+            let mut cfg = DispatcherConfig::default();
+            cfg.theta_comp = tc;
+            cfg.theta_red = tr;
+            cfg.cooldown = 0; // count raw dispatches
+            let mut d = RapidDispatcher::new(&cfg, 0.05);
+            let mut n = 0;
+            for (f, &qe) in trace.iter().zip(queue_empty.iter()) {
+                d.observe(f);
+                if d.decide(qe) == rapid::dispatcher::Decision::OffloadCloud {
+                    n += 1;
+                }
+            }
+            n
+        };
+        let lo = (rng.range(0.1, 1.0), rng.range(0.1, 1.0));
+        let hi = (lo.0 + rng.range(0.0, 2.0), lo.1 + rng.range(0.0, 2.0));
+        let n_lo = count(lo.0, lo.1);
+        let n_hi = count(hi.0, hi.1);
+        if n_hi > n_lo {
+            return Err(format!("thresholds {lo:?}->{hi:?}: dispatches {n_lo}->{n_hi}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #1 + #6: for random policies/tasks/noise, episodes complete
+/// with every step served, loads conserved, and the accounting identity.
+#[test]
+fn prop_episode_invariants() {
+    let kinds = [
+        PolicyKind::Rapid,
+        PolicyKind::RapidNoComp,
+        PolicyKind::RapidNoRed,
+        PolicyKind::RapidStaticFusion,
+        PolicyKind::EdgeOnly,
+        PolicyKind::CloudOnly,
+        PolicyKind::VisionBased,
+    ];
+    let tasks = [TaskKind::PickPlace, TaskKind::DrawerOpen, TaskKind::PegInsert];
+    let noises = [NoiseLevel::Standard, NoiseLevel::VisualNoise, NoiseLevel::Distraction];
+    seeded_forall!("episode_invariants", 24, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.scene.noise = noises[rng.below(3) as usize];
+        sys.dispatcher.theta_comp = rng.range(0.1, 2.0);
+        sys.dispatcher.theta_red = rng.range(0.1, 2.0);
+        sys.dispatcher.cooldown = rng.below(24);
+        let kind = kinds[rng.below(kinds.len() as u32) as usize];
+        let task = tasks[rng.below(3) as usize];
+        let seed = rng.next_u64();
+
+        let strategy = rapid::policy::build(kind, &sys);
+        let mut edge = rapid::vla::AnalyticBackend::edge(seed);
+        let mut cloud = rapid::vla::AnalyticBackend::cloud(seed);
+        let out = rapid::serve::run_episode(&sys, task, strategy, &mut edge, &mut cloud, seed, false);
+        let m = &out.metrics;
+        if m.steps != task.seq_len() {
+            return Err(format!("{kind:?}/{task:?}: steps {} != {}", m.steps, task.seq_len()));
+        }
+        if m.events() == 0 {
+            return Err("no inference events".into());
+        }
+        if !m.identity_holds(sys.total_model_gb) {
+            return Err(format!("accounting identity violated: {m:?}"));
+        }
+        if !(m.edge_gb >= 0.0 && m.edge_gb <= sys.total_model_gb + 1e-9) {
+            return Err(format!("edge load out of range: {}", m.edge_gb));
+        }
+        let (c, e, t) = m.latency_columns();
+        if !(c.is_finite() && e.is_finite() && t.is_finite() && t >= 0.0) {
+            return Err(format!("non-finite latency columns ({c}, {e}, {t})"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #8: whole-episode determinism for every policy kind.
+#[test]
+fn prop_episodes_deterministic() {
+    seeded_forall!("determinism", 10, |rng: &mut Pcg32| {
+        let kinds = [PolicyKind::Rapid, PolicyKind::VisionBased, PolicyKind::CloudOnly];
+        let kind = kinds[rng.below(3) as usize];
+        let seed = rng.next_u64();
+        let sys = SystemConfig::default();
+        let run = || {
+            let strategy = rapid::policy::build(kind, &sys);
+            let mut edge = rapid::vla::AnalyticBackend::edge(seed);
+            let mut cloud = rapid::vla::AnalyticBackend::cloud(seed);
+            rapid::serve::run_episode(&sys, TaskKind::PegInsert, strategy, &mut edge, &mut cloud, seed, false).metrics
+        };
+        let a = run();
+        let b = run();
+        if a.latency_columns() != b.latency_columns()
+            || a.cloud_events != b.cloud_events
+            || a.rms_error != b.rms_error
+        {
+            return Err(format!("{kind:?} non-deterministic"));
+        }
+        Ok(())
+    });
+}
+
+/// Cooldown unit property: ready exactly after `limit` ticks.
+#[test]
+fn prop_cooldown_exact() {
+    seeded_forall!("cooldown_exact", 100, |rng: &mut Pcg32| {
+        let limit = rng.below(64);
+        let mut cd = Cooldown::new(limit);
+        cd.arm();
+        let mut ticks = 0;
+        while !cd.ready() {
+            cd.tick();
+            ticks += 1;
+            if ticks > limit + 1 {
+                return Err(format!("never ready, limit {limit}"));
+            }
+        }
+        if ticks != limit {
+            return Err(format!("ready after {ticks}, limit {limit}"));
+        }
+        Ok(())
+    });
+}

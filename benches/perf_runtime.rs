@@ -24,6 +24,7 @@ fn main() {
 
     // §Perf before/after: the naive path re-uploads the weight blob on
     // every call; the shipped runtime keeps weights device-resident.
+    #[cfg(feature = "pjrt")]
     if let Ok(meta) = rapid::runtime::ArtifactMeta::load(rapid::runtime::ArtifactMeta::default_dir()) {
         if let Ok(client) = rapid::runtime::RuntimeClient::cpu() {
             header("weights upload cost (naive per-call path, avoided)");

@@ -1,102 +1,115 @@
-//! End-to-end edge-cloud deployment — the repo's full-stack validation
-//! driver (DESIGN.md "End-to-end validation"): a *real* cloud VLA server
-//! (PJRT-compiled AOT artifact behind a TCP router/batcher) serves chunk
-//! requests from an edge process running the RAPID dispatcher against the
-//! manipulator simulator; we then report batched-request latency and
-//! throughput over the wire.
+//! End-to-end **fleet** deployment — the repo's full-stack validation
+//! driver: two real cloud VLA servers (TCP, batcher + worker thread) serve
+//! cross-session batched chunk requests from a fleet of robot sessions,
+//! each running the RAPID dispatcher against its own manipulator
+//! simulator. The fleet scheduler coalesces cloud offloads from different
+//! sessions into single wire frames and spreads batches across the
+//! endpoints with a least-loaded router.
 //!
-//! All layers compose here: L1 Pallas kernels (inside the HLO), L2 JAX
-//! model (the artifact), L3 rust dispatcher + server + router, real TCP.
+//! All layers compose here: L1 Pallas kernels (inside the HLO, when the
+//! `pjrt` feature + artifacts are present), L2 JAX model, L3 rust
+//! dispatcher + fleet scheduler + batcher + router, real TCP.
 //!
-//! ```bash
-//! make artifacts && cargo run --release --example serve_cluster
+//! ```text
+//! cargo run --release --example serve_cluster
 //! ```
 
 use rapid::config::presets::libero_preset;
 use rapid::config::PolicyKind;
 use rapid::experiments::Backends;
 use rapid::net::{CloudClient, CloudServer};
-use rapid::robot::tasks::ALL_TASKS;
-use rapid::serve::run_episode;
-use rapid::util::Summary;
+use rapid::robot::TaskKind;
+use rapid::serve::Fleet;
 use rapid::vla::Backend;
 use std::sync::atomic::Ordering;
 
-fn main() {
-    let sys = libero_preset();
-
-    // ---- cloud side: PJRT-backed server with a batcher ----
-    let server = CloudServer::start("127.0.0.1:0", 8, || match Backends::try_pjrt() {
+fn start_endpoint(tag: u64, max_batch: usize) -> CloudServer {
+    CloudServer::start("127.0.0.1:0", max_batch, move || match Backends::try_pjrt() {
         Ok(b) => {
-            println!("[cloud] serving the AOT-compiled cloud variant via PJRT");
+            println!("[cloud {tag}] serving the AOT-compiled cloud variant via PJRT");
             b.cloud
         }
         Err(e) => {
-            println!("[cloud] PJRT unavailable ({e}); serving analytic surrogate");
-            Box::new(rapid::vla::AnalyticBackend::cloud(1))
+            println!("[cloud {tag}] PJRT unavailable ({e}); serving analytic surrogate");
+            Box::new(rapid::vla::AnalyticBackend::cloud(tag)) as Box<dyn Backend>
         }
     })
-    .expect("server start");
-    let addr = server.addr.to_string();
-    println!("[cloud] listening on {addr}");
+    .expect("server start")
+}
 
-    // ---- edge side: RAPID episodes whose cloud calls go over TCP ----
-    let mut edge_backend: Box<dyn Backend> = match Backends::try_pjrt() {
-        Ok(b) => b.edge,
-        Err(_) => Box::new(rapid::vla::AnalyticBackend::edge(2)),
-    };
-    let mut cloud_client = CloudClient::connect(&addr).expect("connect");
-    let ping = cloud_client.ping().expect("ping");
-    println!("[edge] connected; TCP ping {:?}", ping);
+fn main() {
+    let mut sys = libero_preset();
+    sys.fleet.n_sessions = 8;
+    sys.fleet.max_batch = 4;
+    sys.fleet.max_inflight = 16;
+    sys.fleet.episodes_per_session = 2;
 
+    // ---- cloud side: two endpoints, each with its own batcher/worker ----
+    let servers: Vec<CloudServer> =
+        (0..2).map(|i| start_endpoint(i as u64 + 1, sys.fleet.max_batch)).collect();
+    let clients: Vec<CloudClient> = servers
+        .iter()
+        .map(|s| {
+            let mut c = CloudClient::connect(&s.addr.to_string()).expect("connect");
+            let ping = c.ping().expect("ping");
+            println!("[edge] connected to {} (TCP ping {:?})", s.addr, ping);
+            c
+        })
+        .collect();
+
+    // ---- edge side: N concurrent RAPID sessions over the shared path ----
     let t0 = std::time::Instant::now();
-    let mut total_steps = 0usize;
-    let mut offloads = 0u64;
-    let mut successes = 0usize;
-    let mut episodes = 0usize;
-    for (i, &task) in ALL_TASKS.iter().enumerate() {
-        for ep in 0..2 {
-            let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
-            let out = run_episode(
-                &sys,
-                task,
-                strategy,
-                edge_backend.as_mut(),
-                &mut cloud_client,
-                1000 + (i * 10 + ep) as u64,
-                false,
-            );
-            total_steps += out.metrics.steps;
-            offloads += out.metrics.cloud_events;
-            successes += out.metrics.success as usize;
-            episodes += 1;
-            println!(
-                "[edge] {} ep{}: steps={} offloads={} success={}",
-                task.name(),
-                ep,
-                out.metrics.steps,
-                out.metrics.cloud_events,
-                out.metrics.success
-            );
-        }
-    }
+    let res = Fleet::remote(&sys, TaskKind::PickPlace, PolicyKind::Rapid, clients).run();
     let wall = t0.elapsed().as_secs_f64();
+    let summary = res.summary();
+
+    for s in &res.sessions {
+        let offloads: u64 = s.episodes.iter().map(|m| m.cloud_events).sum();
+        let ok = s.episodes.iter().filter(|m| m.success).count();
+        println!(
+            "[edge] session {}: {} episodes, {} ok, {} offloads, seed {:#x}",
+            s.session,
+            s.episodes.len(),
+            ok,
+            offloads,
+            s.seed0
+        );
+    }
 
     // ---- report ----
-    let rtts: Vec<f64> = cloud_client.rtts_us.iter().map(|&u| u as f64 / 1000.0).collect();
-    let s = Summary::of(&rtts);
-    println!("\n=== end-to-end report ===");
-    println!("episodes              : {episodes} ({successes} successful)");
-    println!("control steps         : {total_steps} in {wall:.2}s wall => {:.0} steps/s", total_steps as f64 / wall);
-    println!("cloud offloads (TCP)  : {offloads}");
-    println!("request RTT           : mean {:.2}ms p50 {:.2}ms p95 {:.2}ms max {:.2}ms", s.mean, s.p50, s.p95, s.max);
-    println!("server requests       : {}", server.stats().requests.load(Ordering::Relaxed));
-    println!("server batches        : {}", server.stats().batches.load(Ordering::Relaxed));
+    let st = &res.stats;
+    println!("\n=== fleet report ===");
+    println!("sessions              : {} × {} episodes", summary.sessions, sys.fleet.episodes_per_session);
     println!(
-        "throughput            : {:.1} req/s over the wire",
-        offloads as f64 / wall
+        "control steps         : {} in {wall:.2}s wall => {:.0} steps/s",
+        summary.total_steps,
+        summary.total_steps as f64 / wall.max(1e-9)
+    );
+    println!("cloud offloads (TCP)  : {}", summary.total_cloud_events);
+    println!(
+        "wire batches          : {} (multi-session {}, mean {:.2}, max {})",
+        st.batches, st.multi_session_batches, res.mean_batch, st.max_batch_observed
+    );
+    println!(
+        "flushes               : full {} / deadline {} / drain {}",
+        st.full_flushes, st.deadline_flushes, st.drain_flushes
+    );
+    println!("endpoint spread       : {:?}", res.endpoint_dispatches);
+    for (i, s) in servers.iter().enumerate() {
+        println!(
+            "server {i}              : {} requests in {} worker batches ({} batch frames)",
+            s.stats().requests.load(Ordering::Relaxed),
+            s.stats().batches.load(Ordering::Relaxed),
+            s.stats().batch_frames.load(Ordering::Relaxed)
+        );
+    }
+    println!(
+        "fleet latency         : total {:.1}ms/chunk (cloud {:.1} + edge {:.1})",
+        summary.fleet.total_lat_mean, summary.fleet.cloud_lat_ms, summary.fleet.edge_lat_ms
     );
 
-    server.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
     println!("[cloud] shut down cleanly");
 }

@@ -4,11 +4,19 @@
 
 use super::value::Value;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ParseError {
-    #[error("line {0}: {1}")]
     At(usize, String),
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ParseError::At(line, msg) = self;
+        write!(f, "line {line}: {msg}")
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub fn parse_toml(src: &str) -> Result<Value, ParseError> {
     let mut root = Value::table();

@@ -307,6 +307,40 @@ impl Default for VisionPolicyConfig {
     }
 }
 
+/// Fleet-scale serving knobs: the multi-session episode scheduler with
+/// cross-session cloud batching (`serve::fleet`).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Concurrent robot sessions driven by the scheduler.
+    pub n_sessions: usize,
+    /// Max cloud offloads coalesced into one wire batch.
+    pub max_batch: usize,
+    /// How long a partial batch may wait for co-batching company, in µs of
+    /// virtual control time (0 = flush at the end of every scheduler
+    /// round). Longer deadlines trade chunk staleness for bigger batches.
+    pub batch_deadline_us: u64,
+    /// Backpressure bound: max cloud requests in flight fleet-wide. A
+    /// session whose offload would exceed it degrades to its edge slice.
+    pub max_inflight: usize,
+    /// Cloud endpoints the router spreads batches across.
+    pub endpoints: usize,
+    /// Episodes each session runs back to back.
+    pub episodes_per_session: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_sessions: 8,
+            max_batch: 4,
+            batch_deadline_us: 0,
+            max_inflight: 16,
+            endpoints: 1,
+            episodes_per_session: 1,
+        }
+    }
+}
+
 /// Episode / workload parameters.
 #[derive(Debug, Clone)]
 pub struct EpisodeConfig {
@@ -344,6 +378,7 @@ pub struct SystemConfig {
     pub devices: DeviceConfig,
     pub dispatcher: DispatcherConfig,
     pub vision: VisionPolicyConfig,
+    pub fleet: FleetConfig,
     pub episode: EpisodeConfig,
 }
 
@@ -362,6 +397,7 @@ impl Default for SystemConfig {
             devices: DeviceConfig::default(),
             dispatcher: DispatcherConfig::default(),
             vision: VisionPolicyConfig::default(),
+            fleet: FleetConfig::default(),
             episode: EpisodeConfig::default(),
         }
     }
@@ -427,6 +463,15 @@ impl SystemConfig {
         self.vision.min_edge_frac = v.f64_or("vision.min_edge_frac", self.vision.min_edge_frac);
         self.vision.ewma = v.f64_or("vision.ewma", self.vision.ewma);
 
+        self.fleet.n_sessions = v.usize_or("fleet.n_sessions", self.fleet.n_sessions);
+        self.fleet.max_batch = v.usize_or("fleet.max_batch", self.fleet.max_batch);
+        self.fleet.batch_deadline_us =
+            v.usize_or("fleet.batch_deadline_us", self.fleet.batch_deadline_us as usize) as u64;
+        self.fleet.max_inflight = v.usize_or("fleet.max_inflight", self.fleet.max_inflight);
+        self.fleet.endpoints = v.usize_or("fleet.endpoints", self.fleet.endpoints);
+        self.fleet.episodes_per_session =
+            v.usize_or("fleet.episodes_per_session", self.fleet.episodes_per_session);
+
         self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
     }
@@ -490,6 +535,26 @@ mod tests {
         let full = c.edge_infer_ms(c.total_model_gb);
         assert!((full - 782.5).abs() < 1e-9);
         assert!((c.edge_infer_ms(7.1) - 391.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_defaults_and_overlay() {
+        let c = SystemConfig::default();
+        assert_eq!(c.fleet.n_sessions, 8);
+        assert_eq!(c.fleet.max_batch, 4);
+        assert_eq!(c.fleet.batch_deadline_us, 0);
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[fleet]\nn_sessions = 32\nmax_batch = 8\nbatch_deadline_us = 150000\nendpoints = 3",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert_eq!(c.fleet.n_sessions, 32);
+        assert_eq!(c.fleet.max_batch, 8);
+        assert_eq!(c.fleet.batch_deadline_us, 150_000);
+        assert_eq!(c.fleet.endpoints, 3);
+        // untouched fleet keys keep defaults
+        assert_eq!(c.fleet.max_inflight, 16);
     }
 
     #[test]

@@ -13,13 +13,22 @@ pub enum Value {
     Table(BTreeMap<String, Value>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ValueError {
-    #[error("key not found: {0}")]
     Missing(String),
-    #[error("type mismatch at {0}: expected {1}")]
     Type(String, &'static str),
 }
+
+impl fmt::Display for ValueError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ValueError::Missing(k) => write!(f, "key not found: {k}"),
+            ValueError::Type(k, want) => write!(f, "type mismatch at {k}: expected {want}"),
+        }
+    }
+}
+
+impl std::error::Error for ValueError {}
 
 impl Value {
     pub fn table() -> Value {

@@ -26,5 +26,5 @@ pub mod rapid;
 
 pub use cooldown::Cooldown;
 pub use fusion::{phase_weights, FusionOutcome, PhaseWeights};
-pub use queue::{ChunkQueue, ChunkSource};
+pub use queue::{ChunkQueue, ChunkSource, QueueStats};
 pub use rapid::{Decision, RapidDispatcher, TriggerEval};

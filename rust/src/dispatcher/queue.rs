@@ -11,7 +11,21 @@ pub enum ChunkSource {
     Cloud,
 }
 
-/// FIFO of pending actions with provenance metadata.
+/// Lifetime queue statistics (fleet per-session summaries aggregate
+/// these across sessions sharing one scheduler).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueStats {
+    /// Chunk refills (overwrites) served into the queue.
+    pub overwrites: u64,
+    /// Actions dispatched to the robot.
+    pub popped: u64,
+    /// High-water mark of the queue length.
+    pub max_len: usize,
+}
+
+/// FIFO of pending actions with provenance metadata. Capacity is the
+/// chunk length k: an overwrite replaces, never extends, the cache, so
+/// `len() <= capacity()` is a hard invariant.
 #[derive(Debug, Clone)]
 pub struct ChunkQueue {
     q: VecDeque<Jv>,
@@ -21,11 +35,18 @@ pub struct ChunkQueue {
     /// Total actions discarded by preemptions (paper's "action
     /// interruptions" accounting).
     pub discarded: u64,
+    stats: QueueStats,
 }
 
 impl ChunkQueue {
     pub fn new() -> Self {
-        ChunkQueue { q: VecDeque::with_capacity(CHUNK), source: None, issued_at: 0, discarded: 0 }
+        ChunkQueue {
+            q: VecDeque::with_capacity(CHUNK),
+            source: None,
+            issued_at: 0,
+            discarded: 0,
+            stats: QueueStats::default(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -36,6 +57,11 @@ impl ChunkQueue {
         self.q.is_empty()
     }
 
+    /// Maximum actions the cache can hold (one chunk).
+    pub fn capacity(&self) -> usize {
+        CHUNK
+    }
+
     pub fn source(&self) -> Option<ChunkSource> {
         self.source
     }
@@ -44,19 +70,32 @@ impl ChunkQueue {
         self.issued_at
     }
 
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+
     /// Overwrite Q with a fresh chunk (Algorithm 1 line 7): any remaining
-    /// actions are now-stale predictions and are discarded.
+    /// actions are now-stale predictions and are discarded. At most one
+    /// chunk (k actions) is cached; longer slices are truncated so the
+    /// capacity invariant holds unconditionally.
     pub fn overwrite(&mut self, actions: &[Jv], source: ChunkSource, step: usize) {
+        debug_assert!(actions.len() <= CHUNK, "chunk longer than k: {}", actions.len());
         self.discarded += self.q.len() as u64;
         self.q.clear();
-        self.q.extend(actions.iter().copied());
+        self.q.extend(actions.iter().take(CHUNK).copied());
         self.source = Some(source);
         self.issued_at = step;
+        self.stats.overwrites += 1;
+        self.stats.max_len = self.stats.max_len.max(self.q.len());
     }
 
     /// Pop the next action (Algorithm 1 line 9).
     pub fn pop(&mut self) -> Option<Jv> {
-        self.q.pop_front()
+        let a = self.q.pop_front();
+        if a.is_some() {
+            self.stats.popped += 1;
+        }
+        a
     }
 
     /// Staleness of the cached chunk in control steps.
@@ -106,5 +145,20 @@ mod tests {
         q.overwrite(&chunk(0.5), ChunkSource::Cloud, 10);
         assert_eq!(q.staleness(13), 3);
         assert_eq!(q.staleness(9), 0); // saturating
+    }
+
+    #[test]
+    fn stats_track_traffic_and_high_water() {
+        let mut q = ChunkQueue::new();
+        q.overwrite(&chunk(1.0), ChunkSource::Edge, 0);
+        q.pop();
+        q.pop();
+        q.overwrite(&chunk(2.0), ChunkSource::Cloud, 2);
+        q.pop();
+        let s = q.stats();
+        assert_eq!(s.overwrites, 2);
+        assert_eq!(s.popped, 3);
+        assert_eq!(s.max_len, CHUNK);
+        assert!(q.len() <= q.capacity());
     }
 }

@@ -38,6 +38,7 @@ impl Backends {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn try_pjrt() -> Result<Backends, String> {
         use crate::runtime::{ArtifactMeta, RuntimeClient};
         let meta = ArtifactMeta::load(ArtifactMeta::default_dir()).map_err(|e| e.to_string())?;
@@ -47,5 +48,12 @@ impl Backends {
             edge: Box::new(crate::vla::PjrtBackend::new(edge)),
             cloud: Box::new(crate::vla::PjrtBackend::new(cloud)),
         })
+    }
+
+    /// Offline builds ship without the `pjrt` feature (the `xla` crate is
+    /// not vendorable here); every caller falls back to the analytic pair.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn try_pjrt() -> Result<Backends, String> {
+        Err("built without the `pjrt` feature; using analytic surrogates".into())
     }
 }

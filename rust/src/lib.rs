@@ -16,9 +16,22 @@
 //! * [`robot`], [`scene`] — the evaluation substrate: rigid-body N-DOF
 //!   manipulator simulator and synthetic observation renderer.
 //! * [`runtime`], [`vla`] — PJRT CPU client loading the AOT-compiled JAX/
-//!   Pallas VLA surrogate (HLO text artifacts; python never at runtime).
-//! * [`net`], [`serve`] — link model + real TCP cloud server, episode
-//!   driver, batcher, router.
+//!   Pallas VLA surrogate (HLO text artifacts; python never at runtime;
+//!   `pjrt` feature — offline builds use the analytic surrogates).
+//! * [`net`] — analytic link model + the real TCP path: length-prefixed
+//!   wire protocol with single and *cross-session batch* frames, blocking
+//!   client, threaded cloud server (batcher in front of a model-owner
+//!   worker).
+//! * [`serve`] — the serving stack, smallest to largest scope:
+//!   [`serve::driver`] is the resumable per-session step machine
+//!   (`EpisodeState`: poll → suspend on cloud → resume), [`serve::session`]
+//!   the sequential suite runner behind the paper tables, and
+//!   [`serve::fleet`] the deterministic multi-session scheduler — N robot
+//!   sessions in lockstep rounds, cloud offloads coalesced across sessions
+//!   by [`serve::batcher`] (full / deadline / drain flushes), spread over
+//!   endpoints by [`serve::router`], with fleet-wide backpressure
+//!   (`fleet.max_inflight`) that degrades refused offloads to the edge
+//!   slice.
 //! * [`experiments`] — one generator per paper table/figure.
 //!
 //! Python runs once at build time (`make artifacts`); the binary built from

@@ -6,6 +6,8 @@
 //!             [--analytic] [--trace out.csv] [--config file.toml]
 //! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|all>
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
+//! rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E]
+//!             [--batch B] [--inflight I] [--seed S] [--config file.toml]
 //! rapid info
 //! ```
 //!
@@ -23,6 +25,7 @@ fn main() {
         Some("run") => cmd_run(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("fleet") => cmd_fleet(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -44,6 +47,8 @@ fn print_help() {
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
          \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|all>\n\
          \x20 rapid serve [--addr A] [--batch B] [--analytic]\n\
+         \x20 rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E]\n\
+         \x20             [--batch B] [--inflight I] [--seed S] [--config FILE]\n\
          \x20 rapid info\n"
     );
 }
@@ -282,6 +287,67 @@ fn cmd_serve(rest: &[String]) -> i32 {
     }
 }
 
+fn cmd_fleet(rest: &[String]) -> i32 {
+    let flags = Flags(rest);
+    let mut sys = load_sys(&flags);
+    if let Some(n) = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.n_sessions = n.max(1);
+    }
+    if let Some(b) = flags.get("--batch").and_then(|s| s.parse().ok()) {
+        sys.fleet.max_batch = b;
+    }
+    if let Some(i) = flags.get("--inflight").and_then(|s| s.parse().ok()) {
+        sys.fleet.max_inflight = i;
+    }
+    if let Some(e) = flags.get("--episodes").and_then(|s| s.parse().ok()) {
+        sys.fleet.episodes_per_session = e;
+    }
+    let kind = flags.get("--policy").and_then(PolicyKind::parse).unwrap_or(PolicyKind::Rapid);
+    let task = flags
+        .get("--task")
+        .and_then(TaskKind::parse)
+        .unwrap_or(rapid::robot::TaskKind::PickPlace);
+
+    let t0 = std::time::Instant::now();
+    let res = rapid::serve::Fleet::local(&sys, task, kind).run();
+    let wall = t0.elapsed().as_secs_f64();
+    let summary = res.summary();
+
+    let mut t = Table::new(
+        &format!(
+            "Fleet: {} × {} session(s) of {} ({} episode(s) each)",
+            kind.name(),
+            summary.sessions,
+            task.name(),
+            sys.fleet.episodes_per_session.max(1)
+        ),
+        &["Session", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.", "Total Load"],
+    );
+    for (i, row) in summary.per_session.iter().enumerate() {
+        t.row(&row.table_cells(Some(&format!("session {i}"))));
+    }
+    t.row(&summary.fleet.table_cells(Some("fleet aggregate")));
+    print!("{}", t.render());
+
+    let s = &res.stats;
+    println!(
+        "rounds {}  batches {} (multi-session {})  mean batch {:.2}  max batch {}  max in-flight {}",
+        s.rounds, s.batches, s.multi_session_batches, res.mean_batch, s.max_batch_observed, s.max_inflight_observed
+    );
+    println!(
+        "flushes: full {} / deadline {} / drain {}   deferred offloads {}   endpoints {:?}",
+        s.full_flushes, s.deadline_flushes, s.drain_flushes, s.deferred_offloads, res.endpoint_dispatches
+    );
+    println!(
+        "steps {}  cloud events {}  wall {:.2}s ({:.0} steps/s)",
+        summary.total_steps,
+        summary.total_cloud_events,
+        wall,
+        summary.total_steps as f64 / wall.max(1e-9)
+    );
+    0
+}
+
 fn cmd_info() -> i32 {
     println!("RAPID reproduction — three-layer rust + JAX + Pallas stack");
     match rapid::runtime::ArtifactMeta::load(rapid::runtime::ArtifactMeta::default_dir()) {
@@ -293,9 +359,12 @@ fn cmd_info() -> i32 {
         }
         Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
     }
+    #[cfg(feature = "pjrt")]
     match rapid::runtime::RuntimeClient::cpu() {
         Ok(c) => println!("pjrt: {} ok", c.platform()),
         Err(e) => println!("pjrt: unavailable ({e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt: disabled at build time (enable the `pjrt` feature)");
     0
 }

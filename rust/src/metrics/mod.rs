@@ -4,4 +4,4 @@ pub mod recorder;
 pub mod summary;
 
 pub use recorder::EpisodeMetrics;
-pub use summary::{aggregate, PolicyRow};
+pub use summary::{aggregate, summarize_fleet, FleetSummary, PolicyRow};

@@ -34,6 +34,9 @@ pub struct EpisodeMetrics {
     pub discarded_actions: u64,
     pub retransmissions: u64,
     pub repartitions: u64,
+    /// Offloads the fleet scheduler refused under backpressure (the
+    /// session fell back to its edge slice); always 0 single-session.
+    pub deferred_offloads: u64,
 
     // --- loads (GB), time-averaged over the episode ---
     pub edge_gb: f64,
@@ -69,6 +72,7 @@ impl EpisodeMetrics {
             discarded_actions: 0,
             retransmissions: 0,
             repartitions: 0,
+            deferred_offloads: 0,
             edge_gb: 0.0,
             cloud_gb: 0.0,
             trig_tp: 0,

@@ -61,6 +61,37 @@ pub fn aggregate(policy: PolicyKind, eps: &[EpisodeMetrics]) -> PolicyRow {
     }
 }
 
+/// Fleet rollup: each session's own aggregate plus the fleet-wide
+/// aggregate over every episode of every session.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub sessions: usize,
+    pub episodes: usize,
+    pub per_session: Vec<PolicyRow>,
+    pub fleet: PolicyRow,
+    pub total_cloud_events: u64,
+    pub total_steps: u64,
+    pub total_deferred_offloads: u64,
+}
+
+/// Aggregate a fleet run: `per_session[i]` holds session i's episode
+/// metrics in completion order. Every session must have completed at
+/// least one episode.
+pub fn summarize_fleet(policy: PolicyKind, per_session: &[Vec<EpisodeMetrics>]) -> FleetSummary {
+    assert!(!per_session.is_empty(), "no sessions to summarize");
+    assert!(per_session.iter().all(|s| !s.is_empty()), "a session completed no episodes");
+    let all: Vec<EpisodeMetrics> = per_session.iter().flat_map(|s| s.iter().cloned()).collect();
+    FleetSummary {
+        sessions: per_session.len(),
+        episodes: all.len(),
+        per_session: per_session.iter().map(|s| aggregate(policy, s)).collect(),
+        fleet: aggregate(policy, &all),
+        total_cloud_events: all.iter().map(|m| m.cloud_events).sum(),
+        total_steps: all.iter().map(|m| m.steps as u64).sum(),
+        total_deferred_offloads: all.iter().map(|m| m.deferred_offloads).sum(),
+    }
+}
+
 impl PolicyRow {
     /// Paper-style row cells: Method | Cloud Lat | Cloud Load | Edge Lat |
     /// Edge Load | Total Lat ± std | Total Load.
@@ -125,5 +156,31 @@ mod tests {
     #[should_panic]
     fn empty_aggregation_panics() {
         aggregate(PolicyKind::Rapid, &[]);
+    }
+
+    #[test]
+    fn fleet_summary_rolls_up_sessions() {
+        let per_session = vec![
+            vec![ep(400.0, 800.0, 60.0, 4, 2), ep(600.0, 600.0, 0.0, 3, 3)],
+            vec![ep(500.0, 700.0, 30.0, 4, 2)],
+        ];
+        let s = summarize_fleet(PolicyKind::Rapid, &per_session);
+        assert_eq!(s.sessions, 2);
+        assert_eq!(s.episodes, 3);
+        assert_eq!(s.per_session.len(), 2);
+        assert_eq!(s.fleet.episodes, 3);
+        assert_eq!(s.total_cloud_events, 7);
+        assert_eq!(s.total_steps, 150);
+        // the fleet aggregate equals the flat aggregate over all episodes
+        let all: Vec<EpisodeMetrics> =
+            per_session.iter().flat_map(|v| v.iter().cloned()).collect();
+        let flat = aggregate(PolicyKind::Rapid, &all);
+        assert_eq!(s.fleet.total_lat_mean, flat.total_lat_mean);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fleet_summary_rejects_empty_session() {
+        summarize_fleet(PolicyKind::Rapid, &[vec![], vec![ep(1.0, 1.0, 0.0, 1, 1)]]);
     }
 }

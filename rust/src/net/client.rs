@@ -34,6 +34,38 @@ impl CloudClient {
         }
     }
 
+    /// Round-trip a *cross-session* batch: each item is (session id,
+    /// request); the response echoes the ids in request order. One wire
+    /// frame each way regardless of how many sessions are aboard.
+    pub fn infer_batch(
+        &mut self,
+        items: &[(u32, InferRequest)],
+    ) -> Result<Vec<(u32, ModelOut)>, ProtoError> {
+        let t0 = Instant::now();
+        proto::write_all(&mut self.stream, &proto::encode_batch_infer(items))?;
+        match proto::read_frame(&mut self.stream)? {
+            Frame::BatchResult(outs) => {
+                if outs.len() != items.len() {
+                    return Err(ProtoError::Malformed(format!(
+                        "batch result arity {} != {}",
+                        outs.len(),
+                        items.len()
+                    )));
+                }
+                for ((got, _), (want, _)) in outs.iter().zip(items.iter()) {
+                    if got != want {
+                        return Err(ProtoError::Malformed(format!(
+                            "batch result session {got} out of order (want {want})"
+                        )));
+                    }
+                }
+                self.rtts_us.push(t0.elapsed().as_micros() as u64);
+                Ok(outs)
+            }
+            other => Err(ProtoError::Malformed(format!("expected batch result, got {other:?}"))),
+        }
+    }
+
     /// Liveness probe; returns measured RTT.
     pub fn ping(&mut self) -> Result<Duration, ProtoError> {
         let t0 = Instant::now();
@@ -97,6 +129,38 @@ mod tests {
         assert!(out.mass.iter().all(|m| m.is_finite()));
         assert!(client.mean_rtt_us() > 0.0);
         server.shutdown();
+    }
+
+    #[test]
+    fn batch_rpc_matches_sequential_singles_and_preserves_sessions() {
+        // server A serves one cross-session batch; server B (identically
+        // seeded backend) serves the same requests one at a time — the
+        // pairwise-equal responses prove the batch path preserves request
+        // order and never mixes sessions
+        let a = CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(42))).unwrap();
+        let b = CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(42))).unwrap();
+        let mut ca = CloudClient::connect(&a.addr.to_string()).unwrap();
+        let mut cb = CloudClient::connect(&b.addr.to_string()).unwrap();
+        let items: Vec<(u32, InferRequest)> = (0..5u32)
+            .map(|i| {
+                let mut obs = [0f32; D_VIS];
+                obs[0] = 0.1 * i as f32 + 0.1;
+                obs[7] = 0.3;
+                (100 + i, InferRequest { instr: i, obs, proprio: [0.0; D_PROP] })
+            })
+            .collect();
+        let outs = ca.infer_batch(&items).unwrap();
+        assert_eq!(outs.len(), items.len());
+        for ((sid, out), (want_sid, req)) in outs.iter().zip(items.iter()) {
+            assert_eq!(sid, want_sid);
+            let solo = cb.infer(&req.obs, &req.proprio, req.instr as usize).unwrap();
+            assert_eq!(out.mass, solo.mass);
+            assert_eq!(out.actions, solo.actions);
+        }
+        assert_eq!(a.stats().batch_frames.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(a.stats().requests.load(std::sync::atomic::Ordering::Relaxed), 5);
+        a.shutdown();
+        b.shutdown();
     }
 
     #[test]

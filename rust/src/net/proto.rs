@@ -7,7 +7,14 @@
 //! response: [u32 len][u8 tag=2][f32 actions[8*7]][f32 logits[8*64]][f32 mass[8]]
 //! ping    : [u32 len][u8 tag=3]            -> pong [u32 len][u8 tag=4]
 //! shutdown: [u32 len][u8 tag=5]
+//! batch   : [u32 len][u8 tag=6][u16 n] n × ([u32 session][request body])
+//! batchres: [u32 len][u8 tag=7][u16 n] n × ([u32 session][response body])
 //! ```
+//!
+//! Batch frames carry *cross-session* coalesced cloud offloads: the fleet
+//! scheduler stamps every sub-request with its session id and the server
+//! echoes the ids back, so responses can never migrate between sessions
+//! even when many robots share one connection.
 
 use crate::vla::ModelOut;
 use crate::{CHUNK, D_PROP, D_VIS, N_JOINTS, VOCAB};
@@ -18,13 +25,40 @@ pub const TAG_RESULT: u8 = 2;
 pub const TAG_PING: u8 = 3;
 pub const TAG_PONG: u8 = 4;
 pub const TAG_SHUTDOWN: u8 = 5;
+pub const TAG_BATCH_INFER: u8 = 6;
+pub const TAG_BATCH_RESULT: u8 = 7;
 
-#[derive(Debug, thiserror::Error)]
+/// Hard cap on sub-requests per batch frame (well above any sane fleet).
+pub const MAX_BATCH_ITEMS: usize = 4096;
+
+#[derive(Debug)]
 pub enum ProtoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("malformed frame: {0}")]
+    Io(std::io::Error),
     Malformed(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+            ProtoError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ProtoError::Io(e) => Some(e),
+            ProtoError::Malformed(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        ProtoError::Io(e)
+    }
 }
 
 /// An inference request.
@@ -43,6 +77,10 @@ pub enum Frame {
     Ping,
     Pong,
     Shutdown,
+    /// Cross-session coalesced requests: (session id, request) pairs.
+    BatchInfer(Vec<(u32, InferRequest)>),
+    /// Per-session responses in request order: (session id, output) pairs.
+    BatchResult(Vec<(u32, ModelOut)>),
 }
 
 fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
@@ -62,26 +100,58 @@ fn get_f32s(b: &[u8], n: usize) -> Result<(Vec<f32>, &[u8]), ProtoError> {
     Ok((out, &b[4 * n..]))
 }
 
-pub fn encode_infer(req: &InferRequest) -> Vec<u8> {
-    let mut body = vec![TAG_INFER];
+fn put_infer_body(body: &mut Vec<u8>, req: &InferRequest) {
     body.extend_from_slice(&req.instr.to_le_bytes());
-    put_f32s(&mut body, &req.obs);
-    put_f32s(&mut body, &req.proprio);
-    frame(body)
+    put_f32s(body, &req.obs);
+    put_f32s(body, &req.proprio);
 }
 
-pub fn encode_result(out: &ModelOut) -> Vec<u8> {
-    let mut body = vec![TAG_RESULT];
+fn put_result_body(body: &mut Vec<u8>, out: &ModelOut) {
     for a in &out.actions {
         for j in 0..N_JOINTS {
             body.extend_from_slice(&(a[j] as f32).to_le_bytes());
         }
     }
     for row in &out.logits {
-        put_f32s(&mut body, row);
+        put_f32s(body, row);
     }
     for m in &out.mass {
         body.extend_from_slice(&(*m as f32).to_le_bytes());
+    }
+}
+
+pub fn encode_infer(req: &InferRequest) -> Vec<u8> {
+    let mut body = vec![TAG_INFER];
+    put_infer_body(&mut body, req);
+    frame(body)
+}
+
+pub fn encode_result(out: &ModelOut) -> Vec<u8> {
+    let mut body = vec![TAG_RESULT];
+    put_result_body(&mut body, out);
+    frame(body)
+}
+
+/// Encode a cross-session request batch; items are (session id, request).
+pub fn encode_batch_infer(items: &[(u32, InferRequest)]) -> Vec<u8> {
+    assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
+    let mut body = vec![TAG_BATCH_INFER];
+    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    for (session, req) in items {
+        body.extend_from_slice(&session.to_le_bytes());
+        put_infer_body(&mut body, req);
+    }
+    frame(body)
+}
+
+/// Encode a response batch; items are (session id, output) in request order.
+pub fn encode_batch_result(items: &[(u32, ModelOut)]) -> Vec<u8> {
+    assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
+    let mut body = vec![TAG_BATCH_RESULT];
+    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    for (session, out) in items {
+        body.extend_from_slice(&session.to_le_bytes());
+        put_result_body(&mut body, out);
     }
     frame(body)
 }
@@ -110,38 +180,89 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame, ProtoError> {
     decode(&body)
 }
 
+fn get_u32(b: &[u8]) -> Result<(u32, &[u8]), ProtoError> {
+    if b.len() < 4 {
+        return Err(ProtoError::Malformed("short u32".into()));
+    }
+    Ok((u32::from_le_bytes([b[0], b[1], b[2], b[3]]), &b[4..]))
+}
+
+fn get_infer_body(b: &[u8]) -> Result<(InferRequest, &[u8]), ProtoError> {
+    let (instr, rest) = get_u32(b)?;
+    let (obs_v, rest) = get_f32s(rest, D_VIS)?;
+    let (prop_v, rest) = get_f32s(rest, D_PROP)?;
+    let mut obs = [0f32; D_VIS];
+    obs.copy_from_slice(&obs_v);
+    let mut proprio = [0f32; D_PROP];
+    proprio.copy_from_slice(&prop_v);
+    Ok((InferRequest { instr, obs, proprio }, rest))
+}
+
+fn get_result_body(b: &[u8]) -> Result<(ModelOut, &[u8]), ProtoError> {
+    let (a, rest) = get_f32s(b, CHUNK * N_JOINTS)?;
+    let (l, rest) = get_f32s(rest, CHUNK * VOCAB)?;
+    let (m, rest) = get_f32s(rest, CHUNK)?;
+    Ok((ModelOut::from_flat(&a, &l, &m), rest))
+}
+
+fn get_batch_count(b: &[u8]) -> Result<(usize, &[u8]), ProtoError> {
+    if b.len() < 2 {
+        return Err(ProtoError::Malformed("short batch header".into()));
+    }
+    let n = u16::from_le_bytes([b[0], b[1]]) as usize;
+    if n == 0 || n > MAX_BATCH_ITEMS {
+        return Err(ProtoError::Malformed(format!("bad batch count {n}")));
+    }
+    Ok((n, &b[2..]))
+}
+
 pub fn decode(body: &[u8]) -> Result<Frame, ProtoError> {
     match body.first() {
         Some(&TAG_INFER) => {
-            let b = &body[1..];
-            if b.len() < 4 {
-                return Err(ProtoError::Malformed("short infer".into()));
-            }
-            let instr = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
-            let (obs_v, rest) = get_f32s(&b[4..], D_VIS)?;
-            let (prop_v, rest) = get_f32s(rest, D_PROP)?;
+            let (req, rest) = get_infer_body(&body[1..])?;
             if !rest.is_empty() {
                 return Err(ProtoError::Malformed("trailing bytes in infer".into()));
             }
-            let mut obs = [0f32; D_VIS];
-            obs.copy_from_slice(&obs_v);
-            let mut proprio = [0f32; D_PROP];
-            proprio.copy_from_slice(&prop_v);
-            Ok(Frame::Infer(InferRequest { instr, obs, proprio }))
+            Ok(Frame::Infer(req))
         }
         Some(&TAG_RESULT) => {
-            let b = &body[1..];
-            let (a, rest) = get_f32s(b, CHUNK * N_JOINTS)?;
-            let (l, rest) = get_f32s(rest, CHUNK * VOCAB)?;
-            let (m, rest) = get_f32s(rest, CHUNK)?;
+            let (out, rest) = get_result_body(&body[1..])?;
             if !rest.is_empty() {
                 return Err(ProtoError::Malformed("trailing bytes in result".into()));
             }
-            Ok(Frame::Result(ModelOut::from_flat(&a, &l, &m)))
+            Ok(Frame::Result(out))
         }
         Some(&TAG_PING) => Ok(Frame::Ping),
         Some(&TAG_PONG) => Ok(Frame::Pong),
         Some(&TAG_SHUTDOWN) => Ok(Frame::Shutdown),
+        Some(&TAG_BATCH_INFER) => {
+            let (n, mut rest) = get_batch_count(&body[1..])?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (session, r) = get_u32(rest)?;
+                let (req, r) = get_infer_body(r)?;
+                items.push((session, req));
+                rest = r;
+            }
+            if !rest.is_empty() {
+                return Err(ProtoError::Malformed("trailing bytes in batch infer".into()));
+            }
+            Ok(Frame::BatchInfer(items))
+        }
+        Some(&TAG_BATCH_RESULT) => {
+            let (n, mut rest) = get_batch_count(&body[1..])?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (session, r) = get_u32(rest)?;
+                let (out, r) = get_result_body(r)?;
+                items.push((session, out));
+                rest = r;
+            }
+            if !rest.is_empty() {
+                return Err(ProtoError::Malformed("trailing bytes in batch result".into()));
+            }
+            Ok(Frame::BatchResult(items))
+        }
         other => Err(ProtoError::Malformed(format!("unknown tag {other:?}"))),
     }
 }
@@ -200,6 +321,61 @@ mod tests {
     fn rejects_absurd_length() {
         let mut bytes = (64 * 1024 * 1024u32).to_le_bytes().to_vec();
         bytes.push(1);
+        let mut c = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn batch_infer_roundtrip_preserves_sessions_and_order() {
+        let items: Vec<(u32, InferRequest)> = (0..5)
+            .map(|i| {
+                let mut obs = [0f32; D_VIS];
+                obs[0] = i as f32 * 0.1;
+                (10 + i, InferRequest { instr: i, obs, proprio: [i as f32; D_PROP] })
+            })
+            .collect();
+        let bytes = encode_batch_infer(&items);
+        let mut c = std::io::Cursor::new(bytes);
+        match read_frame(&mut c).unwrap() {
+            Frame::BatchInfer(got) => {
+                assert_eq!(got.len(), items.len());
+                for ((sid, req), (esid, ereq)) in got.iter().zip(items.iter()) {
+                    assert_eq!(sid, esid);
+                    assert_eq!(req, ereq);
+                }
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_result_roundtrip() {
+        let mk = |v: f32| {
+            let a: Vec<f32> = (0..CHUNK * N_JOINTS).map(|i| v + i as f32 * 0.01).collect();
+            let l: Vec<f32> = (0..CHUNK * VOCAB).map(|i| (i % 5) as f32).collect();
+            let m: Vec<f32> = (0..CHUNK).map(|i| v + i as f32).collect();
+            ModelOut::from_flat(&a, &l, &m)
+        };
+        let items = vec![(3u32, mk(0.5)), (7u32, mk(2.0))];
+        let bytes = encode_batch_result(&items);
+        let mut c = std::io::Cursor::new(bytes);
+        match read_frame(&mut c).unwrap() {
+            Frame::BatchResult(got) => {
+                assert_eq!(got.len(), 2);
+                assert_eq!(got[0].0, 3);
+                assert_eq!(got[1].0, 7);
+                assert_eq!(got[0].1.mass, items[0].1.mass);
+                assert_eq!(got[1].1.mass, items[1].1.mass);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_zero_count_batch() {
+        let mut body = vec![TAG_BATCH_INFER, 0, 0];
+        let mut bytes = (body.len() as u32).to_le_bytes().to_vec();
+        bytes.append(&mut body);
         let mut c = std::io::Cursor::new(bytes);
         assert!(read_frame(&mut c).is_err());
     }

@@ -27,6 +27,8 @@ pub struct Pending {
 pub struct ServerStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Cross-session batch frames received from fleet schedulers.
+    pub batch_frames: AtomicU64,
     pub errors: AtomicU64,
 }
 
@@ -147,6 +149,40 @@ fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<Serv
                         }
                     }
                     Err(_) => break,
+                }
+            }
+            Ok(Frame::BatchInfer(items)) => {
+                // fan the sub-requests into the worker queue (they coalesce
+                // in its batcher), then collect replies in request order and
+                // echo the session ids so responses cannot cross sessions
+                stats.batch_frames.fetch_add(1, Ordering::Relaxed);
+                let mut waits = Vec::with_capacity(items.len());
+                let mut failed = false;
+                for (session, req) in items {
+                    let (rtx, rrx) = mpsc::channel();
+                    if tx.send(Pending { req, reply: rtx }).is_err() {
+                        failed = true;
+                        break;
+                    }
+                    waits.push((session, rrx));
+                }
+                if failed {
+                    break;
+                }
+                let mut outs = Vec::with_capacity(waits.len());
+                for (session, rrx) in waits {
+                    match rrx.recv() {
+                        Ok(out) => outs.push((session, out)),
+                        Err(_) => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                if failed
+                    || proto::write_all(&mut stream, &proto::encode_batch_result(&outs)).is_err()
+                {
+                    break;
                 }
             }
             Ok(Frame::Ping) => {

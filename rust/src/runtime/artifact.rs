@@ -5,16 +5,41 @@ use crate::config::json::parse_json;
 use crate::config::Value;
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("artifact dir not found: {0}")]
     Missing(PathBuf),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("meta.json: {0}")]
+    Io(std::io::Error),
     Meta(String),
-    #[error("weights size mismatch for {variant}: file has {file_params} f32, meta says {meta_params}")]
     WeightsSize { variant: String, file_params: usize, meta_params: usize },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Missing(p) => write!(f, "artifact dir not found: {}", p.display()),
+            ArtifactError::Io(e) => write!(f, "io: {e}"),
+            ArtifactError::Meta(m) => write!(f, "meta.json: {m}"),
+            ArtifactError::WeightsSize { variant, file_params, meta_params } => write!(
+                f,
+                "weights size mismatch for {variant}: file has {file_params} f32, meta says {meta_params}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
 }
 
 /// Per-variant artifact description.

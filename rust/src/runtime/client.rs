@@ -7,12 +7,34 @@ use super::artifact::{ArtifactMeta, VariantMeta};
 use super::executor::PolicyExecutable;
 use std::collections::HashMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error(transparent)]
-    Artifact(#[from] super::artifact::ArtifactError),
+    Artifact(super::artifact::ArtifactError),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(m) => write!(f, "xla: {m}"),
+            RuntimeError::Artifact(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Artifact(e) => Some(e),
+            RuntimeError::Xla(_) => None,
+        }
+    }
+}
+
+impl From<super::artifact::ArtifactError> for RuntimeError {
+    fn from(e: super::artifact::ArtifactError) -> Self {
+        RuntimeError::Artifact(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

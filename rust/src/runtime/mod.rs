@@ -3,11 +3,15 @@
 //! Python is never on this path — the artifacts are self-contained.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod device;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 
 pub use artifact::{ArtifactMeta, VariantMeta};
+#[cfg(feature = "pjrt")]
 pub use client::RuntimeClient;
 pub use device::DeviceClock;
+#[cfg(feature = "pjrt")]
 pub use executor::PolicyExecutable;

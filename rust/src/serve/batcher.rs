@@ -1,12 +1,18 @@
-//! Cloud-side request batcher: accumulates pending requests up to a batch
-//! bound, preserving FIFO order. The surrogate executes B=1 per call, so a
-//! batch is drained sequentially; batching still amortizes queue wake-ups
-//! and gives the server its backpressure boundary.
+//! Request batcher: accumulates pending requests up to a batch bound,
+//! preserving FIFO order. Generic over the request type so the same
+//! coalescing/accounting logic serves both sides of the wire:
+//!
+//! * the cloud server batches [`crate::net::server::Pending`] connection
+//!   requests in front of its model-owner thread, and
+//! * the fleet scheduler batches `fleet::FleetRequest`s from *different
+//!   robot sessions* into one cross-session wire frame.
+//!
+//! The surrogate executes B=1 per call, so a batch is drained
+//! sequentially; batching still amortizes queue wake-ups and wire frames,
+//! and gives both the server and the fleet their backpressure boundary.
 
-use crate::net::server::Pending;
-
-pub struct Batcher {
-    buf: Vec<Pending>,
+pub struct Batcher<T> {
+    buf: Vec<T>,
     max_batch: usize,
     /// Lifetime statistics.
     pub total_batches: u64,
@@ -14,12 +20,18 @@ pub struct Batcher {
     pub max_observed: usize,
 }
 
-impl Batcher {
+impl<T> Batcher<T> {
     pub fn new(max_batch: usize) -> Self {
-        Batcher { buf: Vec::new(), max_batch: max_batch.max(1), total_batches: 0, total_requests: 0, max_observed: 0 }
+        Batcher {
+            buf: Vec::new(),
+            max_batch: max_batch.max(1),
+            total_batches: 0,
+            total_requests: 0,
+            max_observed: 0,
+        }
     }
 
-    pub fn push(&mut self, p: Pending) {
+    pub fn push(&mut self, p: T) {
         self.buf.push(p);
     }
 
@@ -31,12 +43,23 @@ impl Batcher {
         self.buf.is_empty()
     }
 
+    /// The coalescing bound: `take()` should be called once `len()`
+    /// reaches this (the batcher itself never drops requests).
+    pub fn is_full(&self) -> bool {
+        self.buf.len() >= self.max_batch
+    }
+
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
 
+    /// Peek at the pending requests in FIFO order.
+    pub fn pending(&self) -> &[T] {
+        &self.buf
+    }
+
     /// Take the current batch (FIFO order preserved).
-    pub fn take(&mut self) -> Vec<Pending> {
+    pub fn take(&mut self) -> Vec<T> {
         self.total_batches += 1;
         self.total_requests += self.buf.len() as u64;
         self.max_observed = self.max_observed.max(self.buf.len());
@@ -57,6 +80,7 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::net::proto::InferRequest;
+    use crate::net::server::Pending;
     use std::sync::mpsc;
 
     fn pending(instr: u32) -> Pending {
@@ -94,7 +118,28 @@ mod tests {
 
     #[test]
     fn min_batch_is_one() {
-        let b = Batcher::new(0);
+        let b: Batcher<Pending> = Batcher::new(0);
         assert_eq!(b.max_batch(), 1);
+    }
+
+    #[test]
+    fn is_full_tracks_bound() {
+        let mut b = Batcher::new(2);
+        assert!(!b.is_full());
+        b.push(pending(0));
+        assert!(!b.is_full());
+        b.push(pending(1));
+        assert!(b.is_full());
+        b.take();
+        assert!(!b.is_full());
+    }
+
+    #[test]
+    fn generic_over_plain_values() {
+        let mut b: Batcher<u32> = Batcher::new(3);
+        b.push(7);
+        b.push(9);
+        assert_eq!(b.pending(), &[7, 9]);
+        assert_eq!(b.take(), vec![7, 9]);
     }
 }

@@ -7,6 +7,16 @@
 //! generations on the *real* AOT-compiled models, advance the virtual
 //! testbed clock per DESIGN.md §5, and step the simulator.
 //!
+//! The step machine is factored into a resumable [`EpisodeState`] so the
+//! fleet scheduler (`serve::fleet`) can *suspend* a session at the moment
+//! it needs the cloud — [`EpisodeState::poll`] returns
+//! [`StepEvent::NeedCloud`] with the prepared request, the scheduler
+//! coalesces requests from many sessions into one wire batch, and
+//! [`EpisodeState::complete_cloud`] resumes the step with the response.
+//! [`run_episode`] is the single-session driver: it services every
+//! `NeedCloud` immediately, which reproduces the classic synchronous loop
+//! operation for operation (same PRNG streams, same metrics).
+//!
 //! Backend selection rule: chunk content comes from the *cloud-grade*
 //! model whenever the generating slice holds the majority of parameters
 //! (Edge-Only runs the full 14.2 GB model locally — slow but full quality);
@@ -17,11 +27,12 @@ use crate::dispatcher::{ChunkQueue, ChunkSource};
 use crate::metrics::EpisodeMetrics;
 use crate::net::Link;
 use crate::policy::{DecisionCtx, Route, Strategy};
-use crate::robot::{RobotSim, TaskKind};
+use crate::robot::{RobotSim, SensorFrame, TaskKind};
 use crate::runtime::DeviceClock;
 use crate::scene::{NoiseModel, Renderer};
 use crate::util::timeline::Timeline;
-use crate::vla::{obs::proprio_vec, Backend};
+use crate::vla::{obs::proprio_vec, Backend, ModelOut};
+use crate::{D_PROP, D_VIS};
 use std::collections::VecDeque;
 
 /// Extra routing cost charged per retransmission (reassembly + re-route).
@@ -35,177 +46,329 @@ pub struct EpisodeOutput {
     pub trace: Option<Timeline>,
 }
 
-/// Run one episode. `edge`/`cloud` are the two model grades (see module
-/// docs for the selection rule).
-pub fn run_episode(
-    sys: &SystemConfig,
+/// A cloud offload prepared by [`EpisodeState::poll`]: everything the
+/// cloud model needs, ready to be coalesced into a cross-session batch.
+#[derive(Debug, Clone)]
+pub struct CloudRequest {
+    pub obs: [f32; D_VIS],
+    pub proprio: [f32; D_PROP],
+    pub instr: usize,
+}
+
+/// What happened when the session was polled.
+pub enum StepEvent {
+    /// One control step fully executed (cached action or edge refill).
+    Stepped,
+    /// The step is suspended awaiting a cloud response; deliver it via
+    /// [`EpisodeState::complete_cloud`].
+    NeedCloud(CloudRequest),
+    /// The episode is over; call [`EpisodeState::finish`].
+    Done,
+}
+
+/// Resumable per-session episode state. Drives exactly the same operation
+/// sequence as the historical monolithic loop; the only new degree of
+/// freedom is *when* the caller services a suspended cloud request.
+pub struct EpisodeState {
+    strategy: Box<dyn Strategy>,
+    sim: RobotSim,
+    renderer: Renderer,
+    clock: DeviceClock,
+    link: Link,
+    queue: ChunkQueue,
+    /// Side channels (entropy, mass) parallel to the action queue.
+    side: VecDeque<(f64, f64)>,
+    metrics: EpisodeMetrics,
+    trace: Option<Timeline>,
     task: TaskKind,
-    mut strategy: Box<dyn Strategy>,
-    edge: &mut dyn Backend,
-    cloud: &mut dyn Backend,
-    seed: u64,
-    want_trace: bool,
-) -> EpisodeOutput {
-    let kind = strategy.kind();
-    let mut sim = RobotSim::new(task, &sys.robot, seed);
-    let mut renderer = Renderer::new(NoiseModel::new(&sys.scene, seed ^ 0x9e37), seed ^ 0x517);
-    let mut clock = DeviceClock::new(&sys.devices, seed ^ 0xDC);
-    let mut link = Link::new(&sys.link, seed ^ 0x71);
-    let mut queue = ChunkQueue::new();
-    // side channels (entropy, mass) parallel to the action queue
-    let mut side: VecDeque<(f64, f64)> = VecDeque::new();
-    let mut metrics = EpisodeMetrics::new(task, kind);
-    let mut trace = if want_trace { Some(Timeline::new()) } else { None };
+    last_frame: SensorFrame,
+    edge_gb_accum: f64,
+    prev_repartitions: u64,
+    prev_tau: crate::robot::Jv,
+    /// Set between a `NeedCloud` return and its `complete_cloud` call.
+    awaiting: bool,
+}
 
-    let mut last_frame = crate::robot::SensorFrame {
-        step: 0,
-        q: sim.q(),
-        dq: crate::robot::Jv::ZERO,
-        tau: crate::robot::Jv::ZERO,
-    };
-    let mut edge_gb_accum = 0.0f64;
-    let mut prev_repartitions = 0u64;
-    let mut prev_tau = crate::robot::Jv::ZERO;
+impl EpisodeState {
+    pub fn new(
+        sys: &SystemConfig,
+        task: TaskKind,
+        strategy: Box<dyn Strategy>,
+        seed: u64,
+        want_trace: bool,
+    ) -> EpisodeState {
+        let kind = strategy.kind();
+        let sim = RobotSim::new(task, &sys.robot, seed);
+        let last_frame = SensorFrame {
+            step: 0,
+            q: sim.q(),
+            dq: crate::robot::Jv::ZERO,
+            tau: crate::robot::Jv::ZERO,
+        };
+        EpisodeState {
+            strategy,
+            renderer: Renderer::new(NoiseModel::new(&sys.scene, seed ^ 0x9e37), seed ^ 0x517),
+            clock: DeviceClock::new(&sys.devices, seed ^ 0xDC),
+            link: Link::new(&sys.link, seed ^ 0x71),
+            queue: ChunkQueue::new(),
+            side: VecDeque::new(),
+            metrics: EpisodeMetrics::new(task, kind),
+            trace: if want_trace { Some(Timeline::new()) } else { None },
+            task,
+            sim,
+            last_frame,
+            edge_gb_accum: 0.0,
+            prev_repartitions: 0,
+            prev_tau: crate::robot::Jv::ZERO,
+            awaiting: false,
+        }
+    }
 
-    while !sim.done() {
-        let t = sim.step_index();
-        strategy.observe(&last_frame);
+    /// True while a `NeedCloud` request is outstanding.
+    pub fn is_awaiting_cloud(&self) -> bool {
+        self.awaiting
+    }
+
+    /// True once every control step of the episode has executed.
+    pub fn is_done(&self) -> bool {
+        !self.awaiting && self.sim.done()
+    }
+
+    pub fn metrics(&self) -> &EpisodeMetrics {
+        &self.metrics
+    }
+
+    /// Advance the session by (at most) one control step.
+    ///
+    /// `admit_cloud` is the scheduler's backpressure gate: when false, a
+    /// step that wants a cloud offload is *deferred* — the trigger is
+    /// dropped for this step (its cooldown still arms, as a real dropped
+    /// dispatch would) and the session falls back to its cached chunk or
+    /// an edge refill. Single-session callers pass `true`.
+    pub fn poll(
+        &mut self,
+        sys: &SystemConfig,
+        edge: &mut dyn Backend,
+        cloud: &mut dyn Backend,
+        admit_cloud: bool,
+    ) -> StepEvent {
+        assert!(!self.awaiting, "poll() while awaiting a cloud response");
+        if self.sim.done() {
+            return StepEvent::Done;
+        }
+        let t = self.sim.step_index();
+        self.strategy.observe(&self.last_frame);
 
         // entropy of the action about to execute (vision baseline signal)
-        let next_entropy = side.front().map(|&(h, _)| h);
+        let next_entropy = self.side.front().map(|&(h, _)| h);
         let ctx = DecisionCtx {
             step: t,
-            queue_empty: queue.is_empty(),
-            entropy: if strategy.needs_entropy() { next_entropy } else { None },
+            queue_empty: self.queue.is_empty(),
+            entropy: if self.strategy.needs_entropy() { next_entropy } else { None },
         };
-        let route = strategy.decide(&ctx);
+        let route = self.strategy.decide(&ctx);
         // Invariant #1: an empty queue must force a refill.
-        let route = if queue.is_empty() && route == Route::Cached { Route::EdgeRefill } else { route };
+        let mut route =
+            if self.queue.is_empty() && route == Route::Cached { Route::EdgeRefill } else { route };
+        // Fleet backpressure: a disallowed offload degrades to the edge path.
+        if route == Route::CloudOffload && !admit_cloud {
+            self.metrics.deferred_offloads += 1;
+            route = if self.queue.is_empty() { Route::EdgeRefill } else { Route::Cached };
+        }
 
         match route {
             Route::Cached => {}
             Route::EdgeRefill | Route::CloudOffload => {
-                let obs = renderer.render(&sim);
-                let clarity = renderer.last_clarity;
-                let proprio = proprio_vec(&last_frame);
-                let instr = task.instr_id();
+                let obs = self.renderer.render(&self.sim);
+                let clarity = self.renderer.last_clarity;
+                let proprio = proprio_vec(&self.last_frame);
+                let instr = self.task.instr_id();
 
                 if route == Route::CloudOffload {
-                    if !queue.is_empty() {
-                        metrics.preemptions += 1;
-                        metrics.overhead_ms += clock.preempt();
+                    if !self.queue.is_empty() {
+                        self.metrics.preemptions += 1;
+                        self.metrics.overhead_ms += self.clock.preempt();
                     }
-                    let t_cap = clock.obs_capture();
+                    let t_cap = self.clock.obs_capture();
                     // split-computing baselines ship intermediate activations
                     // from the split point; RAPID ships the raw observation
-                    let payload = if strategy.needs_entropy() { sys.link.activation_bytes } else { sys.link.obs_bytes };
-                    let xfer = link.offload_roundtrip(payload, sys.link.chunk_bytes, clarity);
-                    clock.advance(xfer.ms);
-                    let t_compute = clock.cloud_compute();
-                    metrics.cloud_busy_ms += t_cap + xfer.ms + t_compute;
-                    metrics.cloud_events += 1;
-                    metrics.retransmissions += xfer.retransmissions as u64;
-                    metrics.overhead_ms += xfer.retransmissions as f64 * RETRANS_PENALTY_MS;
-                    strategy.on_offload(t);
-
-                    let t0 = std::time::Instant::now();
-                    let out = cloud.infer(&obs, &proprio, instr);
-                    metrics.measured_cloud_us += t0.elapsed().as_micros() as f64;
+                    let payload = if self.strategy.needs_entropy() {
+                        sys.link.activation_bytes
+                    } else {
+                        sys.link.obs_bytes
+                    };
+                    let xfer = self.link.offload_roundtrip(payload, sys.link.chunk_bytes, clarity);
+                    self.clock.advance(xfer.ms);
+                    let t_compute = self.clock.cloud_compute();
+                    self.metrics.cloud_busy_ms += t_cap + xfer.ms + t_compute;
+                    self.metrics.cloud_events += 1;
+                    self.metrics.retransmissions += xfer.retransmissions as u64;
+                    self.metrics.overhead_ms += xfer.retransmissions as f64 * RETRANS_PENALTY_MS;
+                    self.strategy.on_offload(t);
 
                     // ground truth: was this offload near a critical phase?
-                    let near_crit = (0..3).any(|d| sim.traj.phase_at(t + d).is_critical())
-                        || (t > 0 && sim.traj.phase_at(t - 1).is_critical());
+                    let near_crit = (0..3).any(|d| self.sim.traj.phase_at(t + d).is_critical())
+                        || (t > 0 && self.sim.traj.phase_at(t - 1).is_critical());
                     if near_crit {
-                        metrics.trig_tp += 1;
+                        self.metrics.trig_tp += 1;
                     } else {
-                        metrics.trig_fp += 1;
+                        self.metrics.trig_fp += 1;
                     }
 
-                    side.clear();
-                    for i in 0..out.actions.len() {
-                        side.push_back((out.entropy(i), out.mass[i]));
-                    }
-                    queue.overwrite(&out.actions, ChunkSource::Cloud, t);
-                    metrics.discarded_actions = queue.discarded;
+                    self.awaiting = true;
+                    return StepEvent::NeedCloud(CloudRequest { obs, proprio, instr });
+                }
+
+                // routine edge refill
+                let gb = self.strategy.edge_gb(sys);
+                let t_infer = self.clock.edge_infer(sys, gb);
+                self.metrics.edge_busy_ms += t_infer;
+                self.metrics.edge_events += 1;
+                if self.strategy.needs_entropy() {
+                    // vision preprocessing / distribution extraction
+                    self.metrics.overhead_ms += self.clock.vision_route();
+                }
+                let full_grade = gb >= 0.5 * sys.total_model_gb;
+                let t0 = std::time::Instant::now();
+                let out = if full_grade {
+                    cloud.infer(&obs, &proprio, instr)
                 } else {
-                    // routine edge refill
-                    let gb = strategy.edge_gb(sys);
-                    let t_infer = clock.edge_infer(sys, gb);
-                    metrics.edge_busy_ms += t_infer;
-                    metrics.edge_events += 1;
-                    if strategy.needs_entropy() {
-                        // vision preprocessing / distribution extraction
-                        metrics.overhead_ms += clock.vision_route();
-                    }
-                    let full_grade = gb >= 0.5 * sys.total_model_gb;
-                    let t0 = std::time::Instant::now();
-                    let out = if full_grade { cloud.infer(&obs, &proprio, instr) } else { edge.infer(&obs, &proprio, instr) };
-                    metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
-                    side.clear();
-                    for i in 0..out.actions.len() {
-                        side.push_back((out.entropy(i), out.mass[i]));
-                    }
-                    queue.overwrite(&out.actions, ChunkSource::Edge, t);
-                    metrics.discarded_actions = queue.discarded;
-                }
-
-                // split re-partitions (vision baseline): charge each change
-                let rp = strategy.repartitions();
-                if rp > prev_repartitions {
-                    metrics.overhead_ms += (rp - prev_repartitions) as f64 * REPARTITION_MS;
-                    metrics.repartitions += rp - prev_repartitions;
-                    prev_repartitions = rp;
-                }
+                    edge.infer(&obs, &proprio, instr)
+                };
+                self.metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
+                self.refill_queue(&out, ChunkSource::Edge, t);
+                self.charge_repartitions();
             }
         }
 
-        // Invariant #1 (hard): never dispatch from an empty queue.
-        let action = queue.pop().expect("queue must be non-empty after routing");
-        let (h, mass) = side.pop_front().unwrap_or((0.0, 0.0));
+        self.finish_step(sys, route);
+        StepEvent::Stepped
+    }
 
-        if let Some(tl) = trace.as_mut() {
+    /// Resume a step suspended by [`StepEvent::NeedCloud`] with the cloud
+    /// model's response. `measured_us` is the real wall-clock the caller
+    /// spent on the inference (per request when amortized over a batch).
+    pub fn complete_cloud(&mut self, sys: &SystemConfig, out: ModelOut, measured_us: f64) {
+        assert!(self.awaiting, "complete_cloud() without a pending request");
+        self.awaiting = false;
+        self.metrics.measured_cloud_us += measured_us;
+        let t = self.sim.step_index();
+        self.refill_queue(&out, ChunkSource::Cloud, t);
+        self.charge_repartitions();
+        self.finish_step(sys, Route::CloudOffload);
+    }
+
+    fn refill_queue(&mut self, out: &ModelOut, source: ChunkSource, t: usize) {
+        self.side.clear();
+        for i in 0..out.actions.len() {
+            self.side.push_back((out.entropy(i), out.mass[i]));
+        }
+        self.queue.overwrite(&out.actions, source, t);
+        self.metrics.discarded_actions = self.queue.discarded;
+    }
+
+    /// Split re-partitions (vision baseline): charge each change.
+    fn charge_repartitions(&mut self) {
+        let rp = self.strategy.repartitions();
+        if rp > self.prev_repartitions {
+            self.metrics.overhead_ms += (rp - self.prev_repartitions) as f64 * REPARTITION_MS;
+            self.metrics.repartitions += rp - self.prev_repartitions;
+            self.prev_repartitions = rp;
+        }
+    }
+
+    /// Common step tail: dispatch the next cached action, record the
+    /// trace, step the simulator and advance the virtual clock.
+    fn finish_step(&mut self, sys: &SystemConfig, route: Route) {
+        let t = self.sim.step_index();
+        // Invariant #1 (hard): never dispatch from an empty queue.
+        let action = self.queue.pop().expect("queue must be non-empty after routing");
+        let (h, mass) = self.side.pop_front().unwrap_or((0.0, 0.0));
+
+        if let Some(tl) = self.trace.as_mut() {
             let ts = t as u64;
             tl.record("entropy", ts, h);
             tl.record("mass", ts, mass);
-            tl.record("clarity", ts, renderer.last_clarity);
+            tl.record("clarity", ts, self.renderer.last_clarity);
             tl.record("offload", ts, if route == Route::CloudOffload { 1.0 } else { 0.0 });
             tl.record("refill", ts, if route == Route::EdgeRefill { 1.0 } else { 0.0 });
-            tl.record("critical", ts, if sim.traj.phase_at(t).is_critical() { 1.0 } else { 0.0 });
+            tl.record("critical", ts, if self.sim.traj.phase_at(t).is_critical() { 1.0 } else { 0.0 });
             tl.record(
                 "phase",
                 ts,
-                match sim.traj.phase_at(t) {
+                match self.sim.traj.phase_at(t) {
                     crate::robot::Phase::Approach => 0.0,
                     crate::robot::Phase::Interact => 1.0,
                     crate::robot::Phase::Retract => 2.0,
                 },
             );
-            tl.record("saliency", ts, sim.traj.saliency_at(t));
-            tl.record("velocity", ts, last_frame.dq.norm());
-            tl.record("tau_norm", ts, last_frame.tau.norm());
+            tl.record("saliency", ts, self.sim.traj.saliency_at(t));
+            tl.record("velocity", ts, self.last_frame.dq.norm());
+            tl.record("tau_norm", ts, self.last_frame.tau.norm());
             // Eq. 5's signal: wrist-weighted torque variation |W_τ Δτ|
-            tl.record("dtau_w", ts, (last_frame.tau - prev_tau).weighted_norm(&sys.dispatcher.w_torque));
+            tl.record(
+                "dtau_w",
+                ts,
+                (self.last_frame.tau - self.prev_tau).weighted_norm(&sys.dispatcher.w_torque),
+            );
         }
-        prev_tau = last_frame.tau;
+        self.prev_tau = self.last_frame.tau;
 
-        if sim.traj.phase_at(t).is_critical() {
-            metrics.crit_steps += 1;
+        if self.sim.traj.phase_at(t).is_critical() {
+            self.metrics.crit_steps += 1;
         }
-        edge_gb_accum += strategy.edge_gb(sys);
+        self.edge_gb_accum += self.strategy.edge_gb(sys);
 
-        last_frame = sim.apply(action);
-        clock.advance(sys.robot.dt * 1e3);
-        metrics.steps += 1;
+        self.last_frame = self.sim.apply(action);
+        self.clock.advance(sys.robot.dt * 1e3);
+        self.metrics.steps += 1;
     }
 
-    metrics.edge_gb = edge_gb_accum / metrics.steps.max(1) as f64;
-    metrics.cloud_gb = sys.cloud_gb(metrics.edge_gb);
-    metrics.rms_error = sim.rms_error();
-    metrics.success = sim.success();
-    // measured dispatcher CPU time (RAPID strategies report it; 0 otherwise)
-    metrics.dispatcher_cpu_ns = strategy.decision_ns();
+    /// Fill the episode-final accounting fields and return a snapshot of
+    /// the metrics. Idempotent; the fleet scheduler uses this to harvest a
+    /// finished episode without consuming the slot.
+    pub fn seal_metrics(&mut self, sys: &SystemConfig) -> EpisodeMetrics {
+        assert!(!self.awaiting, "seal_metrics() while awaiting a cloud response");
+        self.metrics.edge_gb = self.edge_gb_accum / self.metrics.steps.max(1) as f64;
+        self.metrics.cloud_gb = sys.cloud_gb(self.metrics.edge_gb);
+        self.metrics.rms_error = self.sim.rms_error();
+        self.metrics.success = self.sim.success();
+        // measured dispatcher CPU time (RAPID strategies report it; 0 otherwise)
+        self.metrics.dispatcher_cpu_ns = self.strategy.decision_ns();
+        self.metrics.clone()
+    }
 
-    EpisodeOutput { metrics, trace }
+    /// Seal the episode accounting and return the output.
+    pub fn finish(mut self, sys: &SystemConfig) -> EpisodeOutput {
+        let metrics = self.seal_metrics(sys);
+        EpisodeOutput { metrics, trace: self.trace }
+    }
+}
+
+/// Run one episode synchronously. `edge`/`cloud` are the two model grades
+/// (see module docs for the selection rule).
+pub fn run_episode(
+    sys: &SystemConfig,
+    task: TaskKind,
+    strategy: Box<dyn Strategy>,
+    edge: &mut dyn Backend,
+    cloud: &mut dyn Backend,
+    seed: u64,
+    want_trace: bool,
+) -> EpisodeOutput {
+    let mut state = EpisodeState::new(sys, task, strategy, seed, want_trace);
+    loop {
+        match state.poll(sys, edge, cloud, true) {
+            StepEvent::Stepped => {}
+            StepEvent::Done => break,
+            StepEvent::NeedCloud(req) => {
+                let t0 = std::time::Instant::now();
+                let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                state.complete_cloud(sys, out, t0.elapsed().as_micros() as f64);
+            }
+        }
+    }
+    state.finish(sys)
 }
 
 #[cfg(test)]
@@ -305,5 +468,55 @@ mod tests {
         let mut cloud = AnalyticBackend::cloud(2);
         let out = run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 2, true);
         assert!(out.metrics.trigger_precision() > 0.5, "precision {}", out.metrics.trigger_precision());
+    }
+
+    #[test]
+    fn deferred_offload_degrades_to_edge_and_completes() {
+        // admit_cloud = false everywhere: even CloudOnly must fall back to
+        // the edge path and still serve every control step
+        let sys = SystemConfig::default();
+        let strategy = crate::policy::build(PolicyKind::CloudOnly, &sys);
+        let mut edge = AnalyticBackend::edge(8);
+        let mut cloud = AnalyticBackend::cloud(8);
+        let mut st = EpisodeState::new(&sys, TaskKind::PickPlace, strategy, 8, false);
+        loop {
+            match st.poll(&sys, &mut edge, &mut cloud, false) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(_) => panic!("offload admitted despite backpressure"),
+            }
+        }
+        let out = st.finish(&sys);
+        assert_eq!(out.metrics.steps, TaskKind::PickPlace.seq_len());
+        assert_eq!(out.metrics.cloud_events, 0);
+        assert!(out.metrics.deferred_offloads > 0);
+        assert!(out.metrics.edge_events > 0);
+    }
+
+    #[test]
+    fn suspended_step_resumes_identically() {
+        // driving poll/complete_cloud by hand must equal run_episode exactly
+        let sys = SystemConfig::default();
+        let solo = run(PolicyKind::Rapid, TaskKind::PegInsert, 21);
+
+        let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
+        let mut edge = AnalyticBackend::edge(21);
+        let mut cloud = AnalyticBackend::cloud(21);
+        let mut st = EpisodeState::new(&sys, TaskKind::PegInsert, strategy, 21, false);
+        loop {
+            match st.poll(&sys, &mut edge, &mut cloud, true) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(req) => {
+                    let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                    st.complete_cloud(&sys, out, 0.0);
+                }
+            }
+        }
+        let manual = st.finish(&sys).metrics;
+        assert_eq!(manual.latency_columns(), solo.latency_columns());
+        assert_eq!(manual.cloud_events, solo.cloud_events);
+        assert_eq!(manual.edge_events, solo.edge_events);
+        assert_eq!(manual.rms_error, solo.rms_error);
     }
 }

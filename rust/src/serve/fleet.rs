@@ -1,0 +1,427 @@
+//! Fleet-scale serving: a deterministic multi-session episode scheduler
+//! with **cross-session cloud batching**.
+//!
+//! The scheduler drives N concurrent robot sessions — each with its own
+//! partitioning strategy (its own `RapidDispatcher` state), simulator,
+//! renderer, link model and virtual clock — in lockstep *rounds*: every
+//! active session advances one control step per round. A session whose
+//! step needs the cloud suspends ([`StepEvent::NeedCloud`]) and its
+//! prepared request lands in a shared [`Batcher`]; the scheduler coalesces
+//! offloads from *different* sessions into one wire batch, dispatches the
+//! batch to a cloud endpoint picked by the least-loaded [`Router`], and
+//! splits the responses back per session by session id.
+//!
+//! Flush policy (in priority order):
+//! 1. **full** — the batch reached `fleet.max_batch`;
+//! 2. **drain** — no session can advance (everyone alive is suspended), so
+//!    waiting longer cannot grow the batch;
+//! 3. **deadline** — the oldest pending request has waited
+//!    `fleet.batch_deadline_us` of virtual control time.
+//!
+//! Backpressure: a session whose offload would push the in-flight count
+//! past `fleet.max_inflight` has the dispatch *deferred* — it falls back
+//! to its cached chunk / edge slice for that step (the per-session chunk
+//! queue keeps the robot fed; see `EpisodeState::poll`).
+//!
+//! Everything is driven by seeded PRNGs and a fixed session order, so a
+//! fleet run is exactly reproducible — and, because every session owns its
+//! model backends and PRNG streams, a fleet session's episode metrics are
+//! *identical* to a single-session `run_episode` of the same seed.
+
+use super::batcher::Batcher;
+use super::driver::{CloudRequest, EpisodeState, StepEvent};
+use super::router::Router;
+use crate::config::{FleetConfig, PolicyKind, SystemConfig};
+use crate::metrics::{summarize_fleet, EpisodeMetrics, FleetSummary};
+use crate::net::proto::InferRequest;
+use crate::net::CloudClient;
+use crate::robot::TaskKind;
+use crate::vla::{AnalyticBackend, Backend};
+use std::time::Instant;
+
+/// Stable per-(session, episode) seed derivation. Session 0 / episode 0
+/// reproduces the base seed, so fleet session 0 equals the corresponding
+/// single-session run byte for byte.
+pub fn fleet_seed(base: u64, session: usize, episode: usize) -> u64 {
+    base ^ (session as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((episode as u64) << 20)
+}
+
+/// One suspended cloud offload, stamped with its session of origin.
+pub struct FleetRequest {
+    pub session: usize,
+    pub req: CloudRequest,
+}
+
+/// Where coalesced batches execute.
+pub enum CloudMode {
+    /// In-process: each request runs on its own session's cloud-grade
+    /// backend (the deterministic testbed; used by tests and sweeps).
+    Local,
+    /// Over TCP: batch frames to one or more `net::CloudServer` endpoints
+    /// (the real deployment path of `examples/serve_cluster.rs`).
+    Remote(Vec<CloudClient>),
+}
+
+/// Scheduler-level statistics for one fleet run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetStats {
+    pub rounds: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Batches containing requests from more than one session.
+    pub multi_session_batches: u64,
+    pub max_batch_observed: usize,
+    /// High-water mark of simultaneously in-flight cloud requests.
+    pub max_inflight_observed: usize,
+    /// Offloads refused by backpressure (sessions fell back to the edge).
+    pub deferred_offloads: u64,
+    pub full_flushes: u64,
+    pub deadline_flushes: u64,
+    pub drain_flushes: u64,
+}
+
+/// Per-session outcome: every episode's metrics, in order.
+pub struct SessionReport {
+    pub session: usize,
+    /// Seed of the session's first episode (see [`fleet_seed`]).
+    pub seed0: u64,
+    pub episodes: Vec<EpisodeMetrics>,
+}
+
+pub struct FleetResult {
+    pub policy: PolicyKind,
+    pub task: TaskKind,
+    pub sessions: Vec<SessionReport>,
+    pub stats: FleetStats,
+    /// Batches dispatched per cloud endpoint (router spread).
+    pub endpoint_dispatches: Vec<u64>,
+    pub mean_batch: f64,
+}
+
+impl FleetResult {
+    /// Per-session + fleet-aggregate metric rollup.
+    pub fn summary(&self) -> FleetSummary {
+        let per: Vec<Vec<EpisodeMetrics>> =
+            self.sessions.iter().map(|s| s.episodes.clone()).collect();
+        summarize_fleet(self.policy, &per)
+    }
+
+    pub fn total_cloud_events(&self) -> u64 {
+        self.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.cloud_events).sum()
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.steps as u64).sum()
+    }
+}
+
+enum FlushCause {
+    Full,
+    Deadline,
+    Drain,
+}
+
+struct SessionSlot {
+    state: EpisodeState,
+    edge: Box<dyn Backend>,
+    cloud: Box<dyn Backend>,
+    episode_idx: usize,
+    completed: Vec<EpisodeMetrics>,
+    finished: bool,
+}
+
+/// The multi-session scheduler. Build with [`Fleet::local`] /
+/// [`Fleet::remote`], then [`Fleet::run`].
+pub struct Fleet {
+    sys: SystemConfig,
+    cfg: FleetConfig,
+    task: TaskKind,
+    kind: PolicyKind,
+    base_seed: u64,
+    slots: Vec<SessionSlot>,
+    batcher: Batcher<FleetRequest>,
+    router: Router,
+    mode: CloudMode,
+    stats: FleetStats,
+    /// Scheduler rounds the oldest pending request has waited.
+    pending_age: u64,
+    /// `batch_deadline_us` converted to whole scheduler rounds.
+    deadline_rounds: u64,
+}
+
+impl Fleet {
+    /// Fleet over in-process per-session backends (deterministic testbed).
+    pub fn local(sys: &SystemConfig, task: TaskKind, kind: PolicyKind) -> Fleet {
+        Fleet::build(sys, task, kind, CloudMode::Local)
+    }
+
+    /// Fleet whose cloud batches go over TCP to real endpoints.
+    pub fn remote(
+        sys: &SystemConfig,
+        task: TaskKind,
+        kind: PolicyKind,
+        clients: Vec<CloudClient>,
+    ) -> Fleet {
+        assert!(!clients.is_empty(), "remote fleet needs at least one endpoint");
+        Fleet::build(sys, task, kind, CloudMode::Remote(clients))
+    }
+
+    fn build(sys: &SystemConfig, task: TaskKind, kind: PolicyKind, mode: CloudMode) -> Fleet {
+        let cfg = sys.fleet.clone();
+        let base_seed = sys.episode.seed;
+        let endpoints = match &mode {
+            CloudMode::Local => cfg.endpoints.max(1),
+            CloudMode::Remote(clients) => clients.len(),
+        };
+        // at least one session: an empty fleet has no meaningful result
+        // (and summaries reject it), so clamp here for every entry point
+        let slots = (0..cfg.n_sessions.max(1))
+            .map(|i| {
+                let seed = fleet_seed(base_seed, i, 0);
+                SessionSlot {
+                    state: EpisodeState::new(sys, task, crate::policy::build(kind, sys), seed, false),
+                    edge: Box::new(AnalyticBackend::edge(seed)),
+                    cloud: Box::new(AnalyticBackend::cloud(seed)),
+                    episode_idx: 0,
+                    completed: Vec::new(),
+                    finished: false,
+                }
+            })
+            .collect();
+        // round duration in µs of virtual control time
+        let round_us = (sys.robot.dt * 1e6).max(1.0);
+        Fleet {
+            sys: sys.clone(),
+            task,
+            kind,
+            base_seed,
+            slots,
+            batcher: Batcher::new(cfg.max_batch),
+            router: Router::new(endpoints),
+            mode,
+            stats: FleetStats::default(),
+            pending_age: 0,
+            deadline_rounds: (cfg.batch_deadline_us as f64 / round_us).ceil() as u64,
+            cfg,
+        }
+    }
+
+    /// Episodes each session will run.
+    fn episodes_per_session(&self) -> usize {
+        self.cfg.episodes_per_session.max(1)
+    }
+
+    /// Seal the just-finished episode of slot `i`; start its next episode
+    /// if any remain. Returns true when a fresh episode started.
+    fn advance_episode(&mut self, i: usize) -> bool {
+        let metrics = self.slots[i].state.seal_metrics(&self.sys);
+        self.stats.deferred_offloads += metrics.deferred_offloads;
+        self.slots[i].completed.push(metrics);
+        let next = self.slots[i].episode_idx + 1;
+        if next >= self.episodes_per_session() {
+            self.slots[i].finished = true;
+            return false;
+        }
+        let seed = fleet_seed(self.base_seed, i, next);
+        let strategy = crate::policy::build(self.kind, &self.sys);
+        let state = EpisodeState::new(&self.sys, self.task, strategy, seed, false);
+        let slot = &mut self.slots[i];
+        slot.episode_idx = next;
+        slot.state = state;
+        slot.edge = Box::new(AnalyticBackend::edge(seed));
+        slot.cloud = Box::new(AnalyticBackend::cloud(seed));
+        true
+    }
+
+    /// Run every session to completion; consumes the scheduler.
+    pub fn run(mut self) -> FleetResult {
+        loop {
+            self.stats.rounds += 1;
+            let mut progressed = false;
+            for i in 0..self.slots.len() {
+                if self.slots[i].finished || self.slots[i].state.is_awaiting_cloud() {
+                    continue;
+                }
+                if self.slots[i].state.is_done() && !self.advance_episode(i) {
+                    continue;
+                }
+                let admit = self.batcher.len() < self.cfg.max_inflight.max(1);
+                let slot = &mut self.slots[i];
+                let ev = slot.state.poll(&self.sys, slot.edge.as_mut(), slot.cloud.as_mut(), admit);
+                match ev {
+                    StepEvent::Stepped => progressed = true,
+                    StepEvent::Done => {}
+                    StepEvent::NeedCloud(req) => {
+                        progressed = true;
+                        self.batcher.push(FleetRequest { session: i, req });
+                        self.stats.max_inflight_observed =
+                            self.stats.max_inflight_observed.max(self.batcher.len());
+                        if self.batcher.is_full() {
+                            self.flush(FlushCause::Full);
+                        }
+                    }
+                }
+            }
+            if self.batcher.is_empty() {
+                if self.slots.iter().all(|s| s.finished) {
+                    break;
+                }
+            } else {
+                self.pending_age += 1;
+                if !progressed {
+                    // everyone alive is suspended: waiting cannot grow the batch
+                    self.flush(FlushCause::Drain);
+                } else if self.pending_age > self.deadline_rounds {
+                    self.flush(FlushCause::Deadline);
+                }
+            }
+        }
+
+        let mean_batch = self.batcher.mean_batch();
+        let endpoint_dispatches = self.router.totals().to_vec();
+        let stats = self.stats;
+        let sessions = self
+            .slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| SessionReport {
+                session: i,
+                seed0: fleet_seed(self.base_seed, i, 0),
+                episodes: s.completed,
+            })
+            .collect();
+        FleetResult {
+            policy: self.kind,
+            task: self.task,
+            sessions,
+            stats,
+            endpoint_dispatches,
+            mean_batch,
+        }
+    }
+
+    /// Dispatch the pending batch to an endpoint and resume its sessions.
+    fn flush(&mut self, cause: FlushCause) {
+        if self.batcher.is_empty() {
+            return;
+        }
+        let batch = self.batcher.take();
+        self.pending_age = 0;
+
+        let mut ids: Vec<usize> = batch.iter().map(|r| r.session).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        self.stats.batches += 1;
+        self.stats.batched_requests += batch.len() as u64;
+        self.stats.max_batch_observed = self.stats.max_batch_observed.max(batch.len());
+        if ids.len() > 1 {
+            self.stats.multi_session_batches += 1;
+        }
+        match cause {
+            FlushCause::Full => self.stats.full_flushes += 1,
+            FlushCause::Deadline => self.stats.deadline_flushes += 1,
+            FlushCause::Drain => self.stats.drain_flushes += 1,
+        }
+
+        let endpoint = self.router.pick();
+        match &mut self.mode {
+            CloudMode::Local => {
+                // per-session cloud backends: responses cannot cross
+                // sessions by construction, and each session's model PRNG
+                // stream matches its single-session run exactly
+                for fr in &batch {
+                    let t0 = Instant::now();
+                    let slot = &mut self.slots[fr.session];
+                    let out = slot.cloud.infer(&fr.req.obs, &fr.req.proprio, fr.req.instr);
+                    let us = t0.elapsed().as_micros() as f64;
+                    slot.state.complete_cloud(&self.sys, out, us);
+                }
+            }
+            CloudMode::Remote(clients) => {
+                let items: Vec<(u32, InferRequest)> = batch
+                    .iter()
+                    .map(|fr| {
+                        (
+                            fr.session as u32,
+                            InferRequest {
+                                instr: fr.req.instr as u32,
+                                obs: fr.req.obs,
+                                proprio: fr.req.proprio,
+                            },
+                        )
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                let outs = clients[endpoint].infer_batch(&items).expect("cloud batch RPC failed");
+                let per_us = t0.elapsed().as_micros() as f64 / items.len().max(1) as f64;
+                // responses are routed back strictly by the echoed session id
+                for (sid, out) in outs {
+                    self.slots[sid as usize].state.complete_cloud(&self.sys, out, per_us);
+                }
+            }
+        }
+        self.router.complete(endpoint);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys_with(n: usize, max_batch: usize, max_inflight: usize) -> SystemConfig {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = n;
+        sys.fleet.max_batch = max_batch;
+        sys.fleet.max_inflight = max_inflight;
+        sys
+    }
+
+    #[test]
+    fn fleet_seed_anchors_session_zero() {
+        assert_eq!(fleet_seed(7, 0, 0), 7);
+        assert_ne!(fleet_seed(7, 1, 0), fleet_seed(7, 2, 0));
+        assert_ne!(fleet_seed(7, 1, 0), fleet_seed(7, 1, 1));
+    }
+
+    #[test]
+    fn small_local_fleet_completes() {
+        let sys = sys_with(3, 4, 16);
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        assert_eq!(res.sessions.len(), 3);
+        for s in &res.sessions {
+            assert_eq!(s.episodes.len(), 1);
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        }
+        assert!(res.stats.rounds >= TaskKind::PickPlace.seq_len() as u64);
+    }
+
+    #[test]
+    fn multi_episode_sessions_roll_over() {
+        let mut sys = sys_with(2, 4, 16);
+        sys.fleet.episodes_per_session = 3;
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+        for s in &res.sessions {
+            assert_eq!(s.episodes.len(), 3);
+            for m in &s.episodes {
+                assert_eq!(m.steps, TaskKind::PickPlace.seq_len());
+            }
+        }
+        // edge-only never offloads: no batches at all
+        assert_eq!(res.stats.batches, 0);
+        assert_eq!(res.total_cloud_events(), 0);
+    }
+
+    #[test]
+    fn cloud_only_lockstep_coalesces_across_sessions() {
+        let sys = sys_with(6, 4, 16);
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        // every session offloads at the same rounds (steps 0, 8, 16, ...):
+        // the batcher must see cross-session company
+        assert!(res.stats.multi_session_batches > 0, "{:?}", res.stats);
+        assert!(res.stats.max_batch_observed >= 2);
+        assert!(res.stats.max_batch_observed <= 4);
+        let per_session = (TaskKind::PickPlace.seq_len() + crate::CHUNK - 1) / crate::CHUNK;
+        assert_eq!(res.total_cloud_events(), (6 * per_session) as u64);
+        assert_eq!(res.stats.batched_requests, (6 * per_session) as u64);
+    }
+}

@@ -1,14 +1,19 @@
-//! Serving layer: the episode driver (closed control loop over sim +
-//! renderer + strategy + models + link + virtual clock), the multi-episode
-//! session runner, and the cloud-side batcher/router.
+//! Serving layer: the resumable episode driver (closed control loop over
+//! sim + renderer + strategy + models + link + virtual clock), the
+//! multi-episode session runner, the cloud-side batcher/router, and the
+//! fleet scheduler that multiplexes N robot sessions over a shared cloud
+//! path with cross-session request batching.
 
 pub mod batcher;
 pub mod driver;
+pub mod fleet;
 pub mod router;
 pub mod sensorloop;
 pub mod session;
 
 pub use batcher::Batcher;
-pub use driver::{run_episode, EpisodeOutput};
+pub use driver::{run_episode, CloudRequest, EpisodeOutput, EpisodeState, StepEvent};
+pub use fleet::{fleet_seed, CloudMode, Fleet, FleetResult, FleetStats};
+pub use router::Router;
 pub use sensorloop::{SensorLoop, TriggerFlag};
 pub use session::{run_suite, SuiteResult};

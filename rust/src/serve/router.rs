@@ -6,6 +6,7 @@
 #[derive(Debug, Clone)]
 pub struct Router {
     outstanding: Vec<u64>,
+    totals: Vec<u64>,
     rr: usize,
     pub dispatched: u64,
 }
@@ -13,7 +14,7 @@ pub struct Router {
 impl Router {
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
-        Router { outstanding: vec![0; workers], rr: 0, dispatched: 0 }
+        Router { outstanding: vec![0; workers], totals: vec![0; workers], rr: 0, dispatched: 0 }
     }
 
     pub fn workers(&self) -> usize {
@@ -36,8 +37,14 @@ impl Router {
         }
         self.rr = (chosen + 1) % n;
         self.outstanding[chosen] += 1;
+        self.totals[chosen] += 1;
         self.dispatched += 1;
         chosen
+    }
+
+    /// Lifetime dispatches per worker (fleet endpoint-spread reporting).
+    pub fn totals(&self) -> &[u64] {
+        &self.totals
     }
 
     /// Mark a request complete on a worker.
@@ -71,6 +78,8 @@ mod tests {
         for w in 0..3 {
             assert_eq!(picks.iter().filter(|&&p| p == w).count(), 2);
         }
+        assert_eq!(r.totals(), &[2, 2, 2]);
+        assert_eq!(r.dispatched, 6);
     }
 
     #[test]

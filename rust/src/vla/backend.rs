@@ -24,17 +24,20 @@ pub trait Backend {
     }
 }
 
-/// PJRT-backed inference (the production path).
+/// PJRT-backed inference (the production path; `pjrt` feature).
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     pub exe: crate::runtime::PolicyExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(exe: crate::runtime::PolicyExecutable) -> Self {
         PjrtBackend { exe }
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Backend for PjrtBackend {
     fn name(&self) -> &str {
         &self.exe.variant

@@ -7,6 +7,8 @@ pub mod chunk;
 pub mod entropy;
 pub mod obs;
 
-pub use backend::{AnalyticBackend, Backend, PjrtBackend};
+pub use backend::{AnalyticBackend, Backend};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
 pub use chunk::ModelOut;
 pub use entropy::shannon_entropy;

@@ -1,0 +1,229 @@
+//! Deterministic integration tests for the fleet scheduler: N concurrent
+//! sessions over a shared, batched cloud path.
+//!
+//! The load-bearing properties:
+//! * a seeded fleet run is exactly reproducible,
+//! * cross-session batches never mix responses between sessions (proven
+//!   by per-session equality with single-session runs of the same seed),
+//! * backpressure caps in-flight cloud requests at the configured bound,
+//! * coalescing emits genuinely multi-session wire batches.
+
+use rapid::config::{PolicyKind, SystemConfig};
+use rapid::metrics::EpisodeMetrics;
+use rapid::net::{CloudClient, CloudServer};
+use rapid::robot::TaskKind;
+use rapid::serve::{fleet_seed, run_episode, Fleet};
+use rapid::vla::AnalyticBackend;
+use std::sync::atomic::Ordering;
+
+fn fleet_sys(n: usize, max_batch: usize, max_inflight: usize, deadline_us: u64) -> SystemConfig {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = n;
+    sys.fleet.max_batch = max_batch;
+    sys.fleet.max_inflight = max_inflight;
+    sys.fleet.batch_deadline_us = deadline_us;
+    sys
+}
+
+fn assert_metrics_eq(a: &EpisodeMetrics, b: &EpisodeMetrics, tag: &str) {
+    assert_eq!(a.steps, b.steps, "{tag}: steps");
+    assert_eq!(a.cloud_events, b.cloud_events, "{tag}: cloud_events");
+    assert_eq!(a.edge_events, b.edge_events, "{tag}: edge_events");
+    assert_eq!(a.preemptions, b.preemptions, "{tag}: preemptions");
+    assert_eq!(a.retransmissions, b.retransmissions, "{tag}: retransmissions");
+    assert_eq!(a.discarded_actions, b.discarded_actions, "{tag}: discarded_actions");
+    assert_eq!(a.latency_columns(), b.latency_columns(), "{tag}: latency columns");
+    assert_eq!(a.rms_error, b.rms_error, "{tag}: rms_error");
+    assert_eq!(a.success, b.success, "{tag}: success");
+    assert_eq!(a.edge_gb, b.edge_gb, "{tag}: edge_gb");
+}
+
+#[test]
+fn fleet_of_8_completes_and_is_deterministic() {
+    let sys = fleet_sys(8, 4, 16, 0);
+    let a = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    let b = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+
+    assert_eq!(a.sessions.len(), 8);
+    for s in &a.sessions {
+        assert_eq!(s.episodes.len(), 1, "session {}", s.session);
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len(), "session {}", s.session);
+    }
+    // exact replay: scheduler stats and every per-session metric
+    assert_eq!(a.stats.rounds, b.stats.rounds);
+    assert_eq!(a.stats.batches, b.stats.batches);
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests);
+    assert_eq!(a.stats.multi_session_batches, b.stats.multi_session_batches);
+    assert_eq!(a.stats.max_inflight_observed, b.stats.max_inflight_observed);
+    assert_eq!(a.endpoint_dispatches, b.endpoint_dispatches);
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_metrics_eq(ma, mb, &format!("replay session {}", sa.session));
+        }
+    }
+}
+
+#[test]
+fn fleet_sessions_match_single_session_runs_exactly() {
+    // Cross-session batches must never leak state between sessions: every
+    // fleet session, batched or not, must equal the single-session run of
+    // its seed operation for operation.
+    let sys = fleet_sys(8, 4, 16, 0);
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert!(res.stats.batches > 0, "fleet never used the cloud path");
+
+    for s in &res.sessions {
+        let seed = fleet_seed(sys.episode.seed, s.session, 0);
+        assert_eq!(seed, s.seed0);
+        let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
+        let mut edge = AnalyticBackend::edge(seed);
+        let mut cloud = AnalyticBackend::cloud(seed);
+        let solo =
+            run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, seed, false)
+                .metrics;
+        assert_metrics_eq(&s.episodes[0], &solo, &format!("session {}", s.session));
+    }
+}
+
+#[test]
+fn held_partial_batches_coalesce_across_sessions() {
+    // With a long batch deadline, partial batches wait for company: RAPID
+    // offloads from different sessions (different steps, even) land in one
+    // wire batch — and holding a session suspended must not perturb its
+    // virtual-time metrics.
+    let sys = fleet_sys(8, 8, 16, 10_000_000);
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+
+    let total_offloads: u64 = res.total_cloud_events();
+    assert!(total_offloads >= 2, "too few offloads to coalesce: {total_offloads}");
+    assert!(
+        res.stats.multi_session_batches >= 1,
+        "no multi-session batch despite held flushes: {:?}",
+        res.stats
+    );
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        let seed = fleet_seed(sys.episode.seed, s.session, 0);
+        let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
+        let mut edge = AnalyticBackend::edge(seed);
+        let mut cloud = AnalyticBackend::cloud(seed);
+        let solo =
+            run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, seed, false)
+                .metrics;
+        assert_metrics_eq(&s.episodes[0], &solo, &format!("held session {}", s.session));
+    }
+}
+
+#[test]
+fn cloud_only_fleet_guarantees_multi_session_batches() {
+    // CloudOnly sessions refill in lockstep (steps 0, 8, 16, ...), so the
+    // scheduler structurally produces full cross-session batches: 8
+    // requests per refill round, split into two batches of max_batch = 4.
+    let sys = fleet_sys(8, 4, 16, 0);
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+
+    let refill_rounds = (TaskKind::PickPlace.seq_len() + rapid::CHUNK - 1) / rapid::CHUNK; // 7
+    let expect_batches = (refill_rounds * 2) as u64;
+    assert_eq!(res.stats.batches, expect_batches);
+    assert_eq!(res.stats.multi_session_batches, expect_batches);
+    assert_eq!(res.stats.full_flushes, expect_batches);
+    assert_eq!(res.stats.deadline_flushes, 0);
+    assert_eq!(res.stats.drain_flushes, 0);
+    assert_eq!(res.stats.max_batch_observed, 4);
+    assert_eq!(res.stats.batched_requests, (8 * refill_rounds) as u64);
+    assert_eq!(res.total_cloud_events(), (8 * refill_rounds) as u64);
+    assert!((res.mean_batch - 4.0).abs() < 1e-12);
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        assert_eq!(s.episodes[0].cloud_events, refill_rounds as u64);
+    }
+}
+
+#[test]
+fn backpressure_caps_inflight_at_bound() {
+    // max_inflight = 2 over 8 simultaneous CloudOnly sessions: only the
+    // first two offloads per refill round are admitted, the rest defer to
+    // their (empty) edge slice — and the robot never starves.
+    let sys = fleet_sys(8, 8, 2, 0);
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+
+    let refill_rounds = (TaskKind::PickPlace.seq_len() + rapid::CHUNK - 1) / rapid::CHUNK; // 7
+    assert!(res.stats.max_inflight_observed <= 2, "{:?}", res.stats);
+    assert_eq!(res.total_cloud_events(), (2 * refill_rounds) as u64);
+    assert_eq!(res.stats.deferred_offloads, (6 * refill_rounds) as u64);
+    for s in &res.sessions {
+        let m = &s.episodes[0];
+        assert_eq!(m.steps, TaskKind::PickPlace.seq_len(), "session {}", s.session);
+        // fixed poll order: sessions 0 and 1 always win admission
+        if s.session < 2 {
+            assert_eq!(m.cloud_events, refill_rounds as u64, "session {}", s.session);
+            assert_eq!(m.deferred_offloads, 0, "session {}", s.session);
+        } else {
+            assert_eq!(m.cloud_events, 0, "session {}", s.session);
+            assert_eq!(m.deferred_offloads, refill_rounds as u64, "session {}", s.session);
+            assert_eq!(m.edge_events, refill_rounds as u64, "session {}", s.session);
+        }
+    }
+}
+
+#[test]
+fn multi_episode_fleet_matches_solo_per_episode() {
+    let mut sys = fleet_sys(3, 4, 16, 0);
+    sys.fleet.episodes_per_session = 2;
+    let res = Fleet::local(&sys, TaskKind::DrawerOpen, PolicyKind::Rapid).run();
+    for s in &res.sessions {
+        assert_eq!(s.episodes.len(), 2);
+        for (ep, m) in s.episodes.iter().enumerate() {
+            let seed = fleet_seed(sys.episode.seed, s.session, ep);
+            let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
+            let mut edge = AnalyticBackend::edge(seed);
+            let mut cloud = AnalyticBackend::cloud(seed);
+            let solo =
+                run_episode(&sys, TaskKind::DrawerOpen, strategy, &mut edge, &mut cloud, seed, false)
+                    .metrics;
+            assert_metrics_eq(m, &solo, &format!("session {} episode {ep}", s.session));
+        }
+    }
+}
+
+#[test]
+fn remote_fleet_batches_over_real_tcp() {
+    // The same scheduler, transport swapped for real TCP: coalesced wire
+    // frames hit two CloudServer endpoints; the router spreads batches.
+    let servers: Vec<CloudServer> = (0..2)
+        .map(|i| {
+            CloudServer::start("127.0.0.1:0", 4, move || {
+                Box::new(AnalyticBackend::cloud(100 + i as u64))
+            })
+            .unwrap()
+        })
+        .collect();
+    let clients: Vec<CloudClient> =
+        servers.iter().map(|s| CloudClient::connect(&s.addr.to_string()).unwrap()).collect();
+
+    let sys = fleet_sys(4, 4, 16, 0);
+    let res = Fleet::remote(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, clients).run();
+
+    let refill_rounds = (TaskKind::PickPlace.seq_len() + rapid::CHUNK - 1) / rapid::CHUNK; // 7
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        assert_eq!(s.episodes[0].cloud_events, refill_rounds as u64);
+    }
+    assert_eq!(res.stats.batches, refill_rounds as u64);
+    assert_eq!(res.stats.multi_session_batches, refill_rounds as u64);
+    assert_eq!(res.stats.batched_requests, (4 * refill_rounds) as u64);
+
+    // router spread: every batch went to exactly one endpoint, both used
+    assert_eq!(res.endpoint_dispatches.iter().sum::<u64>(), refill_rounds as u64);
+    assert!(res.endpoint_dispatches.iter().all(|&d| d > 0), "{:?}", res.endpoint_dispatches);
+
+    let frames: u64 =
+        servers.iter().map(|s| s.stats().batch_frames.load(Ordering::Relaxed)).sum();
+    let requests: u64 = servers.iter().map(|s| s.stats().requests.load(Ordering::Relaxed)).sum();
+    assert_eq!(frames, refill_rounds as u64);
+    assert_eq!(requests, (4 * refill_rounds) as u64);
+
+    for s in servers {
+        s.shutdown();
+    }
+}

@@ -1,0 +1,63 @@
+//! Golden-output regression tests for the paper-table generators: a fixed
+//! seed must render the exact same table cells forever.
+//!
+//! Snapshots live in `rust/tests/golden/`. On first run (or with
+//! `GOLDEN_UPDATE=1`) a test writes its snapshot and passes with a notice
+//! — commit the generated files. Afterwards any drift in the rendered
+//! cells fails the test, so the generators behind the paper's Tables I/II
+//! cannot silently change.
+
+use rapid::config::SystemConfig;
+use rapid::experiments::{tab1, tab2, Backends};
+use std::fs;
+use std::path::Path;
+
+const GOLDEN_DIR: &str = "rust/tests/golden";
+const GOLDEN_SEED: u64 = 1234;
+
+fn check_golden(name: &str, rendered: &str) {
+    let path = format!("{GOLDEN_DIR}/{name}.txt");
+    let update = std::env::var_os("GOLDEN_UPDATE").is_some();
+    if update || !Path::new(&path).exists() {
+        fs::create_dir_all(GOLDEN_DIR).unwrap_or_else(|e| panic!("mkdir {GOLDEN_DIR}: {e}"));
+        fs::write(&path, rendered).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        eprintln!("golden: wrote snapshot {path} — commit this file");
+        return;
+    }
+    let want = fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    assert_eq!(
+        rendered, want,
+        "{name}: rendered table drifted from the golden snapshot; \
+         rerun with GOLDEN_UPDATE=1 only if the change is intentional"
+    );
+}
+
+fn render_tab1() -> String {
+    let sys = SystemConfig::default();
+    let mut b = Backends::analytic(GOLDEN_SEED);
+    tab1::run(&sys, &mut b, 2).0.render()
+}
+
+fn render_tab2() -> String {
+    let sys = SystemConfig::default();
+    let mut b = Backends::analytic(GOLDEN_SEED);
+    tab2::run(&sys, &mut b, 2).0.render()
+}
+
+#[test]
+fn tab1_fixed_seed_renders_exact_cells() {
+    let first = render_tab1();
+    let second = render_tab1();
+    assert_eq!(first, second, "tab1 generator is nondeterministic under a fixed seed");
+    assert!(first.contains("TABLE I"), "unexpected header:\n{first}");
+    check_golden("tab1", &first);
+}
+
+#[test]
+fn tab2_fixed_seed_renders_exact_cells() {
+    let first = render_tab2();
+    let second = render_tab2();
+    assert_eq!(first, second, "tab2 generator is nondeterministic under a fixed seed");
+    assert!(first.contains("TABLE II"), "unexpected header:\n{first}");
+    check_golden("tab2", &first);
+}

@@ -217,6 +217,114 @@ fn prop_episodes_deterministic() {
     });
 }
 
+/// Invariant #9: the fused trigger is monotone in both anomaly inputs —
+/// raising either normalized score never lowers the importance and never
+/// un-triggers a trigger (for any phase velocity / thresholds / fusion
+/// mode).
+#[test]
+fn prop_fusion_monotone_in_anomaly_inputs() {
+    seeded_forall!("fusion_monotone", 300, |rng: &mut Pcg32| {
+        let mut cfg = DispatcherConfig::default();
+        cfg.theta_comp = rng.range(0.05, 1.5);
+        cfg.theta_red = rng.range(0.05, 1.5);
+        cfg.z_gate = rng.range(0.5, 4.0);
+        cfg.static_fusion = rng.chance(0.3);
+        let v = rng.range(0.0, 3.0);
+        let a = rng.range(0.0, 6.0);
+        let t = rng.range(0.0, 6.0);
+        let da = rng.range(0.0, 3.0);
+        let dt = rng.range(0.0, 3.0);
+        let base = fusion::evaluate(a, t, v, &cfg);
+        let more = fusion::evaluate(a + da, t + dt, v, &cfg);
+        if more.importance + 1e-12 < base.importance {
+            return Err(format!(
+                "importance decreased: {} -> {} (a={a}+{da}, t={t}+{dt}, v={v})",
+                base.importance, more.importance
+            ));
+        }
+        if base.triggered && !more.triggered {
+            return Err(format!("trigger lost raising inputs: a={a}+{da} t={t}+{dt} v={v}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #10: the chunk queue never exceeds its capacity (one chunk)
+/// and its traffic statistics stay consistent under arbitrary
+/// overwrite/pop sequences.
+#[test]
+fn prop_chunk_queue_bounded_by_capacity() {
+    use rapid::dispatcher::{ChunkQueue, ChunkSource};
+    seeded_forall!("queue_capacity", 200, |rng: &mut Pcg32| {
+        let mut q = ChunkQueue::new();
+        let mut popped = 0u64;
+        let mut overwrites = 0u64;
+        for step in 0..200 {
+            if rng.chance(0.3) {
+                let n = 1 + rng.below(rapid::CHUNK as u32) as usize;
+                let actions: Vec<Jv> =
+                    (0..n).map(|_| Jv::splat(rng.range(-1.0, 1.0))).collect();
+                let src = if rng.chance(0.5) { ChunkSource::Edge } else { ChunkSource::Cloud };
+                q.overwrite(&actions, src, step);
+                overwrites += 1;
+            } else if q.pop().is_some() {
+                popped += 1;
+            }
+            if q.len() > q.capacity() {
+                return Err(format!("len {} > capacity {}", q.len(), q.capacity()));
+            }
+        }
+        let s = q.stats();
+        if s.popped != popped {
+            return Err(format!("stats.popped {} != {}", s.popped, popped));
+        }
+        if s.overwrites != overwrites {
+            return Err(format!("stats.overwrites {} != {}", s.overwrites, overwrites));
+        }
+        if s.max_len > q.capacity() {
+            return Err(format!("stats.max_len {} > capacity", s.max_len));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #11: fleet runs are exactly reproducible for arbitrary fleet
+/// shapes (sessions × batch bound × backpressure × deadline × policy).
+#[test]
+fn prop_fleet_runs_deterministic() {
+    seeded_forall!("fleet_determinism", 4, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = rng.next_u64();
+        sys.fleet.n_sessions = 2 + rng.below(3) as usize;
+        sys.fleet.max_batch = 1 + rng.below(4) as usize;
+        sys.fleet.max_inflight = 1 + rng.below(6) as usize;
+        sys.fleet.batch_deadline_us = rng.below(4) as u64 * 100_000;
+        let kinds = [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::EdgeOnly];
+        let kind = kinds[rng.below(3) as usize];
+        let run = || rapid::serve::Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let a = run();
+        let b = run();
+        if a.stats.rounds != b.stats.rounds
+            || a.stats.batches != b.stats.batches
+            || a.stats.batched_requests != b.stats.batched_requests
+            || a.stats.deferred_offloads != b.stats.deferred_offloads
+        {
+            return Err(format!("scheduler stats differ: {:?} vs {:?}", a.stats, b.stats));
+        }
+        for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+            for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+                if ma.latency_columns() != mb.latency_columns()
+                    || ma.cloud_events != mb.cloud_events
+                    || ma.rms_error != mb.rms_error
+                {
+                    return Err(format!("session {} episodes differ", sa.session));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Cooldown unit property: ready exactly after `limit` ticks.
 #[test]
 fn prop_cooldown_exact() {

@@ -341,6 +341,101 @@ impl Default for FleetConfig {
     }
 }
 
+/// Deterministic fault-injection schedule (`faults::FaultPlan` is built
+/// from this section; see `rust/src/faults/`). All windows are half-open
+/// `[start, end)` ranges of scheduler rounds; an empty window (start >=
+/// end) disables that fault. With `enabled = false` the whole section is
+/// inert and the serve layer is bit-identical to a fault-free build.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    pub enabled: bool,
+    /// Seed of the drop-decision stream; 0 derives from the episode seed.
+    pub seed: u64,
+    /// Virtual time the edge waits for a reply before failing over (ms).
+    pub offload_timeout_ms: f64,
+    /// Re-dispatches on surviving endpoints before degrading to the edge.
+    pub max_retries: usize,
+    /// Endpoint crash/recover window.
+    pub crash_endpoint: usize,
+    pub crash_start: u64,
+    pub crash_end: u64,
+    /// Bandwidth/RTT collapse window and the degraded values.
+    pub degrade_start: u64,
+    pub degrade_end: u64,
+    pub degrade_bw_mbps: f64,
+    pub degrade_rtt_ms: f64,
+    /// Full uplink outage window (no offload can leave the edge).
+    pub outage_start: u64,
+    pub outage_end: u64,
+    /// Reply-drop window and per-dispatch drop probability.
+    pub drop_prob: f64,
+    pub drop_start: u64,
+    pub drop_end: u64,
+    /// Reply-delay window and the extra latency (ms); a delay beyond
+    /// `offload_timeout_ms` is treated as a drop.
+    pub delay_ms: f64,
+    pub delay_start: u64,
+    pub delay_end: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            enabled: false,
+            seed: 0,
+            offload_timeout_ms: 250.0,
+            max_retries: 2,
+            crash_endpoint: 0,
+            crash_start: 0,
+            crash_end: 0,
+            degrade_start: 0,
+            degrade_end: 0,
+            degrade_bw_mbps: 50.0,
+            degrade_rtt_ms: 80.0,
+            outage_start: 0,
+            outage_end: 0,
+            drop_prob: 0.0,
+            drop_start: 0,
+            drop_end: 0,
+            delay_ms: 0.0,
+            delay_start: 0,
+            delay_end: 0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// The representative chaos schedule `rapid chaos` falls back to when
+    /// `configs/chaos.toml` is absent (every value explicit so the two
+    /// cannot drift silently; `rapid chaos` prints which one it ran, and
+    /// pairs this with the same 6-session / 3-endpoint fleet shape): a
+    /// mid-run endpoint crash, a bandwidth/RTT collapse, a short full
+    /// outage, seeded reply drops and a sub-timeout reply delay.
+    pub fn demo() -> FaultsConfig {
+        FaultsConfig {
+            enabled: true,
+            seed: 99,
+            offload_timeout_ms: 250.0,
+            max_retries: 2,
+            crash_endpoint: 0,
+            crash_start: 8,
+            crash_end: 40,
+            degrade_start: 16,
+            degrade_end: 44,
+            degrade_bw_mbps: 50.0,
+            degrade_rtt_ms: 80.0,
+            outage_start: 30,
+            outage_end: 34,
+            drop_prob: 0.3,
+            drop_start: 24,
+            drop_end: 48,
+            delay_ms: 60.0,
+            delay_start: 12,
+            delay_end: 20,
+        }
+    }
+}
+
 /// Episode / workload parameters.
 #[derive(Debug, Clone)]
 pub struct EpisodeConfig {
@@ -379,6 +474,7 @@ pub struct SystemConfig {
     pub dispatcher: DispatcherConfig,
     pub vision: VisionPolicyConfig,
     pub fleet: FleetConfig,
+    pub faults: FaultsConfig,
     pub episode: EpisodeConfig,
 }
 
@@ -398,6 +494,7 @@ impl Default for SystemConfig {
             dispatcher: DispatcherConfig::default(),
             vision: VisionPolicyConfig::default(),
             fleet: FleetConfig::default(),
+            faults: FaultsConfig::default(),
             episode: EpisodeConfig::default(),
         }
     }
@@ -471,6 +568,27 @@ impl SystemConfig {
         self.fleet.endpoints = v.usize_or("fleet.endpoints", self.fleet.endpoints);
         self.fleet.episodes_per_session =
             v.usize_or("fleet.episodes_per_session", self.fleet.episodes_per_session);
+
+        let f = &mut self.faults;
+        f.enabled = v.bool_or("faults.enabled", f.enabled);
+        f.seed = v.usize_or("faults.seed", f.seed as usize) as u64;
+        f.offload_timeout_ms = v.f64_or("faults.offload_timeout_ms", f.offload_timeout_ms);
+        f.max_retries = v.usize_or("faults.max_retries", f.max_retries);
+        f.crash_endpoint = v.usize_or("faults.crash_endpoint", f.crash_endpoint);
+        f.crash_start = v.usize_or("faults.crash_start", f.crash_start as usize) as u64;
+        f.crash_end = v.usize_or("faults.crash_end", f.crash_end as usize) as u64;
+        f.degrade_start = v.usize_or("faults.degrade_start", f.degrade_start as usize) as u64;
+        f.degrade_end = v.usize_or("faults.degrade_end", f.degrade_end as usize) as u64;
+        f.degrade_bw_mbps = v.f64_or("faults.degrade_bw_mbps", f.degrade_bw_mbps);
+        f.degrade_rtt_ms = v.f64_or("faults.degrade_rtt_ms", f.degrade_rtt_ms);
+        f.outage_start = v.usize_or("faults.outage_start", f.outage_start as usize) as u64;
+        f.outage_end = v.usize_or("faults.outage_end", f.outage_end as usize) as u64;
+        f.drop_prob = v.f64_or("faults.drop_prob", f.drop_prob);
+        f.drop_start = v.usize_or("faults.drop_start", f.drop_start as usize) as u64;
+        f.drop_end = v.usize_or("faults.drop_end", f.drop_end as usize) as u64;
+        f.delay_ms = v.f64_or("faults.delay_ms", f.delay_ms);
+        f.delay_start = v.usize_or("faults.delay_start", f.delay_start as usize) as u64;
+        f.delay_end = v.usize_or("faults.delay_end", f.delay_end as usize) as u64;
 
         self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
@@ -555,6 +673,41 @@ mod tests {
         assert_eq!(c.fleet.endpoints, 3);
         // untouched fleet keys keep defaults
         assert_eq!(c.fleet.max_inflight, 16);
+    }
+
+    #[test]
+    fn faults_defaults_inert_and_overlay() {
+        let c = SystemConfig::default();
+        assert!(!c.faults.enabled);
+        assert_eq!(c.faults.offload_timeout_ms, 250.0);
+        assert_eq!(c.faults.max_retries, 2);
+        assert_eq!(c.faults.crash_end, 0);
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[faults]\nenabled = true\nseed = 99\ncrash_endpoint = 1\ncrash_start = 8\n\
+             crash_end = 40\ndrop_prob = 0.3\ndrop_start = 24\ndrop_end = 48\n\
+             degrade_start = 16\ndegrade_end = 44\ndegrade_bw_mbps = 50.0",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.seed, 99);
+        assert_eq!(c.faults.crash_endpoint, 1);
+        assert_eq!((c.faults.crash_start, c.faults.crash_end), (8, 40));
+        assert_eq!(c.faults.drop_prob, 0.3);
+        assert_eq!(c.faults.degrade_bw_mbps, 50.0);
+        // untouched keys keep defaults
+        assert_eq!(c.faults.offload_timeout_ms, 250.0);
+        assert_eq!(c.faults.outage_end, 0);
+    }
+
+    #[test]
+    fn faults_demo_schedule_is_enabled_and_windowed() {
+        let f = FaultsConfig::demo();
+        assert!(f.enabled);
+        assert!(f.crash_end > f.crash_start);
+        assert!(f.drop_prob > 0.0 && f.drop_end > f.drop_start);
+        assert!(f.delay_ms < f.offload_timeout_ms, "demo delay must stay sub-timeout");
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Degraded-network experiment: fleet runs of RAPID vs the static
+//! Edge-Only / Cloud-Only partitionings under a deterministic fault
+//! schedule (`[faults]` / `configs/chaos.toml`), side by side with the
+//! same fleet under clean conditions.
+//!
+//! The point the table makes: Cloud-Only pays for every lost reply with a
+//! full offload timeout + edge re-serve, Edge-Only is immune but slow
+//! everywhere, and RAPID only exposes its (rare, critical-phase) offloads
+//! to the chaos — the paper's partitioning argument extended from noisy
+//! scenes to hostile networks.
+
+use crate::config::{PolicyKind, SystemConfig};
+use crate::robot::TaskKind;
+use crate::serve::Fleet;
+use crate::util::tablefmt::{ms, pct, Table};
+
+/// Policies compared by the degraded-network table.
+pub const POLICIES: [PolicyKind; 3] =
+    [PolicyKind::Rapid, PolicyKind::EdgeOnly, PolicyKind::CloudOnly];
+
+pub struct DegradedRow {
+    pub policy: PolicyKind,
+    /// Fleet-aggregate total latency under clean conditions.
+    pub clean_lat: f64,
+    /// The same fleet under the fault schedule.
+    pub chaos_lat: f64,
+    pub success: f64,
+    pub cloud_events: u64,
+    /// Per-episode failovers summed over the fleet (lost replies re-served
+    /// from the edge slice).
+    pub failovers: u64,
+    /// Scheduler-level: requests degraded after exhausting every endpoint.
+    pub degraded: u64,
+    pub dropped_replies: u64,
+    pub deferred: u64,
+    /// Every episode of every session ran to completion (the no-wedge
+    /// guarantee).
+    pub completed: bool,
+}
+
+/// Run the comparison. `sys` carries the fault schedule in `sys.faults`
+/// (the clean arm runs the identical fleet with faults disabled).
+pub fn run(sys: &SystemConfig, task: TaskKind) -> (Table, Vec<DegradedRow>) {
+    let mut clean_sys = sys.clone();
+    clean_sys.faults.enabled = false;
+    let mut rows = Vec::new();
+    for kind in POLICIES {
+        let clean = Fleet::local(&clean_sys, task, kind).run();
+        let chaos = Fleet::local(sys, task, kind).run();
+        let summary = chaos.summary();
+        let failovers: u64 = chaos
+            .sessions
+            .iter()
+            .flat_map(|s| s.episodes.iter())
+            .map(|m| m.failovers)
+            .sum();
+        let expect = task.seq_len();
+        let completed = chaos
+            .sessions
+            .iter()
+            .all(|s| s.episodes.iter().all(|m| m.steps == expect));
+        rows.push(DegradedRow {
+            policy: kind,
+            clean_lat: clean.summary().fleet.total_lat_mean,
+            chaos_lat: summary.fleet.total_lat_mean,
+            success: summary.fleet.success_rate,
+            cloud_events: summary.total_cloud_events,
+            failovers,
+            degraded: chaos.stats.degraded_requests,
+            dropped_replies: chaos.stats.dropped_replies,
+            deferred: chaos.stats.deferred_offloads,
+            completed,
+        });
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Degraded-network fleet ({} × {} session(s), faults: {})",
+            task.name(),
+            sys.fleet.n_sessions.max(1),
+            if sys.faults.enabled { "on" } else { "off" }
+        ),
+        &["Method", "Clean Lat.", "Chaos Lat.", "Success", "Cloud Ev.", "Failovers", "Degraded", "Dropped", "Deferred"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.policy.name().to_string(),
+            ms(r.clean_lat),
+            ms(r.chaos_lat),
+            pct(r.success),
+            r.cloud_events.to_string(),
+            r.failovers.to_string(),
+            r.degraded.to_string(),
+            r.dropped_replies.to_string(),
+            r.deferred.to_string(),
+        ]);
+    }
+    t.footnote(
+        "Failovers = lost replies re-served from the edge slice after the offload timeout; \
+         Degraded = requests that exhausted every endpoint; Deferred = offloads refused \
+         under backpressure/outage. Every policy completes every episode (no wedged sessions).",
+    );
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultsConfig;
+
+    #[test]
+    fn all_policies_complete_under_total_reply_loss() {
+        // the harshest schedule: single endpoint, every reply dropped, no
+        // retries — Cloud-Only must fail over on every offload and still
+        // finish every episode
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 3;
+        sys.faults = FaultsConfig {
+            enabled: true,
+            seed: 5,
+            drop_prob: 1.0,
+            drop_start: 0,
+            drop_end: u64::MAX,
+            max_retries: 0,
+            ..FaultsConfig::default()
+        };
+        let (_, rows) = run(&sys, TaskKind::PickPlace);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.completed, "{:?} wedged", r.policy);
+        }
+        let by = |k: PolicyKind| rows.iter().find(|r| r.policy == k).unwrap();
+        // Edge-Only never offloads: chaos cannot touch it
+        assert_eq!(by(PolicyKind::EdgeOnly).failovers, 0);
+        assert_eq!(by(PolicyKind::EdgeOnly).dropped_replies, 0);
+        // Cloud-Only loses every reply and pays the timeout each time
+        let cloud = by(PolicyKind::CloudOnly);
+        assert!(cloud.failovers > 0, "failovers {}", cloud.failovers);
+        assert!(cloud.degraded > 0);
+        assert!(cloud.chaos_lat > cloud.clean_lat, "chaos must cost Cloud-Only latency");
+        // RAPID offloads too (rarely) and records its failovers
+        assert!(by(PolicyKind::Rapid).failovers > 0);
+    }
+
+    #[test]
+    fn clean_arm_matches_a_faultless_run() {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 2;
+        sys.faults = FaultsConfig::demo();
+        let (_, rows) = run(&sys, TaskKind::PickPlace);
+        let mut plain = sys.clone();
+        plain.faults.enabled = false;
+        let base = Fleet::local(&plain, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        let rapid = rows.iter().find(|r| r.policy == PolicyKind::Rapid).unwrap();
+        assert_eq!(rapid.clean_lat, base.summary().fleet.total_lat_mean);
+    }
+}

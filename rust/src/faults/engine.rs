@@ -1,0 +1,193 @@
+//! The fault engine: a compiled [`FaultPlan`] plus its own seeded PRNG
+//! stream, queried by the fleet scheduler once per round / per dispatch.
+//!
+//! The engine's hard contract is *zero interference when idle*: every
+//! query on an empty plan (or outside every window) returns the benign
+//! answer **without drawing from the PRNG**, so a fault-free run is
+//! bit-identical to a run that never constructed an engine.
+
+use super::plan::{FaultEvent, FaultPlan};
+use crate::config::FaultsConfig;
+use crate::net::link::LinkProfile;
+use crate::util::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct FaultEngine {
+    plan: FaultPlan,
+    rng: Pcg32,
+    /// How long the edge waits for a reply before declaring it lost (ms of
+    /// virtual time, charged to the failed-over session).
+    pub timeout_ms: f64,
+    /// Re-dispatches attempted on surviving endpoints before a batch
+    /// degrades to the edge slice.
+    pub max_retries: usize,
+}
+
+impl FaultEngine {
+    pub fn new(plan: FaultPlan, seed: u64, timeout_ms: f64, max_retries: usize) -> FaultEngine {
+        FaultEngine { plan, rng: Pcg32::new(seed, 0xFA_017), timeout_ms, max_retries }
+    }
+
+    /// Engine described by a `[faults]` config section. `base_seed` seeds
+    /// the drop stream when the section doesn't pin its own seed.
+    pub fn from_config(f: &FaultsConfig, base_seed: u64) -> FaultEngine {
+        let seed = if f.seed != 0 { f.seed } else { base_seed ^ 0xC4A0_5FA0 };
+        FaultEngine::new(FaultPlan::from_config(f), seed, f.offload_timeout_ms, f.max_retries)
+    }
+
+    /// Disarmed engine: empty plan, default timeout/retries.
+    pub fn disarmed() -> FaultEngine {
+        FaultEngine::new(FaultPlan::none(), 0, FaultsConfig::default().offload_timeout_ms, 0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Link override in force at `round` (bandwidth/RTT collapse), if any.
+    pub fn link_profile(&self, round: u64) -> Option<LinkProfile> {
+        self.plan.link_profile(round)
+    }
+
+    /// True while an uplink outage window is active: no offload may leave
+    /// the edge this round.
+    pub fn link_out(&self, round: u64) -> bool {
+        self.plan.events.iter().any(|ev| match ev {
+            FaultEvent::LinkOutage { window } => window.contains(round),
+            _ => false,
+        })
+    }
+
+    /// Is `endpoint` alive at `round`? (Dead during crash windows,
+    /// recovered afterwards.)
+    pub fn endpoint_up(&self, endpoint: usize, round: u64) -> bool {
+        !self.plan.events.iter().any(|ev| match ev {
+            FaultEvent::EndpointCrash { endpoint: e, window } => {
+                *e == endpoint && window.contains(round)
+            }
+            _ => false,
+        })
+    }
+
+    /// Decide whether this dispatch's reply is lost. Draws from the
+    /// engine's PRNG only for drop windows active at `round`, so inactive
+    /// schedules cost zero draws and replay exactly.
+    pub fn reply_dropped(&mut self, round: u64) -> bool {
+        let mut dropped = false;
+        for ev in &self.plan.events {
+            if let FaultEvent::ReplyDrop { window, prob } = ev {
+                if window.contains(round) && *prob > 0.0 && self.rng.chance(*prob) {
+                    dropped = true;
+                }
+            }
+        }
+        dropped
+    }
+
+    /// Extra reply latency in force at `round` (0.0 outside every delay
+    /// window). Delays beyond `timeout_ms` are handled as drops by the
+    /// caller.
+    pub fn reply_delay_ms(&self, round: u64) -> f64 {
+        self.plan
+            .events
+            .iter()
+            .map(|ev| match ev {
+                FaultEvent::ReplyDelay { window, extra_ms } if window.contains(round) => *extra_ms,
+                _ => 0.0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_engine_is_fully_benign() {
+        let mut e = FaultEngine::disarmed();
+        assert!(e.is_empty());
+        for round in 0..100 {
+            assert!(e.link_profile(round).is_none());
+            assert!(!e.link_out(round));
+            assert!(e.endpoint_up(0, round));
+            assert!(!e.reply_dropped(round));
+            assert_eq!(e.reply_delay_ms(round), 0.0);
+        }
+    }
+
+    #[test]
+    fn inactive_windows_draw_nothing_from_the_rng() {
+        // two engines, same seed: one queried outside its drop window many
+        // times, then both enter the window — identical decisions prove
+        // the inactive queries consumed no PRNG state
+        let plan = FaultPlan::none().drop_replies(100, 200, 0.5);
+        let mut a = FaultEngine::new(plan.clone(), 42, 250.0, 1);
+        let mut b = FaultEngine::new(plan, 42, 250.0, 1);
+        for round in 0..100 {
+            assert!(!a.reply_dropped(round));
+        }
+        for round in 100..200 {
+            assert_eq!(a.reply_dropped(round), b.reply_dropped(round), "round {round}");
+        }
+    }
+
+    #[test]
+    fn drop_decisions_replay_for_a_fixed_seed() {
+        let plan = FaultPlan::none().drop_replies(0, 1000, 0.3);
+        let mut a = FaultEngine::new(plan.clone(), 7, 250.0, 1);
+        let mut b = FaultEngine::new(plan, 7, 250.0, 1);
+        let da: Vec<bool> = (0..1000).map(|r| a.reply_dropped(r)).collect();
+        let db: Vec<bool> = (0..1000).map(|r| b.reply_dropped(r)).collect();
+        assert_eq!(da, db);
+        assert!(da.iter().any(|&d| d), "prob 0.3 over 1000 rounds must drop something");
+        assert!(da.iter().any(|&d| !d), "prob 0.3 must not drop everything");
+    }
+
+    #[test]
+    fn crash_windows_kill_and_recover() {
+        let e = FaultEngine::new(FaultPlan::none().crash(1, 10, 20), 1, 250.0, 1);
+        assert!(e.endpoint_up(1, 9));
+        assert!(!e.endpoint_up(1, 10));
+        assert!(!e.endpoint_up(1, 19));
+        assert!(e.endpoint_up(1, 20));
+        // other endpoints unaffected
+        assert!(e.endpoint_up(0, 15));
+    }
+
+    #[test]
+    fn outage_and_delay_windows() {
+        let e = FaultEngine::new(
+            FaultPlan::none().outage(5, 8).delay_replies(6, 10, 40.0).delay_replies(7, 9, 20.0),
+            1,
+            250.0,
+            1,
+        );
+        assert!(!e.link_out(4));
+        assert!(e.link_out(5));
+        assert!(!e.link_out(8));
+        assert_eq!(e.reply_delay_ms(5), 0.0);
+        assert_eq!(e.reply_delay_ms(6), 40.0);
+        assert_eq!(e.reply_delay_ms(7), 60.0); // overlapping delays add
+        assert_eq!(e.reply_delay_ms(9), 40.0);
+    }
+
+    #[test]
+    fn config_seed_pins_the_stream() {
+        let mut f = FaultsConfig::default();
+        f.enabled = true;
+        f.drop_start = 0;
+        f.drop_end = 100;
+        f.drop_prob = 0.5;
+        f.seed = 11;
+        let mut a = FaultEngine::from_config(&f, 1);
+        let mut b = FaultEngine::from_config(&f, 2); // base seed ignored when pinned
+        let da: Vec<bool> = (0..100).map(|r| a.reply_dropped(r)).collect();
+        let db: Vec<bool> = (0..100).map(|r| b.reply_dropped(r)).collect();
+        assert_eq!(da, db);
+    }
+}

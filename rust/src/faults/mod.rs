@@ -1,0 +1,32 @@
+//! Deterministic fault injection for the edge-cloud serving stack.
+//!
+//! RAPID's premise is that partitioned inference must survive hostile
+//! network conditions (the paper's Table I attributes communication
+//! overhead surges to degraded scenes; RoboECC argues deployment must be
+//! network-state-aware). This module makes those conditions *first-class
+//! and reproducible*: a [`FaultPlan`] is a schedule of fault windows over
+//! scheduler rounds — link outages, bandwidth/RTT collapse, endpoint
+//! crash/recover, reply drops, reply delays — and a [`FaultEngine`]
+//! (plan + seeded PRNG) answers the serve layer's per-round queries.
+//!
+//! Determinism contract: with an **empty plan the engine draws no random
+//! numbers and changes no decision**, so a fault-free fleet run is
+//! bit-identical to a run without the engine (pinned by
+//! `rust/tests/chaos_failover.rs`). Under faults, every drop decision
+//! comes from the engine's own seeded PRNG stream, so chaos runs replay
+//! exactly.
+//!
+//! Consumers:
+//! * `net::link::Link` accepts a time-varying [`net::link::LinkProfile`]
+//!   override (bandwidth/RTT collapse windows) instead of a static config;
+//! * `serve::fleet::Fleet` routes around crashed endpoints
+//!   (`Router::pick_alive`), retries dropped replies on the least-loaded
+//!   surviving endpoint, and degrades to the edge slice
+//!   (`EpisodeState::fail_cloud`) when no endpoint can serve — no session
+//!   ever wedges in suspend.
+
+pub mod engine;
+pub mod plan;
+
+pub use engine::FaultEngine;
+pub use plan::{FaultEvent, FaultPlan, Window};

@@ -1,0 +1,188 @@
+//! Fault schedules: typed fault events over scheduler-round windows.
+
+use crate::config::FaultsConfig;
+use crate::net::link::LinkProfile;
+
+/// Half-open window of scheduler rounds `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Window {
+    pub fn new(start: u64, end: u64) -> Window {
+        Window { start, end }
+    }
+
+    pub fn contains(&self, round: u64) -> bool {
+        round >= self.start && round < self.end
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// One scheduled fault. Windows are in scheduler rounds (one control step
+/// of virtual time per round).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// The uplink is down: no offload can leave the edge. Sessions that
+    /// would offload degrade to their cached chunk / edge slice, and
+    /// already-pending batches degrade instead of dispatching.
+    LinkOutage { window: Window },
+    /// Bandwidth/RTT collapse: the link runs under this profile instead of
+    /// its configured nominal values.
+    LinkDegrade { window: Window, bw_mbps: f64, rtt_ms: f64 },
+    /// A cloud endpoint is dead during the window (recovers at `end`).
+    /// Dispatches route around it via the surviving endpoints.
+    EndpointCrash { endpoint: usize, window: Window },
+    /// Each dispatched batch's reply is lost with probability `prob`
+    /// (seeded draw in the engine). The edge times out and fails over.
+    ReplyDrop { window: Window, prob: f64 },
+    /// Replies arrive `extra_ms` late. A delay beyond the offload timeout
+    /// is indistinguishable from a drop and is treated as one.
+    ReplyDelay { window: Window, extra_ms: f64 },
+}
+
+/// A deterministic fault schedule: just an ordered list of events. Build
+/// programmatically with the chainable helpers, or from the `[faults]`
+/// config section via [`FaultPlan::from_config`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing, perturbs nothing.
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn outage(mut self, start: u64, end: u64) -> FaultPlan {
+        self.events.push(FaultEvent::LinkOutage { window: Window::new(start, end) });
+        self
+    }
+
+    pub fn degrade(mut self, start: u64, end: u64, bw_mbps: f64, rtt_ms: f64) -> FaultPlan {
+        self.events.push(FaultEvent::LinkDegrade { window: Window::new(start, end), bw_mbps, rtt_ms });
+        self
+    }
+
+    pub fn crash(mut self, endpoint: usize, start: u64, end: u64) -> FaultPlan {
+        self.events.push(FaultEvent::EndpointCrash { endpoint, window: Window::new(start, end) });
+        self
+    }
+
+    pub fn drop_replies(mut self, start: u64, end: u64, prob: f64) -> FaultPlan {
+        self.events.push(FaultEvent::ReplyDrop { window: Window::new(start, end), prob });
+        self
+    }
+
+    pub fn delay_replies(mut self, start: u64, end: u64, extra_ms: f64) -> FaultPlan {
+        self.events.push(FaultEvent::ReplyDelay { window: Window::new(start, end), extra_ms });
+        self
+    }
+
+    /// Build the plan a `[faults]` config section describes. Disabled or
+    /// empty-window entries contribute nothing, so a default config maps
+    /// to the empty plan.
+    pub fn from_config(f: &FaultsConfig) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        if !f.enabled {
+            return plan;
+        }
+        if f.outage_end > f.outage_start {
+            plan = plan.outage(f.outage_start, f.outage_end);
+        }
+        if f.degrade_end > f.degrade_start {
+            plan = plan.degrade(f.degrade_start, f.degrade_end, f.degrade_bw_mbps, f.degrade_rtt_ms);
+        }
+        if f.crash_end > f.crash_start {
+            plan = plan.crash(f.crash_endpoint, f.crash_start, f.crash_end);
+        }
+        if f.drop_end > f.drop_start && f.drop_prob > 0.0 {
+            plan = plan.drop_replies(f.drop_start, f.drop_end, f.drop_prob);
+        }
+        if f.delay_end > f.delay_start && f.delay_ms > 0.0 {
+            plan = plan.delay_replies(f.delay_start, f.delay_end, f.delay_ms);
+        }
+        plan
+    }
+
+    /// The link profile in force at `round`, if any degrade window is
+    /// active (the last matching window wins, mirroring config overlays).
+    pub fn link_profile(&self, round: u64) -> Option<LinkProfile> {
+        let mut out = None;
+        for ev in &self.events {
+            if let FaultEvent::LinkDegrade { window, bw_mbps, rtt_ms } = ev {
+                if window.contains(round) {
+                    out = Some(LinkProfile { bw_mbps: *bw_mbps, rtt_ms: *rtt_ms });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_are_half_open() {
+        let w = Window::new(5, 8);
+        assert!(!w.contains(4));
+        assert!(w.contains(5));
+        assert!(w.contains(7));
+        assert!(!w.contains(8));
+        assert!(Window::new(3, 3).is_empty());
+    }
+
+    #[test]
+    fn builders_accumulate_events() {
+        let plan = FaultPlan::none().crash(1, 10, 20).drop_replies(0, 100, 0.5).outage(30, 40);
+        assert_eq!(plan.events.len(), 3);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn disabled_config_is_empty_plan() {
+        let f = FaultsConfig::default();
+        assert!(FaultPlan::from_config(&f).is_empty());
+        // enabled but with no active windows is still empty
+        let mut f = FaultsConfig::default();
+        f.enabled = true;
+        assert!(FaultPlan::from_config(&f).is_empty());
+    }
+
+    #[test]
+    fn config_windows_map_to_events() {
+        let mut f = FaultsConfig::default();
+        f.enabled = true;
+        f.crash_start = 5;
+        f.crash_end = 15;
+        f.crash_endpoint = 2;
+        f.drop_start = 0;
+        f.drop_end = 50;
+        f.drop_prob = 0.25;
+        let plan = FaultPlan::from_config(&f);
+        assert_eq!(plan.events.len(), 2);
+        assert!(plan
+            .events
+            .contains(&FaultEvent::EndpointCrash { endpoint: 2, window: Window::new(5, 15) }));
+    }
+
+    #[test]
+    fn last_degrade_window_wins() {
+        let plan = FaultPlan::none().degrade(0, 100, 100.0, 20.0).degrade(10, 20, 10.0, 90.0);
+        assert_eq!(plan.link_profile(5).unwrap().bw_mbps, 100.0);
+        assert_eq!(plan.link_profile(15).unwrap().bw_mbps, 10.0);
+        assert!(plan.link_profile(200).is_none());
+    }
+}

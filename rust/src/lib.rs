@@ -18,10 +18,15 @@
 //! * [`runtime`], [`vla`] — PJRT CPU client loading the AOT-compiled JAX/
 //!   Pallas VLA surrogate (HLO text artifacts; python never at runtime;
 //!   `pjrt` feature — offline builds use the analytic surrogates).
-//! * [`net`] — analytic link model + the real TCP path: length-prefixed
-//!   wire protocol with single and *cross-session batch* frames, blocking
-//!   client, threaded cloud server (batcher in front of a model-owner
-//!   worker).
+//! * [`net`] — analytic link model (with time-varying fault profiles) +
+//!   the real TCP path: length-prefixed wire protocol with single and
+//!   *cross-session batch* frames, blocking client, threaded cloud server
+//!   (batcher in front of a model-owner worker).
+//! * [`faults`] — deterministic fault injection: seeded, schedule-driven
+//!   [`faults::FaultPlan`] (link outages, bandwidth/RTT collapse, endpoint
+//!   crash/recover, reply drop/delay) compiled into a
+//!   [`faults::FaultEngine`] the fleet scheduler queries per round; empty
+//!   plans are bit-identical to no engine at all.
 //! * [`serve`] — the serving stack, smallest to largest scope:
 //!   [`serve::driver`] is the resumable per-session step machine
 //!   (`EpisodeState`: poll → suspend on cloud → resume), [`serve::session`]
@@ -31,7 +36,10 @@
 //!   by [`serve::batcher`] (full / deadline / drain flushes), spread over
 //!   endpoints by [`serve::router`], with fleet-wide backpressure
 //!   (`fleet.max_inflight`) that degrades refused offloads to the edge
-//!   slice.
+//!   slice — and failover under injected faults: crashed endpoints are
+//!   routed around, lost replies retried on the least-loaded survivor,
+//!   exhausted batches re-served from the edge
+//!   (`EpisodeState::fail_cloud`), so no session ever wedges in suspend.
 //! * [`experiments`] — one generator per paper table/figure.
 //!
 //! Python runs once at build time (`make artifacts`); the binary built from
@@ -47,6 +55,7 @@ pub mod policy;
 pub mod runtime;
 pub mod vla;
 pub mod net;
+pub mod faults;
 pub mod serve;
 pub mod metrics;
 pub mod benchkit;

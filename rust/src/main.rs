@@ -26,6 +26,7 @@ fn main() {
         Some("bench") => cmd_bench(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("fleet") => cmd_fleet(&args[1..]),
+        Some("chaos") => cmd_chaos(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -49,6 +50,10 @@ fn print_help() {
          \x20 rapid serve [--addr A] [--batch B] [--analytic]\n\
          \x20 rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E]\n\
          \x20             [--batch B] [--inflight I] [--seed S] [--config FILE]\n\
+         \x20 rapid chaos [--sessions N] [--task T] [--seed S] [--batch B]\n\
+         \x20             [--episodes E] [--config FILE]\n\
+         \x20             (defaults to configs/chaos.toml; compares RAPID vs\n\
+         \x20              Edge-/Cloud-Only fleets under the fault schedule)\n\
          \x20 rapid info\n"
     );
 }
@@ -338,6 +343,12 @@ fn cmd_fleet(rest: &[String]) -> i32 {
         "flushes: full {} / deadline {} / drain {}   deferred offloads {}   endpoints {:?}",
         s.full_flushes, s.deadline_flushes, s.drain_flushes, s.deferred_offloads, res.endpoint_dispatches
     );
+    if s.dropped_replies + s.endpoint_errors + s.degraded_requests + s.outage_rounds > 0 {
+        println!(
+            "faults: dropped replies {}  endpoint errors {}  redispatches {}  degraded {}  outage rounds {}",
+            s.dropped_replies, s.endpoint_errors, s.failover_redispatches, s.degraded_requests, s.outage_rounds
+        );
+    }
     println!(
         "steps {}  cloud events {}  wall {:.2}s ({:.0} steps/s)",
         summary.total_steps,
@@ -346,6 +357,93 @@ fn cmd_fleet(rest: &[String]) -> i32 {
         summary.total_steps as f64 / wall.max(1e-9)
     );
     0
+}
+
+fn cmd_chaos(rest: &[String]) -> i32 {
+    let flags = Flags(rest);
+    let mut sys = load_sys(&flags);
+    // no explicit config: fall back to the shipped chaos schedule, then to
+    // the built-in demo schedule, so the command always injects faults —
+    // and always say which schedule actually ran
+    let explicit_config = flags.get("--config").is_some();
+    if !explicit_config {
+        if let Ok(src) = std::fs::read_to_string("configs/chaos.toml") {
+            match rapid::config::parse::parse_toml(&src) {
+                Ok(v) => {
+                    sys.apply_value(&v);
+                    println!("schedule: configs/chaos.toml");
+                }
+                Err(e) => {
+                    eprintln!("configs/chaos.toml parse error: {e}");
+                    return 2;
+                }
+            }
+        }
+    }
+    if !sys.faults.enabled {
+        sys.faults = rapid::config::FaultsConfig::demo();
+        if !explicit_config {
+            // no config at all: pair the demo schedule with the fleet
+            // shape chaos.toml ships; an explicit config keeps its own
+            sys.fleet.n_sessions = 6;
+            sys.fleet.endpoints = 3;
+        }
+        println!("schedule: built-in demo (active config enables no faults)");
+    } else if explicit_config {
+        println!("schedule: --config");
+    }
+    if let Some(n) = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.n_sessions = n.max(1);
+    }
+    if let Some(b) = flags.get("--batch").and_then(|s| s.parse().ok()) {
+        sys.fleet.max_batch = b;
+    }
+    if let Some(e) = flags.get("--episodes").and_then(|s| s.parse().ok()) {
+        sys.fleet.episodes_per_session = e;
+    }
+    let task = flags
+        .get("--task")
+        .and_then(TaskKind::parse)
+        .unwrap_or(rapid::robot::TaskKind::PickPlace);
+
+    let f = &sys.faults;
+    println!(
+        "fault schedule: timeout {:.0}ms, retries {}, endpoints {}",
+        f.offload_timeout_ms,
+        f.max_retries,
+        sys.fleet.endpoints.max(1)
+    );
+    if f.crash_end > f.crash_start {
+        println!("  crash    endpoint {} rounds [{}, {})", f.crash_endpoint, f.crash_start, f.crash_end);
+    }
+    if f.degrade_end > f.degrade_start {
+        println!(
+            "  degrade  rounds [{}, {}) -> {:.0} Mbps / {:.0}ms RTT",
+            f.degrade_start, f.degrade_end, f.degrade_bw_mbps, f.degrade_rtt_ms
+        );
+    }
+    if f.outage_end > f.outage_start {
+        println!("  outage   rounds [{}, {})", f.outage_start, f.outage_end);
+    }
+    if f.drop_end > f.drop_start && f.drop_prob > 0.0 {
+        println!("  drops    rounds [{}, {}) p={:.2}", f.drop_start, f.drop_end, f.drop_prob);
+    }
+    if f.delay_end > f.delay_start && f.delay_ms > 0.0 {
+        println!("  delay    rounds [{}, {}) +{:.0}ms", f.delay_start, f.delay_end, f.delay_ms);
+    }
+
+    let t0 = std::time::Instant::now();
+    let (table, rows) = rapid::experiments::degraded::run(&sys, task);
+    print!("{}", table.render());
+    let wedged: Vec<&str> =
+        rows.iter().filter(|r| !r.completed).map(|r| r.policy.name()).collect();
+    if wedged.is_empty() {
+        println!("all policies completed every episode (zero wedged sessions); wall {:.2}s", t0.elapsed().as_secs_f64());
+        0
+    } else {
+        eprintln!("WEDGED sessions under: {wedged:?}");
+        1
+    }
 }
 
 fn cmd_info() -> i32 {

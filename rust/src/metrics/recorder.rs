@@ -37,6 +37,10 @@ pub struct EpisodeMetrics {
     /// Offloads the fleet scheduler refused under backpressure (the
     /// session fell back to its edge slice); always 0 single-session.
     pub deferred_offloads: u64,
+    /// Offloads whose reply was lost (dropped/timed out/endpoint dead):
+    /// the session timed out and re-served the step from its edge slice
+    /// (`EpisodeState::fail_cloud`); always 0 without fault injection.
+    pub failovers: u64,
 
     // --- loads (GB), time-averaged over the episode ---
     pub edge_gb: f64,
@@ -73,6 +77,7 @@ impl EpisodeMetrics {
             retransmissions: 0,
             repartitions: 0,
             deferred_offloads: 0,
+            failovers: 0,
             edge_gb: 0.0,
             cloud_gb: 0.0,
             trig_tp: 0,

@@ -13,10 +13,22 @@ pub struct Transfer {
     pub retransmissions: u32,
 }
 
+/// A temporary override of the link's nominal bandwidth/RTT — the
+/// time-varying condition a [`crate::faults::FaultPlan`] degrade window
+/// puts the link under. `None` profile ⇒ the static `LinkConfig` values,
+/// with identical PRNG consumption, so fault-free runs are bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkProfile {
+    pub bw_mbps: f64,
+    pub rtt_ms: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct Link {
     cfg: LinkConfig,
     rng: Pcg32,
+    /// Active degradation window, if any (see [`LinkProfile`]).
+    profile: Option<LinkProfile>,
     /// Totals for accounting.
     pub total_bytes: f64,
     pub total_retrans: u64,
@@ -24,16 +36,44 @@ pub struct Link {
 
 impl Link {
     pub fn new(cfg: &LinkConfig, seed: u64) -> Self {
-        Link { cfg: cfg.clone(), rng: Pcg32::new(seed, 0x11_4E), total_bytes: 0.0, total_retrans: 0 }
+        Link {
+            cfg: cfg.clone(),
+            rng: Pcg32::new(seed, 0x11_4E),
+            profile: None,
+            total_bytes: 0.0,
+            total_retrans: 0,
+        }
     }
 
     pub fn config(&self) -> &LinkConfig {
         &self.cfg
     }
 
+    /// Install (or clear) a time-varying condition override. Affects only
+    /// the bandwidth/RTT terms; jitter and retransmission draws consume
+    /// the same PRNG stream either way.
+    pub fn set_profile(&mut self, profile: Option<LinkProfile>) {
+        self.profile = profile;
+    }
+
+    pub fn profile(&self) -> Option<LinkProfile> {
+        self.profile
+    }
+
+    /// Bandwidth in force right now (profile override or nominal).
+    pub fn effective_bw_mbps(&self) -> f64 {
+        self.profile.map_or(self.cfg.bw_mbps, |p| p.bw_mbps)
+    }
+
+    /// RTT in force right now (profile override or nominal).
+    pub fn effective_rtt_ms(&self) -> f64 {
+        self.profile.map_or(self.cfg.rtt_ms, |p| p.rtt_ms)
+    }
+
     /// One-way transfer of `bytes` under scene clarity in (0, 1].
     pub fn transfer(&mut self, bytes: f64, clarity: f64) -> Transfer {
-        let base = bytes * 8.0 / (self.cfg.bw_mbps * 1e6) * 1e3 + self.cfg.rtt_ms / 2.0;
+        let base =
+            bytes * 8.0 / (self.effective_bw_mbps() * 1e6) * 1e3 + self.effective_rtt_ms() / 2.0;
         let mut ms = base * (1.0 + self.cfg.jitter * self.rng.normal()).max(0.2);
         // degraded frames are re-sent: each retransmission repeats the
         // payload time (geometric, clarity-gated)
@@ -66,11 +106,43 @@ mod tests {
 
     #[test]
     fn clean_transfer_near_nominal() {
+        // deterministic: replay the link's own seeded jitter stream and
+        // pin every transfer exactly (no statistical tolerance to deflake)
+        let cfg = LinkConfig::default();
         let mut l = link(1);
+        let mut replay = Pcg32::new(1, 0x11_4E);
         let bytes = 1.5e6;
-        let nominal = bytes * 8.0 / (1000.0 * 1e6) * 1e3 + 4.0;
-        let mean: f64 = (0..300).map(|_| l.transfer(bytes, 1.0).ms).sum::<f64>() / 300.0;
-        assert!((mean - nominal).abs() < nominal * 0.15, "mean {mean} nominal {nominal}");
+        let base = bytes * 8.0 / (cfg.bw_mbps * 1e6) * 1e3 + cfg.rtt_ms / 2.0;
+        for i in 0..300 {
+            let want = base * (1.0 + cfg.jitter * replay.normal()).max(0.2);
+            // the retransmission gate draws once even at clarity 1.0
+            assert!(!replay.chance(0.0));
+            let got = l.transfer(bytes, 1.0).ms;
+            assert!((got - want).abs() < 1e-9, "transfer {i}: got {got} want {want}");
+            // and the jittered value stays anchored near nominal
+            assert!(got > 0.0 && got < base * 2.0, "transfer {i}: {got} vs base {base}");
+        }
+    }
+
+    #[test]
+    fn degraded_profile_slows_transfers_and_clears() {
+        let mut nominal = link(7);
+        let mut degraded = link(7); // same seed -> same jitter stream
+        degraded.set_profile(Some(LinkProfile { bw_mbps: 50.0, rtt_ms: 80.0 }));
+        for _ in 0..50 {
+            let a = nominal.transfer(1.5e6, 1.0).ms;
+            let b = degraded.transfer(1.5e6, 1.0).ms;
+            assert!(b > a, "degraded {b} <= nominal {a}");
+        }
+        assert_eq!(degraded.effective_bw_mbps(), 50.0);
+        degraded.set_profile(None);
+        assert_eq!(degraded.effective_bw_mbps(), LinkConfig::default().bw_mbps);
+        // identical PRNG consumption under a profile: clearing it re-syncs
+        // the two links exactly
+        let a = nominal.transfer(2e6, 1.0);
+        let b = degraded.transfer(2e6, 1.0);
+        assert_eq!(a.ms, b.ms);
+        assert_eq!(a.retransmissions, b.retransmissions);
     }
 
     #[test]

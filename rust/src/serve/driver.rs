@@ -25,6 +25,7 @@
 use crate::config::SystemConfig;
 use crate::dispatcher::{ChunkQueue, ChunkSource};
 use crate::metrics::EpisodeMetrics;
+use crate::net::link::LinkProfile;
 use crate::net::Link;
 use crate::policy::{DecisionCtx, Route, Strategy};
 use crate::robot::{RobotSim, SensorFrame, TaskKind};
@@ -129,6 +130,13 @@ impl EpisodeState {
         self.awaiting
     }
 
+    /// Install (or clear) a time-varying link condition (fault-injection
+    /// degrade windows). A `None` profile leaves the step machine
+    /// bit-identical to a run that never called this.
+    pub fn set_link_profile(&mut self, profile: Option<LinkProfile>) {
+        self.link.set_profile(profile);
+    }
+
     /// True once every control step of the episode has executed.
     pub fn is_done(&self) -> bool {
         !self.awaiting && self.sim.done()
@@ -220,24 +228,7 @@ impl EpisodeState {
                 }
 
                 // routine edge refill
-                let gb = self.strategy.edge_gb(sys);
-                let t_infer = self.clock.edge_infer(sys, gb);
-                self.metrics.edge_busy_ms += t_infer;
-                self.metrics.edge_events += 1;
-                if self.strategy.needs_entropy() {
-                    // vision preprocessing / distribution extraction
-                    self.metrics.overhead_ms += self.clock.vision_route();
-                }
-                let full_grade = gb >= 0.5 * sys.total_model_gb;
-                let t0 = std::time::Instant::now();
-                let out = if full_grade {
-                    cloud.infer(&obs, &proprio, instr)
-                } else {
-                    edge.infer(&obs, &proprio, instr)
-                };
-                self.metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
-                self.refill_queue(&out, ChunkSource::Edge, t);
-                self.charge_repartitions();
+                self.edge_refill(sys, &obs, &proprio, instr, edge, cloud);
             }
         }
 
@@ -256,6 +247,71 @@ impl EpisodeState {
         self.refill_queue(&out, ChunkSource::Cloud, t);
         self.charge_repartitions();
         self.finish_step(sys, Route::CloudOffload);
+    }
+
+    /// Account a delayed cloud reply: the session stalls `ms` of virtual
+    /// time still suspended (call before [`EpisodeState::complete_cloud`]).
+    pub fn charge_delay(&mut self, ms: f64) {
+        assert!(self.awaiting, "charge_delay() without a pending request");
+        self.clock.advance(ms);
+        self.metrics.overhead_ms += ms;
+    }
+
+    /// Resolve a suspended offload whose reply was lost (dropped frame,
+    /// crashed endpoint, timeout): the edge waits out `timeout_ms`, gives
+    /// up on the reply, and re-serves the suspended step from its local
+    /// slice — the failover that guarantees the session always resumes.
+    /// Backend selection follows the routine edge-refill rule.
+    pub fn fail_cloud(
+        &mut self,
+        sys: &SystemConfig,
+        req: &CloudRequest,
+        edge: &mut dyn Backend,
+        cloud: &mut dyn Backend,
+        timeout_ms: f64,
+    ) {
+        assert!(self.awaiting, "fail_cloud() without a pending request");
+        self.awaiting = false;
+        self.metrics.failovers += 1;
+        // the reply never arrives: the remaining wait is pure overhead
+        // (the fleet passes 0 here when failed dispatch attempts already
+        // charged their timeouts via `charge_delay`)
+        self.clock.advance(timeout_ms);
+        self.metrics.overhead_ms += timeout_ms;
+        // degraded service from the edge-resident slice
+        self.edge_refill(sys, &req.obs, &req.proprio, req.instr, edge, cloud);
+        self.finish_step(sys, Route::EdgeRefill);
+    }
+
+    /// Routine edge-slice refill, shared by the normal edge path and the
+    /// failover path so both charge identically: slice-proportional
+    /// inference time, the vision routing cost for entropy-needing
+    /// strategies, the grade-selection rule, and the queue refill.
+    fn edge_refill(
+        &mut self,
+        sys: &SystemConfig,
+        obs: &[f32; D_VIS],
+        proprio: &[f32; D_PROP],
+        instr: usize,
+        edge: &mut dyn Backend,
+        cloud: &mut dyn Backend,
+    ) {
+        let gb = self.strategy.edge_gb(sys);
+        let t_infer = self.clock.edge_infer(sys, gb);
+        self.metrics.edge_busy_ms += t_infer;
+        self.metrics.edge_events += 1;
+        if self.strategy.needs_entropy() {
+            // vision preprocessing / distribution extraction
+            self.metrics.overhead_ms += self.clock.vision_route();
+        }
+        let full_grade = gb >= 0.5 * sys.total_model_gb;
+        let t0 = std::time::Instant::now();
+        let out =
+            if full_grade { cloud.infer(obs, proprio, instr) } else { edge.infer(obs, proprio, instr) };
+        self.metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
+        let t = self.sim.step_index();
+        self.refill_queue(&out, ChunkSource::Edge, t);
+        self.charge_repartitions();
     }
 
     fn refill_queue(&mut self, out: &ModelOut, source: ChunkSource, t: usize) {
@@ -491,6 +547,95 @@ mod tests {
         assert_eq!(out.metrics.cloud_events, 0);
         assert!(out.metrics.deferred_offloads > 0);
         assert!(out.metrics.edge_events > 0);
+    }
+
+    #[test]
+    fn delayed_resume_matches_uninterrupted_run() {
+        // an episode driven through suspend-on-cloud with *delayed*
+        // resumes — an unrelated second session advances many steps while
+        // each request is parked — must produce the same trajectory
+        // metrics as the uninterrupted run of the same seed
+        let sys = SystemConfig::default();
+        let solo = run(PolicyKind::Rapid, TaskKind::PegInsert, 33);
+
+        let mut a = EpisodeState::new(
+            &sys,
+            TaskKind::PegInsert,
+            crate::policy::build(PolicyKind::Rapid, &sys),
+            33,
+            false,
+        );
+        let mut a_edge = AnalyticBackend::edge(33);
+        let mut a_cloud = AnalyticBackend::cloud(33);
+        let mut b = EpisodeState::new(
+            &sys,
+            TaskKind::PickPlace,
+            crate::policy::build(PolicyKind::Rapid, &sys),
+            77,
+            false,
+        );
+        let mut b_edge = AnalyticBackend::edge(77);
+        let mut b_cloud = AnalyticBackend::cloud(77);
+
+        loop {
+            match a.poll(&sys, &mut a_edge, &mut a_cloud, true) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(req) => {
+                    // hold the request: drive the other session meanwhile
+                    for _ in 0..5 {
+                        match b.poll(&sys, &mut b_edge, &mut b_cloud, true) {
+                            StepEvent::Stepped => {}
+                            StepEvent::Done => break,
+                            StepEvent::NeedCloud(r2) => {
+                                let out = b_cloud.infer(&r2.obs, &r2.proprio, r2.instr);
+                                b.complete_cloud(&sys, out, 0.0);
+                            }
+                        }
+                    }
+                    let out = a_cloud.infer(&req.obs, &req.proprio, req.instr);
+                    a.complete_cloud(&sys, out, 0.0);
+                }
+            }
+        }
+        let delayed = a.finish(&sys).metrics;
+        assert_eq!(delayed.steps, solo.steps);
+        assert_eq!(delayed.latency_columns(), solo.latency_columns());
+        assert_eq!(delayed.cloud_events, solo.cloud_events);
+        assert_eq!(delayed.edge_events, solo.edge_events);
+        assert_eq!(delayed.preemptions, solo.preemptions);
+        assert_eq!(delayed.rms_error, solo.rms_error);
+        assert_eq!(delayed.success, solo.success);
+    }
+
+    #[test]
+    fn fail_cloud_degrades_to_edge_and_always_resumes() {
+        // every offload's reply is "lost": fail_cloud must resume the
+        // session from the edge slice every time, to episode completion
+        let sys = SystemConfig::default();
+        let strategy = crate::policy::build(PolicyKind::CloudOnly, &sys);
+        let mut edge = AnalyticBackend::edge(9);
+        let mut cloud = AnalyticBackend::cloud(9);
+        let mut st = EpisodeState::new(&sys, TaskKind::PickPlace, strategy, 9, false);
+        let mut failed = 0u64;
+        loop {
+            match st.poll(&sys, &mut edge, &mut cloud, true) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(req) => {
+                    st.fail_cloud(&sys, &req, &mut edge, &mut cloud, 250.0);
+                    failed += 1;
+                    assert!(!st.is_awaiting_cloud());
+                }
+            }
+        }
+        let m = st.finish(&sys).metrics;
+        assert!(failed > 0);
+        assert_eq!(m.steps, TaskKind::PickPlace.seq_len());
+        assert_eq!(m.failovers, failed);
+        assert_eq!(m.edge_events, failed);
+        // the timeout is charged as routing overhead on every failover
+        assert!(m.overhead_ms >= 250.0 * failed as f64);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use super::batcher::Batcher;
 use super::driver::{CloudRequest, EpisodeState, StepEvent};
 use super::router::Router;
 use crate::config::{FleetConfig, PolicyKind, SystemConfig};
+use crate::faults::FaultEngine;
 use crate::metrics::{summarize_fleet, EpisodeMetrics, FleetSummary};
 use crate::net::proto::InferRequest;
 use crate::net::CloudClient;
@@ -78,6 +79,21 @@ pub struct FleetStats {
     pub full_flushes: u64,
     pub deadline_flushes: u64,
     pub drain_flushes: u64,
+    // --- fault injection / failover (all 0 on the zero-fault path) ---
+    /// Dispatches whose reply was lost to an injected drop or a
+    /// beyond-timeout delay.
+    pub dropped_replies: u64,
+    /// Remote RPC failures (crashed/unreachable endpoints; circuit-broken
+    /// for the rest of the run).
+    pub endpoint_errors: u64,
+    /// Batches re-dispatched to another surviving endpoint after a failed
+    /// attempt.
+    pub failover_redispatches: u64,
+    /// Requests that exhausted every endpoint and were served from the
+    /// edge slice via `EpisodeState::fail_cloud`.
+    pub degraded_requests: u64,
+    /// Rounds spent under a full uplink outage (offloads deferred).
+    pub outage_rounds: u64,
 }
 
 /// Per-session outcome: every episode's metrics, in order.
@@ -147,6 +163,14 @@ pub struct Fleet {
     pending_age: u64,
     /// `batch_deadline_us` converted to whole scheduler rounds.
     deadline_rounds: u64,
+    /// Fault-injection engine (disarmed/empty on the zero-fault path).
+    engine: FaultEngine,
+    /// Remote endpoints that errored at the RPC layer: circuit-broken for
+    /// the rest of the run (a fresh run reconnects).
+    io_dead: Vec<bool>,
+    /// Current scheduler round index (0-based), the fault schedule's
+    /// time base.
+    cur_round: u64,
 }
 
 impl Fleet {
@@ -164,6 +188,33 @@ impl Fleet {
     ) -> Fleet {
         assert!(!clients.is_empty(), "remote fleet needs at least one endpoint");
         Fleet::build(sys, task, kind, CloudMode::Remote(clients))
+    }
+
+    /// Local fleet with an explicit fault engine (tests and chaos runs
+    /// that build a [`crate::faults::FaultPlan`] programmatically instead
+    /// of through the `[faults]` config section).
+    pub fn local_with_faults(
+        sys: &SystemConfig,
+        task: TaskKind,
+        kind: PolicyKind,
+        engine: FaultEngine,
+    ) -> Fleet {
+        let mut f = Fleet::build(sys, task, kind, CloudMode::Local);
+        f.engine = engine;
+        f
+    }
+
+    /// Remote fleet with an explicit fault engine.
+    pub fn remote_with_faults(
+        sys: &SystemConfig,
+        task: TaskKind,
+        kind: PolicyKind,
+        clients: Vec<CloudClient>,
+        engine: FaultEngine,
+    ) -> Fleet {
+        let mut f = Fleet::remote(sys, task, kind, clients);
+        f.engine = engine;
+        f
     }
 
     fn build(sys: &SystemConfig, task: TaskKind, kind: PolicyKind, mode: CloudMode) -> Fleet {
@@ -202,6 +253,9 @@ impl Fleet {
             stats: FleetStats::default(),
             pending_age: 0,
             deadline_rounds: (cfg.batch_deadline_us as f64 / round_us).ceil() as u64,
+            engine: FaultEngine::from_config(&sys.faults, base_seed),
+            io_dead: vec![false; endpoints],
+            cur_round: 0,
             cfg,
         }
     }
@@ -224,7 +278,12 @@ impl Fleet {
         }
         let seed = fleet_seed(self.base_seed, i, next);
         let strategy = crate::policy::build(self.kind, &self.sys);
-        let state = EpisodeState::new(&self.sys, self.task, strategy, seed, false);
+        let mut state = EpisodeState::new(&self.sys, self.task, strategy, seed, false);
+        // the fresh episode starts mid-round: carry the link condition in
+        // force this round (a new EpisodeState defaults to no profile)
+        if !self.engine.is_empty() {
+            state.set_link_profile(self.engine.link_profile(self.cur_round));
+        }
         let slot = &mut self.slots[i];
         slot.episode_idx = next;
         slot.state = state;
@@ -236,7 +295,22 @@ impl Fleet {
     /// Run every session to completion; consumes the scheduler.
     pub fn run(mut self) -> FleetResult {
         loop {
+            self.cur_round = self.stats.rounds;
             self.stats.rounds += 1;
+            // fault schedule for this round: time-varying link conditions
+            // apply to every session (they share the physical network);
+            // an uplink outage blocks offload admission entirely
+            let mut outage = false;
+            if !self.engine.is_empty() {
+                let profile = self.engine.link_profile(self.cur_round);
+                for slot in &mut self.slots {
+                    slot.state.set_link_profile(profile);
+                }
+                outage = self.engine.link_out(self.cur_round);
+                if outage {
+                    self.stats.outage_rounds += 1;
+                }
+            }
             let mut progressed = false;
             for i in 0..self.slots.len() {
                 if self.slots[i].finished || self.slots[i].state.is_awaiting_cloud() {
@@ -245,7 +319,7 @@ impl Fleet {
                 if self.slots[i].state.is_done() && !self.advance_episode(i) {
                     continue;
                 }
-                let admit = self.batcher.len() < self.cfg.max_inflight.max(1);
+                let admit = !outage && self.batcher.len() < self.cfg.max_inflight.max(1);
                 let slot = &mut self.slots[i];
                 let ev = slot.state.poll(&self.sys, slot.edge.as_mut(), slot.cloud.as_mut(), admit);
                 match ev {
@@ -323,44 +397,131 @@ impl Fleet {
             FlushCause::Drain => self.stats.drain_flushes += 1,
         }
 
-        let endpoint = self.router.pick();
-        match &mut self.mode {
-            CloudMode::Local => {
-                // per-session cloud backends: responses cannot cross
-                // sessions by construction, and each session's model PRNG
-                // stream matches its single-session run exactly
-                for fr in &batch {
-                    let t0 = Instant::now();
-                    let slot = &mut self.slots[fr.session];
-                    let out = slot.cloud.infer(&fr.req.obs, &fr.req.proprio, fr.req.instr);
-                    let us = t0.elapsed().as_micros() as f64;
-                    slot.state.complete_cloud(&self.sys, out, us);
-                }
+        // Dispatch with failover: pick the least-loaded surviving endpoint;
+        // a lost reply (injected drop, beyond-timeout delay, or a real RPC
+        // error) charges the suspended sessions the offload timeout — the
+        // edge only learns the reply is lost by waiting it out — excludes
+        // that endpoint and re-dispatches; when every endpoint is
+        // exhausted (or the uplink is out) the whole batch degrades to the
+        // edge slice — so every suspended session resumes, no matter what.
+        let round = self.cur_round;
+        let n_eps = self.router.workers();
+        let mut excluded = vec![false; n_eps];
+        let max_tries = 1 + self.engine.max_retries;
+        let timeout = self.engine.timeout_ms;
+        // during a full uplink outage no pending batch may dispatch either
+        let outage = !self.engine.is_empty() && self.engine.link_out(round);
+        let mut served = false;
+        let mut tries = 0;
+        let mut timeouts_charged = 0u32;
+        while !outage && tries < max_tries && !served {
+            let alive: Vec<bool> = (0..n_eps)
+                .map(|e| !excluded[e] && !self.io_dead[e] && self.engine.endpoint_up(e, round))
+                .collect();
+            let Some(endpoint) = self.router.pick_alive(&alive) else { break };
+            tries += 1;
+            if tries > 1 {
+                self.stats.failover_redispatches += 1;
             }
-            CloudMode::Remote(clients) => {
-                let items: Vec<(u32, InferRequest)> = batch
-                    .iter()
-                    .map(|fr| {
-                        (
-                            fr.session as u32,
-                            InferRequest {
-                                instr: fr.req.instr as u32,
-                                obs: fr.req.obs,
-                                proprio: fr.req.proprio,
-                            },
-                        )
-                    })
-                    .collect();
-                let t0 = Instant::now();
-                let outs = clients[endpoint].infer_batch(&items).expect("cloud batch RPC failed");
-                let per_us = t0.elapsed().as_micros() as f64 / items.len().max(1) as f64;
-                // responses are routed back strictly by the echoed session id
-                for (sid, out) in outs {
-                    self.slots[sid as usize].state.complete_cloud(&self.sys, out, per_us);
+            // injected wire faults apply to both transports
+            let delay = self.engine.reply_delay_ms(round);
+            if self.engine.reply_dropped(round) || delay > self.engine.timeout_ms {
+                self.stats.dropped_replies += 1;
+                for fr in &batch {
+                    self.slots[fr.session].state.charge_delay(timeout);
+                }
+                timeouts_charged += 1;
+                self.router.complete(endpoint);
+                excluded[endpoint] = true;
+                continue;
+            }
+            match &mut self.mode {
+                CloudMode::Local => {
+                    // per-session cloud backends: responses cannot cross
+                    // sessions by construction, and each session's model PRNG
+                    // stream matches its single-session run exactly
+                    for fr in &batch {
+                        let t0 = Instant::now();
+                        let slot = &mut self.slots[fr.session];
+                        let out = slot.cloud.infer(&fr.req.obs, &fr.req.proprio, fr.req.instr);
+                        let us = t0.elapsed().as_micros() as f64;
+                        if delay > 0.0 {
+                            slot.state.charge_delay(delay);
+                        }
+                        slot.state.complete_cloud(&self.sys, out, us);
+                    }
+                    self.router.complete(endpoint);
+                    served = true;
+                }
+                CloudMode::Remote(clients) => {
+                    let items: Vec<(u32, InferRequest)> = batch
+                        .iter()
+                        .map(|fr| {
+                            (
+                                fr.session as u32,
+                                InferRequest {
+                                    instr: fr.req.instr as u32,
+                                    obs: fr.req.obs,
+                                    proprio: fr.req.proprio,
+                                },
+                            )
+                        })
+                        .collect();
+                    let t0 = Instant::now();
+                    match clients[endpoint].infer_batch(&items) {
+                        Ok(outs) => {
+                            let per_us =
+                                t0.elapsed().as_micros() as f64 / items.len().max(1) as f64;
+                            // responses are routed back strictly by the
+                            // echoed session id
+                            for (sid, out) in outs {
+                                let slot = &mut self.slots[sid as usize];
+                                if delay > 0.0 {
+                                    slot.state.charge_delay(delay);
+                                }
+                                slot.state.complete_cloud(&self.sys, out, per_us);
+                            }
+                            self.router.complete(endpoint);
+                            served = true;
+                        }
+                        Err(e) => {
+                            // crashed/unreachable endpoint: surface the real
+                            // error (misconfiguration must stay debuggable),
+                            // wait out the timeout, circuit-break it and
+                            // fail over to a survivor
+                            eprintln!(
+                                "[fleet] endpoint {endpoint} RPC failed ({e}); \
+                                 circuit-breaking it for the rest of the run"
+                            );
+                            self.stats.endpoint_errors += 1;
+                            for fr in &batch {
+                                self.slots[fr.session].state.charge_delay(timeout);
+                            }
+                            timeouts_charged += 1;
+                            self.io_dead[endpoint] = true;
+                            self.router.complete(endpoint);
+                        }
+                    }
                 }
             }
         }
-        self.router.complete(endpoint);
+        if !served {
+            self.stats.degraded_requests += batch.len() as u64;
+            // every failed attempt above already charged its timeout; if no
+            // dispatch was even possible (outage / no live endpoint) the
+            // edge still waits one timeout before giving up on the reply
+            let final_wait = if timeouts_charged == 0 { timeout } else { 0.0 };
+            for fr in &batch {
+                let slot = &mut self.slots[fr.session];
+                slot.state.fail_cloud(
+                    &self.sys,
+                    &fr.req,
+                    slot.edge.as_mut(),
+                    slot.cloud.as_mut(),
+                    final_wait,
+                );
+            }
+        }
     }
 }
 

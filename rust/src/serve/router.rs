@@ -24,22 +24,39 @@ impl Router {
     /// Pick the worker with the fewest outstanding requests (round-robin
     /// over ties) and account the dispatch.
     pub fn pick(&mut self) -> usize {
+        let all = vec![true; self.outstanding.len()];
+        self.pick_alive(&all).expect("pick() with no workers")
+    }
+
+    /// Failover-aware pick: least-outstanding among workers whose `alive`
+    /// flag is set (round-robin over ties, same tie-break order as
+    /// [`Router::pick`] — with every flag true the two are identical).
+    /// Returns `None` when no worker survives.
+    pub fn pick_alive(&mut self, alive: &[bool]) -> Option<usize> {
         let n = self.outstanding.len();
-        let min = *self.outstanding.iter().min().unwrap();
+        assert_eq!(alive.len(), n, "alive mask arity");
+        let min = self
+            .outstanding
+            .iter()
+            .zip(alive.iter())
+            .filter(|(_, &a)| a)
+            .map(|(&o, _)| o)
+            .min()?;
         // rotate the starting index so ties spread evenly
-        let mut chosen = self.rr % n;
+        let mut chosen = None;
         for off in 0..n {
             let i = (self.rr + off) % n;
-            if self.outstanding[i] == min {
-                chosen = i;
+            if alive[i] && self.outstanding[i] == min {
+                chosen = Some(i);
                 break;
             }
         }
+        let chosen = chosen?;
         self.rr = (chosen + 1) % n;
         self.outstanding[chosen] += 1;
         self.totals[chosen] += 1;
         self.dispatched += 1;
-        chosen
+        Some(chosen)
     }
 
     /// Lifetime dispatches per worker (fleet endpoint-spread reporting).
@@ -112,5 +129,46 @@ mod tests {
     fn completing_idle_worker_panics() {
         let mut r = Router::new(2);
         r.complete(0);
+    }
+
+    #[test]
+    fn pick_alive_routes_around_dead_workers() {
+        let mut r = Router::new(3);
+        let dead_zero = [false, true, true];
+        for _ in 0..6 {
+            let w = r.pick_alive(&dead_zero).unwrap();
+            assert_ne!(w, 0);
+        }
+        assert_eq!(r.totals()[0], 0);
+        assert_eq!(r.totals()[1], 3);
+        assert_eq!(r.totals()[2], 3);
+        assert!(r.pick_alive(&[false, false, false]).is_none());
+    }
+
+    #[test]
+    fn pick_alive_all_true_matches_pick_exactly() {
+        let mut a = Router::new(4);
+        let mut b = Router::new(4);
+        let alive = [true; 4];
+        for i in 0..50 {
+            let wa = a.pick();
+            let wb = b.pick_alive(&alive).unwrap();
+            assert_eq!(wa, wb, "pick {i}");
+            if i % 3 == 0 {
+                a.complete(wa);
+                b.complete(wb);
+            }
+        }
+    }
+
+    #[test]
+    fn pick_alive_prefers_least_loaded_survivor() {
+        let mut r = Router::new(3);
+        // load worker 1 twice, worker 2 once; worker 0 is dead
+        assert!(r.pick_alive(&[false, true, false]).is_some());
+        assert!(r.pick_alive(&[false, true, false]).is_some());
+        assert!(r.pick_alive(&[false, false, true]).is_some());
+        // least-loaded survivor is 2 (1 outstanding vs 2)
+        assert_eq!(r.pick_alive(&[false, true, true]), Some(2));
     }
 }

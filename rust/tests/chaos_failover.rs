@@ -1,0 +1,322 @@
+//! Chaos suite: deterministic fault injection against the fleet
+//! scheduler. The load-bearing guarantees:
+//!
+//! * a **fault-free plan is bit-identical** to a baseline fleet run (the
+//!   engine must not perturb a single PRNG draw when idle),
+//! * an **endpoint crash mid-run never deadlocks** — every episode of
+//!   every session completes, routed around the dead endpoint,
+//! * **dropped replies degrade to the edge slice** and the failover is
+//!   recorded in both per-episode metrics and scheduler stats,
+//! * chaos runs **replay exactly** under a fixed seed,
+//! * the **real TCP path fails over** when an endpoint dies at the RPC
+//!   layer instead of panicking.
+
+use rapid::config::{FaultsConfig, PolicyKind, SystemConfig};
+use rapid::faults::{FaultEngine, FaultPlan};
+use rapid::metrics::EpisodeMetrics;
+use rapid::net::{CloudClient, CloudServer};
+use rapid::robot::TaskKind;
+use rapid::serve::{Fleet, FleetResult};
+use rapid::vla::AnalyticBackend;
+use std::sync::atomic::Ordering;
+
+fn fleet_sys(n: usize, endpoints: usize) -> SystemConfig {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = n;
+    sys.fleet.max_batch = 4;
+    sys.fleet.max_inflight = 16;
+    sys.fleet.endpoints = endpoints;
+    sys
+}
+
+fn assert_metrics_eq(a: &EpisodeMetrics, b: &EpisodeMetrics, tag: &str) {
+    assert_eq!(a.steps, b.steps, "{tag}: steps");
+    assert_eq!(a.cloud_events, b.cloud_events, "{tag}: cloud_events");
+    assert_eq!(a.edge_events, b.edge_events, "{tag}: edge_events");
+    assert_eq!(a.preemptions, b.preemptions, "{tag}: preemptions");
+    assert_eq!(a.retransmissions, b.retransmissions, "{tag}: retransmissions");
+    assert_eq!(a.deferred_offloads, b.deferred_offloads, "{tag}: deferred_offloads");
+    assert_eq!(a.failovers, b.failovers, "{tag}: failovers");
+    assert_eq!(a.latency_columns(), b.latency_columns(), "{tag}: latency columns");
+    assert_eq!(a.rms_error, b.rms_error, "{tag}: rms_error");
+    assert_eq!(a.success, b.success, "{tag}: success");
+    assert_eq!(a.edge_gb, b.edge_gb, "{tag}: edge_gb");
+}
+
+fn assert_runs_identical(a: &FleetResult, b: &FleetResult, tag: &str) {
+    assert_eq!(a.stats.rounds, b.stats.rounds, "{tag}: rounds");
+    assert_eq!(a.stats.batches, b.stats.batches, "{tag}: batches");
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests, "{tag}: batched_requests");
+    assert_eq!(a.stats.deferred_offloads, b.stats.deferred_offloads, "{tag}: deferred");
+    assert_eq!(a.stats.dropped_replies, b.stats.dropped_replies, "{tag}: dropped");
+    assert_eq!(a.stats.degraded_requests, b.stats.degraded_requests, "{tag}: degraded");
+    assert_eq!(
+        a.stats.failover_redispatches, b.stats.failover_redispatches,
+        "{tag}: redispatches"
+    );
+    assert_eq!(a.stats.outage_rounds, b.stats.outage_rounds, "{tag}: outage rounds");
+    assert_eq!(a.endpoint_dispatches, b.endpoint_dispatches, "{tag}: endpoint spread");
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{tag}: session count");
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "{tag}: episode count");
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_metrics_eq(ma, mb, &format!("{tag}: session {}", sa.session));
+        }
+    }
+}
+
+fn assert_all_complete(res: &FleetResult, task: TaskKind, tag: &str) {
+    for s in &res.sessions {
+        assert!(!s.episodes.is_empty(), "{tag}: session {} completed no episodes", s.session);
+        for (ep, m) in s.episodes.iter().enumerate() {
+            assert_eq!(
+                m.steps,
+                task.seq_len(),
+                "{tag}: session {} episode {ep} wedged at step {}",
+                s.session,
+                m.steps
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- identity
+
+#[test]
+fn fault_free_plan_is_bit_identical_to_baseline() {
+    let sys = fleet_sys(6, 2);
+    let baseline = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+
+    // an explicitly attached, empty-plan engine must change nothing
+    let engine = FaultEngine::new(FaultPlan::none(), 12345, 250.0, 2);
+    let empty = Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::Rapid, engine).run();
+    assert_runs_identical(&baseline, &empty, "empty plan");
+
+    // an enabled [faults] section whose windows never activate is equally
+    // inert (this is what a chaos config with all-zero windows means)
+    let mut inert = sys.clone();
+    inert.faults.enabled = true;
+    inert.faults.drop_prob = 0.9; // armed, but its window is empty
+    let inert_run = Fleet::local(&inert, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_runs_identical(&baseline, &inert_run, "inert config");
+    assert_eq!(inert_run.stats.dropped_replies, 0);
+    assert_eq!(inert_run.stats.degraded_requests, 0);
+}
+
+// ---------------------------------------------------------------- crashes
+
+#[test]
+fn endpoint_crash_mid_run_never_deadlocks() {
+    // endpoints 0 and 1 crash early and never recover; everything must
+    // route to survivor 2 and every episode must complete
+    let sys = fleet_sys(6, 3);
+    let plan = FaultPlan::none().crash(0, 2, u64::MAX).crash(1, 5, u64::MAX);
+    let engine = FaultEngine::new(plan, 1, 250.0, 2);
+    let res =
+        Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine).run();
+
+    assert_all_complete(&res, TaskKind::PickPlace, "crash");
+    // no endpoint survived? no — 2 did, so nothing degraded to the edge
+    assert_eq!(res.stats.degraded_requests, 0, "{:?}", res.stats);
+    assert!(res.endpoint_dispatches[2] > 0, "{:?}", res.endpoint_dispatches);
+    // no deferrals, no drops: every offload still becomes a cloud event
+    let refill_rounds = (TaskKind::PickPlace.seq_len() + rapid::CHUNK - 1) / rapid::CHUNK;
+    assert_eq!(res.total_cloud_events(), (6 * refill_rounds) as u64);
+}
+
+#[test]
+fn all_endpoints_crashed_degrades_every_offload_to_the_edge() {
+    let sys = fleet_sys(4, 2);
+    let plan = FaultPlan::none().crash(0, 0, u64::MAX).crash(1, 0, u64::MAX);
+    let engine = FaultEngine::new(plan, 1, 250.0, 2);
+    let res =
+        Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine).run();
+
+    assert_all_complete(&res, TaskKind::PickPlace, "total crash");
+    assert!(res.stats.degraded_requests > 0);
+    assert_eq!(res.endpoint_dispatches, vec![0, 0], "nothing may reach a dead endpoint");
+    for s in &res.sessions {
+        let m = &s.episodes[0];
+        assert!(m.failovers > 0, "session {} recorded no failover", s.session);
+        assert_eq!(m.edge_events, m.failovers, "session {}", s.session);
+    }
+}
+
+// ------------------------------------------------------------------ drops
+
+#[test]
+fn dropped_replies_degrade_to_edge_and_record_the_failover() {
+    // single endpoint, every reply lost: each dispatch drops, the retry
+    // finds no survivor, the batch degrades — and the books balance
+    let sys = fleet_sys(4, 1);
+    let plan = FaultPlan::none().drop_replies(0, u64::MAX, 1.0);
+    let engine = FaultEngine::new(plan, 7, 250.0, 2);
+    let res = Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::Rapid, engine).run();
+
+    assert_all_complete(&res, TaskKind::PickPlace, "drops");
+    assert!(res.stats.dropped_replies > 0);
+    assert!(res.stats.degraded_requests > 0);
+    assert_eq!(res.stats.degraded_requests, res.stats.batched_requests);
+    let failovers: u64 =
+        res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.failovers).sum();
+    assert_eq!(failovers, res.stats.degraded_requests, "per-episode metrics must record each failover");
+}
+
+#[test]
+fn partial_drop_window_fails_over_to_surviving_endpoint() {
+    // two endpoints, drops only in a window: inside it, the retry lands on
+    // the other endpoint (which draws its own drop decision); the run
+    // completes either way and any lost reply is accounted
+    let sys = fleet_sys(6, 2);
+    let plan = FaultPlan::none().drop_replies(0, 30, 0.8);
+    let engine = FaultEngine::new(plan, 3, 250.0, 2);
+    let res =
+        Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine).run();
+
+    assert_all_complete(&res, TaskKind::PickPlace, "partial drops");
+    assert!(res.stats.dropped_replies > 0, "{:?}", res.stats);
+    assert!(res.stats.failover_redispatches > 0, "{:?}", res.stats);
+}
+
+// ----------------------------------------------------------------- outage
+
+#[test]
+fn outage_blocks_pending_batch_dispatch_and_degrades_it() {
+    // sessions suspend at round 0 (pre-outage); the drain flush fires at
+    // round 1, inside the outage window — the pending batch must NOT
+    // leave the edge: it degrades, charged one offload timeout
+    let mut sys = fleet_sys(4, 2);
+    sys.fleet.max_batch = 8; // 4 sessions can never fill the batch
+    sys.fleet.batch_deadline_us = 50_000; // 1 round: no same-round deadline flush
+    let plan = FaultPlan::none().outage(1, 5);
+    let engine = FaultEngine::new(plan, 1, 250.0, 2);
+    let res =
+        Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine).run();
+
+    assert_all_complete(&res, TaskKind::PickPlace, "outage");
+    // the round-0 batch (one request per session) degraded mid-outage
+    assert!(res.stats.degraded_requests >= 4, "{:?}", res.stats);
+    assert!(res.stats.outage_rounds >= 1, "{:?}", res.stats);
+    for s in &res.sessions {
+        let m = &s.episodes[0];
+        assert!(m.failovers >= 1, "session {} never failed over", s.session);
+        // exactly one timeout charged per degraded request — pinned
+        // exactly: a CloudOnly session's only other overhead source is the
+        // 40 ms/retransmission routing penalty, so double-charging (500ms
+        // per failover) cannot hide in this equality
+        let expect = 250.0 * m.failovers as f64 + 40.0 * m.retransmissions as f64;
+        assert!(
+            (m.overhead_ms - expect).abs() < 1e-6,
+            "session {}: overhead {} != {expect} (failovers {}, retrans {})",
+            s.session,
+            m.overhead_ms,
+            m.failovers,
+            m.retransmissions
+        );
+    }
+    // offloads after the outage window dispatch normally
+    assert!(res.endpoint_dispatches.iter().sum::<u64>() > 0, "{:?}", res.endpoint_dispatches);
+}
+
+// ---------------------------------------------------------------- replay
+
+#[test]
+fn chaos_runs_replay_exactly_under_a_fixed_seed() {
+    let mut sys = fleet_sys(6, 3);
+    sys.faults = FaultsConfig::demo();
+    let a = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    let b = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_runs_identical(&a, &b, "chaos replay");
+    assert_all_complete(&a, TaskKind::PickPlace, "chaos replay");
+}
+
+// ----------------------------------------------------- the shipped config
+
+#[test]
+fn chaos_toml_schedule_matches_builtin_demo() {
+    // `rapid chaos` falls back to FaultsConfig::demo() (+ the same fleet
+    // shape) when the file is absent — the two must not drift
+    let src = std::fs::read_to_string("configs/chaos.toml").expect("configs/chaos.toml");
+    let sys = SystemConfig::from_toml(&src).expect("chaos.toml parses");
+    assert_eq!(sys.faults, FaultsConfig::demo(), "chaos.toml and FaultsConfig::demo() drifted");
+    assert_eq!(sys.fleet.n_sessions, 6);
+    assert_eq!(sys.fleet.endpoints, 3);
+}
+
+#[test]
+fn chaos_toml_fleet_completes_every_episode_for_every_policy() {
+    let src = std::fs::read_to_string("configs/chaos.toml").expect("configs/chaos.toml");
+    let sys = SystemConfig::from_toml(&src).expect("chaos.toml parses");
+    assert!(sys.faults.enabled);
+    assert!(sys.faults.crash_end > sys.faults.crash_start, "chaos.toml schedules a crash");
+    assert!(sys.fleet.endpoints >= 2, "chaos.toml is multi-endpoint");
+
+    for kind in [PolicyKind::Rapid, PolicyKind::EdgeOnly, PolicyKind::CloudOnly] {
+        let res = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_all_complete(&res, TaskKind::PickPlace, &format!("chaos.toml {kind:?}"));
+    }
+}
+
+// ------------------------------------------------------------- real wire
+
+#[test]
+fn crashed_remote_endpoint_fails_over_to_the_survivor() {
+    // endpoint 0 is a live server; endpoint 1 is a connection whose
+    // listener is gone before the run starts — its first RPC errors, the
+    // scheduler circuit-breaks it and re-dispatches to the survivor
+    let server =
+        CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(100))).unwrap();
+    let alive = CloudClient::connect(&server.addr.to_string()).unwrap();
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let c = CloudClient::connect(&addr.to_string()).unwrap();
+        drop(l); // never accepted; the connection dies with the listener
+        c
+    };
+
+    let sys = fleet_sys(4, 2);
+    let res =
+        Fleet::remote(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, vec![alive, dead]).run();
+
+    assert_all_complete(&res, TaskKind::PickPlace, "remote failover");
+    assert!(res.stats.endpoint_errors >= 1, "{:?}", res.stats);
+    assert!(res.stats.failover_redispatches >= 1, "{:?}", res.stats);
+    assert_eq!(res.stats.degraded_requests, 0, "the survivor serves everything");
+
+    let refill_rounds = (TaskKind::PickPlace.seq_len() + rapid::CHUNK - 1) / rapid::CHUNK;
+    let served = server.stats().requests.load(Ordering::Relaxed);
+    assert_eq!(served, (4 * refill_rounds) as u64, "every request reached the survivor");
+    server.shutdown();
+}
+
+#[test]
+fn remote_fleet_with_engine_crash_window_routes_around_the_endpoint() {
+    // injected (engine-level) crash on a *real* endpoint: the scheduler
+    // must never dispatch to it during the window
+    let servers: Vec<CloudServer> = (0..2)
+        .map(|i| {
+            CloudServer::start("127.0.0.1:0", 4, move || {
+                Box::new(AnalyticBackend::cloud(200 + i as u64))
+            })
+            .unwrap()
+        })
+        .collect();
+    let clients: Vec<CloudClient> =
+        servers.iter().map(|s| CloudClient::connect(&s.addr.to_string()).unwrap()).collect();
+
+    let sys = fleet_sys(4, 2);
+    let plan = FaultPlan::none().crash(1, 0, u64::MAX);
+    let engine = FaultEngine::new(plan, 1, 250.0, 2);
+    let res =
+        Fleet::remote_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, clients, engine)
+            .run();
+
+    assert_all_complete(&res, TaskKind::PickPlace, "engine crash on wire");
+    assert_eq!(res.endpoint_dispatches[1], 0, "{:?}", res.endpoint_dispatches);
+    assert_eq!(servers[1].stats().requests.load(Ordering::Relaxed), 0);
+    assert!(servers[0].stats().requests.load(Ordering::Relaxed) > 0);
+    for s in servers {
+        s.shutdown();
+    }
+}

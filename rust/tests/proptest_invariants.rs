@@ -5,8 +5,9 @@
 //! drive each property over many cases; a failure reports the seed so the
 //! case replays deterministically.
 
-use rapid::config::{DispatcherConfig, NoiseLevel, PolicyKind, SystemConfig};
+use rapid::config::{DispatcherConfig, LinkConfig, NoiseLevel, PolicyKind, SystemConfig};
 use rapid::dispatcher::{fusion, Cooldown, RapidDispatcher};
+use rapid::net::Link;
 use rapid::robot::{Jv, SensorFrame, TaskKind};
 use rapid::util::{Pcg32, RollingStats};
 
@@ -320,6 +321,93 @@ fn prop_fleet_runs_deterministic() {
                     return Err(format!("session {} episodes differ", sa.session));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #12 (link): holding the seed fixed, transfer time is
+/// monotone in payload bytes — a same-seed link replays the identical
+/// jitter/retransmission stream, so only the bandwidth term can differ.
+#[test]
+fn prop_link_transfer_monotone_in_bytes() {
+    seeded_forall!("link_monotone", 200, |rng: &mut Pcg32| {
+        let seed = rng.next_u64();
+        let clarity = rng.range(0.05, 1.0);
+        let small = rng.range(1e3, 3e6);
+        let big = small + rng.range(0.0, 5e6);
+        let mut la = Link::new(&LinkConfig::default(), seed);
+        let mut lb = Link::new(&LinkConfig::default(), seed);
+        let ta = la.transfer(small, clarity);
+        let tb = lb.transfer(big, clarity);
+        if ta.ms > tb.ms + 1e-12 {
+            return Err(format!("{small}B took {}ms > {big}B {}ms", ta.ms, tb.ms));
+        }
+        if ta.retransmissions != tb.retransmissions {
+            return Err("same-seed links diverged on retransmissions".into());
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #13 (link): a perfectly clear scene never retransmits, for
+/// any payload, seed or retransmission sensitivity.
+#[test]
+fn prop_link_clarity_one_never_retransmits() {
+    seeded_forall!("link_clean", 100, |rng: &mut Pcg32| {
+        let mut cfg = LinkConfig::default();
+        cfg.noise_retrans = rng.range(0.0, 3.0);
+        let mut l = Link::new(&cfg, rng.next_u64());
+        for _ in 0..50 {
+            let t = l.transfer(rng.range(1e3, 8e6), 1.0);
+            if t.retransmissions != 0 {
+                return Err(format!("{} retransmissions at clarity 1.0", t.retransmissions));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #14 (link): retransmissions are bounded by 8 even under the
+/// worst clarity/sensitivity, and transfer times stay finite and positive.
+#[test]
+fn prop_link_retransmissions_bounded() {
+    seeded_forall!("link_bounded", 100, |rng: &mut Pcg32| {
+        let mut cfg = LinkConfig::default();
+        cfg.noise_retrans = rng.range(0.5, 4.0); // clamps at p = 0.9
+        let mut l = Link::new(&cfg, rng.next_u64());
+        for _ in 0..100 {
+            let t = l.transfer(rng.range(1e3, 8e6), rng.range(0.0, 0.3));
+            if t.retransmissions > 8 {
+                return Err(format!("{} retransmissions > 8", t.retransmissions));
+            }
+            if !(t.ms.is_finite() && t.ms > 0.0) {
+                return Err(format!("bad transfer time {}", t.ms));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #15 (link): the lifetime accounting totals equal a naive
+/// recomputation over the observed transfers.
+#[test]
+fn prop_link_totals_account() {
+    seeded_forall!("link_totals", 100, |rng: &mut Pcg32| {
+        let mut l = Link::new(&LinkConfig::default(), rng.next_u64());
+        let mut bytes_naive = 0.0f64;
+        let mut retrans_naive = 0u64;
+        for _ in 0..60 {
+            let bytes = rng.range(1e3, 5e6);
+            let t = l.transfer(bytes, rng.range(0.0, 1.0));
+            bytes_naive += bytes * (1.0 + t.retransmissions as f64);
+            retrans_naive += t.retransmissions as u64;
+        }
+        if (l.total_bytes - bytes_naive).abs() > 1e-6 {
+            return Err(format!("total_bytes {} != naive {bytes_naive}", l.total_bytes));
+        }
+        if l.total_retrans != retrans_naive {
+            return Err(format!("total_retrans {} != naive {retrans_naive}", l.total_retrans));
         }
         Ok(())
     });

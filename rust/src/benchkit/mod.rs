@@ -15,6 +15,24 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form (one JSON object) for the perf trajectory.
+    pub fn to_json(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"std_ns\":{},\"min_ns\":{},\
+             \"max_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{}}}",
+            json_escape(&self.name),
+            self.iters,
+            num(s.mean),
+            num(s.std),
+            num(s.min),
+            num(s.max),
+            num(s.p50),
+            num(s.p95),
+            num(s.p99),
+        )
+    }
+
     pub fn report(&self) -> String {
         let s = &self.summary;
         format!(
@@ -27,6 +45,32 @@ impl BenchResult {
             fmt_ns(s.min),
         )
     }
+}
+
+/// JSON-safe number: non-finite values (which valid runs never produce)
+/// degrade to null instead of emitting unparseable tokens.
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -89,6 +133,18 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// All results as one JSON document: `{"results": [...]}` — the
+    /// schema behind `BENCH_serve.json` and friends.
+    pub fn to_json(&self) -> String {
+        let items: Vec<String> = self.results.iter().map(|r| r.to_json()).collect();
+        format!("{{\"results\":[{}]}}\n", items.join(","))
+    }
+
+    /// Write [`Bench::to_json`] to `path`.
+    pub fn save_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
 }
 
 /// Standard header printed by every bench binary.
@@ -117,6 +173,21 @@ mod tests {
         let mut b = Bench { warmup_iters: 0, min_iters: 2, max_iters: 1_000_000, budget_ms: 30.0, results: vec![] };
         let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(5)));
         assert!(r.iters < 20, "iters {}", r.iters);
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_in_tree_parser() {
+        let mut b = Bench { warmup_iters: 0, min_iters: 3, max_iters: 10, budget_ms: 20.0, results: vec![] };
+        b.run("serve/\"quoted\"\nname", || std::hint::black_box(1 + 1));
+        b.run("fleet/8x1", || std::hint::black_box(2 + 2));
+        let doc = b.to_json();
+        let v = crate::config::json::parse_json(&doc).expect("benchkit JSON must parse");
+        let results = v.get("results").and_then(|r| r.as_list()).expect("results array");
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].str_or("name", ""), "fleet/8x1");
+        assert!(results[0].f64_or("mean_ns", -1.0) >= 0.0);
+        assert!(results[0].f64_or("iters", 0.0) >= 3.0);
+        assert!(results[0].f64_or("p95_ns", -1.0) >= results[0].f64_or("min_ns", 1e18) - 1e-9);
     }
 
     #[test]

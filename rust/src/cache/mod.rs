@@ -1,0 +1,34 @@
+//! Redundancy-aware action-reuse cache — converts the step-wise
+//! redundancy the dispatcher already measures into *skipped cloud round
+//! trips*.
+//!
+//! Two tiers share one deterministic store:
+//!
+//! * **Per-session speculative reuse**: on a cloud dispatch in a redundant
+//!   phase, the episode driver first probes a cache of recent cloud chunks
+//!   keyed by a quantized observation/kinematic [`Signature`] (joint
+//!   state, velocity, windowed anomaly z-scores, task id). A hit within
+//!   the divergence budget serves the chunk at edge-probe latency instead
+//!   of suspending the session on the cloud.
+//! * **Fleet-shared result cache**: the fleet scheduler admits
+//!   cross-session batch replies into one shared [`ReuseStore`], so
+//!   session B reuses session A's answer for a matching signature —
+//!   including through uplink-outage windows, when no fresh offload can
+//!   leave the edge.
+//!
+//! Determinism contract (same discipline as `faults/`): with the cache
+//! disabled no store is constructed and every serve path is **bit
+//! identical** to a build without this module; with it enabled, eviction
+//! is the only stochastic choice and draws from the store's own seeded
+//! PRNG *only when an eviction actually happens*, so runs replay exactly
+//! under a fixed seed.
+
+pub mod policy;
+pub mod signature;
+pub mod stats;
+pub mod store;
+
+pub use policy::ReusePolicy;
+pub use signature::Signature;
+pub use stats::CacheStats;
+pub use store::{ProbeOutcome, ReuseStore};

@@ -1,0 +1,68 @@
+//! Probe policy: when is speculative reuse allowed at all?
+//!
+//! The signature (spatial budget) and TTL (temporal budget) bound *how
+//! far* a reused chunk may diverge from a fresh cloud answer; the probe
+//! gate bounds *when* reuse is attempted in the first place: a dispatch
+//! whose windowed anomaly z-scores exceed `cache.max_zscore` is a
+//! genuinely novel situation — exactly the critical-phase events RAPID
+//! exists to send to the cloud — and must never be served from memory.
+//! Routine (redundant-phase) dispatches, and strategies that expose no
+//! kinematic evidence at all (Cloud-Only's timer-like refills), probe
+//! freely.
+
+use super::signature::Signature;
+use crate::config::CacheConfig;
+use crate::dispatcher::ReuseEvidence;
+use crate::robot::SensorFrame;
+
+/// Thin, allocation-free view over the `[cache]` knobs used at dispatch
+/// time (construction is free; the driver builds one per offload).
+pub struct ReusePolicy<'a> {
+    cfg: &'a CacheConfig,
+}
+
+impl<'a> ReusePolicy<'a> {
+    pub fn new(cfg: &'a CacheConfig) -> ReusePolicy<'a> {
+        ReusePolicy { cfg }
+    }
+
+    /// The dispatch's cache key.
+    pub fn signature(
+        &self,
+        instr: usize,
+        frame: &SensorFrame,
+        ev: Option<&ReuseEvidence>,
+    ) -> Signature {
+        Signature::of(self.cfg, instr, frame, ev)
+    }
+
+    /// True when this dispatch may be served from the store. NaN scores
+    /// compare false and therefore refuse reuse.
+    pub fn probe_allowed(&self, ev: Option<&ReuseEvidence>) -> bool {
+        match ev {
+            None => true,
+            Some(e) => e.m_acc_hat.max(e.m_tau_hat) <= self.cfg.max_zscore,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(a: f64, t: f64) -> ReuseEvidence {
+        ReuseEvidence { m_acc_hat: a, m_tau_hat: t, velocity: 0.3 }
+    }
+
+    #[test]
+    fn gate_follows_max_zscore() {
+        let cfg = CacheConfig::default();
+        let p = ReusePolicy::new(&cfg);
+        assert!(p.probe_allowed(None), "no evidence = routine dispatch");
+        assert!(p.probe_allowed(Some(&ev(1.0, 2.0))));
+        assert!(p.probe_allowed(Some(&ev(cfg.max_zscore, 0.0))), "boundary inclusive");
+        assert!(!p.probe_allowed(Some(&ev(cfg.max_zscore + 0.1, 0.0))));
+        assert!(!p.probe_allowed(Some(&ev(0.0, 1e9))));
+        assert!(!p.probe_allowed(Some(&ev(f64::NAN, 0.0))), "NaN refuses reuse");
+    }
+}

@@ -1,0 +1,124 @@
+//! Quantized observation/kinematic signature — the reuse-cache key.
+//!
+//! Two dispatches may share a cached chunk only when they are *kinematic
+//! near-duplicates*: same task instruction, same joint configuration and
+//! speed up to a quantization step, and the same (coarsely binned)
+//! windowed anomaly z-scores. Quantization is the divergence budget's
+//! spatial half — the [`crate::cache::ReuseStore`] TTL is its temporal
+//! half. Tighter `quant` means fewer but safer hits; the defaults absorb
+//! sensor noise (σ ≈ 0.002 rad) without conflating distinct trajectory
+//! points (bins of 0.1 rad / 0.1 rad/s).
+
+use crate::config::CacheConfig;
+use crate::dispatcher::ReuseEvidence;
+use crate::robot::SensorFrame;
+use crate::N_JOINTS;
+
+/// Exact-match cache key: everything already quantized to integer bins.
+/// Derived `Eq`/`Hash` make lookups allocation-free and deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Signature {
+    /// Task instruction id — chunks never cross tasks.
+    pub instr: usize,
+    /// Joint positions, binned at `cache.quant` rad.
+    q: [i32; N_JOINTS],
+    /// Velocity norm ‖q̇‖, binned at `cache.quant` rad/s.
+    v: i32,
+    /// Windowed anomaly z-scores (M̂_acc, M̂_τ), binned at `cache.z_quant`
+    /// σ; 0 for strategies that expose no kinematic evidence.
+    z_acc: i32,
+    z_tau: i32,
+}
+
+/// Quantize to a bin index. Non-finite inputs and non-positive steps map
+/// to a sentinel bin that never collides with a normal signature.
+fn bin(x: f64, step: f64) -> i32 {
+    if !x.is_finite() || step <= 0.0 {
+        return i32::MAX;
+    }
+    (x / step).round().clamp(-1.0e9, 1.0e9) as i32
+}
+
+impl Signature {
+    /// Build the signature of a dispatch from the last proprioceptive
+    /// frame and (when the strategy provides it) the dispatcher's
+    /// normalized anomaly evidence.
+    pub fn of(
+        cfg: &CacheConfig,
+        instr: usize,
+        frame: &SensorFrame,
+        ev: Option<&ReuseEvidence>,
+    ) -> Signature {
+        let mut q = [0i32; N_JOINTS];
+        for (i, b) in q.iter_mut().enumerate() {
+            *b = bin(frame.q[i], cfg.quant);
+        }
+        let (z_acc, z_tau) = match ev {
+            Some(e) => (bin(e.m_acc_hat, cfg.z_quant), bin(e.m_tau_hat, cfg.z_quant)),
+            None => (0, 0),
+        };
+        Signature { instr, q, v: bin(frame.dq.norm(), cfg.quant), z_acc, z_tau }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::Jv;
+
+    fn frame(q: f64, dq: f64) -> SensorFrame {
+        SensorFrame { step: 0, q: Jv::splat(q), dq: Jv::splat(dq), tau: Jv::ZERO }
+    }
+
+    fn cfg() -> CacheConfig {
+        CacheConfig::default()
+    }
+
+    #[test]
+    fn identical_states_share_a_signature() {
+        let c = cfg();
+        let a = Signature::of(&c, 1, &frame(0.31, 0.2), None);
+        let b = Signature::of(&c, 1, &frame(0.31, 0.2), None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn noise_below_the_quantization_step_is_absorbed() {
+        let c = cfg();
+        let a = Signature::of(&c, 1, &frame(0.30, 0.20), None);
+        let b = Signature::of(&c, 1, &frame(0.302, 0.201), None);
+        assert_eq!(a, b, "sub-quant jitter must not split the bin");
+    }
+
+    #[test]
+    fn distinct_states_and_tasks_split() {
+        let c = cfg();
+        let a = Signature::of(&c, 1, &frame(0.3, 0.2), None);
+        assert_ne!(a, Signature::of(&c, 2, &frame(0.3, 0.2), None), "task id");
+        assert_ne!(a, Signature::of(&c, 1, &frame(0.9, 0.2), None), "joint state");
+        assert_ne!(a, Signature::of(&c, 1, &frame(0.3, 1.9), None), "velocity");
+    }
+
+    #[test]
+    fn evidence_bins_participate_in_the_key() {
+        let c = cfg();
+        let calm = ReuseEvidence { m_acc_hat: 0.2, m_tau_hat: 0.1, velocity: 0.2 };
+        let wild = ReuseEvidence { m_acc_hat: 30.0, m_tau_hat: 0.1, velocity: 0.2 };
+        let a = Signature::of(&c, 1, &frame(0.3, 0.2), Some(&calm));
+        let b = Signature::of(&c, 1, &frame(0.3, 0.2), Some(&wild));
+        assert_ne!(a, b);
+        // calm evidence quantizes into the no-evidence bin (both ~0σ)
+        assert_eq!(a, Signature::of(&c, 1, &frame(0.3, 0.2), None));
+    }
+
+    #[test]
+    fn non_finite_inputs_never_match_normal_bins() {
+        let c = cfg();
+        let mut f = frame(0.3, 0.2);
+        f.q[0] = f64::NAN;
+        let bad = Signature::of(&c, 1, &f, None);
+        assert_ne!(bad, Signature::of(&c, 1, &frame(0.3, 0.2), None));
+        // but NaN signatures are still self-equal (no poisoned HashMap)
+        assert_eq!(bad, Signature::of(&c, 1, &f, None));
+    }
+}

@@ -1,0 +1,71 @@
+//! Reuse-cache counters, reported per store (fleet aggregate) and — for
+//! hits/misses/staleness — mirrored into `EpisodeMetrics` per session.
+
+/// Lifetime counters of one [`crate::cache::ReuseStore`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Probes attempted (hits + misses).
+    pub probes: u64,
+    /// Probes served from the store within the divergence budget.
+    pub hits: u64,
+    /// Probes that found nothing usable (no entry, wrong owner, or stale).
+    pub misses: u64,
+    /// Subset of misses where an entry existed but exceeded its
+    /// TTL-in-rounds (the entry is dropped on discovery).
+    pub stale: u64,
+    /// Entries offered to the store (inserts + refreshes).
+    pub admissions: u64,
+    /// Admissions that refreshed an existing signature in place.
+    pub refreshed: u64,
+    /// Entries displaced by seeded random replacement at capacity.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction over all probes (0 when nothing was probed).
+    pub fn hit_rate(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.probes as f64
+        }
+    }
+
+    /// True when every counter is zero (an untouched store).
+    pub fn is_zero(&self) -> bool {
+        *self == CacheStats::default()
+    }
+
+    /// One-line human report, shared by every CLI surface so `rapid run`
+    /// and `rapid fleet` can never drift apart.
+    pub fn report(&self) -> String {
+        format!(
+            "cache: probes {}  hits {} ({:.1}%)  misses {}  stale {}  admitted {}  refreshed {}  evicted {}",
+            self.probes,
+            self.hits,
+            100.0 * self.hit_rate(),
+            self.misses,
+            self.stale,
+            self.admissions,
+            self.refreshed,
+            self.evictions
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_safe_and_correct() {
+        let mut s = CacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert!(s.is_zero());
+        s.probes = 4;
+        s.hits = 3;
+        s.misses = 1;
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert!(!s.is_zero());
+    }
+}

@@ -1,0 +1,256 @@
+//! The reuse store: a bounded, TTL'd, owner-tagged map from quantized
+//! signatures to cloud-grade action chunks.
+//!
+//! Determinism: lookups and inserts never iterate the backing `HashMap`
+//! (iteration order is the only non-deterministic thing about it), and
+//! the store's PRNG is drawn **only** when an at-capacity admission must
+//! evict — an under-capacity run consumes zero draws and replays exactly.
+
+use super::signature::Signature;
+use super::stats::CacheStats;
+use crate::config::CacheConfig;
+use crate::util::Pcg32;
+use crate::vla::ModelOut;
+use std::collections::HashMap;
+
+/// Outcome of a probe.
+pub enum ProbeOutcome {
+    /// A fresh entry within the divergence budget: serve this chunk.
+    Hit(ModelOut),
+    /// An entry existed but aged past `ttl_rounds`; it has been dropped.
+    Stale,
+    /// No usable entry.
+    Miss,
+}
+
+struct Entry {
+    sig: Signature,
+    out: ModelOut,
+    /// Scheduler round (control step, single-session) of admission.
+    round: u64,
+    /// Session that produced the chunk (the per-session tier filters on
+    /// this when the fleet-shared tier is disabled).
+    owner: usize,
+}
+
+/// Bounded reuse cache with seeded-deterministic random replacement.
+///
+/// In shared mode every session reads and writes one namespace; with
+/// `shared = false` the map is keyed by (owner, signature) so each
+/// session keeps a private tier inside the same bounded store.
+pub struct ReuseStore {
+    capacity: usize,
+    ttl_rounds: u64,
+    shared: bool,
+    rng: Pcg32,
+    map: HashMap<(usize, Signature), usize>,
+    entries: Vec<Entry>,
+    stats: CacheStats,
+    /// High-water mark: one past the latest admission round. Per-session
+    /// callers whose round counter restarts (a fresh episode over a
+    /// persistent store) resume from here so entry ages — and therefore
+    /// the TTL budget — stay monotonic across episodes.
+    next_round: u64,
+}
+
+impl ReuseStore {
+    pub fn new(capacity: usize, ttl_rounds: u64, shared: bool, seed: u64) -> ReuseStore {
+        let capacity = capacity.max(1);
+        ReuseStore {
+            capacity,
+            ttl_rounds,
+            shared,
+            rng: Pcg32::new(seed, 0xCAC_4E),
+            map: HashMap::with_capacity(capacity),
+            entries: Vec::with_capacity(capacity),
+            stats: CacheStats::default(),
+            next_round: 0,
+        }
+    }
+
+    /// Store described by a `[cache]` config section. `base_seed` seeds
+    /// the eviction stream when the section doesn't pin its own seed.
+    pub fn from_config(cfg: &CacheConfig, base_seed: u64) -> ReuseStore {
+        let seed = if cfg.seed != 0 { cfg.seed } else { base_seed ^ 0x5EED_CACE };
+        ReuseStore::new(cfg.capacity, cfg.ttl_rounds, cfg.shared, seed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// One past the latest admission round: the round a fresh per-session
+    /// episode should resume its clock from (see `run_episode_with_cache`).
+    pub fn next_round(&self) -> u64 {
+        self.next_round
+    }
+
+    /// Map key: the shared tier pools every session into one namespace,
+    /// the unshared tier prefixes the owner.
+    fn key(&self, sig: Signature, owner: usize) -> (usize, Signature) {
+        (if self.shared { 0 } else { owner }, sig)
+    }
+
+    /// Look up a signature at scheduler round `round` on behalf of session
+    /// `owner`. Stale entries are evicted on discovery so the store never
+    /// serves a chunk older than its TTL.
+    pub fn probe(&mut self, sig: &Signature, round: u64, owner: usize) -> ProbeOutcome {
+        self.stats.probes += 1;
+        let Some(&idx) = self.map.get(&self.key(*sig, owner)) else {
+            self.stats.misses += 1;
+            return ProbeOutcome::Miss;
+        };
+        if round.saturating_sub(self.entries[idx].round) > self.ttl_rounds {
+            self.stats.misses += 1;
+            self.stats.stale += 1;
+            self.remove_at(idx);
+            return ProbeOutcome::Stale;
+        }
+        self.stats.hits += 1;
+        ProbeOutcome::Hit(self.entries[idx].out.clone())
+    }
+
+    /// Admit a cloud reply. An existing signature is refreshed in place;
+    /// a new one at capacity displaces a seeded-random victim.
+    pub fn admit(&mut self, sig: Signature, out: ModelOut, round: u64, owner: usize) {
+        self.stats.admissions += 1;
+        self.next_round = self.next_round.max(round.saturating_add(1));
+        if let Some(&idx) = self.map.get(&self.key(sig, owner)) {
+            self.stats.refreshed += 1;
+            let e = &mut self.entries[idx];
+            e.out = out;
+            e.round = round;
+            e.owner = owner;
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            // seeded random replacement: the only PRNG draw in the store
+            let victim = self.rng.below(self.entries.len() as u32) as usize;
+            self.stats.evictions += 1;
+            let old = self.key(self.entries[victim].sig, self.entries[victim].owner);
+            self.map.remove(&old);
+            self.entries[victim] = Entry { sig, out, round, owner };
+            self.map.insert(self.key(sig, owner), victim);
+            return;
+        }
+        self.entries.push(Entry { sig, out, round, owner });
+        self.map.insert(self.key(sig, owner), self.entries.len() - 1);
+    }
+
+    /// Remove the entry at `idx` (swap-remove; the moved tail entry's map
+    /// slot is re-pointed).
+    fn remove_at(&mut self, idx: usize) {
+        let old = self.key(self.entries[idx].sig, self.entries[idx].owner);
+        self.map.remove(&old);
+        self.entries.swap_remove(idx);
+        if idx < self.entries.len() {
+            let moved = self.key(self.entries[idx].sig, self.entries[idx].owner);
+            self.map.insert(moved, idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::robot::{Jv, SensorFrame};
+    use crate::vla::Backend;
+
+    fn sig(q: f64) -> Signature {
+        let f = SensorFrame { step: 0, q: Jv::splat(q), dq: Jv::ZERO, tau: Jv::ZERO };
+        Signature::of(&CacheConfig::default(), 1, &f, None)
+    }
+
+    fn out(seed: u64) -> ModelOut {
+        crate::vla::AnalyticBackend::cloud(seed).infer(
+            &[0.1; crate::D_VIS],
+            &[0.0; crate::D_PROP],
+            1,
+        )
+    }
+
+    #[test]
+    fn probe_hit_miss_and_stats() {
+        let mut s = ReuseStore::new(8, 10, true, 1);
+        assert!(matches!(s.probe(&sig(0.1), 0, 0), ProbeOutcome::Miss));
+        s.admit(sig(0.1), out(1), 0, 0);
+        assert!(matches!(s.probe(&sig(0.1), 3, 5), ProbeOutcome::Hit(_)), "shared tier crosses owners");
+        assert!(matches!(s.probe(&sig(0.7), 3, 0), ProbeOutcome::Miss));
+        assert_eq!(s.stats().probes, 3);
+        assert_eq!(s.stats().hits, 1);
+        assert_eq!(s.stats().misses, 2);
+    }
+
+    #[test]
+    fn ttl_expires_and_drops_the_entry() {
+        let mut s = ReuseStore::new(8, 10, true, 1);
+        s.admit(sig(0.1), out(1), 0, 0);
+        assert!(matches!(s.probe(&sig(0.1), 10, 0), ProbeOutcome::Hit(_)), "age == ttl still fresh");
+        assert!(matches!(s.probe(&sig(0.1), 11, 0), ProbeOutcome::Stale));
+        assert_eq!(s.len(), 0, "stale entry dropped on discovery");
+        assert!(matches!(s.probe(&sig(0.1), 11, 0), ProbeOutcome::Miss));
+        assert_eq!(s.stats().stale, 1);
+    }
+
+    #[test]
+    fn unshared_store_is_per_session() {
+        let mut s = ReuseStore::new(8, 100, false, 1);
+        s.admit(sig(0.1), out(1), 0, 3);
+        assert!(matches!(s.probe(&sig(0.1), 1, 4), ProbeOutcome::Miss), "other session blocked");
+        assert!(matches!(s.probe(&sig(0.1), 1, 3), ProbeOutcome::Hit(_)), "owner still hits");
+    }
+
+    #[test]
+    fn capacity_bound_holds_under_eviction() {
+        let mut s = ReuseStore::new(4, 1000, true, 7);
+        for i in 0..50 {
+            s.admit(sig(i as f64), out(i), i, 0);
+            assert!(s.len() <= 4, "len {} at admit {i}", s.len());
+        }
+        assert_eq!(s.stats().evictions, 46);
+        assert_eq!(s.stats().admissions, 50);
+        // the map stays consistent: every surviving entry is probeable
+        let mut live = 0;
+        for i in 0..50 {
+            if matches!(s.probe(&sig(i as f64), 1000, 0), ProbeOutcome::Hit(_)) {
+                live += 1;
+            }
+        }
+        assert_eq!(live, 4);
+    }
+
+    #[test]
+    fn refresh_updates_round_without_growing() {
+        let mut s = ReuseStore::new(4, 5, true, 1);
+        s.admit(sig(0.1), out(1), 0, 0);
+        s.admit(sig(0.1), out(2), 9, 1);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats().refreshed, 1);
+        assert!(matches!(s.probe(&sig(0.1), 12, 0), ProbeOutcome::Hit(_)), "refreshed TTL");
+    }
+
+    #[test]
+    fn eviction_replays_under_a_fixed_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let mut s = ReuseStore::new(3, 1000, true, seed);
+            for i in 0..30 {
+                s.admit(sig(i as f64), out(i), i, 0);
+            }
+            (0..30).map(|i| matches!(s.probe(&sig(i as f64), 999, 0), ProbeOutcome::Hit(_))).collect()
+        };
+        assert_eq!(run(42), run(42), "same seed, same survivors");
+        assert_ne!(run(42), run(43), "eviction stream is seed-driven");
+    }
+}

@@ -341,6 +341,52 @@ impl Default for FleetConfig {
     }
 }
 
+/// Redundancy-aware reuse cache (`cache::ReuseStore`): speculative
+/// per-session chunk reuse plus the fleet-shared result cache. With
+/// `enabled = false` (the default) no store is constructed and the serve
+/// layer is bit-identical to a cache-free build — the same zero-draws
+/// contract as `[faults]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    pub enabled: bool,
+    /// Max cached chunks; at capacity a seeded-random victim is evicted.
+    pub capacity: usize,
+    /// Entry lifetime in scheduler rounds (control steps single-session);
+    /// the temporal half of the divergence budget.
+    pub ttl_rounds: u64,
+    /// Seed of the eviction stream; 0 derives from the episode seed.
+    pub seed: u64,
+    /// Quantization step for joint positions (rad) and the velocity norm
+    /// (rad/s) — the spatial half of the divergence budget.
+    pub quant: f64,
+    /// Bin width (σ) for the windowed anomaly z-scores in the key.
+    pub z_quant: f64,
+    /// Probe gate: a dispatch whose anomaly z-score exceeds this is a
+    /// novel situation and always goes to the real cloud.
+    pub max_zscore: f64,
+    /// Virtual time charged per served hit (edge-side probe + copy).
+    pub probe_ms: f64,
+    /// Fleet-shared tier: false restricts each session to its own entries
+    /// (per-session speculative reuse only).
+    pub shared: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: false,
+            capacity: 256,
+            ttl_rounds: 128,
+            seed: 0,
+            quant: 0.1,
+            z_quant: 4.0,
+            max_zscore: 8.0,
+            probe_ms: 2.0,
+            shared: true,
+        }
+    }
+}
+
 /// Deterministic fault-injection schedule (`faults::FaultPlan` is built
 /// from this section; see `rust/src/faults/`). All windows are half-open
 /// `[start, end)` ranges of scheduler rounds; an empty window (start >=
@@ -475,6 +521,7 @@ pub struct SystemConfig {
     pub vision: VisionPolicyConfig,
     pub fleet: FleetConfig,
     pub faults: FaultsConfig,
+    pub cache: CacheConfig,
     pub episode: EpisodeConfig,
 }
 
@@ -495,6 +542,7 @@ impl Default for SystemConfig {
             vision: VisionPolicyConfig::default(),
             fleet: FleetConfig::default(),
             faults: FaultsConfig::default(),
+            cache: CacheConfig::default(),
             episode: EpisodeConfig::default(),
         }
     }
@@ -589,6 +637,17 @@ impl SystemConfig {
         f.delay_ms = v.f64_or("faults.delay_ms", f.delay_ms);
         f.delay_start = v.usize_or("faults.delay_start", f.delay_start as usize) as u64;
         f.delay_end = v.usize_or("faults.delay_end", f.delay_end as usize) as u64;
+
+        let c = &mut self.cache;
+        c.enabled = v.bool_or("cache.enabled", c.enabled);
+        c.capacity = v.usize_or("cache.capacity", c.capacity);
+        c.ttl_rounds = v.usize_or("cache.ttl_rounds", c.ttl_rounds as usize) as u64;
+        c.seed = v.usize_or("cache.seed", c.seed as usize) as u64;
+        c.quant = v.f64_or("cache.quant", c.quant);
+        c.z_quant = v.f64_or("cache.z_quant", c.z_quant);
+        c.max_zscore = v.f64_or("cache.max_zscore", c.max_zscore);
+        c.probe_ms = v.f64_or("cache.probe_ms", c.probe_ms);
+        c.shared = v.bool_or("cache.shared", c.shared);
 
         self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
@@ -708,6 +767,32 @@ mod tests {
         assert!(f.crash_end > f.crash_start);
         assert!(f.drop_prob > 0.0 && f.drop_end > f.drop_start);
         assert!(f.delay_ms < f.offload_timeout_ms, "demo delay must stay sub-timeout");
+    }
+
+    #[test]
+    fn cache_defaults_inert_and_overlay() {
+        let c = SystemConfig::default();
+        assert!(!c.cache.enabled, "cache must default off (bit-identity)");
+        assert_eq!(c.cache.capacity, 256);
+        assert_eq!(c.cache.ttl_rounds, 128);
+        assert!(c.cache.shared);
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[cache]\nenabled = true\ncapacity = 64\nttl_rounds = 32\nseed = 9\n\
+             quant = 0.05\nmax_zscore = 4.0\nshared = false",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.cache.enabled);
+        assert_eq!(c.cache.capacity, 64);
+        assert_eq!(c.cache.ttl_rounds, 32);
+        assert_eq!(c.cache.seed, 9);
+        assert_eq!(c.cache.quant, 0.05);
+        assert_eq!(c.cache.max_zscore, 4.0);
+        assert!(!c.cache.shared);
+        // untouched keys keep defaults
+        assert_eq!(c.cache.probe_ms, 2.0);
+        assert_eq!(c.cache.z_quant, 4.0);
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub mod rapid;
 pub use cooldown::Cooldown;
 pub use fusion::{phase_weights, FusionOutcome, PhaseWeights};
 pub use queue::{ChunkQueue, ChunkSource, QueueStats};
-pub use rapid::{Decision, RapidDispatcher, TriggerEval};
+pub use rapid::{Decision, RapidDispatcher, ReuseEvidence, TriggerEval};

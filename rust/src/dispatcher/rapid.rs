@@ -22,6 +22,22 @@ pub struct TriggerEval {
     pub dispatch: bool,
 }
 
+/// Redundancy evidence exported to the reuse cache (`cache::Signature`):
+/// the dispatcher's normalized anomaly z-scores and the velocity that
+/// drives the phase weights, as of the last sensor tick. This is the
+/// dispatcher's own measurement of *how redundant* the current instant is
+/// — high scores mean a novel/critical situation where reusing a cached
+/// chunk would be unsafe.
+#[derive(Debug, Clone, Copy)]
+pub struct ReuseEvidence {
+    /// Normalized acceleration anomaly M̂_acc (σ).
+    pub m_acc_hat: f64,
+    /// Normalized torque-variation anomaly M̂_τ (σ).
+    pub m_tau_hat: f64,
+    /// Velocity norm v_t (rad/s).
+    pub velocity: f64,
+}
+
 /// Control-rate decision (Algorithm 1 line 6, under the edge/cloud split
 /// interpretation documented in the module root).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,6 +127,16 @@ impl RapidDispatcher {
 
     pub fn last_eval(&self) -> Option<TriggerEval> {
         self.last_eval
+    }
+
+    /// Redundancy evidence of the last tick (None before the first
+    /// observation), for the reuse-cache signature.
+    pub fn reuse_evidence(&self) -> Option<ReuseEvidence> {
+        self.last_eval.map(|e| ReuseEvidence {
+            m_acc_hat: e.m_acc_hat,
+            m_tau_hat: e.m_tau_hat,
+            velocity: e.velocity,
+        })
     }
 
     pub fn cooldown_remaining(&self) -> u32 {

@@ -8,6 +8,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig5;
 pub mod overhead;
+pub mod reuse;
 pub mod sweep;
 pub mod tab1;
 pub mod tab2;

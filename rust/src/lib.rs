@@ -27,6 +27,15 @@
 //!   crash/recover, reply drop/delay) compiled into a
 //!   [`faults::FaultEngine`] the fleet scheduler queries per round; empty
 //!   plans are bit-identical to no engine at all.
+//! * [`cache`] — the redundancy-aware reuse cache: quantized kinematic
+//!   [`cache::Signature`]s over a bounded, TTL'd [`cache::ReuseStore`]
+//!   with seeded-deterministic eviction. Two tiers share the store:
+//!   per-session speculative chunk reuse (the driver probes before every
+//!   cloud dispatch in a redundant phase) and the fleet-shared result
+//!   cache (cross-session batch replies admitted on flush, so one robot's
+//!   answer serves the whole fleet — even through outage windows).
+//!   Disabled, it constructs nothing and the serve layer is bit-identical
+//!   to a cache-free build.
 //! * [`serve`] — the serving stack, smallest to largest scope:
 //!   [`serve::driver`] is the resumable per-session step machine
 //!   (`EpisodeState`: poll → suspend on cloud → resume), [`serve::session`]
@@ -56,6 +65,7 @@ pub mod runtime;
 pub mod vla;
 pub mod net;
 pub mod faults;
+pub mod cache;
 pub mod serve;
 pub mod metrics;
 pub mod benchkit;

@@ -4,10 +4,11 @@
 //! rapid run   [--preset libero|realworld] [--policy rapid|...] [--task pick|drawer|peg]
 //!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
 //!             [--analytic] [--trace out.csv] [--config file.toml]
-//! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|all>
+//! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|all>
+//!             [--json BENCH_serve.json] [--budget-ms MS]
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
-//! rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E]
-//!             [--batch B] [--inflight I] [--seed S] [--config file.toml]
+//! rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E] [--batch B]
+//!             [--inflight I] [--endpoints P] [--seed S] [--config file.toml]
 //! rapid info
 //! ```
 //!
@@ -46,12 +47,17 @@ fn print_help() {
         "RAPID — redundancy-aware edge-cloud partitioned inference for VLA models\n\n\
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
-         \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|all>\n\
+         \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|all>\n\
+         \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
+         \x20             (serve: benchkit timings of the serve layer, written as\n\
+         \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
+         \x20              reuse: cache-off vs cache-on fleet table)\n\
          \x20 rapid serve [--addr A] [--batch B] [--analytic]\n\
          \x20 rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E]\n\
-         \x20             [--batch B] [--inflight I] [--seed S] [--config FILE]\n\
+         \x20             [--batch B] [--inflight I] [--endpoints P] [--seed S]\n\
+         \x20             [--config FILE]\n\
          \x20 rapid chaos [--sessions N] [--task T] [--seed S] [--batch B]\n\
-         \x20             [--episodes E] [--config FILE]\n\
+         \x20             [--episodes E] [--endpoints P] [--config FILE]\n\
          \x20             (defaults to configs/chaos.toml; compares RAPID vs\n\
          \x20              Edge-/Cloud-Only fleets under the fault schedule)\n\
          \x20 rapid info\n"
@@ -120,9 +126,15 @@ fn cmd_run(rest: &[String]) -> i32 {
 
     match task {
         Some(task) => {
-            // single traced episode
+            // single traced episode (with the per-session reuse tier when
+            // the active config enables [cache])
             let strategy = rapid::policy::build(kind, &sys);
-            let out = rapid::serve::run_episode(
+            let mut store = if sys.cache.enabled {
+                Some(rapid::cache::ReuseStore::from_config(&sys.cache, sys.episode.seed))
+            } else {
+                None
+            };
+            let out = rapid::serve::run_episode_with_cache(
                 &sys,
                 task,
                 strategy,
@@ -130,6 +142,8 @@ fn cmd_run(rest: &[String]) -> i32 {
                 b.cloud.as_mut(),
                 sys.episode.seed,
                 true,
+                store.as_mut(),
+                0,
             );
             let m = &out.metrics;
             let (c, e, t) = m.latency_columns();
@@ -145,6 +159,9 @@ fn cmd_run(rest: &[String]) -> i32 {
             );
             println!("latency: cloud {c:.1}ms + edge {e:.1}ms (+overhead) = total {t:.1}ms/event");
             println!("loads: edge {:.1}GB cloud {:.1}GB", m.edge_gb, m.cloud_gb);
+            if let Some(store) = &store {
+                println!("{}", store.stats().report());
+            }
             if let Some(path) = flags.get("--trace") {
                 if let Some(tr) = out.trace {
                     if let Err(err) = tr.save_csv(path) {
@@ -246,11 +263,21 @@ fn cmd_bench(rest: &[String]) -> i32 {
                 r.state_bytes
             );
         }
+        "reuse" => {
+            let (t, rows) = experiments::reuse::run(&sys, rapid::robot::TaskKind::PickPlace);
+            print!("{}", t.render());
+            let hits: u64 = rows.iter().map(|r| r.clean_cache.hits + r.chaos_cache.hits).sum();
+            println!("fleet-shared cache hits across all arms: {hits}");
+        }
+        "serve" => bench_serve(&sys, &flags),
         other => eprintln!("unknown bench {other}"),
     };
 
     if which == "all" {
-        for name in ["tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead"] {
+        for name in [
+            "tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead",
+            "reuse", "serve",
+        ] {
             println!("\n### {name}");
             run_one(name, &mut b);
         }
@@ -258,6 +285,87 @@ fn cmd_bench(rest: &[String]) -> i32 {
         run_one(which, &mut b);
     }
     0
+}
+
+/// `rapid bench serve`: benchkit timings of the serve layer (episode
+/// driver, fleet scheduler, reuse-store probe), optionally written as
+/// machine-readable JSON (`--json BENCH_serve.json`) so the perf
+/// trajectory accumulates across commits. `--budget-ms` bounds each
+/// case's measurement time (CI smoke uses a tiny budget).
+fn bench_serve(sys: &SystemConfig, flags: &Flags) {
+    use rapid::robot::TaskKind;
+    use rapid::vla::AnalyticBackend;
+
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("serve layer");
+
+    let seed = sys.episode.seed;
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let name = format!("episode/{}", if kind == PolicyKind::Rapid { "rapid" } else { "cloud_only" });
+        bench.run(&name, || {
+            let strategy = rapid::policy::build(kind, sys);
+            let mut edge = AnalyticBackend::edge(seed);
+            let mut cloud = AnalyticBackend::cloud(seed);
+            let out = rapid::serve::run_episode(
+                sys,
+                TaskKind::PickPlace,
+                strategy,
+                &mut edge,
+                &mut cloud,
+                seed,
+                false,
+            );
+            std::hint::black_box(out.metrics.steps);
+        });
+    }
+
+    let mut fleet_sys = sys.clone();
+    fleet_sys.cache.enabled = false;
+    let n = fleet_sys.fleet.n_sessions.max(1);
+    bench.run(&format!("fleet/{n}s/rapid"), || {
+        let res = rapid::serve::Fleet::local(&fleet_sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        std::hint::black_box(res.total_steps());
+    });
+    let mut cached_sys = fleet_sys.clone();
+    cached_sys.cache.enabled = true;
+    bench.run(&format!("fleet/{n}s/cloud_only+cache"), || {
+        let res =
+            rapid::serve::Fleet::local(&cached_sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        std::hint::black_box(res.cache.hits);
+    });
+
+    // reuse-store probe hot path: one warm entry, repeated hits
+    {
+        let cfg = rapid::config::CacheConfig { enabled: true, ..Default::default() };
+        let mut store = rapid::cache::ReuseStore::from_config(&cfg, 1);
+        let frame = rapid::robot::SensorFrame {
+            step: 0,
+            q: rapid::robot::Jv::splat(0.3),
+            dq: rapid::robot::Jv::splat(0.1),
+            tau: rapid::robot::Jv::ZERO,
+        };
+        let sig = rapid::cache::Signature::of(&cfg, 1, &frame, None);
+        let mut cloud = AnalyticBackend::cloud(1);
+        let out = rapid::vla::Backend::infer(&mut cloud, &[0.1; rapid::D_VIS], &[0.0; rapid::D_PROP], 1);
+        store.admit(sig, out, 0, 0);
+        bench.run("cache/probe_hit", || {
+            std::hint::black_box(matches!(
+                store.probe(&sig, 1, 0),
+                rapid::cache::ProbeOutcome::Hit(_)
+            ));
+        });
+    }
+
+    if let Some(path) = flags.get("--json") {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }
 
 fn cmd_serve(rest: &[String]) -> i32 {
@@ -307,6 +415,9 @@ fn cmd_fleet(rest: &[String]) -> i32 {
     if let Some(e) = flags.get("--episodes").and_then(|s| s.parse().ok()) {
         sys.fleet.episodes_per_session = e;
     }
+    if let Some(p) = flags.get("--endpoints").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.endpoints = p.max(1);
+    }
     let kind = flags.get("--policy").and_then(PolicyKind::parse).unwrap_or(PolicyKind::Rapid);
     let task = flags
         .get("--task")
@@ -348,6 +459,9 @@ fn cmd_fleet(rest: &[String]) -> i32 {
             "faults: dropped replies {}  endpoint errors {}  redispatches {}  degraded {}  outage rounds {}",
             s.dropped_replies, s.endpoint_errors, s.failover_redispatches, s.degraded_requests, s.outage_rounds
         );
+    }
+    if sys.cache.enabled {
+        println!("{}", res.cache.report());
     }
     println!(
         "steps {}  cloud events {}  wall {:.2}s ({:.0} steps/s)",
@@ -400,6 +514,9 @@ fn cmd_chaos(rest: &[String]) -> i32 {
     }
     if let Some(e) = flags.get("--episodes").and_then(|s| s.parse().ok()) {
         sys.fleet.episodes_per_session = e;
+    }
+    if let Some(p) = flags.get("--endpoints").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.endpoints = p.max(1);
     }
     let task = flags
         .get("--task")

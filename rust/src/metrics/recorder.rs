@@ -41,6 +41,15 @@ pub struct EpisodeMetrics {
     /// the session timed out and re-served the step from its edge slice
     /// (`EpisodeState::fail_cloud`); always 0 without fault injection.
     pub failovers: u64,
+    /// Cloud dispatches served from the reuse cache at probe latency
+    /// instead of the wire; always 0 with the cache disabled.
+    pub cache_hits: u64,
+    /// Reuse probes that found no fresh matching entry (the dispatch went
+    /// to the cloud as usual).
+    pub cache_misses: u64,
+    /// Subset of misses where a matching entry existed but had aged past
+    /// `cache.ttl_rounds` (the staleness half of the divergence budget).
+    pub cache_stale: u64,
 
     // --- loads (GB), time-averaged over the episode ---
     pub edge_gb: f64,
@@ -78,6 +87,9 @@ impl EpisodeMetrics {
             repartitions: 0,
             deferred_offloads: 0,
             failovers: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_stale: 0,
             edge_gb: 0.0,
             cloud_gb: 0.0,
             trig_tp: 0,

@@ -72,6 +72,10 @@ pub struct FleetSummary {
     pub total_cloud_events: u64,
     pub total_steps: u64,
     pub total_deferred_offloads: u64,
+    /// Reuse-cache rollups (all 0 with the cache disabled).
+    pub total_cache_hits: u64,
+    pub total_cache_misses: u64,
+    pub total_cache_stale: u64,
 }
 
 /// Aggregate a fleet run: `per_session[i]` holds session i's episode
@@ -89,6 +93,9 @@ pub fn summarize_fleet(policy: PolicyKind, per_session: &[Vec<EpisodeMetrics>]) 
         total_cloud_events: all.iter().map(|m| m.cloud_events).sum(),
         total_steps: all.iter().map(|m| m.steps as u64).sum(),
         total_deferred_offloads: all.iter().map(|m| m.deferred_offloads).sum(),
+        total_cache_hits: all.iter().map(|m| m.cache_hits).sum(),
+        total_cache_misses: all.iter().map(|m| m.cache_misses).sum(),
+        total_cache_stale: all.iter().map(|m| m.cache_stale).sum(),
     }
 }
 

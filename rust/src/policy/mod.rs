@@ -11,6 +11,7 @@ pub use rapid_policy::RapidPolicy;
 pub use vision::VisionPolicy;
 
 use crate::config::{PolicyKind, SystemConfig};
+use crate::dispatcher::ReuseEvidence;
 use crate::robot::SensorFrame;
 
 /// Where the next chunk (if any) comes from this control step.
@@ -64,6 +65,13 @@ pub trait Strategy {
     /// — the 5–7% overhead claim is checked against this).
     fn decision_ns(&self) -> u64 {
         0
+    }
+
+    /// Kinematic redundancy evidence behind the latest decision, consumed
+    /// by the reuse cache's signature and probe gate. None means the
+    /// strategy measures nothing (its dispatches are treated as routine).
+    fn reuse_evidence(&self) -> Option<ReuseEvidence> {
+        None
     }
 }
 

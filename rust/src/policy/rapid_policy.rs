@@ -4,7 +4,7 @@
 
 use super::{DecisionCtx, Route, Strategy};
 use crate::config::{DispatcherConfig, PolicyKind, SystemConfig};
-use crate::dispatcher::{Decision, RapidDispatcher, TriggerEval};
+use crate::dispatcher::{Decision, RapidDispatcher, ReuseEvidence, TriggerEval};
 use crate::robot::SensorFrame;
 
 pub struct RapidPolicy {
@@ -67,6 +67,10 @@ impl Strategy for RapidPolicy {
 
     fn decision_ns(&self) -> u64 {
         self.decision_ns
+    }
+
+    fn reuse_evidence(&self) -> Option<ReuseEvidence> {
+        self.dispatcher.reuse_evidence()
     }
 }
 

@@ -22,6 +22,7 @@
 //! (Edge-Only runs the full 14.2 GB model locally — slow but full quality);
 //! otherwise from the edge-grade model.
 
+use crate::cache::{ProbeOutcome, ReusePolicy, ReuseStore, Signature};
 use crate::config::SystemConfig;
 use crate::dispatcher::{ChunkQueue, ChunkSource};
 use crate::metrics::EpisodeMetrics;
@@ -54,6 +55,10 @@ pub struct CloudRequest {
     pub obs: [f32; D_VIS],
     pub proprio: [f32; D_PROP],
     pub instr: usize,
+    /// Reuse-cache signature of the dispatch (Some only when a store was
+    /// attached to the poll); rides the request so the reply can be
+    /// admitted into the store on completion.
+    pub sig: Option<Signature>,
 }
 
 /// What happened when the session was polled.
@@ -160,6 +165,27 @@ impl EpisodeState {
         cloud: &mut dyn Backend,
         admit_cloud: bool,
     ) -> StepEvent {
+        self.poll_with_cache(sys, edge, cloud, admit_cloud, None, 0, 0)
+    }
+
+    /// [`EpisodeState::poll`] with a reuse cache attached: a step that
+    /// routes to the cloud first probes `cache` (at scheduler round
+    /// `round`, as session `owner`) and, on a fresh in-budget hit, serves
+    /// the cached chunk at `cache.probe_ms` latency instead of suspending
+    /// — no wire frame, no in-flight slot, and it keeps working through
+    /// outage windows because the probe runs *before* the backpressure
+    /// gate. With `cache = None` this is exactly [`EpisodeState::poll`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn poll_with_cache(
+        &mut self,
+        sys: &SystemConfig,
+        edge: &mut dyn Backend,
+        cloud: &mut dyn Backend,
+        admit_cloud: bool,
+        mut cache: Option<&mut ReuseStore>,
+        round: u64,
+        owner: usize,
+    ) -> StepEvent {
         assert!(!self.awaiting, "poll() while awaiting a cloud response");
         if self.sim.done() {
             return StepEvent::Done;
@@ -178,6 +204,52 @@ impl EpisodeState {
         // Invariant #1: an empty queue must force a refill.
         let mut route =
             if self.queue.is_empty() && route == Route::Cached { Route::EdgeRefill } else { route };
+
+        // Speculative chunk reuse: probe the store before paying for the
+        // wire. The signature is pure proprio/kinematics, so a hit skips
+        // the whole observation pipeline; a miss leaves every PRNG stream
+        // untouched and the step proceeds exactly as without a cache.
+        let mut sig: Option<Signature> = None;
+        if route == Route::CloudOffload {
+            if let Some(store) = cache.as_deref_mut() {
+                let pol = ReusePolicy::new(&sys.cache);
+                let ev = self.strategy.reuse_evidence();
+                // a dispatch the gate refuses carries no signature at all:
+                // its reply must not be admitted either, or the store fills
+                // with entries no future (equally-gated) probe can ever hit
+                if pol.probe_allowed(ev.as_ref()) {
+                    let s = pol.signature(self.task.instr_id(), &self.last_frame, ev.as_ref());
+                    match store.probe(&s, round, owner) {
+                        ProbeOutcome::Hit(out) => {
+                            if !self.queue.is_empty() {
+                                self.metrics.preemptions += 1;
+                                self.metrics.overhead_ms += self.clock.preempt();
+                            }
+                            // served at edge-probe latency: no capture, no
+                            // transfer, no cloud compute
+                            self.clock.advance(sys.cache.probe_ms);
+                            self.metrics.overhead_ms += sys.cache.probe_ms;
+                            self.metrics.cache_hits += 1;
+                            self.strategy.on_offload(t);
+                            // trigger quality is scored exactly as a real
+                            // offload: the dispatcher fired either way
+                            self.score_trigger(t);
+                            self.refill_queue(&out, ChunkSource::Cloud, t);
+                            self.charge_repartitions();
+                            self.finish_step(sys, Route::CloudOffload);
+                            return StepEvent::Stepped;
+                        }
+                        ProbeOutcome::Stale => {
+                            self.metrics.cache_stale += 1;
+                            self.metrics.cache_misses += 1;
+                        }
+                        ProbeOutcome::Miss => self.metrics.cache_misses += 1,
+                    }
+                    sig = Some(s);
+                }
+            }
+        }
+
         // Fleet backpressure: a disallowed offload degrades to the edge path.
         if route == Route::CloudOffload && !admit_cloud {
             self.metrics.deferred_offloads += 1;
@@ -213,18 +285,10 @@ impl EpisodeState {
                     self.metrics.retransmissions += xfer.retransmissions as u64;
                     self.metrics.overhead_ms += xfer.retransmissions as f64 * RETRANS_PENALTY_MS;
                     self.strategy.on_offload(t);
-
-                    // ground truth: was this offload near a critical phase?
-                    let near_crit = (0..3).any(|d| self.sim.traj.phase_at(t + d).is_critical())
-                        || (t > 0 && self.sim.traj.phase_at(t - 1).is_critical());
-                    if near_crit {
-                        self.metrics.trig_tp += 1;
-                    } else {
-                        self.metrics.trig_fp += 1;
-                    }
+                    self.score_trigger(t);
 
                     self.awaiting = true;
-                    return StepEvent::NeedCloud(CloudRequest { obs, proprio, instr });
+                    return StepEvent::NeedCloud(CloudRequest { obs, proprio, instr, sig });
                 }
 
                 // routine edge refill
@@ -281,6 +345,19 @@ impl EpisodeState {
         // degraded service from the edge-resident slice
         self.edge_refill(sys, &req.obs, &req.proprio, req.instr, edge, cloud);
         self.finish_step(sys, Route::EdgeRefill);
+    }
+
+    /// Ground truth for trigger quality: was this dispatch near a critical
+    /// phase? One definition for wire offloads and cache hits alike, so
+    /// trigger precision stays comparable between cached and uncached runs.
+    fn score_trigger(&mut self, t: usize) {
+        let near_crit = (0..3).any(|d| self.sim.traj.phase_at(t + d).is_critical())
+            || (t > 0 && self.sim.traj.phase_at(t - 1).is_critical());
+        if near_crit {
+            self.metrics.trig_tp += 1;
+        } else {
+            self.metrics.trig_fp += 1;
+        }
     }
 
     /// Routine edge-slice refill, shared by the normal edge path and the
@@ -412,17 +489,45 @@ pub fn run_episode(
     seed: u64,
     want_trace: bool,
 ) -> EpisodeOutput {
+    run_episode_with_cache(sys, task, strategy, edge, cloud, seed, want_trace, None, 0)
+}
+
+/// [`run_episode`] with a reuse store attached: the per-session
+/// speculative-reuse tier. Cloud replies are admitted into `store` as
+/// they arrive, and every subsequent redundant-phase dispatch probes it
+/// first. Rounds count control steps. With `store = None` this is exactly
+/// [`run_episode`], operation for operation.
+#[allow(clippy::too_many_arguments)]
+pub fn run_episode_with_cache(
+    sys: &SystemConfig,
+    task: TaskKind,
+    strategy: Box<dyn Strategy>,
+    edge: &mut dyn Backend,
+    cloud: &mut dyn Backend,
+    seed: u64,
+    want_trace: bool,
+    mut store: Option<&mut ReuseStore>,
+    owner: usize,
+) -> EpisodeOutput {
     let mut state = EpisodeState::new(sys, task, strategy, seed, want_trace);
+    // resume the round clock past the store's newest entry: a persistent
+    // store across episodes keeps entry ages (the TTL budget) monotonic
+    // instead of resetting to "fresh" with the new episode's counter
+    let mut round: u64 = store.as_deref().map_or(0, |s| s.next_round());
     loop {
-        match state.poll(sys, edge, cloud, true) {
+        match state.poll_with_cache(sys, edge, cloud, true, store.as_deref_mut(), round, owner) {
             StepEvent::Stepped => {}
             StepEvent::Done => break,
             StepEvent::NeedCloud(req) => {
                 let t0 = std::time::Instant::now();
                 let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                if let (Some(st), Some(sig)) = (store.as_deref_mut(), req.sig) {
+                    st.admit(sig, out.clone(), round, owner);
+                }
                 state.complete_cloud(sys, out, t0.elapsed().as_micros() as f64);
             }
         }
+        round += 1;
     }
     state.finish(sys)
 }
@@ -636,6 +741,88 @@ mod tests {
         assert_eq!(m.edge_events, failed);
         // the timeout is charged as routing overhead on every failover
         assert!(m.overhead_ms >= 250.0 * failed as f64);
+    }
+
+    #[test]
+    fn cold_cache_probes_are_bit_identical_to_no_cache() {
+        // an attached-but-empty store misses on every probe; the episode
+        // metrics must equal the cache-free run exactly (the probe costs
+        // nothing and perturbs no PRNG stream)
+        let sys = {
+            let mut s = SystemConfig::default();
+            s.cache.enabled = true;
+            s
+        };
+        let base = run(PolicyKind::CloudOnly, TaskKind::PickPlace, 5);
+        let mut store = crate::cache::ReuseStore::from_config(&sys.cache, 5);
+        let strategy = crate::policy::build(PolicyKind::CloudOnly, &sys);
+        let mut edge = AnalyticBackend::edge(5);
+        let mut cloud = AnalyticBackend::cloud(5);
+        // store attached but never admitted to: drive poll_with_cache with
+        // probes only (no admission) by discarding req.sig
+        let mut st = EpisodeState::new(&sys, TaskKind::PickPlace, strategy, 5, false);
+        let mut round = 0u64;
+        loop {
+            match st.poll_with_cache(&sys, &mut edge, &mut cloud, true, Some(&mut store), round, 0) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(req) => {
+                    let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                    st.complete_cloud(&sys, out, 0.0);
+                }
+            }
+            round += 1;
+        }
+        let m = st.finish(&sys).metrics;
+        assert_eq!(m.latency_columns(), base.latency_columns());
+        assert_eq!(m.cloud_events, base.cloud_events);
+        assert_eq!(m.rms_error, base.rms_error);
+        assert_eq!(m.cache_hits, 0);
+        assert!(m.cache_misses > 0, "every offload probed and missed");
+    }
+
+    #[test]
+    fn warm_cache_replays_the_episode_without_the_cloud() {
+        // episode 2 of the same seed revisits exactly the states episode 1
+        // cached: every offload hits, the cloud is never consulted, and
+        // the trajectory (actions come from identical chunks) is unchanged
+        // while latency strictly drops
+        let mut sys = SystemConfig::default();
+        sys.cache.enabled = true;
+        let mut store = crate::cache::ReuseStore::from_config(&sys.cache, 5);
+
+        let run_cached = |store: &mut crate::cache::ReuseStore, sys: &SystemConfig| {
+            let strategy = crate::policy::build(PolicyKind::CloudOnly, sys);
+            let mut edge = AnalyticBackend::edge(5);
+            let mut cloud = AnalyticBackend::cloud(5);
+            run_episode_with_cache(
+                sys,
+                TaskKind::PickPlace,
+                strategy,
+                &mut edge,
+                &mut cloud,
+                5,
+                false,
+                Some(store),
+                0,
+            )
+            .metrics
+        };
+        let e1 = run_cached(&mut store, &sys);
+        assert_eq!(e1.cache_hits, 0, "first episode has nothing to reuse");
+        assert!(e1.cloud_events > 0);
+
+        let e2 = run_cached(&mut store, &sys);
+        assert_eq!(e2.cache_hits, e1.cloud_events, "every offload reuses episode 1's chunk");
+        assert_eq!(e2.cloud_events, 0);
+        assert_eq!(e2.rms_error, e1.rms_error, "identical chunks, identical trajectory");
+        assert_eq!(e2.success, e1.success);
+        assert!(
+            e2.latency_columns().2 < e1.latency_columns().2,
+            "hits must be strictly cheaper: {} vs {}",
+            e2.latency_columns().2,
+            e1.latency_columns().2
+        );
     }
 
     #[test]

@@ -31,6 +31,7 @@
 use super::batcher::Batcher;
 use super::driver::{CloudRequest, EpisodeState, StepEvent};
 use super::router::Router;
+use crate::cache::{CacheStats, ReuseStore};
 use crate::config::{FleetConfig, PolicyKind, SystemConfig};
 use crate::faults::FaultEngine;
 use crate::metrics::{summarize_fleet, EpisodeMetrics, FleetSummary};
@@ -112,6 +113,8 @@ pub struct FleetResult {
     /// Batches dispatched per cloud endpoint (router spread).
     pub endpoint_dispatches: Vec<u64>,
     pub mean_batch: f64,
+    /// Fleet-shared reuse-store counters (all zero with `[cache]` off).
+    pub cache: CacheStats,
 }
 
 impl FleetResult {
@@ -165,6 +168,11 @@ pub struct Fleet {
     deadline_rounds: u64,
     /// Fault-injection engine (disarmed/empty on the zero-fault path).
     engine: FaultEngine,
+    /// Fleet-shared reuse cache (None with `[cache]` disabled — the
+    /// scheduler is then bit-identical to a cache-free build). Serves both
+    /// tiers: sessions probe it before offloading, and cross-session batch
+    /// replies are admitted on every flush.
+    store: Option<ReuseStore>,
     /// Remote endpoints that errored at the RPC layer: circuit-broken for
     /// the rest of the run (a fresh run reconnects).
     io_dead: Vec<bool>,
@@ -254,6 +262,11 @@ impl Fleet {
             pending_age: 0,
             deadline_rounds: (cfg.batch_deadline_us as f64 / round_us).ceil() as u64,
             engine: FaultEngine::from_config(&sys.faults, base_seed),
+            store: if sys.cache.enabled {
+                Some(ReuseStore::from_config(&sys.cache, base_seed))
+            } else {
+                None
+            },
             io_dead: vec![false; endpoints],
             cur_round: 0,
             cfg,
@@ -320,8 +333,20 @@ impl Fleet {
                     continue;
                 }
                 let admit = !outage && self.batcher.len() < self.cfg.max_inflight.max(1);
+                let round = self.cur_round;
+                // the probe runs inside poll, before the admit gate: cache
+                // hits keep serving through outage/backpressure windows
+                let store = self.store.as_mut();
                 let slot = &mut self.slots[i];
-                let ev = slot.state.poll(&self.sys, slot.edge.as_mut(), slot.cloud.as_mut(), admit);
+                let ev = slot.state.poll_with_cache(
+                    &self.sys,
+                    slot.edge.as_mut(),
+                    slot.cloud.as_mut(),
+                    admit,
+                    store,
+                    round,
+                    i,
+                );
                 match ev {
                     StepEvent::Stepped => progressed = true,
                     StepEvent::Done => {}
@@ -354,6 +379,7 @@ impl Fleet {
         let mean_batch = self.batcher.mean_batch();
         let endpoint_dispatches = self.router.totals().to_vec();
         let stats = self.stats;
+        let cache = self.store.as_ref().map(|s| *s.stats()).unwrap_or_default();
         let sessions = self
             .slots
             .into_iter()
@@ -371,6 +397,7 @@ impl Fleet {
             stats,
             endpoint_dispatches,
             mean_batch,
+            cache,
         }
     }
 
@@ -445,6 +472,11 @@ impl Fleet {
                         let slot = &mut self.slots[fr.session];
                         let out = slot.cloud.infer(&fr.req.obs, &fr.req.proprio, fr.req.instr);
                         let us = t0.elapsed().as_micros() as f64;
+                        // admission on batch flush: the reply enters the
+                        // fleet-shared store before any session resumes
+                        if let (Some(store), Some(sig)) = (self.store.as_mut(), fr.req.sig) {
+                            store.admit(sig, out.clone(), round, fr.session);
+                        }
                         if delay > 0.0 {
                             slot.state.charge_delay(delay);
                         }
@@ -475,6 +507,18 @@ impl Fleet {
                             // responses are routed back strictly by the
                             // echoed session id
                             for (sid, out) in outs {
+                                // admission on batch flush (a session has at
+                                // most one outstanding request, so the echoed
+                                // id identifies its signature uniquely)
+                                if let Some(store) = self.store.as_mut() {
+                                    let sig = batch
+                                        .iter()
+                                        .find(|fr| fr.session == sid as usize)
+                                        .and_then(|fr| fr.req.sig);
+                                    if let Some(sig) = sig {
+                                        store.admit(sig, out.clone(), round, sid as usize);
+                                    }
+                                }
                                 let slot = &mut self.slots[sid as usize];
                                 if delay > 0.0 {
                                     slot.state.charge_delay(delay);
@@ -570,6 +614,48 @@ mod tests {
         // edge-only never offloads: no batches at all
         assert_eq!(res.stats.batches, 0);
         assert_eq!(res.total_cloud_events(), 0);
+    }
+
+    #[test]
+    fn fleet_shared_cache_serves_cross_session_hits() {
+        // lockstep CloudOnly: all 8 sessions want the cloud at round 0 with
+        // *identical* initial kinematic signatures; the first full batch of
+        // 4 flushes (admitting its replies) before sessions 4..8 poll, so
+        // they must hit the shared store in that same round
+        let mut sys = sys_with(8, 4, 16);
+        sys.cache.enabled = true;
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert!(res.cache.hits >= 4, "round-0 cross-session hits: {:?}", res.cache);
+        // every offload decision is served exactly once: wire or cache
+        let per_session = (TaskKind::PickPlace.seq_len() + crate::CHUNK - 1) / crate::CHUNK;
+        let hits: u64 =
+            res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.cache_hits).sum();
+        assert_eq!(hits, res.cache.hits, "per-episode and store hit counts agree");
+        assert_eq!(
+            res.total_cloud_events() + hits,
+            (8 * per_session) as u64,
+            "wire + cache partition the offload schedule"
+        );
+        assert_eq!(res.stats.batched_requests, res.total_cloud_events());
+        for s in &res.sessions {
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        }
+        // the cache-off run of the same fleet pays the wire for everything
+        let mut off = sys.clone();
+        off.cache.enabled = false;
+        let base = Fleet::local(&off, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_eq!(base.total_cloud_events(), (8 * per_session) as u64);
+        assert!(base.cache.is_zero());
+    }
+
+    #[test]
+    fn disabled_cache_builds_no_store() {
+        let sys = sys_with(3, 4, 16);
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        assert!(res.cache.is_zero());
+        let hits: u64 =
+            res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.cache_hits).sum();
+        assert_eq!(hits, 0);
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod sensorloop;
 pub mod session;
 
 pub use batcher::Batcher;
-pub use driver::{run_episode, CloudRequest, EpisodeOutput, EpisodeState, StepEvent};
+pub use driver::{
+    run_episode, run_episode_with_cache, CloudRequest, EpisodeOutput, EpisodeState, StepEvent,
+};
 pub use fleet::{fleet_seed, CloudMode, Fleet, FleetResult, FleetStats};
 pub use router::Router;
 pub use sensorloop::{SensorLoop, TriggerFlag};

@@ -413,6 +413,147 @@ fn prop_link_totals_account() {
     });
 }
 
+/// Invariant #16 (cache): the reuse store never exceeds its capacity and
+/// its counters reconcile under arbitrary probe/admit interleavings.
+#[test]
+fn prop_cache_capacity_never_exceeded() {
+    use rapid::cache::{ProbeOutcome, ReuseStore, Signature};
+    use rapid::config::CacheConfig;
+    seeded_forall!("cache_capacity", 100, |rng: &mut Pcg32| {
+        let cfg = CacheConfig::default();
+        let capacity = 1 + rng.below(16) as usize;
+        let ttl = rng.below(64) as u64;
+        let shared = rng.chance(0.5);
+        let mut store = ReuseStore::new(capacity, ttl, shared, rng.next_u64());
+        let mut cloud = rapid::vla::AnalyticBackend::cloud(rng.next_u64());
+        let out = rapid::vla::Backend::infer(
+            &mut cloud,
+            &[0.1; rapid::D_VIS],
+            &[0.0; rapid::D_PROP],
+            1,
+        );
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for step in 0..300u64 {
+            let f = random_frame(rng, step as usize);
+            let sig = Signature::of(&cfg, 1 + rng.below(3) as usize, &f, None);
+            let owner = rng.below(4) as usize;
+            if rng.chance(0.5) {
+                store.admit(sig, out.clone(), step, owner);
+            } else {
+                match store.probe(&sig, step, owner) {
+                    ProbeOutcome::Hit(_) => hits += 1,
+                    ProbeOutcome::Stale | ProbeOutcome::Miss => misses += 1,
+                }
+            }
+            if store.len() > capacity {
+                return Err(format!("len {} > capacity {capacity}", store.len()));
+            }
+        }
+        let s = *store.stats();
+        if s.hits != hits || s.misses != misses {
+            return Err(format!("stats {s:?} disagree with observed {hits}/{misses}"));
+        }
+        if s.probes != s.hits + s.misses {
+            return Err(format!("probes {} != hits + misses", s.probes));
+        }
+        if s.stale > s.misses {
+            return Err("stale misses exceed misses".into());
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #17 (cache): the store replays exactly under a shared seed —
+/// identical probe/admit sequences produce identical hit decisions,
+/// identical eviction victims and identical counters.
+#[test]
+fn prop_cache_replay_under_shared_seed() {
+    use rapid::cache::{ProbeOutcome, ReuseStore, Signature};
+    use rapid::config::CacheConfig;
+    seeded_forall!("cache_replay", 50, |rng: &mut Pcg32| {
+        let cfg = CacheConfig::default();
+        let seed = rng.next_u64();
+        let capacity = 1 + rng.below(6) as usize;
+        let mut a = ReuseStore::new(capacity, 1000, true, seed);
+        let mut b = ReuseStore::new(capacity, 1000, true, seed);
+        let mut cloud = rapid::vla::AnalyticBackend::cloud(seed);
+        let out = rapid::vla::Backend::infer(
+            &mut cloud,
+            &[0.1; rapid::D_VIS],
+            &[0.0; rapid::D_PROP],
+            1,
+        );
+        for step in 0..200u64 {
+            let f = random_frame(rng, step as usize);
+            let sig = Signature::of(&cfg, 1, &f, None);
+            if rng.chance(0.6) {
+                a.admit(sig, out.clone(), step, 0);
+                b.admit(sig, out.clone(), step, 0);
+            } else {
+                let ha = matches!(a.probe(&sig, step, 0), ProbeOutcome::Hit(_));
+                let hb = matches!(b.probe(&sig, step, 0), ProbeOutcome::Hit(_));
+                if ha != hb {
+                    return Err(format!("probe diverged at step {step}"));
+                }
+            }
+        }
+        if a.stats() != b.stats() {
+            return Err(format!("stats diverged: {:?} vs {:?}", a.stats(), b.stats()));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #18 (cache): with `[cache]` absent or `enabled = false` the
+/// fleet scheduler is bit-identical to the pre-cache (PR 2) scheduler —
+/// the disabled subsystem must not perturb one PRNG draw, one counter or
+/// one latency column, for arbitrary fleet shapes and knob values.
+#[test]
+fn prop_disabled_cache_is_bit_identical() {
+    seeded_forall!("cache_disabled_identity", 4, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = rng.next_u64();
+        sys.fleet.n_sessions = 2 + rng.below(3) as usize;
+        sys.fleet.max_batch = 1 + rng.below(4) as usize;
+        let kinds = [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased];
+        let kind = kinds[rng.below(3) as usize];
+        let baseline = rapid::serve::Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+
+        // a configured-but-disabled [cache] section with arbitrary knobs
+        let mut cached = sys.clone();
+        cached.cache.enabled = false;
+        cached.cache.capacity = 1 + rng.below(512) as usize;
+        cached.cache.ttl_rounds = rng.below(1000) as u64;
+        cached.cache.seed = rng.next_u64();
+        cached.cache.quant = rng.range(0.001, 1.0);
+        cached.cache.shared = rng.chance(0.5);
+        let run = rapid::serve::Fleet::local(&cached, TaskKind::PickPlace, kind).run();
+
+        if baseline.stats.rounds != run.stats.rounds
+            || baseline.stats.batched_requests != run.stats.batched_requests
+        {
+            return Err(format!("scheduler stats differ: {:?} vs {:?}", baseline.stats, run.stats));
+        }
+        if !run.cache.is_zero() {
+            return Err(format!("disabled cache recorded activity: {:?}", run.cache));
+        }
+        for (sa, sb) in baseline.sessions.iter().zip(run.sessions.iter()) {
+            for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+                if ma.latency_columns() != mb.latency_columns()
+                    || ma.cloud_events != mb.cloud_events
+                    || ma.rms_error != mb.rms_error
+                    || ma.cache_hits != 0
+                    || mb.cache_hits != 0
+                {
+                    return Err(format!("session {} diverged with cache disabled", sa.session));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Cooldown unit property: ready exactly after `limit` ticks.
 #[test]
 fn prop_cooldown_exact() {

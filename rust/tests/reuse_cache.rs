@@ -1,0 +1,325 @@
+//! Reuse-cache integration suite. The load-bearing guarantees:
+//!
+//! * with `[cache]` absent or `enabled = false` the fleet scheduler is
+//!   **bit-identical** to the pre-cache (PR 2) scheduler,
+//! * a **cross-session hit actually skips the wire frame** — the TCP
+//!   cloud server sees one request fewer for every hit,
+//! * **chaos + warm cache beats chaos + cold cache**: through an uplink
+//!   outage the warm fleet keeps serving cloud-grade chunks from the
+//!   store, and through a reply-drop window it strictly undercuts the
+//!   cold fleet's timeout bill,
+//! * **eviction replays exactly** under a fixed seed,
+//! * the per-session tier works without the fleet-shared tier
+//!   (`cache.shared = false`).
+
+use rapid::config::{PolicyKind, SystemConfig};
+use rapid::experiments::reuse;
+use rapid::faults::{FaultEngine, FaultPlan};
+use rapid::net::{CloudClient, CloudServer};
+use rapid::robot::TaskKind;
+use rapid::serve::{Fleet, FleetResult};
+use rapid::vla::AnalyticBackend;
+use std::sync::atomic::Ordering;
+
+fn fleet_sys(n: usize, max_batch: usize) -> SystemConfig {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = n;
+    sys.fleet.max_batch = max_batch;
+    sys.fleet.max_inflight = 16;
+    sys
+}
+
+fn total_lat(res: &FleetResult) -> f64 {
+    res.summary().fleet.total_lat_mean
+}
+
+fn total_hits(res: &FleetResult) -> u64 {
+    res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.cache_hits).sum()
+}
+
+fn assert_all_complete(res: &FleetResult, task: TaskKind, tag: &str) {
+    for s in &res.sessions {
+        for (ep, m) in s.episodes.iter().enumerate() {
+            assert_eq!(
+                m.steps,
+                task.seq_len(),
+                "{tag}: session {} episode {ep} wedged at step {}",
+                s.session,
+                m.steps
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- identity
+
+#[test]
+fn disabled_cache_is_bit_identical_to_pr2_baseline() {
+    // `[cache]` absent (the default SystemConfig) vs a fully-knobbed but
+    // disabled section: per-session metrics must match to the last bit
+    let sys = fleet_sys(6, 4);
+    let baseline = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+
+    let mut disabled = sys.clone();
+    disabled.cache.enabled = false;
+    disabled.cache.capacity = 7;
+    disabled.cache.ttl_rounds = 3;
+    disabled.cache.seed = 999;
+    disabled.cache.quant = 0.001;
+    let run = Fleet::local(&disabled, TaskKind::PickPlace, PolicyKind::Rapid).run();
+
+    assert_eq!(baseline.stats.rounds, run.stats.rounds);
+    assert_eq!(baseline.stats.batches, run.stats.batches);
+    assert_eq!(baseline.stats.batched_requests, run.stats.batched_requests);
+    assert_eq!(baseline.endpoint_dispatches, run.endpoint_dispatches);
+    assert!(run.cache.is_zero(), "{:?}", run.cache);
+    for (sa, sb) in baseline.sessions.iter().zip(run.sessions.iter()) {
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "session {}", sa.session);
+            assert_eq!(ma.cloud_events, mb.cloud_events);
+            assert_eq!(ma.edge_events, mb.edge_events);
+            assert_eq!(ma.rms_error, mb.rms_error);
+            assert_eq!(ma.success, mb.success);
+            assert_eq!((ma.cache_hits, ma.cache_misses), (0, 0));
+            assert_eq!((mb.cache_hits, mb.cache_misses), (0, 0));
+        }
+    }
+}
+
+#[test]
+fn enabled_cache_with_an_offload_free_policy_changes_nothing() {
+    // Edge-Only never routes to the cloud: no probes, no admissions, and
+    // the enabled store stays untouched — the run equals the baseline
+    let sys = fleet_sys(4, 4);
+    let baseline = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+    let mut cached = sys.clone();
+    cached.cache.enabled = true;
+    let run = Fleet::local(&cached, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+    assert!(run.cache.is_zero(), "{:?}", run.cache);
+    for (sa, sb) in baseline.sessions.iter().zip(run.sessions.iter()) {
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns());
+            assert_eq!(ma.rms_error, mb.rms_error);
+        }
+    }
+}
+
+// ------------------------------------------------------------- the wire
+
+#[test]
+fn cross_session_hit_skips_the_wire_frame() {
+    // one real TCP endpoint; 8 lockstep Cloud-Only sessions with a batch
+    // bound of 4: the first flush admits its replies, the back half of
+    // the fleet hits the store in the same round — and every hit is one
+    // request the server never sees
+    let server =
+        CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(300))).unwrap();
+    let task = TaskKind::PickPlace;
+    let refills = ((task.seq_len() + rapid::CHUNK - 1) / rapid::CHUNK) as u64;
+
+    let mut sys = fleet_sys(8, 4);
+    sys.cache.enabled = true;
+    let client = CloudClient::connect(&server.addr.to_string()).unwrap();
+    let res = Fleet::remote(&sys, task, PolicyKind::CloudOnly, vec![client]).run();
+    assert_all_complete(&res, task, "cached remote");
+
+    let hits = total_hits(&res);
+    assert_eq!(hits, res.cache.hits, "episode and store hit counts agree");
+    assert!(hits >= 4, "round-0 cross-session hits expected, got {hits}");
+    let served = server.stats().requests.load(Ordering::Relaxed);
+    assert_eq!(
+        served + hits,
+        8 * refills,
+        "wire requests + cache hits must partition the offload schedule"
+    );
+    assert!(served < 8 * refills, "the server must see fewer frames than the schedule");
+    server.shutdown();
+
+    // the cache-off control run pays the wire for every single refill
+    let server2 =
+        CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(300))).unwrap();
+    let mut off = sys.clone();
+    off.cache.enabled = false;
+    let client2 = CloudClient::connect(&server2.addr.to_string()).unwrap();
+    let base = Fleet::remote(&off, task, PolicyKind::CloudOnly, vec![client2]).run();
+    assert_all_complete(&base, task, "uncached remote");
+    assert_eq!(server2.stats().requests.load(Ordering::Relaxed), 8 * refills);
+    server2.shutdown();
+}
+
+// ---------------------------------------------------------------- chaos
+
+#[test]
+fn outage_warm_cache_keeps_serving_where_cold_defers() {
+    // episode 1 warms the store; a long uplink outage covers episode 2
+    // entirely. The cold fleet can only defer every refill to its (empty,
+    // 0 GB) Cloud-Only edge slice; the warm fleet serves cloud-grade
+    // chunks from the store — every hit is a deferral that never happened
+    let mut sys = fleet_sys(6, 4);
+    sys.fleet.episodes_per_session = 2;
+    sys.cache.enabled = true;
+    sys.cache.ttl_rounds = 512;
+    sys.cache.capacity = 1024;
+    let task = TaskKind::PickPlace;
+    let plan = FaultPlan::none().outage(45, 400);
+
+    let warm = Fleet::local_with_faults(
+        &sys,
+        task,
+        PolicyKind::CloudOnly,
+        FaultEngine::new(plan.clone(), 1, 250.0, 2),
+    )
+    .run();
+    let mut cold_sys = sys.clone();
+    cold_sys.cache.enabled = false;
+    let cold = Fleet::local_with_faults(
+        &cold_sys,
+        task,
+        PolicyKind::CloudOnly,
+        FaultEngine::new(plan, 1, 250.0, 2),
+    )
+    .run();
+
+    assert_all_complete(&warm, task, "warm outage");
+    assert_all_complete(&cold, task, "cold outage");
+    assert!(warm.stats.outage_rounds > 0 && cold.stats.outage_rounds > 0);
+    // episode 2 starts inside the outage with the exact initial signature
+    // episode 1 admitted at round 0: at least one guaranteed hit/session
+    assert!(warm.cache.hits >= 6, "outage-window hits expected: {:?}", warm.cache);
+    assert!(
+        warm.stats.deferred_offloads < cold.stats.deferred_offloads,
+        "hits must replace deferrals: warm {} vs cold {}",
+        warm.stats.deferred_offloads,
+        cold.stats.deferred_offloads
+    );
+    assert_eq!(cold.cache.hits, 0);
+}
+
+#[test]
+fn drop_window_warm_cache_strictly_undercuts_cold() {
+    // every reply is dropped from round 40 on (single endpoint, no
+    // retries): episode 2 offloads each cost the cold fleet a full
+    // timeout + edge failover, while the warm fleet serves the steps it
+    // cached during episode 1 at probe latency — strictly lower fleet
+    // mean latency
+    let mut sys = fleet_sys(6, 4);
+    sys.fleet.episodes_per_session = 2;
+    sys.cache.enabled = true;
+    sys.cache.ttl_rounds = 512;
+    sys.cache.capacity = 1024;
+    let task = TaskKind::PickPlace;
+    let plan = FaultPlan::none().drop_replies(40, u64::MAX, 1.0);
+
+    let warm = Fleet::local_with_faults(
+        &sys,
+        task,
+        PolicyKind::CloudOnly,
+        FaultEngine::new(plan.clone(), 7, 250.0, 0),
+    )
+    .run();
+    let mut cold_sys = sys.clone();
+    cold_sys.cache.enabled = false;
+    let cold = Fleet::local_with_faults(
+        &cold_sys,
+        task,
+        PolicyKind::CloudOnly,
+        FaultEngine::new(plan, 7, 250.0, 0),
+    )
+    .run();
+
+    assert_all_complete(&warm, task, "warm drops");
+    assert_all_complete(&cold, task, "cold drops");
+    assert!(warm.cache.hits >= 6, "episode-2 hits expected: {:?}", warm.cache);
+    assert!(cold.stats.dropped_replies > 0 && warm.stats.dropped_replies > 0);
+    assert!(
+        total_lat(&warm) < total_lat(&cold),
+        "every hit replaces a charged timeout: warm {} vs cold {}",
+        total_lat(&warm),
+        total_lat(&cold)
+    );
+}
+
+// ------------------------------------------------------------- eviction
+
+#[test]
+fn eviction_pressure_replays_exactly() {
+    // a 2-entry store under a 6-session fleet churns constantly; the
+    // seeded eviction stream must make the whole run reproducible
+    let mut sys = fleet_sys(6, 4);
+    sys.cache.enabled = true;
+    sys.cache.capacity = 2;
+    let run = || Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    let a = run();
+    let b = run();
+    assert!(a.cache.evictions > 0, "capacity 2 must evict: {:?}", a.cache);
+    assert_eq!(a.cache, b.cache, "store counters replay");
+    assert_eq!(a.stats.rounds, b.stats.rounds);
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests);
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "session {}", sa.session);
+            assert_eq!(ma.cache_hits, mb.cache_hits);
+            assert_eq!(ma.rms_error, mb.rms_error);
+        }
+    }
+}
+
+// ------------------------------------------------------------- the tiers
+
+#[test]
+fn unshared_store_restricts_reuse_to_the_owning_session() {
+    let task = TaskKind::PickPlace;
+    let mut shared = fleet_sys(8, 4);
+    shared.cache.enabled = true;
+    let hits_shared = Fleet::local(&shared, task, PolicyKind::CloudOnly).run().cache.hits;
+    assert!(hits_shared >= 4, "shared tier hits: {hits_shared}");
+
+    let mut unshared = shared.clone();
+    unshared.cache.shared = false;
+    let hits_unshared = Fleet::local(&unshared, task, PolicyKind::CloudOnly).run().cache.hits;
+    assert!(
+        hits_unshared < hits_shared,
+        "blocking the shared tier must cost hits: {hits_unshared} vs {hits_shared}"
+    );
+
+    // the per-session tier still works across a session's own episodes
+    let mut own = unshared.clone();
+    own.fleet.episodes_per_session = 2;
+    own.cache.ttl_rounds = 512;
+    let res = Fleet::local(&own, task, PolicyKind::CloudOnly).run();
+    assert!(res.cache.hits >= 6, "episode 2 must reuse the session's own entries: {:?}", res.cache);
+    assert_all_complete(&res, task, "per-session tier");
+}
+
+// ------------------------------------- the shipped config (acceptance)
+
+#[test]
+fn libero_toml_cache_arm_hits_and_wins_at_equal_success() {
+    let src = std::fs::read_to_string("configs/libero.toml").expect("configs/libero.toml");
+    let sys = SystemConfig::from_toml(&src).expect("libero.toml parses");
+    assert!(!sys.cache.enabled, "the shipped config keeps the cache off by default");
+    assert_eq!(sys.cache.capacity, 256, "libero.toml carries the [cache] knobs");
+
+    let (_, rows) = reuse::run(&sys, TaskKind::PickPlace);
+    let fleet_hits: u64 = rows.iter().map(|r| r.clean_cache.hits + r.chaos_cache.hits).sum();
+    assert!(fleet_hits > 0, "the reuse table must show a nonzero fleet hit rate");
+    for r in &rows {
+        assert!(r.completed, "{:?} wedged", r.policy);
+    }
+    let cloud = rows.iter().find(|r| r.policy == PolicyKind::CloudOnly).unwrap();
+    assert!(cloud.clean_cache.hits > 0);
+    assert!(
+        cloud.clean_on_lat < cloud.clean_off_lat,
+        "cache-on must strictly lower mean episode latency: {} vs {}",
+        cloud.clean_on_lat,
+        cloud.clean_off_lat
+    );
+    // the acceptance pin: strictly lower latency *at equal task success*.
+    // If a borderline episode ever flips under reuse, tighten the
+    // divergence budget (cache.quant / cache.max_zscore) rather than
+    // loosening this assert.
+    assert_eq!(
+        cloud.clean_on_success, cloud.clean_off_success,
+        "the win must come at equal task success"
+    );
+}

@@ -26,14 +26,16 @@ impl<'a> ReusePolicy<'a> {
         ReusePolicy { cfg }
     }
 
-    /// The dispatch's cache key.
+    /// The dispatch's cache key (family-discriminated: hits never cross
+    /// model families).
     pub fn signature(
         &self,
         instr: usize,
         frame: &SensorFrame,
         ev: Option<&ReuseEvidence>,
+        family: crate::vla::profile::ModelFamily,
     ) -> Signature {
-        Signature::of(self.cfg, instr, frame, ev)
+        Signature::of(self.cfg, instr, frame, ev, family)
     }
 
     /// True when this dispatch may be served from the store. NaN scores

@@ -12,6 +12,7 @@
 use crate::config::CacheConfig;
 use crate::dispatcher::ReuseEvidence;
 use crate::robot::SensorFrame;
+use crate::vla::profile::ModelFamily;
 use crate::N_JOINTS;
 
 /// Exact-match cache key: everything already quantized to integer bins.
@@ -20,6 +21,11 @@ use crate::N_JOINTS;
 pub struct Signature {
     /// Task instruction id — chunks never cross tasks.
     pub instr: usize,
+    /// Model-family discriminant — chunks never cross model families: two
+    /// sessions in the same kinematic state but served by different
+    /// backends (zoo families, or any future edge/cloud variant split)
+    /// must never share a cached answer.
+    fam: u8,
     /// Joint positions, binned at `cache.quant` rad.
     q: [i32; N_JOINTS],
     /// Velocity norm ‖q̇‖, binned at `cache.quant` rad/s.
@@ -41,13 +47,14 @@ fn bin(x: f64, step: f64) -> i32 {
 
 impl Signature {
     /// Build the signature of a dispatch from the last proprioceptive
-    /// frame and (when the strategy provides it) the dispatcher's
-    /// normalized anomaly evidence.
+    /// frame, the serving model family, and (when the strategy provides
+    /// it) the dispatcher's normalized anomaly evidence.
     pub fn of(
         cfg: &CacheConfig,
         instr: usize,
         frame: &SensorFrame,
         ev: Option<&ReuseEvidence>,
+        family: ModelFamily,
     ) -> Signature {
         let mut q = [0i32; N_JOINTS];
         for (i, b) in q.iter_mut().enumerate() {
@@ -57,7 +64,12 @@ impl Signature {
             Some(e) => (bin(e.m_acc_hat, cfg.z_quant), bin(e.m_tau_hat, cfg.z_quant)),
             None => (0, 0),
         };
-        Signature { instr, q, v: bin(frame.dq.norm(), cfg.quant), z_acc, z_tau }
+        Signature { instr, fam: family.id(), q, v: bin(frame.dq.norm(), cfg.quant), z_acc, z_tau }
+    }
+
+    /// The family discriminant baked into this key.
+    pub fn family_id(&self) -> u8 {
+        self.fam
     }
 }
 
@@ -65,6 +77,8 @@ impl Signature {
 mod tests {
     use super::*;
     use crate::robot::Jv;
+
+    const FAM: ModelFamily = ModelFamily::Surrogate;
 
     fn frame(q: f64, dq: f64) -> SensorFrame {
         SensorFrame { step: 0, q: Jv::splat(q), dq: Jv::splat(dq), tau: Jv::ZERO }
@@ -77,26 +91,44 @@ mod tests {
     #[test]
     fn identical_states_share_a_signature() {
         let c = cfg();
-        let a = Signature::of(&c, 1, &frame(0.31, 0.2), None);
-        let b = Signature::of(&c, 1, &frame(0.31, 0.2), None);
+        let a = Signature::of(&c, 1, &frame(0.31, 0.2), None, FAM);
+        let b = Signature::of(&c, 1, &frame(0.31, 0.2), None, FAM);
         assert_eq!(a, b);
     }
 
     #[test]
     fn noise_below_the_quantization_step_is_absorbed() {
         let c = cfg();
-        let a = Signature::of(&c, 1, &frame(0.30, 0.20), None);
-        let b = Signature::of(&c, 1, &frame(0.302, 0.201), None);
+        let a = Signature::of(&c, 1, &frame(0.30, 0.20), None, FAM);
+        let b = Signature::of(&c, 1, &frame(0.302, 0.201), None, FAM);
         assert_eq!(a, b, "sub-quant jitter must not split the bin");
     }
 
     #[test]
     fn distinct_states_and_tasks_split() {
         let c = cfg();
-        let a = Signature::of(&c, 1, &frame(0.3, 0.2), None);
-        assert_ne!(a, Signature::of(&c, 2, &frame(0.3, 0.2), None), "task id");
-        assert_ne!(a, Signature::of(&c, 1, &frame(0.9, 0.2), None), "joint state");
-        assert_ne!(a, Signature::of(&c, 1, &frame(0.3, 1.9), None), "velocity");
+        let a = Signature::of(&c, 1, &frame(0.3, 0.2), None, FAM);
+        assert_ne!(a, Signature::of(&c, 2, &frame(0.3, 0.2), None, FAM), "task id");
+        assert_ne!(a, Signature::of(&c, 1, &frame(0.9, 0.2), None, FAM), "joint state");
+        assert_ne!(a, Signature::of(&c, 1, &frame(0.3, 1.9), None, FAM), "velocity");
+    }
+
+    #[test]
+    fn model_family_is_a_hard_discriminant() {
+        // regression (PR 4 satellite): before the discriminant, two
+        // sessions in the same kinematic state served by *different model
+        // variants* shared a signature, so a shared store could
+        // cross-serve chunks between incompatible backends
+        let c = cfg();
+        let a = Signature::of(&c, 1, &frame(0.3, 0.2), None, ModelFamily::Surrogate);
+        for fam in [ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+            let b = Signature::of(&c, 1, &frame(0.3, 0.2), None, fam);
+            assert_ne!(a, b, "{fam:?} must not share the surrogate's key");
+            assert_eq!(b.family_id(), fam.id());
+        }
+        // same family still matches
+        let c2 = Signature::of(&c, 1, &frame(0.3, 0.2), None, ModelFamily::OpenVlaAr);
+        assert_eq!(c2, Signature::of(&c, 1, &frame(0.3, 0.2), None, ModelFamily::OpenVlaAr));
     }
 
     #[test]
@@ -104,11 +136,11 @@ mod tests {
         let c = cfg();
         let calm = ReuseEvidence { m_acc_hat: 0.2, m_tau_hat: 0.1, velocity: 0.2 };
         let wild = ReuseEvidence { m_acc_hat: 30.0, m_tau_hat: 0.1, velocity: 0.2 };
-        let a = Signature::of(&c, 1, &frame(0.3, 0.2), Some(&calm));
-        let b = Signature::of(&c, 1, &frame(0.3, 0.2), Some(&wild));
+        let a = Signature::of(&c, 1, &frame(0.3, 0.2), Some(&calm), FAM);
+        let b = Signature::of(&c, 1, &frame(0.3, 0.2), Some(&wild), FAM);
         assert_ne!(a, b);
         // calm evidence quantizes into the no-evidence bin (both ~0σ)
-        assert_eq!(a, Signature::of(&c, 1, &frame(0.3, 0.2), None));
+        assert_eq!(a, Signature::of(&c, 1, &frame(0.3, 0.2), None, FAM));
     }
 
     #[test]
@@ -116,9 +148,9 @@ mod tests {
         let c = cfg();
         let mut f = frame(0.3, 0.2);
         f.q[0] = f64::NAN;
-        let bad = Signature::of(&c, 1, &f, None);
-        assert_ne!(bad, Signature::of(&c, 1, &frame(0.3, 0.2), None));
+        let bad = Signature::of(&c, 1, &f, None, FAM);
+        assert_ne!(bad, Signature::of(&c, 1, &frame(0.3, 0.2), None, FAM));
         // but NaN signatures are still self-equal (no poisoned HashMap)
-        assert_eq!(bad, Signature::of(&c, 1, &f, None));
+        assert_eq!(bad, Signature::of(&c, 1, &f, None, FAM));
     }
 }

@@ -169,8 +169,12 @@ mod tests {
     use crate::vla::Backend;
 
     fn sig(q: f64) -> Signature {
+        sig_fam(q, crate::vla::profile::ModelFamily::Surrogate)
+    }
+
+    fn sig_fam(q: f64, fam: crate::vla::profile::ModelFamily) -> Signature {
         let f = SensorFrame { step: 0, q: Jv::splat(q), dq: Jv::ZERO, tau: Jv::ZERO };
-        Signature::of(&CacheConfig::default(), 1, &f, None)
+        Signature::of(&CacheConfig::default(), 1, &f, None, fam)
     }
 
     fn out(seed: u64) -> ModelOut {
@@ -239,6 +243,26 @@ mod tests {
         assert_eq!(s.len(), 1);
         assert_eq!(s.stats().refreshed, 1);
         assert!(matches!(s.probe(&sig(0.1), 12, 0), ProbeOutcome::Hit(_)), "refreshed TTL");
+    }
+
+    #[test]
+    fn family_tagged_entries_never_cross_serve() {
+        use crate::vla::profile::ModelFamily;
+        // regression (PR 4 satellite): a shared store holding a chunk
+        // produced by one model family must miss for every other family in
+        // the identical kinematic state
+        let mut s = ReuseStore::new(8, 100, true, 1);
+        s.admit(sig_fam(0.1, ModelFamily::OpenVlaAr), out(1), 0, 0);
+        assert!(matches!(
+            s.probe(&sig_fam(0.1, ModelFamily::OpenVlaAr), 1, 5),
+            ProbeOutcome::Hit(_)
+        ));
+        for fam in [ModelFamily::Surrogate, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+            assert!(
+                matches!(s.probe(&sig_fam(0.1, fam), 1, 5), ProbeOutcome::Miss),
+                "{fam:?} cross-served another family's chunk"
+            );
+        }
     }
 
     #[test]

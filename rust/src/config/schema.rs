@@ -387,6 +387,60 @@ impl Default for CacheConfig {
     }
 }
 
+/// Heterogeneous VLA model zoo (`vla::zoo` + `policy::planner`). With
+/// `enabled = false` (the default) every session serves the original
+/// surrogate family and the serve layer is bit-identical to a zoo-free
+/// build — the same zero-perturbation contract as `[faults]`/`[cache]`.
+/// Enabled, fleet sessions are assigned the listed families in balanced
+/// contiguous blocks, each session runs its family's backends at its
+/// planner-chosen partition point, and cross-session cloud batches are
+/// keyed by family so no wire batch ever mixes frame layouts.
+///
+/// Note: family catalogs (`vla::profile::FamilyProfile`) carry *absolute*
+/// per-family costs calibrated against the default `[devices]`/`[link]`
+/// anchors — a zoo session's offload payload and cloud compute come from
+/// its family's partition point, not from `link.obs_bytes` /
+/// `devices.cloud_compute_ms` (only the jitter model and the surrogate
+/// family keep following those knobs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelsConfig {
+    pub enabled: bool,
+    /// Comma-separated family names (`surrogate`, `openvla`, `pi0`,
+    /// `edgequant`), assigned across fleet sessions in catalog order.
+    pub families: String,
+}
+
+impl Default for ModelsConfig {
+    fn default() -> Self {
+        ModelsConfig { enabled: false, families: "openvla,pi0,edgequant".into() }
+    }
+}
+
+impl ModelsConfig {
+    /// Parse the family list; unknown names are skipped with a warning on
+    /// stderr (a typo must not silently change fleet composition). An
+    /// empty result falls back to the surrogate family alone.
+    pub fn family_list(&self) -> Vec<crate::vla::profile::ModelFamily> {
+        let mut fams = Vec::new();
+        for name in self.families.split(',') {
+            match crate::vla::profile::ModelFamily::parse(name) {
+                Some(f) => fams.push(f),
+                None if name.trim().is_empty() => {}
+                None => eprintln!(
+                    "[models] unknown family {:?} skipped (known: surrogate, openvla, pi0, \
+                     edgequant)",
+                    name.trim()
+                ),
+            }
+        }
+        if fams.is_empty() {
+            vec![crate::vla::profile::ModelFamily::Surrogate]
+        } else {
+            fams
+        }
+    }
+}
+
 /// Deterministic fault-injection schedule (`faults::FaultPlan` is built
 /// from this section; see `rust/src/faults/`). All windows are half-open
 /// `[start, end)` ranges of scheduler rounds; an empty window (start >=
@@ -522,6 +576,7 @@ pub struct SystemConfig {
     pub fleet: FleetConfig,
     pub faults: FaultsConfig,
     pub cache: CacheConfig,
+    pub models: ModelsConfig,
     pub episode: EpisodeConfig,
 }
 
@@ -543,6 +598,7 @@ impl Default for SystemConfig {
             fleet: FleetConfig::default(),
             faults: FaultsConfig::default(),
             cache: CacheConfig::default(),
+            models: ModelsConfig::default(),
             episode: EpisodeConfig::default(),
         }
     }
@@ -648,6 +704,9 @@ impl SystemConfig {
         c.max_zscore = v.f64_or("cache.max_zscore", c.max_zscore);
         c.probe_ms = v.f64_or("cache.probe_ms", c.probe_ms);
         c.shared = v.bool_or("cache.shared", c.shared);
+
+        self.models.enabled = v.bool_or("models.enabled", self.models.enabled);
+        self.models.families = v.str_or("models.families", &self.models.families).to_string();
 
         self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
@@ -793,6 +852,32 @@ mod tests {
         // untouched keys keep defaults
         assert_eq!(c.cache.probe_ms, 2.0);
         assert_eq!(c.cache.z_quant, 4.0);
+    }
+
+    #[test]
+    fn models_defaults_inert_and_overlay() {
+        use crate::vla::profile::ModelFamily;
+        let c = SystemConfig::default();
+        assert!(!c.models.enabled, "zoo must default off (bit-identity)");
+        assert_eq!(
+            c.models.family_list(),
+            vec![ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant]
+        );
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[models]\nenabled = true\nfamilies = \"pi0, edgequant\"",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.models.enabled);
+        assert_eq!(
+            c.models.family_list(),
+            vec![ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant]
+        );
+        // unknown names are skipped; an all-unknown list falls back to the
+        // surrogate so an enabled zoo can never have zero families
+        c.models.families = "what, ever".into();
+        assert_eq!(c.models.family_list(), vec![ModelFamily::Surrogate]);
     }
 
     #[test]

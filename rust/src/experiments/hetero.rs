@@ -1,0 +1,220 @@
+//! Heterogeneous-fleet experiment: a mixed model-zoo fleet (`[models]`
+//! enabled) served by RAPID vs the static Edge-Only / Cloud-Only
+//! partitionings, reported **per model family**.
+//!
+//! The point the table makes: "compatibility-optimal" has to hold per
+//! family, not on average — the AR family's expensive short-chunk cloud
+//! calls, the diffusion family's heavy activations and the quantized
+//! family's cheap edge slice all price the edge/cloud trade differently,
+//! and RAPID (edge-resident routine phases + planner-chosen partition
+//! points for its rare offloads) beats Cloud-Only's per-chunk wire cost
+//! for **every** family at equal task success, while the family-keyed
+//! batcher guarantees no cross-session batch ever mixes frame layouts.
+
+use crate::config::{PolicyKind, SystemConfig};
+use crate::robot::TaskKind;
+use crate::serve::Fleet;
+use crate::util::tablefmt::{ms, pct, Table};
+use crate::vla::profile::ModelFamily;
+
+/// Policies compared by the heterogeneous-fleet table.
+pub const POLICIES: [PolicyKind; 3] =
+    [PolicyKind::Rapid, PolicyKind::EdgeOnly, PolicyKind::CloudOnly];
+
+/// One (policy, family) cell of the comparison.
+pub struct HeteroRow {
+    pub policy: PolicyKind,
+    pub family: ModelFamily,
+    pub sessions: usize,
+    /// Mean per-chunk total latency over the family's episodes.
+    pub mean_lat: f64,
+    /// Task success rate over the family's episodes.
+    pub success: f64,
+    pub cloud_events: u64,
+    pub batches: u64,
+    /// Every episode of every session in this family completed.
+    pub completed: bool,
+}
+
+/// Scheduler-level evidence per policy arm.
+pub struct HeteroArm {
+    pub policy: PolicyKind,
+    /// Batches observed mixing model families (must be 0).
+    pub mixed_family_batches: u64,
+    pub family_flushes: u64,
+    pub multi_session_batches: u64,
+}
+
+/// Run the mixed-fleet comparison. `sys.models` is forced on (with its
+/// configured family list); fleet shape comes from `sys.fleet`.
+pub fn run(sys: &SystemConfig, task: TaskKind) -> (Table, Vec<HeteroRow>, Vec<HeteroArm>) {
+    let mut zoo_sys = sys.clone();
+    zoo_sys.models.enabled = true;
+
+    let mut rows = Vec::new();
+    let mut arms = Vec::new();
+    for kind in POLICIES {
+        let res = Fleet::local(&zoo_sys, task, kind).run();
+        arms.push(HeteroArm {
+            policy: kind,
+            mixed_family_batches: res.stats.mixed_family_batches,
+            family_flushes: res.stats.family_flushes,
+            multi_session_batches: res.stats.multi_session_batches,
+        });
+        let expect = task.seq_len();
+        for t in &res.families {
+            let fam_sessions: Vec<_> =
+                res.sessions.iter().filter(|s| s.family == t.family).collect();
+            let mut lat_sum = 0.0;
+            let mut succ = 0usize;
+            let mut episodes = 0usize;
+            let mut completed = true;
+            for s in &fam_sessions {
+                for m in &s.episodes {
+                    lat_sum += m.latency_columns().2;
+                    succ += m.success as usize;
+                    episodes += 1;
+                    completed &= m.steps == expect;
+                }
+            }
+            rows.push(HeteroRow {
+                policy: kind,
+                family: t.family,
+                sessions: t.sessions,
+                mean_lat: lat_sum / episodes.max(1) as f64,
+                success: succ as f64 / episodes.max(1) as f64,
+                cloud_events: t.cloud_events,
+                batches: t.batches,
+                completed,
+            });
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Heterogeneous model zoo ({} × {} session(s), families: {})",
+            task.name(),
+            sys.fleet.n_sessions.max(1),
+            zoo_sys
+                .models
+                .family_list()
+                .iter()
+                .map(|f| f.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+        &["Method", "Family", "Sessions", "Total Lat.", "Success", "Cloud Ev.", "Batches"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.policy.name().to_string(),
+            r.family.name().to_string(),
+            r.sessions.to_string(),
+            ms(r.mean_lat),
+            pct(r.success),
+            r.cloud_events.to_string(),
+            r.batches.to_string(),
+        ]);
+    }
+    t.footnote(
+        "Per-family rows of one mixed fleet per method: sessions are assigned families in \
+         contiguous blocks, each session serves its family's backends at the planner-chosen \
+         partition point, and cross-session cloud batches are family-keyed (zero mixed batches \
+         by construction).",
+    );
+    (t, rows, arms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemConfig {
+        let mut s = SystemConfig::default();
+        s.fleet.n_sessions = 8;
+        s.fleet.max_batch = 4;
+        s
+    }
+
+    fn cell<'a>(
+        rows: &'a [HeteroRow],
+        kind: PolicyKind,
+        fam: ModelFamily,
+    ) -> &'a HeteroRow {
+        rows.iter().find(|r| r.policy == kind && r.family == fam).unwrap()
+    }
+
+    #[test]
+    fn no_batch_ever_mixes_families() {
+        let (_, rows, arms) = run(&sys(), TaskKind::PickPlace);
+        assert_eq!(arms.len(), POLICIES.len());
+        for a in &arms {
+            assert_eq!(a.mixed_family_batches, 0, "{:?} mixed a batch", a.policy);
+        }
+        // the lockstep arm genuinely exercised the family seal AND
+        // same-family cross-session coalescing
+        let cloud = arms.iter().find(|a| a.policy == PolicyKind::CloudOnly).unwrap();
+        assert!(cloud.family_flushes > 0, "family seal never fired");
+        assert!(cloud.multi_session_batches > 0, "same-family blocks never coalesced");
+        for r in &rows {
+            assert!(r.completed, "{:?}/{:?} wedged", r.policy, r.family);
+        }
+    }
+
+    #[test]
+    fn rapid_beats_cloud_only_per_family_at_equal_success() {
+        let (_, rows, _) = run(&sys(), TaskKind::PickPlace);
+        for fam in [ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+            let rapid = cell(&rows, PolicyKind::Rapid, fam);
+            let cloud = cell(&rows, PolicyKind::CloudOnly, fam);
+            assert!(
+                rapid.mean_lat < cloud.mean_lat,
+                "{fam:?}: RAPID {} !< Cloud-Only {}",
+                rapid.mean_lat,
+                cloud.mean_lat
+            );
+            assert_eq!(
+                rapid.success, cloud.success,
+                "{fam:?}: success must be equal ({} vs {})",
+                rapid.success, cloud.success
+            );
+        }
+    }
+
+    #[test]
+    fn family_economics_show_in_the_cells() {
+        let (_, rows, _) = run(&sys(), TaskKind::PickPlace);
+        // the short-chunk AR family refills more often than the
+        // full-chunk diffusion family under Cloud-Only
+        let ar = cell(&rows, PolicyKind::CloudOnly, ModelFamily::OpenVlaAr);
+        let pi0 = cell(&rows, PolicyKind::CloudOnly, ModelFamily::Pi0Diffusion);
+        let per_session = |r: &HeteroRow| r.cloud_events as f64 / r.sessions.max(1) as f64;
+        assert!(
+            per_session(ar) > per_session(pi0),
+            "AR {} !> pi0 {}",
+            per_session(ar),
+            per_session(pi0)
+        );
+        // the quantized family's Edge-Only rows are the cheapest edge rows
+        let eq = cell(&rows, PolicyKind::EdgeOnly, ModelFamily::EdgeQuant);
+        let pe = cell(&rows, PolicyKind::EdgeOnly, ModelFamily::Pi0Diffusion);
+        assert!(eq.mean_lat < pe.mean_lat, "quantized edge must be cheapest");
+        // Edge-Only never offloads in any family
+        for fam in [ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+            assert_eq!(cell(&rows, PolicyKind::EdgeOnly, fam).cloud_events, 0);
+            assert_eq!(cell(&rows, PolicyKind::EdgeOnly, fam).batches, 0);
+        }
+    }
+
+    #[test]
+    fn table_renders_every_family_cell() {
+        let mut s = sys();
+        s.fleet.n_sessions = 6;
+        let (t, rows, _) = run(&s, TaskKind::PickPlace);
+        assert_eq!(rows.len(), POLICIES.len() * 3, "3 families × 3 policies");
+        let rendered = t.render();
+        for fam in [ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+            assert!(rendered.contains(fam.name()), "{fam:?} missing from table");
+        }
+    }
+}

@@ -7,6 +7,7 @@ pub mod degraded;
 pub mod fig2;
 pub mod fig3;
 pub mod fig5;
+pub mod hetero;
 pub mod overhead;
 pub mod reuse;
 pub mod sweep;

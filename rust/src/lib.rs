@@ -17,7 +17,16 @@
 //!   manipulator simulator and synthetic observation renderer.
 //! * [`runtime`], [`vla`] — PJRT CPU client loading the AOT-compiled JAX/
 //!   Pallas VLA surrogate (HLO text artifacts; python never at runtime;
-//!   `pjrt` feature — offline builds use the analytic surrogates).
+//!   `pjrt` feature — offline builds use the analytic surrogates) — plus
+//!   the **heterogeneous model zoo** (`vla::profile` / `vla::zoo`):
+//!   deterministic model-family profiles (autoregressive short-chunk,
+//!   diffusion long-chunk, quantized edge-compressed) over the same
+//!   `Backend` trait, each with its own partition-point catalog, and the
+//!   compatibility-aware planner (`policy::planner`) that picks the
+//!   optimal split per (family, link condition). The fleet keys its
+//!   cross-session batches on the family (never mixing frame layouts),
+//!   endpoints advertise the families they serve, and with `[models]`
+//!   disabled the whole zoo constructs nothing — bit-identical serving.
 //! * [`net`] — analytic link model (with time-varying fault profiles) +
 //!   the real TCP path: length-prefixed wire protocol with single and
 //!   *cross-session batch* frames, blocking client, threaded cloud server

@@ -4,11 +4,12 @@
 //! rapid run   [--preset libero|realworld] [--policy rapid|...] [--task pick|drawer|peg]
 //!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
 //!             [--analytic] [--trace out.csv] [--config file.toml]
-//! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|all>
+//! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo|all>
 //!             [--json BENCH_serve.json] [--budget-ms MS]
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
 //! rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E] [--batch B]
 //!             [--inflight I] [--endpoints P] [--seed S] [--config file.toml]
+//! rapid zoo   [--sessions N] [--task T] [--seed S] [--config file.toml]
 //! rapid info
 //! ```
 //!
@@ -28,6 +29,7 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("fleet") => cmd_fleet(&args[1..]),
         Some("chaos") => cmd_chaos(&args[1..]),
+        Some("zoo") => cmd_zoo(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -47,7 +49,7 @@ fn print_help() {
         "RAPID — redundancy-aware edge-cloud partitioned inference for VLA models\n\n\
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
-         \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|all>\n\
+         \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo|all>\n\
          \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
          \x20             (serve: benchkit timings of the serve layer, written as\n\
          \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
@@ -60,6 +62,9 @@ fn print_help() {
          \x20             [--episodes E] [--endpoints P] [--config FILE]\n\
          \x20             (defaults to configs/chaos.toml; compares RAPID vs\n\
          \x20              Edge-/Cloud-Only fleets under the fault schedule)\n\
+         \x20 rapid zoo   [--sessions N] [--task T] [--seed S] [--config FILE]\n\
+         \x20             (heterogeneous model-zoo fleet: family catalog,\n\
+         \x20              planner choices, per-family RAPID vs baselines)\n\
          \x20 rapid info\n"
     );
 }
@@ -207,6 +212,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
     let mut b = backends(&flags, sys.episode.seed);
     let eps = sys.episode.episodes.min(6).max(2);
 
+    let single = which != "all";
     let run_one = |name: &str, b: &mut Backends| match name {
         "tab1" => print!("{}", experiments::tab1::run(&sys, b, eps).0.render()),
         "tab2" => print!("{}", experiments::tab2::run(&sys, b, eps).0.render()),
@@ -269,14 +275,20 @@ fn cmd_bench(rest: &[String]) -> i32 {
             let hits: u64 = rows.iter().map(|r| r.clean_cache.hits + r.chaos_cache.hits).sum();
             println!("fleet-shared cache hits across all arms: {hits}");
         }
-        "serve" => bench_serve(&sys, &flags),
+        "serve" => bench_serve(&sys, &flags, single),
+        "zoo" => bench_zoo(&sys, &flags, single),
         other => eprintln!("unknown bench {other}"),
     };
 
     if which == "all" {
+        if flags.get("--json").is_some() {
+            // serve and zoo would both write the same path, the second
+            // silently clobbering the first — make the limitation explicit
+            eprintln!("[bench] --json applies to single-bench runs; ignored for `bench all`");
+        }
         for name in [
             "tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead",
-            "reuse", "serve",
+            "reuse", "serve", "zoo",
         ] {
             println!("\n### {name}");
             run_one(name, &mut b);
@@ -292,7 +304,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
 /// machine-readable JSON (`--json BENCH_serve.json`) so the perf
 /// trajectory accumulates across commits. `--budget-ms` bounds each
 /// case's measurement time (CI smoke uses a tiny budget).
-fn bench_serve(sys: &SystemConfig, flags: &Flags) {
+fn bench_serve(sys: &SystemConfig, flags: &Flags, write_json: bool) {
     use rapid::robot::TaskKind;
     use rapid::vla::AnalyticBackend;
 
@@ -345,7 +357,7 @@ fn bench_serve(sys: &SystemConfig, flags: &Flags) {
             dq: rapid::robot::Jv::splat(0.1),
             tau: rapid::robot::Jv::ZERO,
         };
-        let sig = rapid::cache::Signature::of(&cfg, 1, &frame, None);
+        let sig = rapid::cache::Signature::of(&cfg, 1, &frame, None, Default::default());
         let mut cloud = AnalyticBackend::cloud(1);
         let out = rapid::vla::Backend::infer(&mut cloud, &[0.1; rapid::D_VIS], &[0.0; rapid::D_PROP], 1);
         store.admit(sig, out, 0, 0);
@@ -357,7 +369,51 @@ fn bench_serve(sys: &SystemConfig, flags: &Flags) {
         });
     }
 
-    if let Some(path) = flags.get("--json") {
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// `rapid bench zoo`: benchkit timings of the heterogeneous serve path —
+/// mixed-family fleets per policy and the planner hot loop — optionally
+/// written as machine-readable JSON (`--json BENCH_zoo.json`).
+fn bench_zoo(sys: &SystemConfig, flags: &Flags, write_json: bool) {
+    use rapid::robot::TaskKind;
+    use rapid::vla::{FamilyProfile, ModelFamily};
+
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("model zoo");
+
+    let mut zoo_sys = sys.clone();
+    zoo_sys.models.enabled = true;
+    let n = zoo_sys.fleet.n_sessions.max(1);
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let name = format!(
+            "zoo_fleet/{n}s/{}",
+            if kind == PolicyKind::Rapid { "rapid" } else { "cloud_only" }
+        );
+        let s = zoo_sys.clone();
+        bench.run(&name, || {
+            let res = rapid::serve::Fleet::local(&s, TaskKind::PickPlace, kind).run();
+            std::hint::black_box(res.stats.mixed_family_batches);
+        });
+    }
+    // planner hot loop: one plan per family per call
+    bench.run("planner/plan_all_families", || {
+        for fam in ModelFamily::ALL {
+            let p = rapid::policy::planner::plan(&FamilyProfile::of(fam), 1000.0, 8.0);
+            std::hint::black_box(p.partition_idx);
+        }
+    });
+
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
         match bench.save_json(path) {
             Ok(()) => println!("bench results written to {path}"),
             Err(e) => {
@@ -463,6 +519,23 @@ fn cmd_fleet(rest: &[String]) -> i32 {
     if sys.cache.enabled {
         println!("{}", res.cache.report());
     }
+    if sys.models.enabled {
+        for t in &res.families {
+            println!(
+                "family {:<14} sessions {}  steps {}  cloud events {}  batches {}  cache hits {}",
+                t.family.name(),
+                t.sessions,
+                t.steps,
+                t.cloud_events,
+                t.batches,
+                t.cache_hits
+            );
+        }
+        println!(
+            "family flushes {}  mixed-family batches {}",
+            s.family_flushes, s.mixed_family_batches
+        );
+    }
     println!(
         "steps {}  cloud events {}  wall {:.2}s ({:.0} steps/s)",
         summary.total_steps,
@@ -559,6 +632,68 @@ fn cmd_chaos(rest: &[String]) -> i32 {
         0
     } else {
         eprintln!("WEDGED sessions under: {wedged:?}");
+        1
+    }
+}
+
+/// `rapid zoo`: the heterogeneous model-zoo demo — family catalog with
+/// the planner's partition choice under the active link, then the
+/// per-family RAPID vs Edge-/Cloud-Only mixed-fleet table.
+fn cmd_zoo(rest: &[String]) -> i32 {
+    use rapid::vla::FamilyProfile;
+
+    let flags = Flags(rest);
+    let mut sys = load_sys(&flags);
+    sys.models.enabled = true;
+    if let Some(n) = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.n_sessions = n.max(1);
+    }
+    let task = flags
+        .get("--task")
+        .and_then(TaskKind::parse)
+        .unwrap_or(rapid::robot::TaskKind::PickPlace);
+
+    println!(
+        "model zoo: families {:?} over {} session(s), link {:.0} Mbps / {:.0} ms RTT",
+        sys.models.family_list().iter().map(|f| f.name()).collect::<Vec<_>>(),
+        sys.fleet.n_sessions.max(1),
+        sys.link.bw_mbps,
+        sys.link.rtt_ms
+    );
+    for fam in sys.models.family_list() {
+        let prof = FamilyProfile::of(fam);
+        let plan = rapid::policy::planner::plan(&prof, sys.link.bw_mbps, sys.link.rtt_ms);
+        println!(
+            "  {:<14} chunk {}  edge x{:.2}  partitions {}  -> split #{}: edge {:.1} GB,              payload {:.0} KB, cloud {:.0} ms",
+            fam.name(),
+            prof.chunk_len,
+            prof.edge_ms_scale,
+            prof.partitions.len(),
+            plan.partition_idx,
+            plan.edge_gb,
+            plan.payload_bytes / 1e3,
+            plan.cloud_compute_ms
+        );
+    }
+
+    let t0 = std::time::Instant::now();
+    let (table, rows, arms) = rapid::experiments::hetero::run(&sys, task);
+    print!("{}", table.render());
+    let mixed: u64 = arms.iter().map(|a| a.mixed_family_batches).sum();
+    let wedged: Vec<String> = rows
+        .iter()
+        .filter(|r| !r.completed)
+        .map(|r| format!("{}/{}", r.policy.name(), r.family.name()))
+        .collect();
+    if mixed == 0 && wedged.is_empty() {
+        println!(
+            "zero mixed-family batches across {} arms; all sessions completed; wall {:.2}s",
+            arms.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        0
+    } else {
+        eprintln!("mixed-family batches: {mixed}; wedged: {wedged:?}");
         1
     }
 }

@@ -66,6 +66,56 @@ impl CloudClient {
         }
     }
 
+    /// Round-trip a *family-tagged* cross-session batch (model-zoo path):
+    /// the response must echo the family and the session ids in request
+    /// order, so a chunk produced under the wrong frame layout can never
+    /// be installed.
+    pub fn infer_batch_zoo(
+        &mut self,
+        family: crate::vla::ModelFamily,
+        items: &[(u32, InferRequest)],
+    ) -> Result<Vec<(u32, ModelOut)>, ProtoError> {
+        let t0 = Instant::now();
+        proto::write_all(&mut self.stream, &proto::encode_zoo_batch_infer(family.id(), items))?;
+        match proto::read_frame(&mut self.stream)? {
+            Frame::ZooBatchResult(fam, outs) => {
+                if fam != family.id() {
+                    return Err(ProtoError::Malformed(format!(
+                        "zoo result family {fam} != {}",
+                        family.id()
+                    )));
+                }
+                if outs.len() != items.len() {
+                    return Err(ProtoError::Malformed(format!(
+                        "zoo batch result arity {} != {}",
+                        outs.len(),
+                        items.len()
+                    )));
+                }
+                let want_k = crate::vla::FamilyProfile::of(family).chunk_len;
+                for ((got, out), (want, _)) in outs.iter().zip(items.iter()) {
+                    if got != want {
+                        return Err(ProtoError::Malformed(format!(
+                            "zoo batch result session {got} out of order (want {want})"
+                        )));
+                    }
+                    // a non-conforming server must not install chunks of
+                    // the wrong frame layout into a family's session
+                    if out.chunk_len() != want_k {
+                        return Err(ProtoError::Malformed(format!(
+                            "zoo result chunk length {} != family {} chunk {want_k}",
+                            out.chunk_len(),
+                            family.name()
+                        )));
+                    }
+                }
+                self.rtts_us.push(t0.elapsed().as_micros() as u64);
+                Ok(outs)
+            }
+            other => Err(ProtoError::Malformed(format!("expected zoo batch result, got {other:?}"))),
+        }
+    }
+
     /// Liveness probe; returns measured RTT.
     pub fn ping(&mut self) -> Result<Duration, ProtoError> {
         let t0 = Instant::now();
@@ -161,6 +211,33 @@ mod tests {
         assert_eq!(a.stats().requests.load(std::sync::atomic::Ordering::Relaxed), 5);
         a.shutdown();
         b.shutdown();
+    }
+
+    #[test]
+    fn zoo_batch_rpc_shapes_and_echoes_the_family() {
+        use crate::vla::{FamilyProfile, ModelFamily};
+        let server =
+            CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(42))).unwrap();
+        let mut c = CloudClient::connect(&server.addr.to_string()).unwrap();
+        let items: Vec<(u32, InferRequest)> = (0..3u32)
+            .map(|i| {
+                let mut obs = [0f32; D_VIS];
+                obs[0] = 0.1 * i as f32 + 0.1;
+                (i, InferRequest { instr: i, obs, proprio: [0.0; D_PROP] })
+            })
+            .collect();
+        // AR family: the server must truncate every reply to 4 actions
+        let outs = c.infer_batch_zoo(ModelFamily::OpenVlaAr, &items).unwrap();
+        assert_eq!(outs.len(), 3);
+        for (sid, out) in &outs {
+            assert!(*sid < 3);
+            assert_eq!(out.chunk_len(), FamilyProfile::of(ModelFamily::OpenVlaAr).chunk_len);
+        }
+        // surrogate family over the zoo path: full-length chunks
+        let outs = c.infer_batch_zoo(ModelFamily::Surrogate, &items).unwrap();
+        assert_eq!(outs[0].1.chunk_len(), crate::CHUNK);
+        assert_eq!(server.stats().zoo_frames.load(std::sync::atomic::Ordering::Relaxed), 2);
+        server.shutdown();
     }
 
     #[test]

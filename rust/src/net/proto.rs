@@ -9,12 +9,21 @@
 //! shutdown: [u32 len][u8 tag=5]
 //! batch   : [u32 len][u8 tag=6][u16 n] n × ([u32 session][request body])
 //! batchres: [u32 len][u8 tag=7][u16 n] n × ([u32 session][response body])
+//! zoobatch: [u32 len][u8 tag=8][u8 family][u16 n] n × ([u32 session][request body])
+//! zoores  : [u32 len][u8 tag=9][u8 family][u16 n] n × ([u32 session][u16 k][k-sized response body])
 //! ```
 //!
 //! Batch frames carry *cross-session* coalesced cloud offloads: the fleet
 //! scheduler stamps every sub-request with its session id and the server
 //! echoes the ids back, so responses can never migrate between sessions
 //! even when many robots share one connection.
+//!
+//! Zoo batch frames additionally carry a **model-family tag** — one per
+//! frame, not per item, because the fleet's family-keyed batching
+//! guarantees a batch never mixes families — and their responses are
+//! `k`-sized (a family's chunk length may be shorter than [`CHUNK`]). The
+//! server echoes the family so an edge can never install a chunk produced
+//! under the wrong frame layout.
 
 use crate::vla::ModelOut;
 use crate::{CHUNK, D_PROP, D_VIS, N_JOINTS, VOCAB};
@@ -27,6 +36,8 @@ pub const TAG_PONG: u8 = 4;
 pub const TAG_SHUTDOWN: u8 = 5;
 pub const TAG_BATCH_INFER: u8 = 6;
 pub const TAG_BATCH_RESULT: u8 = 7;
+pub const TAG_ZOO_BATCH_INFER: u8 = 8;
+pub const TAG_ZOO_BATCH_RESULT: u8 = 9;
 
 /// Hard cap on sub-requests per batch frame (well above any sane fleet).
 pub const MAX_BATCH_ITEMS: usize = 4096;
@@ -81,6 +92,10 @@ pub enum Frame {
     BatchInfer(Vec<(u32, InferRequest)>),
     /// Per-session responses in request order: (session id, output) pairs.
     BatchResult(Vec<(u32, ModelOut)>),
+    /// Family-tagged batch: every request serves the same model family.
+    ZooBatchInfer(u8, Vec<(u32, InferRequest)>),
+    /// Family-tagged responses (chunks may be shorter than [`CHUNK`]).
+    ZooBatchResult(u8, Vec<(u32, ModelOut)>),
 }
 
 fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
@@ -156,6 +171,37 @@ pub fn encode_batch_result(items: &[(u32, ModelOut)]) -> Vec<u8> {
     frame(body)
 }
 
+/// Encode a family-tagged request batch (one family per frame — the
+/// fleet's family-keyed batching never mixes them).
+pub fn encode_zoo_batch_infer(family: u8, items: &[(u32, InferRequest)]) -> Vec<u8> {
+    assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
+    let mut body = vec![TAG_ZOO_BATCH_INFER, family];
+    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    for (session, req) in items {
+        body.extend_from_slice(&session.to_le_bytes());
+        put_infer_body(&mut body, req);
+    }
+    frame(body)
+}
+
+/// Encode a family-tagged response batch; each item carries its explicit
+/// chunk length `k` (zoo families may emit short chunks).
+pub fn encode_zoo_batch_result(family: u8, items: &[(u32, ModelOut)]) -> Vec<u8> {
+    assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
+    let mut body = vec![TAG_ZOO_BATCH_RESULT, family];
+    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    for (session, out) in items {
+        let k = out.actions.len();
+        assert!(k >= 1 && k <= CHUNK, "chunk length {k}");
+        assert_eq!(out.logits.len(), k, "ragged logits");
+        assert_eq!(out.mass.len(), k, "ragged mass");
+        body.extend_from_slice(&session.to_le_bytes());
+        body.extend_from_slice(&(k as u16).to_le_bytes());
+        put_result_body(&mut body, out);
+    }
+    frame(body)
+}
+
 pub fn encode_tag(tag: u8) -> Vec<u8> {
     frame(vec![tag])
 }
@@ -199,21 +245,29 @@ fn get_infer_body(b: &[u8]) -> Result<(InferRequest, &[u8]), ProtoError> {
 }
 
 fn get_result_body(b: &[u8]) -> Result<(ModelOut, &[u8]), ProtoError> {
-    let (a, rest) = get_f32s(b, CHUNK * N_JOINTS)?;
-    let (l, rest) = get_f32s(rest, CHUNK * VOCAB)?;
-    let (m, rest) = get_f32s(rest, CHUNK)?;
-    Ok((ModelOut::from_flat(&a, &l, &m), rest))
+    get_result_body_k(CHUNK, b)
+}
+
+fn get_result_body_k(k: usize, b: &[u8]) -> Result<(ModelOut, &[u8]), ProtoError> {
+    let (a, rest) = get_f32s(b, k * N_JOINTS)?;
+    let (l, rest) = get_f32s(rest, k * VOCAB)?;
+    let (m, rest) = get_f32s(rest, k)?;
+    Ok((ModelOut::from_flat_k(k, &a, &l, &m), rest))
+}
+
+fn get_u16(b: &[u8]) -> Result<(usize, &[u8]), ProtoError> {
+    if b.len() < 2 {
+        return Err(ProtoError::Malformed("short u16".into()));
+    }
+    Ok((u16::from_le_bytes([b[0], b[1]]) as usize, &b[2..]))
 }
 
 fn get_batch_count(b: &[u8]) -> Result<(usize, &[u8]), ProtoError> {
-    if b.len() < 2 {
-        return Err(ProtoError::Malformed("short batch header".into()));
-    }
-    let n = u16::from_le_bytes([b[0], b[1]]) as usize;
+    let (n, rest) = get_u16(b)?;
     if n == 0 || n > MAX_BATCH_ITEMS {
         return Err(ProtoError::Malformed(format!("bad batch count {n}")));
     }
-    Ok((n, &b[2..]))
+    Ok((n, rest))
 }
 
 pub fn decode(body: &[u8]) -> Result<Frame, ProtoError> {
@@ -262,6 +316,46 @@ pub fn decode(body: &[u8]) -> Result<Frame, ProtoError> {
                 return Err(ProtoError::Malformed("trailing bytes in batch result".into()));
             }
             Ok(Frame::BatchResult(items))
+        }
+        Some(&TAG_ZOO_BATCH_INFER) => {
+            if body.len() < 2 {
+                return Err(ProtoError::Malformed("short zoo batch".into()));
+            }
+            let family = body[1];
+            let (n, mut rest) = get_batch_count(&body[2..])?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (session, r) = get_u32(rest)?;
+                let (req, r) = get_infer_body(r)?;
+                items.push((session, req));
+                rest = r;
+            }
+            if !rest.is_empty() {
+                return Err(ProtoError::Malformed("trailing bytes in zoo batch".into()));
+            }
+            Ok(Frame::ZooBatchInfer(family, items))
+        }
+        Some(&TAG_ZOO_BATCH_RESULT) => {
+            if body.len() < 2 {
+                return Err(ProtoError::Malformed("short zoo result".into()));
+            }
+            let family = body[1];
+            let (n, mut rest) = get_batch_count(&body[2..])?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (session, r) = get_u32(rest)?;
+                let (k, r) = get_u16(r)?;
+                if k == 0 || k > CHUNK {
+                    return Err(ProtoError::Malformed(format!("bad chunk length {k}")));
+                }
+                let (out, r) = get_result_body_k(k, r)?;
+                items.push((session, out));
+                rest = r;
+            }
+            if !rest.is_empty() {
+                return Err(ProtoError::Malformed("trailing bytes in zoo result".into()));
+            }
+            Ok(Frame::ZooBatchResult(family, items))
         }
         other => Err(ProtoError::Malformed(format!("unknown tag {other:?}"))),
     }
@@ -369,6 +463,57 @@ mod tests {
             }
             other => panic!("wrong frame {other:?}"),
         }
+    }
+
+    #[test]
+    fn zoo_batch_roundtrip_echoes_family_and_short_chunks() {
+        let mk = |k: usize, v: f32| {
+            let a: Vec<f32> = (0..k * N_JOINTS).map(|i| v + i as f32 * 0.01).collect();
+            let l: Vec<f32> = (0..k * VOCAB).map(|i| (i % 5) as f32).collect();
+            let m: Vec<f32> = (0..k).map(|i| v + i as f32).collect();
+            ModelOut::from_flat_k(k, &a, &l, &m)
+        };
+        // request side
+        let items: Vec<(u32, InferRequest)> = (0..3u32)
+            .map(|i| (i, InferRequest { instr: i, obs: [0.1; D_VIS], proprio: [0.2; D_PROP] }))
+            .collect();
+        let bytes = encode_zoo_batch_infer(2, &items);
+        let mut c = std::io::Cursor::new(bytes);
+        match read_frame(&mut c).unwrap() {
+            Frame::ZooBatchInfer(fam, got) => {
+                assert_eq!(fam, 2);
+                assert_eq!(got.len(), 3);
+                assert_eq!(got[1].1, items[1].1);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // response side: 4-action chunks survive the wire intact
+        let outs = vec![(7u32, mk(4, 0.5)), (9u32, mk(4, 1.5))];
+        let bytes = encode_zoo_batch_result(1, &outs);
+        let mut c = std::io::Cursor::new(bytes);
+        match read_frame(&mut c).unwrap() {
+            Frame::ZooBatchResult(fam, got) => {
+                assert_eq!(fam, 1);
+                assert_eq!(got.len(), 2);
+                assert_eq!(got[0].0, 7);
+                assert_eq!(got[0].1.chunk_len(), 4);
+                assert_eq!(got[1].1.mass, outs[1].1.mass);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zoo_result_rejects_bad_chunk_lengths() {
+        // hand-build a zoo result frame claiming k = CHUNK + 1
+        let mut body = vec![TAG_ZOO_BATCH_RESULT, 0];
+        body.extend_from_slice(&1u16.to_le_bytes());
+        body.extend_from_slice(&3u32.to_le_bytes());
+        body.extend_from_slice(&((CHUNK + 1) as u16).to_le_bytes());
+        let mut bytes = (body.len() as u32).to_le_bytes().to_vec();
+        bytes.append(&mut body);
+        let mut c = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut c).is_err());
     }
 
     #[test]

@@ -27,8 +27,11 @@ pub struct Pending {
 pub struct ServerStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
-    /// Cross-session batch frames received from fleet schedulers.
+    /// Cross-session batch frames received from fleet schedulers
+    /// (family-tagged zoo frames included).
     pub batch_frames: AtomicU64,
+    /// Subset of `batch_frames` that carried a model-family tag.
+    pub zoo_frames: AtomicU64,
     pub errors: AtomicU64,
 }
 
@@ -126,6 +129,46 @@ impl CloudServer {
     }
 }
 
+/// Serve one coalesced batch through the worker queue: fan the
+/// sub-requests in, collect replies in request order, echo session ids.
+/// With a family, every reply is pushed through the family's
+/// deterministic shape transform and the response frame echoes the
+/// family tag. `Err(())` means the connection must close.
+fn serve_batch(
+    stream: &mut TcpStream,
+    tx: &mpsc::Sender<Pending>,
+    items: Vec<(u32, InferRequest)>,
+    family: Option<crate::vla::ModelFamily>,
+) -> Result<(), ()> {
+    let mut waits = Vec::with_capacity(items.len());
+    for (session, req) in items {
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(Pending { req, reply: rtx }).is_err() {
+            return Err(());
+        }
+        waits.push((session, rrx));
+    }
+    let profile = family.map(crate::vla::FamilyProfile::of);
+    let mut outs = Vec::with_capacity(waits.len());
+    for (session, rrx) in waits {
+        match rrx.recv() {
+            Ok(out) => {
+                let out = match &profile {
+                    Some(p) => p.shape(out),
+                    None => out,
+                };
+                outs.push((session, out));
+            }
+            Err(_) => return Err(()),
+        }
+    }
+    let bytes = match family {
+        Some(f) => proto::encode_zoo_batch_result(f.id(), &outs),
+        None => proto::encode_batch_result(&outs),
+    };
+    proto::write_all(stream, &bytes).map_err(|_| ())
+}
+
 fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<ServerStats>, stop: Arc<AtomicBool>) {
     let _ = stream.set_nodelay(true);
     // Bounded read timeout so handler threads notice `stop` and release
@@ -156,33 +199,24 @@ fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<Serv
                 // in its batcher), then collect replies in request order and
                 // echo the session ids so responses cannot cross sessions
                 stats.batch_frames.fetch_add(1, Ordering::Relaxed);
-                let mut waits = Vec::with_capacity(items.len());
-                let mut failed = false;
-                for (session, req) in items {
-                    let (rtx, rrx) = mpsc::channel();
-                    if tx.send(Pending { req, reply: rtx }).is_err() {
-                        failed = true;
-                        break;
-                    }
-                    waits.push((session, rrx));
+                match serve_batch(&mut stream, &tx, items, None) {
+                    Ok(()) => {}
+                    Err(()) => break,
                 }
-                if failed {
+            }
+            Ok(Frame::ZooBatchInfer(fam_id, items)) => {
+                // family-tagged batch: validate the family, serve the batch
+                // through the shared worker, shape every reply with the
+                // family's deterministic transform, echo the family tag
+                let Some(family) = crate::vla::ModelFamily::from_id(fam_id) else {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
                     break;
-                }
-                let mut outs = Vec::with_capacity(waits.len());
-                for (session, rrx) in waits {
-                    match rrx.recv() {
-                        Ok(out) => outs.push((session, out)),
-                        Err(_) => {
-                            failed = true;
-                            break;
-                        }
-                    }
-                }
-                if failed
-                    || proto::write_all(&mut stream, &proto::encode_batch_result(&outs)).is_err()
-                {
-                    break;
+                };
+                stats.batch_frames.fetch_add(1, Ordering::Relaxed);
+                stats.zoo_frames.fetch_add(1, Ordering::Relaxed);
+                match serve_batch(&mut stream, &tx, items, Some(family)) {
+                    Ok(()) => {}
+                    Err(()) => break,
                 }
             }
             Ok(Frame::Ping) => {

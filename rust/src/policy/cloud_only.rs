@@ -38,8 +38,14 @@ mod tests {
     #[test]
     fn refills_only_from_cloud() {
         let mut s = CloudOnly::new();
-        assert_eq!(s.decide(&DecisionCtx { step: 0, queue_empty: true, entropy: None }), Route::CloudOffload);
-        assert_eq!(s.decide(&DecisionCtx { step: 1, queue_empty: false, entropy: None }), Route::Cached);
+        let ctx = |step, queue_empty| DecisionCtx {
+            step,
+            queue_empty,
+            entropy: None,
+            family: Default::default(),
+        };
+        assert_eq!(s.decide(&ctx(0, true)), Route::CloudOffload);
+        assert_eq!(s.decide(&ctx(1, false)), Route::Cached);
     }
 
     #[test]

@@ -39,7 +39,12 @@ mod tests {
     fn never_offloads() {
         let mut s = EdgeOnly::new();
         for step in 0..100 {
-            let r = s.decide(&DecisionCtx { step, queue_empty: step % 8 == 0, entropy: None });
+            let r = s.decide(&DecisionCtx {
+                step,
+                queue_empty: step % 8 == 0,
+                entropy: None,
+                family: Default::default(),
+            });
             assert_ne!(r, Route::CloudOffload);
         }
     }
@@ -47,7 +52,13 @@ mod tests {
     #[test]
     fn refills_on_empty() {
         let mut s = EdgeOnly::new();
-        assert_eq!(s.decide(&DecisionCtx { step: 0, queue_empty: true, entropy: None }), Route::EdgeRefill);
-        assert_eq!(s.decide(&DecisionCtx { step: 1, queue_empty: false, entropy: None }), Route::Cached);
+        let ctx = |step, queue_empty| DecisionCtx {
+            step,
+            queue_empty,
+            entropy: None,
+            family: Default::default(),
+        };
+        assert_eq!(s.decide(&ctx(0, true)), Route::EdgeRefill);
+        assert_eq!(s.decide(&ctx(1, false)), Route::Cached);
     }
 }

@@ -2,17 +2,20 @@
 
 pub mod cloud_only;
 pub mod edge_only;
+pub mod planner;
 pub mod rapid_policy;
 pub mod vision;
 
 pub use cloud_only::CloudOnly;
 pub use edge_only::EdgeOnly;
+pub use planner::FamilyPlan;
 pub use rapid_policy::RapidPolicy;
 pub use vision::VisionPolicy;
 
 use crate::config::{PolicyKind, SystemConfig};
 use crate::dispatcher::ReuseEvidence;
 use crate::robot::SensorFrame;
+use crate::vla::profile::ModelFamily;
 
 /// Where the next chunk (if any) comes from this control step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,6 +36,11 @@ pub struct DecisionCtx {
     /// Entropy of the action about to execute (vision baseline signal);
     /// None when the strategy does not request it.
     pub entropy: Option<f64>,
+    /// Model family the session serves ([`ModelFamily::Surrogate`] with
+    /// `[models]` disabled). Strategies may specialize on it; the stock
+    /// ones ignore it — the family's cost profile is applied by the
+    /// driver from the planner's [`FamilyPlan`].
+    pub family: ModelFamily,
 }
 
 /// A partitioning strategy: consumes the sensor stream, emits routes.

@@ -1,0 +1,135 @@
+//! Compatibility-aware partition planner: pick the split point of a model
+//! family's catalog that minimizes the per-offload critical path under
+//! the link condition currently in force.
+//!
+//! Cost model (matches the driver's charging, device-nominal):
+//!
+//! ```text
+//! cost(p) = p.edge_prefix_ms                    (split-point activations)
+//!         + p.payload_bytes·8 / bw + rtt/2      (uplink transfer)
+//!         + p.cloud_compute_ms                  (cloud slice)
+//! ```
+//!
+//! Ties break toward the **larger payload** (shallower split): that makes
+//! the chosen payload monotone non-decreasing in bandwidth — pinned by
+//! `proptest_invariants` — so a degrading link always moves the split
+//! deeper, never oscillates. The planner is a pure function: no PRNG, no
+//! state, identical output for identical (family, link) inputs, which is
+//! what lets the fleet replan per round under fault-injected link
+//! profiles without perturbing determinism.
+
+use crate::vla::profile::{FamilyProfile, ModelFamily, PartitionPoint};
+
+/// The planner's verdict for one session: everything the episode driver
+/// needs to serve a family at its chosen split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyPlan {
+    pub family: ModelFamily,
+    /// Actions per inference (family chunk shape).
+    pub chunk_len: usize,
+    /// Multiplier on edge-slice inference time.
+    pub edge_ms_scale: f64,
+    /// Edge compute charged before each offload leaves the device (ms).
+    pub edge_prefix_ms: f64,
+    /// Offload payload at the chosen split (bytes).
+    pub payload_bytes: f64,
+    /// Cloud compute per offload at the chosen split (ms, nominal — the
+    /// driver rescales its jittered draw by this / `devices.cloud_compute_ms`).
+    pub cloud_compute_ms: f64,
+    /// Cloud compute at the family's shallowest split (full cloud model,
+    /// ms): the cost charged to strategies that take no zoo split —
+    /// entropy baselines partition with their own split model, so they
+    /// pay the family's full-model cloud price, never a deep-split
+    /// discount whose edge prefix they skipped.
+    pub full_cloud_ms: f64,
+    /// Edge-resident GB at the chosen split (reporting).
+    pub edge_gb: f64,
+    /// Index into the family's partition catalog.
+    pub partition_idx: usize,
+}
+
+/// Estimated per-offload critical path of one partition point (ms).
+pub fn partition_cost(p: &PartitionPoint, bw_mbps: f64, rtt_ms: f64) -> f64 {
+    let bw = bw_mbps.max(1e-3);
+    p.edge_prefix_ms + p.payload_bytes * 8.0 / (bw * 1e6) * 1e3 + rtt_ms / 2.0 + p.cloud_compute_ms
+}
+
+/// Pick the compatibility-optimal partition of `profile` under the given
+/// link condition (effective bandwidth/RTT — nominal config values, or a
+/// fault window's degraded profile).
+pub fn plan(profile: &FamilyProfile, bw_mbps: f64, rtt_ms: f64) -> FamilyPlan {
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for (i, p) in profile.partitions.iter().enumerate() {
+        let c = partition_cost(p, bw_mbps, rtt_ms);
+        // strict '<' + shallow-to-deep catalog order = ties keep the
+        // earlier (larger-payload) point: monotone in bandwidth
+        if c < best_cost {
+            best = i;
+            best_cost = c;
+        }
+    }
+    let p = profile.partitions[best];
+    FamilyPlan {
+        family: profile.family,
+        chunk_len: profile.chunk_len,
+        edge_ms_scale: profile.edge_ms_scale,
+        edge_prefix_ms: p.edge_prefix_ms,
+        payload_bytes: p.payload_bytes,
+        cloud_compute_ms: p.cloud_compute_ms,
+        full_cloud_ms: profile.partitions[0].cloud_compute_ms,
+        edge_gb: p.edge_gb,
+        partition_idx: best,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surrogate_plan_is_the_nominal_no_op() {
+        let p = plan(&FamilyProfile::of(ModelFamily::Surrogate), 1000.0, 8.0);
+        assert_eq!(p.partition_idx, 0);
+        assert_eq!(p.payload_bytes, 1.5e6);
+        assert_eq!(p.cloud_compute_ms, 90.0);
+        assert_eq!(p.edge_prefix_ms, 0.0);
+        assert_eq!(p.edge_ms_scale, 1.0);
+        assert_eq!(p.chunk_len, crate::CHUNK);
+    }
+
+    #[test]
+    fn fast_link_prefers_shallow_splits_slow_link_deep() {
+        for fam in [ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+            let prof = FamilyProfile::of(fam);
+            let fast = plan(&prof, 1000.0, 8.0);
+            let slow = plan(&prof, 5.0, 80.0);
+            assert!(
+                fast.payload_bytes >= slow.payload_bytes,
+                "{fam:?}: fast {} < slow {}",
+                fast.payload_bytes,
+                slow.payload_bytes
+            );
+            assert_eq!(slow.partition_idx, prof.partitions.len() - 1, "{fam:?} at 5 Mbps");
+            assert_eq!(fast.partition_idx, 0, "{fam:?} at 1 Gbps");
+        }
+    }
+
+    #[test]
+    fn planner_is_deterministic() {
+        let prof = FamilyProfile::of(ModelFamily::Pi0Diffusion);
+        assert_eq!(plan(&prof, 77.7, 13.0), plan(&prof, 77.7, 13.0));
+    }
+
+    #[test]
+    fn cost_accounts_every_term() {
+        let p = PartitionPoint {
+            edge_gb: 2.0,
+            edge_prefix_ms: 10.0,
+            payload_bytes: 1e6,
+            cloud_compute_ms: 100.0,
+        };
+        // 1e6 B = 8 Mbit at 100 Mbps = 80 ms; + rtt/2 = 5; + 10 + 100
+        assert!((partition_cost(&p, 100.0, 10.0) - 195.0).abs() < 1e-9);
+    }
+}

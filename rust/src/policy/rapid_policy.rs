@@ -90,12 +90,23 @@ mod tests {
         // calm warm-up
         for i in 0..60 {
             p.observe(&frame(i, 0.2, 1.0));
-            assert_eq!(p.decide(&DecisionCtx { step: i, queue_empty: false, entropy: None }), Route::Cached);
+            let ctx = DecisionCtx {
+                step: i,
+                queue_empty: false,
+                entropy: None,
+                family: Default::default(),
+            };
+            assert_eq!(p.decide(&ctx), Route::Cached);
         }
         // contact spike at rest -> offload
         p.observe(&frame(60, 0.05, 9.0));
         assert_eq!(
-            p.decide(&DecisionCtx { step: 60, queue_empty: false, entropy: None }),
+            p.decide(&DecisionCtx {
+                step: 60,
+                queue_empty: false,
+                entropy: None,
+                family: Default::default(),
+            }),
             Route::CloudOffload
         );
     }
@@ -106,7 +117,12 @@ mod tests {
         let mut p = RapidPolicy::new(&sys.dispatcher, sys.robot.dt);
         for i in 0..100 {
             p.observe(&frame(i, 0.2, 1.0));
-            p.decide(&DecisionCtx { step: i, queue_empty: false, entropy: None });
+            p.decide(&DecisionCtx {
+                step: i,
+                queue_empty: false,
+                entropy: None,
+                family: Default::default(),
+            });
         }
         assert!(p.decision_ns > 0);
         // O(1) arithmetic: must stay well under 50µs per tick on any host

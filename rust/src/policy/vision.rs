@@ -100,7 +100,12 @@ mod tests {
     }
 
     fn ctx(entropy: f64, queue_empty: bool) -> DecisionCtx {
-        DecisionCtx { step: 0, queue_empty, entropy: Some(entropy) }
+        DecisionCtx {
+            step: 0,
+            queue_empty,
+            entropy: Some(entropy),
+            family: Default::default(),
+        }
     }
 
     #[test]

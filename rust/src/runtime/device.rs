@@ -29,14 +29,27 @@ impl DeviceClock {
     /// Edge inference with `gb` parameters resident (linear scaling
     /// anchored at the Edge-Only full-model time).
     pub fn edge_infer(&mut self, sys: &SystemConfig, gb: f64) -> f64 {
-        let t = self.jittered(sys.edge_infer_ms(gb));
+        self.edge_infer_scaled(sys, gb, 1.0)
+    }
+
+    /// [`DeviceClock::edge_infer`] under a model-family time multiplier
+    /// (zoo profiles). Scale 1.0 is bit-identical to the unscaled call —
+    /// one jitter draw either way.
+    pub fn edge_infer_scaled(&mut self, sys: &SystemConfig, gb: f64, scale: f64) -> f64 {
+        let t = self.jittered(sys.edge_infer_ms(gb)) * scale;
         self.now_ms += t;
         t
     }
 
     /// Cloud-side compute for a full-model inference.
     pub fn cloud_compute(&mut self) -> f64 {
-        let t = self.jittered(self.cfg.cloud_compute_ms);
+        self.cloud_compute_scaled(1.0)
+    }
+
+    /// [`DeviceClock::cloud_compute`] under a model-family time multiplier
+    /// (zoo partition points). Scale 1.0 is bit-identical.
+    pub fn cloud_compute_scaled(&mut self, scale: f64) -> f64 {
+        let t = self.jittered(self.cfg.cloud_compute_ms) * scale;
         self.now_ms += t;
         t
     }

@@ -10,6 +10,22 @@
 //! The surrogate executes B=1 per call, so a batch is drained
 //! sequentially; batching still amortizes queue wake-ups and wire frames,
 //! and gives both the server and the fleet their backpressure boundary.
+//!
+//! # Family-keyed batching (model zoo)
+//!
+//! The batcher itself is family-agnostic; the *fleet scheduler* keys its
+//! batches on the model family: when a request of a different
+//! [`crate::vla::ModelFamily`] arrives, the pending batch is sealed and
+//! flushed first (`FleetStats::family_flushes`), so a flushed batch is
+//! family-uniform **by construction** — different families have different
+//! frame layouts (chunk lengths, payload shapes) and must never share a
+//! wire batch. Sessions are assigned families in contiguous blocks
+//! precisely so that lockstep same-family offloads stay adjacent in
+//! scheduler order and still coalesce across sessions under this rule.
+//! Family-uniform batches then ride family-tagged zoo frames
+//! (`net::proto::TAG_ZOO_BATCH_INFER`) whose single family byte covers
+//! the whole batch; the surrogate family keeps the original untagged
+//! frames so a zoo-free fleet's wire traffic is bit-identical to PR 3.
 
 pub struct Batcher<T> {
     buf: Vec<T>,

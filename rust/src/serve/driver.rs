@@ -28,11 +28,12 @@ use crate::dispatcher::{ChunkQueue, ChunkSource};
 use crate::metrics::EpisodeMetrics;
 use crate::net::link::LinkProfile;
 use crate::net::Link;
-use crate::policy::{DecisionCtx, Route, Strategy};
+use crate::policy::{DecisionCtx, FamilyPlan, Route, Strategy};
 use crate::robot::{RobotSim, SensorFrame, TaskKind};
 use crate::runtime::DeviceClock;
 use crate::scene::{NoiseModel, Renderer};
 use crate::util::timeline::Timeline;
+use crate::vla::profile::ModelFamily;
 use crate::vla::{obs::proprio_vec, Backend, ModelOut};
 use crate::{D_PROP, D_VIS};
 use std::collections::VecDeque;
@@ -59,6 +60,10 @@ pub struct CloudRequest {
     /// attached to the poll); rides the request so the reply can be
     /// admitted into the store on completion.
     pub sig: Option<Signature>,
+    /// Model family of the session ([`ModelFamily::Surrogate`] without a
+    /// zoo plan). The fleet scheduler keys its cross-session batches on
+    /// this so no wire batch ever mixes frame layouts.
+    pub family: ModelFamily,
 }
 
 /// What happened when the session was polled.
@@ -93,6 +98,9 @@ pub struct EpisodeState {
     prev_tau: crate::robot::Jv,
     /// Set between a `NeedCloud` return and its `complete_cloud` call.
     awaiting: bool,
+    /// Model-zoo serving plan (None without `[models]`: every path below
+    /// is then bit-identical to a plan-free build).
+    family_plan: Option<FamilyPlan>,
 }
 
 impl EpisodeState {
@@ -127,7 +135,20 @@ impl EpisodeState {
             prev_repartitions: 0,
             prev_tau: crate::robot::Jv::ZERO,
             awaiting: false,
+            family_plan: None,
         }
+    }
+
+    /// Install (or clear) the model-zoo serving plan. A `None` plan leaves
+    /// the step machine bit-identical to a run that never called this —
+    /// the same contract as [`EpisodeState::set_link_profile`].
+    pub fn set_family_plan(&mut self, plan: Option<FamilyPlan>) {
+        self.family_plan = plan;
+    }
+
+    /// Model family this session serves.
+    pub fn family(&self) -> ModelFamily {
+        self.family_plan.as_ref().map_or(ModelFamily::Surrogate, |p| p.family)
     }
 
     /// True while a `NeedCloud` request is outstanding.
@@ -199,6 +220,7 @@ impl EpisodeState {
             step: t,
             queue_empty: self.queue.is_empty(),
             entropy: if self.strategy.needs_entropy() { next_entropy } else { None },
+            family: self.family(),
         };
         let route = self.strategy.decide(&ctx);
         // Invariant #1: an empty queue must force a refill.
@@ -218,7 +240,12 @@ impl EpisodeState {
                 // its reply must not be admitted either, or the store fills
                 // with entries no future (equally-gated) probe can ever hit
                 if pol.probe_allowed(ev.as_ref()) {
-                    let s = pol.signature(self.task.instr_id(), &self.last_frame, ev.as_ref());
+                    let s = pol.signature(
+                        self.task.instr_id(),
+                        &self.last_frame,
+                        ev.as_ref(),
+                        self.family(),
+                    );
                     match store.probe(&s, round, owner) {
                         ProbeOutcome::Hit(out) => {
                             if !self.queue.is_empty() {
@@ -270,16 +297,29 @@ impl EpisodeState {
                         self.metrics.overhead_ms += self.clock.preempt();
                     }
                     let t_cap = self.clock.obs_capture();
-                    // split-computing baselines ship intermediate activations
-                    // from the split point; RAPID ships the raw observation
+                    // entropy (split-computing) baselines partition with
+                    // their own split model — they keep their activation
+                    // payload and take no zoo split (charging a zoo prefix
+                    // on top would mix two incompatible split models); all
+                    // other strategies serve the planner's partition point:
+                    // edge prefix compute, then the chosen payload
+                    let zoo_split =
+                        if self.strategy.needs_entropy() { None } else { self.family_plan.as_ref() };
+                    let t_prefix = zoo_split.map_or(0.0, |p| p.edge_prefix_ms);
+                    if t_prefix > 0.0 {
+                        self.clock.advance(t_prefix);
+                        self.metrics.edge_busy_ms += t_prefix;
+                    }
                     let payload = if self.strategy.needs_entropy() {
                         sys.link.activation_bytes
                     } else {
-                        sys.link.obs_bytes
+                        zoo_split.map_or(sys.link.obs_bytes, |p| p.payload_bytes)
                     };
                     let xfer = self.link.offload_roundtrip(payload, sys.link.chunk_bytes, clarity);
                     self.clock.advance(xfer.ms);
-                    let t_compute = self.clock.cloud_compute();
+                    // the jittered draw happens either way (identical PRNG
+                    // stream); a plan rescales it to its family's cloud cost
+                    let t_compute = self.clock.cloud_compute_scaled(self.cloud_ms_scale(sys));
                     self.metrics.cloud_busy_ms += t_cap + xfer.ms + t_compute;
                     self.metrics.cloud_events += 1;
                     self.metrics.retransmissions += xfer.retransmissions as u64;
@@ -288,7 +328,8 @@ impl EpisodeState {
                     self.score_trigger(t);
 
                     self.awaiting = true;
-                    return StepEvent::NeedCloud(CloudRequest { obs, proprio, instr, sig });
+                    let family = self.family();
+                    return StepEvent::NeedCloud(CloudRequest { obs, proprio, instr, sig, family });
                 }
 
                 // routine edge refill
@@ -360,6 +401,25 @@ impl EpisodeState {
         }
     }
 
+    /// Multiplier on the cloud compute draw: the active zoo plan's family
+    /// cost relative to the configured nominal (1.0 without a plan).
+    /// Strategies that take no zoo split (entropy baselines partition with
+    /// their own split model) pay the family's *full-model* cloud cost —
+    /// never a deep-split discount whose edge prefix they skipped.
+    fn cloud_ms_scale(&self, sys: &SystemConfig) -> f64 {
+        match &self.family_plan {
+            Some(p) if sys.devices.cloud_compute_ms > 0.0 => {
+                let ms = if self.strategy.needs_entropy() {
+                    p.full_cloud_ms
+                } else {
+                    p.cloud_compute_ms
+                };
+                ms / sys.devices.cloud_compute_ms
+            }
+            _ => 1.0,
+        }
+    }
+
     /// Routine edge-slice refill, shared by the normal edge path and the
     /// failover path so both charge identically: slice-proportional
     /// inference time, the vision routing cost for entropy-needing
@@ -374,7 +434,8 @@ impl EpisodeState {
         cloud: &mut dyn Backend,
     ) {
         let gb = self.strategy.edge_gb(sys);
-        let t_infer = self.clock.edge_infer(sys, gb);
+        let fam_scale = self.family_plan.as_ref().map_or(1.0, |p| p.edge_ms_scale);
+        let t_infer = self.clock.edge_infer_scaled(sys, gb, fam_scale);
         self.metrics.edge_busy_ms += t_infer;
         self.metrics.edge_events += 1;
         if self.strategy.needs_entropy() {
@@ -823,6 +884,106 @@ mod tests {
             e2.latency_columns().2,
             e1.latency_columns().2
         );
+    }
+
+    #[test]
+    fn zoo_plan_prices_the_family_economics() {
+        use crate::vla::profile::{FamilyProfile, ModelFamily};
+        use crate::vla::ZooBackend;
+        let sys = SystemConfig::default();
+
+        // Short-chunk AR family: CloudOnly refills every 4 steps instead
+        // of every 8 — roughly twice the cloud events of the surrogate —
+        // and each call costs more cloud compute.
+        let run_fam = |fam: ModelFamily, kind: PolicyKind| {
+            let plan = crate::policy::planner::plan(
+                &FamilyProfile::of(fam),
+                sys.link.bw_mbps,
+                sys.link.rtt_ms,
+            );
+            let mut edge = ZooBackend::edge(fam, 6);
+            let mut cloud = ZooBackend::cloud(fam, 6);
+            let strategy = crate::policy::build(kind, &sys);
+            let mut st = EpisodeState::new(&sys, TaskKind::PickPlace, strategy, 6, false);
+            st.set_family_plan(Some(plan));
+            assert_eq!(st.family(), fam);
+            loop {
+                match st.poll(&sys, &mut edge, &mut cloud, true) {
+                    StepEvent::Stepped => {}
+                    StepEvent::Done => break,
+                    StepEvent::NeedCloud(req) => {
+                        assert_eq!(req.family, fam, "request must carry its family");
+                        let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                        st.complete_cloud(&sys, out, 0.0);
+                    }
+                }
+            }
+            st.finish(&sys).metrics
+        };
+
+        let surrogate = run(PolicyKind::CloudOnly, TaskKind::PickPlace, 6);
+        let ar = run_fam(ModelFamily::OpenVlaAr, PolicyKind::CloudOnly);
+        assert_eq!(ar.steps, TaskKind::PickPlace.seq_len());
+        assert!(
+            ar.cloud_events > surrogate.cloud_events,
+            "short chunks refill more often: {} vs {}",
+            ar.cloud_events,
+            surrogate.cloud_events
+        );
+        assert!(
+            ar.cloud_busy_ms > surrogate.cloud_busy_ms,
+            "AR cloud time must exceed the surrogate's"
+        );
+
+        // Quantized edge family: Edge-Only inference gets strictly cheaper.
+        let plain_edge = run(PolicyKind::EdgeOnly, TaskKind::PickPlace, 6);
+        let quant_edge = run_fam(ModelFamily::EdgeQuant, PolicyKind::EdgeOnly);
+        assert_eq!(quant_edge.steps, TaskKind::PickPlace.seq_len());
+        assert!(
+            quant_edge.edge_busy_ms < plain_edge.edge_busy_ms,
+            "quantized slice must be cheaper: {} vs {}",
+            quant_edge.edge_busy_ms,
+            plain_edge.edge_busy_ms
+        );
+    }
+
+    #[test]
+    fn surrogate_plan_with_default_knobs_is_bit_identical() {
+        use crate::vla::profile::{FamilyProfile, ModelFamily};
+        // the surrogate family's catalog equals the default [devices]/
+        // [link] anchors, so installing its plan must not move a single
+        // metric relative to the plan-free run of the same seed
+        let sys = SystemConfig::default();
+        let base = run(PolicyKind::Rapid, TaskKind::PickPlace, 12);
+        let plan = crate::policy::planner::plan(
+            &FamilyProfile::of(ModelFamily::Surrogate),
+            sys.link.bw_mbps,
+            sys.link.rtt_ms,
+        );
+        let mut edge = AnalyticBackend::edge(12);
+        let mut cloud = AnalyticBackend::cloud(12);
+        let mut st = EpisodeState::new(
+            &sys,
+            TaskKind::PickPlace,
+            crate::policy::build(PolicyKind::Rapid, &sys),
+            12,
+            false,
+        );
+        st.set_family_plan(Some(plan));
+        loop {
+            match st.poll(&sys, &mut edge, &mut cloud, true) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(req) => {
+                    let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                    st.complete_cloud(&sys, out, 0.0);
+                }
+            }
+        }
+        let m = st.finish(&sys).metrics;
+        assert_eq!(m.latency_columns(), base.latency_columns());
+        assert_eq!(m.cloud_events, base.cloud_events);
+        assert_eq!(m.rms_error, base.rms_error);
     }
 
     #[test]

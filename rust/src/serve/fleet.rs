@@ -37,8 +37,10 @@ use crate::faults::FaultEngine;
 use crate::metrics::{summarize_fleet, EpisodeMetrics, FleetSummary};
 use crate::net::proto::InferRequest;
 use crate::net::CloudClient;
+use crate::policy::planner;
 use crate::robot::TaskKind;
-use crate::vla::{AnalyticBackend, Backend};
+use crate::vla::profile::{FamilyProfile, ModelFamily, N_FAMILIES};
+use crate::vla::{assign_families, AnalyticBackend, Backend, ZooBackend};
 use std::time::Instant;
 
 /// Stable per-(session, episode) seed derivation. Session 0 / episode 0
@@ -95,6 +97,14 @@ pub struct FleetStats {
     pub degraded_requests: u64,
     /// Rounds spent under a full uplink outage (offloads deferred).
     pub outage_rounds: u64,
+    // --- model zoo (all 0 with [models] disabled) ---
+    /// Partial batches sealed early because a request of a *different*
+    /// model family arrived (family-keyed batching).
+    pub family_flushes: u64,
+    /// Batches observed carrying more than one model family. Must be 0 by
+    /// construction; counted (not asserted) so the property suite can pin
+    /// it across random interleavings.
+    pub mixed_family_batches: u64,
 }
 
 /// Per-session outcome: every episode's metrics, in order.
@@ -102,7 +112,24 @@ pub struct SessionReport {
     pub session: usize,
     /// Seed of the session's first episode (see [`fleet_seed`]).
     pub seed0: u64,
+    /// Model family this session served for its whole run
+    /// ([`ModelFamily::Surrogate`] with `[models]` disabled).
+    pub family: ModelFamily,
     pub episodes: Vec<EpisodeMetrics>,
+}
+
+/// Fleet totals for one model family. Summed over every family present,
+/// these exactly partition the fleet-wide totals — pinned by the
+/// differential conformance suite.
+#[derive(Debug, Clone, Copy)]
+pub struct FamilyTotals {
+    pub family: ModelFamily,
+    pub sessions: usize,
+    pub steps: u64,
+    pub cloud_events: u64,
+    pub cache_hits: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
 }
 
 pub struct FleetResult {
@@ -112,9 +139,15 @@ pub struct FleetResult {
     pub stats: FleetStats,
     /// Batches dispatched per cloud endpoint (router spread).
     pub endpoint_dispatches: Vec<u64>,
+    /// Dispatch attempts per (endpoint, family id) — the observable the
+    /// compatibility-aware router is pinned on (a non-advertiser's row
+    /// stays 0 for that family).
+    pub endpoint_family_dispatches: Vec<[u64; N_FAMILIES]>,
     pub mean_batch: f64,
     /// Fleet-shared reuse-store counters (all zero with `[cache]` off).
     pub cache: CacheStats,
+    /// Per-family rollup (a single surrogate row with `[models]` off).
+    pub families: Vec<FamilyTotals>,
 }
 
 impl FleetResult {
@@ -138,12 +171,17 @@ enum FlushCause {
     Full,
     Deadline,
     Drain,
+    /// A request of a different model family arrived: seal the pending
+    /// batch so no wire batch ever mixes frame layouts.
+    Family,
 }
 
 struct SessionSlot {
     state: EpisodeState,
     edge: Box<dyn Backend>,
     cloud: Box<dyn Backend>,
+    /// Zoo family (fixed for the session's whole run).
+    family: ModelFamily,
     episode_idx: usize,
     completed: Vec<EpisodeMetrics>,
     finished: bool,
@@ -179,6 +217,19 @@ pub struct Fleet {
     /// Current scheduler round index (0-based), the fault schedule's
     /// time base.
     cur_round: u64,
+    /// Model zoo active (`[models] enabled`). Off, every zoo path below is
+    /// skipped and the scheduler is bit-identical to the PR 3 scheduler.
+    zoo_enabled: bool,
+    /// Family of the requests currently pending in the batcher (only
+    /// meaningful while it is non-empty).
+    pending_family: ModelFamily,
+    /// Link condition the current zoo plans were computed under; replans
+    /// only happen when it actually changes (the planner is pure, so a
+    /// stable link means stable plans).
+    planned_link: Option<(f64, f64)>,
+    family_batches: [u64; N_FAMILIES],
+    family_requests: [u64; N_FAMILIES],
+    endpoint_family_dispatches: Vec<[u64; N_FAMILIES]>,
 }
 
 impl Fleet {
@@ -232,19 +283,19 @@ impl Fleet {
             CloudMode::Local => cfg.endpoints.max(1),
             CloudMode::Remote(clients) => clients.len(),
         };
+        // model zoo: with [models] enabled, sessions are assigned families
+        // in balanced contiguous blocks; disabled, the list stays empty and
+        // every session serves the surrogate on the original backends
+        let zoo_enabled = sys.models.enabled;
+        let fams = if zoo_enabled { sys.models.family_list() } else { Vec::new() };
+        let n = cfg.n_sessions.max(1);
         // at least one session: an empty fleet has no meaningful result
         // (and summaries reject it), so clamp here for every entry point
-        let slots = (0..cfg.n_sessions.max(1))
+        let slots = (0..n)
             .map(|i| {
                 let seed = fleet_seed(base_seed, i, 0);
-                SessionSlot {
-                    state: EpisodeState::new(sys, task, crate::policy::build(kind, sys), seed, false),
-                    edge: Box::new(AnalyticBackend::edge(seed)),
-                    cloud: Box::new(AnalyticBackend::cloud(seed)),
-                    episode_idx: 0,
-                    completed: Vec::new(),
-                    finished: false,
-                }
+                let family = assign_families(&fams, n, i);
+                Fleet::make_slot(sys, task, kind, family, zoo_enabled, seed, 0)
             })
             .collect();
         // round duration in µs of virtual control time
@@ -269,8 +320,62 @@ impl Fleet {
             },
             io_dead: vec![false; endpoints],
             cur_round: 0,
+            zoo_enabled,
+            pending_family: ModelFamily::Surrogate,
+            planned_link: None,
+            family_batches: [0; N_FAMILIES],
+            family_requests: [0; N_FAMILIES],
+            endpoint_family_dispatches: vec![[0; N_FAMILIES]; endpoints],
             cfg,
         }
+    }
+
+    /// Build one session: its episode state (with the planner's partition
+    /// choice installed under the nominal link when the zoo is on) and its
+    /// family backends. With the zoo off this is exactly the PR 3 slot.
+    fn make_slot(
+        sys: &SystemConfig,
+        task: TaskKind,
+        kind: PolicyKind,
+        family: ModelFamily,
+        zoo: bool,
+        seed: u64,
+        episode_idx: usize,
+    ) -> SessionSlot {
+        let mut state = EpisodeState::new(sys, task, crate::policy::build(kind, sys), seed, false);
+        let (edge, cloud): (Box<dyn Backend>, Box<dyn Backend>) = if zoo {
+            let plan = planner::plan(&FamilyProfile::of(family), sys.link.bw_mbps, sys.link.rtt_ms);
+            state.set_family_plan(Some(plan));
+            (Box::new(ZooBackend::edge(family, seed)), Box::new(ZooBackend::cloud(family, seed)))
+        } else {
+            (Box::new(AnalyticBackend::edge(seed)), Box::new(AnalyticBackend::cloud(seed)))
+        };
+        SessionSlot {
+            state,
+            edge,
+            cloud,
+            family,
+            episode_idx,
+            completed: Vec::new(),
+            finished: false,
+        }
+    }
+
+    /// Restrict what `endpoint` advertises (compatibility-aware routing).
+    /// Default: every endpoint serves every family.
+    pub fn restrict_endpoint(&mut self, endpoint: usize, families: &[ModelFamily]) {
+        self.router.advertise(endpoint, families);
+    }
+
+    /// Effective link condition at the current round (a fault window's
+    /// degraded profile, or the nominal config).
+    fn effective_link(&self) -> (f64, f64) {
+        if !self.engine.is_empty() {
+            if let Some(p) = self.engine.link_profile(self.cur_round) {
+                return (p.bw_mbps, p.rtt_ms);
+            }
+        }
+        (self.sys.link.bw_mbps, self.sys.link.rtt_ms)
     }
 
     /// Episodes each session will run.
@@ -290,18 +395,25 @@ impl Fleet {
             return false;
         }
         let seed = fleet_seed(self.base_seed, i, next);
-        let strategy = crate::policy::build(self.kind, &self.sys);
-        let mut state = EpisodeState::new(&self.sys, self.task, strategy, seed, false);
+        let family = self.slots[i].family;
+        let fresh =
+            Fleet::make_slot(&self.sys, self.task, self.kind, family, self.zoo_enabled, seed, next);
+        let SessionSlot { mut state, edge, cloud, .. } = fresh;
         // the fresh episode starts mid-round: carry the link condition in
-        // force this round (a new EpisodeState defaults to no profile)
+        // force this round (a new EpisodeState defaults to no profile and
+        // a zoo session's plan defaults to the nominal link)
         if !self.engine.is_empty() {
             state.set_link_profile(self.engine.link_profile(self.cur_round));
+            if self.zoo_enabled {
+                let (bw, rtt) = self.effective_link();
+                state.set_family_plan(Some(planner::plan(&FamilyProfile::of(family), bw, rtt)));
+            }
         }
         let slot = &mut self.slots[i];
         slot.episode_idx = next;
         slot.state = state;
-        slot.edge = Box::new(AnalyticBackend::edge(seed));
-        slot.cloud = Box::new(AnalyticBackend::cloud(seed));
+        slot.edge = edge;
+        slot.cloud = cloud;
         true
     }
 
@@ -318,6 +430,25 @@ impl Fleet {
                 let profile = self.engine.link_profile(self.cur_round);
                 for slot in &mut self.slots {
                     slot.state.set_link_profile(profile);
+                }
+                // the planner is a pure function of (family, link), so
+                // replans are deterministic and only needed when the
+                // effective link actually changes: a degrade window moves
+                // every zoo session to a deeper split, and the next round
+                // under the same condition reuses the installed plans
+                if self.zoo_enabled {
+                    let (bw, rtt) = self.effective_link();
+                    if self.planned_link != Some((bw, rtt)) {
+                        self.planned_link = Some((bw, rtt));
+                        let plans: Vec<_> = ModelFamily::ALL
+                            .iter()
+                            .map(|&f| planner::plan(&FamilyProfile::of(f), bw, rtt))
+                            .collect();
+                        for slot in &mut self.slots {
+                            let plan = plans[slot.family.id() as usize].clone();
+                            slot.state.set_family_plan(Some(plan));
+                        }
+                    }
                 }
                 outage = self.engine.link_out(self.cur_round);
                 if outage {
@@ -352,6 +483,13 @@ impl Fleet {
                     StepEvent::Done => {}
                     StepEvent::NeedCloud(req) => {
                         progressed = true;
+                        // family-keyed batching: a request of a different
+                        // family seals the pending batch first, so no wire
+                        // batch ever mixes frame layouts
+                        if !self.batcher.is_empty() && self.pending_family != req.family {
+                            self.flush(FlushCause::Family);
+                        }
+                        self.pending_family = req.family;
                         self.batcher.push(FleetRequest { session: i, req });
                         self.stats.max_inflight_observed =
                             self.stats.max_inflight_observed.max(self.batcher.len());
@@ -378,16 +516,47 @@ impl Fleet {
 
         let mean_batch = self.batcher.mean_batch();
         let endpoint_dispatches = self.router.totals().to_vec();
+        let endpoint_family_dispatches = self.endpoint_family_dispatches.clone();
         let stats = self.stats;
         let cache = self.store.as_ref().map(|s| *s.stats()).unwrap_or_default();
-        let sessions = self
+        let family_batches = self.family_batches;
+        let family_requests = self.family_requests;
+        let sessions: Vec<SessionReport> = self
             .slots
             .into_iter()
             .enumerate()
             .map(|(i, s)| SessionReport {
                 session: i,
                 seed0: fleet_seed(self.base_seed, i, 0),
+                family: s.family,
                 episodes: s.completed,
+            })
+            .collect();
+        // per-family rollup: sums over these rows exactly partition the
+        // fleet totals (each session belongs to exactly one family, each
+        // batch carries exactly one)
+        let families = ModelFamily::ALL
+            .iter()
+            .filter_map(|&fam| {
+                let idx = fam.id() as usize;
+                let mut t = FamilyTotals {
+                    family: fam,
+                    sessions: 0,
+                    steps: 0,
+                    cloud_events: 0,
+                    cache_hits: 0,
+                    batches: family_batches[idx],
+                    batched_requests: family_requests[idx],
+                };
+                for s in sessions.iter().filter(|s| s.family == fam) {
+                    t.sessions += 1;
+                    for m in &s.episodes {
+                        t.steps += m.steps as u64;
+                        t.cloud_events += m.cloud_events;
+                        t.cache_hits += m.cache_hits;
+                    }
+                }
+                (t.sessions > 0 || t.batches > 0).then_some(t)
             })
             .collect();
         FleetResult {
@@ -396,8 +565,10 @@ impl Fleet {
             sessions,
             stats,
             endpoint_dispatches,
+            endpoint_family_dispatches,
             mean_batch,
             cache,
+            families,
         }
     }
 
@@ -422,7 +593,17 @@ impl Fleet {
             FlushCause::Full => self.stats.full_flushes += 1,
             FlushCause::Deadline => self.stats.deadline_flushes += 1,
             FlushCause::Drain => self.stats.drain_flushes += 1,
+            FlushCause::Family => self.stats.family_flushes += 1,
         }
+        // family accounting: every batch carries exactly one family (the
+        // push path seals on change; `mixed_family_batches` counts — not
+        // asserts — violations so the property suite can pin them at 0)
+        let fam = batch[0].req.family;
+        if batch.iter().any(|fr| fr.req.family != fam) {
+            self.stats.mixed_family_batches += 1;
+        }
+        self.family_batches[fam.id() as usize] += 1;
+        self.family_requests[fam.id() as usize] += batch.len() as u64;
 
         // Dispatch with failover: pick the least-loaded surviving endpoint;
         // a lost reply (injected drop, beyond-timeout delay, or a real RPC
@@ -445,7 +626,8 @@ impl Fleet {
             let alive: Vec<bool> = (0..n_eps)
                 .map(|e| !excluded[e] && !self.io_dead[e] && self.engine.endpoint_up(e, round))
                 .collect();
-            let Some(endpoint) = self.router.pick_alive(&alive) else { break };
+            let Some(endpoint) = self.router.pick_compatible(&alive, fam) else { break };
+            self.endpoint_family_dispatches[endpoint][fam.id() as usize] += 1;
             tries += 1;
             if tries > 1 {
                 self.stats.failover_redispatches += 1;
@@ -500,7 +682,15 @@ impl Fleet {
                         })
                         .collect();
                     let t0 = Instant::now();
-                    match clients[endpoint].infer_batch(&items) {
+                    // the surrogate family keeps the original batch frames
+                    // (bit-identical wire traffic with [models] off); zoo
+                    // families ride the family-tagged frames
+                    let rpc = if fam == ModelFamily::Surrogate {
+                        clients[endpoint].infer_batch(&items)
+                    } else {
+                        clients[endpoint].infer_batch_zoo(fam, &items)
+                    };
+                    match rpc {
                         Ok(outs) => {
                             let per_us =
                                 t0.elapsed().as_micros() as f64 / items.len().max(1) as f64;
@@ -656,6 +846,77 @@ mod tests {
         let hits: u64 =
             res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.cache_hits).sum();
         assert_eq!(hits, 0);
+    }
+
+    #[test]
+    fn zoo_disabled_reports_a_single_surrogate_row() {
+        let sys = sys_with(3, 4, 16);
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_eq!(res.families.len(), 1);
+        let t = &res.families[0];
+        assert_eq!(t.family, ModelFamily::Surrogate);
+        assert_eq!(t.sessions, 3);
+        assert_eq!(t.steps, res.total_steps());
+        assert_eq!(t.cloud_events, res.total_cloud_events());
+        assert_eq!(t.batches, res.stats.batches);
+        assert_eq!(res.stats.family_flushes, 0);
+        assert_eq!(res.stats.mixed_family_batches, 0);
+        for s in &res.sessions {
+            assert_eq!(s.family, ModelFamily::Surrogate);
+        }
+    }
+
+    #[test]
+    fn zoo_fleet_keys_batches_by_family_and_partitions_totals() {
+        let mut sys = sys_with(8, 4, 16);
+        sys.models.enabled = true; // default families: openvla, pi0, edgequant
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_eq!(res.stats.mixed_family_batches, 0, "a batch mixed families");
+        assert!(res.families.len() >= 3, "mixed fleet must report every family");
+        // same-family session blocks still coalesce across sessions
+        assert!(res.stats.multi_session_batches > 0, "{:?}", res.stats);
+        // lockstep offload rounds interleave families: the family seal fires
+        assert!(res.stats.family_flushes > 0, "{:?}", res.stats);
+        // per-family rows exactly partition the fleet totals
+        let steps: u64 = res.families.iter().map(|t| t.steps).sum();
+        let cloud: u64 = res.families.iter().map(|t| t.cloud_events).sum();
+        let batches: u64 = res.families.iter().map(|t| t.batches).sum();
+        let reqs: u64 = res.families.iter().map(|t| t.batched_requests).sum();
+        assert_eq!(steps, res.total_steps());
+        assert_eq!(cloud, res.total_cloud_events());
+        assert_eq!(batches, res.stats.batches);
+        assert_eq!(reqs, res.stats.batched_requests);
+        // every session completed under its own family economics
+        for s in &res.sessions {
+            assert_eq!(s.episodes.len(), 1);
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        }
+    }
+
+    #[test]
+    fn incompatible_endpoint_degrades_batches_without_wedging() {
+        // single endpoint that advertises only the surrogate: every zoo
+        // offload is unroutable and must degrade to the edge slice — no
+        // session may wedge in suspend
+        let mut sys = sys_with(4, 4, 16);
+        sys.models.enabled = true;
+        let mut fleet = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly);
+        fleet.restrict_endpoint(0, &[ModelFamily::Surrogate]);
+        let res = fleet.run();
+        assert!(res.stats.degraded_requests > 0);
+        assert_eq!(
+            res.stats.degraded_requests, res.stats.batched_requests,
+            "every batched request must degrade — nothing can dispatch"
+        );
+        assert_eq!(res.endpoint_dispatches.iter().sum::<u64>(), 0, "router never picked");
+        for s in &res.sessions {
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+            assert!(s.episodes[0].failovers > 0);
+        }
+        // the router never dispatched a zoo family to the non-advertiser
+        for fam in [ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+            assert_eq!(res.endpoint_family_dispatches[0][fam.id() as usize], 0);
+        }
     }
 
     #[test]

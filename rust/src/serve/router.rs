@@ -1,12 +1,22 @@
 //! Request router over multiple cloud workers: least-outstanding with
 //! round-robin tie-break (the standard serving-router policy, scaled to
 //! this repo's single-host deployment).
+//!
+//! Compatibility-aware: every worker advertises the model families it
+//! serves (all of them by default — a zoo-free fleet never notices).
+//! [`Router::pick_compatible`] is [`Router::pick_alive`] restricted to
+//! the advertisers of a batch's family; a family no live worker serves
+//! yields `None` and the fleet degrades the batch to the edge slice.
+
+use crate::vla::profile::{ModelFamily, N_FAMILIES};
 
 /// Tracks outstanding work per worker and picks targets.
 #[derive(Debug, Clone)]
 pub struct Router {
     outstanding: Vec<u64>,
     totals: Vec<u64>,
+    /// Advertised family support per worker (default: everything).
+    supported: Vec<[bool; N_FAMILIES]>,
     rr: usize,
     pub dispatched: u64,
 }
@@ -14,11 +24,42 @@ pub struct Router {
 impl Router {
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
-        Router { outstanding: vec![0; workers], totals: vec![0; workers], rr: 0, dispatched: 0 }
+        Router {
+            outstanding: vec![0; workers],
+            totals: vec![0; workers],
+            supported: vec![[true; N_FAMILIES]; workers],
+            rr: 0,
+            dispatched: 0,
+        }
     }
 
     pub fn workers(&self) -> usize {
         self.outstanding.len()
+    }
+
+    /// Restrict a worker's advertisement to exactly `families`.
+    pub fn advertise(&mut self, worker: usize, families: &[ModelFamily]) {
+        assert!(worker < self.supported.len());
+        let mut mask = [false; N_FAMILIES];
+        for f in families {
+            mask[f.id() as usize] = true;
+        }
+        self.supported[worker] = mask;
+    }
+
+    /// Does `worker` advertise `family`?
+    pub fn supports(&self, worker: usize, family: ModelFamily) -> bool {
+        self.supported[worker][family.id() as usize]
+    }
+
+    /// [`Router::pick_alive`] among workers that also advertise `family`.
+    pub fn pick_compatible(&mut self, alive: &[bool], family: ModelFamily) -> Option<usize> {
+        let mask: Vec<bool> = alive
+            .iter()
+            .enumerate()
+            .map(|(w, &a)| a && self.supported[w][family.id() as usize])
+            .collect();
+        self.pick_alive(&mask)
     }
 
     /// Pick the worker with the fewest outstanding requests (round-robin
@@ -158,6 +199,41 @@ mod tests {
                 a.complete(wa);
                 b.complete(wb);
             }
+        }
+    }
+
+    #[test]
+    fn pick_compatible_honours_family_advertisements() {
+        let mut r = Router::new(3);
+        // worker 0 serves only the AR family; 1 and 2 serve everything
+        r.advertise(0, &[ModelFamily::OpenVlaAr]);
+        assert!(r.supports(0, ModelFamily::OpenVlaAr));
+        assert!(!r.supports(0, ModelFamily::Pi0Diffusion));
+        assert!(r.supports(1, ModelFamily::Pi0Diffusion));
+        let alive = [true, true, true];
+        for _ in 0..6 {
+            let w = r.pick_compatible(&alive, ModelFamily::Pi0Diffusion).unwrap();
+            assert_ne!(w, 0, "non-advertiser picked");
+        }
+        // AR batches may land anywhere (0 advertises it too)
+        assert!(r.pick_compatible(&alive, ModelFamily::OpenVlaAr).is_some());
+        // a family only a dead worker serves is unroutable
+        let mut r2 = Router::new(2);
+        r2.advertise(0, &[ModelFamily::EdgeQuant]);
+        r2.advertise(1, &[ModelFamily::Surrogate]);
+        assert_eq!(r2.pick_compatible(&[false, true], ModelFamily::EdgeQuant), None);
+    }
+
+    #[test]
+    fn default_advertisement_makes_pick_compatible_equal_pick_alive() {
+        let mut a = Router::new(3);
+        let mut b = Router::new(3);
+        let alive = [true, false, true];
+        for _ in 0..10 {
+            assert_eq!(
+                a.pick_compatible(&alive, ModelFamily::Pi0Diffusion),
+                b.pick_alive(&alive)
+            );
         }
     }
 

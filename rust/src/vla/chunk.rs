@@ -18,13 +18,21 @@ pub struct ModelOut {
 impl ModelOut {
     /// Assemble from the flat buffers the PJRT tuple returns.
     pub fn from_flat(actions: &[f32], logits: &[f32], mass: &[f32]) -> ModelOut {
-        assert_eq!(actions.len(), CHUNK * N_JOINTS);
-        assert_eq!(logits.len(), CHUNK * VOCAB);
-        assert_eq!(mass.len(), CHUNK);
-        let acts = (0..CHUNK)
+        Self::from_flat_k(CHUNK, actions, logits, mass)
+    }
+
+    /// [`ModelOut::from_flat`] for a chunk of `k` actions — model-zoo
+    /// families emit chunks shorter than [`CHUNK`] (the zoo wire frames
+    /// carry `k` explicitly).
+    pub fn from_flat_k(k: usize, actions: &[f32], logits: &[f32], mass: &[f32]) -> ModelOut {
+        assert!(k >= 1 && k <= CHUNK, "chunk length {k}");
+        assert_eq!(actions.len(), k * N_JOINTS);
+        assert_eq!(logits.len(), k * VOCAB);
+        assert_eq!(mass.len(), k);
+        let acts = (0..k)
             .map(|i| Jv::from_fn(|j| actions[i * N_JOINTS + j] as f64))
             .collect();
-        let lgs = (0..CHUNK)
+        let lgs = (0..k)
             .map(|i| {
                 let mut row = [0f32; VOCAB];
                 row.copy_from_slice(&logits[i * VOCAB..(i + 1) * VOCAB]);
@@ -34,15 +42,22 @@ impl ModelOut {
         ModelOut { actions: acts, logits: lgs, mass: mass.iter().map(|&m| m as f64).collect() }
     }
 
+    /// Actions in this chunk (= [`CHUNK`] for the default surrogate,
+    /// shorter for short-chunk zoo families).
+    pub fn chunk_len(&self) -> usize {
+        self.actions.len()
+    }
+
     /// Shannon entropy (nats) of action token i's distribution — the
     /// vision baseline's offloading signal.
     pub fn entropy(&self, i: usize) -> f64 {
-        shannon_entropy(&self.logits[i.min(CHUNK - 1)])
+        shannon_entropy(&self.logits[i.min(self.logits.len().saturating_sub(1))])
     }
 
     /// Mean entropy over the chunk.
     pub fn mean_entropy(&self) -> f64 {
-        (0..CHUNK).map(|i| self.entropy(i)).sum::<f64>() / CHUNK as f64
+        let k = self.logits.len().max(1);
+        (0..k).map(|i| self.entropy(i)).sum::<f64>() / k as f64
     }
 }
 
@@ -66,5 +81,29 @@ mod tests {
     #[should_panic]
     fn wrong_arity_panics() {
         ModelOut::from_flat(&[0.0; 3], &[0.0; CHUNK * VOCAB], &[0.0; CHUNK]);
+    }
+
+    #[test]
+    fn from_flat_k_builds_short_chunks() {
+        let k = 4;
+        let actions: Vec<f32> = (0..k * N_JOINTS).map(|i| i as f32 * 0.01).collect();
+        let logits: Vec<f32> = (0..k * VOCAB).map(|i| (i % 5) as f32).collect();
+        let mass: Vec<f32> = (0..k).map(|i| i as f32).collect();
+        let out = ModelOut::from_flat_k(k, &actions, &logits, &mass);
+        assert_eq!(out.chunk_len(), k);
+        assert!(out.entropy(k + 3) > 0.0, "entropy index clamps to the short chunk");
+        assert!(out.mean_entropy().is_finite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_flat_k_rejects_oversize_chunks() {
+        let k = CHUNK + 1;
+        ModelOut::from_flat_k(
+            k,
+            &vec![0.0; k * N_JOINTS],
+            &vec![0.0; k * VOCAB],
+            &vec![0.0; k],
+        );
     }
 }

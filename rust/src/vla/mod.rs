@@ -1,14 +1,19 @@
 //! VLA model interface on the Rust side: model outputs, entropy, the
-//! backend abstraction (PJRT-backed or analytic), and observation assembly.
+//! backend abstraction (PJRT-backed or analytic), observation assembly,
+//! and the heterogeneous model zoo (family profiles + shaped backends).
 
 pub mod attention;
 pub mod backend;
 pub mod chunk;
 pub mod entropy;
 pub mod obs;
+pub mod profile;
+pub mod zoo;
 
 pub use backend::{AnalyticBackend, Backend};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use chunk::ModelOut;
 pub use entropy::shannon_entropy;
+pub use profile::{FamilyProfile, ModelFamily, PartitionPoint, N_FAMILIES};
+pub use zoo::{assign_families, ZooBackend};

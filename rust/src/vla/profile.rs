@@ -1,0 +1,311 @@
+//! Heterogeneous VLA model-family profiles — the "diverse VLA models"
+//! axis of the paper's title.
+//!
+//! A [`ModelFamily`] names an architecture class with its own inference
+//! economics; a [`FamilyProfile`] is the deterministic catalog entry the
+//! serve layer consumes: chunk shape, device-time scaling, an accuracy
+//! transform, and a **partition-point catalog** — the split depths this
+//! family supports, each with its edge-prefix compute cost, wire payload
+//! and cloud compute time. The compatibility-aware planner
+//! (`policy::planner`) picks one point per (family, link condition); the
+//! fleet scheduler keys its cross-session batches on the family so no
+//! wire batch ever mixes frame layouts.
+//!
+//! Everything here is a pure function of the family id — no PRNG, no
+//! config — so edge and cloud (local backends and the remote TCP server)
+//! agree on family semantics by construction.
+
+use crate::robot::Jv;
+use crate::vla::ModelOut;
+use crate::CHUNK;
+
+/// Number of families (wire ids 0..N_FAMILIES).
+pub const N_FAMILIES: usize = 4;
+
+/// An architecture class served by the zoo. Ids are stable wire tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelFamily {
+    /// The original analytic surrogate (PR 0–3 behaviour); id 0. A fleet
+    /// with `[models]` disabled is entirely this family.
+    Surrogate,
+    /// Autoregressive OpenVLA-style: short action chunks decoded token by
+    /// token — cheap to ship, expensive per cloud call.
+    OpenVlaAr,
+    /// π0-style chunked diffusion: full-length chunks from an iterative
+    /// denoiser — heavy activations, cloud time amortized over the chunk.
+    Pi0Diffusion,
+    /// Edge-compressed quantized variant: degraded action precision in
+    /// exchange for a much cheaper edge-resident slice.
+    EdgeQuant,
+}
+
+impl Default for ModelFamily {
+    fn default() -> Self {
+        ModelFamily::Surrogate
+    }
+}
+
+impl ModelFamily {
+    pub const ALL: [ModelFamily; N_FAMILIES] = [
+        ModelFamily::Surrogate,
+        ModelFamily::OpenVlaAr,
+        ModelFamily::Pi0Diffusion,
+        ModelFamily::EdgeQuant,
+    ];
+
+    /// Stable wire id (the family tag on zoo batch frames).
+    pub fn id(&self) -> u8 {
+        match self {
+            ModelFamily::Surrogate => 0,
+            ModelFamily::OpenVlaAr => 1,
+            ModelFamily::Pi0Diffusion => 2,
+            ModelFamily::EdgeQuant => 3,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Option<ModelFamily> {
+        Self::ALL.get(id as usize).copied()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelFamily::Surrogate => "surrogate",
+            ModelFamily::OpenVlaAr => "openvla-ar",
+            ModelFamily::Pi0Diffusion => "pi0-diffusion",
+            ModelFamily::EdgeQuant => "edge-quant",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelFamily> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "surrogate" | "default" => Some(ModelFamily::Surrogate),
+            "openvla" | "openvla-ar" | "openvla_ar" | "ar" => Some(ModelFamily::OpenVlaAr),
+            "pi0" | "pi0-diffusion" | "pi0_diffusion" | "diffusion" => {
+                Some(ModelFamily::Pi0Diffusion)
+            }
+            "edgequant" | "edge-quant" | "edge_quant" | "quant" => Some(ModelFamily::EdgeQuant),
+            _ => None,
+        }
+    }
+}
+
+/// One supported split depth of a family: how much of the model the edge
+/// runs before shipping, what crosses the wire, and what the cloud pays.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionPoint {
+    /// Parameter GB resident on the edge at this split (reporting only —
+    /// strategies keep their own load accounting).
+    pub edge_gb: f64,
+    /// Edge compute spent producing the split-point activations before an
+    /// offload can leave the device (ms, device-nominal).
+    pub edge_prefix_ms: f64,
+    /// Offload payload at this split (bytes).
+    pub payload_bytes: f64,
+    /// Cloud compute per offload at this split (ms, device-nominal).
+    pub cloud_compute_ms: f64,
+}
+
+/// Deterministic per-family serving profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyProfile {
+    pub family: ModelFamily,
+    /// Actions emitted per inference (≤ [`CHUNK`]); short chunks mean more
+    /// frequent refills.
+    pub chunk_len: usize,
+    /// Multiplier on edge-slice inference time (the quantized family's
+    /// whole reason to exist).
+    pub edge_ms_scale: f64,
+    /// Action quantization step (0 = none): the accuracy the compressed
+    /// family trades away, applied identically on edge and cloud.
+    pub action_quant: f64,
+    /// Supported split depths, shallow (big payload, no prefix) to deep
+    /// (small payload, edge prefix compute). Never empty.
+    pub partitions: Vec<PartitionPoint>,
+}
+
+impl FamilyProfile {
+    /// The catalog entry for a family. Values are calibrated against the
+    /// default `[devices]`/`[link]` anchors (90 ms cloud compute, 1.5 MB
+    /// observation payload) so the surrogate row is an exact no-op.
+    pub fn of(family: ModelFamily) -> FamilyProfile {
+        match family {
+            ModelFamily::Surrogate => FamilyProfile {
+                family,
+                chunk_len: CHUNK,
+                edge_ms_scale: 1.0,
+                action_quant: 0.0,
+                partitions: vec![PartitionPoint {
+                    edge_gb: 2.4,
+                    edge_prefix_ms: 0.0,
+                    payload_bytes: 1.5e6,
+                    cloud_compute_ms: 90.0,
+                }],
+            },
+            ModelFamily::OpenVlaAr => FamilyProfile {
+                family,
+                chunk_len: 4,
+                edge_ms_scale: 1.0,
+                action_quant: 0.0,
+                partitions: vec![
+                    PartitionPoint {
+                        edge_gb: 2.4,
+                        edge_prefix_ms: 0.0,
+                        payload_bytes: 1.5e6,
+                        cloud_compute_ms: 190.0,
+                    },
+                    PartitionPoint {
+                        edge_gb: 3.4,
+                        edge_prefix_ms: 28.0,
+                        payload_bytes: 0.5e6,
+                        cloud_compute_ms: 175.0,
+                    },
+                    PartitionPoint {
+                        edge_gb: 4.8,
+                        edge_prefix_ms: 65.0,
+                        payload_bytes: 0.15e6,
+                        cloud_compute_ms: 160.0,
+                    },
+                ],
+            },
+            ModelFamily::Pi0Diffusion => FamilyProfile {
+                family,
+                chunk_len: CHUNK,
+                edge_ms_scale: 1.1,
+                action_quant: 0.0,
+                partitions: vec![
+                    PartitionPoint {
+                        edge_gb: 2.4,
+                        edge_prefix_ms: 0.0,
+                        payload_bytes: 2.5e6,
+                        cloud_compute_ms: 165.0,
+                    },
+                    PartitionPoint {
+                        edge_gb: 4.0,
+                        edge_prefix_ms: 40.0,
+                        payload_bytes: 1.0e6,
+                        cloud_compute_ms: 150.0,
+                    },
+                    PartitionPoint {
+                        edge_gb: 5.6,
+                        edge_prefix_ms: 85.0,
+                        payload_bytes: 0.4e6,
+                        cloud_compute_ms: 140.0,
+                    },
+                ],
+            },
+            ModelFamily::EdgeQuant => FamilyProfile {
+                family,
+                chunk_len: CHUNK,
+                edge_ms_scale: 0.45,
+                action_quant: 1.0 / 64.0,
+                partitions: vec![
+                    PartitionPoint {
+                        edge_gb: 1.2,
+                        edge_prefix_ms: 0.0,
+                        payload_bytes: 0.8e6,
+                        cloud_compute_ms: 115.0,
+                    },
+                    PartitionPoint {
+                        edge_gb: 1.8,
+                        edge_prefix_ms: 10.0,
+                        payload_bytes: 0.3e6,
+                        cloud_compute_ms: 112.0,
+                    },
+                    PartitionPoint {
+                        edge_gb: 2.4,
+                        edge_prefix_ms: 22.0,
+                        payload_bytes: 0.1e6,
+                        cloud_compute_ms: 102.0,
+                    },
+                ],
+            },
+        }
+    }
+
+    /// Shape a raw model output into this family's frame layout: truncate
+    /// to the family chunk length and apply the quantization grid. Pure
+    /// and deterministic — the TCP server applies the identical transform,
+    /// so local and remote zoo fleets agree on semantics.
+    pub fn shape(&self, mut out: ModelOut) -> ModelOut {
+        let k = self.chunk_len.clamp(1, CHUNK);
+        out.actions.truncate(k);
+        out.logits.truncate(k);
+        out.mass.truncate(k);
+        if self.action_quant > 0.0 {
+            let step = self.action_quant;
+            for a in out.actions.iter_mut() {
+                *a = Jv::from_fn(|j| (a[j] / step).round() * step);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vla::{AnalyticBackend, Backend};
+    use crate::{D_PROP, D_VIS};
+
+    #[test]
+    fn ids_roundtrip_and_names_parse() {
+        for fam in ModelFamily::ALL {
+            assert_eq!(ModelFamily::from_id(fam.id()), Some(fam));
+            assert_eq!(ModelFamily::parse(fam.name()), Some(fam));
+        }
+        assert_eq!(ModelFamily::from_id(200), None);
+        assert_eq!(ModelFamily::parse("nope"), None);
+        assert_eq!(ModelFamily::parse("openvla"), Some(ModelFamily::OpenVlaAr));
+    }
+
+    #[test]
+    fn catalogs_are_well_formed() {
+        for fam in ModelFamily::ALL {
+            let p = FamilyProfile::of(fam);
+            assert!(!p.partitions.is_empty(), "{fam:?}");
+            assert!(p.chunk_len >= 1 && p.chunk_len <= CHUNK, "{fam:?}");
+            assert!(p.edge_ms_scale > 0.0);
+            // shallow -> deep: payload shrinks, prefix grows
+            for w in p.partitions.windows(2) {
+                assert!(w[1].payload_bytes < w[0].payload_bytes, "{fam:?}");
+                assert!(w[1].edge_prefix_ms > w[0].edge_prefix_ms, "{fam:?}");
+                assert!(w[1].edge_gb > w[0].edge_gb, "{fam:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn surrogate_shape_is_identity() {
+        let mut b = AnalyticBackend::cloud(3);
+        let out = b.infer(&[0.2; D_VIS], &[0.0; D_PROP], 1);
+        let shaped = FamilyProfile::of(ModelFamily::Surrogate).shape(out.clone());
+        assert_eq!(shaped.actions, out.actions);
+        assert_eq!(shaped.mass, out.mass);
+        assert_eq!(shaped.actions.len(), CHUNK);
+    }
+
+    #[test]
+    fn ar_family_truncates_to_short_chunks() {
+        let mut b = AnalyticBackend::cloud(3);
+        let out = b.infer(&[0.2; D_VIS], &[0.0; D_PROP], 1);
+        let shaped = FamilyProfile::of(ModelFamily::OpenVlaAr).shape(out);
+        assert_eq!(shaped.actions.len(), 4);
+        assert_eq!(shaped.logits.len(), 4);
+        assert_eq!(shaped.mass.len(), 4);
+    }
+
+    #[test]
+    fn quant_family_snaps_actions_to_the_grid() {
+        let mut b = AnalyticBackend::cloud(3);
+        let out = b.infer(&[0.2; D_VIS], &[0.0; D_PROP], 1);
+        let p = FamilyProfile::of(ModelFamily::EdgeQuant);
+        let shaped = p.shape(out.clone());
+        for (a, raw) in shaped.actions.iter().zip(out.actions.iter()) {
+            for j in 0..crate::N_JOINTS {
+                let grid = a[j] / p.action_quant;
+                assert!((grid - grid.round()).abs() < 1e-9, "off-grid action");
+                assert!((a[j] - raw[j]).abs() <= p.action_quant / 2.0 + 1e-12);
+            }
+        }
+    }
+}

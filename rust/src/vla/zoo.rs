@@ -1,0 +1,138 @@
+//! The model zoo: family-shaped deterministic backends.
+//!
+//! A [`ZooBackend`] wraps the analytic surrogate of the right grade and
+//! pushes every output through its family's
+//! [`FamilyProfile::shape`](crate::vla::profile::FamilyProfile::shape)
+//! transform. The [`ModelFamily::Surrogate`] wrapper is constructed to be
+//! **bit-identical** to the bare [`AnalyticBackend`] of the same seed
+//! (same label, same PRNG streams, identity shape), which is what lets
+//! the differential conformance suite pin `[models] enabled` with only
+//! the surrogate family against a zoo-free fleet.
+//!
+//! Non-surrogate families salt the seed so distinct families answer with
+//! distinct (but per-family reproducible) model weights.
+
+use crate::vla::profile::{FamilyProfile, ModelFamily};
+use crate::vla::{AnalyticBackend, Backend, ModelOut};
+use crate::{D_PROP, D_VIS};
+
+/// Seed salt per family (0 for the surrogate: exact PR 0–3 streams).
+fn salt(family: ModelFamily) -> u64 {
+    match family {
+        ModelFamily::Surrogate => 0,
+        other => 0x200_u64.wrapping_mul(other.id() as u64) ^ 0xFA_517,
+    }
+}
+
+pub struct ZooBackend {
+    inner: AnalyticBackend,
+    profile: FamilyProfile,
+}
+
+impl ZooBackend {
+    /// Edge-grade member of `family`.
+    pub fn edge(family: ModelFamily, seed: u64) -> ZooBackend {
+        let inner = match family {
+            ModelFamily::Surrogate => AnalyticBackend::edge(seed),
+            other => AnalyticBackend::new(
+                &format!("edge-{}-analytic", other.name()),
+                seed ^ salt(other),
+            ),
+        };
+        ZooBackend { inner, profile: FamilyProfile::of(family) }
+    }
+
+    /// Cloud-grade member of `family`.
+    pub fn cloud(family: ModelFamily, seed: u64) -> ZooBackend {
+        let inner = match family {
+            ModelFamily::Surrogate => AnalyticBackend::cloud(seed),
+            other => AnalyticBackend::new(
+                &format!("cloud-{}-analytic", other.name()),
+                (seed ^ salt(other)) ^ 0xC10,
+            ),
+        };
+        ZooBackend { inner, profile: FamilyProfile::of(family) }
+    }
+
+    pub fn family(&self) -> ModelFamily {
+        self.profile.family
+    }
+}
+
+impl Backend for ZooBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn infer(&mut self, obs: &[f32; D_VIS], proprio: &[f32; D_PROP], instr: usize) -> ModelOut {
+        self.profile.shape(self.inner.infer(obs, proprio, instr))
+    }
+}
+
+/// Balanced contiguous-block assignment of `n_sessions` over `families`
+/// (session i gets `families[i * len / n]`). Blocks — not round-robin —
+/// so lockstep same-family sessions stay adjacent in scheduler order and
+/// family-keyed batches still coalesce across sessions.
+pub fn assign_families(families: &[ModelFamily], n_sessions: usize, session: usize) -> ModelFamily {
+    if families.is_empty() {
+        return ModelFamily::Surrogate;
+    }
+    let n = n_sessions.max(1);
+    let i = session.min(n - 1);
+    families[(i * families.len()) / n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surrogate_zoo_backend_matches_bare_analytic_exactly() {
+        let mut zoo = ZooBackend::cloud(ModelFamily::Surrogate, 7);
+        let mut bare = AnalyticBackend::cloud(7);
+        let obs = [0.25f32; D_VIS];
+        for i in 0..4 {
+            let a = zoo.infer(&obs, &[0.0; D_PROP], i);
+            let b = bare.infer(&obs, &[0.0; D_PROP], i);
+            assert_eq!(a.actions, b.actions, "call {i}");
+            assert_eq!(a.mass, b.mass);
+        }
+        assert_eq!(zoo.name(), bare.name());
+    }
+
+    #[test]
+    fn families_answer_with_distinct_weights() {
+        let obs = [0.3f32; D_VIS];
+        let a = ZooBackend::cloud(ModelFamily::OpenVlaAr, 7).infer(&obs, &[0.0; D_PROP], 1);
+        let b = ZooBackend::cloud(ModelFamily::Pi0Diffusion, 7).infer(&obs, &[0.0; D_PROP], 1);
+        assert_ne!(a.actions[0], b.actions[0], "family salt must separate weights");
+        assert_eq!(a.actions.len(), 4, "AR family emits short chunks");
+        assert_eq!(b.actions.len(), crate::CHUNK);
+    }
+
+    #[test]
+    fn zoo_backend_replays_under_a_fixed_seed() {
+        let run = || {
+            ZooBackend::cloud(ModelFamily::EdgeQuant, 11)
+                .infer(&[0.2; D_VIS], &[0.0; D_PROP], 2)
+                .actions
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn block_assignment_is_balanced_and_contiguous() {
+        use ModelFamily::*;
+        let fams = [OpenVlaAr, Pi0Diffusion, EdgeQuant];
+        let got: Vec<ModelFamily> = (0..8).map(|i| assign_families(&fams, 8, i)).collect();
+        // contiguous blocks in catalog order
+        for w in got.windows(2) {
+            assert!(w[0] <= w[1], "non-contiguous: {got:?}");
+        }
+        for f in fams {
+            let n = got.iter().filter(|&&g| g == f).count();
+            assert!((2..=3).contains(&n), "unbalanced {f:?}: {got:?}");
+        }
+        assert_eq!(assign_families(&[], 8, 3), Surrogate);
+    }
+}

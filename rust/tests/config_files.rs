@@ -16,6 +16,10 @@ fn libero_toml_matches_builtin_preset() {
     assert_eq!(cfg.dispatcher.theta_red, builtin.dispatcher.theta_red);
     assert_eq!(cfg.devices.edge_full_ms, builtin.devices.edge_full_ms);
     assert_eq!(cfg.scene.noise, NoiseLevel::Standard);
+    // the [models] section ships disabled (zoo bit-identity) with the
+    // default family list
+    assert!(!cfg.models.enabled);
+    assert_eq!(cfg.models.family_list(), builtin.models.family_list());
 }
 
 #[test]

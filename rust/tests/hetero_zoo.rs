@@ -1,0 +1,280 @@
+//! Differential conformance suite for the heterogeneous model zoo.
+//!
+//! Two halves:
+//!
+//! * **Disabled ⇒ bit-identity.** With `[models]` absent or
+//!   `enabled = false` — whatever the other zoo knobs say — the fleet
+//!   scheduler, the reuse cache and the chaos/failover paths replay the
+//!   exact trajectories and metrics of the PR 3 scheduler (the same
+//!   zero-perturbation contract `[faults]` and `[cache]` already honour).
+//! * **Enabled ⇒ mixed fleets hold the line.** An 8-session mixed-family
+//!   fleet completes under the chaos plan with no wedged session, no wire
+//!   batch ever mixes model families, per-family counters exactly
+//!   partition the fleet totals, family-tagged batches ride the real TCP
+//!   path, and the compatibility-aware router respects endpoint
+//!   advertisements.
+
+use rapid::config::{FaultsConfig, PolicyKind, SystemConfig};
+use rapid::net::{CloudClient, CloudServer};
+use rapid::robot::TaskKind;
+use rapid::serve::{Fleet, FleetResult};
+use rapid::vla::{AnalyticBackend, ModelFamily};
+
+fn assert_bit_identical(a: &FleetResult, b: &FleetResult, tag: &str) {
+    assert_eq!(a.stats.rounds, b.stats.rounds, "{tag}: rounds");
+    assert_eq!(a.stats.batches, b.stats.batches, "{tag}: batches");
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests, "{tag}: batched requests");
+    assert_eq!(a.stats.deferred_offloads, b.stats.deferred_offloads, "{tag}: deferred");
+    assert_eq!(a.stats.dropped_replies, b.stats.dropped_replies, "{tag}: dropped");
+    assert_eq!(a.stats.degraded_requests, b.stats.degraded_requests, "{tag}: degraded");
+    assert_eq!(a.stats.outage_rounds, b.stats.outage_rounds, "{tag}: outage rounds");
+    assert_eq!(a.cache.hits, b.cache.hits, "{tag}: cache hits");
+    assert_eq!(a.cache.probes, b.cache.probes, "{tag}: cache probes");
+    assert_eq!(a.cache.evictions, b.cache.evictions, "{tag}: cache evictions");
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{tag}: session count");
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "{tag}: episode count");
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "{tag}: latency columns");
+            assert_eq!(ma.cloud_events, mb.cloud_events, "{tag}: cloud events");
+            assert_eq!(ma.edge_events, mb.edge_events, "{tag}: edge events");
+            assert_eq!(ma.preemptions, mb.preemptions, "{tag}: preemptions");
+            assert_eq!(ma.failovers, mb.failovers, "{tag}: failovers");
+            assert_eq!(ma.cache_hits, mb.cache_hits, "{tag}: cache hits");
+            assert_eq!(ma.rms_error, mb.rms_error, "{tag}: trajectory (rms)");
+            assert_eq!(ma.success, mb.success, "{tag}: success");
+        }
+    }
+}
+
+/// A `[models]` section that is present — with aggressive knobs — but
+/// disabled. Must perturb nothing.
+fn disabled_zoo(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.models.enabled = false;
+    s.models.families = "edgequant,pi0,openvla,surrogate".into();
+    s
+}
+
+#[test]
+fn disabled_models_keep_the_fleet_bit_identical() {
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 4;
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&disabled_zoo(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("{kind:?}"));
+        assert_eq!(run.stats.family_flushes, 0);
+        assert_eq!(run.stats.mixed_family_batches, 0);
+    }
+}
+
+#[test]
+fn disabled_models_keep_the_reuse_cache_bit_identical() {
+    // the cache path exercises the family-discriminated signatures: with
+    // the zoo off every signature carries the surrogate id, so hit
+    // patterns must replay exactly
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.cache.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(base.cache.hits > 0, "the cached fleet must actually hit");
+    let run = Fleet::local(&disabled_zoo(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &run, "cache");
+}
+
+#[test]
+fn disabled_models_keep_the_chaos_path_bit_identical() {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&disabled_zoo(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("chaos/{kind:?}"));
+    }
+}
+
+#[test]
+fn enabled_surrogate_only_zoo_is_bit_identical_on_default_anchors() {
+    // the surrogate family's catalog equals the default [devices]/[link]
+    // anchors and its backends are the bare analytic pair, so a zoo that
+    // serves *only* the surrogate replays the zoo-free fleet exactly —
+    // the strongest form of the differential contract
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 4;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    let mut zoo = sys.clone();
+    zoo.models.enabled = true;
+    zoo.models.families = "surrogate".into();
+    let run = Fleet::local(&zoo, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_bit_identical(&base, &run, "surrogate-only zoo");
+}
+
+#[test]
+fn mixed_fleet_completes_under_the_chaos_plan() {
+    // the conformance suite's "enabled" half: 8 mixed-family sessions, 3
+    // endpoints, the full demo fault schedule — crash, degrade, outage,
+    // drops, delays — and nothing may wedge or mix
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    sys.models.enabled = true;
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let res = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_eq!(res.stats.mixed_family_batches, 0, "{kind:?} mixed a batch under chaos");
+        for s in &res.sessions {
+            for m in &s.episodes {
+                assert_eq!(
+                    m.steps,
+                    TaskKind::PickPlace.seq_len(),
+                    "{kind:?} session {} wedged under chaos",
+                    s.session
+                );
+            }
+        }
+        // per-family counters exactly partition the fleet totals
+        let steps: u64 = res.families.iter().map(|t| t.steps).sum();
+        let cloud: u64 = res.families.iter().map(|t| t.cloud_events).sum();
+        let batches: u64 = res.families.iter().map(|t| t.batches).sum();
+        let reqs: u64 = res.families.iter().map(|t| t.batched_requests).sum();
+        let sessions: usize = res.families.iter().map(|t| t.sessions).sum();
+        assert_eq!(steps, res.total_steps(), "{kind:?}: family steps don't partition");
+        assert_eq!(cloud, res.total_cloud_events(), "{kind:?}: family cloud events");
+        assert_eq!(batches, res.stats.batches, "{kind:?}: family batches");
+        assert_eq!(reqs, res.stats.batched_requests, "{kind:?}: family requests");
+        assert_eq!(sessions, res.sessions.len(), "{kind:?}: family sessions");
+        // chaos replays exactly
+        let again = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&res, &again, &format!("zoo-chaos replay {kind:?}"));
+    }
+}
+
+#[test]
+fn zoo_fleet_rides_family_tagged_frames_over_real_tcp() {
+    // two real endpoints; the mixed fleet's batches go over the wire as
+    // family-tagged zoo frames (+ plain frames for any surrogate batch)
+    let s1 = CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(1))).unwrap();
+    let s2 = CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(2))).unwrap();
+    let c1 = CloudClient::connect(&s1.addr.to_string()).unwrap();
+    let c2 = CloudClient::connect(&s2.addr.to_string()).unwrap();
+
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.max_batch = 3;
+    sys.models.enabled = true;
+    let res = Fleet::remote(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, vec![c1, c2]).run();
+    assert_eq!(res.stats.mixed_family_batches, 0);
+    assert!(res.total_cloud_events() > 0, "the wire must actually serve");
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+    }
+    let zoo_frames = s1.stats().zoo_frames.load(std::sync::atomic::Ordering::Relaxed)
+        + s2.stats().zoo_frames.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(zoo_frames > 0, "no family-tagged frame ever crossed the wire");
+    s1.shutdown();
+    s2.shutdown();
+}
+
+#[test]
+fn compatibility_router_respects_endpoint_advertisements() {
+    // endpoint 0 serves only the AR family; endpoint 1 everything. Every
+    // non-AR dispatch must avoid endpoint 0, and the fleet still
+    // completes with zero degradation (endpoint 1 covers the rest).
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.endpoints = 2;
+    sys.models.enabled = true;
+    let mut fleet = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly);
+    fleet.restrict_endpoint(0, &[ModelFamily::OpenVlaAr]);
+    let res = fleet.run();
+    assert_eq!(res.stats.degraded_requests, 0, "endpoint 1 must cover every family");
+    for fam in [ModelFamily::Surrogate, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+        assert_eq!(
+            res.endpoint_family_dispatches[0][fam.id() as usize],
+            0,
+            "{fam:?} dispatched to a non-advertiser"
+        );
+    }
+    // AR batches exist and someone served them
+    let ar: u64 = res
+        .endpoint_family_dispatches
+        .iter()
+        .map(|e| e[ModelFamily::OpenVlaAr.id() as usize])
+        .sum();
+    assert!(ar > 0, "the AR family never dispatched");
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+    }
+}
+
+#[test]
+fn shared_store_never_cross_serves_families_in_a_live_fleet() {
+    // zoo + shared cache: 8 lockstep CloudOnly sessions all start in the
+    // same kinematic state, so without the family discriminant the first
+    // family's round-0 admission would cross-serve every other family's
+    // round-0 probe. max_batch 2 makes each family block flush mid-round:
+    // its third session (where one exists) hits its *own* family's
+    // answer, while the next family's probes — same joint state — miss.
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.fleet.max_batch = 2;
+    sys.cache.enabled = true;
+    sys.models.enabled = true;
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    // per-family hits live inside the family rollup; totals must agree
+    let hits: u64 = res.families.iter().map(|t| t.cache_hits).sum();
+    let per_episode: u64 =
+        res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.cache_hits).sum();
+    assert_eq!(hits, per_episode);
+    assert_eq!(hits, res.cache.hits);
+    // same-family sessions still share answers (the cache is not dead)...
+    assert!(res.cache.hits > 0, "same-family sessions must still share: {:?}", res.cache);
+    // ...and wire + cache exactly partition each family's own offload
+    // schedule (sessions × ceil(steps / family chunk)): a single
+    // cross-family hit would shift a family's wire count below its line
+    let seq = TaskKind::PickPlace.seq_len() as u64;
+    for t in &res.families {
+        let chunk = rapid::vla::FamilyProfile::of(t.family).chunk_len as u64;
+        let dispatches = t.sessions as u64 * seq.div_ceil(chunk);
+        assert_eq!(
+            t.cloud_events + t.cache_hits,
+            dispatches,
+            "{:?}: wire + cache must partition the family's schedule",
+            t.family
+        );
+        assert!(t.cloud_events > 0, "{:?} never paid the wire — cross-served?", t.family);
+    }
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+    }
+}
+
+#[test]
+fn zoo_acceptance_on_the_shipped_config() {
+    // configs/libero.toml with [models] flipped on: the full acceptance
+    // path end to end — mixed fleet, no mixing, RAPID beats Cloud-Only
+    // mean latency at equal success for every family
+    let src = std::fs::read_to_string("configs/libero.toml").expect("configs/libero.toml");
+    let mut sys = SystemConfig::from_toml(&src).expect("parse libero.toml");
+    sys.fleet.n_sessions = 8;
+    let (_, rows, arms) = rapid::experiments::hetero::run(&sys, TaskKind::PickPlace);
+    for a in &arms {
+        assert_eq!(a.mixed_family_batches, 0, "{:?}", a.policy);
+    }
+    for fam in [ModelFamily::OpenVlaAr, ModelFamily::Pi0Diffusion, ModelFamily::EdgeQuant] {
+        let find = |k: PolicyKind| rows.iter().find(|r| r.policy == k && r.family == fam).unwrap();
+        let rapid = find(PolicyKind::Rapid);
+        let cloud = find(PolicyKind::CloudOnly);
+        assert!(rapid.completed && cloud.completed, "{fam:?} wedged");
+        assert!(
+            rapid.mean_lat < cloud.mean_lat,
+            "{fam:?}: RAPID {} !< Cloud-Only {}",
+            rapid.mean_lat,
+            cloud.mean_lat
+        );
+        assert_eq!(rapid.success, cloud.success, "{fam:?}: unequal success");
+    }
+}

@@ -436,7 +436,7 @@ fn prop_cache_capacity_never_exceeded() {
         let mut misses = 0u64;
         for step in 0..300u64 {
             let f = random_frame(rng, step as usize);
-            let sig = Signature::of(&cfg, 1 + rng.below(3) as usize, &f, None);
+            let sig = Signature::of(&cfg, 1 + rng.below(3) as usize, &f, None, Default::default());
             let owner = rng.below(4) as usize;
             if rng.chance(0.5) {
                 store.admit(sig, out.clone(), step, owner);
@@ -486,7 +486,7 @@ fn prop_cache_replay_under_shared_seed() {
         );
         for step in 0..200u64 {
             let f = random_frame(rng, step as usize);
-            let sig = Signature::of(&cfg, 1, &f, None);
+            let sig = Signature::of(&cfg, 1, &f, None, Default::default());
             if rng.chance(0.6) {
                 a.admit(sig, out.clone(), step, 0);
                 b.admit(sig, out.clone(), step, 0);
@@ -552,6 +552,145 @@ fn prop_disabled_cache_is_bit_identical() {
         }
         Ok(())
     });
+}
+
+/// Invariant #19 (zoo): no flushed batch ever mixes model families, for
+/// random fleet shapes, family subsets, deadlines and policies — the
+/// arrival interleavings the family seal must survive. Family totals must
+/// also exactly partition the fleet totals.
+#[test]
+fn prop_zoo_batches_never_mix_families() {
+    seeded_forall!("zoo_no_mixing", 6, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = rng.next_u64();
+        sys.fleet.n_sessions = 3 + rng.below(6) as usize;
+        sys.fleet.max_batch = 1 + rng.below(5) as usize;
+        sys.fleet.batch_deadline_us = rng.below(3) as u64 * 100_000;
+        sys.models.enabled = true;
+        let all = ["surrogate", "openvla", "pi0", "edgequant"];
+        let n_fams = 2 + rng.below(3) as usize;
+        let start = rng.below(4) as usize;
+        let picked: Vec<&str> = (0..n_fams).map(|k| all[(start + k) % 4]).collect();
+        sys.models.families = picked.join(",");
+        let kinds = [PolicyKind::Rapid, PolicyKind::CloudOnly];
+        let kind = kinds[rng.below(2) as usize];
+        let res = rapid::serve::Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        if res.stats.mixed_family_batches != 0 {
+            return Err(format!("{} mixed batches", res.stats.mixed_family_batches));
+        }
+        let steps: u64 = res.families.iter().map(|t| t.steps).sum();
+        let cloud: u64 = res.families.iter().map(|t| t.cloud_events).sum();
+        let batches: u64 = res.families.iter().map(|t| t.batches).sum();
+        let reqs: u64 = res.families.iter().map(|t| t.batched_requests).sum();
+        if steps != res.total_steps() || cloud != res.total_cloud_events() {
+            return Err("family totals don't partition session totals".into());
+        }
+        if batches != res.stats.batches || reqs != res.stats.batched_requests {
+            return Err("family batch counters don't partition scheduler totals".into());
+        }
+        for s in &res.sessions {
+            for m in &s.episodes {
+                if m.steps != TaskKind::PickPlace.seq_len() {
+                    return Err(format!("session {} wedged ({:?})", s.session, s.family));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #20 (zoo): the planner's partition choice is monotone in
+/// link bandwidth under a shared seed — more bandwidth never shrinks the
+/// chosen payload (ties break toward the shallower split), and the
+/// chosen cost never increases with bandwidth.
+#[test]
+fn prop_planner_monotone_in_bandwidth() {
+    use rapid::policy::planner;
+    use rapid::vla::profile::{FamilyProfile, ModelFamily};
+    seeded_forall!("planner_monotone", 300, |rng: &mut Pcg32| {
+        let fam = ModelFamily::ALL[rng.below(4) as usize];
+        let prof = FamilyProfile::of(fam);
+        let rtt = rng.range(1.0, 120.0);
+        let bw_lo = rng.range(1.0, 800.0);
+        let bw_hi = bw_lo + rng.range(0.0, 2000.0);
+        let lo = planner::plan(&prof, bw_lo, rtt);
+        let hi = planner::plan(&prof, bw_hi, rtt);
+        if hi.payload_bytes + 1e-9 < lo.payload_bytes {
+            return Err(format!(
+                "{fam:?}: payload shrank {} -> {} as bw rose {bw_lo} -> {bw_hi}",
+                lo.payload_bytes, hi.payload_bytes
+            ));
+        }
+        let cost = |p: &rapid::policy::FamilyPlan, bw: f64| {
+            planner::partition_cost(&prof.partitions[p.partition_idx], bw, rtt)
+        };
+        if cost(&hi, bw_hi) > cost(&lo, bw_lo) + 1e-9 {
+            return Err(format!("{fam:?}: chosen cost rose with bandwidth"));
+        }
+        // determinism under the shared inputs
+        if planner::plan(&prof, bw_lo, rtt) != lo {
+            return Err("planner non-deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #21 (zoo/cache): family-tagged signatures never serve a hit
+/// across families — a state admitted under exactly one family hits for
+/// that family alone, under arbitrary admission interleavings.
+#[test]
+fn prop_family_signatures_never_cross_serve() {
+    use rapid::cache::{ProbeOutcome, ReuseStore, Signature};
+    use rapid::config::CacheConfig;
+    use rapid::vla::profile::ModelFamily;
+    seeded_forall!("family_no_cross_serve", 60, |rng: &mut Pcg32| {
+        let cfg = CacheConfig::default();
+        let mut store = ReuseStore::new(64, 10_000, true, rng.next_u64());
+        let mut cloud = rapid::vla::AnalyticBackend::cloud(rng.next_u64());
+        let out = rapid::vla::Backend::infer(
+            &mut cloud,
+            &[0.1; rapid::D_VIS],
+            &[0.0; rapid::D_PROP],
+            1,
+        );
+        // distinct states, each admitted under exactly one random family
+        let mut admitted: Vec<(SensorFrame, ModelFamily)> = Vec::new();
+        for step in 0..40u64 {
+            let f = random_frame(rng, step as usize);
+            let fam = ModelFamily::ALL[rng.below(4) as usize];
+            let sig = Signature::of(&cfg, 1, &f, None, fam);
+            store.admit(sig, out.clone(), step, rng.below(4) as usize);
+            admitted.push((f, fam));
+        }
+        for (f, fam) in &admitted {
+            for probe_fam in ModelFamily::ALL {
+                let sig = Signature::of(&cfg, 1, f, None, probe_fam);
+                let hit = matches!(store.probe(&sig, 50, 0), ProbeOutcome::Hit(_));
+                let admitted_under_probe_fam = admitted
+                    .iter()
+                    .any(|(g, gf)| *gf == probe_fam && frames_bin_equal(&cfg, g, f));
+                if hit && !admitted_under_probe_fam {
+                    return Err(format!(
+                        "{probe_fam:?} hit a chunk admitted under {fam:?}"
+                    ));
+                }
+                if !hit && admitted_under_probe_fam {
+                    return Err(format!(
+                        "{probe_fam:?} missed its own admitted state (capacity untouched)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Two frames quantize into the same signature bins (used by the
+/// cross-serve property to discount genuine same-state collisions).
+fn frames_bin_equal(cfg: &rapid::config::CacheConfig, a: &SensorFrame, b: &SensorFrame) -> bool {
+    use rapid::cache::Signature;
+    Signature::of(cfg, 1, a, None, Default::default())
+        == Signature::of(cfg, 1, b, None, Default::default())
 }
 
 /// Cooldown unit property: ready exactly after `limit` ticks.

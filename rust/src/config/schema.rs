@@ -441,6 +441,63 @@ impl ModelsConfig {
     }
 }
 
+/// Open-loop workload engine (`serve::workload`): seeded dynamic session
+/// arrivals for the event-driven fleet scheduler. With `enabled = false`
+/// (the default) the scheduler compiles the lockstep plan — every session
+/// arrives at round 0 with the `[fleet]` episode count and block-assigned
+/// family — and is bit-identical to the pre-workload round loop (the same
+/// zero-perturbation contract as `[faults]`/`[cache]`/`[models]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub enabled: bool,
+    /// Arrival process: `fixed`, `poisson`, `bursty`, or `trace`.
+    pub arrivals: String,
+    /// Sessions the workload spawns (0 = use `fleet.n_sessions`; a trace
+    /// with no pinned count defines the fleet size itself).
+    pub n_sessions: usize,
+    /// Round the arrival process starts.
+    pub start_round: u64,
+    /// Fixed: exact gap between arrivals (rounds; 0 = everyone at the
+    /// start round). Poisson: mean of the exponential inter-arrival gap.
+    pub interarrival_rounds: f64,
+    /// Bursty: back-to-back arrivals per on-window (one per round) ...
+    pub burst_len: u64,
+    /// ... followed by this many silent rounds.
+    pub idle_len: u64,
+    /// Trace replay: inline rounds (`"0,0,4,12"`) or `"@path"` to a file
+    /// with one arrival round per line (`#` comments).
+    pub trace: String,
+    /// Seed of the engine's private draw stream; 0 derives from the
+    /// episode seed.
+    pub seed: u64,
+    /// Per-session episode count drawn uniformly from
+    /// `[episodes_min, episodes_max]`; 0/0 pins `fleet.episodes_per_session`.
+    pub episodes_min: usize,
+    pub episodes_max: usize,
+    /// Family assignment: `blocks` (the lockstep contiguous-block rule) or
+    /// `draw` (seeded uniform draw from the `[models]` family list).
+    pub family_mix: String,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            enabled: false,
+            arrivals: "fixed".into(),
+            n_sessions: 0,
+            start_round: 0,
+            interarrival_rounds: 0.0,
+            burst_len: 4,
+            idle_len: 12,
+            trace: String::new(),
+            seed: 0,
+            episodes_min: 0,
+            episodes_max: 0,
+            family_mix: "blocks".into(),
+        }
+    }
+}
+
 /// Deterministic fault-injection schedule (`faults::FaultPlan` is built
 /// from this section; see `rust/src/faults/`). All windows are half-open
 /// `[start, end)` ranges of scheduler rounds; an empty window (start >=
@@ -574,6 +631,7 @@ pub struct SystemConfig {
     pub dispatcher: DispatcherConfig,
     pub vision: VisionPolicyConfig,
     pub fleet: FleetConfig,
+    pub workload: WorkloadConfig,
     pub faults: FaultsConfig,
     pub cache: CacheConfig,
     pub models: ModelsConfig,
@@ -596,6 +654,7 @@ impl Default for SystemConfig {
             dispatcher: DispatcherConfig::default(),
             vision: VisionPolicyConfig::default(),
             fleet: FleetConfig::default(),
+            workload: WorkloadConfig::default(),
             faults: FaultsConfig::default(),
             cache: CacheConfig::default(),
             models: ModelsConfig::default(),
@@ -625,9 +684,11 @@ impl SystemConfig {
         if let Some(n) = v.get("scene.noise").and_then(|x| x.as_str()).and_then(NoiseLevel::parse) {
             self.scene.noise = n;
         }
-        self.scene.visual_noise_clarity = v.f64_or("scene.visual_noise_clarity", self.scene.visual_noise_clarity);
+        self.scene.visual_noise_clarity =
+            v.f64_or("scene.visual_noise_clarity", self.scene.visual_noise_clarity);
         self.scene.occlusion_rate = v.f64_or("scene.occlusion_rate", self.scene.occlusion_rate);
-        self.scene.occlusion_clarity = v.f64_or("scene.occlusion_clarity", self.scene.occlusion_clarity);
+        self.scene.occlusion_clarity =
+            v.f64_or("scene.occlusion_clarity", self.scene.occlusion_clarity);
         self.scene.occlusion_len = v.usize_or("scene.occlusion_len", self.scene.occlusion_len);
 
         self.link.rtt_ms = v.f64_or("link.rtt_ms", self.link.rtt_ms);
@@ -639,27 +700,37 @@ impl SystemConfig {
         self.link.noise_retrans = v.f64_or("link.noise_retrans", self.link.noise_retrans);
 
         self.devices.edge_full_ms = v.f64_or("devices.edge_full_ms", self.devices.edge_full_ms);
-        self.devices.cloud_compute_ms = v.f64_or("devices.cloud_compute_ms", self.devices.cloud_compute_ms);
-        self.devices.vision_route_ms = v.f64_or("devices.vision_route_ms", self.devices.vision_route_ms);
+        self.devices.cloud_compute_ms =
+            v.f64_or("devices.cloud_compute_ms", self.devices.cloud_compute_ms);
+        self.devices.vision_route_ms =
+            v.f64_or("devices.vision_route_ms", self.devices.vision_route_ms);
         self.devices.preempt_ms = v.f64_or("devices.preempt_ms", self.devices.preempt_ms);
-        self.devices.obs_capture_ms = v.f64_or("devices.obs_capture_ms", self.devices.obs_capture_ms);
+        self.devices.obs_capture_ms =
+            v.f64_or("devices.obs_capture_ms", self.devices.obs_capture_ms);
         self.devices.jitter = v.f64_or("devices.jitter", self.devices.jitter);
 
         self.dispatcher.theta_comp = v.f64_or("dispatcher.theta_comp", self.dispatcher.theta_comp);
         self.dispatcher.theta_red = v.f64_or("dispatcher.theta_red", self.dispatcher.theta_red);
-        self.dispatcher.window_acc = v.usize_or("dispatcher.window_acc", self.dispatcher.window_acc);
-        self.dispatcher.window_tau = v.usize_or("dispatcher.window_tau", self.dispatcher.window_tau);
+        self.dispatcher.window_acc =
+            v.usize_or("dispatcher.window_acc", self.dispatcher.window_acc);
+        self.dispatcher.window_tau =
+            v.usize_or("dispatcher.window_tau", self.dispatcher.window_tau);
         self.dispatcher.w_tau = v.usize_or("dispatcher.w_tau", self.dispatcher.w_tau);
         self.dispatcher.v_max = v.f64_or("dispatcher.v_max", self.dispatcher.v_max);
         self.dispatcher.z_gate = v.f64_or("dispatcher.z_gate", self.dispatcher.z_gate);
         self.dispatcher.min_m_acc = v.f64_or("dispatcher.min_m_acc", self.dispatcher.min_m_acc);
         self.dispatcher.min_m_tau = v.f64_or("dispatcher.min_m_tau", self.dispatcher.min_m_tau);
-        self.dispatcher.cooldown = v.usize_or("dispatcher.cooldown", self.dispatcher.cooldown as usize) as u32;
-        self.dispatcher.disable_comp = v.bool_or("dispatcher.disable_comp", self.dispatcher.disable_comp);
-        self.dispatcher.disable_red = v.bool_or("dispatcher.disable_red", self.dispatcher.disable_red);
-        self.dispatcher.static_fusion = v.bool_or("dispatcher.static_fusion", self.dispatcher.static_fusion);
+        self.dispatcher.cooldown =
+            v.usize_or("dispatcher.cooldown", self.dispatcher.cooldown as usize) as u32;
+        self.dispatcher.disable_comp =
+            v.bool_or("dispatcher.disable_comp", self.dispatcher.disable_comp);
+        self.dispatcher.disable_red =
+            v.bool_or("dispatcher.disable_red", self.dispatcher.disable_red);
+        self.dispatcher.static_fusion =
+            v.bool_or("dispatcher.static_fusion", self.dispatcher.static_fusion);
 
-        self.vision.entropy_threshold = v.f64_or("vision.entropy_threshold", self.vision.entropy_threshold);
+        self.vision.entropy_threshold =
+            v.f64_or("vision.entropy_threshold", self.vision.entropy_threshold);
         self.vision.split_adapt = v.f64_or("vision.split_adapt", self.vision.split_adapt);
         self.vision.min_edge_frac = v.f64_or("vision.min_edge_frac", self.vision.min_edge_frac);
         self.vision.ewma = v.f64_or("vision.ewma", self.vision.ewma);
@@ -672,6 +743,20 @@ impl SystemConfig {
         self.fleet.endpoints = v.usize_or("fleet.endpoints", self.fleet.endpoints);
         self.fleet.episodes_per_session =
             v.usize_or("fleet.episodes_per_session", self.fleet.episodes_per_session);
+
+        let w = &mut self.workload;
+        w.enabled = v.bool_or("workload.enabled", w.enabled);
+        w.arrivals = v.str_or("workload.arrivals", &w.arrivals).to_string();
+        w.n_sessions = v.usize_or("workload.n_sessions", w.n_sessions);
+        w.start_round = v.usize_or("workload.start_round", w.start_round as usize) as u64;
+        w.interarrival_rounds = v.f64_or("workload.interarrival_rounds", w.interarrival_rounds);
+        w.burst_len = v.usize_or("workload.burst_len", w.burst_len as usize) as u64;
+        w.idle_len = v.usize_or("workload.idle_len", w.idle_len as usize) as u64;
+        w.trace = v.str_or("workload.trace", &w.trace).to_string();
+        w.seed = v.usize_or("workload.seed", w.seed as usize) as u64;
+        w.episodes_min = v.usize_or("workload.episodes_min", w.episodes_min);
+        w.episodes_max = v.usize_or("workload.episodes_max", w.episodes_max);
+        w.family_mix = v.str_or("workload.family_mix", &w.family_mix).to_string();
 
         let f = &mut self.faults;
         f.enabled = v.bool_or("faults.enabled", f.enabled);
@@ -878,6 +963,36 @@ mod tests {
         // surrogate so an enabled zoo can never have zero families
         c.models.families = "what, ever".into();
         assert_eq!(c.models.family_list(), vec![ModelFamily::Surrogate]);
+    }
+
+    #[test]
+    fn workload_defaults_inert_and_overlay() {
+        let c = SystemConfig::default();
+        assert!(!c.workload.enabled, "workload must default off (bit-identity)");
+        assert_eq!(c.workload.arrivals, "fixed");
+        assert_eq!(c.workload.n_sessions, 0);
+        assert_eq!(c.workload.interarrival_rounds, 0.0);
+        assert_eq!(c.workload.family_mix, "blocks");
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[workload]\nenabled = true\narrivals = \"poisson\"\nn_sessions = 12\n\
+             interarrival_rounds = 3.5\nseed = 41\nepisodes_min = 1\nepisodes_max = 3\n\
+             family_mix = \"draw\"\ntrace = \"0,4,9\"",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.workload.enabled);
+        assert_eq!(c.workload.arrivals, "poisson");
+        assert_eq!(c.workload.n_sessions, 12);
+        assert_eq!(c.workload.interarrival_rounds, 3.5);
+        assert_eq!(c.workload.seed, 41);
+        assert_eq!((c.workload.episodes_min, c.workload.episodes_max), (1, 3));
+        assert_eq!(c.workload.family_mix, "draw");
+        assert_eq!(c.workload.trace, "0,4,9");
+        // untouched keys keep defaults
+        assert_eq!(c.workload.burst_len, 4);
+        assert_eq!(c.workload.idle_len, 12);
+        assert_eq!(c.workload.start_round, 0);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Dynamic-workload experiment: the same fleet served under different
+//! open-loop arrival shapes (`[workload]` / `serve::workload`).
+//!
+//! The point the table makes: lockstep all-at-t0 arrivals are the *best
+//! case* for cross-session batching (everyone offloads in the same
+//! rounds), and the paper's latency win has to survive realistic shapes —
+//! staggered joins thin the batches, Poisson jitter desynchronizes the
+//! offload rounds, and bursty on-off traffic alternates between full
+//! batches and drained lulls. RAPID's edge-resident routine phases make
+//! it far less sensitive to the arrival shape than Cloud-Only, whose
+//! per-chunk wire dependency pays for every lost co-batching opportunity.
+
+use crate::config::{PolicyKind, SystemConfig, WorkloadConfig};
+use crate::robot::TaskKind;
+use crate::serve::Fleet;
+use crate::util::tablefmt::{ms, pct, Table};
+
+/// Policies compared by the arrivals table.
+pub const POLICIES: [PolicyKind; 2] = [PolicyKind::Rapid, PolicyKind::CloudOnly];
+
+/// One (shape, policy) cell of the comparison.
+pub struct ArrivalRow {
+    pub shape: &'static str,
+    pub policy: PolicyKind,
+    pub sessions: usize,
+    /// Round of the last arrival (0 for lockstep shapes).
+    pub last_arrival: u64,
+    pub rounds: u64,
+    /// Mean per-chunk total latency over every episode.
+    pub mean_lat: f64,
+    pub success: f64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub multi_session_batches: u64,
+    pub max_active: usize,
+    /// Every episode of every session ran to completion (no wedge).
+    pub completed: bool,
+}
+
+fn shaped(sys: &SystemConfig, shape: &'static str) -> SystemConfig {
+    let mut s = sys.clone();
+    // every arm runs the SAME fleet ([fleet] knobs, default episode/family
+    // draws): only the arrival shape varies, so rows are comparable even
+    // when the caller's config carries its own [workload] section
+    s.workload = WorkloadConfig::default();
+    match shape {
+        "lockstep" => s.workload.enabled = false,
+        "staggered" => {
+            s.workload.enabled = true;
+            s.workload.arrivals = "fixed".into();
+            s.workload.interarrival_rounds = 4.0;
+        }
+        "poisson" => {
+            s.workload.enabled = true;
+            s.workload.arrivals = "poisson".into();
+            s.workload.interarrival_rounds = 6.0;
+        }
+        "bursty" => {
+            s.workload.enabled = true;
+            s.workload.arrivals = "bursty".into();
+            s.workload.burst_len = 3;
+            s.workload.idle_len = 10;
+        }
+        other => panic!("unknown arrival shape {other:?}"),
+    }
+    s
+}
+
+/// Arrival shapes compared by the table, in render order.
+pub const SHAPES: [&str; 4] = ["lockstep", "staggered", "poisson", "bursty"];
+
+/// Run the arrival-shape comparison. Fleet size and seeds come from
+/// `sys.fleet` / `sys.episode`; the `[workload]` section is overridden
+/// per shape (the `lockstep` arm runs with the engine disabled, so its
+/// row doubles as the bit-identity anchor for the differential suite).
+pub fn run(sys: &SystemConfig, task: TaskKind) -> (Table, Vec<ArrivalRow>) {
+    let mut rows = Vec::new();
+    for shape in SHAPES {
+        let shaped_sys = shaped(sys, shape);
+        for kind in POLICIES {
+            let res = Fleet::local(&shaped_sys, task, kind).run();
+            let summary = res.summary();
+            let expect = task.seq_len();
+            let completed = res
+                .sessions
+                .iter()
+                .all(|s| s.episodes.iter().all(|m| m.steps == expect));
+            rows.push(ArrivalRow {
+                shape,
+                policy: kind,
+                sessions: res.sessions.len(),
+                last_arrival: res.sessions.iter().map(|s| s.arrival_round).max().unwrap_or(0),
+                rounds: res.stats.rounds,
+                mean_lat: summary.fleet.total_lat_mean,
+                success: summary.fleet.success_rate,
+                batches: res.stats.batches,
+                mean_batch: res.mean_batch,
+                multi_session_batches: res.stats.multi_session_batches,
+                max_active: res.stats.max_active_sessions,
+                completed,
+            });
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Dynamic arrivals ({} × {} session(s), seed {})",
+            task.name(),
+            sys.fleet.n_sessions.max(1),
+            sys.episode.seed
+        ),
+        &[
+            "Arrivals", "Method", "Last Join", "Rounds", "Total Lat.", "Success", "Batches",
+            "Mean Batch", "Multi-sess", "Peak Active",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.shape.to_string(),
+            r.policy.name().to_string(),
+            r.last_arrival.to_string(),
+            r.rounds.to_string(),
+            ms(r.mean_lat),
+            pct(r.success),
+            r.batches.to_string(),
+            format!("{:.2}", r.mean_batch),
+            r.multi_session_batches.to_string(),
+            r.max_active.to_string(),
+        ]);
+    }
+    t.footnote(
+        "One fleet per (arrival shape, method): lockstep arrives everyone at round 0 (the \
+         bit-identity anchor), staggered joins every 4 rounds, poisson draws seeded \
+         exponential gaps (mean 6), bursty alternates 3 back-to-back joins with 10 idle \
+         rounds. Every session completes its episodes regardless of shape (no wedge).",
+    );
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemConfig {
+        let mut s = SystemConfig::default();
+        s.fleet.n_sessions = 6;
+        s
+    }
+
+    fn cell<'a>(rows: &'a [ArrivalRow], shape: &str, kind: PolicyKind) -> &'a ArrivalRow {
+        rows.iter().find(|r| r.shape == shape && r.policy == kind).unwrap()
+    }
+
+    #[test]
+    fn every_shape_completes_every_session() {
+        let (_, rows) = run(&sys(), TaskKind::PickPlace);
+        assert_eq!(rows.len(), SHAPES.len() * POLICIES.len());
+        for r in &rows {
+            assert!(r.completed, "{}/{:?} wedged", r.shape, r.policy);
+            assert_eq!(r.sessions, 6);
+            // at least two sessions must overlap in every shape (a poisson
+            // tail can outlive an early departure, so != 6 is legal there)
+            assert!(r.max_active >= 2, "{}: no overlap at all", r.shape);
+            assert!(r.max_active <= 6, "{}", r.shape);
+        }
+        // the lockstep arm is fully co-resident by construction
+        for kind in POLICIES {
+            assert_eq!(cell(&rows, "lockstep", kind).max_active, 6);
+        }
+    }
+
+    #[test]
+    fn lockstep_row_equals_the_disabled_workload_fleet() {
+        // the experiment's lockstep arm IS the plain fleet: same rounds,
+        // same batches, same latency — the table-level bit-identity anchor
+        let (_, rows) = run(&sys(), TaskKind::PickPlace);
+        let base = Fleet::local(&sys(), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        let lock = cell(&rows, "lockstep", PolicyKind::CloudOnly);
+        assert_eq!(lock.rounds, base.stats.rounds);
+        assert_eq!(lock.batches, base.stats.batches);
+        assert_eq!(lock.mean_lat, base.summary().fleet.total_lat_mean);
+        assert_eq!(lock.last_arrival, 0);
+    }
+
+    #[test]
+    fn staggered_shapes_stretch_the_run_and_thin_the_batches() {
+        let (_, rows) = run(&sys(), TaskKind::PickPlace);
+        let lock = cell(&rows, "lockstep", PolicyKind::CloudOnly);
+        for shape in ["staggered", "poisson", "bursty"] {
+            let r = cell(&rows, shape, PolicyKind::CloudOnly);
+            assert!(r.last_arrival > 0, "{shape} never staggered an arrival");
+            assert!(r.rounds > lock.rounds, "{shape} must outlast the lockstep run");
+        }
+        // lockstep is the best case for co-batching
+        let stag = cell(&rows, "staggered", PolicyKind::CloudOnly);
+        assert!(
+            stag.mean_batch <= lock.mean_batch,
+            "staggered arrivals can't beat lockstep co-batching: {} vs {}",
+            stag.mean_batch,
+            lock.mean_batch
+        );
+    }
+
+    #[test]
+    fn rows_replay_exactly_under_the_shared_seed() {
+        let (_, a) = run(&sys(), TaskKind::PickPlace);
+        let (_, b) = run(&sys(), TaskKind::PickPlace);
+        for (ra, rb) in a.iter().zip(b.iter()) {
+            assert_eq!(ra.rounds, rb.rounds, "{}/{:?}", ra.shape, ra.policy);
+            assert_eq!(ra.mean_lat, rb.mean_lat);
+            assert_eq!(ra.batches, rb.batches);
+        }
+    }
+
+    #[test]
+    fn table_renders_every_shape() {
+        let (t, _) = run(&sys(), TaskKind::PickPlace);
+        let rendered = t.render();
+        for shape in SHAPES {
+            assert!(rendered.contains(shape), "{shape} missing from table");
+        }
+    }
+}

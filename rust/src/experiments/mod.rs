@@ -3,6 +3,7 @@
 //! functions of (config, backends, seed) and return render-ready tables
 //! plus raw data, so benches, examples and the CLI share one code path.
 
+pub mod arrivals;
 pub mod degraded;
 pub mod fig2;
 pub mod fig3;

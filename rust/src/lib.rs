@@ -47,12 +47,19 @@
 //!   to a cache-free build.
 //! * [`serve`] — the serving stack, smallest to largest scope:
 //!   [`serve::driver`] is the resumable per-session step machine
-//!   (`EpisodeState`: poll → suspend on cloud → resume), [`serve::session`]
-//!   the sequential suite runner behind the paper tables, and
-//!   [`serve::fleet`] the deterministic multi-session scheduler — N robot
-//!   sessions in lockstep rounds, cloud offloads coalesced across sessions
-//!   by [`serve::batcher`] (full / deadline / drain flushes), spread over
-//!   endpoints by [`serve::router`], with fleet-wide backpressure
+//!   (`EpisodeState`: poll → suspend on cloud → resume, with fleet
+//!   arrival/departure hooks), [`serve::session`] the sequential suite
+//!   runner behind the paper tables, [`serve::events`] the deterministic
+//!   virtual-time event queue (binary heap, stable `(time, class, seq)`
+//!   tie-break), [`serve::workload`] the seeded open-loop arrival engine
+//!   (fixed / Poisson / bursty / trace-replay session plans from the
+//!   `[workload]` config section), and [`serve::fleet`] the event-driven
+//!   multi-session scheduler — sessions join and leave mid-run at their
+//!   planned rounds (the lockstep all-at-t0 shape falls out as the
+//!   degenerate case, bit-identical to the historical round loop), cloud
+//!   offloads coalesced across sessions by [`serve::batcher`] (full /
+//!   deadline / drain flushes), spread over endpoints by
+//!   [`serve::router`], with fleet-wide backpressure
 //!   (`fleet.max_inflight`) that degrades refused offloads to the edge
 //!   slice — and failover under injected faults: crashed endpoints are
 //!   routed around, lost replies retried on the least-loaded survivor,

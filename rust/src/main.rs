@@ -4,12 +4,14 @@
 //! rapid run   [--preset libero|realworld] [--policy rapid|...] [--task pick|drawer|peg]
 //!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
 //!             [--analytic] [--trace out.csv] [--config file.toml]
-//! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo|all>
-//!             [--json BENCH_serve.json] [--budget-ms MS]
+//! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo
+//!             |workload|all> [--json BENCH_serve.json] [--budget-ms MS]
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
 //! rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E] [--batch B]
 //!             [--inflight I] [--endpoints P] [--seed S] [--config file.toml]
 //! rapid zoo   [--sessions N] [--task T] [--seed S] [--config file.toml]
+//! rapid workload [--sessions N] [--task T] [--seed S] [--config file.toml]
+//!             [--arrivals fixed|poisson|bursty|trace] [--trace T] [--interarrival R]
 //! rapid info
 //! ```
 //!
@@ -30,6 +32,7 @@ fn main() {
         Some("fleet") => cmd_fleet(&args[1..]),
         Some("chaos") => cmd_chaos(&args[1..]),
         Some("zoo") => cmd_zoo(&args[1..]),
+        Some("workload") => cmd_workload(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -49,7 +52,8 @@ fn print_help() {
         "RAPID — redundancy-aware edge-cloud partitioned inference for VLA models\n\n\
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
-         \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo|all>\n\
+         \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve\n\
+         \x20             |zoo|workload|all>\n\
          \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
          \x20             (serve: benchkit timings of the serve layer, written as\n\
          \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
@@ -65,6 +69,11 @@ fn print_help() {
          \x20 rapid zoo   [--sessions N] [--task T] [--seed S] [--config FILE]\n\
          \x20             (heterogeneous model-zoo fleet: family catalog,\n\
          \x20              planner choices, per-family RAPID vs baselines)\n\
+         \x20 rapid workload [--sessions N] [--task T] [--seed S] [--config FILE]\n\
+         \x20             [--arrivals fixed|poisson|bursty|trace] [--trace T]\n\
+         \x20             [--interarrival R]\n\
+         \x20             (dynamic open-loop arrivals: prints the compiled\n\
+         \x20              session plan, then the arrival-shape table)\n\
          \x20 rapid info\n"
     );
 }
@@ -189,7 +198,10 @@ fn cmd_run(rest: &[String]) -> i32 {
             );
             let mut t = Table::new(
                 &format!("Suite: {} on preset {}", kind.name(), sys.name),
-                &["Method", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.", "Total Load"],
+                &[
+            "Method", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.",
+            "Total Load",
+        ],
             );
             t.row(&res.row.table_cells(None));
             print!("{}", t.render());
@@ -243,7 +255,10 @@ fn cmd_bench(rest: &[String]) -> i32 {
             for (task, _, _, r, rho) in &data.series {
                 println!("{:<16} pearson r = {r:.3}   spearman = {rho:.3}", task.name());
             }
-            println!("pooled: r = {:.3}, spearman = {:.3}", data.pooled_pearson, data.pooled_spearman);
+            println!(
+                "pooled: r = {:.3}, spearman = {:.3}",
+                data.pooled_pearson, data.pooled_spearman
+            );
         }
         "fig5" => {
             let data = experiments::fig5::run(&sys, b);
@@ -277,6 +292,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         }
         "serve" => bench_serve(&sys, &flags, single),
         "zoo" => bench_zoo(&sys, &flags, single),
+        "workload" => bench_workload(&sys, &flags, single),
         other => eprintln!("unknown bench {other}"),
     };
 
@@ -288,7 +304,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         }
         for name in [
             "tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead",
-            "reuse", "serve", "zoo",
+            "reuse", "serve", "zoo", "workload",
         ] {
             println!("\n### {name}");
             run_one(name, &mut b);
@@ -314,7 +330,8 @@ fn bench_serve(sys: &SystemConfig, flags: &Flags, write_json: bool) {
 
     let seed = sys.episode.seed;
     for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
-        let name = format!("episode/{}", if kind == PolicyKind::Rapid { "rapid" } else { "cloud_only" });
+        let name =
+            format!("episode/{}", if kind == PolicyKind::Rapid { "rapid" } else { "cloud_only" });
         bench.run(&name, || {
             let strategy = rapid::policy::build(kind, sys);
             let mut edge = AnalyticBackend::edge(seed);
@@ -336,14 +353,16 @@ fn bench_serve(sys: &SystemConfig, flags: &Flags, write_json: bool) {
     fleet_sys.cache.enabled = false;
     let n = fleet_sys.fleet.n_sessions.max(1);
     bench.run(&format!("fleet/{n}s/rapid"), || {
-        let res = rapid::serve::Fleet::local(&fleet_sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        let res =
+            rapid::serve::Fleet::local(&fleet_sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
         std::hint::black_box(res.total_steps());
     });
     let mut cached_sys = fleet_sys.clone();
     cached_sys.cache.enabled = true;
     bench.run(&format!("fleet/{n}s/cloud_only+cache"), || {
         let res =
-            rapid::serve::Fleet::local(&cached_sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+            rapid::serve::Fleet::local(&cached_sys, TaskKind::PickPlace, PolicyKind::CloudOnly)
+                .run();
         std::hint::black_box(res.cache.hits);
     });
 
@@ -359,7 +378,8 @@ fn bench_serve(sys: &SystemConfig, flags: &Flags, write_json: bool) {
         };
         let sig = rapid::cache::Signature::of(&cfg, 1, &frame, None, Default::default());
         let mut cloud = AnalyticBackend::cloud(1);
-        let out = rapid::vla::Backend::infer(&mut cloud, &[0.1; rapid::D_VIS], &[0.0; rapid::D_PROP], 1);
+        let out =
+            rapid::vla::Backend::infer(&mut cloud, &[0.1; rapid::D_VIS], &[0.0; rapid::D_PROP], 1);
         store.admit(sig, out, 0, 0);
         bench.run("cache/probe_hit", || {
             std::hint::black_box(matches!(
@@ -412,6 +432,72 @@ fn bench_zoo(sys: &SystemConfig, flags: &Flags, write_json: bool) {
             std::hint::black_box(p.partition_idx);
         }
     });
+
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// `rapid bench workload`: benchkit timings of the event-driven serve
+/// path — the event-queue hot loop, workload-plan compilation, and full
+/// dynamic-arrival fleets — optionally written as machine-readable JSON
+/// (`--json BENCH_workload.json`).
+fn bench_workload(sys: &SystemConfig, flags: &Flags, write_json: bool) {
+    use rapid::robot::TaskKind;
+    use rapid::serve::{EventKind, EventQueue};
+
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("workload engine");
+
+    // event-queue hot loop: a round's worth of pushes and pops
+    bench.run("events/push_pop_1k", || {
+        let mut q = EventQueue::new();
+        for t in 0..250u64 {
+            q.push(t, EventKind::FaultEdge);
+            q.push(t, EventKind::Ready((t % 16) as usize));
+            q.push(t, EventKind::Ready((t % 7) as usize));
+            q.push(t, EventKind::Deadline);
+        }
+        let mut n = 0u64;
+        while let Some(ev) = q.pop() {
+            n += ev.time;
+        }
+        std::hint::black_box(n);
+    });
+
+    // workload-plan compilation (poisson draws + family/episode draws)
+    let mut plan_sys = sys.clone();
+    plan_sys.workload.enabled = true;
+    plan_sys.workload.arrivals = "poisson".into();
+    plan_sys.workload.interarrival_rounds = 3.0;
+    plan_sys.workload.n_sessions = 64;
+    plan_sys.workload.episodes_min = 1;
+    plan_sys.workload.episodes_max = 3;
+    bench.run("workload/plan_poisson_64s", || {
+        std::hint::black_box(rapid::serve::workload::plan(&plan_sys).n_sessions());
+    });
+
+    // full dynamic fleets per arrival shape
+    for shape in ["poisson", "bursty"] {
+        let mut s = sys.clone();
+        s.cache.enabled = false;
+        s.workload.enabled = true;
+        s.workload.arrivals = shape.into();
+        s.workload.interarrival_rounds = 5.0;
+        let n = s.fleet.n_sessions.max(1);
+        bench.run(&format!("workload_fleet/{n}s/{shape}/cloud_only"), || {
+            let res = rapid::serve::Fleet::local(&s, TaskKind::PickPlace, PolicyKind::CloudOnly)
+                .run();
+            std::hint::black_box(res.total_steps());
+        });
+    }
 
     if let Some(path) = flags.get("--json").filter(|_| write_json) {
         match bench.save_json(path) {
@@ -493,7 +579,10 @@ fn cmd_fleet(rest: &[String]) -> i32 {
             task.name(),
             sys.fleet.episodes_per_session.max(1)
         ),
-        &["Session", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.", "Total Load"],
+        &[
+            "Session", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.",
+            "Total Load",
+        ],
     );
     for (i, row) in summary.per_session.iter().enumerate() {
         t.row(&row.table_cells(Some(&format!("session {i}"))));
@@ -503,21 +592,45 @@ fn cmd_fleet(rest: &[String]) -> i32 {
 
     let s = &res.stats;
     println!(
-        "rounds {}  batches {} (multi-session {})  mean batch {:.2}  max batch {}  max in-flight {}",
-        s.rounds, s.batches, s.multi_session_batches, res.mean_batch, s.max_batch_observed, s.max_inflight_observed
+        "rounds {}  batches {} (multi-session {})  mean batch {:.2}  max batch {}  \
+         max in-flight {}",
+        s.rounds,
+        s.batches,
+        s.multi_session_batches,
+        res.mean_batch,
+        s.max_batch_observed,
+        s.max_inflight_observed
     );
     println!(
         "flushes: full {} / deadline {} / drain {}   deferred offloads {}   endpoints {:?}",
-        s.full_flushes, s.deadline_flushes, s.drain_flushes, s.deferred_offloads, res.endpoint_dispatches
+        s.full_flushes,
+        s.deadline_flushes,
+        s.drain_flushes,
+        s.deferred_offloads,
+        res.endpoint_dispatches
     );
     if s.dropped_replies + s.endpoint_errors + s.degraded_requests + s.outage_rounds > 0 {
         println!(
-            "faults: dropped replies {}  endpoint errors {}  redispatches {}  degraded {}  outage rounds {}",
-            s.dropped_replies, s.endpoint_errors, s.failover_redispatches, s.degraded_requests, s.outage_rounds
+            "faults: dropped replies {}  endpoint errors {}  redispatches {}  degraded {}  \
+             outage rounds {}",
+            s.dropped_replies,
+            s.endpoint_errors,
+            s.failover_redispatches,
+            s.degraded_requests,
+            s.outage_rounds
         );
     }
     if sys.cache.enabled {
         println!("{}", res.cache.report());
+    }
+    if sys.workload.enabled {
+        println!(
+            "workload: {} arrivals  joined {}  peak active {}  last join @ round {}",
+            sys.workload.arrivals,
+            s.arrivals,
+            s.max_active_sessions,
+            res.sessions.iter().map(|x| x.arrival_round).max().unwrap_or(0)
+        );
     }
     if sys.models.enabled {
         for t in &res.families {
@@ -604,7 +717,10 @@ fn cmd_chaos(rest: &[String]) -> i32 {
         sys.fleet.endpoints.max(1)
     );
     if f.crash_end > f.crash_start {
-        println!("  crash    endpoint {} rounds [{}, {})", f.crash_endpoint, f.crash_start, f.crash_end);
+        println!(
+            "  crash    endpoint {} rounds [{}, {})",
+            f.crash_endpoint, f.crash_start, f.crash_end
+        );
     }
     if f.degrade_end > f.degrade_start {
         println!(
@@ -628,7 +744,10 @@ fn cmd_chaos(rest: &[String]) -> i32 {
     let wedged: Vec<&str> =
         rows.iter().filter(|r| !r.completed).map(|r| r.policy.name()).collect();
     if wedged.is_empty() {
-        println!("all policies completed every episode (zero wedged sessions); wall {:.2}s", t0.elapsed().as_secs_f64());
+        println!(
+            "all policies completed every episode (zero wedged sessions); wall {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
         0
     } else {
         eprintln!("WEDGED sessions under: {wedged:?}");
@@ -664,7 +783,8 @@ fn cmd_zoo(rest: &[String]) -> i32 {
         let prof = FamilyProfile::of(fam);
         let plan = rapid::policy::planner::plan(&prof, sys.link.bw_mbps, sys.link.rtt_ms);
         println!(
-            "  {:<14} chunk {}  edge x{:.2}  partitions {}  -> split #{}: edge {:.1} GB,              payload {:.0} KB, cloud {:.0} ms",
+            "  {:<14} chunk {}  edge x{:.2}  partitions {}  -> split #{}: edge {:.1} GB, \
+             payload {:.0} KB, cloud {:.0} ms",
             fam.name(),
             prof.chunk_len,
             prof.edge_ms_scale,
@@ -694,6 +814,73 @@ fn cmd_zoo(rest: &[String]) -> i32 {
         0
     } else {
         eprintln!("mixed-family batches: {mixed}; wedged: {wedged:?}");
+        1
+    }
+}
+
+/// `rapid workload`: the dynamic-arrivals demo — compile the active
+/// `[workload]` plan and print it (who joins when, with how many episodes
+/// and which family), then run the arrival-shape comparison table.
+fn cmd_workload(rest: &[String]) -> i32 {
+    let flags = Flags(rest);
+    let mut sys = load_sys(&flags);
+    if let Some(n) = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()) {
+        // pin both knobs: workload.n_sessions overrides even a trace's
+        // implied fleet size, so --sessions always means what it says
+        sys.fleet.n_sessions = n.max(1);
+        sys.workload.n_sessions = n.max(1);
+    }
+    if let Some(a) = flags.get("--arrivals") {
+        sys.workload.enabled = true;
+        sys.workload.arrivals = a.to_string();
+    }
+    if let Some(t) = flags.get("--trace") {
+        sys.workload.enabled = true;
+        sys.workload.arrivals = "trace".into();
+        sys.workload.trace = t.to_string();
+    }
+    if let Some(r) = flags.get("--interarrival").and_then(|s| s.parse::<f64>().ok()) {
+        sys.workload.enabled = true;
+        sys.workload.interarrival_rounds = r;
+    }
+    let task = flags
+        .get("--task")
+        .and_then(TaskKind::parse)
+        .unwrap_or(rapid::robot::TaskKind::PickPlace);
+
+    let plan = rapid::serve::workload::plan(&sys);
+    println!(
+        "workload: {} ({} arrivals over {} session(s), last join @ round {})",
+        if sys.workload.enabled { "enabled" } else { "disabled -> lockstep plan" },
+        plan.kind.name(),
+        plan.n_sessions(),
+        plan.last_arrival()
+    );
+    for (i, spec) in plan.specs.iter().enumerate() {
+        println!(
+            "  session {i:<3} joins @ round {:<6} episodes {}  family {}",
+            spec.arrival_round,
+            spec.episodes,
+            spec.family.name()
+        );
+    }
+
+    let t0 = std::time::Instant::now();
+    let (table, rows) = rapid::experiments::arrivals::run(&sys, task);
+    print!("{}", table.render());
+    let wedged: Vec<String> = rows
+        .iter()
+        .filter(|r| !r.completed)
+        .map(|r| format!("{}/{}", r.shape, r.policy.name()))
+        .collect();
+    if wedged.is_empty() {
+        println!(
+            "all arrival shapes completed every session; wall {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        0
+    } else {
+        eprintln!("WEDGED sessions under: {wedged:?}");
         1
     }
 }

@@ -21,7 +21,12 @@ impl CloudClient {
     }
 
     /// Round-trip an inference request.
-    pub fn infer(&mut self, obs: &[f32; D_VIS], proprio: &[f32; D_PROP], instr: usize) -> Result<ModelOut, ProtoError> {
+    pub fn infer(
+        &mut self,
+        obs: &[f32; D_VIS],
+        proprio: &[f32; D_PROP],
+        instr: usize,
+    ) -> Result<ModelOut, ProtoError> {
         let t0 = Instant::now();
         let req = InferRequest { instr: instr as u32, obs: *obs, proprio: *proprio };
         proto::write_all(&mut self.stream, &proto::encode_infer(&req))?;
@@ -112,7 +117,9 @@ impl CloudClient {
                 self.rtts_us.push(t0.elapsed().as_micros() as u64);
                 Ok(outs)
             }
-            other => Err(ProtoError::Malformed(format!("expected zoo batch result, got {other:?}"))),
+            other => {
+                Err(ProtoError::Malformed(format!("expected zoo batch result, got {other:?}")))
+            }
         }
     }
 
@@ -149,7 +156,12 @@ impl crate::vla::Backend for CloudClient {
         "cloud-tcp"
     }
 
-    fn infer(&mut self, obs: &[f32; D_VIS], proprio: &[f32; D_PROP], instr: usize) -> crate::vla::ModelOut {
+    fn infer(
+        &mut self,
+        obs: &[f32; D_VIS],
+        proprio: &[f32; D_PROP],
+        instr: usize,
+    ) -> crate::vla::ModelOut {
         CloudClient::infer(self, obs, proprio, instr).expect("cloud RPC failed")
     }
 
@@ -166,7 +178,8 @@ mod tests {
 
     #[test]
     fn end_to_end_tcp_roundtrip() {
-        let server = CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(1))).unwrap();
+        let server =
+            CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(1))).unwrap();
         let addr = server.addr.to_string();
         let mut client = CloudClient::connect(&addr).unwrap();
         assert!(client.ping().is_ok());
@@ -187,8 +200,10 @@ mod tests {
         // seeded backend) serves the same requests one at a time — the
         // pairwise-equal responses prove the batch path preserves request
         // order and never mixes sessions
-        let a = CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(42))).unwrap();
-        let b = CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(42))).unwrap();
+        let a =
+            CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(42))).unwrap();
+        let b =
+            CloudServer::start("127.0.0.1:0", 8, || Box::new(AnalyticBackend::cloud(42))).unwrap();
         let mut ca = CloudClient::connect(&a.addr.to_string()).unwrap();
         let mut cb = CloudClient::connect(&b.addr.to_string()).unwrap();
         let items: Vec<(u32, InferRequest)> = (0..5u32)
@@ -242,7 +257,8 @@ mod tests {
 
     #[test]
     fn multiple_clients_served() {
-        let server = CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(2))).unwrap();
+        let server =
+            CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(2))).unwrap();
         let addr = server.addr.to_string();
         let handles: Vec<_> = (0..4)
             .map(|i| {

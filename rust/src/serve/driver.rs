@@ -163,6 +163,31 @@ impl EpisodeState {
         self.link.set_profile(profile);
     }
 
+    /// Fleet **arrival hook**: a session joining the fleet mid-run (an
+    /// open-loop workload arrival, or an episode rollover inside a fault
+    /// window) adopts the link condition — and, for zoo sessions, the
+    /// partition plan — in force at its arrival round. A fresh
+    /// `EpisodeState` defaults to the nominal link and the nominal-link
+    /// plan, which would be wrong inside a degrade window. `None`/`None`
+    /// leaves the state bit-identical to a run that never called this
+    /// (a `None` plan keeps the plan installed at construction).
+    pub fn on_fleet_arrival(&mut self, profile: Option<LinkProfile>, plan: Option<FamilyPlan>) {
+        self.link.set_profile(profile);
+        if plan.is_some() {
+            self.family_plan = plan;
+        }
+    }
+
+    /// Fleet **departure hook**: seal and return the final episode's
+    /// metrics as the session leaves the fleet for good. Equivalent to
+    /// [`EpisodeState::seal_metrics`] plus releasing the session's link
+    /// override (the departed session no longer tracks fault windows).
+    pub fn on_fleet_departure(&mut self, sys: &SystemConfig) -> EpisodeMetrics {
+        let metrics = self.seal_metrics(sys);
+        self.link.set_profile(None);
+        metrics
+    }
+
     /// True once every control step of the episode has executed.
     pub fn is_done(&self) -> bool {
         !self.awaiting && self.sim.done()
@@ -303,8 +328,11 @@ impl EpisodeState {
                     // on top would mix two incompatible split models); all
                     // other strategies serve the planner's partition point:
                     // edge prefix compute, then the chosen payload
-                    let zoo_split =
-                        if self.strategy.needs_entropy() { None } else { self.family_plan.as_ref() };
+                    let zoo_split = if self.strategy.needs_entropy() {
+                        None
+                    } else {
+                        self.family_plan.as_ref()
+                    };
                     let t_prefix = zoo_split.map_or(0.0, |p| p.edge_prefix_ms);
                     if t_prefix > 0.0 {
                         self.clock.advance(t_prefix);
@@ -444,8 +472,11 @@ impl EpisodeState {
         }
         let full_grade = gb >= 0.5 * sys.total_model_gb;
         let t0 = std::time::Instant::now();
-        let out =
-            if full_grade { cloud.infer(obs, proprio, instr) } else { edge.infer(obs, proprio, instr) };
+        let out = if full_grade {
+            cloud.infer(obs, proprio, instr)
+        } else {
+            edge.infer(obs, proprio, instr)
+        };
         self.metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
         let t = self.sim.step_index();
         self.refill_queue(&out, ChunkSource::Edge, t);
@@ -486,7 +517,8 @@ impl EpisodeState {
             tl.record("clarity", ts, self.renderer.last_clarity);
             tl.record("offload", ts, if route == Route::CloudOffload { 1.0 } else { 0.0 });
             tl.record("refill", ts, if route == Route::EdgeRefill { 1.0 } else { 0.0 });
-            tl.record("critical", ts, if self.sim.traj.phase_at(t).is_critical() { 1.0 } else { 0.0 });
+            let crit = if self.sim.traj.phase_at(t).is_critical() { 1.0 } else { 0.0 };
+            tl.record("critical", ts, crit);
             tl.record(
                 "phase",
                 ts,
@@ -689,7 +721,8 @@ mod tests {
         let mut edge = AnalyticBackend::edge(2);
         let mut cloud = AnalyticBackend::cloud(2);
         let out = run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 2, true);
-        assert!(out.metrics.trigger_precision() > 0.5, "precision {}", out.metrics.trigger_precision());
+        let precision = out.metrics.trigger_precision();
+        assert!(precision > 0.5, "precision {precision}");
     }
 
     #[test]
@@ -824,7 +857,9 @@ mod tests {
         let mut st = EpisodeState::new(&sys, TaskKind::PickPlace, strategy, 5, false);
         let mut round = 0u64;
         loop {
-            match st.poll_with_cache(&sys, &mut edge, &mut cloud, true, Some(&mut store), round, 0) {
+            let ev =
+                st.poll_with_cache(&sys, &mut edge, &mut cloud, true, Some(&mut store), round, 0);
+            match ev {
                 StepEvent::Stepped => {}
                 StepEvent::Done => break,
                 StepEvent::NeedCloud(req) => {

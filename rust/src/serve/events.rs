@@ -1,0 +1,232 @@
+//! The fleet scheduler's virtual-time event queue.
+//!
+//! A deterministic binary-heap priority queue over discrete virtual time
+//! (scheduler rounds). The fleet's former lockstep round loop is now a
+//! stream of typed events popped from this queue:
+//!
+//! * [`EventKind::FaultEdge`] — a round begins: fault-window edges are
+//!   applied (time-varying link profiles, outage windows, zoo replans).
+//! * [`EventKind::Arrival`] — a session joins the fleet (open-loop
+//!   workload arrivals; the lockstep fleet arrives everyone at t = 0).
+//! * [`EventKind::Ready`] — a session may advance one control step. A
+//!   *reply-arrival* (a suspended session resumed by a batch flush)
+//!   re-enters the schedule as the `Ready` event the flush pushes for it.
+//! * [`EventKind::Deadline`] — a round ends: batch-deadline / drain
+//!   bookkeeping runs, and the next round is scheduled (or the run ends).
+//!
+//! # Ordering contract (the tie-break the whole serve layer leans on)
+//!
+//! Events pop in ascending `(time, class, seq, push order)`:
+//!
+//! 1. **time** — virtual scheduler round; the queue is time-monotone (a
+//!    popped event's time never decreases, pinned by proptest #22).
+//! 2. **class** — within a round, `FaultEdge < Arrival < Ready <
+//!    Deadline`: fault edges apply before anyone steps, arrivals join
+//!    before the round's polls, and deadline bookkeeping sees the whole
+//!    round.
+//! 3. **seq** — within a class, the session index. `Ready` events pop in
+//!    ascending session order, which is exactly the lockstep `for i in
+//!    0..n` iteration order — the invariant that makes the all-at-t0
+//!    degenerate case **bit-identical** to the historical round loop.
+//! 4. **push order** — a monotone counter breaks exact `(time, class,
+//!    seq)` ties FIFO, so even adversarial duplicate pushes (the property
+//!    suite generates them) pop in one deterministic order.
+//!
+//! The queue is pure data structure: it draws no randomness and never
+//! inspects wall clocks, so a fleet run's event schedule replays exactly
+//! under a shared seed.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What a scheduled event does when popped. See the module docs for the
+/// within-round ordering semantics of each kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Round start: apply the fault schedule's edges for this round.
+    FaultEdge,
+    /// Session `i` joins the fleet.
+    Arrival(usize),
+    /// Session `i` may advance one control step (also the reply-arrival
+    /// path: a flush resumes a suspended session by pushing its `Ready`).
+    Ready(usize),
+    /// Round end: batch-deadline / drain bookkeeping.
+    Deadline,
+}
+
+impl EventKind {
+    /// Within-round class rank (see module docs).
+    pub fn class(&self) -> u8 {
+        match self {
+            EventKind::FaultEdge => 0,
+            EventKind::Arrival(_) => 1,
+            EventKind::Ready(_) => 2,
+            EventKind::Deadline => 3,
+        }
+    }
+
+    /// Within-class rank: the session index for session-bound events.
+    pub fn seq(&self) -> u64 {
+        match self {
+            EventKind::FaultEdge | EventKind::Deadline => 0,
+            EventKind::Arrival(i) | EventKind::Ready(i) => *i as u64,
+        }
+    }
+}
+
+/// One scheduled event, stamped with its virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: u64,
+    pub kind: EventKind,
+    /// FIFO tie-break among exact `(time, class, seq)` duplicates.
+    order: u64,
+}
+
+impl Event {
+    /// The full ordering key (exposed so property tests can check the
+    /// contract without re-deriving it).
+    pub fn key(&self) -> (u64, u8, u64, u64) {
+        (self.time, self.kind.class(), self.kind.seq(), self.order)
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse so the smallest key pops first.
+        other.key().cmp(&self.key())
+    }
+}
+
+/// Deterministic virtual-time event queue (min-queue on [`Event::key`]).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    pushed: u64,
+    /// Largest time popped so far (debug guard for time-monotonicity).
+    last_time: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` at virtual time `time`.
+    pub fn push(&mut self, time: u64, kind: EventKind) {
+        let order = self.pushed;
+        self.pushed += 1;
+        self.heap.push(Event { time, kind, order });
+    }
+
+    /// Pop the earliest event under the `(time, class, seq, push order)`
+    /// contract.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.last_time, "event queue went back in time");
+        self.last_time = ev.time;
+        Some(ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5, EventKind::Ready(0));
+        q.push(1, EventKind::Ready(1));
+        q.push(3, EventKind::FaultEdge);
+        let times: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn class_orders_within_a_round() {
+        let mut q = EventQueue::new();
+        q.push(2, EventKind::Deadline);
+        q.push(2, EventKind::Ready(0));
+        q.push(2, EventKind::FaultEdge);
+        q.push(2, EventKind::Arrival(0));
+        let kinds: Vec<EventKind> = std::iter::from_fn(|| q.pop()).map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::FaultEdge,
+                EventKind::Arrival(0),
+                EventKind::Ready(0),
+                EventKind::Deadline
+            ]
+        );
+    }
+
+    #[test]
+    fn ready_events_pop_in_session_order() {
+        // push out of order; pops must follow the lockstep iteration order
+        let mut q = EventQueue::new();
+        for i in [4usize, 1, 3, 0, 2] {
+            q.push(7, EventKind::Ready(i));
+        }
+        let sessions: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::Ready(i) => i,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(sessions, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn exact_duplicates_pop_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1, EventKind::Ready(2));
+        q.push(1, EventKind::Ready(2));
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        assert!(a.key() < b.key(), "duplicate keys must break ties by push order");
+    }
+
+    #[test]
+    fn mixed_schedule_is_fully_deterministic() {
+        let build = || {
+            let mut q = EventQueue::new();
+            for (t, k) in [
+                (3, EventKind::Ready(1)),
+                (0, EventKind::FaultEdge),
+                (3, EventKind::Deadline),
+                (0, EventKind::Arrival(0)),
+                (3, EventKind::Ready(0)),
+                (1, EventKind::Deadline),
+            ] {
+                q.push(t, k);
+            }
+            std::iter::from_fn(move || q.pop()).map(|e| (e.time, e.kind)).collect::<Vec<_>>()
+        };
+        assert_eq!(build(), build());
+        assert_eq!(build().first(), Some(&(0, EventKind::FaultEdge)));
+    }
+}

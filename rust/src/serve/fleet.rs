@@ -1,20 +1,32 @@
-//! Fleet-scale serving: a deterministic multi-session episode scheduler
-//! with **cross-session cloud batching**.
+//! Fleet-scale serving: a deterministic **event-driven virtual-time**
+//! multi-session scheduler with cross-session cloud batching.
 //!
-//! The scheduler drives N concurrent robot sessions — each with its own
-//! partitioning strategy (its own `RapidDispatcher` state), simulator,
-//! renderer, link model and virtual clock — in lockstep *rounds*: every
-//! active session advances one control step per round. A session whose
-//! step needs the cloud suspends ([`StepEvent::NeedCloud`]) and its
-//! prepared request lands in a shared [`Batcher`]; the scheduler coalesces
-//! offloads from *different* sessions into one wire batch, dispatches the
-//! batch to a cloud endpoint picked by the least-loaded [`Router`], and
-//! splits the responses back per session by session id.
+//! The scheduler drives N robot sessions — each with its own partitioning
+//! strategy (its own `RapidDispatcher` state), simulator, renderer, link
+//! model and virtual clock — over a discrete virtual-time axis of
+//! scheduler *rounds*, processed as typed events popped from the
+//! [`EventQueue`](super::events::EventQueue) (see `serve::events` for the
+//! `(time, class, seq)` ordering contract):
+//!
+//! * **fault edge** — a round begins: the fault schedule's link windows,
+//!   outage edges and zoo replans apply;
+//! * **arrival** — a session joins the fleet (the `[workload]` engine's
+//!   open-loop arrival plan; the lockstep fleet arrives everyone at 0);
+//! * **session ready** — a session advances one control step. A step that
+//!   needs the cloud suspends ([`StepEvent::NeedCloud`]) and its prepared
+//!   request lands in a shared [`Batcher`]; the scheduler coalesces
+//!   offloads from *different* sessions into one wire batch, dispatches
+//!   to a cloud endpoint picked by the least-loaded [`Router`], and a
+//!   flush resumes each suspended session by scheduling its
+//!   *reply-arrival* ready event;
+//! * **batch deadline** — a round ends: deadline/drain flush bookkeeping
+//!   runs and the next round is scheduled (or the run terminates once
+//!   every arrived session departed and no arrival is pending).
 //!
 //! Flush policy (in priority order):
 //! 1. **full** — the batch reached `fleet.max_batch`;
-//! 2. **drain** — no session can advance (everyone alive is suspended), so
-//!    waiting longer cannot grow the batch;
+//! 2. **drain** — no session advanced this round (everyone alive is
+//!    suspended), so waiting longer cannot grow the batch;
 //! 3. **deadline** — the oldest pending request has waited
 //!    `fleet.batch_deadline_us` of virtual control time.
 //!
@@ -23,24 +35,40 @@
 //! to its cached chunk / edge slice for that step (the per-session chunk
 //! queue keeps the robot fed; see `EpisodeState::poll`).
 //!
-//! Everything is driven by seeded PRNGs and a fixed session order, so a
-//! fleet run is exactly reproducible — and, because every session owns its
-//! model backends and PRNG streams, a fleet session's episode metrics are
-//! *identical* to a single-session `run_episode` of the same seed.
+//! # Lockstep degeneracy (the load-bearing invariant)
+//!
+//! With `[workload]` disabled — or enabled in the all-at-t0 fixed shape —
+//! every session's ready event sits at every round, ready events pop in
+//! session-index order, and the event schedule replays the historical
+//! lockstep `for i in 0..n` round loop **bit-identically**: same PRNG
+//! streams, same per-episode trajectories, same flush causes, same fault
+//! draws (pinned by `rust/tests/workload_arrivals.rs`). Dynamic arrivals
+//! are strictly additive: sessions join at their planned round and leave
+//! when their episode budget is spent, while everyone already present
+//! keeps stepping.
+//!
+//! Everything is driven by seeded PRNGs and the deterministic event
+//! order, so a fleet run is exactly reproducible — and, because every
+//! session owns its model backends and PRNG streams, a fleet session's
+//! episode metrics are *identical* to a single-session `run_episode` of
+//! the same seed.
 
 use super::batcher::Batcher;
 use super::driver::{CloudRequest, EpisodeState, StepEvent};
+use super::events::{EventKind, EventQueue};
 use super::router::Router;
+use super::workload::{self, WorkloadPlan};
 use crate::cache::{CacheStats, ReuseStore};
 use crate::config::{FleetConfig, PolicyKind, SystemConfig};
 use crate::faults::FaultEngine;
 use crate::metrics::{summarize_fleet, EpisodeMetrics, FleetSummary};
+use crate::net::link::LinkProfile;
 use crate::net::proto::InferRequest;
 use crate::net::CloudClient;
-use crate::policy::planner;
+use crate::policy::{planner, FamilyPlan};
 use crate::robot::TaskKind;
 use crate::vla::profile::{FamilyProfile, ModelFamily, N_FAMILIES};
-use crate::vla::{assign_families, AnalyticBackend, Backend, ZooBackend};
+use crate::vla::{AnalyticBackend, Backend, ZooBackend};
 use std::time::Instant;
 
 /// Stable per-(session, episode) seed derivation. Session 0 / episode 0
@@ -105,6 +133,13 @@ pub struct FleetStats {
     /// construction; counted (not asserted) so the property suite can pin
     /// it across random interleavings.
     pub mixed_family_batches: u64,
+    // --- workload engine (lockstep values with [workload] disabled) ---
+    /// Sessions that joined the fleet (one arrival event each).
+    pub arrivals: u64,
+    /// High-water mark of simultaneously active (arrived, not yet
+    /// departed) sessions — n_sessions for lockstep shapes, lower under
+    /// staggered arrivals.
+    pub max_active_sessions: usize,
 }
 
 /// Per-session outcome: every episode's metrics, in order.
@@ -115,6 +150,10 @@ pub struct SessionReport {
     /// Model family this session served for its whole run
     /// ([`ModelFamily::Surrogate`] with `[models]` disabled).
     pub family: ModelFamily,
+    /// Scheduler round the session joined the fleet (0 in lockstep runs).
+    pub arrival_round: u64,
+    /// Scheduler round the session departed (sealed its last episode).
+    pub departure_round: u64,
     pub episodes: Vec<EpisodeMetrics>,
 }
 
@@ -182,6 +221,15 @@ struct SessionSlot {
     cloud: Box<dyn Backend>,
     /// Zoo family (fixed for the session's whole run).
     family: ModelFamily,
+    /// Scheduler round the session joins the fleet.
+    arrival: u64,
+    /// Set once the arrival event has been processed.
+    arrived: bool,
+    /// Episodes this session runs before departing (the workload plan's
+    /// per-session draw; `fleet.episodes_per_session` in lockstep runs).
+    episodes_target: usize,
+    /// Round the session sealed its last episode.
+    departure: u64,
     episode_idx: usize,
     completed: Vec<EpisodeMetrics>,
     finished: bool,
@@ -230,6 +278,19 @@ pub struct Fleet {
     family_batches: [u64; N_FAMILIES],
     family_requests: [u64; N_FAMILIES],
     endpoint_family_dispatches: Vec<[u64; N_FAMILIES]>,
+    // --- event-loop round state ---
+    /// Did any session step (or suspend on the cloud) this round? Reset at
+    /// every fault-edge event; read by the round's deadline event (the
+    /// drain-flush condition).
+    progressed: bool,
+    /// Uplink outage in force this round (blocks offload admission and
+    /// pending-batch dispatch).
+    round_outage: bool,
+    /// Arrival events not yet processed (termination guard: the run may
+    /// not end while a session is still due).
+    pending_arrivals: usize,
+    /// Currently active (arrived, not departed) sessions.
+    active_sessions: usize,
 }
 
 impl Fleet {
@@ -283,19 +344,20 @@ impl Fleet {
             CloudMode::Local => cfg.endpoints.max(1),
             CloudMode::Remote(clients) => clients.len(),
         };
-        // model zoo: with [models] enabled, sessions are assigned families
-        // in balanced contiguous blocks; disabled, the list stays empty and
-        // every session serves the surrogate on the original backends
         let zoo_enabled = sys.models.enabled;
-        let fams = if zoo_enabled { sys.models.family_list() } else { Vec::new() };
-        let n = cfg.n_sessions.max(1);
-        // at least one session: an empty fleet has no meaningful result
-        // (and summaries reject it), so clamp here for every entry point
-        let slots = (0..n)
-            .map(|i| {
+        // the workload engine compiles the session plan: arrivals, episode
+        // counts and families. Disabled, it returns the lockstep plan
+        // (everyone at round 0, `[fleet]` episode count, block families) —
+        // exactly the shape the pre-workload scheduler hard-coded.
+        let plan: WorkloadPlan = workload::plan(sys);
+        let n = plan.n_sessions();
+        let slots: Vec<SessionSlot> = plan
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
                 let seed = fleet_seed(base_seed, i, 0);
-                let family = assign_families(&fams, n, i);
-                Fleet::make_slot(sys, task, kind, family, zoo_enabled, seed, 0)
+                Fleet::make_slot(sys, task, kind, zoo_enabled, seed, 0, spec)
             })
             .collect();
         // round duration in µs of virtual control time
@@ -326,22 +388,28 @@ impl Fleet {
             family_batches: [0; N_FAMILIES],
             family_requests: [0; N_FAMILIES],
             endpoint_family_dispatches: vec![[0; N_FAMILIES]; endpoints],
+            progressed: false,
+            round_outage: false,
+            pending_arrivals: n,
+            active_sessions: 0,
             cfg,
         }
     }
 
-    /// Build one session: its episode state (with the planner's partition
-    /// choice installed under the nominal link when the zoo is on) and its
-    /// family backends. With the zoo off this is exactly the PR 3 slot.
+    /// Build one session from its workload spec: its episode state (with
+    /// the planner's partition choice installed under the nominal link
+    /// when the zoo is on) and its family backends. With the zoo off this
+    /// is exactly the PR 3 slot.
     fn make_slot(
         sys: &SystemConfig,
         task: TaskKind,
         kind: PolicyKind,
-        family: ModelFamily,
         zoo: bool,
         seed: u64,
         episode_idx: usize,
+        spec: &workload::SessionSpec,
     ) -> SessionSlot {
+        let family = spec.family;
         let mut state = EpisodeState::new(sys, task, crate::policy::build(kind, sys), seed, false);
         let (edge, cloud): (Box<dyn Backend>, Box<dyn Backend>) = if zoo {
             let plan = planner::plan(&FamilyProfile::of(family), sys.link.bw_mbps, sys.link.rtt_ms);
@@ -355,6 +423,10 @@ impl Fleet {
             edge,
             cloud,
             family,
+            arrival: spec.arrival_round,
+            arrived: false,
+            episodes_target: spec.episodes.max(1),
+            departure: 0,
             episode_idx,
             completed: Vec::new(),
             finished: false,
@@ -378,36 +450,56 @@ impl Fleet {
         (self.sys.link.bw_mbps, self.sys.link.rtt_ms)
     }
 
-    /// Episodes each session will run.
-    fn episodes_per_session(&self) -> usize {
-        self.cfg.episodes_per_session.max(1)
+    /// The context a session must adopt when it joins the fleet mid-run —
+    /// or rolls an episode over — under an active fault schedule: the
+    /// link profile in force this round and, for zoo sessions, the
+    /// partition plan under the effective link. One definition for both
+    /// call sites so the arrival and rollover paths can never drift.
+    fn arrival_context(&self, family: ModelFamily) -> (Option<LinkProfile>, Option<FamilyPlan>) {
+        let plan = if self.zoo_enabled {
+            let (bw, rtt) = self.effective_link();
+            Some(planner::plan(&FamilyProfile::of(family), bw, rtt))
+        } else {
+            None
+        };
+        (self.engine.link_profile(self.cur_round), plan)
     }
 
     /// Seal the just-finished episode of slot `i`; start its next episode
-    /// if any remain. Returns true when a fresh episode started.
+    /// if any remain. Returns true when a fresh episode started; false
+    /// when the session departed the fleet.
     fn advance_episode(&mut self, i: usize) -> bool {
+        let next = self.slots[i].episode_idx + 1;
+        if next >= self.slots[i].episodes_target {
+            // departure hook: seal the final episode and leave the fleet
+            let metrics = self.slots[i].state.on_fleet_departure(&self.sys);
+            self.stats.deferred_offloads += metrics.deferred_offloads;
+            self.slots[i].completed.push(metrics);
+            self.slots[i].finished = true;
+            self.slots[i].departure = self.cur_round;
+            self.active_sessions -= 1;
+            return false;
+        }
         let metrics = self.slots[i].state.seal_metrics(&self.sys);
         self.stats.deferred_offloads += metrics.deferred_offloads;
         self.slots[i].completed.push(metrics);
-        let next = self.slots[i].episode_idx + 1;
-        if next >= self.episodes_per_session() {
-            self.slots[i].finished = true;
-            return false;
-        }
         let seed = fleet_seed(self.base_seed, i, next);
         let family = self.slots[i].family;
+        let spec = workload::SessionSpec {
+            arrival_round: self.slots[i].arrival,
+            episodes: self.slots[i].episodes_target,
+            family,
+        };
         let fresh =
-            Fleet::make_slot(&self.sys, self.task, self.kind, family, self.zoo_enabled, seed, next);
+            Fleet::make_slot(&self.sys, self.task, self.kind, self.zoo_enabled, seed, next, &spec);
         let SessionSlot { mut state, edge, cloud, .. } = fresh;
-        // the fresh episode starts mid-round: carry the link condition in
-        // force this round (a new EpisodeState defaults to no profile and
-        // a zoo session's plan defaults to the nominal link)
+        // the fresh episode starts mid-round: the arrival hook adopts the
+        // link condition in force this round (a new EpisodeState defaults
+        // to no profile and a zoo session's plan defaults to the nominal
+        // link)
         if !self.engine.is_empty() {
-            state.set_link_profile(self.engine.link_profile(self.cur_round));
-            if self.zoo_enabled {
-                let (bw, rtt) = self.effective_link();
-                state.set_family_plan(Some(planner::plan(&FamilyProfile::of(family), bw, rtt)));
-            }
+            let (profile, plan) = self.arrival_context(family);
+            state.on_fleet_arrival(profile, plan);
         }
         let slot = &mut self.slots[i];
         slot.episode_idx = next;
@@ -418,102 +510,186 @@ impl Fleet {
     }
 
     /// Run every session to completion; consumes the scheduler.
+    ///
+    /// Seeds the event queue with one arrival per session plus the first
+    /// fault-edge, then processes events until the batch-deadline event
+    /// observes a drained fleet (no active session, no pending arrival,
+    /// no pending batch).
     pub fn run(mut self) -> FleetResult {
-        loop {
-            self.cur_round = self.stats.rounds;
-            self.stats.rounds += 1;
-            // fault schedule for this round: time-varying link conditions
-            // apply to every session (they share the physical network);
-            // an uplink outage blocks offload admission entirely
-            let mut outage = false;
-            if !self.engine.is_empty() {
-                let profile = self.engine.link_profile(self.cur_round);
-                for slot in &mut self.slots {
-                    slot.state.set_link_profile(profile);
-                }
-                // the planner is a pure function of (family, link), so
-                // replans are deterministic and only needed when the
-                // effective link actually changes: a degrade window moves
-                // every zoo session to a deeper split, and the next round
-                // under the same condition reuses the installed plans
-                if self.zoo_enabled {
-                    let (bw, rtt) = self.effective_link();
-                    if self.planned_link != Some((bw, rtt)) {
-                        self.planned_link = Some((bw, rtt));
-                        let plans: Vec<_> = ModelFamily::ALL
-                            .iter()
-                            .map(|&f| planner::plan(&FamilyProfile::of(f), bw, rtt))
-                            .collect();
-                        for slot in &mut self.slots {
-                            let plan = plans[slot.family.id() as usize].clone();
-                            slot.state.set_family_plan(Some(plan));
-                        }
+        let mut queue = EventQueue::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            queue.push(slot.arrival, EventKind::Arrival(i));
+        }
+        queue.push(0, EventKind::FaultEdge);
+        while let Some(ev) = queue.pop() {
+            match ev.kind {
+                EventKind::FaultEdge => self.on_fault_edge(ev.time, &mut queue),
+                EventKind::Arrival(i) => self.on_session_arrival(i, ev.time, &mut queue),
+                EventKind::Ready(i) => self.on_session_ready(i, ev.time, &mut queue),
+                EventKind::Deadline => {
+                    if !self.on_batch_deadline(ev.time, &mut queue) {
+                        break;
                     }
-                }
-                outage = self.engine.link_out(self.cur_round);
-                if outage {
-                    self.stats.outage_rounds += 1;
-                }
-            }
-            let mut progressed = false;
-            for i in 0..self.slots.len() {
-                if self.slots[i].finished || self.slots[i].state.is_awaiting_cloud() {
-                    continue;
-                }
-                if self.slots[i].state.is_done() && !self.advance_episode(i) {
-                    continue;
-                }
-                let admit = !outage && self.batcher.len() < self.cfg.max_inflight.max(1);
-                let round = self.cur_round;
-                // the probe runs inside poll, before the admit gate: cache
-                // hits keep serving through outage/backpressure windows
-                let store = self.store.as_mut();
-                let slot = &mut self.slots[i];
-                let ev = slot.state.poll_with_cache(
-                    &self.sys,
-                    slot.edge.as_mut(),
-                    slot.cloud.as_mut(),
-                    admit,
-                    store,
-                    round,
-                    i,
-                );
-                match ev {
-                    StepEvent::Stepped => progressed = true,
-                    StepEvent::Done => {}
-                    StepEvent::NeedCloud(req) => {
-                        progressed = true;
-                        // family-keyed batching: a request of a different
-                        // family seals the pending batch first, so no wire
-                        // batch ever mixes frame layouts
-                        if !self.batcher.is_empty() && self.pending_family != req.family {
-                            self.flush(FlushCause::Family);
-                        }
-                        self.pending_family = req.family;
-                        self.batcher.push(FleetRequest { session: i, req });
-                        self.stats.max_inflight_observed =
-                            self.stats.max_inflight_observed.max(self.batcher.len());
-                        if self.batcher.is_full() {
-                            self.flush(FlushCause::Full);
-                        }
-                    }
-                }
-            }
-            if self.batcher.is_empty() {
-                if self.slots.iter().all(|s| s.finished) {
-                    break;
-                }
-            } else {
-                self.pending_age += 1;
-                if !progressed {
-                    // everyone alive is suspended: waiting cannot grow the batch
-                    self.flush(FlushCause::Drain);
-                } else if self.pending_age > self.deadline_rounds {
-                    self.flush(FlushCause::Deadline);
                 }
             }
         }
+        self.harvest()
+    }
 
+    /// Round start: apply the fault schedule's edges for this round
+    /// (time-varying link conditions apply to every arrived session —
+    /// they share the physical network; an uplink outage blocks offload
+    /// admission entirely), then schedule the round's deadline event.
+    fn on_fault_edge(&mut self, t: u64, queue: &mut EventQueue) {
+        self.cur_round = t;
+        self.stats.rounds += 1;
+        self.progressed = false;
+        self.round_outage = false;
+        if !self.engine.is_empty() {
+            let profile = self.engine.link_profile(self.cur_round);
+            // departed sessions released their link override on the
+            // departure hook and must not have it re-armed
+            for slot in self.slots.iter_mut().filter(|s| s.arrived && !s.finished) {
+                slot.state.set_link_profile(profile);
+            }
+            // the planner is a pure function of (family, link), so replans
+            // are deterministic and only needed when the effective link
+            // actually changes: a degrade window moves every zoo session
+            // to a deeper split, and the next round under the same
+            // condition reuses the installed plans
+            if self.zoo_enabled {
+                let (bw, rtt) = self.effective_link();
+                if self.planned_link != Some((bw, rtt)) {
+                    self.planned_link = Some((bw, rtt));
+                    let plans: Vec<_> = ModelFamily::ALL
+                        .iter()
+                        .map(|&f| planner::plan(&FamilyProfile::of(f), bw, rtt))
+                        .collect();
+                    for slot in self.slots.iter_mut().filter(|s| s.arrived && !s.finished) {
+                        let plan = plans[slot.family.id() as usize].clone();
+                        slot.state.set_family_plan(Some(plan));
+                    }
+                }
+            }
+            self.round_outage = self.engine.link_out(self.cur_round);
+            if self.round_outage {
+                self.stats.outage_rounds += 1;
+            }
+        }
+        queue.push(t, EventKind::Deadline);
+    }
+
+    /// A session joins the fleet: adopt the link condition in force at
+    /// its arrival round and schedule its first ready event (same round;
+    /// ready events order by session index behind any earlier arrival).
+    fn on_session_arrival(&mut self, i: usize, t: u64, queue: &mut EventQueue) {
+        self.slots[i].arrived = true;
+        self.pending_arrivals -= 1;
+        self.stats.arrivals += 1;
+        self.active_sessions += 1;
+        self.stats.max_active_sessions = self.stats.max_active_sessions.max(self.active_sessions);
+        if !self.engine.is_empty() {
+            let (profile, plan) = self.arrival_context(self.slots[i].family);
+            self.slots[i].state.on_fleet_arrival(profile, plan);
+        }
+        queue.push(t, EventKind::Ready(i));
+    }
+
+    /// A session advances one control step (the body of the historical
+    /// lockstep `for i in 0..n` iteration, one event per session).
+    fn on_session_ready(&mut self, i: usize, t: u64, queue: &mut EventQueue) {
+        if self.slots[i].finished || self.slots[i].state.is_awaiting_cloud() {
+            return;
+        }
+        if self.slots[i].state.is_done() && !self.advance_episode(i) {
+            return;
+        }
+        let admit = !self.round_outage && self.batcher.len() < self.cfg.max_inflight.max(1);
+        let round = self.cur_round;
+        // the probe runs inside poll, before the admit gate: cache hits
+        // keep serving through outage/backpressure windows
+        let store = self.store.as_mut();
+        let slot = &mut self.slots[i];
+        let ev = slot.state.poll_with_cache(
+            &self.sys,
+            slot.edge.as_mut(),
+            slot.cloud.as_mut(),
+            admit,
+            store,
+            round,
+            i,
+        );
+        match ev {
+            StepEvent::Stepped => {
+                self.progressed = true;
+                queue.push(t + 1, EventKind::Ready(i));
+            }
+            StepEvent::Done => {
+                // episode boundary observed mid-poll: the next ready event
+                // advances the episode (or departs the session)
+                queue.push(t + 1, EventKind::Ready(i));
+            }
+            StepEvent::NeedCloud(req) => {
+                self.progressed = true;
+                // family-keyed batching: a request of a different family
+                // seals the pending batch first, so no wire batch ever
+                // mixes frame layouts
+                if !self.batcher.is_empty() && self.pending_family != req.family {
+                    self.flush(FlushCause::Family, queue, Some(i));
+                }
+                self.pending_family = req.family;
+                self.batcher.push(FleetRequest { session: i, req });
+                self.stats.max_inflight_observed =
+                    self.stats.max_inflight_observed.max(self.batcher.len());
+                if self.batcher.is_full() {
+                    self.flush(FlushCause::Full, queue, Some(i));
+                }
+                // no self-reschedule: the flush that serves this request
+                // pushes the session's reply-arrival ready event
+            }
+        }
+    }
+
+    /// Round end: batch-deadline/drain bookkeeping, then either schedule
+    /// the next round or terminate (returns false) once the fleet is
+    /// drained — no pending batch, no pending arrival, everyone departed.
+    fn on_batch_deadline(&mut self, t: u64, queue: &mut EventQueue) -> bool {
+        if self.batcher.is_empty() {
+            if self.pending_arrivals == 0 && self.slots.iter().all(|s| s.finished) {
+                return false;
+            }
+        } else {
+            self.pending_age += 1;
+            if !self.progressed {
+                // everyone alive is suspended: waiting cannot grow the batch
+                self.flush(FlushCause::Drain, queue, None);
+            } else if self.pending_age > self.deadline_rounds {
+                self.flush(FlushCause::Deadline, queue, None);
+            }
+        }
+        // dead air — nobody active, nothing pending, stragglers still due:
+        // jump the clock straight to the next arrival instead of ticking
+        // empty rounds (a fat-fingered trace round must not become an
+        // unbounded spin). Un-arrived slots always sit strictly in the
+        // future here (their arrival event would have popped before this
+        // deadline otherwise), so the jump never goes backwards.
+        let next = if self.active_sessions == 0 && self.batcher.is_empty() {
+            self.slots
+                .iter()
+                .filter(|s| !s.arrived)
+                .map(|s| s.arrival)
+                .min()
+                .unwrap_or(t + 1)
+                .max(t + 1)
+        } else {
+            t + 1
+        };
+        queue.push(next, EventKind::FaultEdge);
+        true
+    }
+
+    /// Final rollup once the event loop terminates.
+    fn harvest(self) -> FleetResult {
         let mean_batch = self.batcher.mean_batch();
         let endpoint_dispatches = self.router.totals().to_vec();
         let endpoint_family_dispatches = self.endpoint_family_dispatches.clone();
@@ -521,14 +697,17 @@ impl Fleet {
         let cache = self.store.as_ref().map(|s| *s.stats()).unwrap_or_default();
         let family_batches = self.family_batches;
         let family_requests = self.family_requests;
+        let base_seed = self.base_seed;
         let sessions: Vec<SessionReport> = self
             .slots
             .into_iter()
             .enumerate()
             .map(|(i, s)| SessionReport {
                 session: i,
-                seed0: fleet_seed(self.base_seed, i, 0),
+                seed0: fleet_seed(base_seed, i, 0),
                 family: s.family,
+                arrival_round: s.arrival,
+                departure_round: s.departure,
                 episodes: s.completed,
             })
             .collect();
@@ -573,7 +752,15 @@ impl Fleet {
     }
 
     /// Dispatch the pending batch to an endpoint and resume its sessions.
-    fn flush(&mut self, cause: FlushCause) {
+    ///
+    /// `after` carries the session index whose ready event triggered a
+    /// mid-round flush (full / family seal): a resumed session with a
+    /// *larger* index re-enters the current round's schedule (its ready
+    /// event at the current time pops behind the in-flight one — exactly
+    /// the lockstep `for` loop continuing past `after`), while indices at
+    /// or below it wait for the next round. Round-end flushes
+    /// (deadline/drain, `after = None`) resume everyone next round.
+    fn flush(&mut self, cause: FlushCause, queue: &mut EventQueue, after: Option<usize>) {
         if self.batcher.is_empty() {
             return;
         }
@@ -756,6 +943,16 @@ impl Fleet {
                 );
             }
         }
+        // reply-arrival: every session in the batch resumed above (served
+        // or degraded) — schedule its next ready event per the `after`
+        // rule so the event order replays the lockstep iteration exactly
+        for fr in &batch {
+            let at = match after {
+                Some(j) if fr.session > j => self.cur_round,
+                _ => self.cur_round + 1,
+            };
+            queue.push(at, EventKind::Ready(fr.session));
+        }
     }
 }
 
@@ -786,8 +983,12 @@ mod tests {
         for s in &res.sessions {
             assert_eq!(s.episodes.len(), 1);
             assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+            assert_eq!(s.arrival_round, 0, "lockstep sessions arrive at t = 0");
+            assert!(s.departure_round > 0);
         }
         assert!(res.stats.rounds >= TaskKind::PickPlace.seq_len() as u64);
+        assert_eq!(res.stats.arrivals, 3);
+        assert_eq!(res.stats.max_active_sessions, 3);
     }
 
     #[test]
@@ -931,5 +1132,43 @@ mod tests {
         let per_session = (TaskKind::PickPlace.seq_len() + crate::CHUNK - 1) / crate::CHUNK;
         assert_eq!(res.total_cloud_events(), (6 * per_session) as u64);
         assert_eq!(res.stats.batched_requests, (6 * per_session) as u64);
+    }
+
+    #[test]
+    fn staggered_arrivals_join_mid_run_and_complete() {
+        // 4 sessions, one joining every 10 rounds: the fleet is genuinely
+        // dynamic (max concurrency hit only once the last one joined), and
+        // everyone still completes its full episode
+        let mut sys = sys_with(4, 4, 16);
+        sys.workload.enabled = true;
+        sys.workload.arrivals = "fixed".into();
+        sys.workload.interarrival_rounds = 10.0;
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_eq!(res.stats.arrivals, 4);
+        for (i, s) in res.sessions.iter().enumerate() {
+            assert_eq!(s.arrival_round, (i as u64) * 10);
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+            assert!(s.departure_round >= s.arrival_round);
+        }
+        // later arrivals depart later (same per-session work, offset start)
+        assert!(res.sessions[3].departure_round > res.sessions[0].departure_round);
+        // the run must outlive the last arrival by at least one episode
+        assert!(res.stats.rounds > 30 + TaskKind::PickPlace.seq_len() as u64 / 2);
+    }
+
+    #[test]
+    fn per_session_episode_draws_govern_departures() {
+        let mut sys = sys_with(3, 4, 16);
+        sys.workload.enabled = true;
+        sys.workload.episodes_min = 1;
+        sys.workload.episodes_max = 3;
+        sys.workload.seed = 11;
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+        let counts: Vec<usize> = res.sessions.iter().map(|s| s.episodes.len()).collect();
+        assert!(counts.iter().all(|&c| (1..=3).contains(&c)), "{counts:?}");
+        // the plan replays: same seed, same episode counts
+        let again = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+        let counts2: Vec<usize> = again.sessions.iter().map(|s| s.episodes.len()).collect();
+        assert_eq!(counts, counts2);
     }
 }

@@ -6,16 +6,20 @@
 
 pub mod batcher;
 pub mod driver;
+pub mod events;
 pub mod fleet;
 pub mod router;
 pub mod sensorloop;
 pub mod session;
+pub mod workload;
 
 pub use batcher::Batcher;
 pub use driver::{
     run_episode, run_episode_with_cache, CloudRequest, EpisodeOutput, EpisodeState, StepEvent,
 };
+pub use events::{Event, EventKind, EventQueue};
 pub use fleet::{fleet_seed, CloudMode, Fleet, FleetResult, FleetStats};
 pub use router::Router;
 pub use sensorloop::{SensorLoop, TriggerFlag};
 pub use session::{run_suite, SuiteResult};
+pub use workload::{ArrivalKind, SessionSpec, WorkloadPlan};

@@ -1,0 +1,392 @@
+//! The workload engine: seeded, open-loop session arrivals for the fleet.
+//!
+//! A real fleet is never lockstep: robots come online at arbitrary times,
+//! run different numbers of episodes, and serve different model families.
+//! This module turns the `[workload]` config section into a deterministic
+//! per-run [`WorkloadPlan`] — one [`SessionSpec`] per session, fixing its
+//! arrival round, episode count and model family *before* the run starts
+//! (open loop: arrivals don't react to fleet state) — which the
+//! event-driven scheduler (`serve::fleet` over `serve::events`) executes.
+//!
+//! # Arrival processes
+//!
+//! * **fixed** — session i arrives at `start_round + i·interarrival`
+//!   (interarrival 0 ⇒ everyone at `start_round`: the lockstep shape).
+//! * **poisson** — exponential inter-arrival gaps with mean
+//!   `interarrival_rounds`, drawn from the engine's own seeded PRNG.
+//! * **bursty** — an on-off process: `burst_len` back-to-back arrivals
+//!   (one per round), then `idle_len` silent rounds, repeating.
+//! * **trace** — replay explicit arrival rounds from the tiny in-repo
+//!   trace format (see [`parse_trace`]): inline `"0,0,4,12"`, or
+//!   `"@path"` to load a file of one round per line (`#` comments).
+//!
+//! # Determinism contract
+//!
+//! The engine owns a private PRNG (`[workload] seed`, or derived from the
+//! episode seed) and draws in a fixed documented order: arrival gaps
+//! first (Poisson only), then per-session episode counts, then families.
+//! Draw-free shapes (fixed / bursty / trace, pinned episode counts,
+//! block family assignment) consume nothing, so a `[workload]` section
+//! configured to the lockstep degenerate shape — everyone at t = 0, fleet
+//! episode count, block families — produces a plan whose execution is
+//! **bit-identical** to the disabled-workload scheduler (the same
+//! contract `[faults]`/`[cache]`/`[models]` honour; pinned by
+//! `rust/tests/workload_arrivals.rs`).
+
+use crate::config::SystemConfig;
+use crate::util::Pcg32;
+use crate::vla::assign_families;
+use crate::vla::profile::ModelFamily;
+
+/// Arrival process selector (the `[workload] arrivals` string).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Fixed,
+    Poisson,
+    Bursty,
+    Trace,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fixed" | "lockstep" => Some(ArrivalKind::Fixed),
+            "poisson" | "open" => Some(ArrivalKind::Poisson),
+            "bursty" | "onoff" | "on-off" => Some(ArrivalKind::Bursty),
+            "trace" | "replay" => Some(ArrivalKind::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Fixed => "fixed",
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Trace => "trace",
+        }
+    }
+}
+
+/// Everything the scheduler needs to know about one session before the
+/// run starts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionSpec {
+    /// Scheduler round the session joins the fleet.
+    pub arrival_round: u64,
+    /// Episodes the session runs back to back before departing.
+    pub episodes: usize,
+    /// Model family the session serves for its whole run.
+    pub family: ModelFamily,
+}
+
+/// The compiled plan: one spec per session, session index = vec index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadPlan {
+    pub specs: Vec<SessionSpec>,
+    /// Shape the plan was generated from (fixed for the disabled path).
+    pub kind: ArrivalKind,
+}
+
+impl WorkloadPlan {
+    pub fn n_sessions(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Latest arrival round in the plan (0 for lockstep shapes).
+    pub fn last_arrival(&self) -> u64 {
+        self.specs.iter().map(|s| s.arrival_round).max().unwrap_or(0)
+    }
+
+    /// True when every session arrives at round 0 (the lockstep shape).
+    pub fn is_lockstep(&self) -> bool {
+        self.specs.iter().all(|s| s.arrival_round == 0)
+    }
+}
+
+/// Parse the tiny trace format: either an inline list of arrival rounds
+/// separated by commas/whitespace (`"0, 0, 4 12"`), or `"@path"` to read
+/// a file with one arrival round per line (blank lines and `#` comments
+/// skipped). Unparseable tokens are skipped with a warning on stderr — a
+/// typo must not silently change fleet composition.
+pub fn parse_trace(trace: &str) -> Vec<u64> {
+    let body;
+    let src = if let Some(path) = trace.strip_prefix('@') {
+        match std::fs::read_to_string(path.trim()) {
+            Ok(s) => {
+                body = s;
+                body.as_str()
+            }
+            Err(e) => {
+                eprintln!("[workload] cannot read trace {path:?}: {e}; using empty trace");
+                ""
+            }
+        }
+    } else {
+        trace
+    };
+    let mut rounds = Vec::new();
+    for line in src.lines() {
+        let line = line.split('#').next().unwrap_or("");
+        for tok in line.split(|c: char| c == ',' || c.is_whitespace()) {
+            if tok.is_empty() {
+                continue;
+            }
+            match tok.parse::<u64>() {
+                Ok(r) => rounds.push(r),
+                Err(_) => eprintln!("[workload] bad trace token {tok:?} skipped"),
+            }
+        }
+    }
+    rounds
+}
+
+/// Compile the active config into a [`WorkloadPlan`].
+///
+/// With `[workload]` disabled this is the **lockstep plan**: every fleet
+/// session arrives at round 0, runs `fleet.episodes_per_session`
+/// episodes, and serves its block-assigned family — exactly the shape the
+/// pre-workload scheduler hard-coded, so the disabled path perturbs
+/// nothing.
+pub fn plan(sys: &SystemConfig) -> WorkloadPlan {
+    let w = &sys.workload;
+    if !w.enabled {
+        return lockstep_plan(sys, sys.fleet.n_sessions.max(1));
+    }
+    let kind = match ArrivalKind::parse(&w.arrivals) {
+        Some(k) => k,
+        None => {
+            eprintln!(
+                "[workload] unknown arrivals {:?}; known: fixed, poisson, bursty, trace — \
+                 falling back to fixed",
+                w.arrivals
+            );
+            ArrivalKind::Fixed
+        }
+    };
+    let trace = if kind == ArrivalKind::Trace { parse_trace(&w.trace) } else { Vec::new() };
+    let n = if w.n_sessions > 0 {
+        w.n_sessions
+    } else if kind == ArrivalKind::Trace && !trace.is_empty() {
+        // the trace defines the fleet size unless the config pins one
+        trace.len()
+    } else {
+        sys.fleet.n_sessions.max(1)
+    };
+
+    let seed = if w.seed != 0 { w.seed } else { sys.episode.seed ^ 0x57_0AD0 };
+    let mut rng = Pcg32::new(seed, 0x57D);
+
+    // 1) arrival rounds (only Poisson draws)
+    let arrivals: Vec<u64> = match kind {
+        ArrivalKind::Fixed => {
+            let gap = w.interarrival_rounds.max(0.0);
+            (0..n).map(|i| w.start_round + (i as f64 * gap) as u64).collect()
+        }
+        ArrivalKind::Poisson => {
+            let mean = w.interarrival_rounds.max(0.0);
+            let mut t = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    let u = rng.f64();
+                    t += -mean * (1.0 - u).ln();
+                    w.start_round + t as u64
+                })
+                .collect()
+        }
+        ArrivalKind::Bursty => {
+            let on = w.burst_len.max(1);
+            let off = w.idle_len;
+            (0..n as u64).map(|i| w.start_round + (i / on) * (on + off) + (i % on)).collect()
+        }
+        ArrivalKind::Trace => (0..n)
+            .map(|i| {
+                // fewer trace entries than sessions: the tail repeats the
+                // last arrival (an empty trace degrades to all-at-start)
+                trace.get(i).or(trace.last()).copied().unwrap_or(0) + w.start_round
+            })
+            .collect(),
+    };
+
+    // 2) episode counts (0/0 pins the fleet knob; min == max draws nothing)
+    let fleet_eps = sys.fleet.episodes_per_session.max(1);
+    let (lo, hi) = if w.episodes_min == 0 && w.episodes_max == 0 {
+        (fleet_eps, fleet_eps)
+    } else {
+        let lo = w.episodes_min.max(1);
+        (lo, w.episodes_max.max(lo))
+    };
+    let episodes: Vec<usize> = (0..n)
+        .map(|_| if lo == hi { lo } else { lo + rng.below((hi - lo + 1) as u32) as usize })
+        .collect();
+
+    // 3) families ("blocks" is draw-free and equals the lockstep
+    // assignment; sessions serve the surrogate whenever the zoo is off)
+    let fams = if sys.models.enabled { sys.models.family_list() } else { Vec::new() };
+    let draw_fams = w.family_mix.trim().eq_ignore_ascii_case("draw");
+    let families: Vec<ModelFamily> = (0..n)
+        .map(|i| {
+            if fams.is_empty() {
+                ModelFamily::Surrogate
+            } else if draw_fams {
+                fams[rng.below(fams.len() as u32) as usize]
+            } else {
+                assign_families(&fams, n, i)
+            }
+        })
+        .collect();
+
+    let specs = (0..n)
+        .map(|i| SessionSpec {
+            arrival_round: arrivals[i],
+            episodes: episodes[i],
+            family: families[i],
+        })
+        .collect();
+    WorkloadPlan { specs, kind }
+}
+
+/// The degenerate all-at-t0 plan the disabled path compiles to.
+fn lockstep_plan(sys: &SystemConfig, n: usize) -> WorkloadPlan {
+    let fams = if sys.models.enabled { sys.models.family_list() } else { Vec::new() };
+    let episodes = sys.fleet.episodes_per_session.max(1);
+    let specs = (0..n)
+        .map(|i| SessionSpec {
+            arrival_round: 0,
+            episodes,
+            family: assign_families(&fams, n, i),
+        })
+        .collect();
+    WorkloadPlan { specs, kind: ArrivalKind::Fixed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wsys() -> SystemConfig {
+        let mut sys = SystemConfig::default();
+        sys.workload.enabled = true;
+        sys
+    }
+
+    #[test]
+    fn disabled_plan_is_the_lockstep_shape() {
+        let sys = SystemConfig::default();
+        let p = plan(&sys);
+        assert_eq!(p.n_sessions(), sys.fleet.n_sessions);
+        assert!(p.is_lockstep());
+        for s in &p.specs {
+            assert_eq!(s.episodes, 1);
+            assert_eq!(s.family, ModelFamily::Surrogate);
+        }
+    }
+
+    #[test]
+    fn degenerate_enabled_plan_equals_the_disabled_plan() {
+        // [workload] enabled but configured to the lockstep shape must
+        // compile to the identical plan (the differential suite's anchor)
+        let base = plan(&SystemConfig::default());
+        let mut sys = wsys();
+        sys.workload.arrivals = "fixed".into();
+        sys.workload.interarrival_rounds = 0.0;
+        assert_eq!(plan(&sys), base);
+    }
+
+    #[test]
+    fn fixed_staggers_by_the_interarrival_gap() {
+        let mut sys = wsys();
+        sys.workload.arrivals = "fixed".into();
+        sys.workload.interarrival_rounds = 3.0;
+        sys.workload.start_round = 2;
+        sys.workload.n_sessions = 4;
+        let p = plan(&sys);
+        let a: Vec<u64> = p.specs.iter().map(|s| s.arrival_round).collect();
+        assert_eq!(a, vec![2, 5, 8, 11]);
+    }
+
+    #[test]
+    fn poisson_replays_under_a_shared_seed_and_spreads() {
+        let mut sys = wsys();
+        sys.workload.arrivals = "poisson".into();
+        sys.workload.interarrival_rounds = 4.0;
+        sys.workload.seed = 9;
+        sys.workload.n_sessions = 16;
+        let a = plan(&sys);
+        let b = plan(&sys);
+        assert_eq!(a, b, "seeded plans must replay exactly");
+        assert!(!a.is_lockstep(), "a 4-round mean gap must stagger someone");
+        let mut sorted = a.specs.clone();
+        sorted.sort_by_key(|s| s.arrival_round);
+        assert_eq!(sorted, a.specs, "poisson arrivals are cumulative, hence sorted");
+    }
+
+    #[test]
+    fn bursty_alternates_on_off_windows() {
+        let mut sys = wsys();
+        sys.workload.arrivals = "bursty".into();
+        sys.workload.burst_len = 2;
+        sys.workload.idle_len = 5;
+        sys.workload.n_sessions = 5;
+        let p = plan(&sys);
+        let a: Vec<u64> = p.specs.iter().map(|s| s.arrival_round).collect();
+        assert_eq!(a, vec![0, 1, 7, 8, 14]);
+    }
+
+    #[test]
+    fn trace_parses_inline_and_sets_fleet_size() {
+        let mut sys = wsys();
+        sys.workload.arrivals = "trace".into();
+        sys.workload.trace = "0, 0, 4 12".into();
+        let p = plan(&sys);
+        assert_eq!(p.n_sessions(), 4, "the trace defines the fleet size");
+        let a: Vec<u64> = p.specs.iter().map(|s| s.arrival_round).collect();
+        assert_eq!(a, vec![0, 0, 4, 12]);
+        // pinned n_sessions beyond the trace: the tail repeats the last
+        sys.workload.n_sessions = 6;
+        let p = plan(&sys);
+        let a: Vec<u64> = p.specs.iter().map(|s| s.arrival_round).collect();
+        assert_eq!(a, vec![0, 0, 4, 12, 12, 12]);
+    }
+
+    #[test]
+    fn episode_draws_stay_in_bounds_and_replay() {
+        let mut sys = wsys();
+        sys.workload.n_sessions = 32;
+        sys.workload.episodes_min = 1;
+        sys.workload.episodes_max = 3;
+        sys.workload.seed = 4;
+        let p = plan(&sys);
+        assert!(p.specs.iter().all(|s| (1..=3).contains(&s.episodes)));
+        assert!(p.specs.iter().any(|s| s.episodes != p.specs[0].episodes), "must vary");
+        assert_eq!(plan(&sys), p);
+    }
+
+    #[test]
+    fn family_draws_cover_the_zoo_and_blocks_match_lockstep() {
+        let mut sys = wsys();
+        sys.models.enabled = true;
+        sys.workload.n_sessions = 24;
+        sys.workload.family_mix = "draw".into();
+        sys.workload.seed = 7;
+        let p = plan(&sys);
+        let fams = sys.models.family_list();
+        assert!(p.specs.iter().all(|s| fams.contains(&s.family)));
+        // block mix equals the lockstep assignment function exactly
+        sys.workload.family_mix = "blocks".into();
+        let p = plan(&sys);
+        for (i, s) in p.specs.iter().enumerate() {
+            assert_eq!(s.family, assign_families(&fams, 24, i));
+        }
+    }
+
+    #[test]
+    fn trace_file_loads_with_comments() {
+        let dir = std::env::temp_dir().join("rapid_workload_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("arrivals.trace");
+        std::fs::write(&path, "# demo trace\n0\n3\n\n7 # third robot\n").unwrap();
+        let rounds = parse_trace(&format!("@{}", path.display()));
+        assert_eq!(rounds, vec![0, 3, 7]);
+    }
+}

@@ -52,3 +52,25 @@ fn stress_toml_loads_and_runs_an_episode() {
     assert_eq!(out.metrics.steps, 50);
     assert!(out.metrics.identity_holds(cfg.total_model_gb));
 }
+
+#[test]
+fn workload_sections_ship_disabled() {
+    // every preset ships [workload] off: the disabled engine compiles the
+    // lockstep plan and the scheduler stays bit-identical to PR 4
+    for path in [
+        "configs/libero.toml",
+        "configs/realworld.toml",
+        "configs/stress_noise.toml",
+        "configs/chaos.toml",
+    ] {
+        let cfg = load(path);
+        assert!(!cfg.workload.enabled, "{path}: [workload] must ship disabled");
+        assert_eq!(cfg.workload.arrivals, "fixed", "{path}");
+        let plan = rapid::serve::workload::plan(&cfg);
+        assert!(plan.is_lockstep(), "{path}: disabled workload must compile lockstep");
+    }
+    // the shipped demo trace parses and is time-sorted
+    let rounds = rapid::serve::workload::parse_trace("@configs/arrivals.trace");
+    assert_eq!(rounds.len(), 8);
+    assert!(rounds.windows(2).all(|w| w[0] <= w[1]), "{rounds:?}");
+}

@@ -170,7 +170,8 @@ fn prop_episode_invariants() {
         let strategy = rapid::policy::build(kind, &sys);
         let mut edge = rapid::vla::AnalyticBackend::edge(seed);
         let mut cloud = rapid::vla::AnalyticBackend::cloud(seed);
-        let out = rapid::serve::run_episode(&sys, task, strategy, &mut edge, &mut cloud, seed, false);
+        let out =
+            rapid::serve::run_episode(&sys, task, strategy, &mut edge, &mut cloud, seed, false);
         let m = &out.metrics;
         if m.steps != task.seq_len() {
             return Err(format!("{kind:?}/{task:?}: steps {} != {}", m.steps, task.seq_len()));
@@ -204,7 +205,16 @@ fn prop_episodes_deterministic() {
             let strategy = rapid::policy::build(kind, &sys);
             let mut edge = rapid::vla::AnalyticBackend::edge(seed);
             let mut cloud = rapid::vla::AnalyticBackend::cloud(seed);
-            rapid::serve::run_episode(&sys, TaskKind::PegInsert, strategy, &mut edge, &mut cloud, seed, false).metrics
+            rapid::serve::run_episode(
+                &sys,
+                TaskKind::PegInsert,
+                strategy,
+                &mut edge,
+                &mut cloud,
+                seed,
+                false,
+            )
+            .metrics
         };
         let a = run();
         let b = run();
@@ -691,6 +701,203 @@ fn frames_bin_equal(cfg: &rapid::config::CacheConfig, a: &SensorFrame, b: &Senso
     use rapid::cache::Signature;
     Signature::of(cfg, 1, a, None, Default::default())
         == Signature::of(cfg, 1, b, None, Default::default())
+}
+
+/// Invariant #22 (events): the fleet event queue pops every random event
+/// set in one deterministic, time-monotone order — times never decrease,
+/// within a time classes order `FaultEdge < Arrival < Ready < Deadline`,
+/// within a class session indices ascend, and exact duplicates pop FIFO
+/// (the `(time, class, seq, push order)` contract the lockstep
+/// bit-identity rests on).
+#[test]
+fn prop_event_queue_pop_order_deterministic_and_monotone() {
+    use rapid::serve::{EventKind, EventQueue};
+    seeded_forall!("event_queue_order", 120, |rng: &mut Pcg32| {
+        let n = 1 + rng.below(200) as usize;
+        let pushes: Vec<(u64, EventKind)> = (0..n)
+            .map(|_| {
+                let t = rng.below(50) as u64;
+                let kind = match rng.below(4) {
+                    0 => EventKind::FaultEdge,
+                    1 => EventKind::Arrival(rng.below(16) as usize),
+                    2 => EventKind::Ready(rng.below(16) as usize),
+                    _ => EventKind::Deadline,
+                };
+                (t, kind)
+            })
+            .collect();
+        let drain = |pushes: &[(u64, EventKind)]| {
+            let mut q = EventQueue::new();
+            for &(t, k) in pushes {
+                q.push(t, k);
+            }
+            let mut popped = Vec::new();
+            while let Some(ev) = q.pop() {
+                popped.push(ev);
+            }
+            popped
+        };
+        let a = drain(&pushes);
+        let b = drain(&pushes);
+        if a.len() != n || b.len() != n {
+            return Err(format!("lost events: {} / {} of {n}", a.len(), b.len()));
+        }
+        for (ea, eb) in a.iter().zip(b.iter()) {
+            if ea.key() != eb.key() {
+                return Err("identical push sequences popped differently".into());
+            }
+        }
+        for w in a.windows(2) {
+            if w[1].key() <= w[0].key() {
+                return Err(format!(
+                    "pop order not strictly increasing: {:?} then {:?}",
+                    w[0].key(),
+                    w[1].key()
+                ));
+            }
+            if w[1].time < w[0].time {
+                return Err("queue went back in time".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #23 (workload): under random arrival shapes, episode-count
+/// draws and family mixes, the fleet's totals exactly partition across
+/// sessions and families, every arrival is accounted, no batch mixes
+/// families, and no session wedges — the conservation laws survive open-
+/// loop dynamics.
+#[test]
+fn prop_fleet_totals_partition_under_random_arrivals() {
+    seeded_forall!("workload_partition", 5, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = rng.next_u64();
+        sys.fleet.n_sessions = 2 + rng.below(5) as usize;
+        sys.fleet.max_batch = 1 + rng.below(4) as usize;
+        sys.workload.enabled = true;
+        sys.workload.seed = rng.next_u64();
+        sys.workload.arrivals =
+            ["fixed", "poisson", "bursty"][rng.below(3) as usize].to_string();
+        sys.workload.interarrival_rounds = rng.range(0.0, 12.0);
+        sys.workload.burst_len = 1 + rng.below(4) as u64;
+        sys.workload.idle_len = rng.below(10) as u64;
+        sys.workload.episodes_min = 1;
+        sys.workload.episodes_max = 1 + rng.below(2) as usize;
+        if rng.chance(0.5) {
+            sys.models.enabled = true;
+            sys.workload.family_mix =
+                if rng.chance(0.5) { "draw".into() } else { "blocks".into() };
+        }
+        let kinds = [PolicyKind::Rapid, PolicyKind::CloudOnly];
+        let kind = kinds[rng.below(2) as usize];
+        let res = rapid::serve::Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+
+        if res.stats.arrivals != res.sessions.len() as u64 {
+            return Err(format!(
+                "{} arrivals for {} sessions",
+                res.stats.arrivals,
+                res.sessions.len()
+            ));
+        }
+        if res.stats.mixed_family_batches != 0 {
+            return Err(format!("{} mixed batches", res.stats.mixed_family_batches));
+        }
+        // per-session episodes complete and sum to the fleet totals
+        let mut steps = 0u64;
+        let mut cloud = 0u64;
+        for s in &res.sessions {
+            if s.episodes.is_empty() {
+                return Err(format!("session {} completed no episodes", s.session));
+            }
+            if s.departure_round < s.arrival_round {
+                return Err(format!("session {} departed before arriving", s.session));
+            }
+            for m in &s.episodes {
+                if m.steps != TaskKind::PickPlace.seq_len() {
+                    return Err(format!("session {} wedged", s.session));
+                }
+                steps += m.steps as u64;
+                cloud += m.cloud_events;
+            }
+        }
+        if steps != res.total_steps() || cloud != res.total_cloud_events() {
+            return Err("session sums don't match fleet totals".into());
+        }
+        // family rows partition the same totals
+        let fsteps: u64 = res.families.iter().map(|t| t.steps).sum();
+        let fcloud: u64 = res.families.iter().map(|t| t.cloud_events).sum();
+        let freqs: u64 = res.families.iter().map(|t| t.batched_requests).sum();
+        if fsteps != steps || fcloud != cloud || freqs != res.stats.batched_requests {
+            return Err("family totals don't partition fleet totals".into());
+        }
+        // every wire request came from a session offload (no cache here)
+        if res.stats.batched_requests != cloud {
+            return Err(format!(
+                "batched {} != cloud events {cloud}",
+                res.stats.batched_requests
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #24 (workload): with `[workload]` absent or `enabled =
+/// false` — whatever the other workload knobs say — the fleet scheduler
+/// is bit-identical to the pre-workload (PR 4) scheduler: same rounds,
+/// same batches, same per-episode trajectories, for arbitrary fleet
+/// shapes and hostile knob values.
+#[test]
+fn prop_disabled_workload_is_bit_identical() {
+    seeded_forall!("workload_disabled_identity", 4, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = rng.next_u64();
+        sys.fleet.n_sessions = 2 + rng.below(3) as usize;
+        sys.fleet.max_batch = 1 + rng.below(4) as usize;
+        let kinds = [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased];
+        let kind = kinds[rng.below(3) as usize];
+        let baseline = rapid::serve::Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+
+        // a configured-but-disabled [workload] section with hostile knobs
+        let mut loaded = sys.clone();
+        loaded.workload.enabled = false;
+        loaded.workload.arrivals =
+            ["poisson", "bursty", "trace", "garbage"][rng.below(4) as usize].to_string();
+        loaded.workload.n_sessions = rng.below(64) as usize;
+        loaded.workload.start_round = rng.below(1000) as u64;
+        loaded.workload.interarrival_rounds = rng.range(0.0, 50.0);
+        loaded.workload.seed = rng.next_u64();
+        loaded.workload.episodes_min = rng.below(5) as usize;
+        loaded.workload.episodes_max = rng.below(9) as usize;
+        loaded.workload.family_mix = "draw".into();
+        loaded.workload.trace = "9999, 123, junk".into();
+        let run = rapid::serve::Fleet::local(&loaded, TaskKind::PickPlace, kind).run();
+
+        if baseline.stats.rounds != run.stats.rounds
+            || baseline.stats.batches != run.stats.batches
+            || baseline.stats.batched_requests != run.stats.batched_requests
+            || baseline.stats.arrivals != run.stats.arrivals
+        {
+            return Err(format!("scheduler stats differ: {:?} vs {:?}", baseline.stats, run.stats));
+        }
+        for (sa, sb) in baseline.sessions.iter().zip(run.sessions.iter()) {
+            if sb.arrival_round != 0 {
+                return Err(format!("session {} arrived late with workload off", sb.session));
+            }
+            if sa.departure_round != sb.departure_round {
+                return Err(format!("session {} departure drifted", sa.session));
+            }
+            for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+                if ma.latency_columns() != mb.latency_columns()
+                    || ma.cloud_events != mb.cloud_events
+                    || ma.rms_error != mb.rms_error
+                {
+                    return Err(format!("session {} diverged with workload disabled", sa.session));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 /// Cooldown unit property: ready exactly after `limit` ticks.

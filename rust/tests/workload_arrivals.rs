@@ -1,0 +1,344 @@
+//! Differential conformance suite for the event-driven virtual-time
+//! scheduler and the `[workload]` arrival engine.
+//!
+//! Two halves:
+//!
+//! * **Lockstep degeneracy ⇒ bit-identity.** The event-driven core must
+//!   replay the historical lockstep round loop *exactly* — not just
+//!   totals, but per-episode trajectories, flush causes and fault draws —
+//!   both with `[workload]` absent/disabled (whatever the other workload
+//!   knobs say) and with it **enabled** in the degenerate all-at-t0 fixed
+//!   shape, across every serve path: plain fleets, the reuse cache, the
+//!   chaos/failover schedule and the model zoo.
+//! * **Dynamic arrivals hold the line.** Poisson/bursty/trace arrivals —
+//!   including an 8-session Poisson mixed-family fleet under the full
+//!   chaos demo plan — complete every episode with no wedged session and
+//!   zero mixed-family batches, and replay exactly under a shared seed.
+
+use rapid::config::{FaultsConfig, PolicyKind, SystemConfig};
+use rapid::robot::TaskKind;
+use rapid::serve::{Fleet, FleetResult};
+
+/// Full-strength bit-identity: scheduler counters, flush causes, router
+/// spread, cache counters, and exact per-episode trajectory columns.
+fn assert_bit_identical(a: &FleetResult, b: &FleetResult, tag: &str) {
+    assert_eq!(a.stats.rounds, b.stats.rounds, "{tag}: rounds");
+    assert_eq!(a.stats.batches, b.stats.batches, "{tag}: batches");
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests, "{tag}: batched requests");
+    assert_eq!(a.stats.multi_session_batches, b.stats.multi_session_batches, "{tag}: multi");
+    assert_eq!(a.stats.full_flushes, b.stats.full_flushes, "{tag}: full flushes");
+    assert_eq!(a.stats.deadline_flushes, b.stats.deadline_flushes, "{tag}: deadline flushes");
+    assert_eq!(a.stats.drain_flushes, b.stats.drain_flushes, "{tag}: drain flushes");
+    assert_eq!(a.stats.family_flushes, b.stats.family_flushes, "{tag}: family flushes");
+    assert_eq!(a.stats.deferred_offloads, b.stats.deferred_offloads, "{tag}: deferred");
+    assert_eq!(a.stats.dropped_replies, b.stats.dropped_replies, "{tag}: dropped");
+    assert_eq!(a.stats.degraded_requests, b.stats.degraded_requests, "{tag}: degraded");
+    assert_eq!(a.stats.failover_redispatches, b.stats.failover_redispatches, "{tag}: failover");
+    assert_eq!(a.stats.outage_rounds, b.stats.outage_rounds, "{tag}: outage rounds");
+    assert_eq!(a.endpoint_dispatches, b.endpoint_dispatches, "{tag}: router spread");
+    assert_eq!(a.mean_batch, b.mean_batch, "{tag}: mean batch");
+    assert_eq!(a.cache.hits, b.cache.hits, "{tag}: cache hits");
+    assert_eq!(a.cache.probes, b.cache.probes, "{tag}: cache probes");
+    assert_eq!(a.cache.evictions, b.cache.evictions, "{tag}: cache evictions");
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{tag}: session count");
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        assert_eq!(sa.family, sb.family, "{tag}: family");
+        assert_eq!(sa.arrival_round, sb.arrival_round, "{tag}: arrival round");
+        assert_eq!(sa.departure_round, sb.departure_round, "{tag}: departure round");
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "{tag}: episode count");
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "{tag}: latency columns");
+            assert_eq!(ma.cloud_events, mb.cloud_events, "{tag}: cloud events");
+            assert_eq!(ma.edge_events, mb.edge_events, "{tag}: edge events");
+            assert_eq!(ma.preemptions, mb.preemptions, "{tag}: preemptions");
+            assert_eq!(ma.failovers, mb.failovers, "{tag}: failovers");
+            assert_eq!(ma.cache_hits, mb.cache_hits, "{tag}: cache hits");
+            assert_eq!(ma.overhead_ms, mb.overhead_ms, "{tag}: overhead");
+            assert_eq!(ma.rms_error, mb.rms_error, "{tag}: trajectory (rms)");
+            assert_eq!(ma.success, mb.success, "{tag}: success");
+        }
+    }
+}
+
+/// A `[workload]` section that is present — with hostile knobs — but
+/// disabled. Must perturb nothing.
+fn disabled_workload(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.workload.enabled = false;
+    s.workload.arrivals = "poisson".into();
+    s.workload.n_sessions = 77;
+    s.workload.start_round = 500;
+    s.workload.interarrival_rounds = 9.5;
+    s.workload.seed = 0xDEAD_BEEF;
+    s.workload.episodes_min = 4;
+    s.workload.episodes_max = 9;
+    s.workload.family_mix = "draw".into();
+    s.workload.trace = "1,2,3".into();
+    s
+}
+
+/// The degenerate *enabled* shape: everyone at t = 0, fleet episode
+/// count, block families — must execute bit-identically to disabled.
+fn degenerate_workload(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.workload.enabled = true;
+    s.workload.arrivals = "fixed".into();
+    s.workload.n_sessions = 0;
+    s.workload.start_round = 0;
+    s.workload.interarrival_rounds = 0.0;
+    s.workload.episodes_min = 0;
+    s.workload.episodes_max = 0;
+    s.workload.family_mix = "blocks".into();
+    s
+}
+
+#[test]
+fn disabled_workload_keeps_the_fleet_bit_identical() {
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 4;
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&disabled_workload(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("{kind:?}"));
+        assert_eq!(run.stats.arrivals, 4);
+        assert_eq!(run.stats.max_active_sessions, 4);
+    }
+}
+
+#[test]
+fn degenerate_enabled_workload_is_bit_identical_on_the_fleet_path() {
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 4;
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&degenerate_workload(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("degenerate/{kind:?}"));
+    }
+}
+
+#[test]
+fn workload_keeps_the_reuse_cache_bit_identical() {
+    // the cache path exercises probe/admission ordering across the round:
+    // the event-driven core must replay the shared store's hit pattern
+    // exactly, both disabled and in the degenerate enabled shape
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.cache.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(base.cache.hits > 0, "the cached fleet must actually hit");
+    let off = Fleet::local(&disabled_workload(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly)
+        .run();
+    assert_bit_identical(&base, &off, "cache/disabled");
+    let degen =
+        Fleet::local(&degenerate_workload(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &degen, "cache/degenerate");
+}
+
+#[test]
+fn workload_keeps_the_chaos_path_bit_identical() {
+    // the chaos path exercises the fault engine's shared PRNG stream: one
+    // extra (or missing) draw anywhere in the event loop would shift every
+    // later drop decision — the strictest differential there is
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let off = Fleet::local(&disabled_workload(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &off, &format!("chaos/disabled/{kind:?}"));
+        let degen = Fleet::local(&degenerate_workload(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &degen, &format!("chaos/degenerate/{kind:?}"));
+    }
+}
+
+#[test]
+fn workload_keeps_the_zoo_path_bit_identical() {
+    // mixed families + family-keyed batching under the event-driven core
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.models.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(base.stats.family_flushes > 0, "the zoo fleet must exercise the family seal");
+    let off =
+        Fleet::local(&disabled_workload(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &off, "zoo/disabled");
+    let degen =
+        Fleet::local(&degenerate_workload(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &degen, "zoo/degenerate");
+    assert_eq!(degen.stats.mixed_family_batches, 0);
+}
+
+#[test]
+fn multi_episode_rollovers_stay_bit_identical() {
+    // episode rollover now routes through the arrival/departure hooks;
+    // a multi-episode fleet pins that the rollover path didn't drift
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 3;
+    sys.fleet.episodes_per_session = 3;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    let degen = Fleet::local(&degenerate_workload(&sys), TaskKind::PickPlace, PolicyKind::Rapid)
+        .run();
+    assert_bit_identical(&base, &degen, "rollover");
+    for s in &degen.sessions {
+        assert_eq!(s.episodes.len(), 3);
+    }
+}
+
+#[test]
+fn poisson_arrivals_complete_under_the_chaos_plan_and_replay() {
+    // the acceptance criterion: an 8-session Poisson-arrival mixed-family
+    // fleet completes the full chaos demo plan — crash, degrade, outage,
+    // drops, delays — with zero mixed batches, no wedged session, and
+    // exact seeded replay
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    sys.models.enabled = true;
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "poisson".into();
+    sys.workload.interarrival_rounds = 4.0;
+    sys.workload.seed = 23;
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let res = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_eq!(res.stats.arrivals, 8, "{kind:?}");
+        assert_eq!(res.stats.mixed_family_batches, 0, "{kind:?} mixed a batch under chaos");
+        assert!(
+            res.sessions.iter().any(|s| s.arrival_round > 0),
+            "{kind:?}: the poisson plan must stagger someone"
+        );
+        for s in &res.sessions {
+            for m in &s.episodes {
+                assert_eq!(
+                    m.steps,
+                    TaskKind::PickPlace.seq_len(),
+                    "{kind:?} session {} wedged under chaos",
+                    s.session
+                );
+            }
+            assert!(s.departure_round >= s.arrival_round);
+        }
+        // per-family counters still exactly partition the fleet totals
+        let steps: u64 = res.families.iter().map(|t| t.steps).sum();
+        let cloud: u64 = res.families.iter().map(|t| t.cloud_events).sum();
+        assert_eq!(steps, res.total_steps(), "{kind:?}: family steps don't partition");
+        assert_eq!(cloud, res.total_cloud_events(), "{kind:?}: family cloud events");
+        // exact seeded replay: same arrivals, same faults, same metrics
+        let again = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&res, &again, &format!("poisson-chaos replay {kind:?}"));
+    }
+}
+
+#[test]
+fn bursty_and_trace_arrivals_complete_under_chaos() {
+    let mut base = SystemConfig::default();
+    base.fleet.n_sessions = 6;
+    base.fleet.endpoints = 3;
+    base.faults = FaultsConfig::demo();
+    base.workload.enabled = true;
+
+    let mut bursty = base.clone();
+    bursty.workload.arrivals = "bursty".into();
+    bursty.workload.burst_len = 2;
+    bursty.workload.idle_len = 7;
+
+    let mut trace = base.clone();
+    trace.workload.arrivals = "trace".into();
+    trace.workload.n_sessions = 6;
+    trace.workload.trace = "0, 0, 5, 11, 11, 20".into();
+
+    for (tag, sys) in [("bursty", bursty), ("trace", trace)] {
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_eq!(res.stats.arrivals, 6, "{tag}");
+        assert!(res.sessions.iter().any(|s| s.arrival_round > 0), "{tag}: never staggered");
+        for s in &res.sessions {
+            for m in &s.episodes {
+                assert_eq!(m.steps, TaskKind::PickPlace.seq_len(), "{tag}: wedged");
+            }
+        }
+        let again = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_bit_identical(&res, &again, &format!("{tag} replay"));
+    }
+}
+
+#[test]
+fn trace_arrival_rounds_are_respected_exactly() {
+    let mut sys = SystemConfig::default();
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "trace".into();
+    sys.workload.trace = "0, 3, 9".into();
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+    assert_eq!(res.sessions.len(), 3, "the trace defines the fleet size");
+    let arrivals: Vec<u64> = res.sessions.iter().map(|s| s.arrival_round).collect();
+    assert_eq!(arrivals, vec![0, 3, 9]);
+    // an edge-only session departs exactly seq_len rounds of stepping
+    // after it joins (one step per round, no suspends)
+    for s in &res.sessions {
+        assert_eq!(
+            s.departure_round - s.arrival_round,
+            TaskKind::PickPlace.seq_len() as u64,
+            "session {} didn't step once per round from arrival",
+            s.session
+        );
+    }
+    // the fleet's clock covers the straggler's whole episode
+    assert!(res.stats.rounds > 9 + TaskKind::PickPlace.seq_len() as u64);
+}
+
+#[test]
+fn staggered_arrivals_track_active_session_highwater() {
+    // arrivals spaced wider than an episode: the fleet is never fully
+    // co-resident, and the high-water mark proves sessions left before
+    // later ones joined
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 3;
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "fixed".into();
+    sys.workload.interarrival_rounds = 80.0; // > one PickPlace episode
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+    assert_eq!(res.stats.arrivals, 3);
+    assert_eq!(res.stats.max_active_sessions, 1, "sessions must never overlap");
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+    }
+}
+
+#[test]
+fn late_arrivals_still_batch_with_co_resident_sessions() {
+    // two simultaneous waves of 3 CloudOnly sessions: within a wave the
+    // offload rounds stay in phase and coalesce across sessions —
+    // cross-session batching must survive dynamic membership
+    let mut sys = SystemConfig::default();
+    sys.fleet.max_batch = 3;
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "trace".into();
+    sys.workload.trace = "0,0,0,9,9,9".into();
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(
+        res.stats.multi_session_batches > 0,
+        "co-resident arrivals never coalesced: {:?}",
+        res.stats
+    );
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+    }
+}
+
+#[test]
+fn workload_acceptance_on_the_shipped_config() {
+    // configs/libero.toml with [workload] flipped on over the shipped
+    // trace file: the full acceptance path end to end
+    let src = std::fs::read_to_string("configs/libero.toml").expect("configs/libero.toml");
+    let mut sys = SystemConfig::from_toml(&src).expect("parse libero.toml");
+    assert!(!sys.workload.enabled, "libero.toml must ship [workload] disabled");
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "trace".into();
+    sys.workload.trace = "@configs/arrivals.trace".into();
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_eq!(res.sessions.len(), 8, "the shipped trace carries 8 arrivals");
+    assert!(res.sessions.iter().any(|s| s.arrival_round > 0));
+    for s in &res.sessions {
+        assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+    }
+}

@@ -14,7 +14,11 @@ fn main() {
     println!("(a) vision-based entropy vs threshold {:.2} nats", data.entropy_threshold);
     for (noise, entropy, phase) in &data.entropy_traces {
         let rate = fig2::false_breach_rate(entropy, phase, data.entropy_threshold);
-        println!("  {:<13} false-breach rate in routine motion: {:>5.1}%", noise.name(), 100.0 * rate);
+        println!(
+            "  {:<13} false-breach rate in routine motion: {:>5.1}%",
+            noise.name(),
+            100.0 * rate
+        );
     }
 
     println!("(b) kinematic panel (clean RAPID episode):");

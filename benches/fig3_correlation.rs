@@ -14,9 +14,16 @@ fn main() {
     let data = fig3::run(&sys, &mut backends, 4);
     println!("Joint torque variation vs attention mass:");
     for (task, dtau, _, r, rho) in &data.series {
-        println!("  {:<16} n={:<5} pearson r = {r:+.3}  spearman = {rho:+.3}", task.name(), dtau.len());
+        println!(
+            "  {:<16} n={:<5} pearson r = {r:+.3}  spearman = {rho:+.3}",
+            task.name(),
+            dtau.len()
+        );
     }
-    println!("  pooled            pearson r = {:+.3}  spearman = {:+.3}", data.pooled_pearson, data.pooled_spearman);
+    println!(
+        "  pooled            pearson r = {:+.3}  spearman = {:+.3}",
+        data.pooled_pearson, data.pooled_spearman
+    );
     println!("positive correlation: {}", data.pooled_pearson > 0.3);
     println!("[bench wall-clock {:.1}s]", t0.elapsed().as_secs_f64());
 }

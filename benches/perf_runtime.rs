@@ -25,14 +25,19 @@ fn main() {
     // §Perf before/after: the naive path re-uploads the weight blob on
     // every call; the shipped runtime keeps weights device-resident.
     #[cfg(feature = "pjrt")]
-    if let Ok(meta) = rapid::runtime::ArtifactMeta::load(rapid::runtime::ArtifactMeta::default_dir()) {
+    if let Ok(meta) =
+        rapid::runtime::ArtifactMeta::load(rapid::runtime::ArtifactMeta::default_dir())
+    {
         if let Ok(client) = rapid::runtime::RuntimeClient::cpu() {
             header("weights upload cost (naive per-call path, avoided)");
             let cloud = meta.variant("cloud").unwrap();
             let host = rapid::runtime::artifact::read_weights(&cloud.weights_path).unwrap();
             bench.run("naive.cloud.weights_upload", || {
                 std::hint::black_box(
-                    client.raw().buffer_from_host_buffer::<f32>(&host, &[host.len()], None).unwrap(),
+                    client
+                        .raw()
+                        .buffer_from_host_buffer::<f32>(&host, &[host.len()], None)
+                        .unwrap(),
                 );
             });
         }
@@ -47,7 +52,11 @@ fn main() {
             bench.run("pjrt.cloud.infer", || {
                 std::hint::black_box(b.cloud.infer(&obs, &proprio, 1));
             });
-            println!("measured means: edge {:.0}µs cloud {:.0}µs", b.edge.mean_us(), b.cloud.mean_us());
+            println!(
+                "measured means: edge {:.0}µs cloud {:.0}µs",
+                b.edge.mean_us(),
+                b.cloud.mean_us()
+            );
 
             header("end-to-end episode (PJRT models, RAPID policy)");
             let mut seed = 0u64;

@@ -13,7 +13,10 @@ fn main() {
     let t0 = std::time::Instant::now();
     let (table, rows) = tab345::tab3(&sys, &mut backends, 4);
     print!("{}", table.render());
-    println!("RAPID speedup vs vision baseline: {:.2}x (paper: 1.69x sim)", rows.speedup_vs_vision());
+    println!(
+        "RAPID speedup vs vision baseline: {:.2}x (paper: 1.69x sim)",
+        rows.speedup_vs_vision()
+    );
     println!(
         "RAPID speedup vs edge-only: {:.2}x",
         rows.get(rapid::config::PolicyKind::EdgeOnly).total_lat_mean

@@ -30,9 +30,21 @@ fn main() {
     for c in [0u32, 4, 12, 24] {
         let mut s = sys.clone();
         s.dispatcher.cooldown = c;
-        let res = run_policy(&s, PolicyKind::Rapid, &ALL_TASKS, 2, backends.edge.as_mut(), backends.cloud.as_mut());
+        let res = run_policy(
+            &s,
+            PolicyKind::Rapid,
+            &ALL_TASKS,
+            2,
+            backends.edge.as_mut(),
+            backends.cloud.as_mut(),
+        );
         let row = aggregate(PolicyKind::Rapid, &res.episodes);
-        let offl = res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / res.episodes.len() as f64;
-        println!("  C={c:<3} offloads/ep {offl:>5.1}  total {:.1}ms  success {:.0}%", row.total_lat_mean, 100.0 * row.success_rate);
+        let offl = res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>()
+            / res.episodes.len() as f64;
+        println!(
+            "  C={c:<3} offloads/ep {offl:>5.1}  total {:.1}ms  success {:.0}%",
+            row.total_lat_mean,
+            100.0 * row.success_rate
+        );
     }
 }

@@ -23,9 +23,15 @@ fn main() {
     let vision_row = rows.get(PolicyKind::VisionBased);
     let edge_row = rows.get(PolicyKind::EdgeOnly);
     println!("\nheadline numbers:");
-    println!("  RAPID total latency    : {:.1} ± {:.1} ms", rapid_row.total_lat_mean, rapid_row.total_lat_std);
+    println!(
+        "  RAPID total latency    : {:.1} ± {:.1} ms",
+        rapid_row.total_lat_mean, rapid_row.total_lat_std
+    );
     println!("  speedup vs vision-based: {:.2}x", rows.speedup_vs_vision());
-    println!("  speedup vs edge-only   : {:.2}x", edge_row.total_lat_mean / rapid_row.total_lat_mean);
+    println!(
+        "  speedup vs edge-only   : {:.2}x",
+        edge_row.total_lat_mean / rapid_row.total_lat_mean
+    );
     println!(
         "  accuracy (success rate): RAPID {:.0}% vs vision {:.0}%",
         100.0 * rapid_row.success_rate,

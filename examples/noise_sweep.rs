@@ -29,10 +29,19 @@ fn main() {
         let mut lat = Vec::new();
         let mut offl = Vec::new();
         for kind in [PolicyKind::VisionBased, PolicyKind::Rapid] {
-            let res = run_policy(&sys, kind, &ALL_TASKS, 3, backends.edge.as_mut(), backends.cloud.as_mut());
+            let res = run_policy(
+                &sys,
+                kind,
+                &ALL_TASKS,
+                3,
+                backends.edge.as_mut(),
+                backends.cloud.as_mut(),
+            );
             let row = aggregate(kind, &res.episodes);
             lat.push(row.total_lat_mean);
-            offl.push(res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / res.episodes.len() as f64);
+            let mean_offl = res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>()
+                / res.episodes.len() as f64;
+            offl.push(mean_offl);
         }
         vision_lat.push(lat[0]);
         rapid_lat.push(lat[1]);
@@ -51,5 +60,8 @@ fn main() {
         degradation(&vision_lat),
         degradation(&rapid_lat)
     );
-    println!("RAPID is environment-agnostic: {}", degradation(&rapid_lat).abs() < degradation(&vision_lat).abs());
+    println!(
+        "RAPID is environment-agnostic: {}",
+        degradation(&rapid_lat).abs() < degradation(&vision_lat).abs()
+    );
 }

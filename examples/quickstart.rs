@@ -20,14 +20,24 @@ fn main() {
 
     println!("== RAPID quickstart: {} / {} ==", sys.name, TaskKind::PickPlace.name());
     let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
-    let out = run_episode(&sys, TaskKind::PickPlace, strategy, backends.edge.as_mut(), backends.cloud.as_mut(), 42, true);
+    let out = run_episode(
+        &sys,
+        TaskKind::PickPlace,
+        strategy,
+        backends.edge.as_mut(),
+        backends.cloud.as_mut(),
+        42,
+        true,
+    );
 
     let m = &out.metrics;
     let (cloud, edge, total) = m.latency_columns();
     println!("steps executed        : {}", m.steps);
     println!("edge refills          : {}", m.edge_events);
     println!("cloud offloads        : {} ({} preemptions)", m.cloud_events, m.preemptions);
-    println!("emulated latency      : cloud {cloud:.1}ms + edge {edge:.1}ms => total {total:.1}ms per event");
+    println!(
+        "emulated latency      : cloud {cloud:.1}ms + edge {edge:.1}ms => total {total:.1}ms per event"
+    );
     println!("parameter placement   : edge {:.1}GB / cloud {:.1}GB", m.edge_gb, m.cloud_gb);
     println!("trigger precision     : {:.2}", m.trigger_precision());
     println!("task success          : {} (rms tracking error {:.3} rad)", m.success, m.rms_error);

@@ -23,7 +23,10 @@ fn main() {
     print!("{}", table.render());
 
     let rapid = rows.get(PolicyKind::Rapid);
-    println!("\nRAPID end-to-end speedup vs ISAR: {:.2}x (paper: ~1.73x)", rows.speedup_vs_vision());
+    println!(
+        "\nRAPID end-to-end speedup vs ISAR: {:.2}x (paper: ~1.73x)",
+        rows.speedup_vs_vision()
+    );
     println!("RAPID edge footprint            : {:.1} GB (paper: 2.4 GB)", rapid.edge_gb);
     println!("RAPID latency stability (std)   : ±{:.1} ms", rapid.total_lat_std);
 }

@@ -79,7 +79,10 @@ fn main() {
     // ---- report ----
     let st = &res.stats;
     println!("\n=== fleet report ===");
-    println!("sessions              : {} × {} episodes", summary.sessions, sys.fleet.episodes_per_session);
+    println!(
+        "sessions              : {} × {} episodes",
+        summary.sessions, sys.fleet.episodes_per_session
+    );
     println!(
         "control steps         : {} in {wall:.2}s wall => {:.0} steps/s",
         summary.total_steps,

@@ -96,7 +96,13 @@ pub struct Bench {
 
 impl Default for Bench {
     fn default() -> Self {
-        Bench { warmup_iters: 3, min_iters: 10, max_iters: 10_000, budget_ms: 2_000.0, results: Vec::new() }
+        Bench {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget_ms: 2_000.0,
+            results: Vec::new(),
+        }
     }
 }
 
@@ -110,6 +116,21 @@ impl Bench {
         self
     }
 
+    /// Lower the iteration floor (clamped to 1). Heavyweight cases — the
+    /// 100k-session fleet rungs of `rapid bench scale` — run once instead
+    /// of ten times.
+    pub fn with_min_iters(mut self, n: usize) -> Self {
+        self.min_iters = n.max(1);
+        self
+    }
+
+    /// Override the warm-up count (0 disables warm-up entirely; used for
+    /// cases whose single iteration *is* the measurement).
+    pub fn with_warmup_iters(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
     /// Time `f` repeatedly; returns per-iteration stats.
     pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
         for _ in 0..self.warmup_iters {
@@ -118,13 +139,18 @@ impl Bench {
         let mut times = Vec::new();
         let start = Instant::now();
         while times.len() < self.min_iters
-            || (times.len() < self.max_iters && start.elapsed().as_secs_f64() * 1e3 < self.budget_ms)
+            || (times.len() < self.max_iters
+                && start.elapsed().as_secs_f64() * 1e3 < self.budget_ms)
         {
             let t0 = Instant::now();
             f();
             times.push(t0.elapsed().as_nanos() as f64);
         }
-        let res = BenchResult { name: name.to_string(), iters: times.len(), summary: Summary::of(&times) };
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            summary: Summary::of(&times),
+        };
         println!("{}", res.report());
         self.results.push(res);
         self.results.last().unwrap()
@@ -158,7 +184,13 @@ mod tests {
 
     #[test]
     fn runs_and_summarizes() {
-        let mut b = Bench { warmup_iters: 1, min_iters: 5, max_iters: 50, budget_ms: 50.0, results: vec![] };
+        let mut b = Bench {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 50,
+            budget_ms: 50.0,
+            results: vec![],
+        };
         let mut acc = 0u64;
         let r = b.run("noop-ish", || {
             acc = acc.wrapping_add(1);
@@ -170,14 +202,26 @@ mod tests {
 
     #[test]
     fn respects_budget() {
-        let mut b = Bench { warmup_iters: 0, min_iters: 2, max_iters: 1_000_000, budget_ms: 30.0, results: vec![] };
+        let mut b = Bench {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 1_000_000,
+            budget_ms: 30.0,
+            results: vec![],
+        };
         let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(5)));
         assert!(r.iters < 20, "iters {}", r.iters);
     }
 
     #[test]
     fn json_roundtrips_through_the_in_tree_parser() {
-        let mut b = Bench { warmup_iters: 0, min_iters: 3, max_iters: 10, budget_ms: 20.0, results: vec![] };
+        let mut b = Bench {
+            warmup_iters: 0,
+            min_iters: 3,
+            max_iters: 10,
+            budget_ms: 20.0,
+            results: vec![],
+        };
         b.run("serve/\"quoted\"\nname", || std::hint::black_box(1 + 1));
         b.run("fleet/8x1", || std::hint::black_box(2 + 2));
         let doc = b.to_json();
@@ -188,6 +232,22 @@ mod tests {
         assert!(results[0].f64_or("mean_ns", -1.0) >= 0.0);
         assert!(results[0].f64_or("iters", 0.0) >= 3.0);
         assert!(results[0].f64_or("p95_ns", -1.0) >= results[0].f64_or("min_ns", 1e18) - 1e-9);
+    }
+
+    #[test]
+    fn builders_pin_single_iteration_runs() {
+        // the scale-bench fleet rungs rely on exactly this configuration:
+        // no warm-up, one timed iteration, tiny budget
+        let mut b = Bench::new().with_min_iters(0).with_warmup_iters(0).with_budget_ms(0.0);
+        assert_eq!(b.min_iters, 1, "min_iters clamps to 1");
+        assert_eq!(b.warmup_iters, 0);
+        let mut calls = 0u32;
+        let r = b.run("once", || {
+            calls += 1;
+            std::hint::black_box(calls);
+        });
+        assert_eq!(r.iters, 1, "zero budget + min 1 => exactly one timed iteration");
+        assert_eq!(calls, 1, "no warm-up calls");
     }
 
     #[test]

@@ -1,10 +1,18 @@
 //! The reuse store: a bounded, TTL'd, owner-tagged map from quantized
 //! signatures to cloud-grade action chunks.
 //!
+//! Scale: the backing is a fixed power-of-two array of shards, each with
+//! its own bounded entry vector, exact-match index and seeded eviction
+//! stream. Shard routing hashes the map key through a fixed-key FNV-1a
+//! (the std hasher is randomly keyed per process and would break
+//! replay). A single shard reproduces the historical single-map store
+//! bit for bit.
+//!
 //! Determinism: lookups and inserts never iterate the backing `HashMap`
 //! (iteration order is the only non-deterministic thing about it), and
-//! the store's PRNG is drawn **only** when an at-capacity admission must
-//! evict — an under-capacity run consumes zero draws and replays exactly.
+//! a shard's PRNG is drawn **only** when an at-capacity admission must
+//! evict — an under-capacity run consumes zero draws and replays exactly,
+//! no matter how its traffic is spread across shards.
 
 use super::signature::Signature;
 use super::stats::CacheStats;
@@ -12,6 +20,7 @@ use crate::config::CacheConfig;
 use crate::util::Pcg32;
 use crate::vla::ModelOut;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 
 /// Outcome of a probe.
 pub enum ProbeOutcome {
@@ -33,18 +42,66 @@ struct Entry {
     owner: usize,
 }
 
-/// Bounded reuse cache with seeded-deterministic random replacement.
+/// Deterministic 64-bit FNV-1a. Shard routing must replay across runs
+/// and processes, and `std`'s default hasher is randomly keyed per
+/// process — so shard selection hashes through this fixed-key hasher.
+struct Fnv1a(u64);
+
+impl Hasher for Fnv1a {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01B3);
+        }
+    }
+}
+
+/// Map key of a stored entry (mirrors `ReuseStore::key`).
+fn entry_key(shared: bool, e: &Entry) -> (usize, Signature) {
+    (if shared { 0 } else { e.owner }, e.sig)
+}
+
+/// One shard: a bounded entry vector, its exact-match index, and a
+/// private eviction stream drawn only on at-capacity admission.
+struct Shard {
+    rng: Pcg32,
+    map: HashMap<(usize, Signature), usize>,
+    entries: Vec<Entry>,
+}
+
+impl Shard {
+    /// Remove the entry at `idx` (swap-remove; the moved tail entry's map
+    /// slot is re-pointed).
+    fn remove_at(&mut self, idx: usize, shared: bool) {
+        let old = entry_key(shared, &self.entries[idx]);
+        self.map.remove(&old);
+        self.entries.swap_remove(idx);
+        if idx < self.entries.len() {
+            let moved = entry_key(shared, &self.entries[idx]);
+            self.map.insert(moved, idx);
+        }
+    }
+}
+
+/// Bounded, sharded reuse cache with seeded-deterministic random
+/// replacement.
 ///
 /// In shared mode every session reads and writes one namespace; with
 /// `shared = false` the map is keyed by (owner, signature) so each
 /// session keeps a private tier inside the same bounded store.
 pub struct ReuseStore {
     capacity: usize,
+    /// Per-shard entry bound; `shard_cap * shards.len() <= capacity`.
+    shard_cap: usize,
+    /// `shards.len() - 1` (the shard count is a power of two).
+    mask: usize,
     ttl_rounds: u64,
     shared: bool,
-    rng: Pcg32,
-    map: HashMap<(usize, Signature), usize>,
-    entries: Vec<Entry>,
+    shards: Vec<Shard>,
     stats: CacheStats,
     /// High-water mark: one past the latest admission round. Per-session
     /// callers whose round counter restarts (a fresh episode over a
@@ -54,37 +111,77 @@ pub struct ReuseStore {
 }
 
 impl ReuseStore {
+    /// Single-shard store: exactly the historical (PR 5) layout — one
+    /// map, one entry vector, one eviction stream on `0xCAC_4E`.
     pub fn new(capacity: usize, ttl_rounds: u64, shared: bool, seed: u64) -> ReuseStore {
+        ReuseStore::with_shards(capacity, ttl_rounds, shared, seed, 1)
+    }
+
+    /// Sharded store. `n_shards` is rounded up to a power of two, then
+    /// halved until every shard holds at least one entry, so the total
+    /// bound `shard_capacity() * n_shards()` never exceeds `capacity`.
+    /// Shard `i` evicts from stream `0xCAC_4E ^ (i << 20)`, so one shard
+    /// reproduces [`ReuseStore::new`] bit for bit.
+    pub fn with_shards(
+        capacity: usize,
+        ttl_rounds: u64,
+        shared: bool,
+        seed: u64,
+        n_shards: usize,
+    ) -> ReuseStore {
         let capacity = capacity.max(1);
+        let mut n = n_shards.max(1).next_power_of_two();
+        while n > 1 && capacity / n == 0 {
+            n /= 2;
+        }
+        let shard_cap = capacity / n;
+        let shards = (0..n)
+            .map(|i| Shard {
+                rng: Pcg32::new(seed, 0xCAC_4E ^ ((i as u64) << 20)),
+                map: HashMap::with_capacity(shard_cap),
+                entries: Vec::with_capacity(shard_cap),
+            })
+            .collect();
         ReuseStore {
             capacity,
+            shard_cap,
+            mask: n - 1,
             ttl_rounds,
             shared,
-            rng: Pcg32::new(seed, 0xCAC_4E),
-            map: HashMap::with_capacity(capacity),
-            entries: Vec::with_capacity(capacity),
+            shards,
             stats: CacheStats::default(),
             next_round: 0,
         }
     }
 
     /// Store described by a `[cache]` config section. `base_seed` seeds
-    /// the eviction stream when the section doesn't pin its own seed.
+    /// the eviction streams when the section doesn't pin its own seed.
     pub fn from_config(cfg: &CacheConfig, base_seed: u64) -> ReuseStore {
         let seed = if cfg.seed != 0 { cfg.seed } else { base_seed ^ 0x5EED_CACE };
-        ReuseStore::new(cfg.capacity, cfg.ttl_rounds, cfg.shared, seed)
+        ReuseStore::with_shards(cfg.capacity, cfg.ttl_rounds, cfg.shared, seed, cfg.shards)
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.shards.iter().map(|s| s.entries.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.shards.iter().all(|s| s.entries.is_empty())
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Number of shards (a power of two; 1 is the historical store).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard entry bound. The effective total capacity is
+    /// `n_shards() * shard_capacity()` (≤ `capacity()` after rounding).
+    pub fn shard_capacity(&self) -> usize {
+        self.shard_cap
     }
 
     pub fn stats(&self) -> &CacheStats {
@@ -103,62 +200,72 @@ impl ReuseStore {
         (if self.shared { 0 } else { owner }, sig)
     }
 
+    /// Shard routing: fixed-key FNV-1a over the map key, masked to the
+    /// power-of-two shard count (the single-shard store skips the hash).
+    fn shard_of(&self, key: &(usize, Signature)) -> usize {
+        if self.mask == 0 {
+            return 0;
+        }
+        let mut h = Fnv1a(0xCBF2_9CE4_8422_2325);
+        key.hash(&mut h);
+        (h.finish() as usize) & self.mask
+    }
+
     /// Look up a signature at scheduler round `round` on behalf of session
     /// `owner`. Stale entries are evicted on discovery so the store never
     /// serves a chunk older than its TTL.
     pub fn probe(&mut self, sig: &Signature, round: u64, owner: usize) -> ProbeOutcome {
         self.stats.probes += 1;
-        let Some(&idx) = self.map.get(&self.key(*sig, owner)) else {
+        let key = self.key(*sig, owner);
+        let si = self.shard_of(&key);
+        let shared = self.shared;
+        let ttl = self.ttl_rounds;
+        let shard = &mut self.shards[si];
+        let Some(&idx) = shard.map.get(&key) else {
             self.stats.misses += 1;
             return ProbeOutcome::Miss;
         };
-        if round.saturating_sub(self.entries[idx].round) > self.ttl_rounds {
+        if round.saturating_sub(shard.entries[idx].round) > ttl {
             self.stats.misses += 1;
             self.stats.stale += 1;
-            self.remove_at(idx);
+            shard.remove_at(idx, shared);
             return ProbeOutcome::Stale;
         }
         self.stats.hits += 1;
-        ProbeOutcome::Hit(self.entries[idx].out.clone())
+        ProbeOutcome::Hit(shard.entries[idx].out.clone())
     }
 
     /// Admit a cloud reply. An existing signature is refreshed in place;
-    /// a new one at capacity displaces a seeded-random victim.
+    /// a new one at shard capacity displaces a seeded-random victim from
+    /// its own shard.
     pub fn admit(&mut self, sig: Signature, out: ModelOut, round: u64, owner: usize) {
         self.stats.admissions += 1;
         self.next_round = self.next_round.max(round.saturating_add(1));
-        if let Some(&idx) = self.map.get(&self.key(sig, owner)) {
+        let key = self.key(sig, owner);
+        let si = self.shard_of(&key);
+        let shared = self.shared;
+        let cap = self.shard_cap;
+        let shard = &mut self.shards[si];
+        if let Some(&idx) = shard.map.get(&key) {
             self.stats.refreshed += 1;
-            let e = &mut self.entries[idx];
+            let e = &mut shard.entries[idx];
             e.out = out;
             e.round = round;
             e.owner = owner;
             return;
         }
-        if self.entries.len() >= self.capacity {
+        if shard.entries.len() >= cap {
             // seeded random replacement: the only PRNG draw in the store
-            let victim = self.rng.below(self.entries.len() as u32) as usize;
+            let victim = shard.rng.below(shard.entries.len() as u32) as usize;
             self.stats.evictions += 1;
-            let old = self.key(self.entries[victim].sig, self.entries[victim].owner);
-            self.map.remove(&old);
-            self.entries[victim] = Entry { sig, out, round, owner };
-            self.map.insert(self.key(sig, owner), victim);
+            let old = entry_key(shared, &shard.entries[victim]);
+            shard.map.remove(&old);
+            shard.entries[victim] = Entry { sig, out, round, owner };
+            shard.map.insert(key, victim);
             return;
         }
-        self.entries.push(Entry { sig, out, round, owner });
-        self.map.insert(self.key(sig, owner), self.entries.len() - 1);
-    }
-
-    /// Remove the entry at `idx` (swap-remove; the moved tail entry's map
-    /// slot is re-pointed).
-    fn remove_at(&mut self, idx: usize) {
-        let old = self.key(self.entries[idx].sig, self.entries[idx].owner);
-        self.map.remove(&old);
-        self.entries.swap_remove(idx);
-        if idx < self.entries.len() {
-            let moved = self.key(self.entries[idx].sig, self.entries[idx].owner);
-            self.map.insert(moved, idx);
-        }
+        shard.entries.push(Entry { sig, out, round, owner });
+        shard.map.insert(key, shard.entries.len() - 1);
     }
 }
 
@@ -190,7 +297,10 @@ mod tests {
         let mut s = ReuseStore::new(8, 10, true, 1);
         assert!(matches!(s.probe(&sig(0.1), 0, 0), ProbeOutcome::Miss));
         s.admit(sig(0.1), out(1), 0, 0);
-        assert!(matches!(s.probe(&sig(0.1), 3, 5), ProbeOutcome::Hit(_)), "shared tier crosses owners");
+        assert!(
+            matches!(s.probe(&sig(0.1), 3, 5), ProbeOutcome::Hit(_)),
+            "shared tier crosses owners"
+        );
         assert!(matches!(s.probe(&sig(0.7), 3, 0), ProbeOutcome::Miss));
         assert_eq!(s.stats().probes, 3);
         assert_eq!(s.stats().hits, 1);
@@ -201,7 +311,10 @@ mod tests {
     fn ttl_expires_and_drops_the_entry() {
         let mut s = ReuseStore::new(8, 10, true, 1);
         s.admit(sig(0.1), out(1), 0, 0);
-        assert!(matches!(s.probe(&sig(0.1), 10, 0), ProbeOutcome::Hit(_)), "age == ttl still fresh");
+        assert!(
+            matches!(s.probe(&sig(0.1), 10, 0), ProbeOutcome::Hit(_)),
+            "age == ttl still fresh"
+        );
         assert!(matches!(s.probe(&sig(0.1), 11, 0), ProbeOutcome::Stale));
         assert_eq!(s.len(), 0, "stale entry dropped on discovery");
         assert!(matches!(s.probe(&sig(0.1), 11, 0), ProbeOutcome::Miss));
@@ -272,9 +385,89 @@ mod tests {
             for i in 0..30 {
                 s.admit(sig(i as f64), out(i), i, 0);
             }
-            (0..30).map(|i| matches!(s.probe(&sig(i as f64), 999, 0), ProbeOutcome::Hit(_))).collect()
+            (0..30)
+                .map(|i| matches!(s.probe(&sig(i as f64), 999, 0), ProbeOutcome::Hit(_)))
+                .collect()
         };
         assert_eq!(run(42), run(42), "same seed, same survivors");
         assert_ne!(run(42), run(43), "eviction stream is seed-driven");
+    }
+
+    #[test]
+    fn one_shard_store_is_the_single_map_store() {
+        // with_shards(.., 1) must replay new() exactly — same eviction
+        // stream (shard 0 keeps 0xCAC_4E), same survivors, same counters
+        let survivors = |s: &mut ReuseStore| -> Vec<bool> {
+            for i in 0..30 {
+                s.admit(sig(i as f64), out(i), i, 0);
+            }
+            (0..30)
+                .map(|i| matches!(s.probe(&sig(i as f64), 999, 0), ProbeOutcome::Hit(_)))
+                .collect()
+        };
+        let mut a = ReuseStore::new(3, 1000, true, 42);
+        let mut b = ReuseStore::with_shards(3, 1000, true, 42, 1);
+        assert_eq!(survivors(&mut a), survivors(&mut b));
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(b.n_shards(), 1);
+        assert_eq!(b.shard_capacity(), 3);
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two_and_respects_capacity() {
+        let s = ReuseStore::with_shards(64, 10, true, 1, 3);
+        assert_eq!(s.n_shards(), 4);
+        assert_eq!(s.shard_capacity(), 16);
+        // more shards than capacity: halved until every shard holds one
+        let t = ReuseStore::with_shards(4, 10, true, 1, 64);
+        assert_eq!(t.n_shards(), 4);
+        assert_eq!(t.shard_capacity(), 1);
+        assert!(t.n_shards() * t.shard_capacity() <= t.capacity());
+    }
+
+    #[test]
+    fn sharded_capacity_bound_holds_in_total() {
+        let mut s = ReuseStore::with_shards(8, 1000, true, 7, 4);
+        for i in 0..100 {
+            s.admit(sig(i as f64), out(i), i, 0);
+            assert!(s.len() <= 8, "len {} at admit {i}", s.len());
+        }
+        // counters reconcile: every admission inserted or refreshed, and
+        // every insert is either resident or was displaced by an eviction
+        let st = *s.stats();
+        assert_eq!(st.admissions, 100);
+        assert_eq!(st.admissions - st.refreshed - st.evictions, s.len() as u64);
+        // the index stays consistent: every surviving entry is probeable
+        let resident = s.len();
+        let mut live = 0;
+        for i in 0..100 {
+            if matches!(s.probe(&sig(i as f64), 1000, 0), ProbeOutcome::Hit(_)) {
+                live += 1;
+            }
+        }
+        assert_eq!(live, resident);
+    }
+
+    #[test]
+    fn under_capacity_sharded_store_matches_single_map_outcomes() {
+        // no shard ever fills (shard_cap >= distinct keys) → no draws →
+        // shard routing is unobservable: every probe outcome and every
+        // counter matches the single-map store exactly
+        for shards in [1usize, 2, 4, 8] {
+            let mut a = ReuseStore::new(512, 50, true, 9);
+            let mut b = ReuseStore::with_shards(512, 50, true, 9, shards);
+            for i in 0..40 {
+                a.admit(sig(i as f64), out(i), i, 0);
+                b.admit(sig(i as f64), out(i), i, 0);
+            }
+            for i in 0..40 {
+                let hit_a = matches!(a.probe(&sig(i as f64), 45, 1), ProbeOutcome::Hit(_));
+                let hit_b = matches!(b.probe(&sig(i as f64), 45, 1), ProbeOutcome::Hit(_));
+                assert_eq!(hit_a, hit_b, "key {i} diverged at {shards} shards");
+            }
+            assert_eq!(a.stats(), b.stats(), "{shards} shards");
+            assert_eq!(a.len(), b.len());
+            assert_eq!(b.stats().evictions, 0, "under-capacity run must not evict");
+        }
     }
 }

@@ -156,7 +156,8 @@ impl<'a> Parser<'a> {
                             }
                             let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
                                 .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
                             out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
                             self.i += 4;
                         }

@@ -369,6 +369,11 @@ pub struct CacheConfig {
     /// Fleet-shared tier: false restricts each session to its own entries
     /// (per-session speculative reuse only).
     pub shared: bool,
+    /// Backing shards (rounded up to a power of two, capped so each shard
+    /// holds at least one entry). 1 — the default — is the historical
+    /// single-map store; larger values spread capacity and eviction
+    /// streams across independently bounded shards for fleet-scale runs.
+    pub shards: usize,
 }
 
 impl Default for CacheConfig {
@@ -383,6 +388,7 @@ impl Default for CacheConfig {
             max_zscore: 8.0,
             probe_ms: 2.0,
             shared: true,
+            shards: 1,
         }
     }
 }
@@ -789,6 +795,7 @@ impl SystemConfig {
         c.max_zscore = v.f64_or("cache.max_zscore", c.max_zscore);
         c.probe_ms = v.f64_or("cache.probe_ms", c.probe_ms);
         c.shared = v.bool_or("cache.shared", c.shared);
+        c.shards = v.usize_or("cache.shards", c.shards);
 
         self.models.enabled = v.bool_or("models.enabled", self.models.enabled);
         self.models.families = v.str_or("models.families", &self.models.families).to_string();
@@ -920,10 +927,11 @@ mod tests {
         assert_eq!(c.cache.capacity, 256);
         assert_eq!(c.cache.ttl_rounds, 128);
         assert!(c.cache.shared);
+        assert_eq!(c.cache.shards, 1, "single-map store by default (bit-identity)");
         let mut c = SystemConfig::default();
         let v = super::super::parse::parse_toml(
             "[cache]\nenabled = true\ncapacity = 64\nttl_rounds = 32\nseed = 9\n\
-             quant = 0.05\nmax_zscore = 4.0\nshared = false",
+             quant = 0.05\nmax_zscore = 4.0\nshared = false\nshards = 8",
         )
         .unwrap();
         c.apply_value(&v);
@@ -934,6 +942,7 @@ mod tests {
         assert_eq!(c.cache.quant, 0.05);
         assert_eq!(c.cache.max_zscore, 4.0);
         assert!(!c.cache.shared);
+        assert_eq!(c.cache.shards, 8);
         // untouched keys keep defaults
         assert_eq!(c.cache.probe_ms, 2.0);
         assert_eq!(c.cache.z_quant, 4.0);

@@ -89,7 +89,14 @@ impl RapidDispatcher {
         let m_acc_hat = self.acc_win.normalize(feats.m_acc);
         let m_tau_hat = self.tau_win.normalize(feats.m_tau);
         let outcome =
-            fusion::evaluate_full(m_acc_hat, m_tau_hat, feats.m_acc, feats.m_tau, feats.v, &self.cfg);
+            fusion::evaluate_full(
+                m_acc_hat,
+                m_tau_hat,
+                feats.m_acc,
+                feats.m_tau,
+                feats.v,
+                &self.cfg,
+            );
         let dispatch = outcome.triggered && self.cooldown.ready();
         let eval = TriggerEval {
             m_acc_raw: feats.m_acc,
@@ -149,8 +156,10 @@ impl RapidDispatcher {
 
     pub fn reset(&mut self) {
         self.kin.reset();
-        self.acc_win = ScoreWindow::new(self.cfg.window_acc, self.cfg.eps, (self.cfg.window_acc / 8).max(8));
-        self.tau_win = ScoreWindow::new(self.cfg.window_tau, self.cfg.eps, (self.cfg.window_acc / 8).max(8));
+        self.acc_win =
+            ScoreWindow::new(self.cfg.window_acc, self.cfg.eps, (self.cfg.window_acc / 8).max(8));
+        self.tau_win =
+            ScoreWindow::new(self.cfg.window_tau, self.cfg.eps, (self.cfg.window_acc / 8).max(8));
         self.cooldown = Cooldown::new(self.cfg.cooldown);
         self.last_eval = None;
     }

@@ -80,7 +80,10 @@ pub fn run(sys: &SystemConfig, task: TaskKind) -> (Table, Vec<DegradedRow>) {
             sys.fleet.n_sessions.max(1),
             if sys.faults.enabled { "on" } else { "off" }
         ),
-        &["Method", "Clean Lat.", "Chaos Lat.", "Success", "Cloud Ev.", "Failovers", "Degraded", "Dropped", "Deferred"],
+        &[
+            "Method", "Clean Lat.", "Chaos Lat.", "Success", "Cloud Ev.", "Failovers", "Degraded",
+            "Dropped", "Deferred",
+        ],
     );
     for r in &rows {
         t.row(&[

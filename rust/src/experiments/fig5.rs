@@ -28,7 +28,8 @@ pub fn run(sys: &SystemConfig, backends: &mut Backends) -> Fig5Data {
     let trace = out.trace.unwrap();
     let offload = trace.values("offload");
     let critical = trace.values("critical");
-    let offload_steps: Vec<usize> = offload.iter().enumerate().filter(|(_, &v)| v > 0.5).map(|(i, _)| i).collect();
+    let offload_steps: Vec<usize> =
+        offload.iter().enumerate().filter(|(_, &v)| v > 0.5).map(|(i, _)| i).collect();
     let mut windows = Vec::new();
     let mut start = None;
     for (i, &c) in critical.iter().enumerate() {

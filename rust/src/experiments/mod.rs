@@ -27,7 +27,10 @@ pub struct Backends {
 impl Backends {
     /// Fast analytic surrogates (unit tests, smoke runs, sweeps).
     pub fn analytic(seed: u64) -> Backends {
-        Backends { edge: Box::new(AnalyticBackend::edge(seed)), cloud: Box::new(AnalyticBackend::cloud(seed)) }
+        Backends {
+            edge: Box::new(AnalyticBackend::edge(seed)),
+            cloud: Box::new(AnalyticBackend::cloud(seed)),
+        }
     }
 
     /// Real AOT-compiled models via PJRT; falls back to analytic (with a

@@ -70,7 +70,11 @@ mod tests {
         let sys = SystemConfig::default();
         let r = run(&sys, 0.0);
         // 500 Hz budget = 2 ms; the dispatcher must use well under 5%
-        assert!(r.tick_budget_frac < 0.05, "tick uses {:.3}% of budget", 100.0 * r.tick_budget_frac);
+        assert!(
+            r.tick_budget_frac < 0.05,
+            "tick uses {:.3}% of budget",
+            100.0 * r.tick_budget_frac
+        );
         assert!(r.tick_ns > 0.0);
     }
 

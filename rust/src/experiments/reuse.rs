@@ -46,7 +46,11 @@ pub struct ReuseRow {
     pub completed: bool,
 }
 
-fn arm(sys: &SystemConfig, task: TaskKind, kind: PolicyKind) -> (f64, f64, u64, CacheStats, u64, bool) {
+fn arm(
+    sys: &SystemConfig,
+    task: TaskKind,
+    kind: PolicyKind,
+) -> (f64, f64, u64, CacheStats, u64, bool) {
     let res = Fleet::local(sys, task, kind).run();
     let summary = res.summary();
     let expect = task.seq_len();

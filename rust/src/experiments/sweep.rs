@@ -40,7 +40,8 @@ pub fn run(
             );
             let row = aggregate(PolicyKind::Rapid, &res.episodes);
             let cloud_events =
-                res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / res.episodes.len() as f64;
+                res.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>()
+                    / res.episodes.len() as f64;
             points.push(SweepPoint {
                 theta_comp: tc,
                 theta_red: tr,

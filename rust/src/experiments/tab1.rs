@@ -19,7 +19,11 @@ pub struct Tab1Row {
     pub total_gb: f64,
 }
 
-pub fn run(sys_base: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Table, Vec<Tab1Row>) {
+pub fn run(
+    sys_base: &SystemConfig,
+    backends: &mut Backends,
+    episodes: usize,
+) -> (Table, Vec<Tab1Row>) {
     let mut rows = Vec::new();
     for noise in [NoiseLevel::Standard, NoiseLevel::VisualNoise, NoiseLevel::Distraction] {
         let mut sys = sys_base.clone();
@@ -45,7 +49,10 @@ pub fn run(sys_base: &SystemConfig, backends: &mut Backends, episodes: usize) ->
     }
     let mut t = Table::new(
         "TABLE I — Vision-based dynamic strategy under noise",
-        &["Noise", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.", "Total Load"],
+        &[
+            "Noise", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.",
+            "Total Load",
+        ],
     );
     for r in &rows {
         t.row(&[
@@ -58,7 +65,10 @@ pub fn run(sys_base: &SystemConfig, backends: &mut Backends, episodes: usize) ->
             gb(r.total_gb),
         ]);
     }
-    t.footnote("Lat. includes computation, transmission and dynamic routing overhead; Load = parameters resident (GB).");
+    t.footnote(
+        "Lat. includes computation, transmission and dynamic routing overhead; Load = \
+         parameters resident (GB).",
+    );
     (t, rows)
 }
 
@@ -73,8 +83,18 @@ mod tests {
         let (_, rows) = run(&sys, &mut backends, 2);
         assert_eq!(rows.len(), 3);
         // total latency increases monotonically with noise
-        assert!(rows[0].total_lat < rows[1].total_lat, "std {} vs noise {}", rows[0].total_lat, rows[1].total_lat);
-        assert!(rows[1].total_lat < rows[2].total_lat, "noise {} vs distract {}", rows[1].total_lat, rows[2].total_lat);
+        assert!(
+            rows[0].total_lat < rows[1].total_lat,
+            "std {} vs noise {}",
+            rows[0].total_lat,
+            rows[1].total_lat
+        );
+        assert!(
+            rows[1].total_lat < rows[2].total_lat,
+            "noise {} vs distract {}",
+            rows[1].total_lat,
+            rows[2].total_lat
+        );
         // edge residency shrinks (split point moves cloudward)
         assert!(rows[2].edge_gb < rows[0].edge_gb);
         // total load is conserved in every row

@@ -66,7 +66,10 @@ pub fn run(sys: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Tab
             format!("{:.4}", s.w_crit),
         ]);
     }
-    t.footnote("P_red/P_crit: share of steps with normalized attention below/above the uniform baseline 1/L.");
+    t.footnote(
+        "P_red/P_crit: share of steps with normalized attention below/above the uniform \
+         baseline 1/L.",
+    );
     (t, rows)
 }
 

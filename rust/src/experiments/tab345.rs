@@ -22,7 +22,8 @@ impl MainRows {
     /// End-to-end speedup of RAPID over the vision baseline (the paper's
     /// 1.73× headline).
     pub fn speedup_vs_vision(&self) -> f64 {
-        self.get(PolicyKind::VisionBased).total_lat_mean / self.get(PolicyKind::Rapid).total_lat_mean
+        self.get(PolicyKind::VisionBased).total_lat_mean
+            / self.get(PolicyKind::Rapid).total_lat_mean
     }
 }
 
@@ -39,7 +40,10 @@ fn comparison(
 fn render(title: &str, rows: &MainRows, names: &[(PolicyKind, &str)]) -> Table {
     let mut t = Table::new(
         title,
-        &["Method", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.", "Total Load"],
+        &[
+            "Method", "Cloud Lat.", "Cloud Load", "Edge Lat.", "Edge Load", "Total Lat.",
+            "Total Load",
+        ],
     );
     for (k, name) in names {
         t.row(&rows.get(*k).table_cells(Some(name)));
@@ -49,7 +53,8 @@ fn render(title: &str, rows: &MainRows, names: &[(PolicyKind, &str)]) -> Table {
 
 /// Table III (LIBERO preset expected in `sys`).
 pub fn tab3(sys: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Table, MainRows) {
-    let kinds = [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid];
+    let kinds =
+        [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid];
     let rows = comparison(sys, backends, &kinds, episodes);
     let t = render(
         "TABLE III — Edge-cloud collaborative inference on simulation benchmarks (LIBERO)",
@@ -66,7 +71,8 @@ pub fn tab3(sys: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Ta
 
 /// Table IV (real-world preset expected in `sys`).
 pub fn tab4(sys: &SystemConfig, backends: &mut Backends, episodes: usize) -> (Table, MainRows) {
-    let kinds = [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid];
+    let kinds =
+        [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid];
     let rows = comparison(sys, backends, &kinds, episodes);
     let t = render(
         "TABLE IV — Edge-cloud collaborative inference on real-world environments",
@@ -138,7 +144,8 @@ mod tests {
         let (_, sim_rows) = tab3(&libero_preset(), &mut b, 2);
         let (_, real_rows) = tab4(&realworld_preset(), &mut b, 2);
         assert!(
-            real_rows.get(PolicyKind::Rapid).total_lat_mean > sim_rows.get(PolicyKind::Rapid).total_lat_mean * 0.9
+            real_rows.get(PolicyKind::Rapid).total_lat_mean
+                > sim_rows.get(PolicyKind::Rapid).total_lat_mean * 0.9
         );
         assert!((real_rows.get(PolicyKind::Rapid).total_gb - 14.5).abs() < 1e-6);
     }

@@ -70,7 +70,11 @@ impl FaultPlan {
     }
 
     pub fn degrade(mut self, start: u64, end: u64, bw_mbps: f64, rtt_ms: f64) -> FaultPlan {
-        self.events.push(FaultEvent::LinkDegrade { window: Window::new(start, end), bw_mbps, rtt_ms });
+        self.events.push(FaultEvent::LinkDegrade {
+            window: Window::new(start, end),
+            bw_mbps,
+            rtt_ms,
+        });
         self
     }
 
@@ -101,7 +105,8 @@ impl FaultPlan {
             plan = plan.outage(f.outage_start, f.outage_end);
         }
         if f.degrade_end > f.degrade_start {
-            plan = plan.degrade(f.degrade_start, f.degrade_end, f.degrade_bw_mbps, f.degrade_rtt_ms);
+            plan =
+                plan.degrade(f.degrade_start, f.degrade_end, f.degrade_bw_mbps, f.degrade_rtt_ms);
         }
         if f.crash_end > f.crash_start {
             plan = plan.crash(f.crash_endpoint, f.crash_start, f.crash_end);

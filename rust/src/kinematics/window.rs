@@ -22,7 +22,8 @@ impl ScoreWindow {
     /// Push the raw score and return the normalized anomaly score
     /// M̂ = (M - μ)/(σ + ε), or 0 during warm-up.
     pub fn normalize(&mut self, raw: f64) -> f64 {
-        let z = if self.stats.len() >= self.warmup { self.stats.zscore(raw, self.eps) } else { 0.0 };
+        let z =
+            if self.stats.len() >= self.warmup { self.stats.zscore(raw, self.eps) } else { 0.0 };
         self.stats.push(raw);
         z
     }

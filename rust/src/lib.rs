@@ -29,8 +29,10 @@
 //!   disabled the whole zoo constructs nothing — bit-identical serving.
 //! * [`net`] — analytic link model (with time-varying fault profiles) +
 //!   the real TCP path: length-prefixed wire protocol with single and
-//!   *cross-session batch* frames, blocking client, threaded cloud server
-//!   (batcher in front of a model-owner worker).
+//!   *cross-session batch* frames (batch paths encode into a reusable
+//!   buffer — zero allocations per frame in steady state), blocking
+//!   client, threaded cloud server (batcher in front of a model-owner
+//!   worker).
 //! * [`faults`] — deterministic fault injection: seeded, schedule-driven
 //!   [`faults::FaultPlan`] (link outages, bandwidth/RTT collapse, endpoint
 //!   crash/recover, reply drop/delay) compiled into a
@@ -38,7 +40,10 @@
 //!   plans are bit-identical to no engine at all.
 //! * [`cache`] — the redundancy-aware reuse cache: quantized kinematic
 //!   [`cache::Signature`]s over a bounded, TTL'd [`cache::ReuseStore`]
-//!   with seeded-deterministic eviction. Two tiers share the store:
+//!   with seeded-deterministic eviction, backed by a power-of-two shard
+//!   array (`cache.shards`; 1 — the default — reproduces the historical
+//!   single-map store bit for bit, higher counts bound each shard
+//!   independently for fleet-scale runs). Two tiers share the store:
 //!   per-session speculative chunk reuse (the driver probes before every
 //!   cloud dispatch in a redundant phase) and the fleet-shared result
 //!   cache (cross-session batch replies admitted on flush, so one robot's
@@ -65,6 +70,10 @@
 //!   routed around, lost replies retried on the least-loaded survivor,
 //!   exhausted batches re-served from the edge
 //!   (`EpisodeState::fail_cloud`), so no session ever wedges in suspend.
+//!   Fleet bookkeeping is O(batch) per event — incremental
+//!   active/finished counters, epoch-tagged lazy fault-edge adoption, a
+//!   sorted arrival list for dead-air jumps — so `rapid bench scale`
+//!   pushes 100k in-process sessions through one scheduler.
 //! * [`experiments`] — one generator per paper table/figure.
 //!
 //! Python runs once at build time (`make artifacts`); the binary built from

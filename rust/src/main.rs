@@ -5,7 +5,9 @@
 //!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
 //!             [--analytic] [--trace out.csv] [--config file.toml]
 //! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo
-//!             |workload|all> [--json BENCH_serve.json] [--budget-ms MS]
+//!             |workload|scale|all> [--json BENCH_serve.json] [--budget-ms MS]
+//!             (scale also takes --sessions N: the Poisson fleet ladder
+//!              climbs to N in-process sessions, e.g. --sessions 100000)
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
 //! rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E] [--batch B]
 //!             [--inflight I] [--endpoints P] [--seed S] [--config file.toml]
@@ -53,11 +55,14 @@ fn print_help() {
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
          \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve\n\
-         \x20             |zoo|workload|all>\n\
+         \x20             |zoo|workload|scale|all>\n\
          \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
          \x20             (serve: benchkit timings of the serve layer, written as\n\
          \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
-         \x20              reuse: cache-off vs cache-on fleet table)\n\
+         \x20              reuse: cache-off vs cache-on fleet table;\n\
+         \x20              scale: the scale-ceiling ladder — --sessions N climbs a\n\
+         \x20              Poisson fleet to N in-process sessions, --json writes\n\
+         \x20              BENCH_scale.json; not part of `bench all`)\n\
          \x20 rapid serve [--addr A] [--batch B] [--analytic]\n\
          \x20 rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E]\n\
          \x20             [--batch B] [--inflight I] [--endpoints P] [--seed S]\n\
@@ -293,6 +298,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         "serve" => bench_serve(&sys, &flags, single),
         "zoo" => bench_zoo(&sys, &flags, single),
         "workload" => bench_workload(&sys, &flags, single),
+        "scale" => bench_scale(&sys, &flags, single),
         other => eprintln!("unknown bench {other}"),
     };
 
@@ -497,6 +503,152 @@ fn bench_workload(sys: &SystemConfig, flags: &Flags, write_json: bool) {
                 .run();
             std::hint::black_box(res.total_steps());
         });
+    }
+
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// `rapid bench scale`: the in-process scale ceiling. Micro benches of
+/// the three layers the ceiling rests on — the virtual-time event queue,
+/// the sharded reuse store under eviction pressure, and the reusable
+/// frame-encode buffer — then a Poisson open-loop fleet ladder that
+/// climbs to `--sessions N` (default 10 000; the tentpole target is
+/// 100 000). Fleet rungs run one timed iteration each (no warm-up): the
+/// measurement *is* the run. `--json BENCH_scale.json` writes the
+/// machine-readable results; CI smokes a 2 000-session rung.
+fn bench_scale(sys: &SystemConfig, flags: &Flags, write_json: bool) {
+    use rapid::robot::TaskKind;
+    use rapid::serve::{EventKind, EventQueue};
+    use rapid::vla::AnalyticBackend;
+
+    let sessions: usize =
+        flags.get("--sessions").and_then(|s| s.parse().ok()).unwrap_or(10_000).max(1);
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("scale ceiling");
+
+    // micro: event-queue throughput at fleet-arrival scale — 100k mixed
+    // events through the pre-reserved heap
+    bench.run("scale/events/push_pop_100k", || {
+        let mut q = EventQueue::with_capacity(100_000);
+        for t in 0..25_000u64 {
+            q.push(t, EventKind::Arrival((t % 4096) as usize));
+            q.push(t, EventKind::Ready((t % 4096) as usize));
+            q.push(t, EventKind::Ready(((t * 7) % 4096) as usize));
+            q.push(t, EventKind::Deadline);
+        }
+        let mut acc = 0u64;
+        while let Some(ev) = q.pop() {
+            acc += ev.time;
+        }
+        std::hint::black_box(acc);
+    });
+
+    // micro: sharded reuse store under sustained eviction pressure —
+    // admissions and probes spread over 16 shards, far past capacity
+    {
+        let cfg = rapid::config::CacheConfig {
+            enabled: true,
+            capacity: 1024,
+            shards: 16,
+            ..Default::default()
+        };
+        let mut cloud = AnalyticBackend::cloud(7);
+        let out = rapid::vla::Backend::infer(
+            &mut cloud,
+            &[0.1; rapid::D_VIS],
+            &[0.0; rapid::D_PROP],
+            1,
+        );
+        let sigs: Vec<rapid::cache::Signature> = (0..4096u64)
+            .map(|i| {
+                let frame = rapid::robot::SensorFrame {
+                    step: 0,
+                    q: rapid::robot::Jv::splat(0.05 * (i % 61) as f32),
+                    dq: rapid::robot::Jv::splat(0.01 * (i % 13) as f32),
+                    tau: rapid::robot::Jv::ZERO,
+                };
+                rapid::cache::Signature::of(
+                    &cfg,
+                    (i % 8) as usize,
+                    &frame,
+                    None,
+                    Default::default(),
+                )
+            })
+            .collect();
+        let mut store = rapid::cache::ReuseStore::from_config(&cfg, 7);
+        bench.run("scale/cache/sharded_admit_probe_4k", || {
+            for (i, sig) in sigs.iter().enumerate() {
+                store.admit(*sig, out.clone(), i as u64, 0);
+                std::hint::black_box(matches!(
+                    store.probe(sig, i as u64, 0),
+                    rapid::cache::ProbeOutcome::Hit(_)
+                ));
+            }
+        });
+    }
+
+    // micro: batch-frame encode through the reusable buffer — the
+    // steady-state client dispatch path allocates nothing per flush
+    {
+        use rapid::net::proto::{self, InferRequest};
+        let items: Vec<(u32, InferRequest)> = (0..64u32)
+            .map(|i| {
+                let mut obs = [0f32; rapid::D_VIS];
+                obs[0] = 0.01 * i as f32;
+                (i, InferRequest { instr: i, obs, proprio: [0.0; rapid::D_PROP] })
+            })
+            .collect();
+        let mut buf: Vec<u8> = Vec::new();
+        bench.run("scale/proto/encode_batch_64_into", || {
+            proto::encode_batch_infer_into(&mut buf, &items);
+            std::hint::black_box(buf.len());
+        });
+    }
+
+    // fleet ladder: Poisson arrivals at 1%, 10%, 100% of --sessions,
+    // one episode per session, fleet-shared sharded cache on. One timed
+    // iteration per rung: a 100k-session run is its own measurement.
+    let mut bench = bench.with_min_iters(1).with_warmup_iters(0);
+    let mut rungs: Vec<usize> =
+        [sessions / 100, sessions / 10, sessions].into_iter().map(|n| n.max(1)).collect();
+    rungs.dedup();
+    for n in rungs {
+        let mut s = sys.clone();
+        s.workload.enabled = true;
+        s.workload.arrivals = "poisson".into();
+        s.workload.interarrival_rounds = 2.0;
+        s.workload.n_sessions = n;
+        s.workload.episodes_min = 1;
+        s.workload.episodes_max = 1;
+        s.fleet.n_sessions = n;
+        s.fleet.episodes_per_session = 1;
+        s.cache.enabled = true;
+        s.cache.shared = true;
+        s.cache.capacity = 4096;
+        s.cache.shards = 16;
+        let t0 = std::time::Instant::now();
+        let mut steps = 0u64;
+        bench.run(&format!("scale/fleet/{n}s/poisson/cloud_only"), || {
+            let res =
+                rapid::serve::Fleet::local(&s, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+            steps += res.total_steps();
+            std::hint::black_box(res.stats.rounds);
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  rung {n}s: {steps} steps in {wall:.2}s ({:.0} steps/s)",
+            steps as f64 / wall.max(1e-9)
+        );
     }
 
     if let Some(path) = flags.get("--json").filter(|_| write_json) {

@@ -116,7 +116,15 @@ impl PolicyRow {
         } else {
             (ms(self.edge_lat_ms), gb(self.edge_gb))
         };
-        vec![name, cl, cg, el, eg, ms_pm(self.total_lat_mean, self.total_lat_std), gb(self.total_gb)]
+        vec![
+            name,
+            cl,
+            cg,
+            el,
+            eg,
+            ms_pm(self.total_lat_mean, self.total_lat_std),
+            gb(self.total_gb),
+        ]
     }
 }
 

@@ -10,6 +10,9 @@ pub struct CloudClient {
     stream: TcpStream,
     /// Measured request round-trip times (µs).
     pub rtts_us: Vec<u64>,
+    /// Reusable encode buffer: batch frames are built here in place, so
+    /// the steady-state dispatch path allocates nothing per flush.
+    buf: Vec<u8>,
 }
 
 impl CloudClient {
@@ -17,7 +20,7 @@ impl CloudClient {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-        Ok(CloudClient { stream, rtts_us: Vec::new() })
+        Ok(CloudClient { stream, rtts_us: Vec::new(), buf: Vec::new() })
     }
 
     /// Round-trip an inference request.
@@ -47,7 +50,8 @@ impl CloudClient {
         items: &[(u32, InferRequest)],
     ) -> Result<Vec<(u32, ModelOut)>, ProtoError> {
         let t0 = Instant::now();
-        proto::write_all(&mut self.stream, &proto::encode_batch_infer(items))?;
+        proto::encode_batch_infer_into(&mut self.buf, items);
+        proto::write_all(&mut self.stream, &self.buf)?;
         match proto::read_frame(&mut self.stream)? {
             Frame::BatchResult(outs) => {
                 if outs.len() != items.len() {
@@ -81,7 +85,8 @@ impl CloudClient {
         items: &[(u32, InferRequest)],
     ) -> Result<Vec<(u32, ModelOut)>, ProtoError> {
         let t0 = Instant::now();
-        proto::write_all(&mut self.stream, &proto::encode_zoo_batch_infer(family.id(), items))?;
+        proto::encode_zoo_batch_infer_into(&mut self.buf, family.id(), items);
+        proto::write_all(&mut self.stream, &self.buf)?;
         match proto::read_frame(&mut self.stream)? {
             Frame::ZooBatchResult(fam, outs) => {
                 if fam != family.id() {

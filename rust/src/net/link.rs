@@ -89,7 +89,12 @@ impl Link {
     }
 
     /// Full offload round trip: observation up, chunk down.
-    pub fn offload_roundtrip(&mut self, obs_bytes: f64, chunk_bytes: f64, clarity: f64) -> Transfer {
+    pub fn offload_roundtrip(
+        &mut self,
+        obs_bytes: f64,
+        chunk_bytes: f64,
+        clarity: f64,
+    ) -> Transfer {
         let up = self.transfer(obs_bytes, clarity);
         let down = self.transfer(chunk_bytes, 1.0); // the reply is tiny/clean
         Transfer { ms: up.ms + down.ms, retransmissions: up.retransmissions + down.retransmissions }

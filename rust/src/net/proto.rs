@@ -135,82 +135,149 @@ fn put_result_body(body: &mut Vec<u8>, out: &ModelOut) {
     }
 }
 
+/// Begin a frame in `buf`: clear it and reserve the 4-byte length slot.
+/// Returns the slot offset for [`end_frame`]. Reusing one long-lived
+/// buffer across calls keeps steady-state batch traffic allocation-free
+/// (the buffer grows to the largest frame ever encoded and stays there).
+fn begin_frame(buf: &mut Vec<u8>) -> usize {
+    buf.clear();
+    let at = buf.len();
+    buf.extend_from_slice(&[0u8; 4]);
+    at
+}
+
+/// Patch the length slot reserved by [`begin_frame`] with the number of
+/// body bytes appended since.
+fn end_frame(buf: &mut Vec<u8>, at: usize) {
+    let len = (buf.len() - at - 4) as u32;
+    buf[at..at + 4].copy_from_slice(&len.to_le_bytes());
+}
+
 pub fn encode_infer(req: &InferRequest) -> Vec<u8> {
-    let mut body = vec![TAG_INFER];
-    put_infer_body(&mut body, req);
-    frame(body)
+    let mut buf = Vec::new();
+    encode_infer_into(&mut buf, req);
+    buf
+}
+
+/// Encode an inference request into a reusable buffer (cleared first).
+pub fn encode_infer_into(buf: &mut Vec<u8>, req: &InferRequest) {
+    let at = begin_frame(buf);
+    buf.push(TAG_INFER);
+    put_infer_body(buf, req);
+    end_frame(buf, at);
 }
 
 pub fn encode_result(out: &ModelOut) -> Vec<u8> {
-    let mut body = vec![TAG_RESULT];
-    put_result_body(&mut body, out);
-    frame(body)
+    let mut buf = Vec::new();
+    encode_result_into(&mut buf, out);
+    buf
+}
+
+/// Encode a response into a reusable buffer (cleared first).
+pub fn encode_result_into(buf: &mut Vec<u8>, out: &ModelOut) {
+    let at = begin_frame(buf);
+    buf.push(TAG_RESULT);
+    put_result_body(buf, out);
+    end_frame(buf, at);
 }
 
 /// Encode a cross-session request batch; items are (session id, request).
 pub fn encode_batch_infer(items: &[(u32, InferRequest)]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_batch_infer_into(&mut buf, items);
+    buf
+}
+
+/// [`encode_batch_infer`] into a reusable buffer (cleared first) — the
+/// client's batch hot path, one allocation-free frame per flush.
+pub fn encode_batch_infer_into(buf: &mut Vec<u8>, items: &[(u32, InferRequest)]) {
     assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
-    let mut body = vec![TAG_BATCH_INFER];
-    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    let at = begin_frame(buf);
+    buf.push(TAG_BATCH_INFER);
+    buf.extend_from_slice(&(items.len() as u16).to_le_bytes());
     for (session, req) in items {
-        body.extend_from_slice(&session.to_le_bytes());
-        put_infer_body(&mut body, req);
+        buf.extend_from_slice(&session.to_le_bytes());
+        put_infer_body(buf, req);
     }
-    frame(body)
+    end_frame(buf, at);
 }
 
 /// Encode a response batch; items are (session id, output) in request order.
 pub fn encode_batch_result(items: &[(u32, ModelOut)]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_batch_result_into(&mut buf, items);
+    buf
+}
+
+/// [`encode_batch_result`] into a reusable buffer (cleared first) — the
+/// server's reply hot path.
+pub fn encode_batch_result_into(buf: &mut Vec<u8>, items: &[(u32, ModelOut)]) {
     assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
-    let mut body = vec![TAG_BATCH_RESULT];
-    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    let at = begin_frame(buf);
+    buf.push(TAG_BATCH_RESULT);
+    buf.extend_from_slice(&(items.len() as u16).to_le_bytes());
     for (session, out) in items {
-        body.extend_from_slice(&session.to_le_bytes());
-        put_result_body(&mut body, out);
+        buf.extend_from_slice(&session.to_le_bytes());
+        put_result_body(buf, out);
     }
-    frame(body)
+    end_frame(buf, at);
 }
 
 /// Encode a family-tagged request batch (one family per frame — the
 /// fleet's family-keyed batching never mixes them).
 pub fn encode_zoo_batch_infer(family: u8, items: &[(u32, InferRequest)]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_zoo_batch_infer_into(&mut buf, family, items);
+    buf
+}
+
+/// [`encode_zoo_batch_infer`] into a reusable buffer (cleared first).
+pub fn encode_zoo_batch_infer_into(buf: &mut Vec<u8>, family: u8, items: &[(u32, InferRequest)]) {
     assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
-    let mut body = vec![TAG_ZOO_BATCH_INFER, family];
-    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    let at = begin_frame(buf);
+    buf.push(TAG_ZOO_BATCH_INFER);
+    buf.push(family);
+    buf.extend_from_slice(&(items.len() as u16).to_le_bytes());
     for (session, req) in items {
-        body.extend_from_slice(&session.to_le_bytes());
-        put_infer_body(&mut body, req);
+        buf.extend_from_slice(&session.to_le_bytes());
+        put_infer_body(buf, req);
     }
-    frame(body)
+    end_frame(buf, at);
 }
 
 /// Encode a family-tagged response batch; each item carries its explicit
 /// chunk length `k` (zoo families may emit short chunks).
 pub fn encode_zoo_batch_result(family: u8, items: &[(u32, ModelOut)]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_zoo_batch_result_into(&mut buf, family, items);
+    buf
+}
+
+/// [`encode_zoo_batch_result`] into a reusable buffer (cleared first).
+pub fn encode_zoo_batch_result_into(buf: &mut Vec<u8>, family: u8, items: &[(u32, ModelOut)]) {
     assert!(items.len() <= MAX_BATCH_ITEMS, "batch too large: {}", items.len());
-    let mut body = vec![TAG_ZOO_BATCH_RESULT, family];
-    body.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    let at = begin_frame(buf);
+    buf.push(TAG_ZOO_BATCH_RESULT);
+    buf.push(family);
+    buf.extend_from_slice(&(items.len() as u16).to_le_bytes());
     for (session, out) in items {
         let k = out.actions.len();
         assert!(k >= 1 && k <= CHUNK, "chunk length {k}");
         assert_eq!(out.logits.len(), k, "ragged logits");
         assert_eq!(out.mass.len(), k, "ragged mass");
-        body.extend_from_slice(&session.to_le_bytes());
-        body.extend_from_slice(&(k as u16).to_le_bytes());
-        put_result_body(&mut body, out);
+        buf.extend_from_slice(&session.to_le_bytes());
+        buf.extend_from_slice(&(k as u16).to_le_bytes());
+        put_result_body(buf, out);
     }
-    frame(body)
+    end_frame(buf, at);
 }
 
 pub fn encode_tag(tag: u8) -> Vec<u8> {
-    frame(vec![tag])
-}
-
-fn frame(body: Vec<u8>) -> Vec<u8> {
-    let mut out = Vec::with_capacity(4 + body.len());
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend_from_slice(&body);
-    out
+    let mut buf = Vec::with_capacity(5);
+    let at = begin_frame(&mut buf);
+    buf.push(tag);
+    end_frame(&mut buf, at);
+    buf
 }
 
 /// Read one frame from a stream.
@@ -501,6 +568,27 @@ mod tests {
             }
             other => panic!("wrong frame {other:?}"),
         }
+    }
+
+    #[test]
+    fn encode_into_reuses_the_buffer_and_matches_fresh_encodes() {
+        let items: Vec<(u32, InferRequest)> = (0..4)
+            .map(|i| (i, InferRequest { instr: i, obs: [0.3; D_VIS], proprio: [0.7; D_PROP] }))
+            .collect();
+        let mut buf = Vec::new();
+        encode_batch_infer_into(&mut buf, &items);
+        assert_eq!(buf, encode_batch_infer(&items), "into-variant must be byte-identical");
+        let grown = buf.capacity();
+        // a smaller frame into the same buffer: same bytes as a fresh
+        // encode, and the backing allocation is reused, not reallocated
+        encode_batch_infer_into(&mut buf, &items[..1]);
+        assert_eq!(buf, encode_batch_infer(&items[..1]));
+        assert_eq!(buf.capacity(), grown, "steady-state reuse must not reallocate");
+        // zoo framing through the same reusable buffer
+        encode_zoo_batch_infer_into(&mut buf, 2, &items);
+        assert_eq!(buf, encode_zoo_batch_infer(2, &items));
+        let mut c = std::io::Cursor::new(buf.clone());
+        assert!(matches!(read_frame(&mut c).unwrap(), Frame::ZooBatchInfer(2, _)));
     }
 
     #[test]

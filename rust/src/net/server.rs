@@ -108,7 +108,13 @@ impl CloudServer {
             drop(tx); // release the worker
         });
 
-        Ok(CloudServer { addr: local, stop, stats, listener_handle: Some(listener_handle), worker_handle: Some(worker) })
+        Ok(CloudServer {
+            addr: local,
+            stop,
+            stats,
+            listener_handle: Some(listener_handle),
+            worker_handle: Some(worker),
+        })
     }
 
     pub fn stats(&self) -> &ServerStats {
@@ -133,10 +139,13 @@ impl CloudServer {
 /// sub-requests in, collect replies in request order, echo session ids.
 /// With a family, every reply is pushed through the family's
 /// deterministic shape transform and the response frame echoes the
-/// family tag. `Err(())` means the connection must close.
+/// family tag. The reply frame is encoded into `buf`, the connection's
+/// long-lived scratch buffer, so steady-state batch traffic allocates no
+/// frame per flush. `Err(())` means the connection must close.
 fn serve_batch(
     stream: &mut TcpStream,
     tx: &mpsc::Sender<Pending>,
+    buf: &mut Vec<u8>,
     items: Vec<(u32, InferRequest)>,
     family: Option<crate::vla::ModelFamily>,
 ) -> Result<(), ()> {
@@ -162,14 +171,21 @@ fn serve_batch(
             Err(_) => return Err(()),
         }
     }
-    let bytes = match family {
-        Some(f) => proto::encode_zoo_batch_result(f.id(), &outs),
-        None => proto::encode_batch_result(&outs),
-    };
-    proto::write_all(stream, &bytes).map_err(|_| ())
+    match family {
+        Some(f) => proto::encode_zoo_batch_result_into(buf, f.id(), &outs),
+        None => proto::encode_batch_result_into(buf, &outs),
+    }
+    proto::write_all(stream, buf).map_err(|_| ())
 }
 
-fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<ServerStats>, stop: Arc<AtomicBool>) {
+fn handle_conn(
+    mut stream: TcpStream,
+    tx: mpsc::Sender<Pending>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+) {
+    // per-connection reusable reply-encode buffer (see `serve_batch`)
+    let mut buf: Vec<u8> = Vec::new();
     let _ = stream.set_nodelay(true);
     // Bounded read timeout so handler threads notice `stop` and release
     // their queue sender (otherwise worker shutdown would deadlock on an
@@ -199,7 +215,7 @@ fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<Serv
                 // in its batcher), then collect replies in request order and
                 // echo the session ids so responses cannot cross sessions
                 stats.batch_frames.fetch_add(1, Ordering::Relaxed);
-                match serve_batch(&mut stream, &tx, items, None) {
+                match serve_batch(&mut stream, &tx, &mut buf, items, None) {
                     Ok(()) => {}
                     Err(()) => break,
                 }
@@ -214,7 +230,7 @@ fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<Serv
                 };
                 stats.batch_frames.fetch_add(1, Ordering::Relaxed);
                 stats.zoo_frames.fetch_add(1, Ordering::Relaxed);
-                match serve_batch(&mut stream, &tx, items, Some(family)) {
+                match serve_batch(&mut stream, &tx, &mut buf, items, Some(family)) {
                     Ok(()) => {}
                     Err(()) => break,
                 }
@@ -233,7 +249,10 @@ fn handle_conn(mut stream: TcpStream, tx: mpsc::Sender<Pending>, stats: Arc<Serv
                 break;
             }
             Err(proto::ProtoError::Io(e))
-                if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) =>
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
             {
                 continue; // idle poll tick: recheck the stop flag
             }

@@ -132,7 +132,12 @@ mod tests {
     #[test]
     fn load_conservation_across_strategies() {
         let sys = SystemConfig::default();
-        for kind in [PolicyKind::Rapid, PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+        for kind in [
+            PolicyKind::Rapid,
+            PolicyKind::EdgeOnly,
+            PolicyKind::CloudOnly,
+            PolicyKind::VisionBased,
+        ] {
             let s = build(kind, &sys);
             let edge = s.edge_gb(&sys);
             let cloud = sys.cloud_gb(edge);

@@ -38,7 +38,8 @@ impl VisionPolicy {
     fn adapt_split(&mut self) {
         // map entropy above threshold to a shrinking edge share
         let over = (self.ewma_h - self.cfg.entropy_threshold).max(0.0);
-        let target = (1.0 - self.cfg.split_adapt * over).max(self.cfg.min_edge_frac / (self.base_edge_gb / 14.2));
+        let target = (1.0 - self.cfg.split_adapt * over)
+            .max(self.cfg.min_edge_frac / (self.base_edge_gb / 14.2));
         let target = target.clamp(0.05, 1.0);
         if (target - self.split_frac).abs() > 0.05 {
             self.split_frac = target;

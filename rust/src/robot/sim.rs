@@ -94,7 +94,8 @@ impl RobotSim {
         let tau = self.dynamics.torque(&self.q, &self.dq, &ddq, &tau_ext);
         // torque sensor noise
         let tau_meas = Jv::from_fn(|i| tau[i] + self.rng.normal_ms(0.0, self.cfg.sensor_noise));
-        let q_meas = Jv::from_fn(|i| self.q[i] + self.rng.normal_ms(0.0, self.cfg.sensor_noise * 0.2));
+        let q_meas =
+            Jv::from_fn(|i| self.q[i] + self.rng.normal_ms(0.0, self.cfg.sensor_noise * 0.2));
         let dq_meas = Jv::from_fn(|i| self.dq[i] + self.rng.normal_ms(0.0, self.cfg.sensor_noise));
 
         let err = self.joint_error().norm();

@@ -44,7 +44,8 @@ pub enum TaskKind {
     PegInsert,
 }
 
-pub const ALL_TASKS: [TaskKind; 3] = [TaskKind::PickPlace, TaskKind::DrawerOpen, TaskKind::PegInsert];
+pub const ALL_TASKS: [TaskKind; 3] =
+    [TaskKind::PickPlace, TaskKind::DrawerOpen, TaskKind::PegInsert];
 
 impl TaskKind {
     pub fn name(&self) -> &'static str {
@@ -85,30 +86,36 @@ impl TaskKind {
         // Amplitudes scaled so the reference stays within the actuator
         // authority of an open-loop-chunked policy (tabletop-scale motions).
         let j = |v: [f64; N_JOINTS]| Jv(v) * 0.6;
+        let seg = |t: [f64; N_JOINTS], steps: usize, phase: Phase, contact: f64| Segment {
+            target: j(t),
+            steps,
+            phase,
+            contact,
+        };
         match self {
             // L = 50: approach 20, grasp 5, transfer 14, place 4, retract 7
             TaskKind::PickPlace => vec![
-                Segment { target: j([0.8, 0.5, -0.4, 0.9, 0.2, 0.6, 0.3]), steps: 20, phase: Phase::Approach, contact: 0.0 },
-                Segment { target: j([0.85, 0.55, -0.42, 0.95, 0.25, 0.7, 0.45]), steps: 5, phase: Phase::Interact, contact: 1.0 },
-                Segment { target: j([-0.3, 0.3, 0.2, 0.5, -0.2, 0.4, 0.45]), steps: 14, phase: Phase::Approach, contact: 0.15 },
-                Segment { target: j([-0.35, 0.25, 0.25, 0.45, -0.25, 0.35, 0.1]), steps: 4, phase: Phase::Interact, contact: 0.9 },
-                Segment { target: j([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0]), steps: 7, phase: Phase::Retract, contact: 0.0 },
+                seg([0.8, 0.5, -0.4, 0.9, 0.2, 0.6, 0.3], 20, Phase::Approach, 0.0),
+                seg([0.85, 0.55, -0.42, 0.95, 0.25, 0.7, 0.45], 5, Phase::Interact, 1.0),
+                seg([-0.3, 0.3, 0.2, 0.5, -0.2, 0.4, 0.45], 14, Phase::Approach, 0.15),
+                seg([-0.35, 0.25, 0.25, 0.45, -0.25, 0.35, 0.1], 4, Phase::Interact, 0.9),
+                seg([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0], 7, Phase::Retract, 0.0),
             ],
             // L = 80: long approach 30, handle grasp 5, pull 6, release 20 + 19
             TaskKind::DrawerOpen => vec![
-                Segment { target: j([0.6, 0.7, -0.5, 1.1, 0.1, 0.8, 0.2]), steps: 30, phase: Phase::Approach, contact: 0.0 },
-                Segment { target: j([0.62, 0.75, -0.52, 1.15, 0.12, 0.85, 0.4]), steps: 5, phase: Phase::Interact, contact: 1.0 },
-                Segment { target: j([0.45, 0.6, -0.45, 0.95, 0.1, 0.7, 0.4]), steps: 6, phase: Phase::Interact, contact: 0.8 },
-                Segment { target: j([0.2, 0.3, -0.2, 0.6, 0.0, 0.4, 0.1]), steps: 20, phase: Phase::Retract, contact: 0.0 },
-                Segment { target: j([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0]), steps: 19, phase: Phase::Retract, contact: 0.0 },
+                seg([0.6, 0.7, -0.5, 1.1, 0.1, 0.8, 0.2], 30, Phase::Approach, 0.0),
+                seg([0.62, 0.75, -0.52, 1.15, 0.12, 0.85, 0.4], 5, Phase::Interact, 1.0),
+                seg([0.45, 0.6, -0.45, 0.95, 0.1, 0.7, 0.4], 6, Phase::Interact, 0.8),
+                seg([0.2, 0.3, -0.2, 0.6, 0.0, 0.4, 0.1], 20, Phase::Retract, 0.0),
+                seg([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0], 19, Phase::Retract, 0.0),
             ],
             // L = 60: approach 22, align 6, insert 5, seat 2, retract 25
             TaskKind::PegInsert => vec![
-                Segment { target: j([0.5, 0.4, -0.3, 0.8, 0.3, 0.5, 0.25]), steps: 22, phase: Phase::Approach, contact: 0.0 },
-                Segment { target: j([0.52, 0.45, -0.32, 0.85, 0.32, 0.55, 0.3]), steps: 6, phase: Phase::Interact, contact: 0.6 },
-                Segment { target: j([0.52, 0.5, -0.33, 0.9, 0.33, 0.6, 0.3]), steps: 5, phase: Phase::Interact, contact: 1.0 },
-                Segment { target: j([0.52, 0.52, -0.33, 0.92, 0.33, 0.62, 0.3]), steps: 2, phase: Phase::Interact, contact: 1.2 },
-                Segment { target: j([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0]), steps: 25, phase: Phase::Retract, contact: 0.0 },
+                seg([0.5, 0.4, -0.3, 0.8, 0.3, 0.5, 0.25], 22, Phase::Approach, 0.0),
+                seg([0.52, 0.45, -0.32, 0.85, 0.32, 0.55, 0.3], 6, Phase::Interact, 0.6),
+                seg([0.52, 0.5, -0.33, 0.9, 0.33, 0.6, 0.3], 5, Phase::Interact, 1.0),
+                seg([0.52, 0.52, -0.33, 0.92, 0.33, 0.62, 0.3], 2, Phase::Interact, 1.2),
+                seg([0.0, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0], 25, Phase::Retract, 0.0),
             ],
         }
     }

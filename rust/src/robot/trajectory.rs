@@ -57,7 +57,11 @@ impl RefTrajectory {
         let mut base = Vec::with_capacity(total);
         for seg in segments {
             for _ in 0..seg.steps {
-                base.push(if seg.phase.is_critical() { seg.contact.clamp(0.6, 1.0) } else { 0.0f64 });
+                base.push(if seg.phase.is_critical() {
+                    seg.contact.clamp(0.6, 1.0)
+                } else {
+                    0.0f64
+                });
             }
         }
         // anticipation ramp: look ahead up to `ramp` steps (kept short so
@@ -159,11 +163,17 @@ mod tests {
         for t in ALL_TASKS {
             let tr = RefTrajectory::build(t, Jv::ZERO);
             let crit_mean: f64 = {
-                let xs: Vec<f64> = (0..tr.len()).filter(|&i| tr.phase[i].is_critical()).map(|i| tr.saliency[i]).collect();
+                let xs: Vec<f64> = (0..tr.len())
+                    .filter(|&i| tr.phase[i].is_critical())
+                    .map(|i| tr.saliency[i])
+                    .collect();
                 xs.iter().sum::<f64>() / xs.len() as f64
             };
             let red_mean: f64 = {
-                let xs: Vec<f64> = (0..tr.len()).filter(|&i| !tr.phase[i].is_critical()).map(|i| tr.saliency[i]).collect();
+                let xs: Vec<f64> = (0..tr.len())
+                    .filter(|&i| !tr.phase[i].is_critical())
+                    .map(|i| tr.saliency[i])
+                    .collect();
                 xs.iter().sum::<f64>() / xs.len() as f64
             };
             assert!(crit_mean > 2.0 * red_mean, "{}: crit {crit_mean} red {red_mean}", t.name());

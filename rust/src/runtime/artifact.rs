@@ -96,7 +96,10 @@ impl ArtifactMeta {
                 weights_path: dir.join(weights),
             };
             if !vm.hlo_path.exists() {
-                return Err(ArtifactError::Meta(format!("{name}: hlo file missing: {:?}", vm.hlo_path)));
+                return Err(ArtifactError::Meta(format!(
+                    "{name}: hlo file missing: {:?}",
+                    vm.hlo_path
+                )));
             }
             let wsize = std::fs::metadata(&vm.weights_path)?.len() as usize;
             if wsize != 4 * vm.n_params {
@@ -125,7 +128,9 @@ impl ArtifactMeta {
 
     /// Default artifact directory: `$RAPID_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
-        std::env::var("RAPID_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+        std::env::var("RAPID_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 }
 
@@ -165,6 +170,9 @@ mod tests {
 
     #[test]
     fn missing_dir_errors() {
-        assert!(matches!(ArtifactMeta::load("/nonexistent-dir-xyz"), Err(ArtifactError::Missing(_))));
+        assert!(matches!(
+            ArtifactMeta::load("/nonexistent-dir-xyz"),
+            Err(ArtifactError::Missing(_))
+        ));
     }
 }

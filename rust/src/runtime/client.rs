@@ -62,7 +62,10 @@ impl RuntimeClient {
     }
 
     /// Load + compile an HLO text artifact (cached by path).
-    pub fn compile_hlo_text(&mut self, path: &std::path::Path) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>, RuntimeError> {
+    pub fn compile_hlo_text(
+        &mut self,
+        path: &std::path::Path,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>, RuntimeError> {
         let key = path.to_string_lossy().to_string();
         if let Some(exe) = self.cache.get(&key) {
             return Ok(exe.clone());

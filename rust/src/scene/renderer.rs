@@ -146,7 +146,8 @@ mod tests {
         let a = r.render(&s);
         let b = r.render(&s);
         // frame-to-frame texture correlation must be high (same scene)
-        let dot: f64 = a[16..].iter().zip(b[16..].iter()).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let dot: f64 =
+            a[16..].iter().zip(b[16..].iter()).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
         let na: f64 = a[16..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
         let nb: f64 = b[16..].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
         assert!(dot / (na * nb) > 0.9);

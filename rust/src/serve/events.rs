@@ -126,6 +126,13 @@ impl EventQueue {
         EventQueue::default()
     }
 
+    /// Queue with pre-reserved heap storage. Fleet runs seed one arrival
+    /// per session up front, so reserving once avoids repeated heap
+    /// regrowth at 100k+ sessions.
+    pub fn with_capacity(n: usize) -> EventQueue {
+        EventQueue { heap: BinaryHeap::with_capacity(n), ..EventQueue::default() }
+    }
+
     /// Schedule `kind` at virtual time `time`.
     pub fn push(&mut self, time: u64, kind: EventKind) {
         let order = self.pushed;
@@ -198,6 +205,15 @@ mod tests {
             })
             .collect();
         assert_eq!(sessions, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = EventQueue::with_capacity(8);
+        q.push(1, EventKind::Deadline);
+        q.push(0, EventKind::FaultEdge);
+        assert_eq!(q.pop().unwrap().time, 0);
+        assert_eq!(q.len(), 1);
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //! to its cached chunk / edge slice for that step (the per-session chunk
 //! queue keeps the robot fed; see `EpisodeState::poll`).
 //!
+//! Scale: per-event cost is independent of fleet size. The drain check
+//! reads an incrementally maintained departure counter, fault-edge
+//! context (link profile + zoo plans) is recorded once per round and
+//! adopted lazily per slot via an epoch tag (`sync_slot_context`), and
+//! the dead-air jump indexes a sorted arrival list — so event processing
+//! is O(batch), not O(n_sessions) (exercised by `rapid bench scale`).
+//!
 //! # Lockstep degeneracy (the load-bearing invariant)
 //!
 //! With `[workload]` disabled — or enabled in the all-at-t0 fixed shape —
@@ -291,6 +298,26 @@ pub struct Fleet {
     pending_arrivals: usize,
     /// Currently active (arrived, not departed) sessions.
     active_sessions: usize,
+    /// Departed sessions. The drain check compares this against the slot
+    /// count instead of rescanning every slot per deadline event.
+    finished_sessions: usize,
+    /// Every planned arrival round, sorted ascending. Arrival events pop
+    /// in time order, so the first `n - pending_arrivals` entries are
+    /// exactly the processed ones and the next entry is the earliest
+    /// arrival still due — the dead-air jump reads it in O(1).
+    arrival_times: Vec<u64>,
+    /// Link-context epoch: bumped at every fault-edge while a fault
+    /// schedule is armed. Arrived slots adopt `cur_profile`/`cur_plans`
+    /// lazily on their next touch (`sync_slot_context`), making the round
+    /// start O(1) instead of O(active sessions).
+    link_epoch: u64,
+    /// Last `link_epoch` each slot adopted.
+    slot_epoch: Vec<u64>,
+    /// Link profile in force this round (fault schedule armed only).
+    cur_profile: Option<LinkProfile>,
+    /// Per-family partition plans under `planned_link`, indexed by family
+    /// id (zoo runs under an armed fault schedule only).
+    cur_plans: Vec<FamilyPlan>,
 }
 
 impl Fleet {
@@ -360,6 +387,11 @@ impl Fleet {
                 Fleet::make_slot(sys, task, kind, zoo_enabled, seed, 0, spec)
             })
             .collect();
+        let arrival_times = {
+            let mut v: Vec<u64> = plan.specs.iter().map(|s| s.arrival_round).collect();
+            v.sort_unstable();
+            v
+        };
         // round duration in µs of virtual control time
         let round_us = (sys.robot.dt * 1e6).max(1.0);
         Fleet {
@@ -392,6 +424,12 @@ impl Fleet {
             round_outage: false,
             pending_arrivals: n,
             active_sessions: 0,
+            finished_sessions: 0,
+            arrival_times,
+            link_epoch: 0,
+            slot_epoch: vec![0; n],
+            cur_profile: None,
+            cur_plans: Vec::new(),
             cfg,
         }
     }
@@ -478,6 +516,7 @@ impl Fleet {
             self.slots[i].finished = true;
             self.slots[i].departure = self.cur_round;
             self.active_sessions -= 1;
+            self.finished_sessions += 1;
             return false;
         }
         let metrics = self.slots[i].state.seal_metrics(&self.sys);
@@ -501,6 +540,8 @@ impl Fleet {
             let (profile, plan) = self.arrival_context(family);
             state.on_fleet_arrival(profile, plan);
         }
+        // the rollover hook installed this round's context
+        self.slot_epoch[i] = self.link_epoch;
         let slot = &mut self.slots[i];
         slot.episode_idx = next;
         slot.state = state;
@@ -516,7 +557,9 @@ impl Fleet {
     /// observes a drained fleet (no active session, no pending arrival,
     /// no pending batch).
     pub fn run(mut self) -> FleetResult {
-        let mut queue = EventQueue::new();
+        // one arrival per session seeds the heap; reserve a bit of slack
+        // for the in-flight ready/deadline events on top
+        let mut queue = EventQueue::with_capacity(self.slots.len() + 16);
         for (i, slot) in self.slots.iter().enumerate() {
             queue.push(slot.arrival, EventKind::Arrival(i));
         }
@@ -546,37 +589,56 @@ impl Fleet {
         self.progressed = false;
         self.round_outage = false;
         if !self.engine.is_empty() {
-            let profile = self.engine.link_profile(self.cur_round);
-            // departed sessions released their link override on the
-            // departure hook and must not have it re-armed
-            for slot in self.slots.iter_mut().filter(|s| s.arrived && !s.finished) {
-                slot.state.set_link_profile(profile);
-            }
+            // O(1) round start: record this round's context and bump the
+            // epoch; arrived slots adopt it lazily on their next touch
+            // (`sync_slot_context`) instead of an O(active) sweep here.
+            // Departed sessions released their link override on the
+            // departure hook and are never synced again, so it cannot be
+            // re-armed.
+            self.cur_profile = self.engine.link_profile(self.cur_round);
             // the planner is a pure function of (family, link), so replans
             // are deterministic and only needed when the effective link
             // actually changes: a degrade window moves every zoo session
             // to a deeper split, and the next round under the same
-            // condition reuses the installed plans
+            // condition reuses the recorded plans
             if self.zoo_enabled {
                 let (bw, rtt) = self.effective_link();
                 if self.planned_link != Some((bw, rtt)) {
                     self.planned_link = Some((bw, rtt));
-                    let plans: Vec<_> = ModelFamily::ALL
+                    self.cur_plans = ModelFamily::ALL
                         .iter()
                         .map(|&f| planner::plan(&FamilyProfile::of(f), bw, rtt))
                         .collect();
-                    for slot in self.slots.iter_mut().filter(|s| s.arrived && !s.finished) {
-                        let plan = plans[slot.family.id() as usize].clone();
-                        slot.state.set_family_plan(Some(plan));
-                    }
                 }
             }
+            self.link_epoch += 1;
             self.round_outage = self.engine.link_out(self.cur_round);
             if self.round_outage {
                 self.stats.outage_rounds += 1;
             }
         }
         queue.push(t, EventKind::Deadline);
+    }
+
+    /// Lazily adopt the current round's link context on slot `i`: the
+    /// profile (and zoo plan) recorded at the last fault edge. The
+    /// installs are pure, idempotent setters, so deferring them from the
+    /// round start to the slot's next touch is observably identical to
+    /// the historical eager per-round sweep — every path that reads a
+    /// session's link or plan (poll, batch resume, episode seal) syncs
+    /// first. No-op while no fault schedule is armed (`link_epoch` then
+    /// stays 0 forever).
+    fn sync_slot_context(&mut self, i: usize) {
+        if self.slot_epoch[i] == self.link_epoch {
+            return;
+        }
+        self.slot_epoch[i] = self.link_epoch;
+        let slot = &mut self.slots[i];
+        slot.state.set_link_profile(self.cur_profile);
+        if self.zoo_enabled && !self.cur_plans.is_empty() {
+            let plan = self.cur_plans[slot.family.id() as usize].clone();
+            slot.state.set_family_plan(Some(plan));
+        }
     }
 
     /// A session joins the fleet: adopt the link condition in force at
@@ -592,6 +654,8 @@ impl Fleet {
             let (profile, plan) = self.arrival_context(self.slots[i].family);
             self.slots[i].state.on_fleet_arrival(profile, plan);
         }
+        // the arrival hook installed this round's context
+        self.slot_epoch[i] = self.link_epoch;
         queue.push(t, EventKind::Ready(i));
     }
 
@@ -601,6 +665,7 @@ impl Fleet {
         if self.slots[i].finished || self.slots[i].state.is_awaiting_cloud() {
             return;
         }
+        self.sync_slot_context(i);
         if self.slots[i].state.is_done() && !self.advance_episode(i) {
             return;
         }
@@ -655,7 +720,9 @@ impl Fleet {
     /// drained — no pending batch, no pending arrival, everyone departed.
     fn on_batch_deadline(&mut self, t: u64, queue: &mut EventQueue) -> bool {
         if self.batcher.is_empty() {
-            if self.pending_arrivals == 0 && self.slots.iter().all(|s| s.finished) {
+            // O(1) drain check: `finished_sessions` is maintained on the
+            // departure hook, so no per-event slot rescan is needed
+            if self.pending_arrivals == 0 && self.finished_sessions == self.slots.len() {
                 return false;
             }
         } else {
@@ -670,17 +737,15 @@ impl Fleet {
         // dead air — nobody active, nothing pending, stragglers still due:
         // jump the clock straight to the next arrival instead of ticking
         // empty rounds (a fat-fingered trace round must not become an
-        // unbounded spin). Un-arrived slots always sit strictly in the
-        // future here (their arrival event would have popped before this
-        // deadline otherwise), so the jump never goes backwards.
+        // unbounded spin). Arrival events pop in time order, so indexing
+        // the sorted arrival list by the processed count yields the
+        // earliest arrival still due in O(1). Un-arrived slots always sit
+        // strictly in the future here (their arrival event would have
+        // popped before this deadline otherwise), so the jump never goes
+        // backwards.
         let next = if self.active_sessions == 0 && self.batcher.is_empty() {
-            self.slots
-                .iter()
-                .filter(|s| !s.arrived)
-                .map(|s| s.arrival)
-                .min()
-                .unwrap_or(t + 1)
-                .max(t + 1)
+            let done = self.arrival_times.len() - self.pending_arrivals;
+            self.arrival_times.get(done).copied().unwrap_or(t + 1).max(t + 1)
         } else {
             t + 1
         };
@@ -713,12 +778,15 @@ impl Fleet {
             .collect();
         // per-family rollup: sums over these rows exactly partition the
         // fleet totals (each session belongs to exactly one family, each
-        // batch carries exactly one)
-        let families = ModelFamily::ALL
+        // batch carries exactly one). Accumulated in one pass over the
+        // session reports — indexed by family id, which matches the
+        // family's position in `ModelFamily::ALL` — instead of one sweep
+        // per family.
+        let mut totals: Vec<FamilyTotals> = ModelFamily::ALL
             .iter()
-            .filter_map(|&fam| {
+            .map(|&fam| {
                 let idx = fam.id() as usize;
-                let mut t = FamilyTotals {
+                FamilyTotals {
                     family: fam,
                     sessions: 0,
                     steps: 0,
@@ -726,18 +794,20 @@ impl Fleet {
                     cache_hits: 0,
                     batches: family_batches[idx],
                     batched_requests: family_requests[idx],
-                };
-                for s in sessions.iter().filter(|s| s.family == fam) {
-                    t.sessions += 1;
-                    for m in &s.episodes {
-                        t.steps += m.steps as u64;
-                        t.cloud_events += m.cloud_events;
-                        t.cache_hits += m.cache_hits;
-                    }
                 }
-                (t.sessions > 0 || t.batches > 0).then_some(t)
             })
             .collect();
+        for s in &sessions {
+            let t = &mut totals[s.family.id() as usize];
+            t.sessions += 1;
+            for m in &s.episodes {
+                t.steps += m.steps as u64;
+                t.cloud_events += m.cloud_events;
+                t.cache_hits += m.cache_hits;
+            }
+        }
+        let families: Vec<FamilyTotals> =
+            totals.into_iter().filter(|t| t.sessions > 0 || t.batches > 0).collect();
         FleetResult {
             policy: self.kind,
             task: self.task,
@@ -766,6 +836,13 @@ impl Fleet {
         }
         let batch = self.batcher.take();
         self.pending_age = 0;
+        // resumed sessions read their link profile (transfer timing) and
+        // plan below — adopt this round's context first (O(batch); a
+        // session suspended across fault edges would otherwise resume
+        // under the profile of the round it suspended in)
+        for fr in &batch {
+            self.sync_slot_context(fr.session);
+        }
 
         let mut ids: Vec<usize> = batch.iter().map(|r| r.session).collect();
         ids.sort_unstable();
@@ -1154,6 +1231,24 @@ mod tests {
         assert!(res.sessions[3].departure_round > res.sessions[0].departure_round);
         // the run must outlive the last arrival by at least one episode
         assert!(res.stats.rounds > 30 + TaskKind::PickPlace.seq_len() as u64 / 2);
+    }
+
+    #[test]
+    fn dead_air_fast_forwards_to_the_next_arrival() {
+        // one session now, one 10_000 rounds later: the scheduler must
+        // jump the gap via the sorted arrival list instead of ticking
+        // thousands of empty rounds
+        let mut sys = sys_with(2, 4, 16);
+        sys.workload.enabled = true;
+        sys.workload.arrivals = "fixed".into();
+        sys.workload.interarrival_rounds = 10_000.0;
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::EdgeOnly).run();
+        assert_eq!(res.stats.arrivals, 2);
+        assert!(res.stats.rounds < 500, "dead air must be skipped: {}", res.stats.rounds);
+        assert_eq!(res.sessions[1].arrival_round, 10_000);
+        for s in &res.sessions {
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        }
     }
 
     #[test]

@@ -191,7 +191,12 @@ mod tests {
         let mut calm = calm_source();
         let lp = SensorLoop::spawn(&cfg, 1000.0, move |step| {
             if c2.load(Ordering::Relaxed) {
-                SensorFrame { step: step as usize, q: Jv::ZERO, dq: Jv::splat(0.05), tau: Jv::splat(9.0) }
+                SensorFrame {
+                    step: step as usize,
+                    q: Jv::ZERO,
+                    dq: Jv::splat(0.05),
+                    tau: Jv::splat(9.0),
+                }
             } else {
                 calm(step)
             }

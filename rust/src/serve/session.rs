@@ -69,7 +69,12 @@ mod tests {
         let mut cloud = AnalyticBackend::cloud(1);
         let results = run_suite(
             &sys,
-            &[PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid],
+            &[
+                PolicyKind::EdgeOnly,
+                PolicyKind::CloudOnly,
+                PolicyKind::VisionBased,
+                PolicyKind::Rapid,
+            ],
             2,
             &mut edge,
             &mut cloud,

@@ -134,7 +134,16 @@ pub struct Summary {
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0, p99: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            };
         }
         let mut s = xs.to_vec();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -47,7 +47,8 @@ impl Table {
 
     pub fn render(&self) -> String {
         let w = self.widths();
-        let sep: String = w.iter().map(|n| format!("+{}", "-".repeat(n + 2))).collect::<String>() + "+";
+        let sep: String =
+            w.iter().map(|n| format!("+{}", "-".repeat(n + 2))).collect::<String>() + "+";
         let mut out = String::new();
         if !self.title.is_empty() {
             out.push_str(&format!("{}\n", self.title));

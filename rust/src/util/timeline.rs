@@ -84,7 +84,9 @@ impl Timeline {
             return String::new();
         }
         let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
-        let (lo, hi) = vals.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &v| (a.min(v), b.max(v)));
+        let (lo, hi) = vals
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &v| (a.min(v), b.max(v)));
         let span = (hi - lo).max(1e-12);
         let w = width.min(vals.len()).max(1);
         let mut out = String::new();

@@ -89,7 +89,8 @@ fn fault_free_plan_is_bit_identical_to_baseline() {
 
     // an explicitly attached, empty-plan engine must change nothing
     let engine = FaultEngine::new(FaultPlan::none(), 12345, 250.0, 2);
-    let empty = Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::Rapid, engine).run();
+    let empty =
+        Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::Rapid, engine).run();
     assert_runs_identical(&baseline, &empty, "empty plan");
 
     // an enabled [faults] section whose windows never activate is equally
@@ -159,7 +160,11 @@ fn dropped_replies_degrade_to_edge_and_record_the_failover() {
     assert_eq!(res.stats.degraded_requests, res.stats.batched_requests);
     let failovers: u64 =
         res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.failovers).sum();
-    assert_eq!(failovers, res.stats.degraded_requests, "per-episode metrics must record each failover");
+    assert_eq!(
+        failovers,
+        res.stats.degraded_requests,
+        "per-episode metrics must record each failover"
+    );
 }
 
 #[test]

@@ -178,9 +178,16 @@ fn multi_episode_fleet_matches_solo_per_episode() {
             let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
             let mut edge = AnalyticBackend::edge(seed);
             let mut cloud = AnalyticBackend::cloud(seed);
-            let solo =
-                run_episode(&sys, TaskKind::DrawerOpen, strategy, &mut edge, &mut cloud, seed, false)
-                    .metrics;
+            let solo = run_episode(
+                &sys,
+                TaskKind::DrawerOpen,
+                strategy,
+                &mut edge,
+                &mut cloud,
+                seed,
+                false,
+            )
+            .metrics;
             assert_metrics_eq(m, &solo, &format!("session {} episode {ep}", s.session));
         }
     }

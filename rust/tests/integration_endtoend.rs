@@ -17,7 +17,9 @@ fn suite_reproduces_paper_ordering_and_loads() {
     let mut edge = AnalyticBackend::edge(1);
     let mut cloud = AnalyticBackend::cloud(1);
     let mut rows = Vec::new();
-    for kind in [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid] {
+    for kind in
+        [PolicyKind::EdgeOnly, PolicyKind::CloudOnly, PolicyKind::VisionBased, PolicyKind::Rapid]
+    {
         let r = run_policy(&sys, kind, &ALL_TASKS, 3, &mut edge, &mut cloud);
         rows.push(aggregate(kind, &r.episodes));
     }
@@ -89,14 +91,23 @@ fn rapid_matches_vision_accuracy_with_far_fewer_cloud_queries() {
 fn episode_driver_over_real_tcp() {
     // the driver's cloud calls leave the process over TCP (CloudClient is a
     // Backend) and hit a real server worker
-    let server = CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(9))).unwrap();
+    let server =
+        CloudServer::start("127.0.0.1:0", 4, || Box::new(AnalyticBackend::cloud(9))).unwrap();
     let addr = server.addr.to_string();
     let mut edge = AnalyticBackend::edge(9);
     let mut client = CloudClient::connect(&addr).unwrap();
 
     let sys = SystemConfig::default();
     let strategy = rapid::policy::build(PolicyKind::Rapid, &sys);
-    let out = rapid::serve::run_episode(&sys, TaskKind::DrawerOpen, strategy, &mut edge, &mut client, 77, false);
+    let out = rapid::serve::run_episode(
+        &sys,
+        TaskKind::DrawerOpen,
+        strategy,
+        &mut edge,
+        &mut client,
+        77,
+        false,
+    );
     assert_eq!(out.metrics.steps, TaskKind::DrawerOpen.seq_len());
     assert!(out.metrics.cloud_events > 0);
     assert_eq!(
@@ -116,7 +127,8 @@ fn cooldown_throttles_cloud_queries() {
         let mut sys = SystemConfig::default();
         sys.dispatcher.cooldown = cooldown;
         sys.episode.seed = 9;
-        let r = run_policy(&sys, PolicyKind::Rapid, &[TaskKind::PegInsert], 3, &mut edge, &mut cloud);
+        let r =
+            run_policy(&sys, PolicyKind::Rapid, &[TaskKind::PegInsert], 3, &mut edge, &mut cloud);
         r.episodes.iter().map(|m| m.cloud_events as f64).sum::<f64>() / r.episodes.len() as f64
     };
     let no_cd = count_offloads(0);

@@ -86,7 +86,8 @@ fn pjrt_actions_track_joint_error_sign() {
     let Some(mut b) = pjrt() else { return };
     let pos = b.cloud.infer(&obs_with(0.5, 0.1, 1.0), &[0.0; D_PROP], 1);
     let neg = b.cloud.infer(&obs_with(-0.5, 0.1, 1.0), &[0.0; D_PROP], 1);
-    let mean_j0 = |o: &rapid::vla::ModelOut| o.actions.iter().map(|a| a[0]).sum::<f64>() / CHUNK as f64;
+    let mean_j0 =
+        |o: &rapid::vla::ModelOut| o.actions.iter().map(|a| a[0]).sum::<f64>() / CHUNK as f64;
     assert!(mean_j0(&pos) > 0.1);
     assert!(mean_j0(&neg) < -0.1);
 }

@@ -900,6 +900,98 @@ fn prop_disabled_workload_is_bit_identical() {
     });
 }
 
+/// Invariant #25 (cache): the sharded reuse store is observably
+/// equivalent to the historical single-map store. For random
+/// probe/admit interleavings with capacity above the working set (so no
+/// shard can evict and no RNG is drawn), every probe outcome and every
+/// counter must match the single-map store exactly, for any shard
+/// count. Under eviction pressure, the total resident count must stay
+/// within the configured capacity and the admission/refresh/eviction
+/// counters must reconcile with the resident count.
+#[test]
+fn prop_sharded_store_equivalent_and_bounded() {
+    use rapid::cache::{ProbeOutcome, ReuseStore, Signature};
+    use rapid::config::CacheConfig;
+
+    seeded_forall!("sharded_store", 40, |rng: &mut Pcg32| {
+        let cfg = CacheConfig { enabled: true, ..Default::default() };
+        let seed = rng.next_u64();
+        let shards = 1usize << rng.below(4); // 1, 2, 4, or 8
+        // a small discrete signature space so probes repeatedly land on
+        // admitted keys (and spread across shards when sharded)
+        let sigs: Vec<Signature> = (0..24u32)
+            .map(|i| {
+                let frame = SensorFrame {
+                    step: 0,
+                    q: Jv::splat(0.5 * i as f32),
+                    dq: Jv::ZERO,
+                    tau: Jv::ZERO,
+                };
+                Signature::of(&cfg, (i % 4) as usize, &frame, None, Default::default())
+            })
+            .collect();
+        let chunk = {
+            let mut cloud = rapid::vla::AnalyticBackend::cloud(1);
+            rapid::vla::Backend::infer(
+                &mut cloud,
+                &[0.1; rapid::D_VIS],
+                &[0.0; rapid::D_PROP],
+                1,
+            )
+        };
+
+        // equivalence half: capacity far above the admission count, so
+        // no shard can evict and the stores must agree outcome-for-outcome
+        let mut a = ReuseStore::new(512, 64, true, seed);
+        let mut b = ReuseStore::with_shards(512, 64, true, seed, shards);
+        for round in 0..200u64 {
+            let sig = sigs[rng.below(24) as usize];
+            let owner = rng.below(3) as usize;
+            if rng.chance(0.5) {
+                let oa = a.probe(&sig, round, owner);
+                let ob = b.probe(&sig, round, owner);
+                let same = matches!(
+                    (&oa, &ob),
+                    (ProbeOutcome::Hit(_), ProbeOutcome::Hit(_))
+                        | (ProbeOutcome::Stale, ProbeOutcome::Stale)
+                        | (ProbeOutcome::Miss, ProbeOutcome::Miss)
+                );
+                if !same {
+                    return Err(format!(
+                        "probe outcomes diverged at round {round} ({shards} shards)"
+                    ));
+                }
+            } else {
+                a.admit(sig, chunk.clone(), round, owner);
+                b.admit(sig, chunk.clone(), round, owner);
+            }
+        }
+        if a.stats() != b.stats() {
+            return Err(format!("stats diverged: {:?} vs {:?}", a.stats(), b.stats()));
+        }
+        if a.len() != b.len() {
+            return Err(format!("resident counts diverged: {} vs {}", a.len(), b.len()));
+        }
+
+        // pressure half: tiny capacity, many admits — the total capacity
+        // bound and counter reconciliation must hold for any shard spread
+        let cap = 1 + rng.below(16) as usize;
+        let mut c = ReuseStore::with_shards(cap, 64, rng.chance(0.5), seed, shards);
+        for round in 0..300u64 {
+            let sig = sigs[rng.below(24) as usize];
+            c.admit(sig, chunk.clone(), round, rng.below(4) as usize);
+            if c.len() > cap {
+                return Err(format!("resident {} > capacity {cap}", c.len()));
+            }
+        }
+        let st = *c.stats();
+        if st.admissions - st.refreshed - st.evictions != c.len() as u64 {
+            return Err(format!("counters do not reconcile: {st:?} vs len {}", c.len()));
+        }
+        Ok(())
+    });
+}
+
 /// Cooldown unit property: ready exactly after `limit` ticks.
 #[test]
 fn prop_cooldown_exact() {

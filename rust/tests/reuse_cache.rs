@@ -9,6 +9,9 @@
 //!   store, and through a reply-drop window it strictly undercuts the
 //!   cold fleet's timeout bill,
 //! * **eviction replays exactly** under a fixed seed,
+//! * the **sharded store is bit-identical** to the single-map (PR 5)
+//!   store while nothing evicts, and still completes + replays under
+//!   per-shard eviction pressure,
 //! * the per-session tier works without the fleet-shared tier
 //!   (`cache.shared = false`).
 
@@ -262,6 +265,70 @@ fn eviction_pressure_replays_exactly() {
             assert_eq!(ma.rms_error, mb.rms_error);
         }
     }
+}
+
+// ------------------------------------------------------------- sharding
+
+#[test]
+fn sharded_store_fleet_is_bit_identical_when_nothing_evicts() {
+    // sharding only re-partitions the capacity and eviction streams; while
+    // no shard ever fills, neither store draws a single eviction and a
+    // fleet over the 8-shard store must replay the single-map (PR 5)
+    // scheduler to the last bit — full stats, flush causes, per-episode
+    // trajectories
+    let task = TaskKind::PickPlace;
+    let mut sys = fleet_sys(8, 4);
+    sys.cache.enabled = true;
+    // capacity/8 = 512 per shard > every distinct key the run can admit,
+    // so no shard can fill even if hashing piled all keys into one
+    sys.cache.capacity = 4096;
+    let baseline = Fleet::local(&sys, task, PolicyKind::CloudOnly).run();
+
+    let mut sharded_sys = sys.clone();
+    sharded_sys.cache.shards = 8;
+    let run = Fleet::local(&sharded_sys, task, PolicyKind::CloudOnly).run();
+
+    assert_eq!(baseline.cache, run.cache, "store counters must match");
+    assert_eq!(baseline.cache.evictions, 0, "the identity argument needs an eviction-free run");
+    assert!(run.cache.hits >= 4, "the sharded run still serves hits: {:?}", run.cache);
+    assert_eq!(baseline.stats.rounds, run.stats.rounds);
+    assert_eq!(baseline.stats.batches, run.stats.batches);
+    assert_eq!(baseline.stats.batched_requests, run.stats.batched_requests);
+    assert_eq!(baseline.stats.full_flushes, run.stats.full_flushes);
+    assert_eq!(baseline.stats.deadline_flushes, run.stats.deadline_flushes);
+    assert_eq!(baseline.stats.drain_flushes, run.stats.drain_flushes);
+    assert_eq!(baseline.endpoint_dispatches, run.endpoint_dispatches);
+    for (sa, sb) in baseline.sessions.iter().zip(run.sessions.iter()) {
+        assert_eq!(sa.arrival_round, sb.arrival_round);
+        assert_eq!(sa.departure_round, sb.departure_round);
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "session {}", sa.session);
+            assert_eq!(ma.cloud_events, mb.cloud_events);
+            assert_eq!(ma.cache_hits, mb.cache_hits);
+            assert_eq!(ma.rms_error, mb.rms_error);
+            assert_eq!(ma.success, mb.success);
+        }
+    }
+}
+
+#[test]
+fn sharded_store_fleet_under_eviction_pressure_completes() {
+    // 8 entries over 4 shards (2 per shard) churn constantly; the run
+    // must still finish every episode, and the per-shard seeded eviction
+    // streams must make the whole run replay exactly
+    let task = TaskKind::PickPlace;
+    let mut sys = fleet_sys(6, 4);
+    sys.cache.enabled = true;
+    sys.cache.capacity = 8;
+    sys.cache.shards = 4;
+    let run = || Fleet::local(&sys, task, PolicyKind::CloudOnly).run();
+    let a = run();
+    let b = run();
+    assert_all_complete(&a, task, "sharded pressure");
+    assert!(a.cache.evictions > 0, "capacity 8 over 4 shards must evict: {:?}", a.cache);
+    assert_eq!(a.cache, b.cache, "per-shard eviction streams replay");
+    assert_eq!(a.stats.rounds, b.stats.rounds);
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests);
 }
 
 // ------------------------------------------------------------- the tiers

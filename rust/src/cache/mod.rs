@@ -28,7 +28,7 @@ pub mod signature;
 pub mod stats;
 pub mod store;
 
-pub use policy::ReusePolicy;
+pub use policy::{zscore_gate_allows, ReusePolicy};
 pub use signature::Signature;
 pub use stats::CacheStats;
 pub use store::{ProbeOutcome, ReuseStore};

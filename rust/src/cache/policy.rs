@@ -15,6 +15,19 @@ use crate::config::CacheConfig;
 use crate::dispatcher::ReuseEvidence;
 use crate::robot::SensorFrame;
 
+/// The z-score gate shared by the reuse probe and the pipeline's
+/// speculative decode (`[pipeline]`): a dispatch whose windowed anomaly
+/// z-scores exceed `max_zscore` is a genuinely novel situation and must
+/// neither be served from memory nor speculated on. No evidence (e.g.
+/// Cloud-Only's timer-like refills) counts as routine. NaN scores
+/// compare false and therefore refuse.
+pub fn zscore_gate_allows(ev: Option<&ReuseEvidence>, max_zscore: f64) -> bool {
+    match ev {
+        None => true,
+        Some(e) => e.m_acc_hat.max(e.m_tau_hat) <= max_zscore,
+    }
+}
+
 /// Thin, allocation-free view over the `[cache]` knobs used at dispatch
 /// time (construction is free; the driver builds one per offload).
 pub struct ReusePolicy<'a> {
@@ -38,13 +51,9 @@ impl<'a> ReusePolicy<'a> {
         Signature::of(self.cfg, instr, frame, ev, family)
     }
 
-    /// True when this dispatch may be served from the store. NaN scores
-    /// compare false and therefore refuse reuse.
+    /// True when this dispatch may be served from the store.
     pub fn probe_allowed(&self, ev: Option<&ReuseEvidence>) -> bool {
-        match ev {
-            None => true,
-            Some(e) => e.m_acc_hat.max(e.m_tau_hat) <= self.cfg.max_zscore,
-        }
+        zscore_gate_allows(ev, self.cfg.max_zscore)
     }
 }
 
@@ -66,5 +75,16 @@ mod tests {
         assert!(!p.probe_allowed(Some(&ev(cfg.max_zscore + 0.1, 0.0))));
         assert!(!p.probe_allowed(Some(&ev(0.0, 1e9))));
         assert!(!p.probe_allowed(Some(&ev(f64::NAN, 0.0))), "NaN refuses reuse");
+    }
+
+    #[test]
+    fn shared_gate_matches_probe_gate() {
+        // one definition: the pipeline's speculation gate and the reuse
+        // probe gate must agree on every evidence shape
+        let cfg = CacheConfig::default();
+        let p = ReusePolicy::new(&cfg);
+        for e in [None, Some(ev(1.0, 2.0)), Some(ev(9.0, 0.0)), Some(ev(f64::NAN, 0.0))] {
+            assert_eq!(p.probe_allowed(e.as_ref()), zscore_gate_allows(e.as_ref(), cfg.max_zscore));
+        }
     }
 }

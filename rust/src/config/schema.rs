@@ -393,6 +393,68 @@ impl Default for CacheConfig {
     }
 }
 
+/// Pipelined + speculative partition execution (`serve::driver`). With
+/// `enabled = false` (the default) — or enabled with both `overlap` and
+/// `speculate` off — no pipelined code path runs and the scheduler is
+/// bit-identical to the sequential offload model (the same
+/// zero-perturbation contract as `[faults]`/`[cache]`/`[models]`/
+/// `[workload]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    pub enabled: bool,
+    /// Overlap the next step's edge-prefix compute with the in-flight
+    /// cloud round trip: an offload charges
+    /// `max(edge_prefix, wire + cloud)` instead of the sum, with the
+    /// hidden portion recorded in `overlap_hidden_ms`.
+    pub overlap: bool,
+    /// Speculative edge decoding: the edge slice emits a provisional
+    /// chunk immediately and keeps stepping; the cloud reply confirms
+    /// the consumed prefix (free) or corrects it (`rollback_ms`).
+    /// Anomalous dispatches (z-score above `max_zscore`) never
+    /// speculate and suspend sequentially.
+    pub speculate: bool,
+    /// Virtual time charged for the provisional edge decode (ms) — the
+    /// quantized edge head re-used as a draft model, far cheaper than a
+    /// full edge-slice inference.
+    pub spec_decode_ms: f64,
+    /// Penalty re-charged to the session clock and overhead column when
+    /// the cloud reply corrects a speculated prefix (ms).
+    pub rollback_ms: f64,
+    /// Max per-joint |provisional - cloud| action divergence (rad/s)
+    /// accepted as a free confirmation on the consumed prefix.
+    pub accept_eps: f64,
+    /// Speculation gate: a dispatch whose windowed anomaly z-score
+    /// exceeds this is a critical phase and never speculates (same
+    /// definition as the `cache.max_zscore` probe gate).
+    pub max_zscore: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            enabled: false,
+            overlap: false,
+            speculate: false,
+            spec_decode_ms: 15.0,
+            rollback_ms: 40.0,
+            accept_eps: 0.05,
+            max_zscore: 8.0,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// True when the overlap charge model may run.
+    pub fn overlap_on(&self) -> bool {
+        self.enabled && self.overlap
+    }
+
+    /// True when speculative edge decoding may run.
+    pub fn speculate_on(&self) -> bool {
+        self.enabled && self.speculate
+    }
+}
+
 /// Heterogeneous VLA model zoo (`vla::zoo` + `policy::planner`). With
 /// `enabled = false` (the default) every session serves the original
 /// surrogate family and the serve layer is bit-identical to a zoo-free
@@ -641,6 +703,7 @@ pub struct SystemConfig {
     pub faults: FaultsConfig,
     pub cache: CacheConfig,
     pub models: ModelsConfig,
+    pub pipeline: PipelineConfig,
     pub episode: EpisodeConfig,
 }
 
@@ -664,6 +727,7 @@ impl Default for SystemConfig {
             faults: FaultsConfig::default(),
             cache: CacheConfig::default(),
             models: ModelsConfig::default(),
+            pipeline: PipelineConfig::default(),
             episode: EpisodeConfig::default(),
         }
     }
@@ -799,6 +863,15 @@ impl SystemConfig {
 
         self.models.enabled = v.bool_or("models.enabled", self.models.enabled);
         self.models.families = v.str_or("models.families", &self.models.families).to_string();
+
+        let p = &mut self.pipeline;
+        p.enabled = v.bool_or("pipeline.enabled", p.enabled);
+        p.overlap = v.bool_or("pipeline.overlap", p.overlap);
+        p.speculate = v.bool_or("pipeline.speculate", p.speculate);
+        p.spec_decode_ms = v.f64_or("pipeline.spec_decode_ms", p.spec_decode_ms);
+        p.rollback_ms = v.f64_or("pipeline.rollback_ms", p.rollback_ms);
+        p.accept_eps = v.f64_or("pipeline.accept_eps", p.accept_eps);
+        p.max_zscore = v.f64_or("pipeline.max_zscore", p.max_zscore);
 
         self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
@@ -1002,6 +1075,35 @@ mod tests {
         assert_eq!(c.workload.burst_len, 4);
         assert_eq!(c.workload.idle_len, 12);
         assert_eq!(c.workload.start_round, 0);
+    }
+
+    #[test]
+    fn pipeline_defaults_inert_and_overlay() {
+        let c = SystemConfig::default();
+        assert!(!c.pipeline.enabled, "pipeline must default off (bit-identity)");
+        assert!(!c.pipeline.overlap);
+        assert!(!c.pipeline.speculate);
+        assert!(!c.pipeline.overlap_on() && !c.pipeline.speculate_on());
+        assert_eq!(c.pipeline.spec_decode_ms, 15.0);
+        assert_eq!(c.pipeline.rollback_ms, 40.0);
+        assert_eq!(c.pipeline.max_zscore, 8.0);
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[pipeline]\nenabled = true\noverlap = true\nspeculate = true\n\
+             spec_decode_ms = 9.0\nrollback_ms = 55.0\naccept_eps = 0.1\nmax_zscore = 4.0",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.pipeline.enabled && c.pipeline.overlap && c.pipeline.speculate);
+        assert!(c.pipeline.overlap_on() && c.pipeline.speculate_on());
+        assert_eq!(c.pipeline.spec_decode_ms, 9.0);
+        assert_eq!(c.pipeline.rollback_ms, 55.0);
+        assert_eq!(c.pipeline.accept_eps, 0.1);
+        assert_eq!(c.pipeline.max_zscore, 4.0);
+        // enabled alone — every sub-knob off — stays degenerate
+        let mut d = SystemConfig::default();
+        d.pipeline.enabled = true;
+        assert!(!d.pipeline.overlap_on() && !d.pipeline.speculate_on());
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod fig3;
 pub mod fig5;
 pub mod hetero;
 pub mod overhead;
+pub mod pipeline;
 pub mod reuse;
 pub mod sweep;
 pub mod tab1;

@@ -1,0 +1,257 @@
+//! Pipelined-execution experiment: the same fleet with the `[pipeline]`
+//! stage off vs on, crossed with speculative edge decoding off vs on.
+//!
+//! The point the table makes: sequential offloads pay
+//! `edge_prefix + wire + cloud` per step; overlap hides the prefix under
+//! the in-flight round trip (`max` instead of the sum), and speculation
+//! hides the round trip itself behind a provisional edge chunk that the
+//! cloud reply confirms for free or corrects for a bounded rollback
+//! penalty. With the zoo disabled there is no family plan and therefore
+//! no edge prefix: the overlap column is provably bit-identical to
+//! sequential and only speculation moves the numbers. A zoo fleet
+//! planned under a slow link picks deep splits with real prefix
+//! compute, and there overlap pays off for every policy that offloads.
+//! The z-score gate shared with `[cache]` keeps anomalous phases
+//! sequential, so the speculation column degrades toward the baseline
+//! (never below it) under noise.
+
+use crate::config::{PolicyKind, SystemConfig};
+use crate::robot::TaskKind;
+use crate::serve::Fleet;
+use crate::util::tablefmt::{ms, pct, Table};
+
+/// Policies compared by the pipeline table (the paper's contrast pair:
+/// partitioned RAPID against the offload-everything baseline).
+pub const POLICIES: [PolicyKind; 2] = [PolicyKind::Rapid, PolicyKind::CloudOnly];
+
+/// Aggregate of one (policy, pipeline-arm) fleet run.
+#[derive(Debug, Clone, Copy)]
+pub struct ArmStats {
+    /// Fleet-aggregate mean total latency per episode.
+    pub lat: f64,
+    /// Fleet task-success rate.
+    pub success: f64,
+    /// Cloud events (wire inferences).
+    pub cloud_events: u64,
+    /// Edge-prefix milliseconds hidden under in-flight round trips
+    /// (overlap arms only; 0 elsewhere).
+    pub hidden_ms: f64,
+    /// Speculative dispatches / confirmed / rolled back (spec arms only).
+    pub spec_dispatches: u64,
+    pub spec_confirms: u64,
+    pub spec_rollbacks: u64,
+    /// Every episode of every session ran to its full step count.
+    pub completed: bool,
+}
+
+pub struct PipelineRow {
+    pub policy: PolicyKind,
+    /// `[pipeline]` disabled — the PR 6 sequential scheduler.
+    pub seq: ArmStats,
+    /// Overlap only (`overlap = true, speculate = false`).
+    pub overlap: ArmStats,
+    /// Speculation only (`overlap = false, speculate = true`).
+    pub spec: ArmStats,
+    /// Both stages on.
+    pub both: ArmStats,
+}
+
+fn arm(sys: &SystemConfig, task: TaskKind, kind: PolicyKind) -> ArmStats {
+    let res = Fleet::local(sys, task, kind).run();
+    let summary = res.summary();
+    let expect = task.seq_len();
+    let mut hidden_ms = 0.0;
+    let (mut disp, mut conf, mut roll) = (0u64, 0u64, 0u64);
+    let mut completed = true;
+    for m in res.sessions.iter().flat_map(|s| s.episodes.iter()) {
+        hidden_ms += m.overlap_hidden_ms;
+        disp += m.spec_dispatches;
+        conf += m.spec_confirms;
+        roll += m.spec_rollbacks;
+        completed &= m.steps == expect;
+    }
+    ArmStats {
+        lat: summary.fleet.total_lat_mean,
+        success: summary.fleet.success_rate,
+        cloud_events: summary.total_cloud_events,
+        hidden_ms,
+        spec_dispatches: disp,
+        spec_confirms: conf,
+        spec_rollbacks: roll,
+        completed,
+    }
+}
+
+/// Build the four `[pipeline]` arm configs from a base system config:
+/// sequential (disabled), overlap-only, speculation-only, both. The
+/// sequential arm clears `enabled` so it is the PR 6 scheduler verbatim;
+/// the other knobs (`spec_decode_ms`, `rollback_ms`, `accept_eps`,
+/// `max_zscore`) are carried from `sys` unchanged.
+pub fn arms(sys: &SystemConfig) -> [SystemConfig; 4] {
+    let mk = |enabled: bool, overlap: bool, speculate: bool| {
+        let mut s = sys.clone();
+        s.pipeline.enabled = enabled;
+        s.pipeline.overlap = overlap;
+        s.pipeline.speculate = speculate;
+        s
+    };
+    [mk(false, false, false), mk(true, true, false), mk(true, false, true), mk(true, true, true)]
+}
+
+/// Run the four-arm comparison (pipeline off/on x speculation off/on)
+/// for each policy in [`POLICIES`]. All arms share the caller's seed,
+/// fleet shape, and fault schedule; only the `[pipeline]` stage differs.
+pub fn run(sys: &SystemConfig, task: TaskKind) -> (Table, Vec<PipelineRow>) {
+    let variants = arms(sys);
+    let mut rows = Vec::new();
+    for kind in POLICIES {
+        rows.push(PipelineRow {
+            policy: kind,
+            seq: arm(&variants[0], task, kind),
+            overlap: arm(&variants[1], task, kind),
+            spec: arm(&variants[2], task, kind),
+            both: arm(&variants[3], task, kind),
+        });
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Pipelined execution ({} × {} session(s), spec_decode {} ms, rollback {} ms, eps {})",
+            task.name(),
+            sys.fleet.n_sessions.max(1),
+            sys.pipeline.spec_decode_ms,
+            sys.pipeline.rollback_ms,
+            sys.pipeline.accept_eps
+        ),
+        &[
+            "Method",
+            "Sequential",
+            "+Overlap",
+            "+Spec",
+            "+Both",
+            "Hidden",
+            "Spec (conf/roll)",
+            "Success (seq->both)",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.policy.name().to_string(),
+            ms(r.seq.lat),
+            ms(r.overlap.lat),
+            ms(r.spec.lat),
+            ms(r.both.lat),
+            ms(r.overlap.hidden_ms),
+            format!("{}/{}", r.both.spec_confirms, r.both.spec_rollbacks),
+            format!("{} -> {}", pct(r.seq.success), pct(r.both.success)),
+        ]);
+    }
+    t.footnote(
+        "Sequential = [pipeline] disabled (bit-identical to the plain scheduler). +Overlap \
+         hides the step t+1 edge prefix under the in-flight round trip; Hidden is the total \
+         prefix time so absorbed. +Spec serves a provisional edge chunk immediately — conf \
+         replies cost nothing, roll replies re-charge the rollback penalty and adopt the \
+         cloud suffix. The [cache] z-score gate keeps anomalous phases sequential.",
+    );
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemConfig {
+        let mut s = SystemConfig::default();
+        s.fleet.n_sessions = 6;
+        s.fleet.max_batch = 3;
+        s
+    }
+
+    #[test]
+    fn sequential_arm_is_the_unmodified_scheduler() {
+        // arm 0 must be bit-identical to a run of the caller's config with
+        // [pipeline] untouched (shipped disabled) — the differential
+        // acceptance pin lives in rust/tests/pipeline_exec.rs
+        let base = sys();
+        let (_, rows) = run(&base, TaskKind::PickPlace);
+        for kind in POLICIES {
+            let plain = arm(&base, TaskKind::PickPlace, kind);
+            let r = rows.iter().find(|r| r.policy == kind).unwrap();
+            assert_eq!(r.seq.lat, plain.lat, "{:?}", kind);
+            assert_eq!(r.seq.success, plain.success, "{:?}", kind);
+            assert_eq!(r.seq.cloud_events, plain.cloud_events, "{:?}", kind);
+        }
+    }
+
+    #[test]
+    fn cloud_only_overlap_arm_is_bit_identical_to_sequential() {
+        // zoo disabled => no family plan => no edge prefix => nothing to
+        // hide => overlap is provably a no-op
+        let (_, rows) = run(&sys(), TaskKind::PickPlace);
+        let r = rows.iter().find(|r| r.policy == PolicyKind::CloudOnly).unwrap();
+        assert_eq!(r.overlap.lat, r.seq.lat);
+        assert_eq!(r.overlap.hidden_ms, 0.0);
+        assert!(r.overlap.completed);
+    }
+
+    #[test]
+    fn rapid_pipeline_strictly_cuts_latency_at_no_success_cost() {
+        let (_, rows) = run(&sys(), TaskKind::PickPlace);
+        let r = rows.iter().find(|r| r.policy == PolicyKind::Rapid).unwrap();
+        assert!(r.seq.completed && r.overlap.completed && r.spec.completed && r.both.completed);
+        assert!(
+            r.both.lat < r.seq.lat,
+            "pipeline+speculation must strictly beat sequential: {} vs {}",
+            r.both.lat,
+            r.seq.lat
+        );
+        assert!(r.spec.lat < r.seq.lat, "speculation alone hides round trips");
+        assert!(r.both.spec_dispatches > 0);
+        assert_eq!(
+            r.both.spec_confirms + r.both.spec_rollbacks,
+            r.both.spec_dispatches,
+            "every speculation resolves"
+        );
+        // confirmed chunks are within accept_eps of the cloud answer and
+        // rollbacks adopt the cloud suffix, so tracking stays inside the
+        // sim's success envelope
+        assert!(r.both.success >= r.seq.success);
+    }
+
+    #[test]
+    fn overlap_hides_prefix_on_deep_splits() {
+        // a zoo fleet planned under a slow link picks deep splits with
+        // real prefix compute: the overlap arm must hide some of it and
+        // get strictly cheaper without moving a single cloud event
+        let mut s = sys();
+        s.models.enabled = true;
+        s.link.bw_mbps = 20.0;
+        s.link.rtt_ms = 40.0;
+        let (_, rows) = run(&s, TaskKind::PickPlace);
+        for r in &rows {
+            assert!(r.overlap.completed, "{:?}", r.policy);
+            assert!(r.overlap.hidden_ms > 0.0, "{:?} hides no prefix", r.policy);
+            assert!(
+                r.overlap.lat < r.seq.lat,
+                "{:?}: overlap must be cheaper: {} vs {}",
+                r.policy,
+                r.overlap.lat,
+                r.seq.lat
+            );
+            // overlap restructures charges only — identical draws,
+            // trajectory, and offload pattern
+            assert_eq!(r.overlap.cloud_events, r.seq.cloud_events, "{:?}", r.policy);
+            assert_eq!(r.overlap.success, r.seq.success, "{:?}", r.policy);
+        }
+    }
+
+    #[test]
+    fn table_renders_all_policies() {
+        let (t, rows) = run(&sys(), TaskKind::PickPlace);
+        assert_eq!(rows.len(), POLICIES.len());
+        let rendered = t.render();
+        for r in &rows {
+            assert!(rendered.contains(r.policy.name().split(' ').next().unwrap()));
+        }
+    }
+}

@@ -73,7 +73,17 @@
 //!   Fleet bookkeeping is O(batch) per event — incremental
 //!   active/finished counters, epoch-tagged lazy fault-edge adoption, a
 //!   sorted arrival list for dead-air jumps — so `rapid bench scale`
-//!   pushes 100k in-process sessions through one scheduler.
+//!   pushes 100k in-process sessions through one scheduler. The
+//!   config-gated `[pipeline]` stage adds **pipelined + speculative
+//!   partition execution** on top: *overlap* hides the step t+1
+//!   edge-prefix compute under the in-flight round trip (an offload
+//!   charges `max(prefix, wire + cloud)` instead of the sum), and
+//!   *speculative edge decoding* serves a provisional edge chunk
+//!   immediately — the session keeps stepping and the cloud reply
+//!   confirms the consumed prefix for free or rolls it back for a
+//!   configured penalty, with the `[cache]` z-score gate keeping
+//!   anomalous phases sequential. Shipped disabled: the inert stage is
+//!   bit-identical to the sequential scheduler, PRNG draws included.
 //! * [`experiments`] — one generator per paper table/figure.
 //!
 //! Python runs once at build time (`make artifacts`); the binary built from

@@ -5,7 +5,7 @@
 //!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
 //!             [--analytic] [--trace out.csv] [--config file.toml]
 //! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo
-//!             |workload|scale|all> [--json BENCH_serve.json] [--budget-ms MS]
+//!             |workload|pipeline|scale|all> [--json BENCH_serve.json] [--budget-ms MS]
 //!             (scale also takes --sessions N: the Poisson fleet ladder
 //!              climbs to N in-process sessions, e.g. --sessions 100000)
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
@@ -14,6 +14,7 @@
 //! rapid zoo   [--sessions N] [--task T] [--seed S] [--config file.toml]
 //! rapid workload [--sessions N] [--task T] [--seed S] [--config file.toml]
 //!             [--arrivals fixed|poisson|bursty|trace] [--trace T] [--interarrival R]
+//! rapid pipeline [--sessions N] [--task T] [--seed S] [--config file.toml]
 //! rapid info
 //! ```
 //!
@@ -35,6 +36,7 @@ fn main() {
         Some("chaos") => cmd_chaos(&args[1..]),
         Some("zoo") => cmd_zoo(&args[1..]),
         Some("workload") => cmd_workload(&args[1..]),
+        Some("pipeline") => cmd_pipeline(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -55,7 +57,7 @@ fn print_help() {
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
          \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve\n\
-         \x20             |zoo|workload|scale|all>\n\
+         \x20             |zoo|workload|pipeline|scale|all>\n\
          \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
          \x20             (serve: benchkit timings of the serve layer, written as\n\
          \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
@@ -79,6 +81,10 @@ fn print_help() {
          \x20             [--interarrival R]\n\
          \x20             (dynamic open-loop arrivals: prints the compiled\n\
          \x20              session plan, then the arrival-shape table)\n\
+         \x20 rapid pipeline [--sessions N] [--task T] [--seed S] [--config FILE]\n\
+         \x20             (pipelined + speculative execution: prints the active\n\
+         \x20              [pipeline] knobs, then the four-arm off/on x spec\n\
+         \x20              off/on table for RAPID vs Cloud-Only)\n\
          \x20 rapid info\n"
     );
 }
@@ -298,6 +304,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         "serve" => bench_serve(&sys, &flags, single),
         "zoo" => bench_zoo(&sys, &flags, single),
         "workload" => bench_workload(&sys, &flags, single),
+        "pipeline" => bench_pipeline(&sys, &flags, single),
         "scale" => bench_scale(&sys, &flags, single),
         other => eprintln!("unknown bench {other}"),
     };
@@ -310,7 +317,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         }
         for name in [
             "tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead",
-            "reuse", "serve", "zoo", "workload",
+            "reuse", "serve", "zoo", "workload", "pipeline",
         ] {
             println!("\n### {name}");
             run_one(name, &mut b);
@@ -516,6 +523,58 @@ fn bench_workload(sys: &SystemConfig, flags: &Flags, write_json: bool) {
     }
 }
 
+/// `rapid bench pipeline`: benchkit timings of the pipelined execution
+/// path — the sequential scheduler vs the overlap+speculation fleet for
+/// RAPID and Cloud-Only — optionally written as machine-readable JSON
+/// (`--json BENCH_pipeline.json`). The `seq` cases double as a perf
+/// guard: the disabled-pipeline fleet must not regress under the new
+/// branches.
+fn bench_pipeline(sys: &SystemConfig, flags: &Flags, write_json: bool) {
+    use rapid::robot::TaskKind;
+
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("pipelined execution");
+
+    let arms = rapid::experiments::pipeline::arms(sys);
+    let n = sys.fleet.n_sessions.max(1);
+    for (arm_idx, label) in [(0usize, "seq"), (3usize, "both")] {
+        for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+            let name = format!(
+                "pipeline_fleet/{n}s/{label}/{}",
+                if kind == PolicyKind::Rapid { "rapid" } else { "cloud_only" }
+            );
+            let s = arms[arm_idx].clone();
+            bench.run(&name, || {
+                let res = rapid::serve::Fleet::local(&s, TaskKind::PickPlace, kind).run();
+                std::hint::black_box(res.stats.spec_requests);
+            });
+        }
+    }
+
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// The `bench scale` Poisson ladder: rungs at 1%, 10%, and 100% of
+/// `--sessions`, each clamped to >= 1 session (1% of anything below 100
+/// truncates to zero otherwise and the fleet constructor has nothing to
+/// run), with adjacent duplicate rungs collapsed so tiny ladders don't
+/// re-time the same fleet.
+fn scale_rungs(sessions: usize) -> Vec<usize> {
+    let mut rungs: Vec<usize> =
+        [sessions / 100, sessions / 10, sessions].into_iter().map(|n| n.max(1)).collect();
+    rungs.dedup();
+    rungs
+}
+
 /// `rapid bench scale`: the in-process scale ceiling. Micro benches of
 /// the three layers the ceiling rests on — the virtual-time event queue,
 /// the sharded reuse store under eviction pressure, and the reusable
@@ -619,10 +678,7 @@ fn bench_scale(sys: &SystemConfig, flags: &Flags, write_json: bool) {
     // one episode per session, fleet-shared sharded cache on. One timed
     // iteration per rung: a 100k-session run is its own measurement.
     let mut bench = bench.with_min_iters(1).with_warmup_iters(0);
-    let mut rungs: Vec<usize> =
-        [sessions / 100, sessions / 10, sessions].into_iter().map(|n| n.max(1)).collect();
-    rungs.dedup();
-    for n in rungs {
+    for n in scale_rungs(sessions) {
         let mut s = sys.clone();
         s.workload.enabled = true;
         s.workload.arrivals = "poisson".into();
@@ -1037,6 +1093,62 @@ fn cmd_workload(rest: &[String]) -> i32 {
     }
 }
 
+/// `rapid pipeline`: the pipelined + speculative execution demo — print
+/// the active `[pipeline]` knobs, then the four-arm table (pipeline
+/// off/on x speculation off/on) for RAPID vs Cloud-Only. Exits non-zero
+/// if any arm wedges or leaves a speculation unresolved.
+fn cmd_pipeline(rest: &[String]) -> i32 {
+    let flags = Flags(rest);
+    let mut sys = load_sys(&flags);
+    if let Some(n) = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.n_sessions = n.max(1);
+    }
+    let task = flags
+        .get("--task")
+        .and_then(TaskKind::parse)
+        .unwrap_or(rapid::robot::TaskKind::PickPlace);
+
+    let p = &sys.pipeline;
+    println!(
+        "pipeline: {} (overlap {}, speculate {}) — spec_decode {} ms, rollback {} ms, \
+         accept_eps {}, max_zscore {}",
+        if p.enabled { "enabled" } else { "disabled (table arms enable it)" },
+        p.overlap,
+        p.speculate,
+        p.spec_decode_ms,
+        p.rollback_ms,
+        p.accept_eps,
+        p.max_zscore
+    );
+
+    let t0 = std::time::Instant::now();
+    let (table, rows) = rapid::experiments::pipeline::run(&sys, task);
+    print!("{}", table.render());
+    let mut bad: Vec<String> = Vec::new();
+    for r in &rows {
+        for (label, a) in
+            [("seq", &r.seq), ("overlap", &r.overlap), ("spec", &r.spec), ("both", &r.both)]
+        {
+            if !a.completed {
+                bad.push(format!("{}/{label} wedged", r.policy.name()));
+            }
+            if a.spec_confirms + a.spec_rollbacks != a.spec_dispatches {
+                bad.push(format!("{}/{label} left a speculation unresolved", r.policy.name()));
+            }
+        }
+    }
+    if bad.is_empty() {
+        println!(
+            "all arms completed; every speculation resolved; wall {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        0
+    } else {
+        eprintln!("FAILED arms: {bad:?}");
+        1
+    }
+}
+
 fn cmd_info() -> i32 {
     println!("RAPID reproduction — three-layer rust + JAX + Pallas stack");
     match rapid::runtime::ArtifactMeta::load(rapid::runtime::ArtifactMeta::default_dir()) {
@@ -1056,4 +1168,25 @@ fn cmd_info() -> i32 {
     #[cfg(not(feature = "pjrt"))]
     println!("pjrt: disabled at build time (enable the `pjrt` feature)");
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::scale_rungs;
+
+    #[test]
+    fn scale_rungs_clamp_small_fleets_to_one_session() {
+        // the ISSUE-7 pin: 1% of 50 truncates to 0 without the clamp
+        assert_eq!(scale_rungs(50), vec![1, 5, 50]);
+        // below 10 sessions the two small rungs collapse onto one
+        assert_eq!(scale_rungs(7), vec![1, 7]);
+        assert_eq!(scale_rungs(1), vec![1]);
+        // at and above 100 the ladder is the plain 1%/10%/100% split
+        assert_eq!(scale_rungs(100), vec![1, 10, 100]);
+        assert_eq!(scale_rungs(10_000), vec![100, 1_000, 10_000]);
+        // every rung is runnable
+        for s in [1usize, 2, 9, 10, 49, 99, 101, 12_345] {
+            assert!(scale_rungs(s).iter().all(|&n| n >= 1), "sessions {s}");
+        }
+    }
 }

@@ -50,6 +50,25 @@ pub struct EpisodeMetrics {
     /// Subset of misses where a matching entry existed but had aged past
     /// `cache.ttl_rounds` (the staleness half of the divergence budget).
     pub cache_stale: u64,
+    /// Offloads that dispatched speculatively (`[pipeline].speculate`):
+    /// the edge kept stepping on a provisional chunk while the cloud
+    /// round trip was in flight; always 0 with the pipeline disabled.
+    pub spec_dispatches: u64,
+    /// Speculative dispatches whose cloud reply confirmed the consumed
+    /// provisional prefix within `pipeline.accept_eps` (free).
+    pub spec_confirms: u64,
+    /// Speculative dispatches the cloud reply corrected (`rollback_ms`
+    /// re-charged to the session clock and overhead column).
+    pub spec_rollbacks: u64,
+    /// Offload triggers suppressed because a speculative cloud request
+    /// was already in flight for this session.
+    pub spec_suppressed: u64,
+
+    // --- pipeline overlap (ms) ---
+    /// Edge-prefix compute hidden under in-flight cloud round trips by
+    /// `[pipeline].overlap` (already subtracted from `edge_busy_ms`);
+    /// always 0 with the pipeline disabled.
+    pub overlap_hidden_ms: f64,
 
     // --- loads (GB), time-averaged over the episode ---
     pub edge_gb: f64,
@@ -90,6 +109,11 @@ impl EpisodeMetrics {
             cache_hits: 0,
             cache_misses: 0,
             cache_stale: 0,
+            spec_dispatches: 0,
+            spec_confirms: 0,
+            spec_rollbacks: 0,
+            spec_suppressed: 0,
+            overlap_hidden_ms: 0.0,
             edge_gb: 0.0,
             cloud_gb: 0.0,
             trig_tp: 0,

@@ -49,9 +49,18 @@ impl DeviceClock {
     /// [`DeviceClock::cloud_compute`] under a model-family time multiplier
     /// (zoo partition points). Scale 1.0 is bit-identical.
     pub fn cloud_compute_scaled(&mut self, scale: f64) -> f64 {
-        let t = self.jittered(self.cfg.cloud_compute_ms) * scale;
+        let t = self.cloud_compute_sampled(scale);
         self.now_ms += t;
         t
+    }
+
+    /// Draw the cloud compute time *without* advancing the clock — the
+    /// pipelined offload paths (`[pipeline]`) charge the round trip in
+    /// restructured form but must consume exactly the same jitter draw as
+    /// the sequential [`DeviceClock::cloud_compute_scaled`] path, so a
+    /// degenerate pipeline stays bit-identical.
+    pub fn cloud_compute_sampled(&mut self, scale: f64) -> f64 {
+        self.jittered(self.cfg.cloud_compute_ms) * scale
     }
 
     /// Vision-based routing cost (preprocess + distribution extraction).
@@ -108,6 +117,22 @@ mod tests {
         let mut b = DeviceClock::new(&sys.devices, 3);
         for _ in 0..10 {
             assert_eq!(a.cloud_compute(), b.cloud_compute());
+        }
+    }
+
+    #[test]
+    fn sampled_draw_matches_scaled_draw() {
+        // same seed, same draw stream: sampling then advancing by hand is
+        // indistinguishable from the one-shot scaled call
+        let sys = SystemConfig::default();
+        let mut a = DeviceClock::new(&sys.devices, 5);
+        let mut b = DeviceClock::new(&sys.devices, 5);
+        for _ in 0..50 {
+            let ta = a.cloud_compute_scaled(1.3);
+            let tb = b.cloud_compute_sampled(1.3);
+            b.advance(tb);
+            assert_eq!(ta, tb);
+            assert_eq!(a.now_ms, b.now_ms);
         }
     }
 

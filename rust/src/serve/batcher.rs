@@ -26,6 +26,17 @@
 //! (`net::proto::TAG_ZOO_BATCH_INFER`) whose single family byte covers
 //! the whole batch; the surrogate family keeps the original untagged
 //! frames so a zoo-free fleet's wire traffic is bit-identical to PR 3.
+//!
+//! # Speculative requests (`[pipeline].speculate`)
+//!
+//! Speculative dispatches ride the batcher exactly like suspended ones:
+//! they occupy an in-flight slot (counting toward `fleet.max_inflight`
+//! backpressure), obey the family seal above — a speculative request of a
+//! new family still flushes the pending batch, so batches stay
+//! family-pure regardless of speculation — and are served by the same
+//! family-uniform wire frames. The only difference is downstream of the
+//! flush: a speculative request's session never suspended, so the flush
+//! resolves the speculation in place instead of resuming the session.
 
 pub struct Batcher<T> {
     buf: Vec<T>,

@@ -64,6 +64,24 @@ pub struct CloudRequest {
     /// zoo plan). The fleet scheduler keys its cross-session batches on
     /// this so no wire batch ever mixes frame layouts.
     pub family: ModelFamily,
+    /// True for a speculative dispatch (`[pipeline].speculate`): the
+    /// session did **not** suspend — it keeps stepping on a provisional
+    /// edge chunk — so the reply must be delivered via
+    /// [`EpisodeState::resolve_speculation`] (or
+    /// [`EpisodeState::abort_speculation`] when lost), never
+    /// `complete_cloud`/`fail_cloud`.
+    pub speculative: bool,
+}
+
+/// In-flight speculative offload (`[pipeline].speculate`): what the
+/// session dispatched provisionally, kept until the cloud reply confirms
+/// or corrects it.
+struct SpecState {
+    /// Control-step index at dispatch; the consumed provisional prefix at
+    /// resolution time is `step_index - t0`.
+    t0: usize,
+    /// The provisional edge-decoded actions the session is executing.
+    provisional: Vec<crate::robot::Jv>,
 }
 
 /// What happened when the session was polled.
@@ -98,6 +116,9 @@ pub struct EpisodeState {
     prev_tau: crate::robot::Jv,
     /// Set between a `NeedCloud` return and its `complete_cloud` call.
     awaiting: bool,
+    /// Outstanding speculative offload (`[pipeline].speculate`); always
+    /// `None` with the pipeline disabled.
+    spec: Option<SpecState>,
     /// Model-zoo serving plan (None without `[models]`: every path below
     /// is then bit-identical to a plan-free build).
     family_plan: Option<FamilyPlan>,
@@ -135,6 +156,7 @@ impl EpisodeState {
             prev_repartitions: 0,
             prev_tau: crate::robot::Jv::ZERO,
             awaiting: false,
+            spec: None,
             family_plan: None,
         }
     }
@@ -151,9 +173,20 @@ impl EpisodeState {
         self.family_plan.as_ref().map_or(ModelFamily::Surrogate, |p| p.family)
     }
 
+    /// The installed model-zoo serving plan (`None` without `[models]`).
+    pub fn family_plan(&self) -> Option<&FamilyPlan> {
+        self.family_plan.as_ref()
+    }
+
     /// True while a `NeedCloud` request is outstanding.
     pub fn is_awaiting_cloud(&self) -> bool {
         self.awaiting
+    }
+
+    /// True while a *speculative* cloud request is outstanding (the
+    /// session keeps stepping; resolution happens at the next flush).
+    pub fn has_speculation(&self) -> bool {
+        self.spec.is_some()
     }
 
     /// Install (or clear) a time-varying link condition (fault-injection
@@ -188,9 +221,11 @@ impl EpisodeState {
         metrics
     }
 
-    /// True once every control step of the episode has executed.
+    /// True once every control step of the episode has executed — and
+    /// every cloud dispatch (suspended *or* speculative) is resolved, so
+    /// an episode never departs with an unresolved request in the batcher.
     pub fn is_done(&self) -> bool {
-        !self.awaiting && self.sim.done()
+        !self.awaiting && self.spec.is_none() && self.sim.done()
     }
 
     pub fn metrics(&self) -> &EpisodeMetrics {
@@ -251,6 +286,15 @@ impl EpisodeState {
         // Invariant #1: an empty queue must force a refill.
         let mut route =
             if self.queue.is_empty() && route == Route::Cached { Route::EdgeRefill } else { route };
+
+        // A second offload while a speculative request is in flight would
+        // double-book the session in the batcher; degrade it exactly like
+        // a backpressured dispatch. Dead code with the pipeline disabled
+        // (`spec` is then always `None`).
+        if route == Route::CloudOffload && self.spec.is_some() {
+            self.metrics.spec_suppressed += 1;
+            route = if self.queue.is_empty() { Route::EdgeRefill } else { Route::Cached };
+        }
 
         // Speculative chunk reuse: probe the store before paying for the
         // wire. The signature is pure proprio/kinematics, so a hit skips
@@ -334,30 +378,87 @@ impl EpisodeState {
                         self.family_plan.as_ref()
                     };
                     let t_prefix = zoo_split.map_or(0.0, |p| p.edge_prefix_ms);
-                    if t_prefix > 0.0 {
-                        self.clock.advance(t_prefix);
-                        self.metrics.edge_busy_ms += t_prefix;
-                    }
                     let payload = if self.strategy.needs_entropy() {
                         sys.link.activation_bytes
                     } else {
                         zoo_split.map_or(sys.link.obs_bytes, |p| p.payload_bytes)
                     };
                     let xfer = self.link.offload_roundtrip(payload, sys.link.chunk_bytes, clarity);
-                    self.clock.advance(xfer.ms);
                     // the jittered draw happens either way (identical PRNG
                     // stream); a plan rescales it to its family's cloud cost
-                    let t_compute = self.clock.cloud_compute_scaled(self.cloud_ms_scale(sys));
-                    self.metrics.cloud_busy_ms += t_cap + xfer.ms + t_compute;
+                    let t_compute = self.clock.cloud_compute_sampled(self.cloud_ms_scale(sys));
+                    // speculative edge decoding: routine dispatches (the
+                    // shared z-score gate — critical phases never
+                    // speculate) emit a provisional edge chunk and keep
+                    // stepping instead of suspending
+                    let speculative = sys.pipeline.speculate_on()
+                        && crate::cache::zscore_gate_allows(
+                            self.strategy.reuse_evidence().as_ref(),
+                            sys.pipeline.max_zscore,
+                        );
+                    // [pipeline] overlap: the split-point prefix of the
+                    // *next* dispatch computes while this round trip is in
+                    // flight, so only the exposed remainder is charged —
+                    // max(prefix, wire + cloud) instead of the sum. (A
+                    // speculative dispatch hides the whole round trip
+                    // instead; nothing is left to overlap.)
+                    let hidden = if sys.pipeline.overlap_on() && !speculative {
+                        t_prefix.min(xfer.ms + t_compute)
+                    } else {
+                        0.0
+                    };
+                    if t_prefix > 0.0 {
+                        self.clock.advance(t_prefix - hidden);
+                        self.metrics.edge_busy_ms += t_prefix - hidden;
+                        self.metrics.overlap_hidden_ms += hidden;
+                    }
                     self.metrics.cloud_events += 1;
                     self.metrics.retransmissions += xfer.retransmissions as u64;
                     self.metrics.overhead_ms += xfer.retransmissions as f64 * RETRANS_PENALTY_MS;
                     self.strategy.on_offload(t);
                     self.score_trigger(t);
-
-                    self.awaiting = true;
                     let family = self.family();
-                    return StepEvent::NeedCloud(CloudRequest { obs, proprio, instr, sig, family });
+
+                    if speculative {
+                        // the wire and cloud compute are fully hidden
+                        // behind continued edge stepping: drawn above (so
+                        // PRNG streams stay aligned with the sequential
+                        // path) but never charged. The session pays the
+                        // capture plus a cheap provisional decode and
+                        // moves on; the flush resolves the request.
+                        self.metrics.cloud_busy_ms += t_cap;
+                        self.clock.advance(sys.pipeline.spec_decode_ms);
+                        self.metrics.edge_busy_ms += sys.pipeline.spec_decode_ms;
+                        self.metrics.spec_dispatches += 1;
+                        let t0 = std::time::Instant::now();
+                        let out = edge.infer(&obs, &proprio, instr);
+                        self.metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
+                        self.refill_queue(&out, ChunkSource::Edge, t);
+                        self.charge_repartitions();
+                        self.spec = Some(SpecState { t0: t, provisional: out.actions.clone() });
+                        self.finish_step(sys, Route::CloudOffload);
+                        return StepEvent::NeedCloud(CloudRequest {
+                            obs,
+                            proprio,
+                            instr,
+                            sig,
+                            family,
+                            speculative: true,
+                        });
+                    }
+
+                    self.clock.advance(xfer.ms);
+                    self.clock.advance(t_compute);
+                    self.metrics.cloud_busy_ms += t_cap + xfer.ms + t_compute;
+                    self.awaiting = true;
+                    return StepEvent::NeedCloud(CloudRequest {
+                        obs,
+                        proprio,
+                        instr,
+                        sig,
+                        family,
+                        speculative: false,
+                    });
                 }
 
                 // routine edge refill
@@ -384,10 +485,56 @@ impl EpisodeState {
 
     /// Account a delayed cloud reply: the session stalls `ms` of virtual
     /// time still suspended (call before [`EpisodeState::complete_cloud`]).
+    /// Speculative requests never stall and must not be charged here.
     pub fn charge_delay(&mut self, ms: f64) {
         assert!(self.awaiting, "charge_delay() without a pending request");
         self.clock.advance(ms);
         self.metrics.overhead_ms += ms;
+    }
+
+    /// Resolve an outstanding speculative offload with the cloud's reply
+    /// (`[pipeline].speculate`): the provisional actions consumed since
+    /// dispatch are *confirmed* — free — when every one stayed within
+    /// `pipeline.accept_eps` of the cloud's answer, otherwise the
+    /// `rollback_ms` penalty is re-charged to the session clock and the
+    /// overhead column. Either way the cloud chunk's unconsumed suffix
+    /// replaces the provisional remainder, so the session converges back
+    /// onto cloud-grade actions from the next step on.
+    pub fn resolve_speculation(&mut self, sys: &SystemConfig, out: ModelOut, measured_us: f64) {
+        let spec = self.spec.take().expect("resolve_speculation() without a speculative offload");
+        self.metrics.measured_cloud_us += measured_us;
+        let consumed = (self.sim.step_index() - spec.t0)
+            .min(spec.provisional.len())
+            .min(out.actions.len());
+        let confirmed = (0..consumed)
+            .all(|i| (spec.provisional[i] - out.actions[i]).abs_max() <= sys.pipeline.accept_eps);
+        if confirmed {
+            self.metrics.spec_confirms += 1;
+        } else {
+            self.metrics.spec_rollbacks += 1;
+            self.clock.advance(sys.pipeline.rollback_ms);
+            self.metrics.overhead_ms += sys.pipeline.rollback_ms;
+        }
+        // adopt the cloud-grade suffix for the steps not yet consumed
+        // (skipped only when the whole chunk is already in the past)
+        if consumed < out.actions.len() {
+            self.side.clear();
+            for i in consumed..out.actions.len() {
+                self.side.push_back((out.entropy(i), out.mass[i]));
+            }
+            self.queue.overwrite(&out.actions[consumed..], ChunkSource::Cloud, self.sim.step_index());
+            self.metrics.discarded_actions = self.queue.discarded;
+        }
+        self.charge_repartitions();
+    }
+
+    /// A speculative offload whose reply was lost (dropped frame, crashed
+    /// endpoint, exhausted retries): the provisional chunk simply stands —
+    /// the session never stalled on the reply — and the lost dispatch is
+    /// recorded as a failover.
+    pub fn abort_speculation(&mut self) {
+        assert!(self.spec.take().is_some(), "abort_speculation() without a speculative offload");
+        self.metrics.failovers += 1;
     }
 
     /// Resolve a suspended offload whose reply was lost (dropped frame,
@@ -555,6 +702,7 @@ impl EpisodeState {
     /// finished episode without consuming the slot.
     pub fn seal_metrics(&mut self, sys: &SystemConfig) -> EpisodeMetrics {
         assert!(!self.awaiting, "seal_metrics() while awaiting a cloud response");
+        assert!(self.spec.is_none(), "seal_metrics() with an unresolved speculative offload");
         self.metrics.edge_gb = self.edge_gb_accum / self.metrics.steps.max(1) as f64;
         self.metrics.cloud_gb = sys.cloud_gb(self.metrics.edge_gb);
         self.metrics.rms_error = self.sim.rms_error();
@@ -617,7 +765,15 @@ pub fn run_episode_with_cache(
                 if let (Some(st), Some(sig)) = (store.as_deref_mut(), req.sig) {
                     st.admit(sig, out.clone(), round, owner);
                 }
-                state.complete_cloud(sys, out, t0.elapsed().as_micros() as f64);
+                let us = t0.elapsed().as_micros() as f64;
+                if req.speculative {
+                    // single-session serving resolves immediately: exactly
+                    // one provisional action was consumed (the dispatch
+                    // step itself)
+                    state.resolve_speculation(sys, out, us);
+                } else {
+                    state.complete_cloud(sys, out, us);
+                }
             }
         }
         round += 1;
@@ -1046,5 +1202,106 @@ mod tests {
         assert_eq!(manual.cloud_events, solo.cloud_events);
         assert_eq!(manual.edge_events, solo.edge_events);
         assert_eq!(manual.rms_error, solo.rms_error);
+    }
+
+    #[test]
+    fn degenerate_pipeline_is_bit_identical() {
+        // [pipeline] enabled with both modes off — and overlap armed with
+        // no zoo plan (prefix 0, nothing to hide) — must not move a single
+        // metric relative to the plain run of the same seed
+        let base = run(PolicyKind::Rapid, TaskKind::PickPlace, 14);
+        for (overlap, speculate) in [(false, false), (true, false)] {
+            let mut sys = SystemConfig::default();
+            sys.pipeline.enabled = true;
+            sys.pipeline.overlap = overlap;
+            sys.pipeline.speculate = speculate;
+            let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
+            let mut edge = AnalyticBackend::edge(14);
+            let mut cloud = AnalyticBackend::cloud(14);
+            let m = run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 14, false)
+                .metrics;
+            assert_eq!(m.latency_columns(), base.latency_columns(), "overlap={overlap}");
+            assert_eq!(m.cloud_events, base.cloud_events);
+            assert_eq!(m.rms_error, base.rms_error);
+            assert_eq!(m.spec_dispatches, 0);
+            assert_eq!(m.overlap_hidden_ms, 0.0);
+        }
+    }
+
+    #[test]
+    fn speculative_episode_completes_and_is_cheaper() {
+        // Cloud-Only exposes no kinematic evidence, so the z-gate allows
+        // every dispatch: each offload hides its full round trip behind a
+        // provisional decode and pays at most decode + rollback
+        let base = run(PolicyKind::CloudOnly, TaskKind::PickPlace, 15);
+        let mut sys = SystemConfig::default();
+        sys.pipeline.enabled = true;
+        sys.pipeline.speculate = true;
+        let strategy = crate::policy::build(PolicyKind::CloudOnly, &sys);
+        let mut edge = AnalyticBackend::edge(15);
+        let mut cloud = AnalyticBackend::cloud(15);
+        let m =
+            run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 15, false).metrics;
+        assert_eq!(m.steps, TaskKind::PickPlace.seq_len());
+        assert!(m.spec_dispatches > 0);
+        assert_eq!(m.spec_confirms + m.spec_rollbacks, m.spec_dispatches, "every spec resolves");
+        assert!(
+            m.latency_columns().2 < base.latency_columns().2,
+            "speculation must be cheaper: {} vs {}",
+            m.latency_columns().2,
+            base.latency_columns().2
+        );
+    }
+
+    #[test]
+    fn overlap_hides_prefix_under_the_round_trip() {
+        use crate::vla::profile::{FamilyProfile, ModelFamily};
+        use crate::vla::ZooBackend;
+        // a deep split (planned under a slow link) has real prefix compute
+        // to hide; overlap must shave exactly that time off the columns
+        // while leaving draws — and therefore the trajectory — untouched
+        let run_planned = |sys: &SystemConfig| {
+            let plan = crate::policy::planner::plan(
+                &FamilyProfile::of(ModelFamily::OpenVlaAr),
+                20.0,
+                40.0,
+            );
+            assert!(plan.edge_prefix_ms > 0.0, "slow link must pick a deep split");
+            let mut edge = ZooBackend::edge(ModelFamily::OpenVlaAr, 16);
+            let mut cloud = ZooBackend::cloud(ModelFamily::OpenVlaAr, 16);
+            let strategy = crate::policy::build(PolicyKind::CloudOnly, sys);
+            let mut st = EpisodeState::new(sys, TaskKind::PickPlace, strategy, 16, false);
+            st.set_family_plan(Some(plan));
+            loop {
+                match st.poll(sys, &mut edge, &mut cloud, true) {
+                    StepEvent::Stepped => {}
+                    StepEvent::Done => break,
+                    StepEvent::NeedCloud(req) => {
+                        assert!(!req.speculative);
+                        let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                        st.complete_cloud(sys, out, 0.0);
+                    }
+                }
+            }
+            st.finish(sys).metrics
+        };
+        let mut sys = SystemConfig::default();
+        sys.pipeline.enabled = true;
+        sys.pipeline.overlap = true;
+        let on = run_planned(&sys);
+        sys.pipeline.overlap = false;
+        let off = run_planned(&sys);
+        assert!(on.overlap_hidden_ms > 0.0);
+        assert_eq!(off.overlap_hidden_ms, 0.0);
+        assert!(
+            on.latency_columns().2 < off.latency_columns().2,
+            "overlap must be cheaper: {} vs {}",
+            on.latency_columns().2,
+            off.latency_columns().2
+        );
+        // overlap restructures charges only: identical draws, trajectory
+        assert_eq!(on.rms_error, off.rms_error);
+        assert_eq!(on.cloud_events, off.cloud_events);
+        assert!((on.edge_busy_ms + on.overlap_hidden_ms - off.edge_busy_ms).abs() < 1e-6);
     }
 }

@@ -11,6 +11,10 @@
 //! * [`EventKind::Ready`] — a session may advance one control step. A
 //!   *reply-arrival* (a suspended session resumed by a batch flush)
 //!   re-enters the schedule as the `Ready` event the flush pushes for it.
+//!   A **speculative** dispatch (`[pipeline].speculate`) never suspends:
+//!   the session pushes its own next `Ready` at dispatch time and the
+//!   serving flush only resolves the speculation — it pushes no second
+//!   `Ready` for that session, or the session would double-step.
 //! * [`EventKind::Deadline`] — a round ends: batch-deadline / drain
 //!   bookkeeping runs, and the next round is scheduled (or the run ends).
 //!

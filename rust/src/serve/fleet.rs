@@ -140,6 +140,11 @@ pub struct FleetStats {
     /// construction; counted (not asserted) so the property suite can pin
     /// it across random interleavings.
     pub mixed_family_batches: u64,
+    // --- pipelined execution (all 0 with [pipeline] disabled) ---
+    /// Speculative requests that entered the batcher: their sessions kept
+    /// stepping on provisional edge chunks instead of suspending, and the
+    /// serving flush resolved (or aborted) each one.
+    pub spec_requests: u64,
     // --- workload engine (lockstep values with [workload] disabled) ---
     /// Sessions that joined the fleet (one arrival event each).
     pub arrivals: u64,
@@ -696,6 +701,10 @@ impl Fleet {
             }
             StepEvent::NeedCloud(req) => {
                 self.progressed = true;
+                let speculative = req.speculative;
+                if speculative {
+                    self.stats.spec_requests += 1;
+                }
                 // family-keyed batching: a request of a different family
                 // seals the pending batch first, so no wire batch ever
                 // mixes frame layouts
@@ -709,8 +718,16 @@ impl Fleet {
                 if self.batcher.is_full() {
                     self.flush(FlushCause::Full, queue, Some(i));
                 }
-                // no self-reschedule: the flush that serves this request
-                // pushes the session's reply-arrival ready event
+                if speculative {
+                    // the session did not suspend — it already executed its
+                    // step on the provisional chunk, so it schedules its own
+                    // next ready event; the flush that serves the request
+                    // only resolves the speculation (and must not push a
+                    // second ready for it)
+                    queue.push(t + 1, EventKind::Ready(i));
+                }
+                // non-speculative requests get no self-reschedule: the
+                // flush that serves them pushes the reply-arrival ready
             }
         }
     }
@@ -901,7 +918,10 @@ impl Fleet {
             if self.engine.reply_dropped(round) || delay > self.engine.timeout_ms {
                 self.stats.dropped_replies += 1;
                 for fr in &batch {
-                    self.slots[fr.session].state.charge_delay(timeout);
+                    // speculative sessions never stalled on this reply
+                    if !fr.req.speculative {
+                        self.slots[fr.session].state.charge_delay(timeout);
+                    }
                 }
                 timeouts_charged += 1;
                 self.router.complete(endpoint);
@@ -923,10 +943,17 @@ impl Fleet {
                         if let (Some(store), Some(sig)) = (self.store.as_mut(), fr.req.sig) {
                             store.admit(sig, out.clone(), round, fr.session);
                         }
-                        if delay > 0.0 {
-                            slot.state.charge_delay(delay);
+                        if fr.req.speculative {
+                            // the session kept stepping: an in-timeout delay
+                            // is invisible to it, the reply just resolves the
+                            // provisional prefix now
+                            slot.state.resolve_speculation(&self.sys, out, us);
+                        } else {
+                            if delay > 0.0 {
+                                slot.state.charge_delay(delay);
+                            }
+                            slot.state.complete_cloud(&self.sys, out, us);
                         }
-                        slot.state.complete_cloud(&self.sys, out, us);
                     }
                     self.router.complete(endpoint);
                     served = true;
@@ -961,23 +988,26 @@ impl Fleet {
                             // responses are routed back strictly by the
                             // echoed session id
                             for (sid, out) in outs {
-                                // admission on batch flush (a session has at
-                                // most one outstanding request, so the echoed
-                                // id identifies its signature uniquely)
+                                // the echoed session id identifies the
+                                // request uniquely (a session has at most
+                                // one outstanding request)
+                                let fr = batch.iter().find(|fr| fr.session == sid as usize);
+                                // admission on batch flush
                                 if let Some(store) = self.store.as_mut() {
-                                    let sig = batch
-                                        .iter()
-                                        .find(|fr| fr.session == sid as usize)
-                                        .and_then(|fr| fr.req.sig);
-                                    if let Some(sig) = sig {
+                                    if let Some(sig) = fr.and_then(|fr| fr.req.sig) {
                                         store.admit(sig, out.clone(), round, sid as usize);
                                     }
                                 }
+                                let speculative = fr.map_or(false, |fr| fr.req.speculative);
                                 let slot = &mut self.slots[sid as usize];
-                                if delay > 0.0 {
-                                    slot.state.charge_delay(delay);
+                                if speculative {
+                                    slot.state.resolve_speculation(&self.sys, out, per_us);
+                                } else {
+                                    if delay > 0.0 {
+                                        slot.state.charge_delay(delay);
+                                    }
+                                    slot.state.complete_cloud(&self.sys, out, per_us);
                                 }
-                                slot.state.complete_cloud(&self.sys, out, per_us);
                             }
                             self.router.complete(endpoint);
                             served = true;
@@ -993,7 +1023,9 @@ impl Fleet {
                             );
                             self.stats.endpoint_errors += 1;
                             for fr in &batch {
-                                self.slots[fr.session].state.charge_delay(timeout);
+                                if !fr.req.speculative {
+                                    self.slots[fr.session].state.charge_delay(timeout);
+                                }
                             }
                             timeouts_charged += 1;
                             self.io_dead[endpoint] = true;
@@ -1011,19 +1043,31 @@ impl Fleet {
             let final_wait = if timeouts_charged == 0 { timeout } else { 0.0 };
             for fr in &batch {
                 let slot = &mut self.slots[fr.session];
-                slot.state.fail_cloud(
-                    &self.sys,
-                    &fr.req,
-                    slot.edge.as_mut(),
-                    slot.cloud.as_mut(),
-                    final_wait,
-                );
+                if fr.req.speculative {
+                    // nothing to re-serve: the provisional chunk already
+                    // covered the step, the lost reply just counts
+                    slot.state.abort_speculation();
+                } else {
+                    slot.state.fail_cloud(
+                        &self.sys,
+                        &fr.req,
+                        slot.edge.as_mut(),
+                        slot.cloud.as_mut(),
+                        final_wait,
+                    );
+                }
             }
         }
-        // reply-arrival: every session in the batch resumed above (served
-        // or degraded) — schedule its next ready event per the `after`
-        // rule so the event order replays the lockstep iteration exactly
+        // reply-arrival: every suspended session in the batch resumed
+        // above (served or degraded) — schedule its next ready event per
+        // the `after` rule so the event order replays the lockstep
+        // iteration exactly. Speculative sessions already scheduled their
+        // own cadence at dispatch; a second ready here would double-step
+        // them.
         for fr in &batch {
+            if fr.req.speculative {
+                continue;
+            }
             let at = match after {
                 Some(j) if fr.session > j => self.cur_round,
                 _ => self.cur_round + 1,
@@ -1249,6 +1293,105 @@ mod tests {
         for s in &res.sessions {
             assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
         }
+    }
+
+    #[test]
+    fn speculative_fleet_resolves_every_request() {
+        // pipeline + speculation on: sessions keep stepping on provisional
+        // chunks, every request still flows through the batcher and every
+        // speculation is resolved by its serving flush
+        let mut sys = sys_with(4, 4, 16);
+        sys.pipeline.enabled = true;
+        sys.pipeline.speculate = true;
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert!(res.stats.spec_requests > 0);
+        let (mut disp, mut conf, mut roll, mut fails) = (0u64, 0u64, 0u64, 0u64);
+        for m in res.sessions.iter().flat_map(|s| s.episodes.iter()) {
+            assert_eq!(m.steps, TaskKind::PickPlace.seq_len());
+            disp += m.spec_dispatches;
+            conf += m.spec_confirms;
+            roll += m.spec_rollbacks;
+            fails += m.failovers;
+        }
+        assert_eq!(disp, res.stats.spec_requests);
+        assert_eq!(conf + roll, disp, "no faults: every speculation resolves via a reply");
+        assert_eq!(fails, 0);
+        // hiding the round trip must beat the sequential fleet on latency
+        let mut base_sys = sys.clone();
+        base_sys.pipeline.enabled = false;
+        let base = Fleet::local(&base_sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert!(
+            res.summary().fleet.total_lat_mean < base.summary().fleet.total_lat_mean,
+            "speculative fleet must be cheaper"
+        );
+    }
+
+    #[test]
+    fn dropped_speculative_replies_abort_without_stalling() {
+        use crate::faults::FaultPlan;
+        // every reply dropped, no retries: each speculation aborts as a
+        // failover — and, because the session never waited on the reply,
+        // the fleet still beats the sequential fleet that stalls out the
+        // timeout on every drop
+        let spec_run = |speculate: bool| {
+            let mut sys = sys_with(2, 4, 16);
+            sys.pipeline.enabled = speculate;
+            sys.pipeline.speculate = speculate;
+            let plan = FaultPlan::none().drop_replies(0, u64::MAX, 1.0);
+            let engine = FaultEngine::new(plan, 3, 250.0, 0);
+            Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine)
+                .run()
+        };
+        let res = spec_run(true);
+        let (mut disp, mut conf, mut roll, mut fails) = (0u64, 0u64, 0u64, 0u64);
+        for m in res.sessions.iter().flat_map(|s| s.episodes.iter()) {
+            assert_eq!(m.steps, TaskKind::PickPlace.seq_len());
+            disp += m.spec_dispatches;
+            conf += m.spec_confirms;
+            roll += m.spec_rollbacks;
+            fails += m.failovers;
+        }
+        assert!(disp > 0);
+        assert_eq!(conf + roll, 0, "every reply dropped: nothing resolves via the wire");
+        assert_eq!(fails, disp, "every speculation aborts as a failover");
+        let base = spec_run(false);
+        assert!(
+            res.summary().fleet.total_lat_mean < base.summary().fleet.total_lat_mean,
+            "aborted speculation must not pay the reply timeout"
+        );
+    }
+
+    #[test]
+    fn arrival_and_rollover_inside_fault_window_adopt_the_degraded_plan() {
+        use crate::faults::FaultPlan;
+        // regression: a fault edge that lands between a session's arrival
+        // event and its first ready (same-round ordering FaultEdge <
+        // Arrival < Ready) must hand the arriving — and any rolling-over —
+        // session the window's degraded-link plan, never the nominal one
+        let mut sys = sys_with(2, 4, 16);
+        sys.models.enabled = true;
+        sys.fleet.episodes_per_session = 2;
+        let plan = FaultPlan::none().degrade(5, 10_000, 5.0, 80.0);
+        let engine = FaultEngine::new(plan, 1, 250.0, 1);
+        let mut fleet =
+            Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine);
+        let mut queue = EventQueue::with_capacity(8);
+
+        // round 7 sits inside the degrade window
+        fleet.on_fault_edge(7, &mut queue);
+        assert!(fleet.link_epoch > 0);
+        let deep = planner::plan(&FamilyProfile::of(fleet.slots[0].family), 5.0, 80.0);
+        assert!(deep.partition_idx > 0, "the degraded link must move the split deeper");
+
+        // mid-window arrival: the slot must carry the degraded plan at once
+        fleet.on_session_arrival(0, 7, &mut queue);
+        assert_eq!(fleet.slot_epoch[0], fleet.link_epoch);
+        assert_eq!(fleet.slots[0].state.family_plan(), Some(&deep));
+
+        // mid-window episode rollover: the fresh state must as well
+        assert!(fleet.advance_episode(0), "episode 2 must start, not depart");
+        assert_eq!(fleet.slot_epoch[0], fleet.link_epoch);
+        assert_eq!(fleet.slots[0].state.family_plan(), Some(&deep));
     }
 
     #[test]

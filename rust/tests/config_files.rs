@@ -74,3 +74,24 @@ fn workload_sections_ship_disabled() {
     assert_eq!(rounds.len(), 8);
     assert!(rounds.windows(2).all(|w| w[0] <= w[1]), "{rounds:?}");
 }
+
+#[test]
+fn pipeline_sections_ship_disabled() {
+    // every preset ships [pipeline] off with the default knobs: the
+    // disabled pipeline is bit-identical to the sequential scheduler,
+    // and the knobs carried alongside match what the arms of
+    // `experiments::pipeline` will run with when a user flips them on
+    let defaults = rapid::config::SystemConfig::default().pipeline;
+    for path in [
+        "configs/libero.toml",
+        "configs/realworld.toml",
+        "configs/stress_noise.toml",
+        "configs/chaos.toml",
+    ] {
+        let cfg = load(path);
+        assert!(!cfg.pipeline.enabled, "{path}: [pipeline] must ship disabled");
+        assert!(!cfg.pipeline.overlap_on(), "{path}");
+        assert!(!cfg.pipeline.speculate_on(), "{path}");
+        assert_eq!(cfg.pipeline, defaults, "{path}: shipped knobs must match the defaults");
+    }
+}

@@ -1,0 +1,268 @@
+//! Differential conformance suite for `[pipeline]` — pipelined +
+//! speculative partition execution.
+//!
+//! Two halves:
+//!
+//! * **Disabled ⇒ bit-identity.** A `[pipeline]` section that is absent,
+//!   disabled (whatever the other knobs say), or enabled with both
+//!   `overlap` and `speculate` off must leave the scheduler *exactly*
+//!   the PR 6 event loop — not just totals, but per-episode
+//!   trajectories, flush causes, cache counters and fault-engine draws —
+//!   across every serve path: plain fleets, the reuse cache, the
+//!   chaos/failover schedule, the model zoo and dynamic arrivals.
+//! * **Enabled holds the line and pays off.** With speculation on, every
+//!   speculative dispatch resolves (confirm/rollback/abort — never a
+//!   wedge), chaos included, with exact seeded replay; and on the
+//!   shipped `configs/libero.toml`, pipeline+speculation gives RAPID a
+//!   strictly lower fleet mean latency at equal task success.
+
+use rapid::config::{FaultsConfig, PolicyKind, SystemConfig};
+use rapid::robot::TaskKind;
+use rapid::serve::{Fleet, FleetResult};
+
+/// Full-strength bit-identity: scheduler counters, flush causes, router
+/// spread, cache counters, speculation counters, and exact per-episode
+/// trajectory columns.
+fn assert_bit_identical(a: &FleetResult, b: &FleetResult, tag: &str) {
+    assert_eq!(a.stats.rounds, b.stats.rounds, "{tag}: rounds");
+    assert_eq!(a.stats.batches, b.stats.batches, "{tag}: batches");
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests, "{tag}: batched requests");
+    assert_eq!(a.stats.multi_session_batches, b.stats.multi_session_batches, "{tag}: multi");
+    assert_eq!(a.stats.full_flushes, b.stats.full_flushes, "{tag}: full flushes");
+    assert_eq!(a.stats.deadline_flushes, b.stats.deadline_flushes, "{tag}: deadline flushes");
+    assert_eq!(a.stats.drain_flushes, b.stats.drain_flushes, "{tag}: drain flushes");
+    assert_eq!(a.stats.family_flushes, b.stats.family_flushes, "{tag}: family flushes");
+    assert_eq!(a.stats.deferred_offloads, b.stats.deferred_offloads, "{tag}: deferred");
+    assert_eq!(a.stats.dropped_replies, b.stats.dropped_replies, "{tag}: dropped");
+    assert_eq!(a.stats.degraded_requests, b.stats.degraded_requests, "{tag}: degraded");
+    assert_eq!(a.stats.failover_redispatches, b.stats.failover_redispatches, "{tag}: failover");
+    assert_eq!(a.stats.outage_rounds, b.stats.outage_rounds, "{tag}: outage rounds");
+    assert_eq!(a.stats.spec_requests, b.stats.spec_requests, "{tag}: spec requests");
+    assert_eq!(a.endpoint_dispatches, b.endpoint_dispatches, "{tag}: router spread");
+    assert_eq!(a.mean_batch, b.mean_batch, "{tag}: mean batch");
+    assert_eq!(a.cache.hits, b.cache.hits, "{tag}: cache hits");
+    assert_eq!(a.cache.probes, b.cache.probes, "{tag}: cache probes");
+    assert_eq!(a.cache.evictions, b.cache.evictions, "{tag}: cache evictions");
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{tag}: session count");
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        assert_eq!(sa.family, sb.family, "{tag}: family");
+        assert_eq!(sa.arrival_round, sb.arrival_round, "{tag}: arrival round");
+        assert_eq!(sa.departure_round, sb.departure_round, "{tag}: departure round");
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "{tag}: episode count");
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "{tag}: latency columns");
+            assert_eq!(ma.cloud_events, mb.cloud_events, "{tag}: cloud events");
+            assert_eq!(ma.edge_events, mb.edge_events, "{tag}: edge events");
+            assert_eq!(ma.preemptions, mb.preemptions, "{tag}: preemptions");
+            assert_eq!(ma.failovers, mb.failovers, "{tag}: failovers");
+            assert_eq!(ma.cache_hits, mb.cache_hits, "{tag}: cache hits");
+            assert_eq!(ma.overhead_ms, mb.overhead_ms, "{tag}: overhead");
+            assert_eq!(ma.spec_dispatches, mb.spec_dispatches, "{tag}: spec dispatches");
+            assert_eq!(ma.spec_confirms, mb.spec_confirms, "{tag}: spec confirms");
+            assert_eq!(ma.spec_rollbacks, mb.spec_rollbacks, "{tag}: spec rollbacks");
+            assert_eq!(ma.spec_suppressed, mb.spec_suppressed, "{tag}: spec suppressed");
+            assert_eq!(ma.overlap_hidden_ms, mb.overlap_hidden_ms, "{tag}: hidden ms");
+            assert_eq!(ma.rms_error, mb.rms_error, "{tag}: trajectory (rms)");
+            assert_eq!(ma.success, mb.success, "{tag}: success");
+        }
+    }
+}
+
+/// A `[pipeline]` section that is present — with hostile knobs — but
+/// disabled. Must perturb nothing.
+fn disabled_pipeline(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.pipeline.enabled = false;
+    s.pipeline.overlap = true;
+    s.pipeline.speculate = true;
+    s.pipeline.spec_decode_ms = 999.0;
+    s.pipeline.rollback_ms = 777.0;
+    s.pipeline.accept_eps = 0.0;
+    s.pipeline.max_zscore = -1.0;
+    s
+}
+
+/// The degenerate *enabled* shape: `enabled = true` with both stages
+/// off — must execute bit-identically to disabled, whatever the numeric
+/// knobs say.
+fn degenerate_pipeline(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.pipeline.enabled = true;
+    s.pipeline.overlap = false;
+    s.pipeline.speculate = false;
+    s.pipeline.spec_decode_ms = 999.0;
+    s.pipeline.rollback_ms = 777.0;
+    s.pipeline.accept_eps = 0.0;
+    s.pipeline.max_zscore = -1.0;
+    s
+}
+
+/// Both stages on with the shipped default economics.
+fn full_pipeline(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.pipeline.enabled = true;
+    s.pipeline.overlap = true;
+    s.pipeline.speculate = true;
+    s
+}
+
+#[test]
+fn disabled_pipeline_keeps_the_fleet_bit_identical() {
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 4;
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&disabled_pipeline(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("{kind:?}"));
+        assert_eq!(run.stats.spec_requests, 0);
+    }
+}
+
+#[test]
+fn degenerate_enabled_pipeline_is_bit_identical_on_the_fleet_path() {
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 4;
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&degenerate_pipeline(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("degenerate/{kind:?}"));
+    }
+}
+
+#[test]
+fn pipeline_keeps_the_reuse_cache_bit_identical() {
+    // probe/admission ordering across the round: the pipelined branches
+    // must not move a single store draw when disabled
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.cache.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(base.cache.hits > 0, "the cached fleet must actually hit");
+    let off = Fleet::local(&disabled_pipeline(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly)
+        .run();
+    assert_bit_identical(&base, &off, "cache/disabled");
+    let degen =
+        Fleet::local(&degenerate_pipeline(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &degen, "cache/degenerate");
+}
+
+#[test]
+fn pipeline_keeps_the_chaos_path_bit_identical() {
+    // the fault engine's shared PRNG stream is the strictest differential:
+    // one extra (or missing) draw anywhere — e.g. the relocated cloud
+    // compute-jitter sample — would shift every later drop decision
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let off = Fleet::local(&disabled_pipeline(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &off, &format!("chaos/disabled/{kind:?}"));
+        let degen = Fleet::local(&degenerate_pipeline(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &degen, &format!("chaos/degenerate/{kind:?}"));
+    }
+}
+
+#[test]
+fn pipeline_keeps_the_zoo_path_bit_identical() {
+    // mixed families + family-keyed batching: the speculative in-flight
+    // slot accounting must vanish when the stage is off
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.models.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(base.stats.family_flushes > 0, "the zoo fleet must exercise the family seal");
+    let off =
+        Fleet::local(&disabled_pipeline(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &off, "zoo/disabled");
+    let degen =
+        Fleet::local(&degenerate_pipeline(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &degen, "zoo/degenerate");
+}
+
+#[test]
+fn pipeline_keeps_dynamic_arrivals_bit_identical() {
+    // open-loop Poisson arrivals layer the Arrival/Ready event classes the
+    // speculative self-reschedule rides on — disabled must not perturb
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "poisson".into();
+    sys.workload.interarrival_rounds = 4.0;
+    sys.workload.seed = 23;
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let off = Fleet::local(&disabled_pipeline(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &off, &format!("workload/disabled/{kind:?}"));
+        let degen = Fleet::local(&degenerate_pipeline(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &degen, &format!("workload/degenerate/{kind:?}"));
+    }
+}
+
+#[test]
+fn speculation_resolves_under_the_chaos_plan_and_replays() {
+    // drops, delays, outages, degrades: a speculative request whose reply
+    // never lands must abort (counted as a failover) — no wedge, and the
+    // whole run replays bit-identically under the shared seed
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    let sys = full_pipeline(&sys);
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let res = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert!(res.stats.spec_requests > 0, "{kind:?}: chaos fleet never speculated");
+        let (mut disp, mut conf, mut roll) = (0u64, 0u64, 0u64);
+        for m in res.sessions.iter().flat_map(|s| s.episodes.iter()) {
+            assert_eq!(m.steps, TaskKind::PickPlace.seq_len(), "{kind:?}: wedged under chaos");
+            disp += m.spec_dispatches;
+            conf += m.spec_confirms;
+            roll += m.spec_rollbacks;
+        }
+        assert_eq!(disp, res.stats.spec_requests, "{kind:?}: dispatch accounting");
+        // chaos may abort some speculations (dropped replies / exhausted
+        // endpoints); the rest must resolve via a confirm or rollback
+        assert!(conf + roll <= disp, "{kind:?}: over-resolved");
+        assert!(conf + roll > 0, "{kind:?}: nothing ever resolved");
+        let again = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&res, &again, &format!("spec-chaos replay {kind:?}"));
+    }
+}
+
+#[test]
+fn pipeline_acceptance_on_the_shipped_config() {
+    // configs/libero.toml with [pipeline] flipped on: RAPID's fleet mean
+    // latency strictly drops at equal task success, reproducibly seeded
+    let src = std::fs::read_to_string("configs/libero.toml").expect("configs/libero.toml");
+    let mut sys = SystemConfig::from_toml(&src).expect("parse libero.toml");
+    assert!(!sys.pipeline.enabled, "libero.toml must ship [pipeline] disabled");
+    sys.fleet.n_sessions = 6;
+
+    let seq = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    let on_sys = full_pipeline(&sys);
+    let on = Fleet::local(&on_sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+
+    let expect = TaskKind::PickPlace.seq_len();
+    for s in on.sessions.iter().chain(seq.sessions.iter()) {
+        for m in &s.episodes {
+            assert_eq!(m.steps, expect, "a session wedged");
+        }
+    }
+    let (seq_sum, on_sum) = (seq.summary(), on.summary());
+    assert!(
+        on_sum.fleet.total_lat_mean < seq_sum.fleet.total_lat_mean,
+        "pipeline+speculation must strictly cut RAPID mean latency: {} vs {}",
+        on_sum.fleet.total_lat_mean,
+        seq_sum.fleet.total_lat_mean
+    );
+    assert_eq!(
+        on_sum.fleet.success_rate, seq_sum.fleet.success_rate,
+        "latency must drop at equal task success"
+    );
+    assert!(on.stats.spec_requests > 0);
+
+    // reproducibly seeded: the accepted arm replays exactly
+    let again = Fleet::local(&on_sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_bit_identical(&on, &again, "libero pipeline replay");
+}

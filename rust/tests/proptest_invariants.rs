@@ -923,7 +923,7 @@ fn prop_sharded_store_equivalent_and_bounded() {
             .map(|i| {
                 let frame = SensorFrame {
                     step: 0,
-                    q: Jv::splat(0.5 * i as f32),
+                    q: Jv::splat(0.5 * i as f64),
                     dq: Jv::ZERO,
                     tau: Jv::ZERO,
                 };
@@ -1009,6 +1009,158 @@ fn prop_cooldown_exact() {
         }
         if ticks != limit {
             return Err(format!("ready after {ticks}, limit {limit}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #26 (cache): the sharded store's TTL clock. `next_round()`
+/// is a monotone high-water mark over admissions (probes never move it),
+/// and TTL expiry is shard-invariant: with capacity above the working
+/// set (no evictions, so the store draws no RNG), stores at shard counts
+/// {1, 4, 16} must agree on every probe outcome — hits, misses, and
+/// TTL-stale discoveries — on `next_round()`, and on every counter,
+/// under random interleavings of admit / probe / clock advances that
+/// jump past the TTL.
+#[test]
+fn prop_sharded_ttl_clock_monotone_and_shard_invariant() {
+    use rapid::cache::{ProbeOutcome, ReuseStore, Signature};
+    use rapid::config::CacheConfig;
+
+    seeded_forall!("sharded_ttl_clock", 40, |rng: &mut Pcg32| {
+        let cfg = CacheConfig { enabled: true, ..Default::default() };
+        let seed = rng.next_u64();
+        let ttl = 1 + rng.below(12) as u64;
+        let sigs: Vec<Signature> = (0..24u32)
+            .map(|i| {
+                let frame = SensorFrame {
+                    step: 0,
+                    q: Jv::splat(0.5 * i as f64),
+                    dq: Jv::ZERO,
+                    tau: Jv::ZERO,
+                };
+                Signature::of(&cfg, (i % 4) as usize, &frame, None, Default::default())
+            })
+            .collect();
+        let chunk = {
+            let mut cloud = rapid::vla::AnalyticBackend::cloud(1);
+            rapid::vla::Backend::infer(&mut cloud, &[0.1; rapid::D_VIS], &[0.0; rapid::D_PROP], 1)
+        };
+
+        let mut stores: Vec<ReuseStore> = [1usize, 4, 16]
+            .iter()
+            .map(|&s| ReuseStore::with_shards(512, ttl, true, seed, s))
+            .collect();
+        let mut round = 0u64;
+        let mut hw = 0u64; // the expected next_round() high-water mark
+        for op in 0..250u32 {
+            // the scheduler clock only moves forward — sometimes far
+            // enough past the TTL to age out everything admitted so far
+            if rng.chance(0.3) {
+                round += rng.below(2 * ttl as u32 + 2) as u64;
+            }
+            let sig = sigs[rng.below(24) as usize];
+            let owner = rng.below(3) as usize;
+            if rng.chance(0.5) {
+                let o0 = stores[0].probe(&sig, round, owner);
+                for s in stores[1..].iter_mut() {
+                    let o = s.probe(&sig, round, owner);
+                    let same = matches!(
+                        (&o0, &o),
+                        (ProbeOutcome::Hit(_), ProbeOutcome::Hit(_))
+                            | (ProbeOutcome::Stale, ProbeOutcome::Stale)
+                            | (ProbeOutcome::Miss, ProbeOutcome::Miss)
+                    );
+                    if !same {
+                        return Err(format!(
+                            "probe outcomes diverged at op {op}, round {round} (ttl {ttl})"
+                        ));
+                    }
+                }
+            } else {
+                for s in stores.iter_mut() {
+                    s.admit(sig, chunk.clone(), round, owner);
+                }
+                hw = hw.max(round.saturating_add(1));
+            }
+            // `hw` never decreases by construction, so agreement with it
+            // on every store pins both monotonicity and shard-invariance
+            for s in &stores {
+                if s.next_round() != hw {
+                    return Err(format!(
+                        "next_round drifted at op {op}: {} vs expected {hw} ({} shards)",
+                        s.next_round(),
+                        s.n_shards()
+                    ));
+                }
+            }
+        }
+        let st0 = *stores[0].stats();
+        for s in &stores[1..] {
+            if *s.stats() != st0 {
+                return Err(format!(
+                    "TTL counters diverged: {:?} vs {:?} ({} shards)",
+                    st0,
+                    s.stats(),
+                    s.n_shards()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #27 (pipeline): with `[pipeline]` absent, disabled —
+/// whatever the other knobs say — or enabled with both stages off, the
+/// fleet scheduler is bit-identical to the sequential scheduler: same
+/// rounds, same batches, zero speculative requests, same per-episode
+/// trajectories, for arbitrary fleet shapes and hostile knob values.
+#[test]
+fn prop_disabled_pipeline_is_bit_identical() {
+    seeded_forall!("pipeline_disabled_identity", 4, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = rng.next_u64();
+        sys.fleet.n_sessions = 2 + rng.below(3) as usize;
+        sys.fleet.max_batch = 1 + rng.below(4) as usize;
+        let kinds = [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased];
+        let kind = kinds[rng.below(3) as usize];
+        let baseline = rapid::serve::Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+
+        // a configured-but-inert [pipeline] section with hostile knobs:
+        // half the cases disabled outright, half enabled-but-degenerate
+        let mut loaded = sys.clone();
+        loaded.pipeline.enabled = rng.chance(0.5);
+        loaded.pipeline.overlap = false;
+        loaded.pipeline.speculate = false;
+        if !loaded.pipeline.enabled {
+            // stages armed but the master switch off
+            loaded.pipeline.overlap = rng.chance(0.5);
+            loaded.pipeline.speculate = rng.chance(0.5);
+        }
+        loaded.pipeline.spec_decode_ms = rng.range(0.0, 500.0);
+        loaded.pipeline.rollback_ms = rng.range(0.0, 500.0);
+        loaded.pipeline.accept_eps = rng.range(0.0, 1.0);
+        loaded.pipeline.max_zscore = rng.range(-2.0, 10.0);
+        let run = rapid::serve::Fleet::local(&loaded, TaskKind::PickPlace, kind).run();
+
+        if baseline.stats.rounds != run.stats.rounds
+            || baseline.stats.batches != run.stats.batches
+            || baseline.stats.batched_requests != run.stats.batched_requests
+            || run.stats.spec_requests != 0
+        {
+            return Err(format!("scheduler stats differ: {:?} vs {:?}", baseline.stats, run.stats));
+        }
+        for (sa, sb) in baseline.sessions.iter().zip(run.sessions.iter()) {
+            for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+                if ma.latency_columns() != mb.latency_columns()
+                    || ma.cloud_events != mb.cloud_events
+                    || ma.rms_error != mb.rms_error
+                    || mb.spec_dispatches != 0
+                    || mb.overlap_hidden_ms != 0.0
+                {
+                    return Err(format!("session {} diverged with pipeline inert", sa.session));
+                }
+            }
         }
         Ok(())
     });

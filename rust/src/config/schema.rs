@@ -455,6 +455,32 @@ impl PipelineConfig {
     }
 }
 
+/// Observability layer (`obs`): deterministic span tracing + the wedge
+/// flight recorder. With `enabled = false` (the default) the fleet
+/// constructs no tracer and no recorder and serving is bit-identical to
+/// a trace-free build — the same zero-perturbation contract as
+/// `[faults]`/`[cache]`/`[models]`/`[workload]`/`[pipeline]`. Enabled,
+/// recording consumes zero PRNG draws and never advances a clock, so the
+/// traced run *still* replays bit-identically; only the exported trace
+/// and the flight-recorder postmortem are new.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    pub enabled: bool,
+    /// Hard cap on recorded spans per fleet; past it the tracer counts
+    /// drops instead of growing (an enabled trace can never OOM a
+    /// 100k-session run).
+    pub max_spans: usize,
+    /// Flight-recorder ring capacity per session (recent events kept for
+    /// the wedge postmortem).
+    pub flight_events: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, max_spans: 1 << 20, flight_events: 32 }
+    }
+}
+
 /// Heterogeneous VLA model zoo (`vla::zoo` + `policy::planner`). With
 /// `enabled = false` (the default) every session serves the original
 /// surrogate family and the serve layer is bit-identical to a zoo-free
@@ -704,6 +730,7 @@ pub struct SystemConfig {
     pub cache: CacheConfig,
     pub models: ModelsConfig,
     pub pipeline: PipelineConfig,
+    pub trace: TraceConfig,
     pub episode: EpisodeConfig,
 }
 
@@ -728,6 +755,7 @@ impl Default for SystemConfig {
             cache: CacheConfig::default(),
             models: ModelsConfig::default(),
             pipeline: PipelineConfig::default(),
+            trace: TraceConfig::default(),
             episode: EpisodeConfig::default(),
         }
     }
@@ -872,6 +900,11 @@ impl SystemConfig {
         p.rollback_ms = v.f64_or("pipeline.rollback_ms", p.rollback_ms);
         p.accept_eps = v.f64_or("pipeline.accept_eps", p.accept_eps);
         p.max_zscore = v.f64_or("pipeline.max_zscore", p.max_zscore);
+
+        let t = &mut self.trace;
+        t.enabled = v.bool_or("trace.enabled", t.enabled);
+        t.max_spans = v.usize_or("trace.max_spans", t.max_spans);
+        t.flight_events = v.usize_or("trace.flight_events", t.flight_events);
 
         self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
@@ -1104,6 +1137,29 @@ mod tests {
         let mut d = SystemConfig::default();
         d.pipeline.enabled = true;
         assert!(!d.pipeline.overlap_on() && !d.pipeline.speculate_on());
+    }
+
+    #[test]
+    fn trace_defaults_inert_and_overlay() {
+        let c = SystemConfig::default();
+        assert!(!c.trace.enabled, "trace must default off (bit-identity)");
+        assert_eq!(c.trace.max_spans, 1 << 20);
+        assert_eq!(c.trace.flight_events, 32);
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[trace]\nenabled = true\nmax_spans = 4096\nflight_events = 8",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.max_spans, 4096);
+        assert_eq!(c.trace.flight_events, 8);
+        // partial overlay keeps the other knobs at their defaults
+        let mut d = SystemConfig::default();
+        let v = super::super::parse::parse_toml("[trace]\nenabled = true").unwrap();
+        d.apply_value(&v);
+        assert!(d.trace.enabled);
+        assert_eq!(d.trace.max_spans, 1 << 20);
     }
 
     #[test]

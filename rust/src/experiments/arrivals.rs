@@ -37,7 +37,10 @@ pub struct ArrivalRow {
     pub completed: bool,
 }
 
-fn shaped(sys: &SystemConfig, shape: &'static str) -> SystemConfig {
+/// The system config one arrival-shape arm runs (public so the CLI's
+/// wedge path can re-run the exact failed arm with the flight recorder
+/// armed).
+pub fn shaped(sys: &SystemConfig, shape: &'static str) -> SystemConfig {
     let mut s = sys.clone();
     // every arm runs the SAME fleet ([fleet] knobs, default episode/family
     // draws): only the arrival shape varies, so rows are comparable even

@@ -62,6 +62,19 @@ impl FaultEngine {
         })
     }
 
+    /// The outage window containing `round`, as `(start, end)`, if any —
+    /// the span tracer tags each outage round with its window so a
+    /// Perfetto timeline shows the whole blackout, not one round at a
+    /// time. Pure schedule lookup: no PRNG, no state.
+    pub fn outage_window_at(&self, round: u64) -> Option<(u64, u64)> {
+        self.plan.events.iter().find_map(|ev| match ev {
+            FaultEvent::LinkOutage { window } if window.contains(round) => {
+                Some((window.start, window.end))
+            }
+            _ => None,
+        })
+    }
+
     /// Is `endpoint` alive at `round`? (Dead during crash windows,
     /// recovered afterwards.)
     pub fn endpoint_up(&self, endpoint: usize, round: u64) -> bool {
@@ -170,6 +183,10 @@ mod tests {
         assert!(!e.link_out(4));
         assert!(e.link_out(5));
         assert!(!e.link_out(8));
+        assert_eq!(e.outage_window_at(4), None);
+        assert_eq!(e.outage_window_at(5), Some((5, 8)));
+        assert_eq!(e.outage_window_at(7), Some((5, 8)));
+        assert_eq!(e.outage_window_at(8), None);
         assert_eq!(e.reply_delay_ms(5), 0.0);
         assert_eq!(e.reply_delay_ms(6), 40.0);
         assert_eq!(e.reply_delay_ms(7), 60.0); // overlapping delays add

@@ -84,6 +84,14 @@
 //!   configured penalty, with the `[cache]` z-score gate keeping
 //!   anomalous phases sequential. Shipped disabled: the inert stage is
 //!   bit-identical to the sequential scheduler, PRNG draws included.
+//! * [`obs`] — the observability layer, config-gated behind `[trace]`:
+//!   a deterministic virtual-time span tracer (Chrome trace-event JSON /
+//!   JSONL export, zero PRNG draws, zero clock advances — traced runs
+//!   replay bit-identically and same-seed traces are byte-identical), a
+//!   metrics registry of named counters + log-bucketed latency
+//!   histograms (p50/p95/p99/max over fixed power-of-two buckets with an
+//!   exactly associative merge), and a per-session flight recorder whose
+//!   ring-buffer postmortem every CLI wedge path dumps.
 //! * [`experiments`] — one generator per paper table/figure.
 //!
 //! Python runs once at build time (`make artifacts`); the binary built from
@@ -103,6 +111,7 @@ pub mod faults;
 pub mod cache;
 pub mod serve;
 pub mod metrics;
+pub mod obs;
 pub mod benchkit;
 pub mod experiments;
 

@@ -5,12 +5,14 @@
 //!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
 //!             [--analytic] [--trace out.csv] [--config file.toml]
 //! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo
-//!             |workload|pipeline|scale|all> [--json BENCH_serve.json] [--budget-ms MS]
+//!             |workload|pipeline|scale|obs|all> [--json BENCH_serve.json] [--budget-ms MS]
 //!             (scale also takes --sessions N: the Poisson fleet ladder
 //!              climbs to N in-process sessions, e.g. --sessions 100000)
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
 //! rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E] [--batch B]
 //!             [--inflight I] [--endpoints P] [--seed S] [--config file.toml]
+//!             [--trace-out trace.json] [--metrics-json metrics.json]
+//! rapid trace [--sessions N] [--config file.toml] [--out trace.json]
 //! rapid zoo   [--sessions N] [--task T] [--seed S] [--config file.toml]
 //! rapid workload [--sessions N] [--task T] [--seed S] [--config file.toml]
 //!             [--arrivals fixed|poisson|bursty|trace] [--trace T] [--interarrival R]
@@ -37,6 +39,7 @@ fn main() {
         Some("zoo") => cmd_zoo(&args[1..]),
         Some("workload") => cmd_workload(&args[1..]),
         Some("pipeline") => cmd_pipeline(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -57,22 +60,29 @@ fn print_help() {
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
          \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve\n\
-         \x20             |zoo|workload|pipeline|scale|all>\n\
+         \x20             |zoo|workload|pipeline|scale|obs|all>\n\
          \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
          \x20             (serve: benchkit timings of the serve layer, written as\n\
          \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
          \x20              reuse: cache-off vs cache-on fleet table;\n\
          \x20              scale: the scale-ceiling ladder — --sessions N climbs a\n\
          \x20              Poisson fleet to N in-process sessions, --json writes\n\
-         \x20              BENCH_scale.json; not part of `bench all`)\n\
+         \x20              BENCH_scale.json; not part of `bench all`;\n\
+         \x20              obs: span-record/histogram hot paths plus the\n\
+         \x20              traced-vs-untraced fleet overhead pair)\n\
          \x20 rapid serve [--addr A] [--batch B] [--analytic]\n\
          \x20 rapid fleet [--sessions N] [--policy K] [--task T] [--episodes E]\n\
          \x20             [--batch B] [--inflight I] [--endpoints P] [--seed S]\n\
-         \x20             [--config FILE]\n\
+         \x20             [--config FILE] [--trace-out FILE] [--metrics-json FILE]\n\
+         \x20             (--trace-out/--metrics-json arm [trace] for the run —\n\
+         \x20              zero draws, zero clock reads: the run itself is\n\
+         \x20              bit-identical to an untraced one)\n\
          \x20 rapid chaos [--sessions N] [--task T] [--seed S] [--batch B]\n\
          \x20             [--episodes E] [--endpoints P] [--config FILE]\n\
+         \x20             [--trace-out FILE] [--metrics-json FILE]\n\
          \x20             (defaults to configs/chaos.toml; compares RAPID vs\n\
-         \x20              Edge-/Cloud-Only fleets under the fault schedule)\n\
+         \x20              Edge-/Cloud-Only fleets under the fault schedule;\n\
+         \x20              the obs flags trace one extra Cloud-Only arm)\n\
          \x20 rapid zoo   [--sessions N] [--task T] [--seed S] [--config FILE]\n\
          \x20             (heterogeneous model-zoo fleet: family catalog,\n\
          \x20              planner choices, per-family RAPID vs baselines)\n\
@@ -85,6 +95,11 @@ fn print_help() {
          \x20             (pipelined + speculative execution: prints the active\n\
          \x20              [pipeline] knobs, then the four-arm off/on x spec\n\
          \x20              off/on table for RAPID vs Cloud-Only)\n\
+         \x20 rapid trace [--sessions N] [--config FILE] [--out trace.json]\n\
+         \x20             (deterministic trace demo: two fleets composed to hit\n\
+         \x20              every span stage; writes Perfetto-loadable Chrome\n\
+         \x20              trace JSON plus a .jsonl sibling, prints per-stage\n\
+         \x20              span counts, exits 1 if any stage kind is missing)\n\
          \x20 rapid info\n"
     );
 }
@@ -306,6 +321,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         "workload" => bench_workload(&sys, &flags, single),
         "pipeline" => bench_pipeline(&sys, &flags, single),
         "scale" => bench_scale(&sys, &flags, single),
+        "obs" => bench_obs(&sys, &flags, single),
         other => eprintln!("unknown bench {other}"),
     };
 
@@ -315,9 +331,11 @@ fn cmd_bench(rest: &[String]) -> i32 {
             // silently clobbering the first — make the limitation explicit
             eprintln!("[bench] --json applies to single-bench runs; ignored for `bench all`");
         }
+        // every `--json`-capable bench except `scale` (whose 10k-session
+        // default ladder is a deliberate long run; see the help text)
         for name in [
             "tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead",
-            "reuse", "serve", "zoo", "workload", "pipeline",
+            "reuse", "serve", "zoo", "workload", "pipeline", "obs",
         ] {
             println!("\n### {name}");
             run_one(name, &mut b);
@@ -718,6 +736,84 @@ fn bench_scale(sys: &SystemConfig, flags: &Flags, write_json: bool) {
     }
 }
 
+/// `rapid bench obs`: observability-layer timings — the span-record hot
+/// path, histogram insert and shard merge, and a traced-vs-untraced fleet
+/// pair whose delta is the end-to-end cost of an enabled `[trace]`
+/// section — optionally written as machine-readable JSON
+/// (`--json BENCH_obs.json`).
+fn bench_obs(sys: &SystemConfig, flags: &Flags, write_json: bool) {
+    use rapid::obs::{LogHistogram, Stage, Tracer};
+    use rapid::robot::TaskKind;
+
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("observability");
+
+    // span-record hot path: 4k stores into a preallocated tracer
+    bench.run("obs/span_record_4k", || {
+        let mut tr = Tracer::new(1 << 16, 50_000.0);
+        for i in 0..4096u64 {
+            let ts = tr.base_us(i / 8);
+            tr.record(Stage::CloudQueue, ts, 125, (i % 64) as u32, (i % 4) as u8, 0, 0);
+        }
+        std::hint::black_box(tr.len());
+    });
+
+    // histogram hot paths: 4k inserts, then a 64-shard fold
+    bench.run("obs/hist_insert_4k", || {
+        let mut h = LogHistogram::new();
+        for i in 0..4096u64 {
+            h.insert((i.wrapping_mul(2_654_435_761) % 1_000_000) as f64);
+        }
+        std::hint::black_box(h.p99());
+    });
+    let shards: Vec<LogHistogram> = (0..64u64)
+        .map(|s| {
+            let mut h = LogHistogram::new();
+            for i in 0..64u64 {
+                h.insert(((s * 64 + i) * 37 % 500_000) as f64);
+            }
+            h
+        })
+        .collect();
+    bench.run("obs/hist_merge_64_shards", || {
+        let mut total = LogHistogram::new();
+        for h in &shards {
+            total.merge(h);
+        }
+        std::hint::black_box(total.count());
+    });
+
+    // traced vs untraced fleet: same seed and shape, [trace] the only
+    // delta — this pair is the overhead headline the README quotes
+    let mut off = sys.clone();
+    off.cache.enabled = false;
+    off.trace.enabled = false;
+    let mut on = off.clone();
+    on.trace.enabled = true;
+    let n = off.fleet.n_sessions.max(1);
+    bench.run(&format!("obs/fleet/{n}s/untraced"), || {
+        let res =
+            rapid::serve::Fleet::local(&off, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        std::hint::black_box(res.total_steps());
+    });
+    bench.run(&format!("obs/fleet/{n}s/traced"), || {
+        let res =
+            rapid::serve::Fleet::local(&on, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        std::hint::black_box(res.trace.as_ref().map_or(0, |t| t.len()));
+    });
+
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
 fn cmd_serve(rest: &[String]) -> i32 {
     let flags = Flags(rest);
     let addr = flags.get("--addr").unwrap_or("127.0.0.1:7070").to_string();
@@ -750,6 +846,66 @@ fn cmd_serve(rest: &[String]) -> i32 {
     }
 }
 
+/// Write one observability artifact, reporting success/failure.
+fn write_artifact(path: &str, contents: &str, what: &str) -> bool {
+    match std::fs::write(path, contents) {
+        Ok(()) => {
+            println!("{what} written to {path}");
+            true
+        }
+        Err(e) => {
+            eprintln!("cannot write {path}: {e}");
+            false
+        }
+    }
+}
+
+/// `trace.json` -> `trace.jsonl`; anything else gets `.jsonl` appended.
+fn jsonl_sibling(path: &str) -> String {
+    match path.strip_suffix(".json") {
+        Some(base) => format!("{base}.jsonl"),
+        None => format!("{path}.jsonl"),
+    }
+}
+
+/// Shared `--trace-out` / `--metrics-json` handling for the fleet-running
+/// commands: write the Chrome trace (plus its JSONL sibling) and the
+/// registry dump a traced fleet produced. Returns false on a failed
+/// write.
+fn write_obs_artifacts(flags: &Flags, res: &rapid::serve::FleetResult) -> bool {
+    let mut ok = true;
+    if let Some(path) = flags.get("--trace-out") {
+        match res.trace.as_ref() {
+            Some(tr) => {
+                ok &= write_artifact(path, &tr.to_chrome_json(), "chrome trace");
+                ok &= write_artifact(&jsonl_sibling(path), &tr.to_jsonl(), "span JSONL");
+            }
+            None => {
+                eprintln!("--trace-out given but the fleet ran without [trace]");
+                ok = false;
+            }
+        }
+    }
+    if let Some(path) = flags.get("--metrics-json") {
+        ok &= write_artifact(path, &res.registry().to_json(), "metrics JSON");
+    }
+    ok
+}
+
+/// Re-run one wedged fleet arm with the flight recorder armed and dump
+/// the postmortem to stderr. Arming `[trace]` draws nothing from any PRNG
+/// and never touches the clock, so the re-run reproduces the wedge
+/// exactly; the reporting run itself stays untraced.
+fn dump_flight(sys: &SystemConfig, task: TaskKind, kind: PolicyKind) {
+    let mut traced = sys.clone();
+    traced.trace.enabled = true;
+    let res = rapid::serve::Fleet::local(&traced, task, kind).run();
+    match res.flight {
+        Some(f) => eprint!("{}", f.report()),
+        None => eprintln!("flight recorder: unavailable (fleet built without [trace])"),
+    }
+}
+
 fn cmd_fleet(rest: &[String]) -> i32 {
     let flags = Flags(rest);
     let mut sys = load_sys(&flags);
@@ -767,6 +923,11 @@ fn cmd_fleet(rest: &[String]) -> i32 {
     }
     if let Some(p) = flags.get("--endpoints").and_then(|s| s.parse::<usize>().ok()) {
         sys.fleet.endpoints = p.max(1);
+    }
+    if flags.get("--trace-out").is_some() || flags.get("--metrics-json").is_some() {
+        // arming [trace] draws nothing and never touches the clock: this
+        // run is bit-identical to the same command without the flags
+        sys.trace.enabled = true;
     }
     let kind = flags.get("--policy").and_then(PolicyKind::parse).unwrap_or(PolicyKind::Rapid);
     let task = flags
@@ -798,65 +959,23 @@ fn cmd_fleet(rest: &[String]) -> i32 {
     t.row(&summary.fleet.table_cells(Some("fleet aggregate")));
     print!("{}", t.render());
 
-    let s = &res.stats;
-    println!(
-        "rounds {}  batches {} (multi-session {})  mean batch {:.2}  max batch {}  \
-         max in-flight {}",
-        s.rounds,
-        s.batches,
-        s.multi_session_batches,
-        res.mean_batch,
-        s.max_batch_observed,
-        s.max_inflight_observed
-    );
-    println!(
-        "flushes: full {} / deadline {} / drain {}   deferred offloads {}   endpoints {:?}",
-        s.full_flushes,
-        s.deadline_flushes,
-        s.drain_flushes,
-        s.deferred_offloads,
-        res.endpoint_dispatches
-    );
-    if s.dropped_replies + s.endpoint_errors + s.degraded_requests + s.outage_rounds > 0 {
-        println!(
-            "faults: dropped replies {}  endpoint errors {}  redispatches {}  degraded {}  \
-             outage rounds {}",
-            s.dropped_replies,
-            s.endpoint_errors,
-            s.failover_redispatches,
-            s.degraded_requests,
-            s.outage_rounds
-        );
+    // one registry-driven rollup replaces the old ad-hoc counter lines
+    // (batching stats, flush causes, fault counters, the cache report
+    // line, per-family rollups) — zero-valued counters are elided, so a
+    // plain fleet prints roughly what it used to
+    let mut reg = res.registry();
+    for (i, n) in res.endpoint_dispatches.iter().enumerate() {
+        reg.set(&format!("endpoint/{i}/dispatches"), *n);
     }
-    if sys.cache.enabled {
-        println!("{}", res.cache.report());
-    }
+    print!("{}", reg.render("fleet counters"));
     if sys.workload.enabled {
         println!(
-            "workload: {} arrivals  joined {}  peak active {}  last join @ round {}",
+            "workload: {} arrivals, last join @ round {}",
             sys.workload.arrivals,
-            s.arrivals,
-            s.max_active_sessions,
             res.sessions.iter().map(|x| x.arrival_round).max().unwrap_or(0)
         );
     }
-    if sys.models.enabled {
-        for t in &res.families {
-            println!(
-                "family {:<14} sessions {}  steps {}  cloud events {}  batches {}  cache hits {}",
-                t.family.name(),
-                t.sessions,
-                t.steps,
-                t.cloud_events,
-                t.batches,
-                t.cache_hits
-            );
-        }
-        println!(
-            "family flushes {}  mixed-family batches {}",
-            s.family_flushes, s.mixed_family_batches
-        );
-    }
+    // wall time is nondeterministic, so it stays out of the registry
     println!(
         "steps {}  cloud events {}  wall {:.2}s ({:.0} steps/s)",
         summary.total_steps,
@@ -864,6 +983,27 @@ fn cmd_fleet(rest: &[String]) -> i32 {
         wall,
         summary.total_steps as f64 / wall.max(1e-9)
     );
+
+    if !write_obs_artifacts(&flags, &res) {
+        return 1;
+    }
+
+    let expect = task.seq_len();
+    let wedged: Vec<usize> = res
+        .sessions
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.episodes.iter().any(|m| m.steps != expect))
+        .map(|(i, _)| i)
+        .collect();
+    if !wedged.is_empty() {
+        eprintln!("WEDGED session(s): {wedged:?}");
+        match res.flight {
+            Some(f) => eprint!("{}", f.report()),
+            None => dump_flight(&sys, task, kind),
+        }
+        return 1;
+    }
     0
 }
 
@@ -949,6 +1089,18 @@ fn cmd_chaos(rest: &[String]) -> i32 {
     let t0 = std::time::Instant::now();
     let (table, rows) = rapid::experiments::degraded::run(&sys, task);
     print!("{}", table.render());
+
+    if flags.get("--trace-out").is_some() || flags.get("--metrics-json").is_some() {
+        // trace the arm most exposed to the schedule: the Cloud-Only
+        // fleet under the configured faults
+        let mut traced = sys.clone();
+        traced.trace.enabled = true;
+        let obs = rapid::serve::Fleet::local(&traced, task, PolicyKind::CloudOnly).run();
+        if !write_obs_artifacts(&flags, &obs) {
+            return 1;
+        }
+    }
+
     let wedged: Vec<&str> =
         rows.iter().filter(|r| !r.completed).map(|r| r.policy.name()).collect();
     if wedged.is_empty() {
@@ -959,6 +1111,9 @@ fn cmd_chaos(rest: &[String]) -> i32 {
         0
     } else {
         eprintln!("WEDGED sessions under: {wedged:?}");
+        if let Some(r) = rows.iter().find(|r| !r.completed) {
+            dump_flight(&sys, task, r.policy);
+        }
         1
     }
 }
@@ -1022,6 +1177,9 @@ fn cmd_zoo(rest: &[String]) -> i32 {
         0
     } else {
         eprintln!("mixed-family batches: {mixed}; wedged: {wedged:?}");
+        if let Some(r) = rows.iter().find(|r| !r.completed) {
+            dump_flight(&sys, task, r.policy);
+        }
         1
     }
 }
@@ -1089,6 +1247,9 @@ fn cmd_workload(rest: &[String]) -> i32 {
         0
     } else {
         eprintln!("WEDGED sessions under: {wedged:?}");
+        if let Some(r) = rows.iter().find(|r| !r.completed) {
+            dump_flight(&rapid::experiments::arrivals::shaped(&sys, r.shape), task, r.policy);
+        }
         1
     }
 }
@@ -1125,15 +1286,21 @@ fn cmd_pipeline(rest: &[String]) -> i32 {
     let (table, rows) = rapid::experiments::pipeline::run(&sys, task);
     print!("{}", table.render());
     let mut bad: Vec<String> = Vec::new();
+    let mut first_bad: Option<(usize, PolicyKind)> = None;
     for r in &rows {
-        for (label, a) in
-            [("seq", &r.seq), ("overlap", &r.overlap), ("spec", &r.spec), ("both", &r.both)]
-        {
+        for (arm_idx, label, a) in [
+            (0usize, "seq", &r.seq),
+            (1, "overlap", &r.overlap),
+            (2, "spec", &r.spec),
+            (3, "both", &r.both),
+        ] {
             if !a.completed {
                 bad.push(format!("{}/{label} wedged", r.policy.name()));
+                first_bad.get_or_insert((arm_idx, r.policy));
             }
             if a.spec_confirms + a.spec_rollbacks != a.spec_dispatches {
                 bad.push(format!("{}/{label} left a speculation unresolved", r.policy.name()));
+                first_bad.get_or_insert((arm_idx, r.policy));
             }
         }
     }
@@ -1145,6 +1312,52 @@ fn cmd_pipeline(rest: &[String]) -> i32 {
         0
     } else {
         eprintln!("FAILED arms: {bad:?}");
+        if let Some((arm_idx, kind)) = first_bad {
+            dump_flight(&rapid::experiments::pipeline::arms(&sys)[arm_idx], task, kind);
+        }
+        1
+    }
+}
+
+/// `rapid trace`: run the deterministic two-fleet trace demo
+/// (`obs::demo`), write the merged Perfetto-loadable Chrome trace JSON
+/// plus its compact JSONL sibling, print per-stage span counts and the
+/// merged registry, and exit 1 if any stage kind failed to appear — the
+/// trace-smoke CI step leans on that as a coverage gate.
+fn cmd_trace(rest: &[String]) -> i32 {
+    use rapid::obs::Stage;
+
+    let flags = Flags(rest);
+    let sys = load_sys(&flags);
+    let sessions = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()).unwrap_or(6);
+    let out = flags.get("--out").unwrap_or("trace.json");
+
+    let demo = rapid::obs::demo::run_trace_demo(&sys, sessions);
+    let total: u64 = demo.stage_counts.iter().sum();
+    println!("trace demo: {total} spans across two fleets (pid 0 faults+cache, pid 1 zoo+spec)");
+    for (stage, count) in Stage::ALL.iter().zip(demo.stage_counts.iter()) {
+        println!("  {:<13} {count}", stage.name());
+    }
+    print!("{}", demo.registry.render("trace demo counters"));
+
+    if !write_artifact(out, &demo.chrome_json, "chrome trace") {
+        return 1;
+    }
+    if !write_artifact(&jsonl_sibling(out), &demo.jsonl, "span JSONL") {
+        return 1;
+    }
+    if let Some(path) = flags.get("--metrics-json") {
+        if !write_artifact(path, &demo.registry.to_json(), "metrics JSON") {
+            return 1;
+        }
+    }
+
+    let missing = rapid::obs::demo::missing_stages(&demo.stage_counts);
+    if missing.is_empty() {
+        println!("all {} stage kinds present", Stage::ALL.len());
+        0
+    } else {
+        eprintln!("MISSING stage kinds: {missing:?}");
         1
     }
 }

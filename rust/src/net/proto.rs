@@ -181,6 +181,23 @@ pub fn encode_result_into(buf: &mut Vec<u8>, out: &ModelOut) {
     end_frame(buf, at);
 }
 
+/// Body bytes of one encoded inference request (instr + obs + proprio).
+pub const INFER_BODY_BYTES: usize = 4 + 4 * D_VIS + 4 * D_PROP;
+
+/// Exact wire length in bytes of a batch-infer frame of `n` items —
+/// computed from the layout, not by encoding, so the span tracer can tag
+/// wire spans with payload sizes without touching a buffer (pinned
+/// against the real encoder in the tests below).
+pub fn batch_infer_frame_len(n: usize) -> usize {
+    4 + 1 + 2 + n * (4 + INFER_BODY_BYTES)
+}
+
+/// Exact wire length in bytes of a zoo batch-infer frame of `n` items
+/// (one extra family byte in the header).
+pub fn zoo_batch_infer_frame_len(n: usize) -> usize {
+    4 + 1 + 1 + 2 + n * (4 + INFER_BODY_BYTES)
+}
+
 /// Encode a cross-session request batch; items are (session id, request).
 pub fn encode_batch_infer(items: &[(u32, InferRequest)]) -> Vec<u8> {
     let mut buf = Vec::new();
@@ -437,6 +454,27 @@ pub fn write_all(w: &mut impl Write, bytes: &[u8]) -> Result<(), ProtoError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn frame_len_helpers_match_the_encoder() {
+        for n in [0usize, 1, 4, 64] {
+            let items: Vec<(u32, InferRequest)> = (0..n as u32)
+                .map(|i| {
+                    (i, InferRequest { instr: i, obs: [0.0; D_VIS], proprio: [0.0; D_PROP] })
+                })
+                .collect();
+            assert_eq!(
+                encode_batch_infer(&items).len(),
+                batch_infer_frame_len(n),
+                "batch n={n}"
+            );
+            assert_eq!(
+                encode_zoo_batch_infer(2, &items).len(),
+                zoo_batch_infer_frame_len(n),
+                "zoo batch n={n}"
+            );
+        }
+    }
 
     #[test]
     fn infer_roundtrip() {

@@ -1,0 +1,131 @@
+//! Deterministic trace demo backing `rapid trace`: two small fleets,
+//! composed so that **every** [`Stage`] kind is guaranteed to appear —
+//! pinned by `rust/tests/obs_trace.rs` and validated per run by the
+//! trace-smoke CI step.
+//!
+//! * **Fleet A** (pid 0) — lockstep Cloud-Only surrogate fleet with the
+//!   shared reuse cache on and a programmatic fault schedule: an early
+//!   reply-delay window (`Reply` spans), a mid-run uplink outage
+//!   (`Outage`), and a permanent reply-drop tail that exhausts both
+//!   endpoints (`Failover` + degraded flight events). Cross-session
+//!   round-0 hits cover `ReuseProbe`/`ReuseHit`; the batcher covers
+//!   `Capture`/`Wire`/`CloudQueue`/`CloudCompute`.
+//! * **Fleet B** (pid 1) — model-zoo fleet under a slow link (deep splits
+//!   give every dispatch real prefix compute: `EdgePrefix`) with the
+//!   pipeline's overlap + speculation on (`SpecDispatch`/`SpecResolve`).
+//!
+//! Both fleets are seeded from the caller's config, so two same-seed
+//! demos emit byte-identical artifacts.
+
+use super::{chrome_trace_json, MetricsRegistry, Stage};
+use crate::config::{PolicyKind, SystemConfig};
+use crate::faults::{FaultEngine, FaultPlan};
+use crate::robot::TaskKind;
+use crate::serve::Fleet;
+
+/// Everything `rapid trace` writes or checks.
+pub struct TraceDemo {
+    /// Merged Chrome trace-event JSON (fleet A = pid 0, fleet B = pid 1).
+    pub chrome_json: String,
+    /// Merged compact JSONL (fleet A's spans, then fleet B's).
+    pub jsonl: String,
+    /// Combined per-stage span counts, indexed by [`Stage::id`].
+    pub stage_counts: [u64; Stage::ALL.len()],
+    /// Combined metrics registry of both fleets.
+    pub registry: MetricsRegistry,
+}
+
+/// Stage kinds a demo run failed to produce (empty on a healthy build —
+/// `rapid trace` exits 1 otherwise, which is what CI pins).
+pub fn missing_stages(counts: &[u64; Stage::ALL.len()]) -> Vec<&'static str> {
+    Stage::ALL.iter().filter(|s| counts[s.id()] == 0).map(|s| s.name()).collect()
+}
+
+/// Run the two demo fleets (at least 6 sessions each — the batch size
+/// plus cache-hit stragglers fleet A's coverage relies on) and merge
+/// their artifacts.
+pub fn run_trace_demo(sys: &SystemConfig, sessions: usize) -> TraceDemo {
+    let n = sessions.max(6);
+
+    // Fleet A: faults + cache under lockstep Cloud-Only. The delay window
+    // covers the round-0 full flush (Reply), the outage covers rounds the
+    // fleet is mid-episode (Outage), and the drop tail turns every late
+    // dispatch into retry-then-degrade (Failover).
+    let mut sys_a = sys.clone();
+    sys_a.trace.enabled = true;
+    sys_a.workload.enabled = false;
+    sys_a.models.enabled = false;
+    sys_a.pipeline.enabled = false;
+    sys_a.cache.enabled = true;
+    sys_a.fleet.n_sessions = n;
+    sys_a.fleet.max_batch = 4;
+    sys_a.fleet.max_inflight = 16;
+    sys_a.fleet.episodes_per_session = 1;
+    sys_a.fleet.endpoints = 2;
+    let plan = FaultPlan::none()
+        .delay_replies(0, 6, 60.0)
+        .outage(6, 8)
+        .drop_replies(10, u64::MAX, 1.0);
+    let engine = FaultEngine::new(plan, sys_a.episode.seed, 250.0, 1);
+    let a = Fleet::local_with_faults(&sys_a, TaskKind::PickPlace, PolicyKind::CloudOnly, engine)
+        .run();
+
+    // Fleet B: zoo splits under a slow link (the planner picks deep
+    // splits with real edge-prefix compute) plus pipelined execution —
+    // overlap and speculation both on. Cloud-Only exposes no kinematic
+    // evidence, so the z-gate speculates on every dispatch.
+    let mut sys_b = sys.clone();
+    sys_b.trace.enabled = true;
+    sys_b.workload.enabled = false;
+    sys_b.cache.enabled = false;
+    sys_b.models.enabled = true;
+    sys_b.link.bw_mbps = 20.0;
+    sys_b.link.rtt_ms = 40.0;
+    sys_b.pipeline.enabled = true;
+    sys_b.pipeline.overlap = true;
+    sys_b.pipeline.speculate = true;
+    sys_b.fleet.n_sessions = n;
+    sys_b.fleet.max_batch = 4;
+    sys_b.fleet.max_inflight = 16;
+    sys_b.fleet.episodes_per_session = 1;
+    let b = Fleet::local(&sys_b, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+
+    let ta = a.trace.as_ref().expect("fleet A ran with [trace] enabled");
+    let tb = b.trace.as_ref().expect("fleet B ran with [trace] enabled");
+    let chrome_json = chrome_trace_json(&[(ta, 0), (tb, 1)]);
+    let mut jsonl = ta.to_jsonl();
+    jsonl.push_str(&tb.to_jsonl());
+    let mut stage_counts = ta.stage_counts();
+    for (i, c) in tb.stage_counts().iter().enumerate() {
+        stage_counts[i] += c;
+    }
+    let mut registry = a.registry();
+    registry.merge(&b.registry());
+    TraceDemo { chrome_json, jsonl, stage_counts, registry }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_covers_every_stage_kind() {
+        let demo = run_trace_demo(&SystemConfig::default(), 6);
+        assert!(
+            missing_stages(&demo.stage_counts).is_empty(),
+            "missing stages: {:?}",
+            missing_stages(&demo.stage_counts)
+        );
+        assert!(demo.chrome_json.contains("\"traceEvents\""));
+        assert!(demo.registry.counter("trace/spans").unwrap_or(0) > 0);
+    }
+
+    #[test]
+    fn same_seed_demos_are_byte_identical() {
+        let x = run_trace_demo(&SystemConfig::default(), 6);
+        let y = run_trace_demo(&SystemConfig::default(), 6);
+        assert_eq!(x.chrome_json, y.chrome_json);
+        assert_eq!(x.jsonl, y.jsonl);
+        assert_eq!(x.registry.to_json(), y.registry.to_json());
+    }
+}

@@ -1,0 +1,213 @@
+//! Wedge flight recorder: a bounded per-session ring of recent scheduler
+//! events, dumped by the CLI's exit-1 paths so "session never resumed"
+//! comes with a postmortem instead of a bare exit code.
+//!
+//! Events are `Copy` fixed-size records (round + kind + two payload
+//! words) stored in a [`RingBuf`] per session — recording is a store into
+//! a preallocated ring, no allocation, no clock reads, no PRNG draws.
+//! The recorder also remembers the most recent *degraded* dispatch (a
+//! batch that exhausted every endpoint and fell back to edge-only): that
+//! session is the prime wedge suspect, and [`FlightRecorder::report`]
+//! leads with it, its last-N event tail, and the pending batch's flush
+//! cause.
+
+use crate::util::ringbuf::RingBuf;
+
+/// What happened (payload words `a`/`b` per kind are documented inline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FlightKind {
+    /// Padding for unwritten ring slots — never recorded explicitly.
+    #[default]
+    None,
+    /// Session joined the fleet.
+    Arrival,
+    /// Session enqueued a cloud request (`a` = queue length after push).
+    Enqueue,
+    /// Session's request left in a batch flush (`a` = flush cause code,
+    /// `b` = batch size).
+    Flush,
+    /// Reply dropped or timed out by the fault engine (`a` = endpoint).
+    DropReply,
+    /// Redispatch to another endpoint (`a` = retry number).
+    Failover,
+    /// Batch exhausted every endpoint; session resumed degraded from the
+    /// edge (`a` = flush cause code, `b` = batch size).
+    Degraded,
+    /// Link outage round observed while the session was active.
+    Outage,
+    /// Speculative dispatch resolved (`a` = 1 confirmed / 0 rolled back /
+    /// 2 aborted).
+    SpecResolve,
+    /// Session finished an episode (`a` = episodes remaining).
+    EpisodeDone,
+}
+
+impl FlightKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightKind::None => "none",
+            FlightKind::Arrival => "arrival",
+            FlightKind::Enqueue => "enqueue",
+            FlightKind::Flush => "flush",
+            FlightKind::DropReply => "drop_reply",
+            FlightKind::Failover => "failover",
+            FlightKind::Degraded => "degraded",
+            FlightKind::Outage => "outage",
+            FlightKind::SpecResolve => "spec_resolve",
+            FlightKind::EpisodeDone => "episode_done",
+        }
+    }
+}
+
+/// Flush-cause names, indexed by the cause code the fleet stamps into
+/// `Flush`/`Degraded` events (`serve::fleet::FlushCause` order).
+pub const CAUSE_NAMES: [&str; 4] = ["full", "deadline", "drain", "family"];
+
+/// One fixed-size flight event.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FlightEvent {
+    pub round: u64,
+    pub kind: FlightKind,
+    pub a: u32,
+    pub b: u32,
+}
+
+/// Per-session bounded event rings plus the latest degraded-dispatch
+/// pointer the wedge report leads with.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    rings: Vec<RingBuf<FlightEvent>>,
+    /// (session, round, cause code, batch size) of the newest `Degraded`.
+    last_degraded: Option<(usize, u64, u32, u32)>,
+}
+
+impl FlightRecorder {
+    pub fn new(n_sessions: usize, events_per_session: usize) -> Self {
+        let cap = events_per_session.max(1);
+        FlightRecorder {
+            rings: (0..n_sessions.max(1)).map(|_| RingBuf::new(cap)).collect(),
+            last_degraded: None,
+        }
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Record one event (a ring store; out-of-range sessions are ignored
+    /// rather than panicking a live postmortem tool).
+    pub fn record(&mut self, session: usize, round: u64, kind: FlightKind, a: u32, b: u32) {
+        let Some(ring) = self.rings.get_mut(session) else { return };
+        ring.push(FlightEvent { round, kind, a, b });
+        if kind == FlightKind::Degraded {
+            self.last_degraded = Some((session, round, a, b));
+        }
+    }
+
+    /// Session named first in the wedge report: the one with the newest
+    /// degraded dispatch, else the session with the newest event at all.
+    pub fn suspect(&self) -> Option<usize> {
+        if let Some((s, _, _, _)) = self.last_degraded {
+            return Some(s);
+        }
+        self.rings
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.recent(0).map(|e| (e.round, i)))
+            .max()
+            .map(|(_, i)| i)
+    }
+
+    /// Event tail (oldest → newest) for one session.
+    pub fn tail(&self, session: usize) -> Vec<FlightEvent> {
+        self.rings.get(session).map(|r| r.iter().collect()).unwrap_or_default()
+    }
+
+    /// Human-readable postmortem: the suspect session, its last-N events,
+    /// and — when a degraded dispatch was seen — the pending batch's
+    /// flush cause and size.
+    pub fn report(&self) -> String {
+        let Some(suspect) = self.suspect() else {
+            return "flight recorder: no events recorded".to_string();
+        };
+        let mut out = String::new();
+        match self.last_degraded {
+            Some((s, round, cause, batch)) => {
+                let cause = CAUSE_NAMES.get(cause as usize).unwrap_or(&"?");
+                out.push_str(&format!(
+                    "flight recorder: session {s} stuck — degraded dispatch @ round {round} \
+                     (pending batch: cause {cause}, {batch} request(s), all endpoints \
+                     exhausted)\n"
+                ));
+            }
+            None => {
+                out.push_str(&format!(
+                    "flight recorder: session {suspect} has the newest activity (no degraded \
+                     dispatch recorded)\n"
+                ));
+            }
+        }
+        let tail = self.tail(suspect);
+        out.push_str(&format!("last {} event(s) for session {suspect}:\n", tail.len()));
+        for e in &tail {
+            out.push_str(&format!(
+                "  round {:<6} {:<13} a={} b={}\n",
+                e.round,
+                e.kind.name(),
+                e.a,
+                e.b
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rings_bound_per_session_history() {
+        let mut fr = FlightRecorder::new(2, 3);
+        for round in 0..10 {
+            fr.record(0, round, FlightKind::Enqueue, 1, 0);
+        }
+        let tail = fr.tail(0);
+        assert_eq!(tail.len(), 3, "ring keeps only the last N");
+        assert_eq!(tail[0].round, 7);
+        assert_eq!(tail[2].round, 9);
+        assert!(fr.tail(1).is_empty());
+        // out-of-range sessions are ignored, not a panic
+        fr.record(99, 0, FlightKind::Arrival, 0, 0);
+    }
+
+    #[test]
+    fn degraded_dispatch_names_the_suspect_and_cause() {
+        let mut fr = FlightRecorder::new(4, 8);
+        fr.record(1, 3, FlightKind::Enqueue, 1, 0);
+        fr.record(2, 5, FlightKind::Flush, 0, 4);
+        fr.record(2, 5, FlightKind::Degraded, 1, 4); // cause 1 = deadline
+        let rep = fr.report();
+        assert_eq!(fr.suspect(), Some(2));
+        assert!(rep.contains("session 2 stuck"), "{rep}");
+        assert!(rep.contains("cause deadline"), "{rep}");
+        assert!(rep.contains("4 request(s)"), "{rep}");
+        assert!(rep.contains("degraded"), "{rep}");
+    }
+
+    #[test]
+    fn without_degraded_the_newest_event_wins() {
+        let mut fr = FlightRecorder::new(3, 4);
+        fr.record(0, 2, FlightKind::Enqueue, 0, 0);
+        fr.record(1, 9, FlightKind::Flush, 0, 2);
+        assert_eq!(fr.suspect(), Some(1));
+        assert!(fr.report().contains("session 1"));
+    }
+
+    #[test]
+    fn empty_recorder_reports_gracefully() {
+        let fr = FlightRecorder::new(2, 4);
+        assert_eq!(fr.suspect(), None);
+        assert!(fr.report().contains("no events"));
+    }
+}

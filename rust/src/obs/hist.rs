@@ -1,0 +1,200 @@
+//! Log-bucketed latency histogram with a deterministic merge.
+//!
+//! Sixty-four fixed power-of-two buckets: a sample `v` (any non-negative
+//! magnitude — the serve layer feeds microseconds) lands in bucket
+//! `64 - leading_zeros(v as u64)`, i.e. bucket 0 holds `[0, 1)`, bucket
+//! `i >= 1` holds `[2^(i-1), 2^i)`. Quantiles walk the cumulative counts
+//! and report the bucket's upper bound clamped to the observed maximum,
+//! so p50/p95/p99 are conservative (never under-report) and every value
+//! the histogram emits is reproducible from the bucket array alone.
+//!
+//! There is deliberately no running `sum` field: floating-point addition
+//! is not associative, and the merge below must be *exactly* associative
+//! so that per-shard histograms folded in any order produce bit-identical
+//! registries (proptest invariant #29). Bucket counts are `u64` adds and
+//! the max is an `f64::max` — both associative and commutative.
+
+/// Number of power-of-two buckets (covers the full `u64` magnitude range).
+pub const N_BUCKETS: usize = 64;
+
+/// Fixed-bucket log histogram. `Default` is the empty histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    buckets: [u64; N_BUCKETS],
+    count: u64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: [0; N_BUCKETS], count: 0, max: 0.0 }
+    }
+}
+
+/// Bucket index for a sample: 0 for `[0, 1)`, else `1 + floor(log2 v)`,
+/// clamped into the table.
+pub fn bucket_index(v: f64) -> usize {
+    let u = v.max(0.0) as u64;
+    ((64 - u.leading_zeros()) as usize).min(N_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (the value a quantile reports
+/// when the walk stops there, before the max clamp).
+fn bucket_upper(i: usize) -> f64 {
+    if i == 0 {
+        1.0
+    } else {
+        ((1u128 << i) - 1) as f64
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. Negative samples clamp to bucket 0.
+    pub fn insert(&mut self, v: f64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest sample observed (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn buckets(&self) -> &[u64; N_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Fold `other` into `self`: bucket-wise `u64` add plus an `f64` max.
+    /// Exactly associative and commutative, so shard merge order never
+    /// changes the result.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Quantile `p` in `[0, 1]`: the upper bound of the first bucket whose
+    /// cumulative count reaches `ceil(p * count)`, clamped to the observed
+    /// max. Returns 0.0 on an empty histogram. Monotone in `p` (proptest
+    /// invariant #28).
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 1.0);
+        let target = ((p * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.5), 0, "negatives clamp to bucket 0");
+        assert_eq!(bucket_index(0.99), 0);
+        assert_eq!(bucket_index(1.0), 1);
+        assert_eq!(bucket_index(2.0), 2);
+        assert_eq!(bucket_index(3.0), 2);
+        assert_eq!(bucket_index(4.0), 3);
+        assert_eq!(bucket_index(1023.0), 10);
+        assert_eq!(bucket_index(1024.0), 11);
+        assert_eq!(bucket_index(f64::MAX), N_BUCKETS - 1, "huge values clamp");
+    }
+
+    #[test]
+    fn quantiles_walk_and_clamp_to_max() {
+        let mut h = LogHistogram::new();
+        for _ in 0..99 {
+            h.insert(10.0); // bucket 4, upper bound 15
+        }
+        h.insert(1000.0); // bucket 10
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50(), 15.0);
+        assert_eq!(h.p95(), 15.0);
+        // p99 lands on the 99th sample — still a 10.0
+        assert_eq!(h.p99(), 15.0);
+        // p100 reaches the outlier bucket; upper bound 1023 clamps to max
+        assert_eq!(h.quantile(1.0), 1000.0);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_bucketwise_and_order_free() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for i in 0..50 {
+            a.insert(i as f64);
+            b.insert((i * 100) as f64);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must commute exactly");
+        assert_eq!(ab.count(), 100);
+        assert_eq!(ab.max(), 4900.0);
+        assert!(ab.p50() <= ab.p95() && ab.p95() <= ab.p99());
+    }
+
+    #[test]
+    fn single_sample_quantiles_equal_the_sample_clamp() {
+        let mut h = LogHistogram::new();
+        h.insert(700.0);
+        // bucket upper bound is 1023 but the clamp pins every quantile to
+        // the only value ever seen
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(p), 700.0, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability layer: deterministic span tracing, a metrics registry
+//! with log-bucketed latency histograms, and a wedge flight recorder.
+//!
+//! Everything here is config-gated behind `[trace]` (shipped disabled in
+//! all four presets) and obeys the repo's zero-perturbation contract:
+//! recording consumes **zero PRNG draws** and **never advances a
+//! clock** — a traced fleet replays bit-identically to an untraced one
+//! (`rust/tests/obs_trace.rs`), and two same-seed traced runs emit
+//! byte-identical Chrome-trace JSON and JSONL, so traces are diffable
+//! artifacts, not just pictures.
+//!
+//! - [`tracer`] — virtual-time [`Span`]s per pipeline stage ([`Stage`]),
+//!   exported as Chrome trace-event JSON (Perfetto-loadable) or JSONL.
+//! - [`hist`] — fixed power-of-two [`LogHistogram`] (p50/p95/p99/max)
+//!   with an exactly associative merge.
+//! - [`registry`] — insertion-ordered counters + histograms behind one
+//!   renderer (`rapid fleet`'s rollup, `--metrics-json`).
+//! - [`flight`] — per-session ring of recent events dumped by every
+//!   exit-1 wedge path ([`FlightRecorder::report`]).
+//! - [`demo`] — the deterministic `rapid trace` scenario that exercises
+//!   every stage kind.
+
+pub mod demo;
+pub mod flight;
+pub mod hist;
+pub mod registry;
+pub mod tracer;
+
+pub use flight::{FlightEvent, FlightKind, FlightRecorder};
+pub use hist::LogHistogram;
+pub use registry::MetricsRegistry;
+pub use tracer::{chrome_trace_json, Span, Stage, Tracer, NO_ENDPOINT};

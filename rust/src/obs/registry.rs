@@ -1,0 +1,222 @@
+//! Metrics registry: named counters plus log-bucketed latency histograms
+//! behind one renderer, replacing the ad-hoc `println!` rollups that
+//! `rapid fleet` / `rapid chaos` / `rapid zoo` each used to hand-format.
+//!
+//! Storage is insertion-ordered `Vec`s (linear probe on a few dozen
+//! names — no hashing, no iteration-order nondeterminism), so the render
+//! and the `--metrics-json` dump are byte-stable across same-seed runs
+//! and registries merge deterministically (histogram merge is exactly
+//! associative; see [`super::hist`]).
+
+use super::hist::LogHistogram;
+use crate::util::tablefmt::Table;
+
+/// Insertion-ordered counters and histograms.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: Vec<(String, u64)>,
+    hists: Vec<(String, LogHistogram)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to counter `name`, creating it at 0 first.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += by,
+            None => self.counters.push((name.to_string(), by)),
+        }
+    }
+
+    /// Set counter `name` (used for gauges like `max_batch_observed`
+    /// where merge semantics are max, handled by the caller).
+    pub fn set(&mut self, name: &str, v: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, slot)) => *slot = v,
+            None => self.counters.push((name.to_string(), v)),
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Record one latency sample (µs) into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self.hists.iter_mut().find(|(n, _)| n == name) {
+            Some((_, h)) => h.insert(v),
+            None => {
+                let mut h = LogHistogram::new();
+                h.insert(v);
+                self.hists.push((name.to_string(), h));
+            }
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Fold a whole histogram into `name` (how the fleet imports its
+    /// tracer's per-stage timings).
+    pub fn merge_histogram(&mut self, name: &str, other: &LogHistogram) {
+        match self.hists.iter_mut().find(|(n, _)| n == name) {
+            Some((_, h)) => h.merge(other),
+            None => self.hists.push((name.to_string(), other.clone())),
+        }
+    }
+
+    /// Merge another registry: counters add, histograms merge. Names the
+    /// other registry introduces keep its insertion order, appended.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (n, v) in &other.counters {
+            self.inc(n, *v);
+        }
+        for (n, h) in &other.hists {
+            self.merge_histogram(n, h);
+        }
+    }
+
+    pub fn counters(&self) -> &[(String, u64)] {
+        &self.counters
+    }
+
+    pub fn histograms(&self) -> &[(String, LogHistogram)] {
+        &self.hists
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.hists.is_empty()
+    }
+
+    /// Render counters (zero-valued ones elided to keep the rollup the
+    /// size of the old ad-hoc lines) and latency histograms as tables.
+    pub fn render(&self, title: &str) -> String {
+        let mut out = String::new();
+        let live: Vec<&(String, u64)> = self.counters.iter().filter(|(_, v)| *v > 0).collect();
+        if !live.is_empty() {
+            let mut t = Table::new(title, &["Counter", "Value"]);
+            for (n, v) in live {
+                t.row(&[n.clone(), v.to_string()]);
+            }
+            out.push_str(&t.render());
+        }
+        if !self.hists.is_empty() {
+            let mut t = Table::new(
+                &format!("{title} — latency histograms (µs)"),
+                &["Stage", "Count", "p50", "p95", "p99", "Max"],
+            );
+            for (n, h) in &self.hists {
+                t.row(&[
+                    n.clone(),
+                    h.count().to_string(),
+                    format!("{:.0}", h.p50()),
+                    format!("{:.0}", h.p95()),
+                    format!("{:.0}", h.p99()),
+                    format!("{:.0}", h.max()),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    /// Machine-readable dump (`--metrics-json`): every counter (including
+    /// zeros) and every histogram's quantiles + raw bucket array.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\":{");
+        for (i, (n, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{n}\":{v}"));
+        }
+        out.push_str("},\"histograms\":{");
+        for (i, (n, h)) in self.hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let buckets: Vec<String> =
+                h.buckets().iter().map(|b| b.to_string()).collect();
+            out.push_str(&format!(
+                "\"{n}\":{{\"count\":{},\"p50\":{:.0},\"p95\":{:.0},\"p99\":{:.0},\
+                 \"max\":{:.0},\"buckets\":[{}]}}",
+                h.count(),
+                h.p50(),
+                h.p95(),
+                h.p99(),
+                h.max(),
+                buckets.join(",")
+            ));
+        }
+        out.push_str("}}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_in_insertion_order() {
+        let mut r = MetricsRegistry::new();
+        r.inc("batches", 3);
+        r.inc("rounds", 10);
+        r.inc("batches", 2);
+        assert_eq!(r.counter("batches"), Some(5));
+        assert_eq!(r.counter("rounds"), Some(10));
+        assert_eq!(r.counter("missing"), None);
+        let names: Vec<&str> = r.counters().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["batches", "rounds"], "insertion order is stable");
+    }
+
+    #[test]
+    fn merge_adds_counters_and_folds_histograms() {
+        let mut a = MetricsRegistry::new();
+        a.inc("hits", 2);
+        a.observe("lat/wire", 100.0);
+        let mut b = MetricsRegistry::new();
+        b.inc("hits", 3);
+        b.inc("misses", 1);
+        b.observe("lat/wire", 900.0);
+        a.merge(&b);
+        assert_eq!(a.counter("hits"), Some(5));
+        assert_eq!(a.counter("misses"), Some(1));
+        let h = a.histogram("lat/wire").unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 900.0);
+    }
+
+    #[test]
+    fn render_elides_zero_counters_but_json_keeps_them() {
+        let mut r = MetricsRegistry::new();
+        r.inc("active", 4);
+        r.set("dropped", 0);
+        r.observe("lat/reply", 60_000.0);
+        let rendered = r.render("fleet");
+        assert!(rendered.contains("active"));
+        assert!(!rendered.contains("dropped"), "zero counters are elided:\n{rendered}");
+        assert!(rendered.contains("lat/reply"));
+        let json = r.to_json();
+        assert!(json.contains("\"dropped\":0"));
+        let v = crate::config::json::parse_json(&json).expect("metrics JSON must parse");
+        assert!(v.get("counters").is_some() && v.get("histograms").is_some());
+    }
+
+    #[test]
+    fn json_is_byte_stable() {
+        let mk = || {
+            let mut r = MetricsRegistry::new();
+            r.inc("a", 1);
+            for i in 0..32 {
+                r.observe("lat/x", (i * 17) as f64);
+            }
+            r.to_json()
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,355 @@
+//! Deterministic virtual-time span tracer.
+//!
+//! A [`Span`] is one stage of one pipeline step — capture, edge prefix,
+//! wire transfer, cloud queue wait, cloud compute, delayed reply, reuse
+//! probe/hit, speculation dispatch/resolve, failover redispatch, or a
+//! link-outage window — pinned to the *virtual* clock: `ts_us` is the
+//! session's position inside its fleet round (`round * round_us` plus the
+//! stage durations already charged this step) and `dur_us` is exactly the
+//! virtual time the scheduler charged for that stage. Wall time never
+//! enters a span, tracing draws nothing from any PRNG, and recording
+//! never advances a clock — so a traced run replays bit-identically and
+//! two same-seed traces are byte-identical artifacts (pinned by
+//! `rust/tests/obs_trace.rs`).
+//!
+//! Export formats: Chrome trace-event JSON (`{"traceEvents": [...]}`,
+//! complete `ph:"X"` events — load the file in Perfetto or
+//! `chrome://tracing`) and a compact one-object-per-line JSONL for
+//! in-tree diffing. `pid` is the fleet (0 unless merging several fleets,
+//! as `rapid trace` does), `tid` is the session.
+
+/// Pipeline stage kinds — one per place the scheduler charges virtual
+/// time (or marks a zero-cost decision worth seeing on a timeline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Sensor-frame capture before an offload (`clock.obs_capture()`).
+    Capture,
+    /// Edge prefix compute for a zoo split, net of any overlap-hidden
+    /// portion (dur 0 when the pipeline hides all of it).
+    EdgePrefix,
+    /// Wire round trip of the offload payload (`link.offload_roundtrip`).
+    Wire,
+    /// Rounds a request waited in the cross-session batcher between
+    /// dispatch and flush.
+    CloudQueue,
+    /// Cloud-side batch compute.
+    CloudCompute,
+    /// Fault-injected reply delay charged on top of the round trip.
+    Reply,
+    /// Reuse-cache probe (tag: 0 miss, 1 stale, 2 hit).
+    ReuseProbe,
+    /// Reuse-cache hit serving a step for `probe_ms` instead of a round
+    /// trip.
+    ReuseHit,
+    /// Speculative edge decode emitted while the offload is in flight.
+    SpecDispatch,
+    /// Speculation resolution (tag: 1 confirmed free, 0 rolled back for
+    /// `rollback_ms`, 2 aborted by a failed offload).
+    SpecResolve,
+    /// Failover redispatch after an endpoint was crossed off (tag: retry
+    /// number; dur: the timeout charged when the reply was lost).
+    Failover,
+    /// Link-outage round (one span per outage round the fleet observed).
+    Outage,
+}
+
+impl Stage {
+    /// Every stage kind, in timeline order (index == `id`).
+    pub const ALL: [Stage; 12] = [
+        Stage::Capture,
+        Stage::EdgePrefix,
+        Stage::Wire,
+        Stage::CloudQueue,
+        Stage::CloudCompute,
+        Stage::Reply,
+        Stage::ReuseProbe,
+        Stage::ReuseHit,
+        Stage::SpecDispatch,
+        Stage::SpecResolve,
+        Stage::Failover,
+        Stage::Outage,
+    ];
+
+    pub fn id(self) -> usize {
+        match self {
+            Stage::Capture => 0,
+            Stage::EdgePrefix => 1,
+            Stage::Wire => 2,
+            Stage::CloudQueue => 3,
+            Stage::CloudCompute => 4,
+            Stage::Reply => 5,
+            Stage::ReuseProbe => 6,
+            Stage::ReuseHit => 7,
+            Stage::SpecDispatch => 8,
+            Stage::SpecResolve => 9,
+            Stage::Failover => 10,
+            Stage::Outage => 11,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Capture => "capture",
+            Stage::EdgePrefix => "edge_prefix",
+            Stage::Wire => "wire",
+            Stage::CloudQueue => "cloud_queue",
+            Stage::CloudCompute => "cloud_compute",
+            Stage::Reply => "reply",
+            Stage::ReuseProbe => "reuse_probe",
+            Stage::ReuseHit => "reuse_hit",
+            Stage::SpecDispatch => "spec_dispatch",
+            Stage::SpecResolve => "spec_resolve",
+            Stage::Failover => "failover",
+            Stage::Outage => "outage",
+        }
+    }
+}
+
+/// Sentinel endpoint for spans not tied to a cloud endpoint.
+pub const NO_ENDPOINT: u32 = u32::MAX;
+
+/// One recorded stage instance. Plain `Copy` data — recording a span is
+/// a bounds check and a 40-byte store, nothing more.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub stage: Stage,
+    /// Virtual timestamp (µs since fleet start).
+    pub ts_us: u64,
+    /// Virtual duration (µs) — exactly what the scheduler charged.
+    pub dur_us: u64,
+    pub session: u32,
+    /// `ModelFamily::id()` of the owning session.
+    pub family: u8,
+    /// Cloud endpoint serving the stage, or [`NO_ENDPOINT`].
+    pub endpoint: u32,
+    /// Stage-specific detail (probe outcome, retry number, payload bytes,
+    /// confirm/rollback flag, outage length…). See [`Stage`] docs.
+    pub tag: u32,
+}
+
+/// Bounded span sink for one fleet. `Vec`-backed (insertion order *is*
+/// the deterministic order — no hash-map iteration anywhere) with a hard
+/// cap: past `max_spans` the tracer counts drops instead of growing, so
+/// an enabled trace can never OOM a 100k-session run.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    spans: Vec<Span>,
+    max_spans: usize,
+    dropped: u64,
+    /// Virtual µs per fleet round — the scale spans' round offsets use.
+    round_us: f64,
+}
+
+impl Tracer {
+    pub fn new(max_spans: usize, round_us: f64) -> Self {
+        // reserve modestly; the cap may be far larger than any real run
+        let cap = max_spans.min(4096);
+        Tracer { spans: Vec::with_capacity(cap), max_spans, dropped: 0, round_us }
+    }
+
+    /// Virtual µs at the start of `round` — the base every in-round span
+    /// cursor starts from.
+    pub fn base_us(&self, round: u64) -> u64 {
+        (round as f64 * self.round_us) as u64
+    }
+
+    pub fn round_us(&self) -> f64 {
+        self.round_us
+    }
+
+    /// Record one span (40-byte store; drops past the cap).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        stage: Stage,
+        ts_us: u64,
+        dur_us: u64,
+        session: u32,
+        family: u8,
+        endpoint: u32,
+        tag: u32,
+    ) {
+        if self.spans.len() >= self.max_spans {
+            self.dropped += 1;
+            return;
+        }
+        self.spans.push(Span { stage, ts_us, dur_us, session, family, endpoint, tag });
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans dropped past the `max_spans` cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Count of recorded spans of one stage kind.
+    pub fn count_stage(&self, stage: Stage) -> u64 {
+        self.spans.iter().filter(|s| s.stage == stage).count() as u64
+    }
+
+    /// Per-stage span counts indexed by [`Stage::id`].
+    pub fn stage_counts(&self) -> [u64; Stage::ALL.len()] {
+        let mut counts = [0u64; Stage::ALL.len()];
+        for s in &self.spans {
+            counts[s.stage.id()] += 1;
+        }
+        counts
+    }
+
+    /// Chrome trace-event JSON for this tracer alone (`pid` 0).
+    pub fn to_chrome_json(&self) -> String {
+        chrome_trace_json(&[(self, 0)])
+    }
+
+    /// Compact JSONL: one span object per line, insertion order.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::with_capacity(self.spans.len() * 96);
+        for s in &self.spans {
+            out.push_str(&format!(
+                "{{\"stage\":\"{}\",\"ts\":{},\"dur\":{},\"session\":{},\"family\":{},\
+                 \"endpoint\":{},\"tag\":{}}}\n",
+                s.stage.name(),
+                s.ts_us,
+                s.dur_us,
+                s.session,
+                s.family,
+                endpoint_json(s.endpoint),
+                s.tag
+            ));
+        }
+        out
+    }
+}
+
+fn endpoint_json(ep: u32) -> i64 {
+    if ep == NO_ENDPOINT {
+        -1
+    } else {
+        ep as i64
+    }
+}
+
+/// Merge one or more tracers into a single Chrome trace-event document,
+/// each under its own `pid` (`rapid trace` merges its two demo fleets as
+/// pid 0 and 1). All numbers are integers and the span order is the
+/// tracers' insertion order, so same-seed runs emit byte-identical JSON.
+pub fn chrome_trace_json(parts: &[(&Tracer, u32)]) -> String {
+    let total: usize = parts.iter().map(|(t, _)| t.spans.len()).sum();
+    let mut out = String::with_capacity(total * 140 + 64);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for (tracer, pid) in parts {
+        for s in &tracer.spans {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{},\
+                 \"cat\":\"fleet\",\"args\":{{\"family\":{},\"endpoint\":{},\"tag\":{}}}}}",
+                s.stage.name(),
+                s.ts_us,
+                s.dur_us,
+                pid,
+                s.session,
+                s.family,
+                endpoint_json(s.endpoint),
+                s.tag
+            ));
+        }
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_ids_match_all_order() {
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            assert_eq!(st.id(), i, "{}", st.name());
+        }
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.dedup();
+        assert_eq!(names.len(), Stage::ALL.len(), "stage names must be unique");
+    }
+
+    #[test]
+    fn cap_drops_instead_of_growing() {
+        let mut t = Tracer::new(2, 1000.0);
+        for i in 0..5 {
+            t.record(Stage::Wire, i * 10, 5, 0, 0, 0, 0);
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        assert_eq!(t.count_stage(Stage::Wire), 2);
+    }
+
+    #[test]
+    fn base_us_scales_rounds() {
+        let t = Tracer::new(16, 50_000.0);
+        assert_eq!(t.base_us(0), 0);
+        assert_eq!(t.base_us(3), 150_000);
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_merges_pids() {
+        let mut a = Tracer::new(16, 1000.0);
+        a.record(Stage::Capture, 0, 12, 0, 1, NO_ENDPOINT, 0);
+        let mut b = Tracer::new(16, 1000.0);
+        b.record(Stage::Wire, 7, 90, 2, 0, 1, 4096);
+        let doc = chrome_trace_json(&[(&a, 0), (&b, 1)]);
+        let v = crate::config::json::parse_json(&doc).expect("chrome trace JSON must parse");
+        let events = v.get("traceEvents").and_then(|e| e.as_list()).expect("traceEvents");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].str_or("name", ""), "capture");
+        assert_eq!(events[0].f64_or("pid", -1.0), 0.0);
+        assert_eq!(events[1].str_or("name", ""), "wire");
+        assert_eq!(events[1].f64_or("pid", -1.0), 1.0);
+        assert_eq!(events[1].f64_or("dur", -1.0), 90.0);
+        // no-endpoint sentinel serializes as -1, never as u32::MAX
+        assert!(doc.contains("\"endpoint\":-1"));
+        assert!(!doc.contains("4294967295"));
+    }
+
+    #[test]
+    fn jsonl_one_line_per_span() {
+        let mut t = Tracer::new(16, 1000.0);
+        t.record(Stage::ReuseHit, 5, 300, 1, 2, NO_ENDPOINT, 2);
+        t.record(Stage::Outage, 9, 1000, 0, 0, NO_ENDPOINT, 4);
+        let doc = t.to_jsonl();
+        let lines: Vec<&str> = doc.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            crate::config::json::parse_json(line).expect("every JSONL line parses");
+        }
+        assert!(doc.starts_with("{\"stage\":\"reuse_hit\""));
+    }
+
+    #[test]
+    fn same_spans_same_bytes() {
+        let mk = || {
+            let mut t = Tracer::new(64, 1000.0);
+            for i in 0..10u64 {
+                t.record(Stage::ALL[(i % 12) as usize], i * 100, i, i as u32, 0, 0, 0);
+            }
+            t
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.to_chrome_json(), b.to_chrome_json());
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+    }
+}

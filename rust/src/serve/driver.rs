@@ -28,6 +28,7 @@ use crate::dispatcher::{ChunkQueue, ChunkSource};
 use crate::metrics::EpisodeMetrics;
 use crate::net::link::LinkProfile;
 use crate::net::Link;
+use crate::obs::{Stage, Tracer, NO_ENDPOINT};
 use crate::policy::{DecisionCtx, FamilyPlan, Route, Strategy};
 use crate::robot::{RobotSim, SensorFrame, TaskKind};
 use crate::runtime::DeviceClock;
@@ -71,6 +72,26 @@ pub struct CloudRequest {
     /// [`EpisodeState::abort_speculation`] when lost), never
     /// `complete_cloud`/`fail_cloud`.
     pub speculative: bool,
+}
+
+/// In-step span cursor (`[trace]`): the spans of one polled step are laid
+/// out sequentially from the round's base timestamp, each stage advancing
+/// the cursor by exactly the virtual time it charged — so a Perfetto lane
+/// shows capture → prefix → wire → compute end to end. Pure bookkeeping
+/// over already-computed values; never samples, never advances a clock.
+struct SpanCursor<'a> {
+    tr: &'a mut Tracer,
+    ts: u64,
+    session: u32,
+    family: u8,
+}
+
+impl SpanCursor<'_> {
+    fn emit(&mut self, stage: Stage, ms: f64, tag: u32) {
+        let dur = (ms * 1000.0) as u64;
+        self.tr.record(stage, self.ts, dur, self.session, self.family, NO_ENDPOINT, tag);
+        self.ts += dur;
+    }
 }
 
 /// In-flight speculative offload (`[pipeline].speculate`): what the
@@ -263,14 +284,44 @@ impl EpisodeState {
         edge: &mut dyn Backend,
         cloud: &mut dyn Backend,
         admit_cloud: bool,
+        cache: Option<&mut ReuseStore>,
+        round: u64,
+        owner: usize,
+    ) -> StepEvent {
+        self.poll_traced(sys, edge, cloud, admit_cloud, cache, round, owner, None)
+    }
+
+    /// [`EpisodeState::poll_with_cache`] with a span tracer attached
+    /// (`[trace]`): every stage this step charges virtual time for —
+    /// capture, edge prefix, wire, cloud compute, reuse probe/hit,
+    /// speculative dispatch — is recorded as a [`Stage`] span at its
+    /// position inside the fleet round. Recording reads values the step
+    /// computes anyway: zero PRNG draws, zero clock advances, so
+    /// `tracer = None` and `tracer = Some(_)` run bit-identical steps
+    /// (pinned by `rust/tests/obs_trace.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn poll_traced(
+        &mut self,
+        sys: &SystemConfig,
+        edge: &mut dyn Backend,
+        cloud: &mut dyn Backend,
+        admit_cloud: bool,
         mut cache: Option<&mut ReuseStore>,
         round: u64,
         owner: usize,
+        tracer: Option<&mut Tracer>,
     ) -> StepEvent {
         assert!(!self.awaiting, "poll() while awaiting a cloud response");
         if self.sim.done() {
             return StepEvent::Done;
         }
+        let span_family = self.family().id();
+        let mut span = tracer.map(|tr| SpanCursor {
+            ts: tr.base_us(round),
+            session: owner as u32,
+            family: span_family,
+            tr,
+        });
         let t = self.sim.step_index();
         self.strategy.observe(&self.last_frame);
 
@@ -317,6 +368,10 @@ impl EpisodeState {
                     );
                     match store.probe(&s, round, owner) {
                         ProbeOutcome::Hit(out) => {
+                            if let Some(c) = span.as_mut() {
+                                c.emit(Stage::ReuseProbe, 0.0, 2);
+                                c.emit(Stage::ReuseHit, sys.cache.probe_ms, 2);
+                            }
                             if !self.queue.is_empty() {
                                 self.metrics.preemptions += 1;
                                 self.metrics.overhead_ms += self.clock.preempt();
@@ -336,10 +391,18 @@ impl EpisodeState {
                             return StepEvent::Stepped;
                         }
                         ProbeOutcome::Stale => {
+                            if let Some(c) = span.as_mut() {
+                                c.emit(Stage::ReuseProbe, 0.0, 1);
+                            }
                             self.metrics.cache_stale += 1;
                             self.metrics.cache_misses += 1;
                         }
-                        ProbeOutcome::Miss => self.metrics.cache_misses += 1,
+                        ProbeOutcome::Miss => {
+                            if let Some(c) = span.as_mut() {
+                                c.emit(Stage::ReuseProbe, 0.0, 0);
+                            }
+                            self.metrics.cache_misses += 1;
+                        }
                     }
                     sig = Some(s);
                 }
@@ -366,6 +429,9 @@ impl EpisodeState {
                         self.metrics.overhead_ms += self.clock.preempt();
                     }
                     let t_cap = self.clock.obs_capture();
+                    if let Some(c) = span.as_mut() {
+                        c.emit(Stage::Capture, t_cap, 0);
+                    }
                     // entropy (split-computing) baselines partition with
                     // their own split model — they keep their activation
                     // payload and take no zoo split (charging a zoo prefix
@@ -411,6 +477,11 @@ impl EpisodeState {
                         self.clock.advance(t_prefix - hidden);
                         self.metrics.edge_busy_ms += t_prefix - hidden;
                         self.metrics.overlap_hidden_ms += hidden;
+                        if let Some(c) = span.as_mut() {
+                            // dur = the exposed remainder actually charged;
+                            // tag = the µs the overlap hid
+                            c.emit(Stage::EdgePrefix, t_prefix - hidden, (hidden * 1000.0) as u32);
+                        }
                     }
                     self.metrics.cloud_events += 1;
                     self.metrics.retransmissions += xfer.retransmissions as u64;
@@ -430,6 +501,9 @@ impl EpisodeState {
                         self.clock.advance(sys.pipeline.spec_decode_ms);
                         self.metrics.edge_busy_ms += sys.pipeline.spec_decode_ms;
                         self.metrics.spec_dispatches += 1;
+                        if let Some(c) = span.as_mut() {
+                            c.emit(Stage::SpecDispatch, sys.pipeline.spec_decode_ms, 0);
+                        }
                         let t0 = std::time::Instant::now();
                         let out = edge.infer(&obs, &proprio, instr);
                         self.metrics.measured_edge_us += t0.elapsed().as_micros() as f64;
@@ -449,6 +523,11 @@ impl EpisodeState {
 
                     self.clock.advance(xfer.ms);
                     self.clock.advance(t_compute);
+                    if let Some(c) = span.as_mut() {
+                        // tag = payload bytes on the wire (saturating)
+                        c.emit(Stage::Wire, xfer.ms, payload.min(u32::MAX as f64) as u32);
+                        c.emit(Stage::CloudCompute, t_compute, 0);
+                    }
                     self.metrics.cloud_busy_ms += t_cap + xfer.ms + t_compute;
                     self.awaiting = true;
                     return StepEvent::NeedCloud(CloudRequest {
@@ -499,8 +578,15 @@ impl EpisodeState {
     /// `rollback_ms` penalty is re-charged to the session clock and the
     /// overhead column. Either way the cloud chunk's unconsumed suffix
     /// replaces the provisional remainder, so the session converges back
-    /// onto cloud-grade actions from the next step on.
-    pub fn resolve_speculation(&mut self, sys: &SystemConfig, out: ModelOut, measured_us: f64) {
+    /// onto cloud-grade actions from the next step on. Returns `true` on a
+    /// confirm, `false` on a rollback (the span tracer tags the
+    /// `SpecResolve` span with the outcome).
+    pub fn resolve_speculation(
+        &mut self,
+        sys: &SystemConfig,
+        out: ModelOut,
+        measured_us: f64,
+    ) -> bool {
         let spec = self.spec.take().expect("resolve_speculation() without a speculative offload");
         self.metrics.measured_cloud_us += measured_us;
         let consumed = (self.sim.step_index() - spec.t0)
@@ -522,10 +608,12 @@ impl EpisodeState {
             for i in consumed..out.actions.len() {
                 self.side.push_back((out.entropy(i), out.mass[i]));
             }
-            self.queue.overwrite(&out.actions[consumed..], ChunkSource::Cloud, self.sim.step_index());
+            let step = self.sim.step_index();
+            self.queue.overwrite(&out.actions[consumed..], ChunkSource::Cloud, step);
             self.metrics.discarded_actions = self.queue.discarded;
         }
         self.charge_repartitions();
+        confirmed
     }
 
     /// A speculative offload whose reply was lost (dropped frame, crashed
@@ -1218,8 +1306,9 @@ mod tests {
             let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
             let mut edge = AnalyticBackend::edge(14);
             let mut cloud = AnalyticBackend::cloud(14);
-            let m = run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 14, false)
-                .metrics;
+            let m =
+                run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 14, false)
+                    .metrics;
             assert_eq!(m.latency_columns(), base.latency_columns(), "overlap={overlap}");
             assert_eq!(m.cloud_events, base.cloud_events);
             assert_eq!(m.rms_error, base.rms_error);
@@ -1240,8 +1329,8 @@ mod tests {
         let strategy = crate::policy::build(PolicyKind::CloudOnly, &sys);
         let mut edge = AnalyticBackend::edge(15);
         let mut cloud = AnalyticBackend::cloud(15);
-        let m =
-            run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 15, false).metrics;
+        let m = run_episode(&sys, TaskKind::PickPlace, strategy, &mut edge, &mut cloud, 15, false)
+            .metrics;
         assert_eq!(m.steps, TaskKind::PickPlace.seq_len());
         assert!(m.spec_dispatches > 0);
         assert_eq!(m.spec_confirms + m.spec_rollbacks, m.spec_dispatches, "every spec resolves");

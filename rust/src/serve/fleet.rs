@@ -59,6 +59,32 @@
 //! session owns its model backends and PRNG streams, a fleet session's
 //! episode metrics are *identical* to a single-session `run_episode` of
 //! the same seed.
+//!
+//! # Observability (`[trace]`)
+//!
+//! With `[trace]` enabled the scheduler carries a [`Tracer`] and a
+//! [`FlightRecorder`], threaded through the event classes above:
+//!
+//! * **fault edge** opens one fleet-wide `Outage` span per outage round
+//!   (on the scheduler lane, tid = one past the last session);
+//! * **session ready** hands the tracer into
+//!   [`EpisodeState::poll_traced`](super::driver::EpisodeState), which
+//!   lays the in-step stages (`Capture` → `EdgePrefix` → `Wire` →
+//!   `CloudCompute`, plus `ReuseProbe`/`ReuseHit` and `SpecDispatch`)
+//!   sequentially from the round's base timestamp; an enqueued request
+//!   records a flight `Enqueue` event stamped with the queue depth;
+//! * **flush** closes each request's `CloudQueue` span (enqueue round →
+//!   flush round, tagged with the flush cause), then records `Failover`
+//!   spans per failed dispatch attempt, `Reply` spans for in-timeout
+//!   delays, and `SpecResolve` spans as speculations confirm, roll back,
+//!   or abort — mirrored as flight events so a wedge postmortem replays
+//!   the same story;
+//! * **batch deadline** records nothing: bookkeeping charges no time.
+//!
+//! Recording reads values the scheduler computes anyway — zero PRNG
+//! draws, zero clock advances — so a traced run is bit-identical to an
+//! untraced one and two same-seed traces are byte-identical (pinned by
+//! `rust/tests/obs_trace.rs`).
 
 use super::batcher::Batcher;
 use super::driver::{CloudRequest, EpisodeState, StepEvent};
@@ -70,6 +96,7 @@ use crate::config::{FleetConfig, PolicyKind, SystemConfig};
 use crate::faults::FaultEngine;
 use crate::metrics::{summarize_fleet, EpisodeMetrics, FleetSummary};
 use crate::net::link::LinkProfile;
+use crate::obs::{FlightKind, FlightRecorder, MetricsRegistry, Stage, Tracer, NO_ENDPOINT};
 use crate::net::proto::InferRequest;
 use crate::net::CloudClient;
 use crate::policy::{planner, FamilyPlan};
@@ -89,6 +116,9 @@ pub fn fleet_seed(base: u64, session: usize, episode: usize) -> u64 {
 pub struct FleetRequest {
     pub session: usize,
     pub req: CloudRequest,
+    /// Scheduler round the request entered the batcher — the base of its
+    /// `CloudQueue` span (queue wait = flush round − this).
+    pub enqueued_round: u64,
 }
 
 /// Where coalesced batches execute.
@@ -199,6 +229,10 @@ pub struct FleetResult {
     pub cache: CacheStats,
     /// Per-family rollup (a single surrogate row with `[models]` off).
     pub families: Vec<FamilyTotals>,
+    /// Span tracer of the run (`Some` only with `[trace]` enabled).
+    pub trace: Option<Tracer>,
+    /// Flight recorder of the run (`Some` only with `[trace]` enabled).
+    pub flight: Option<FlightRecorder>,
 }
 
 impl FleetResult {
@@ -216,6 +250,69 @@ impl FleetResult {
     pub fn total_steps(&self) -> u64 {
         self.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.steps as u64).sum()
     }
+
+    /// Fold the run into a [`MetricsRegistry`]: one counter per
+    /// [`FleetStats`] field plus the cache and per-family rollups, and —
+    /// when the run was traced — a per-stage latency histogram (µs of
+    /// charged virtual time) with a family-keyed variant for mixed-zoo
+    /// fleets. This is the single renderer every CLI surface prints
+    /// through, so `rapid fleet` / `rapid chaos` / `rapid zoo` can never
+    /// drift apart.
+    pub fn registry(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        let s = &self.stats;
+        r.set("rounds", s.rounds);
+        r.set("arrivals", s.arrivals);
+        r.set("max_active_sessions", s.max_active_sessions as u64);
+        r.set("batches", s.batches);
+        r.set("batched_requests", s.batched_requests);
+        r.set("multi_session_batches", s.multi_session_batches);
+        r.set("max_batch_observed", s.max_batch_observed as u64);
+        r.set("max_inflight_observed", s.max_inflight_observed as u64);
+        r.set("mean_batch_x1000", (self.mean_batch * 1000.0) as u64);
+        r.set("deferred_offloads", s.deferred_offloads);
+        r.set("flushes/full", s.full_flushes);
+        r.set("flushes/deadline", s.deadline_flushes);
+        r.set("flushes/drain", s.drain_flushes);
+        r.set("flushes/family", s.family_flushes);
+        r.set("mixed_family_batches", s.mixed_family_batches);
+        r.set("faults/dropped_replies", s.dropped_replies);
+        r.set("faults/endpoint_errors", s.endpoint_errors);
+        r.set("faults/failover_redispatches", s.failover_redispatches);
+        r.set("faults/degraded_requests", s.degraded_requests);
+        r.set("faults/outage_rounds", s.outage_rounds);
+        r.set("spec_requests", s.spec_requests);
+        r.set("cache/probes", self.cache.probes);
+        r.set("cache/hits", self.cache.hits);
+        r.set("cache/misses", self.cache.misses);
+        r.set("cache/stale", self.cache.stale);
+        r.set("cache/admissions", self.cache.admissions);
+        r.set("cache/refreshed", self.cache.refreshed);
+        r.set("cache/evictions", self.cache.evictions);
+        for t in &self.families {
+            let f = t.family.name();
+            r.set(&format!("family/{f}/sessions"), t.sessions as u64);
+            r.set(&format!("family/{f}/steps"), t.steps);
+            r.set(&format!("family/{f}/cloud_events"), t.cloud_events);
+            r.set(&format!("family/{f}/cache_hits"), t.cache_hits);
+            r.set(&format!("family/{f}/batches"), t.batches);
+        }
+        if let Some(tr) = &self.trace {
+            let multi = self.families.len() > 1;
+            for sp in tr.spans() {
+                let stage = sp.stage.name();
+                r.observe(stage, sp.dur_us as f64);
+                if multi {
+                    if let Some(fam) = ModelFamily::ALL.get(sp.family as usize) {
+                        r.observe(&format!("{stage}/{}", fam.name()), sp.dur_us as f64);
+                    }
+                }
+            }
+            r.set("trace/spans", tr.len() as u64);
+            r.set("trace/dropped_spans", tr.dropped());
+        }
+        r
+    }
 }
 
 enum FlushCause {
@@ -225,6 +322,19 @@ enum FlushCause {
     /// A request of a different model family arrived: seal the pending
     /// batch so no wire batch ever mixes frame layouts.
     Family,
+}
+
+impl FlushCause {
+    /// Stable cause code stamped into flight events and `CloudQueue` span
+    /// tags — indexes [`crate::obs::flight::CAUSE_NAMES`].
+    fn code(&self) -> u32 {
+        match self {
+            FlushCause::Full => 0,
+            FlushCause::Deadline => 1,
+            FlushCause::Drain => 2,
+            FlushCause::Family => 3,
+        }
+    }
 }
 
 struct SessionSlot {
@@ -323,6 +433,17 @@ pub struct Fleet {
     /// Per-family partition plans under `planned_link`, indexed by family
     /// id (zoo runs under an armed fault schedule only).
     cur_plans: Vec<FamilyPlan>,
+    // --- observability (`[trace]`; both None disabled — the scheduler is
+    // then bit-identical to a trace-free build) ---
+    /// Span tracer: virtual-time spans for every pipeline stage, recorded
+    /// from values the scheduler computes anyway (zero PRNG draws, zero
+    /// clock advances).
+    tracer: Option<Tracer>,
+    /// Wedge flight recorder: bounded per-session ring of recent
+    /// scheduler events, dumped by the CLI's exit-1 paths.
+    flight: Option<FlightRecorder>,
+    /// Virtual µs per scheduler round (span time base).
+    round_us: f64,
 }
 
 impl Fleet {
@@ -435,6 +556,17 @@ impl Fleet {
             slot_epoch: vec![0; n],
             cur_profile: None,
             cur_plans: Vec::new(),
+            tracer: if sys.trace.enabled {
+                Some(Tracer::new(sys.trace.max_spans, round_us))
+            } else {
+                None
+            },
+            flight: if sys.trace.enabled {
+                Some(FlightRecorder::new(n, sys.trace.flight_events))
+            } else {
+                None
+            },
+            round_us,
             cfg,
         }
     }
@@ -513,6 +645,10 @@ impl Fleet {
     /// when the session departed the fleet.
     fn advance_episode(&mut self, i: usize) -> bool {
         let next = self.slots[i].episode_idx + 1;
+        if let Some(fl) = self.flight.as_mut() {
+            let remaining = self.slots[i].episodes_target.saturating_sub(next) as u32;
+            fl.record(i, self.cur_round, FlightKind::EpisodeDone, remaining, 0);
+        }
         if next >= self.slots[i].episodes_target {
             // departure hook: seal the final episode and leave the fleet
             let metrics = self.slots[i].state.on_fleet_departure(&self.sys);
@@ -620,6 +756,19 @@ impl Fleet {
             self.round_outage = self.engine.link_out(self.cur_round);
             if self.round_outage {
                 self.stats.outage_rounds += 1;
+                if let Some(tr) = self.tracer.as_mut() {
+                    // one fleet-wide span per outage round on the scheduler
+                    // lane (tid = one past the last session), tagged with
+                    // the schedule window's length in rounds so a timeline
+                    // shows the whole blackout
+                    let tag = self
+                        .engine
+                        .outage_window_at(self.cur_round)
+                        .map_or(0, |(s, e)| (e - s).min(u32::MAX as u64) as u32);
+                    let lane = self.slots.len() as u32;
+                    let ts = tr.base_us(self.cur_round);
+                    tr.record(Stage::Outage, ts, self.round_us as u64, lane, 0, NO_ENDPOINT, tag);
+                }
             }
         }
         queue.push(t, EventKind::Deadline);
@@ -661,6 +810,9 @@ impl Fleet {
         }
         // the arrival hook installed this round's context
         self.slot_epoch[i] = self.link_epoch;
+        if let Some(fl) = self.flight.as_mut() {
+            fl.record(i, t, FlightKind::Arrival, 0, 0);
+        }
         queue.push(t, EventKind::Ready(i));
     }
 
@@ -679,8 +831,9 @@ impl Fleet {
         // the probe runs inside poll, before the admit gate: cache hits
         // keep serving through outage/backpressure windows
         let store = self.store.as_mut();
+        let tracer = self.tracer.as_mut();
         let slot = &mut self.slots[i];
-        let ev = slot.state.poll_with_cache(
+        let ev = slot.state.poll_traced(
             &self.sys,
             slot.edge.as_mut(),
             slot.cloud.as_mut(),
@@ -688,6 +841,7 @@ impl Fleet {
             store,
             round,
             i,
+            tracer,
         );
         match ev {
             StepEvent::Stepped => {
@@ -712,9 +866,13 @@ impl Fleet {
                     self.flush(FlushCause::Family, queue, Some(i));
                 }
                 self.pending_family = req.family;
-                self.batcher.push(FleetRequest { session: i, req });
+                self.batcher.push(FleetRequest { session: i, req, enqueued_round: round });
                 self.stats.max_inflight_observed =
                     self.stats.max_inflight_observed.max(self.batcher.len());
+                if let Some(fl) = self.flight.as_mut() {
+                    let qlen = self.batcher.len() as u32;
+                    fl.record(i, round, FlightKind::Enqueue, qlen, speculative as u32);
+                }
                 if self.batcher.is_full() {
                     self.flush(FlushCause::Full, queue, Some(i));
                 }
@@ -780,6 +938,8 @@ impl Fleet {
         let family_batches = self.family_batches;
         let family_requests = self.family_requests;
         let base_seed = self.base_seed;
+        let trace = self.tracer;
+        let flight = self.flight;
         let sessions: Vec<SessionReport> = self
             .slots
             .into_iter()
@@ -835,6 +995,34 @@ impl Fleet {
             mean_batch,
             cache,
             families,
+            trace,
+            flight,
+        }
+    }
+
+    /// Record the `SpecResolve` span + flight event for one resolved (or
+    /// aborted) speculation. `outcome`: 1 confirmed (dur 0 — the hidden
+    /// round trip was free), 0 rolled back (dur = `rollback_ms`), 2
+    /// aborted by a failed offload (dur 0; `endpoint` = [`NO_ENDPOINT`]).
+    fn record_spec_resolve(
+        &mut self,
+        session: usize,
+        round: u64,
+        fam: ModelFamily,
+        endpoint: u32,
+        outcome: u32,
+    ) {
+        if let Some(tr) = self.tracer.as_mut() {
+            let ts = tr.base_us(round);
+            let dur = if outcome == 0 {
+                (self.sys.pipeline.rollback_ms * 1000.0) as u64
+            } else {
+                0
+            };
+            tr.record(Stage::SpecResolve, ts, dur, session as u32, fam.id(), endpoint, outcome);
+        }
+        if let Some(fl) = self.flight.as_mut() {
+            fl.record(session, round, FlightKind::SpecResolve, outcome, 0);
         }
     }
 
@@ -853,6 +1041,7 @@ impl Fleet {
         }
         let batch = self.batcher.take();
         self.pending_age = 0;
+        let cause_code = cause.code();
         // resumed sessions read their link profile (transfer timing) and
         // plan below — adopt this round's context first (O(batch); a
         // session suspended across fault edges would otherwise resume
@@ -894,6 +1083,21 @@ impl Fleet {
         // exhausted (or the uplink is out) the whole batch degrades to the
         // edge slice — so every suspended session resumes, no matter what.
         let round = self.cur_round;
+        if let Some(tr) = self.tracer.as_mut() {
+            // queue-wait span per request: enqueue round → this flush,
+            // tagged with the flush cause
+            for fr in &batch {
+                let ts = tr.base_us(fr.enqueued_round);
+                let dur = tr.base_us(round).saturating_sub(ts);
+                let sid = fr.session as u32;
+                tr.record(Stage::CloudQueue, ts, dur, sid, fam.id(), NO_ENDPOINT, cause_code);
+            }
+        }
+        if let Some(fl) = self.flight.as_mut() {
+            for fr in &batch {
+                fl.record(fr.session, round, FlightKind::Flush, cause_code, batch.len() as u32);
+            }
+        }
         let n_eps = self.router.workers();
         let mut excluded = vec![false; n_eps];
         let max_tries = 1 + self.engine.max_retries;
@@ -912,11 +1116,33 @@ impl Fleet {
             tries += 1;
             if tries > 1 {
                 self.stats.failover_redispatches += 1;
+                if let Some(fl) = self.flight.as_mut() {
+                    for fr in &batch {
+                        let retry = (tries - 1) as u32;
+                        fl.record(fr.session, round, FlightKind::Failover, retry, endpoint as u32);
+                    }
+                }
             }
             // injected wire faults apply to both transports
             let delay = self.engine.reply_delay_ms(round);
             if self.engine.reply_dropped(round) || delay > self.engine.timeout_ms {
                 self.stats.dropped_replies += 1;
+                if let Some(tr) = self.tracer.as_mut() {
+                    // every suspended session waits out the timeout on the
+                    // endpoint that lost the reply (tag = attempt number)
+                    let ts = tr.base_us(round);
+                    let dur = (timeout * 1000.0) as u64;
+                    for fr in &batch {
+                        let (sid, ep) = (fr.session as u32, endpoint as u32);
+                        tr.record(Stage::Failover, ts, dur, sid, fam.id(), ep, tries as u32);
+                    }
+                }
+                if let Some(fl) = self.flight.as_mut() {
+                    for fr in &batch {
+                        let ep = endpoint as u32;
+                        fl.record(fr.session, round, FlightKind::DropReply, ep, tries as u32);
+                    }
+                }
                 for fr in &batch {
                     // speculative sessions never stalled on this reply
                     if !fr.req.speculative {
@@ -947,10 +1173,18 @@ impl Fleet {
                             // the session kept stepping: an in-timeout delay
                             // is invisible to it, the reply just resolves the
                             // provisional prefix now
-                            slot.state.resolve_speculation(&self.sys, out, us);
+                            let ok = slot.state.resolve_speculation(&self.sys, out, us);
+                            let ep = endpoint as u32;
+                            self.record_spec_resolve(fr.session, round, fam, ep, ok as u32);
                         } else {
                             if delay > 0.0 {
                                 slot.state.charge_delay(delay);
+                                if let Some(tr) = self.tracer.as_mut() {
+                                    let ts = tr.base_us(round);
+                                    let dur = (delay * 1000.0) as u64;
+                                    let (sid, ep) = (fr.session as u32, endpoint as u32);
+                                    tr.record(Stage::Reply, ts, dur, sid, fam.id(), ep, 0);
+                                }
                             }
                             slot.state.complete_cloud(&self.sys, out, us);
                         }
@@ -972,6 +1206,21 @@ impl Fleet {
                             )
                         })
                         .collect();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        // batch-level wire span on the scheduler lane: the
+                        // per-session virtual wire time is traced in the
+                        // driver; this marks the RPC itself with the frame
+                        // bytes actually sent (dur 0 — wall time would
+                        // break byte-identical replay)
+                        let bytes = if fam == ModelFamily::Surrogate {
+                            crate::net::proto::batch_infer_frame_len(items.len())
+                        } else {
+                            crate::net::proto::zoo_batch_infer_frame_len(items.len())
+                        };
+                        let lane = self.slots.len() as u32;
+                        let (ts, tag) = (tr.base_us(round), bytes.min(u32::MAX as usize) as u32);
+                        tr.record(Stage::Wire, ts, 0, lane, fam.id(), endpoint as u32, tag);
+                    }
                     let t0 = Instant::now();
                     // the surrogate family keeps the original batch frames
                     // (bit-identical wire traffic with [models] off); zoo
@@ -1001,10 +1250,19 @@ impl Fleet {
                                 let speculative = fr.map_or(false, |fr| fr.req.speculative);
                                 let slot = &mut self.slots[sid as usize];
                                 if speculative {
-                                    slot.state.resolve_speculation(&self.sys, out, per_us);
+                                    let ok =
+                                        slot.state.resolve_speculation(&self.sys, out, per_us);
+                                    let (s, ep) = (sid as usize, endpoint as u32);
+                                    self.record_spec_resolve(s, round, fam, ep, ok as u32);
                                 } else {
                                     if delay > 0.0 {
                                         slot.state.charge_delay(delay);
+                                        if let Some(tr) = self.tracer.as_mut() {
+                                            let ts = tr.base_us(round);
+                                            let dur = (delay * 1000.0) as u64;
+                                            let ep = endpoint as u32;
+                                            tr.record(Stage::Reply, ts, dur, sid, fam.id(), ep, 0);
+                                        }
                                     }
                                     slot.state.complete_cloud(&self.sys, out, per_us);
                                 }
@@ -1041,12 +1299,32 @@ impl Fleet {
             // dispatch was even possible (outage / no live endpoint) the
             // edge still waits one timeout before giving up on the reply
             let final_wait = if timeouts_charged == 0 { timeout } else { 0.0 };
+            if let Some(tr) = self.tracer.as_mut() {
+                // endpoint-less failover span: the final degraded wait
+                // before every session re-serves from its edge slice
+                let ts = tr.base_us(round);
+                let dur = (final_wait * 1000.0) as u64;
+                for fr in &batch {
+                    let sid = fr.session as u32;
+                    tr.record(Stage::Failover, ts, dur, sid, fam.id(), NO_ENDPOINT, tries as u32);
+                }
+            }
+            if let Some(fl) = self.flight.as_mut() {
+                for fr in &batch {
+                    if outage {
+                        fl.record(fr.session, round, FlightKind::Outage, 0, 0);
+                    }
+                    let sz = batch.len() as u32;
+                    fl.record(fr.session, round, FlightKind::Degraded, cause_code, sz);
+                }
+            }
             for fr in &batch {
                 let slot = &mut self.slots[fr.session];
                 if fr.req.speculative {
                     // nothing to re-serve: the provisional chunk already
                     // covered the step, the lost reply just counts
                     slot.state.abort_speculation();
+                    self.record_spec_resolve(fr.session, round, fam, NO_ENDPOINT, 2);
                 } else {
                     slot.state.fail_cloud(
                         &self.sys,

@@ -95,3 +95,21 @@ fn pipeline_sections_ship_disabled() {
         assert_eq!(cfg.pipeline, defaults, "{path}: shipped knobs must match the defaults");
     }
 }
+
+#[test]
+fn trace_sections_ship_disabled() {
+    // every preset ships [trace] off with the default knobs: a disabled
+    // trace constructs no tracer/recorder and serving is bit-identical
+    // to a trace-free build (pinned in rust/tests/obs_trace.rs)
+    let defaults = rapid::config::SystemConfig::default().trace;
+    for path in [
+        "configs/libero.toml",
+        "configs/realworld.toml",
+        "configs/stress_noise.toml",
+        "configs/chaos.toml",
+    ] {
+        let cfg = load(path);
+        assert!(!cfg.trace.enabled, "{path}: [trace] must ship disabled");
+        assert_eq!(cfg.trace, defaults, "{path}: shipped knobs must match the defaults");
+    }
+}

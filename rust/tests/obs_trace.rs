@@ -1,0 +1,295 @@
+//! Differential conformance suite for `[trace]` — the deterministic
+//! span tracer, metrics registry, and wedge flight recorder.
+//!
+//! Three halves:
+//!
+//! * **Disabled ⇒ bit-identity.** A `[trace]` section that is absent or
+//!   disabled (whatever the other knobs say) must leave the scheduler
+//!   *exactly* the PR 7 event loop — not just totals, but per-episode
+//!   trajectories, flush causes, cache counters and fault-engine draws —
+//!   across every serve path: plain fleets, the reuse cache, the
+//!   chaos/failover schedule, the model zoo, the pipeline, and dynamic
+//!   arrivals.
+//! * **Enabled ⇒ still bit-identity, plus artifacts.** Tracing records
+//!   spans but draws nothing and never advances the clock, so a traced
+//!   fleet is bit-identical to the untraced one, and two same-seed
+//!   traced runs emit byte-identical Chrome JSON / JSONL / registry
+//!   dumps.
+//! * **The wedge postmortem.** A fault schedule that kills every
+//!   endpoint mid-dispatch with retries exhausted must leave a flight
+//!   recorder that names the stuck session, its recent events, and the
+//!   pending batch's flush cause.
+
+use rapid::config::{FaultsConfig, PolicyKind, SystemConfig};
+use rapid::faults::{FaultEngine, FaultPlan};
+use rapid::obs::{demo, FlightKind, Stage};
+use rapid::robot::TaskKind;
+use rapid::serve::{Fleet, FleetResult};
+
+/// Full-strength bit-identity: scheduler counters, flush causes, router
+/// spread, cache counters, speculation counters, and exact per-episode
+/// trajectory columns.
+fn assert_bit_identical(a: &FleetResult, b: &FleetResult, tag: &str) {
+    assert_eq!(a.stats.rounds, b.stats.rounds, "{tag}: rounds");
+    assert_eq!(a.stats.batches, b.stats.batches, "{tag}: batches");
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests, "{tag}: batched requests");
+    assert_eq!(a.stats.multi_session_batches, b.stats.multi_session_batches, "{tag}: multi");
+    assert_eq!(a.stats.full_flushes, b.stats.full_flushes, "{tag}: full flushes");
+    assert_eq!(a.stats.deadline_flushes, b.stats.deadline_flushes, "{tag}: deadline flushes");
+    assert_eq!(a.stats.drain_flushes, b.stats.drain_flushes, "{tag}: drain flushes");
+    assert_eq!(a.stats.family_flushes, b.stats.family_flushes, "{tag}: family flushes");
+    assert_eq!(a.stats.deferred_offloads, b.stats.deferred_offloads, "{tag}: deferred");
+    assert_eq!(a.stats.dropped_replies, b.stats.dropped_replies, "{tag}: dropped");
+    assert_eq!(a.stats.degraded_requests, b.stats.degraded_requests, "{tag}: degraded");
+    assert_eq!(a.stats.failover_redispatches, b.stats.failover_redispatches, "{tag}: failover");
+    assert_eq!(a.stats.outage_rounds, b.stats.outage_rounds, "{tag}: outage rounds");
+    assert_eq!(a.stats.spec_requests, b.stats.spec_requests, "{tag}: spec requests");
+    assert_eq!(a.endpoint_dispatches, b.endpoint_dispatches, "{tag}: router spread");
+    assert_eq!(a.mean_batch, b.mean_batch, "{tag}: mean batch");
+    assert_eq!(a.cache.hits, b.cache.hits, "{tag}: cache hits");
+    assert_eq!(a.cache.probes, b.cache.probes, "{tag}: cache probes");
+    assert_eq!(a.cache.evictions, b.cache.evictions, "{tag}: cache evictions");
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{tag}: session count");
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        assert_eq!(sa.family, sb.family, "{tag}: family");
+        assert_eq!(sa.arrival_round, sb.arrival_round, "{tag}: arrival round");
+        assert_eq!(sa.departure_round, sb.departure_round, "{tag}: departure round");
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "{tag}: episode count");
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "{tag}: latency columns");
+            assert_eq!(ma.cloud_events, mb.cloud_events, "{tag}: cloud events");
+            assert_eq!(ma.edge_events, mb.edge_events, "{tag}: edge events");
+            assert_eq!(ma.preemptions, mb.preemptions, "{tag}: preemptions");
+            assert_eq!(ma.failovers, mb.failovers, "{tag}: failovers");
+            assert_eq!(ma.cache_hits, mb.cache_hits, "{tag}: cache hits");
+            assert_eq!(ma.overhead_ms, mb.overhead_ms, "{tag}: overhead");
+            assert_eq!(ma.spec_dispatches, mb.spec_dispatches, "{tag}: spec dispatches");
+            assert_eq!(ma.spec_confirms, mb.spec_confirms, "{tag}: spec confirms");
+            assert_eq!(ma.spec_rollbacks, mb.spec_rollbacks, "{tag}: spec rollbacks");
+            assert_eq!(ma.overlap_hidden_ms, mb.overlap_hidden_ms, "{tag}: hidden ms");
+            assert_eq!(ma.rms_error, mb.rms_error, "{tag}: trajectory (rms)");
+            assert_eq!(ma.success, mb.success, "{tag}: success");
+        }
+    }
+}
+
+/// A `[trace]` section that is present — with hostile knobs — but
+/// disabled. Must perturb nothing.
+fn disabled_trace(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.trace.enabled = false;
+    s.trace.max_spans = 0;
+    s.trace.flight_events = 0;
+    s
+}
+
+/// `[trace]` armed with the shipped default knobs.
+fn enabled_trace(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.trace.enabled = true;
+    s
+}
+
+/// The serve paths the differential sweep covers, as (tag, config,
+/// policies) tuples built fresh per call.
+fn paths() -> Vec<(&'static str, SystemConfig, Vec<PolicyKind>)> {
+    let mut plain = SystemConfig::default();
+    plain.fleet.n_sessions = 4;
+
+    let mut cache = SystemConfig::default();
+    cache.fleet.n_sessions = 8;
+    cache.cache.enabled = true;
+
+    let mut chaos = SystemConfig::default();
+    chaos.fleet.n_sessions = 6;
+    chaos.fleet.endpoints = 3;
+    chaos.faults = FaultsConfig::demo();
+
+    let mut zoo = SystemConfig::default();
+    zoo.fleet.n_sessions = 8;
+    zoo.models.enabled = true;
+
+    let mut pipe = SystemConfig::default();
+    pipe.fleet.n_sessions = 6;
+    pipe.pipeline.enabled = true;
+    pipe.pipeline.overlap = true;
+    pipe.pipeline.speculate = true;
+
+    let mut poisson = SystemConfig::default();
+    poisson.fleet.n_sessions = 6;
+    poisson.workload.enabled = true;
+    poisson.workload.arrivals = "poisson".into();
+    poisson.workload.interarrival_rounds = 4.0;
+    poisson.workload.seed = 23;
+
+    vec![
+        ("plain", plain, vec![PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased]),
+        ("cache", cache, vec![PolicyKind::CloudOnly]),
+        ("chaos", chaos, vec![PolicyKind::Rapid, PolicyKind::CloudOnly]),
+        ("zoo", zoo, vec![PolicyKind::CloudOnly]),
+        ("pipeline", pipe, vec![PolicyKind::Rapid, PolicyKind::CloudOnly]),
+        ("poisson", poisson, vec![PolicyKind::Rapid, PolicyKind::CloudOnly]),
+    ]
+}
+
+#[test]
+fn disabled_trace_keeps_every_serve_path_bit_identical() {
+    for (tag, sys, kinds) in paths() {
+        for kind in kinds {
+            let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+            let run = Fleet::local(&disabled_trace(&sys), TaskKind::PickPlace, kind).run();
+            assert_bit_identical(&base, &run, &format!("{tag}/disabled/{kind:?}"));
+            assert!(run.trace.is_none(), "{tag}: disabled trace must record nothing");
+            assert!(run.flight.is_none(), "{tag}: disabled trace must not arm the recorder");
+        }
+    }
+}
+
+#[test]
+fn enabled_trace_is_bit_identical_and_records_spans() {
+    // the zero-draw / zero-clock contract: arming [trace] changes not a
+    // single scheduler decision on any serve path
+    for (tag, sys, kinds) in paths() {
+        for kind in kinds {
+            let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+            let run = Fleet::local(&enabled_trace(&sys), TaskKind::PickPlace, kind).run();
+            assert_bit_identical(&base, &run, &format!("{tag}/enabled/{kind:?}"));
+            let tr = run.trace.as_ref().expect("enabled trace must be harvested");
+            if base.stats.batches > 0 {
+                assert!(!tr.is_empty(), "{tag}/{kind:?}: a batching fleet must record spans");
+                assert!(
+                    tr.count_stage(Stage::CloudQueue) > 0,
+                    "{tag}/{kind:?}: every flushed request owes a CloudQueue span"
+                );
+            }
+            assert!(run.flight.is_some(), "{tag}: enabled trace arms the recorder");
+        }
+    }
+}
+
+#[test]
+fn traced_chaos_run_replays_byte_identical_artifacts() {
+    // the trace is itself a deterministic artifact: two same-seed runs
+    // under the demo fault schedule emit identical bytes for all three
+    // export formats
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    let sys = enabled_trace(&sys);
+    let a = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    let b = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    let (ta, tb) = (a.trace.as_ref().unwrap(), b.trace.as_ref().unwrap());
+    assert!(ta.len() > 0, "the chaos fleet must record spans");
+    assert_eq!(ta.to_chrome_json(), tb.to_chrome_json(), "chrome JSON must replay exactly");
+    assert_eq!(ta.to_jsonl(), tb.to_jsonl(), "JSONL must replay exactly");
+    assert_eq!(a.registry().to_json(), b.registry().to_json(), "registry must replay exactly");
+    // chaos exercises the fault stages, not just the happy path
+    assert!(ta.count_stage(Stage::Failover) > 0, "demo schedule must record failovers");
+    assert!(ta.count_stage(Stage::Outage) > 0, "demo schedule must record outage rounds");
+}
+
+#[test]
+fn trace_artifacts_parse_and_hide_the_endpoint_sentinel() {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.cache.enabled = true;
+    let res = Fleet::local(&enabled_trace(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    let tr = res.trace.as_ref().unwrap();
+    let doc = tr.to_chrome_json();
+    let v = rapid::config::json::parse_json(&doc).expect("chrome trace JSON must parse");
+    let events = v.get("traceEvents").and_then(|e| e.as_list()).expect("traceEvents array");
+    assert_eq!(events.len(), tr.len(), "one event per span");
+    for line in tr.to_jsonl().lines() {
+        rapid::config::json::parse_json(line).expect("every JSONL line parses");
+    }
+    assert!(!doc.contains("4294967295"), "NO_ENDPOINT must serialize as -1");
+}
+
+#[test]
+fn forced_wedge_dumps_a_usable_flight_postmortem() {
+    // the satellite pin: kill every endpoint mid-dispatch (one crashed
+    // for good, the survivor dropping every reply) with retries
+    // exhausted — the fleet degrades instead of wedging, and the flight
+    // recorder must name the stuck session, its event tail, and the
+    // pending batch's flush cause
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 4;
+    sys.fleet.endpoints = 2;
+    sys.trace.enabled = true;
+    let plan = FaultPlan::none().crash(1, 0, u64::MAX).drop_replies(0, u64::MAX, 1.0);
+    let engine = FaultEngine::new(plan, sys.episode.seed, 250.0, 0);
+    let res =
+        Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine).run();
+    assert!(res.stats.degraded_requests > 0, "the schedule must force degraded dispatches");
+
+    let fl = res.flight.as_ref().expect("enabled trace arms the recorder");
+    let suspect = fl.suspect().expect("a degraded fleet names a suspect");
+    let tail = fl.tail(suspect);
+    assert!(!tail.is_empty(), "the suspect session has recorded events");
+    assert!(
+        tail.iter().any(|e| e.kind == FlightKind::Degraded),
+        "the suspect's tail shows the degraded dispatch"
+    );
+    let report = fl.report();
+    assert!(report.contains(&format!("session {suspect} stuck")), "{report}");
+    assert!(report.contains("cause"), "report names the pending batch's flush cause:\n{report}");
+    assert!(report.contains("request(s)"), "report names the pending batch size:\n{report}");
+    assert!(report.contains("all endpoints exhausted"), "{report}");
+
+    // the postmortem is still a deterministic artifact
+    let engine2 = FaultPlan::none().crash(1, 0, u64::MAX).drop_replies(0, u64::MAX, 1.0);
+    let engine2 = FaultEngine::new(engine2, sys.episode.seed, 250.0, 0);
+    let res2 =
+        Fleet::local_with_faults(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly, engine2).run();
+    assert_eq!(res2.flight.as_ref().unwrap().report(), report, "postmortem replays exactly");
+}
+
+#[test]
+fn trace_demo_covers_every_stage_kind_with_byte_identical_artifacts() {
+    // what the trace-smoke CI step pins, exercised hermetically: the
+    // two-fleet demo produces at least one span of every stage kind and
+    // replays byte-identically
+    let sys = SystemConfig::default();
+    let a = demo::run_trace_demo(&sys, 6);
+    let missing = demo::missing_stages(&a.stage_counts);
+    assert!(missing.is_empty(), "demo missed stage kinds: {missing:?}");
+    let v = rapid::config::json::parse_json(&a.chrome_json).expect("demo chrome JSON parses");
+    assert!(
+        !v.get("traceEvents").and_then(|e| e.as_list()).expect("traceEvents").is_empty(),
+        "demo trace is non-empty"
+    );
+    let b = demo::run_trace_demo(&sys, 6);
+    assert_eq!(a.chrome_json, b.chrome_json, "demo chrome JSON replays exactly");
+    assert_eq!(a.jsonl, b.jsonl, "demo JSONL replays exactly");
+    assert_eq!(a.registry.to_json(), b.registry.to_json(), "demo registry replays exactly");
+}
+
+#[test]
+fn registry_carries_per_stage_histograms_and_fleet_counters() {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.cache.enabled = true;
+    let res = Fleet::local(&enabled_trace(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    let reg = res.registry();
+    // counters mirror FleetStats exactly
+    assert_eq!(reg.counter("rounds"), Some(res.stats.rounds));
+    assert_eq!(reg.counter("batches"), Some(res.stats.batches));
+    assert_eq!(reg.counter("cache/probes"), Some(res.cache.probes));
+    assert_eq!(reg.counter("cache/hits"), Some(res.cache.hits));
+    let tr = res.trace.as_ref().unwrap();
+    assert_eq!(reg.counter("trace/spans"), Some(tr.len() as u64));
+    // every recorded stage owns a histogram with the matching count
+    for stage in Stage::ALL {
+        let n = tr.count_stage(stage);
+        match reg.histogram(stage.name()) {
+            Some(h) => assert_eq!(h.count(), n, "{}: histogram count", stage.name()),
+            None => assert_eq!(n, 0, "{}: recorded spans need a histogram", stage.name()),
+        }
+    }
+    // the render includes the histogram table; the JSON parses
+    let rendered = reg.render("fleet counters");
+    assert!(rendered.contains("latency histograms"), "{rendered}");
+    assert!(rendered.contains("cloud_queue"), "{rendered}");
+    rapid::config::json::parse_json(&reg.to_json()).expect("metrics JSON parses");
+}

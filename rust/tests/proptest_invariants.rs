@@ -1165,3 +1165,144 @@ fn prop_disabled_pipeline_is_bit_identical() {
         Ok(())
     });
 }
+
+/// Invariant #28 (obs): histogram quantiles are monotone in `p`, bounded
+/// by the observed max, and the bucket map is monotone in the sample —
+/// for arbitrary sample streams including zeros, negatives (clamped) and
+/// huge outliers.
+#[test]
+fn prop_histogram_quantiles_monotone() {
+    use rapid::obs::hist::{bucket_index, LogHistogram};
+    seeded_forall!("hist_monotone", 200, |rng: &mut Pcg32| {
+        let mut h = LogHistogram::new();
+        let n = 1 + rng.below(400) as usize;
+        let mut top = 0.0f64;
+        for _ in 0..n {
+            let v = match rng.below(8) {
+                0 => 0.0,
+                1 => -rng.range(0.0, 100.0), // clamps to bucket 0
+                2 => rng.range(1e9, 1e15),
+                _ => rng.range(0.0, 1e6),
+            };
+            h.insert(v);
+            top = top.max(v);
+        }
+        if h.count() != n as u64 {
+            return Err(format!("count {} != {n}", h.count()));
+        }
+        let mut prev = -1.0;
+        for i in 0..=20 {
+            let q = h.quantile(i as f64 / 20.0);
+            if q < prev {
+                return Err(format!("quantile not monotone at p={}: {q} < {prev}", i as f64 / 20.0));
+            }
+            if q > h.max() {
+                return Err(format!("quantile {q} exceeds max {}", h.max()));
+            }
+            prev = q;
+        }
+        if (h.max() - top).abs() > 0.0 {
+            return Err(format!("max {} != observed {top}", h.max()));
+        }
+        // bucket map is monotone: a larger sample never lands lower
+        let (a, b) = (rng.range(0.0, 1e9), rng.range(0.0, 1e9));
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        if bucket_index(lo) > bucket_index(hi) {
+            return Err(format!("bucket_index not monotone: {lo} -> {hi}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #29 (obs): histogram merge is *exactly* associative and
+/// commutative — per-shard histograms folded in any order produce
+/// bit-identical registries (no float sum anywhere in the fold).
+#[test]
+fn prop_histogram_merge_associative() {
+    use rapid::obs::LogHistogram;
+    seeded_forall!("hist_merge_assoc", 200, |rng: &mut Pcg32| {
+        let mut parts = [LogHistogram::new(), LogHistogram::new(), LogHistogram::new()];
+        for h in parts.iter_mut() {
+            for _ in 0..rng.below(64) {
+                h.insert(rng.range(0.0, 1e7));
+            }
+        }
+        let [a, b, c] = &parts;
+        let mut ab_c = a.clone();
+        ab_c.merge(b);
+        ab_c.merge(c);
+        let mut bc = b.clone();
+        bc.merge(c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        if ab_c != a_bc {
+            return Err("merge is not associative".to_string());
+        }
+        let mut ba = b.clone();
+        ba.merge(a);
+        let mut ab = a.clone();
+        ab.merge(b);
+        if ab != ba {
+            return Err("merge is not commutative".to_string());
+        }
+        if ab_c.count() != a.count() + b.count() + c.count() {
+            return Err("merged count is not the sum".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #30 (obs): arming `[trace]` — including hostile knob values
+/// like a 1-span cap that drops nearly everything — never perturbs the
+/// scheduler: a traced fleet is bit-identical to the untraced one for
+/// arbitrary fleet shapes, policies, and cache/fault toggles.
+#[test]
+fn prop_traced_fleet_is_bit_identical() {
+    seeded_forall!("trace_identity", 4, |rng: &mut Pcg32| {
+        let mut sys = SystemConfig::default();
+        sys.episode.seed = rng.next_u64();
+        sys.fleet.n_sessions = 2 + rng.below(3) as usize;
+        sys.fleet.max_batch = 1 + rng.below(4) as usize;
+        sys.cache.enabled = rng.chance(0.5);
+        if rng.chance(0.3) {
+            sys.fleet.endpoints = 2;
+            sys.faults = rapid::config::FaultsConfig::demo();
+        }
+        let kinds = [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased];
+        let kind = kinds[rng.below(3) as usize];
+        let baseline = rapid::serve::Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+
+        let mut traced = sys.clone();
+        traced.trace.enabled = true;
+        traced.trace.max_spans = if rng.chance(0.5) { 1 } else { 1 << 16 };
+        traced.trace.flight_events = rng.below(8) as usize;
+        let run = rapid::serve::Fleet::local(&traced, TaskKind::PickPlace, kind).run();
+
+        if baseline.stats.rounds != run.stats.rounds
+            || baseline.stats.batches != run.stats.batches
+            || baseline.stats.batched_requests != run.stats.batched_requests
+            || baseline.stats.dropped_replies != run.stats.dropped_replies
+            || baseline.stats.degraded_requests != run.stats.degraded_requests
+            || baseline.endpoint_dispatches != run.endpoint_dispatches
+            || baseline.cache.hits != run.cache.hits
+        {
+            return Err(format!("scheduler stats differ: {:?} vs {:?}", baseline.stats, run.stats));
+        }
+        if run.trace.is_none() {
+            return Err("enabled trace was not harvested".to_string());
+        }
+        for (sa, sb) in baseline.sessions.iter().zip(run.sessions.iter()) {
+            for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+                if ma.latency_columns() != mb.latency_columns()
+                    || ma.cloud_events != mb.cloud_events
+                    || ma.failovers != mb.failovers
+                    || ma.cache_hits != mb.cache_hits
+                    || ma.rms_error != mb.rms_error
+                {
+                    return Err(format!("session {} diverged under tracing", sa.session));
+                }
+            }
+        }
+        Ok(())
+    });
+}

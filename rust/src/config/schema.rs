@@ -481,6 +481,117 @@ impl Default for TraceConfig {
     }
 }
 
+/// Multi-factor placement (`policy::planner::plan_with`): fold device
+/// budgets and endpoint state into the partition score. With
+/// `enabled = false` (the default) the planner runs the single-factor
+/// link-cost argmin (unlimited budget, nominal endpoint) and produces
+/// bit-identical plans — the same zero-perturbation contract as every
+/// other gate. Enabled, the device class filters partition points the
+/// edge cannot host (filtered-to-empty degrades to edge-only serving,
+/// never a wedge), and the least-loaded compatible endpoint's queue
+/// depth and GPU capacity scale the cloud term so a contended endpoint
+/// pushes the split deeper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementConfig {
+    pub enabled: bool,
+    /// Edge device class (`cloudlet` | `agx` | `nx` | `lite`); selects a
+    /// built-in [`crate::policy::planner::DeviceBudget`]. Unknown names
+    /// fall back to `cloudlet` (unlimited).
+    pub device_class: String,
+    /// Override the class's edge memory budget (GB); 0 keeps the class
+    /// value.
+    pub max_edge_gb: f64,
+    /// Override the class's per-offload edge-prefix budget (ms); 0 keeps
+    /// the class value.
+    pub prefix_ms_budget: f64,
+    /// Cost weight per queued request on the target endpoint (0 ignores
+    /// queue depth — capacity alone still applies).
+    pub queue_weight: f64,
+    /// Relative GPU capacity of cloud endpoints (1.0 = the nominal
+    /// device the family catalogs were calibrated on).
+    pub gpu_capacity: f64,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig {
+            enabled: false,
+            device_class: "cloudlet".into(),
+            max_edge_gb: 0.0,
+            prefix_ms_budget: 0.0,
+            queue_weight: 0.0,
+            gpu_capacity: 1.0,
+        }
+    }
+}
+
+impl PlacementConfig {
+    /// Resolve the effective device budget: the class catalog entry with
+    /// non-zero overrides applied on top.
+    pub fn budget(&self) -> crate::policy::planner::DeviceBudget {
+        let mut b = crate::policy::planner::DeviceBudget::of(&self.device_class);
+        if self.max_edge_gb > 0.0 {
+            b.mem_gb = self.max_edge_gb;
+        }
+        if self.prefix_ms_budget > 0.0 {
+            b.prefix_ms = self.prefix_ms_budget;
+        }
+        b
+    }
+}
+
+/// Deterministic autoscaling control plane (`serve::fleet`): endpoint
+/// slots spawn and drain in response to the workload engine's open-loop
+/// arrivals, and admission control sheds offloads to edge-only serving
+/// before queues wedge. With `enabled = false` (the default) the fleet
+/// keeps its static endpoint list and is bit-identical to the
+/// autoscale-free scheduler. Enabled, every decision is a pure function
+/// of scheduler counters at round start — zero PRNG draws, zero clock
+/// advances — so scaled runs still replay bit-identically under the
+/// same seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    pub enabled: bool,
+    /// Endpoints active at start and the drain floor (≥ 1).
+    pub min_endpoints: usize,
+    /// Spawn ceiling (remote mode clamps to the connected client count).
+    pub max_endpoints: usize,
+    /// SLO pressure signal: scale up when queued cloud requests exceed
+    /// `slo_queue × active endpoints`.
+    pub slo_queue: usize,
+    /// Consecutive pressured rounds required before a spawn (debounce).
+    pub sustain_rounds: u64,
+    /// Consecutive idle rounds (zero queue, zero outstanding) before the
+    /// newest spawned endpoint drains.
+    pub idle_rounds: u64,
+    /// Rounds after any scale event during which no further scaling
+    /// happens (hysteresis).
+    pub cooldown_rounds: u64,
+    /// Admission shed: gate new offloads to edge-only while queued cloud
+    /// requests ≥ this (0 = never shed).
+    pub shed_queue: usize,
+    /// With the model zoo on, spawned endpoints advertise only the
+    /// family under pressure (per-family pools); off, they advertise
+    /// every family.
+    pub family_pools: bool,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            enabled: false,
+            min_endpoints: 1,
+            max_endpoints: 4,
+            slo_queue: 4,
+            sustain_rounds: 2,
+            idle_rounds: 8,
+            cooldown_rounds: 4,
+            shed_queue: 0,
+            family_pools: false,
+        }
+    }
+}
+
 /// Heterogeneous VLA model zoo (`vla::zoo` + `policy::planner`). With
 /// `enabled = false` (the default) every session serves the original
 /// surrogate family and the serve layer is bit-identical to a zoo-free
@@ -731,6 +842,8 @@ pub struct SystemConfig {
     pub models: ModelsConfig,
     pub pipeline: PipelineConfig,
     pub trace: TraceConfig,
+    pub placement: PlacementConfig,
+    pub autoscale: AutoscaleConfig,
     pub episode: EpisodeConfig,
 }
 
@@ -756,8 +869,34 @@ impl Default for SystemConfig {
             models: ModelsConfig::default(),
             pipeline: PipelineConfig::default(),
             trace: TraceConfig::default(),
+            placement: PlacementConfig::default(),
+            autoscale: AutoscaleConfig::default(),
             episode: EpisodeConfig::default(),
         }
+    }
+}
+
+/// Reject a hostile bandwidth (NaN/∞/≤ 0) at config validation, keeping
+/// the prior (default or previously-sanitized) value. A non-finite link
+/// value used to poison every partition cost to NaN, and the planner's
+/// strict-`<` argmin then silently picked index 0.
+fn sanitize_bw(key: &str, val: f64, prior: f64) -> f64 {
+    if val.is_finite() && val > 0.0 {
+        val
+    } else {
+        eprintln!("[config] {key} = {val} is not a positive finite bandwidth; keeping {prior}");
+        prior
+    }
+}
+
+/// Reject a hostile RTT (NaN/∞/negative) at config validation, keeping
+/// the prior value. Zero is a valid RTT.
+fn sanitize_rtt(key: &str, val: f64, prior: f64) -> f64 {
+    if val.is_finite() && val >= 0.0 {
+        val
+    } else {
+        eprintln!("[config] {key} = {val} is not a finite non-negative RTT; keeping {prior}");
+        prior
     }
 }
 
@@ -789,8 +928,13 @@ impl SystemConfig {
             v.f64_or("scene.occlusion_clarity", self.scene.occlusion_clarity);
         self.scene.occlusion_len = v.usize_or("scene.occlusion_len", self.scene.occlusion_len);
 
-        self.link.rtt_ms = v.f64_or("link.rtt_ms", self.link.rtt_ms);
-        self.link.bw_mbps = v.f64_or("link.bw_mbps", self.link.bw_mbps);
+        self.link.rtt_ms =
+            sanitize_rtt("link.rtt_ms", v.f64_or("link.rtt_ms", self.link.rtt_ms), self.link.rtt_ms);
+        self.link.bw_mbps = sanitize_bw(
+            "link.bw_mbps",
+            v.f64_or("link.bw_mbps", self.link.bw_mbps),
+            self.link.bw_mbps,
+        );
         self.link.obs_bytes = v.f64_or("link.obs_bytes", self.link.obs_bytes);
         self.link.chunk_bytes = v.f64_or("link.chunk_bytes", self.link.chunk_bytes);
         self.link.activation_bytes = v.f64_or("link.activation_bytes", self.link.activation_bytes);
@@ -866,8 +1010,16 @@ impl SystemConfig {
         f.crash_end = v.usize_or("faults.crash_end", f.crash_end as usize) as u64;
         f.degrade_start = v.usize_or("faults.degrade_start", f.degrade_start as usize) as u64;
         f.degrade_end = v.usize_or("faults.degrade_end", f.degrade_end as usize) as u64;
-        f.degrade_bw_mbps = v.f64_or("faults.degrade_bw_mbps", f.degrade_bw_mbps);
-        f.degrade_rtt_ms = v.f64_or("faults.degrade_rtt_ms", f.degrade_rtt_ms);
+        f.degrade_bw_mbps = sanitize_bw(
+            "faults.degrade_bw_mbps",
+            v.f64_or("faults.degrade_bw_mbps", f.degrade_bw_mbps),
+            f.degrade_bw_mbps,
+        );
+        f.degrade_rtt_ms = sanitize_rtt(
+            "faults.degrade_rtt_ms",
+            v.f64_or("faults.degrade_rtt_ms", f.degrade_rtt_ms),
+            f.degrade_rtt_ms,
+        );
         f.outage_start = v.usize_or("faults.outage_start", f.outage_start as usize) as u64;
         f.outage_end = v.usize_or("faults.outage_end", f.outage_end as usize) as u64;
         f.drop_prob = v.f64_or("faults.drop_prob", f.drop_prob);
@@ -905,6 +1057,26 @@ impl SystemConfig {
         t.enabled = v.bool_or("trace.enabled", t.enabled);
         t.max_spans = v.usize_or("trace.max_spans", t.max_spans);
         t.flight_events = v.usize_or("trace.flight_events", t.flight_events);
+
+        let pl = &mut self.placement;
+        pl.enabled = v.bool_or("placement.enabled", pl.enabled);
+        pl.device_class = v.str_or("placement.device_class", &pl.device_class).to_string();
+        pl.max_edge_gb = v.f64_or("placement.max_edge_gb", pl.max_edge_gb);
+        pl.prefix_ms_budget = v.f64_or("placement.prefix_ms_budget", pl.prefix_ms_budget);
+        pl.queue_weight = v.f64_or("placement.queue_weight", pl.queue_weight);
+        pl.gpu_capacity = v.f64_or("placement.gpu_capacity", pl.gpu_capacity);
+
+        let a = &mut self.autoscale;
+        a.enabled = v.bool_or("autoscale.enabled", a.enabled);
+        a.min_endpoints = v.usize_or("autoscale.min_endpoints", a.min_endpoints).max(1);
+        a.max_endpoints = v.usize_or("autoscale.max_endpoints", a.max_endpoints);
+        a.slo_queue = v.usize_or("autoscale.slo_queue", a.slo_queue);
+        a.sustain_rounds = v.usize_or("autoscale.sustain_rounds", a.sustain_rounds as usize) as u64;
+        a.idle_rounds = v.usize_or("autoscale.idle_rounds", a.idle_rounds as usize) as u64;
+        a.cooldown_rounds =
+            v.usize_or("autoscale.cooldown_rounds", a.cooldown_rounds as usize) as u64;
+        a.shed_queue = v.usize_or("autoscale.shed_queue", a.shed_queue);
+        a.family_pools = v.bool_or("autoscale.family_pools", a.family_pools);
 
         self.episode.episodes = v.usize_or("episode.episodes", self.episode.episodes);
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
@@ -1167,5 +1339,92 @@ mod tests {
         assert_eq!(PolicyKind::parse("safe"), Some(PolicyKind::VisionBased));
         assert_eq!(PolicyKind::parse("rapid"), Some(PolicyKind::Rapid));
         assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn placement_defaults_inert_and_overlay() {
+        let c = SystemConfig::default();
+        assert!(!c.placement.enabled, "placement must default off (bit-identity)");
+        assert_eq!(c.placement.device_class, "cloudlet");
+        assert_eq!(c.placement.queue_weight, 0.0);
+        assert_eq!(c.placement.gpu_capacity, 1.0);
+        // default budget is unlimited (single-factor plan)
+        assert_eq!(c.placement.budget(), crate::policy::planner::DeviceBudget::UNLIMITED);
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[placement]\nenabled = true\ndevice_class = \"nx\"\nmax_edge_gb = 2.5\n\
+             prefix_ms_budget = 20.0\nqueue_weight = 0.05\ngpu_capacity = 0.5",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.placement.enabled);
+        assert_eq!(c.placement.device_class, "nx");
+        assert_eq!(c.placement.queue_weight, 0.05);
+        assert_eq!(c.placement.gpu_capacity, 0.5);
+        // overrides win over the class catalog entry
+        let b = c.placement.budget();
+        assert_eq!(b.mem_gb, 2.5);
+        assert_eq!(b.prefix_ms, 20.0);
+        // zero overrides keep the class values
+        let mut d = SystemConfig::default();
+        let v = super::super::parse::parse_toml("[placement]\ndevice_class = \"nx\"").unwrap();
+        d.apply_value(&v);
+        assert_eq!(d.placement.budget(), crate::policy::planner::DeviceBudget::of("nx"));
+    }
+
+    #[test]
+    fn autoscale_defaults_inert_and_overlay() {
+        let c = SystemConfig::default();
+        assert!(!c.autoscale.enabled, "autoscale must default off (bit-identity)");
+        assert_eq!(c.autoscale.min_endpoints, 1);
+        assert_eq!(c.autoscale.max_endpoints, 4);
+        assert_eq!(c.autoscale.shed_queue, 0, "shed must default off");
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[autoscale]\nenabled = true\nmin_endpoints = 2\nmax_endpoints = 6\nslo_queue = 3\n\
+             sustain_rounds = 1\nidle_rounds = 4\ncooldown_rounds = 2\nshed_queue = 24\n\
+             family_pools = true",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.autoscale.enabled && c.autoscale.family_pools);
+        assert_eq!(c.autoscale.min_endpoints, 2);
+        assert_eq!(c.autoscale.max_endpoints, 6);
+        assert_eq!(c.autoscale.slo_queue, 3);
+        assert_eq!(c.autoscale.sustain_rounds, 1);
+        assert_eq!(c.autoscale.idle_rounds, 4);
+        assert_eq!(c.autoscale.cooldown_rounds, 2);
+        assert_eq!(c.autoscale.shed_queue, 24);
+        // min_endpoints is clamped to ≥ 1 (a zero floor would wedge)
+        let mut d = SystemConfig::default();
+        let v = super::super::parse::parse_toml("[autoscale]\nmin_endpoints = 0").unwrap();
+        d.apply_value(&v);
+        assert_eq!(d.autoscale.min_endpoints, 1);
+    }
+
+    #[test]
+    fn hostile_link_values_are_sanitized() {
+        // regression: a NaN/∞/≤0 link value made every partition cost NaN
+        // and the planner silently picked index 0; validation now keeps
+        // the prior value instead
+        let mut c = SystemConfig::default();
+        let nominal_bw = c.link.bw_mbps;
+        let nominal_rtt = c.link.rtt_ms;
+        let v = super::super::parse::parse_toml(
+            "[link]\nbw_mbps = nan\nrtt_ms = -5.0\n[faults]\ndegrade_bw_mbps = 0.0\n\
+             degrade_rtt_ms = inf",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert_eq!(c.link.bw_mbps, nominal_bw);
+        assert_eq!(c.link.rtt_ms, nominal_rtt);
+        assert_eq!(c.faults.degrade_bw_mbps, FaultsConfig::default().degrade_bw_mbps);
+        assert_eq!(c.faults.degrade_rtt_ms, FaultsConfig::default().degrade_rtt_ms);
+        // sane values still pass through untouched
+        let mut d = SystemConfig::default();
+        let v = super::super::parse::parse_toml("[link]\nbw_mbps = 55.5\nrtt_ms = 0.0").unwrap();
+        d.apply_value(&v);
+        assert_eq!(d.link.bw_mbps, 55.5);
+        assert_eq!(d.link.rtt_ms, 0.0);
     }
 }

@@ -1,0 +1,271 @@
+//! Autoscaling control-plane experiment: static provisioning vs the
+//! deterministic `[autoscale]` loop, under the composed chaos + open-loop
+//! workload scenario the CLI's `rapid autoscale` runs.
+//!
+//! Four arms share one seed, fault schedule, and arrival process; only
+//! the provisioning policy differs:
+//!
+//! * **static-min** — `[autoscale]` disabled, `fleet.endpoints` pinned to
+//!   the scale floor. The under-provisioned baseline: every burst piles
+//!   onto the same endpoints and queues absorb the overload.
+//! * **static-max** — disabled, endpoints pinned to the scale ceiling.
+//!   The over-provisioned oracle: latency is as good as capacity can
+//!   make it, but every idle round pays for the full fleet.
+//! * **autoscale** — the control loop spawns endpoint slots under
+//!   sustained SLO pressure and drains them after sustained idleness.
+//! * **autoscale+shed** — the loop plus the admission gate: past the
+//!   shed threshold new offloads degrade to the edge slice instead of
+//!   joining a backlog that would wedge the batcher.
+//!
+//! The point the table makes: the autoscale arm tracks static-max
+//! latency while holding mean active endpoints near static-min, and the
+//! shed arm bounds the observed in-flight high-water mark at the cost of
+//! a few deferred offloads. Because the scaler is a pure function of
+//! scheduler counters (no clocks, no PRNG), every arm replays exactly.
+
+use crate::config::{PolicyKind, SystemConfig};
+use crate::robot::TaskKind;
+use crate::serve::Fleet;
+use crate::util::tablefmt::{ms, pct, Table};
+
+/// Policies compared by the autoscale table (the paper's contrast pair:
+/// partitioned RAPID against the offload-everything baseline, which
+/// generates the most cloud pressure and therefore the most scaling).
+pub const POLICIES: [PolicyKind; 2] = [PolicyKind::Rapid, PolicyKind::CloudOnly];
+
+/// Aggregate of one (policy, provisioning-arm) fleet run.
+#[derive(Debug, Clone, Copy)]
+pub struct ArmStats {
+    /// Fleet-aggregate mean total latency per episode.
+    pub lat: f64,
+    /// Fleet task-success rate.
+    pub success: f64,
+    /// Cloud events (wire inferences).
+    pub cloud_events: u64,
+    /// Offloads degraded to the edge slice (backpressure + shed gate).
+    pub deferred: u64,
+    /// Autoscaler spawn / drain events (0 on the static arms).
+    pub scale_up: u64,
+    pub scale_down: u64,
+    /// Ready polls refused cloud admission by the shed gate.
+    pub shed_polls: u64,
+    /// High-water mark of simultaneously active endpoints.
+    pub max_endpoints: usize,
+    /// Endpoints that served at least one dispatch.
+    pub endpoints_used: usize,
+    /// Every episode of every session ran to its full step count.
+    pub completed: bool,
+}
+
+pub struct AutoscaleRow {
+    pub policy: PolicyKind,
+    /// `[autoscale]` disabled, endpoints pinned at the scale floor.
+    pub static_min: ArmStats,
+    /// Disabled, endpoints pinned at the scale ceiling.
+    pub static_max: ArmStats,
+    /// The control loop, admission shed off.
+    pub auto: ArmStats,
+    /// The control loop plus the shed gate.
+    pub auto_shed: ArmStats,
+}
+
+fn arm(sys: &SystemConfig, task: TaskKind, kind: PolicyKind) -> ArmStats {
+    let res = Fleet::local(sys, task, kind).run();
+    let summary = res.summary();
+    let expect = task.seq_len();
+    let completed = res
+        .sessions
+        .iter()
+        .flat_map(|s| s.episodes.iter())
+        .all(|m| m.steps == expect);
+    ArmStats {
+        lat: summary.fleet.total_lat_mean,
+        success: summary.fleet.success_rate,
+        cloud_events: summary.total_cloud_events,
+        deferred: res.stats.deferred_offloads,
+        scale_up: res.stats.scale_up_events,
+        scale_down: res.stats.scale_down_events,
+        shed_polls: res.stats.shed_polls,
+        max_endpoints: res.stats.max_endpoints_observed,
+        endpoints_used: res.endpoint_dispatches.iter().filter(|&&d| d > 0).count(),
+        completed,
+    }
+}
+
+/// Build the four provisioning arms from a base system config. The base
+/// config's `[autoscale]` section supplies the floor/ceiling and loop
+/// knobs; the static arms clear `enabled` so they are the unmodified
+/// scheduler verbatim at a fixed endpoint count. The shed arm keeps the
+/// base `shed_queue` when set and otherwise derives one from `slo_queue`
+/// so the gate actually engages.
+pub fn arms(sys: &SystemConfig) -> [SystemConfig; 4] {
+    let floor = sys.autoscale.min_endpoints.max(1);
+    let ceiling = sys.autoscale.max_endpoints.max(floor);
+    let shed = if sys.autoscale.shed_queue > 0 {
+        sys.autoscale.shed_queue
+    } else {
+        sys.autoscale.slo_queue.max(1) * 2
+    };
+    let mk_static = |endpoints: usize| {
+        let mut s = sys.clone();
+        s.autoscale.enabled = false;
+        s.fleet.endpoints = endpoints;
+        s
+    };
+    let mk_auto = |shed_queue: usize| {
+        let mut s = sys.clone();
+        s.autoscale.enabled = true;
+        s.autoscale.min_endpoints = floor;
+        s.autoscale.max_endpoints = ceiling;
+        s.autoscale.shed_queue = shed_queue;
+        s
+    };
+    [mk_static(floor), mk_static(ceiling), mk_auto(0), mk_auto(shed)]
+}
+
+/// Run the four-arm provisioning comparison for each policy in
+/// [`POLICIES`]. All arms share the caller's seed, fault schedule, and
+/// workload; only provisioning differs.
+pub fn run(sys: &SystemConfig, task: TaskKind) -> (Table, Vec<AutoscaleRow>) {
+    let variants = arms(sys);
+    let floor = sys.autoscale.min_endpoints.max(1);
+    let ceiling = sys.autoscale.max_endpoints.max(floor);
+    let mut rows = Vec::new();
+    for kind in POLICIES {
+        rows.push(AutoscaleRow {
+            policy: kind,
+            static_min: arm(&variants[0], task, kind),
+            static_max: arm(&variants[1], task, kind),
+            auto: arm(&variants[2], task, kind),
+            auto_shed: arm(&variants[3], task, kind),
+        });
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Autoscaling control plane ({} × {} session(s), endpoints {}..{}, slo_queue {}, \
+             sustain {}, idle {}, cooldown {})",
+            task.name(),
+            sys.fleet.n_sessions.max(1),
+            floor,
+            ceiling,
+            sys.autoscale.slo_queue,
+            sys.autoscale.sustain_rounds,
+            sys.autoscale.idle_rounds,
+            sys.autoscale.cooldown_rounds,
+        ),
+        &[
+            "Method",
+            "Static-min",
+            "Static-max",
+            "Autoscale",
+            "+Shed",
+            "Scale (up/down)",
+            "Peak eps",
+            "Shed/Defer",
+            "Success (min->auto)",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.policy.name().to_string(),
+            ms(r.static_min.lat),
+            ms(r.static_max.lat),
+            ms(r.auto.lat),
+            ms(r.auto_shed.lat),
+            format!("{}/{}", r.auto.scale_up, r.auto.scale_down),
+            format!("{}", r.auto.max_endpoints),
+            format!("{}/{}", r.auto_shed.shed_polls, r.auto_shed.deferred),
+            format!("{} -> {}", pct(r.static_min.success), pct(r.auto.success)),
+        ]);
+    }
+    t.footnote(
+        "Static arms run [autoscale] disabled (the unmodified scheduler) at the floor/ceiling \
+         endpoint count. Autoscale spawns a pre-allocated endpoint slot after sustain_rounds of \
+         queue > slo_queue x active and drains the highest idle slot after idle_rounds of \
+         silence; the scaler reads only scheduler counters, so seeded replays are exact. +Shed \
+         additionally degrades new offloads to the edge slice while the queue sits at or above \
+         shed_queue, bounding the in-flight high-water mark.",
+    );
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemConfig {
+        let mut s = SystemConfig::default();
+        s.fleet.n_sessions = 8;
+        s.fleet.max_batch = 16;
+        s.fleet.max_inflight = 32;
+        // one round of deadline batching: a held partial batch is what
+        // the round-start scaler tick reads as backlog
+        s.fleet.batch_deadline_us = 50_000;
+        s.autoscale.min_endpoints = 1;
+        s.autoscale.max_endpoints = 3;
+        s.autoscale.slo_queue = 2;
+        s.autoscale.sustain_rounds = 1;
+        s.autoscale.idle_rounds = 1;
+        s.autoscale.cooldown_rounds = 0;
+        s
+    }
+
+    #[test]
+    fn static_min_arm_is_the_unmodified_scheduler() {
+        // arm 0 must be bit-identical to a plain run of the same config
+        // with [autoscale] left at its shipped default (disabled) and the
+        // endpoint count pinned at the floor — the full differential
+        // acceptance pin lives in rust/tests/autoscale_plane.rs
+        let base = sys();
+        let (_, rows) = run(&base, TaskKind::PickPlace);
+        let mut plain_cfg = base.clone();
+        plain_cfg.autoscale = Default::default();
+        plain_cfg.fleet.endpoints = 1;
+        for kind in POLICIES {
+            let plain = arm(&plain_cfg, TaskKind::PickPlace, kind);
+            let r = rows.iter().find(|r| r.policy == kind).unwrap();
+            assert_eq!(r.static_min.lat, plain.lat, "{:?}", kind);
+            assert_eq!(r.static_min.success, plain.success, "{:?}", kind);
+            assert_eq!(r.static_min.cloud_events, plain.cloud_events, "{:?}", kind);
+            assert_eq!(r.static_min.scale_up, 0, "{:?}", kind);
+            assert_eq!(r.static_min.scale_down, 0, "{:?}", kind);
+        }
+    }
+
+    #[test]
+    fn autoscale_arm_scales_and_completes() {
+        let (_, rows) = run(&sys(), TaskKind::PickPlace);
+        let r = rows.iter().find(|r| r.policy == PolicyKind::CloudOnly).unwrap();
+        assert!(r.auto.completed, "autoscale arm wedged");
+        assert!(r.auto_shed.completed, "shed arm wedged");
+        assert!(r.auto.scale_up > 0, "pressure never spawned an endpoint");
+        assert!(r.auto.scale_down > 0, "idle drain never fired");
+        assert!(r.auto.max_endpoints > 1 && r.auto.max_endpoints <= 3);
+        // the scaler never changes what work is done, only where it runs
+        assert_eq!(r.auto.cloud_events, r.static_min.cloud_events);
+    }
+
+    #[test]
+    fn runs_replay_exactly() {
+        let base = sys();
+        let (_, a) = run(&base, TaskKind::PickPlace);
+        let (_, b) = run(&base, TaskKind::PickPlace);
+        for (ra, rb) in a.iter().zip(b.iter()) {
+            assert_eq!(ra.auto.lat.to_bits(), rb.auto.lat.to_bits());
+            assert_eq!(ra.auto.scale_up, rb.auto.scale_up);
+            assert_eq!(ra.auto.scale_down, rb.auto.scale_down);
+            assert_eq!(ra.auto_shed.shed_polls, rb.auto_shed.shed_polls);
+        }
+    }
+
+    #[test]
+    fn table_renders_all_policies() {
+        let (t, rows) = run(&sys(), TaskKind::PickPlace);
+        assert_eq!(rows.len(), POLICIES.len());
+        let rendered = t.render();
+        for r in &rows {
+            assert!(rendered.contains(r.policy.name().split(' ').next().unwrap()));
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! plus raw data, so benches, examples and the CLI share one code path.
 
 pub mod arrivals;
+pub mod autoscale;
 pub mod degraded;
 pub mod fig2;
 pub mod fig3;

@@ -84,6 +84,18 @@
 //!   configured penalty, with the `[cache]` z-score gate keeping
 //!   anomalous phases sequential. Shipped disabled: the inert stage is
 //!   bit-identical to the sequential scheduler, PRNG draws included.
+//!   The `[placement]`/`[autoscale]` control plane extends both ends:
+//!   **multi-factor placement** scores partition points over (device
+//!   budget, family, link, endpoint state) — a device-class budget
+//!   filters infeasible splits (an emptied catalog degrades to the
+//!   edge-only sentinel plan, never a wedge) and the least-loaded
+//!   endpoint's queue/capacity reweights the cloud term
+//!   (`policy::planner::plan_with`, `serve::router::Router::load_for`)
+//!   — while the **deterministic autoscaler** spawns and LIFO-drains
+//!   pre-allocated endpoint slots from pure round-start counter reads
+//!   (SLO pressure / idle streaks, with hysteresis) and an admission
+//!   shed gates offloads to edge-only before queues can wedge. Both
+//!   ship disabled and bit-identical off; enabled runs replay exactly.
 //! * [`obs`] — the observability layer, config-gated behind `[trace]`:
 //!   a deterministic virtual-time span tracer (Chrome trace-event JSON /
 //!   JSONL export, zero PRNG draws, zero clock advances — traced runs

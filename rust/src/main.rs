@@ -17,6 +17,7 @@
 //! rapid workload [--sessions N] [--task T] [--seed S] [--config file.toml]
 //!             [--arrivals fixed|poisson|bursty|trace] [--trace T] [--interarrival R]
 //! rapid pipeline [--sessions N] [--task T] [--seed S] [--config file.toml]
+//! rapid autoscale [--sessions N] [--task T] [--seed S] [--config file.toml]
 //! rapid info
 //! ```
 //!
@@ -39,6 +40,7 @@ fn main() {
         Some("zoo") => cmd_zoo(&args[1..]),
         Some("workload") => cmd_workload(&args[1..]),
         Some("pipeline") => cmd_pipeline(&args[1..]),
+        Some("autoscale") => cmd_autoscale(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
@@ -60,7 +62,7 @@ fn print_help() {
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
          \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve\n\
-         \x20             |zoo|workload|pipeline|scale|obs|all>\n\
+         \x20             |zoo|workload|pipeline|autoscale|scale|obs|all>\n\
          \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
          \x20             (serve: benchkit timings of the serve layer, written as\n\
          \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
@@ -95,6 +97,11 @@ fn print_help() {
          \x20             (pipelined + speculative execution: prints the active\n\
          \x20              [pipeline] knobs, then the four-arm off/on x spec\n\
          \x20              off/on table for RAPID vs Cloud-Only)\n\
+         \x20 rapid autoscale [--sessions N] [--task T] [--seed S] [--config FILE]\n\
+         \x20             (deterministic autoscaling control plane: composes the\n\
+         \x20              chaos schedule with a Poisson workload and compares\n\
+         \x20              static-min/static-max provisioning against the\n\
+         \x20              [autoscale] loop, with and without admission shed)\n\
          \x20 rapid trace [--sessions N] [--config FILE] [--out trace.json]\n\
          \x20             (deterministic trace demo: two fleets composed to hit\n\
          \x20              every span stage; writes Perfetto-loadable Chrome\n\
@@ -320,6 +327,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         "zoo" => bench_zoo(&sys, &flags, single),
         "workload" => bench_workload(&sys, &flags, single),
         "pipeline" => bench_pipeline(&sys, &flags, single),
+        "autoscale" => bench_autoscale(&sys, &flags, single),
         "scale" => bench_scale(&sys, &flags, single),
         "obs" => bench_obs(&sys, &flags, single),
         other => eprintln!("unknown bench {other}"),
@@ -335,7 +343,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         // default ladder is a deliberate long run; see the help text)
         for name in [
             "tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead",
-            "reuse", "serve", "zoo", "workload", "pipeline", "obs",
+            "reuse", "serve", "zoo", "workload", "pipeline", "autoscale", "obs",
         ] {
             println!("\n### {name}");
             run_one(name, &mut b);
@@ -569,6 +577,93 @@ fn bench_pipeline(sys: &SystemConfig, flags: &Flags, write_json: bool) {
             });
         }
     }
+
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Arm the composed autoscale scenario on top of the active config:
+/// deadline batching (a held partial batch is what the round-start
+/// scaler tick reads as backlog), a Poisson open-loop workload, and —
+/// when the config ships `[autoscale]` disabled — a demo control loop
+/// (floor 1, ceiling 3, tight debounce) so the command always scales.
+fn compose_autoscale(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    if s.fleet.batch_deadline_us == 0 {
+        s.fleet.batch_deadline_us = 50_000;
+    }
+    s.fleet.max_batch = s.fleet.max_batch.max(s.fleet.n_sessions.max(1));
+    s.fleet.max_inflight = s.fleet.max_inflight.max(2 * s.fleet.n_sessions.max(1));
+    if !s.workload.enabled {
+        s.workload.enabled = true;
+        s.workload.arrivals = "poisson".into();
+        s.workload.interarrival_rounds = 3.0;
+    }
+    if !s.autoscale.enabled {
+        s.autoscale.enabled = true;
+        s.autoscale.min_endpoints = 1;
+        s.autoscale.max_endpoints = 3;
+        s.autoscale.slo_queue = 2;
+        s.autoscale.sustain_rounds = 1;
+        s.autoscale.idle_rounds = 1;
+        s.autoscale.cooldown_rounds = 0;
+    }
+    s
+}
+
+/// `rapid bench autoscale`: benchkit timings of the control-plane path —
+/// the static-min scheduler vs the autoscaling fleet for RAPID and
+/// Cloud-Only under the composed Poisson workload, plus the multi-factor
+/// planner hot loop — optionally written as machine-readable JSON
+/// (`--json BENCH_autoscale.json`). The `static` cases double as a perf
+/// guard: the disabled-autoscale fleet must not regress under the new
+/// branches.
+fn bench_autoscale(sys: &SystemConfig, flags: &Flags, write_json: bool) {
+    use rapid::policy::planner;
+    use rapid::robot::TaskKind;
+    use rapid::vla::{FamilyProfile, ModelFamily};
+
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("autoscaling control plane");
+
+    let arms = rapid::experiments::autoscale::arms(&compose_autoscale(sys));
+    let n = sys.fleet.n_sessions.max(1);
+    for (arm_idx, label) in [(0usize, "static_min"), (2usize, "autoscale")] {
+        for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+            let name = format!(
+                "autoscale_fleet/{n}s/{label}/{}",
+                if kind == PolicyKind::Rapid { "rapid" } else { "cloud_only" }
+            );
+            let s = arms[arm_idx].clone();
+            bench.run(&name, || {
+                let res = rapid::serve::Fleet::local(&s, TaskKind::PickPlace, kind).run();
+                std::hint::black_box(res.stats.scale_up_events);
+            });
+        }
+    }
+
+    // multi-factor planner hot loop: one budget-filtered, endpoint-aware
+    // plan per family per call (the replan path a loaded round pays)
+    let budget_nx = planner::DeviceBudget::of("nx");
+    bench.run("planner/plan_with_all_families", || {
+        for (i, fam) in ModelFamily::ALL.into_iter().enumerate() {
+            let load = planner::EndpointLoad {
+                queue_depth: i as u64 * 3,
+                capacity: 1.0,
+                queue_weight: 0.2,
+            };
+            let p = planner::plan_with(&FamilyProfile::of(fam), 200.0, 20.0, budget_nx, load);
+            std::hint::black_box(p.partition_idx);
+        }
+    });
 
     if let Some(path) = flags.get("--json").filter(|_| write_json) {
         match bench.save_json(path) {
@@ -1314,6 +1409,104 @@ fn cmd_pipeline(rest: &[String]) -> i32 {
         eprintln!("FAILED arms: {bad:?}");
         if let Some((arm_idx, kind)) = first_bad {
             dump_flight(&rapid::experiments::pipeline::arms(&sys)[arm_idx], task, kind);
+        }
+        1
+    }
+}
+
+/// `rapid autoscale`: the deterministic control-plane demo — compose the
+/// chaos fault schedule with a Poisson open-loop workload, print the
+/// active `[autoscale]` knobs, then run the four-arm provisioning table
+/// (static-min / static-max / autoscale / autoscale+shed) for RAPID vs
+/// Cloud-Only. Exits non-zero if any arm wedges a session.
+fn cmd_autoscale(rest: &[String]) -> i32 {
+    let flags = Flags(rest);
+    let mut sys = load_sys(&flags);
+    // no explicit config: fall back to the shipped chaos schedule, then
+    // to the built-in demo schedule, so the scaler always faces faults —
+    // and always say which schedule actually ran
+    let explicit_config = flags.get("--config").is_some();
+    if !explicit_config {
+        if let Ok(src) = std::fs::read_to_string("configs/chaos.toml") {
+            match rapid::config::parse::parse_toml(&src) {
+                Ok(v) => {
+                    sys.apply_value(&v);
+                    println!("schedule: configs/chaos.toml");
+                }
+                Err(e) => {
+                    eprintln!("configs/chaos.toml parse error: {e}");
+                    return 2;
+                }
+            }
+        }
+    }
+    if !sys.faults.enabled {
+        sys.faults = rapid::config::FaultsConfig::demo();
+        println!("schedule: built-in demo (active config enables no faults)");
+    } else if explicit_config {
+        println!("schedule: --config");
+    }
+    if let Some(n) = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.n_sessions = n.max(1);
+        sys.workload.n_sessions = n.max(1);
+    }
+    let task = flags
+        .get("--task")
+        .and_then(TaskKind::parse)
+        .unwrap_or(rapid::robot::TaskKind::PickPlace);
+    let sys = compose_autoscale(&sys);
+
+    let a = &sys.autoscale;
+    println!(
+        "autoscale: endpoints {}..{}, slo_queue {}, sustain {}, idle {}, cooldown {}, \
+         shed_queue {}, family_pools {}",
+        a.min_endpoints,
+        a.max_endpoints,
+        a.slo_queue,
+        a.sustain_rounds,
+        a.idle_rounds,
+        a.cooldown_rounds,
+        a.shed_queue,
+        a.family_pools
+    );
+    println!(
+        "workload: {} arrivals over {} session(s), deadline {}us",
+        sys.workload.arrivals,
+        sys.fleet.n_sessions.max(1),
+        sys.fleet.batch_deadline_us
+    );
+
+    let t0 = std::time::Instant::now();
+    let (table, rows) = rapid::experiments::autoscale::run(&sys, task);
+    print!("{}", table.render());
+    let mut bad: Vec<String> = Vec::new();
+    let mut first_bad: Option<(usize, PolicyKind)> = None;
+    for r in &rows {
+        for (arm_idx, label, a) in [
+            (0usize, "static_min", &r.static_min),
+            (1, "static_max", &r.static_max),
+            (2, "autoscale", &r.auto),
+            (3, "autoscale+shed", &r.auto_shed),
+        ] {
+            if !a.completed {
+                bad.push(format!("{}/{label} wedged", r.policy.name()));
+                first_bad.get_or_insert((arm_idx, r.policy));
+            }
+        }
+    }
+    if bad.is_empty() {
+        let (up, down): (u64, u64) =
+            rows.iter().fold((0, 0), |(u, d), r| (u + r.auto.scale_up, d + r.auto.scale_down));
+        println!(
+            "all arms completed (zero wedged sessions); {up} spawn(s) / {down} drain(s) across \
+             the autoscale arms; wall {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        0
+    } else {
+        eprintln!("WEDGED arms: {bad:?}");
+        if let Some((arm_idx, kind)) = first_bad {
+            dump_flight(&rapid::experiments::autoscale::arms(&sys)[arm_idx], task, kind);
         }
         1
     }

@@ -40,6 +40,15 @@ pub enum FlightKind {
     SpecResolve,
     /// Session finished an episode (`a` = episodes remaining).
     EpisodeDone,
+    /// Autoscaler spawned an endpoint (fleet-level; `a` = endpoint id,
+    /// `b` = active endpoints after the spawn).
+    ScaleUp,
+    /// Autoscaler drained an endpoint (fleet-level; `a` = endpoint id,
+    /// `b` = active endpoints after the drain).
+    ScaleDown,
+    /// Admission control shed an offload to edge-only serving (`a` =
+    /// queued cloud requests at the gate).
+    Shed,
 }
 
 impl FlightKind {
@@ -55,6 +64,9 @@ impl FlightKind {
             FlightKind::Outage => "outage",
             FlightKind::SpecResolve => "spec_resolve",
             FlightKind::EpisodeDone => "episode_done",
+            FlightKind::ScaleUp => "scale_up",
+            FlightKind::ScaleDown => "scale_down",
+            FlightKind::Shed => "shed",
         }
     }
 }
@@ -77,6 +89,9 @@ pub struct FlightEvent {
 #[derive(Debug, Clone)]
 pub struct FlightRecorder {
     rings: Vec<RingBuf<FlightEvent>>,
+    /// Fleet-level ring: control-plane events (autoscale spawns/drains,
+    /// admission sheds) that belong to the scheduler, not any session.
+    fleet_ring: RingBuf<FlightEvent>,
     /// (session, round, cause code, batch size) of the newest `Degraded`.
     last_degraded: Option<(usize, u64, u32, u32)>,
 }
@@ -86,6 +101,7 @@ impl FlightRecorder {
         let cap = events_per_session.max(1);
         FlightRecorder {
             rings: (0..n_sessions.max(1)).map(|_| RingBuf::new(cap)).collect(),
+            fleet_ring: RingBuf::new(cap),
             last_degraded: None,
         }
     }
@@ -118,9 +134,19 @@ impl FlightRecorder {
             .map(|(_, i)| i)
     }
 
+    /// Record one fleet-level control-plane event (autoscale/shed).
+    pub fn record_fleet(&mut self, round: u64, kind: FlightKind, a: u32, b: u32) {
+        self.fleet_ring.push(FlightEvent { round, kind, a, b });
+    }
+
     /// Event tail (oldest → newest) for one session.
     pub fn tail(&self, session: usize) -> Vec<FlightEvent> {
         self.rings.get(session).map(|r| r.iter().collect()).unwrap_or_default()
+    }
+
+    /// Fleet-level control-plane event tail (oldest → newest).
+    pub fn fleet_tail(&self) -> Vec<FlightEvent> {
+        self.fleet_ring.iter().collect()
     }
 
     /// Human-readable postmortem: the suspect session, its last-N events,
@@ -157,6 +183,19 @@ impl FlightRecorder {
                 e.a,
                 e.b
             ));
+        }
+        let fleet = self.fleet_tail();
+        if !fleet.is_empty() {
+            out.push_str(&format!("last {} control-plane event(s):\n", fleet.len()));
+            for e in &fleet {
+                out.push_str(&format!(
+                    "  round {:<6} {:<13} a={} b={}\n",
+                    e.round,
+                    e.kind.name(),
+                    e.a,
+                    e.b
+                ));
+            }
         }
         out
     }
@@ -209,5 +248,29 @@ mod tests {
         let fr = FlightRecorder::new(2, 4);
         assert_eq!(fr.suspect(), None);
         assert!(fr.report().contains("no events"));
+    }
+
+    #[test]
+    fn fleet_ring_captures_control_plane_events() {
+        let mut fr = FlightRecorder::new(2, 4);
+        fr.record(0, 3, FlightKind::Enqueue, 1, 0);
+        fr.record_fleet(5, FlightKind::ScaleUp, 2, 3);
+        fr.record_fleet(9, FlightKind::Shed, 17, 0);
+        fr.record_fleet(20, FlightKind::ScaleDown, 2, 2);
+        let tail = fr.fleet_tail();
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[0].kind, FlightKind::ScaleUp);
+        assert_eq!(tail[2].kind, FlightKind::ScaleDown);
+        // fleet events never shift the per-session suspect
+        assert_eq!(fr.suspect(), Some(0));
+        let rep = fr.report();
+        assert!(rep.contains("control-plane"), "{rep}");
+        assert!(rep.contains("scale_up"), "{rep}");
+        assert!(rep.contains("shed"), "{rep}");
+        // the ring is bounded like session rings
+        for r in 0..10 {
+            fr.record_fleet(100 + r, FlightKind::ScaleUp, 0, 0);
+        }
+        assert_eq!(fr.fleet_tail().len(), 4);
     }
 }

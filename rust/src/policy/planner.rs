@@ -17,8 +17,37 @@
 //! state, identical output for identical (family, link) inputs, which is
 //! what lets the fleet replan per round under fault-injected link
 //! profiles without perturbing determinism.
+//!
+//! # Multi-factor placement (`[placement]`)
+//!
+//! Link cost alone contradicts two realities of edge-cloud VLA serving
+//! (RoboECC direction): the edge device has finite memory and battery,
+//! and the cloud endpoint the router will pick has finite GPU capacity
+//! and a queue. [`plan_with`] extends the single-factor score:
+//!
+//! * a [`DeviceBudget`] (per device class) **filters** partition points
+//!   the device cannot host — too many edge-resident GB, or a per-offload
+//!   edge prefix the battery budget cannot sustain;
+//! * an [`EndpointLoad`] (capacity + queue depth of the least-loaded
+//!   compatible endpoint) **scales** the cloud term, so a contended or
+//!   weak endpoint pushes the split deeper (more edge, less cloud) —
+//!   the planner's split choice and the router's least-loaded choice
+//!   stop contradicting each other.
+//!
+//! With the budget unlimited and the endpoint nominal the multi-factor
+//! score reduces *bit-identically* to the single-factor plan (`x * 1.0`
+//! and `min(x, ∞)` are exact in IEEE float) — pinned by proptest.
+//!
+//! A catalog filtered to empty degrades deterministically to the
+//! [`edge_only_plan`] sentinel: the session serves every step from its
+//! resident edge slice and never offloads (no wedge, no panic).
 
 use crate::vla::profile::{FamilyProfile, ModelFamily, PartitionPoint};
+
+/// `partition_idx` sentinel of the edge-only degrade plan: no catalog
+/// entry was feasible (or the catalog was empty), so the session serves
+/// from its edge slice and never offloads.
+pub const EDGE_ONLY_SPLIT: usize = usize::MAX;
 
 /// The planner's verdict for one session: everything the episode driver
 /// needs to serve a family at its chosen split.
@@ -44,8 +73,88 @@ pub struct FamilyPlan {
     pub full_cloud_ms: f64,
     /// Edge-resident GB at the chosen split (reporting).
     pub edge_gb: f64,
-    /// Index into the family's partition catalog.
+    /// Index into the family's partition catalog ([`EDGE_ONLY_SPLIT`]
+    /// when the budget filtered the catalog to empty).
     pub partition_idx: usize,
+}
+
+impl FamilyPlan {
+    /// Did the planner degrade to the no-offload sentinel?
+    pub fn is_edge_only(&self) -> bool {
+        self.partition_idx == EDGE_ONLY_SPLIT
+    }
+}
+
+/// Per-device-class placement budget: what the edge device can host.
+/// Fields are upper bounds a partition point must satisfy to be feasible;
+/// `INFINITY` disables that bound.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceBudget {
+    /// Edge-resident parameter memory the device can hold (GB).
+    pub mem_gb: f64,
+    /// Battery-derived cap on per-offload edge prefix compute (ms): a
+    /// power-constrained device cannot sustain heavy split-point
+    /// activations on every offload.
+    pub prefix_ms: f64,
+}
+
+impl DeviceBudget {
+    /// No budget: every catalog point is feasible (single-factor plan).
+    pub const UNLIMITED: DeviceBudget =
+        DeviceBudget { mem_gb: f64::INFINITY, prefix_ms: f64::INFINITY };
+
+    /// Built-in device-class catalog (RoboECC-style anchors). Unknown
+    /// class names fall back to `cloudlet` (unlimited), so a typo can
+    /// never brick a fleet.
+    ///
+    /// * `cloudlet` — wall-powered edge server: no budget.
+    /// * `agx`      — embedded GPU module: 5 GB / 70 ms (excludes only
+    ///   the deepest diffusion split).
+    /// * `nx`       — mid-tier module: 3.5 GB / 30 ms (shallow + mid
+    ///   splits only).
+    /// * `lite`     — battery CPU-only robot: 2 GB / 10 ms (only the
+    ///   quantized family's shallow split fits; every other family
+    ///   degrades to edge-only).
+    pub fn of(class: &str) -> DeviceBudget {
+        match class {
+            "agx" => DeviceBudget { mem_gb: 5.0, prefix_ms: 70.0 },
+            "nx" => DeviceBudget { mem_gb: 3.5, prefix_ms: 30.0 },
+            "lite" => DeviceBudget { mem_gb: 2.0, prefix_ms: 10.0 },
+            _ => DeviceBudget::UNLIMITED,
+        }
+    }
+
+    /// Is `p` inside this budget?
+    pub fn admits(&self, p: &PartitionPoint) -> bool {
+        p.edge_gb <= self.mem_gb && p.edge_prefix_ms <= self.prefix_ms
+    }
+}
+
+/// Endpoint-state factor folded into the cloud term of the score: the
+/// queue depth and GPU capacity of the least-loaded endpoint that could
+/// serve this family (the one the router would pick).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EndpointLoad {
+    /// Requests queued ahead of this offload on the best endpoint.
+    pub queue_depth: u64,
+    /// Relative GPU capacity of that endpoint (1.0 = the nominal device
+    /// the catalog's `cloud_compute_ms` was calibrated on).
+    pub capacity: f64,
+    /// Cost weight per queued request (config `placement.queue_weight`;
+    /// 0 ignores the queue).
+    pub queue_weight: f64,
+}
+
+impl EndpointLoad {
+    /// Idle nominal endpoint: multiplier exactly 1.0 (single-factor plan).
+    pub const NOMINAL: EndpointLoad =
+        EndpointLoad { queue_depth: 0, capacity: 1.0, queue_weight: 0.0 };
+
+    /// Multiplier on the cloud term: queued work inflates it, a stronger
+    /// GPU deflates it. Exactly 1.0 for [`EndpointLoad::NOMINAL`].
+    pub fn multiplier(&self) -> f64 {
+        (1.0 + self.queue_depth as f64 * self.queue_weight) / self.capacity.max(1e-6)
+    }
 }
 
 /// Estimated per-offload critical path of one partition point (ms).
@@ -54,23 +163,73 @@ pub fn partition_cost(p: &PartitionPoint, bw_mbps: f64, rtt_ms: f64) -> f64 {
     p.edge_prefix_ms + p.payload_bytes * 8.0 / (bw * 1e6) * 1e3 + rtt_ms / 2.0 + p.cloud_compute_ms
 }
 
-/// Pick the compatibility-optimal partition of `profile` under the given
-/// link condition (effective bandwidth/RTT — nominal config values, or a
-/// fault window's degraded profile).
-pub fn plan(profile: &FamilyProfile, bw_mbps: f64, rtt_ms: f64) -> FamilyPlan {
-    let mut best = 0usize;
+/// Multi-factor score: [`partition_cost`] with the cloud term scaled by
+/// the endpoint-load multiplier. With `load_mult == 1.0` this is
+/// bit-identical to [`partition_cost`] (`x * 1.0 == x` in IEEE floats —
+/// same terms, same summation order).
+pub fn partition_score(p: &PartitionPoint, bw_mbps: f64, rtt_ms: f64, load_mult: f64) -> f64 {
+    let bw = bw_mbps.max(1e-3);
+    p.edge_prefix_ms
+        + p.payload_bytes * 8.0 / (bw * 1e6) * 1e3
+        + rtt_ms / 2.0
+        + p.cloud_compute_ms * load_mult
+}
+
+/// The no-offload degrade sentinel: the session serves every step from
+/// its resident edge slice. Offload-path fields are zero and
+/// `partition_idx` is [`EDGE_ONLY_SPLIT`]; edge-side economics
+/// (`chunk_len`, `edge_ms_scale`) keep the family's real values so the
+/// edge slice still behaves like that family.
+pub fn edge_only_plan(profile: &FamilyProfile) -> FamilyPlan {
+    FamilyPlan {
+        family: profile.family,
+        chunk_len: profile.chunk_len,
+        edge_ms_scale: profile.edge_ms_scale,
+        edge_prefix_ms: 0.0,
+        payload_bytes: 0.0,
+        cloud_compute_ms: 0.0,
+        full_cloud_ms: profile.partitions.first().map_or(0.0, |p| p.cloud_compute_ms),
+        edge_gb: 0.0,
+        partition_idx: EDGE_ONLY_SPLIT,
+    }
+}
+
+/// Budget-filtered, endpoint-aware argmin over the catalog. Returns
+/// `None` when no partition point survives the filter (empty catalog, or
+/// every point over budget) — callers degrade to [`edge_only_plan`].
+///
+/// Non-finite scores are skipped rather than compared: a NaN cost can
+/// never win the argmin silently (the historical strict-`<` bug made
+/// index 0 win whenever every cost was NaN). Link values are additionally
+/// sanitized at config validation, so finite inputs are the normal case.
+pub fn try_plan_with(
+    profile: &FamilyProfile,
+    bw_mbps: f64,
+    rtt_ms: f64,
+    budget: DeviceBudget,
+    load: EndpointLoad,
+) -> Option<FamilyPlan> {
+    let load_mult = load.multiplier();
+    let mut best: Option<usize> = None;
     let mut best_cost = f64::INFINITY;
     for (i, p) in profile.partitions.iter().enumerate() {
-        let c = partition_cost(p, bw_mbps, rtt_ms);
+        if !budget.admits(p) {
+            continue;
+        }
+        let c = partition_score(p, bw_mbps, rtt_ms, load_mult);
+        if !c.is_finite() {
+            continue;
+        }
         // strict '<' + shallow-to-deep catalog order = ties keep the
         // earlier (larger-payload) point: monotone in bandwidth
         if c < best_cost {
-            best = i;
+            best = Some(i);
             best_cost = c;
         }
     }
+    let best = best?;
     let p = profile.partitions[best];
-    FamilyPlan {
+    Some(FamilyPlan {
         family: profile.family,
         chunk_len: profile.chunk_len,
         edge_ms_scale: profile.edge_ms_scale,
@@ -80,7 +239,29 @@ pub fn plan(profile: &FamilyProfile, bw_mbps: f64, rtt_ms: f64) -> FamilyPlan {
         full_cloud_ms: profile.partitions[0].cloud_compute_ms,
         edge_gb: p.edge_gb,
         partition_idx: best,
-    }
+    })
+}
+
+/// [`try_plan_with`] that degrades to [`edge_only_plan`] instead of
+/// returning `None` — the total function every scheduler path calls.
+pub fn plan_with(
+    profile: &FamilyProfile,
+    bw_mbps: f64,
+    rtt_ms: f64,
+    budget: DeviceBudget,
+    load: EndpointLoad,
+) -> FamilyPlan {
+    try_plan_with(profile, bw_mbps, rtt_ms, budget, load)
+        .unwrap_or_else(|| edge_only_plan(profile))
+}
+
+/// Pick the compatibility-optimal partition of `profile` under the given
+/// link condition (effective bandwidth/RTT — nominal config values, or a
+/// fault window's degraded profile). Single-factor: unlimited budget,
+/// nominal endpoint. An empty catalog degrades to [`edge_only_plan`]
+/// instead of panicking on `partitions[best]`.
+pub fn plan(profile: &FamilyProfile, bw_mbps: f64, rtt_ms: f64) -> FamilyPlan {
+    plan_with(profile, bw_mbps, rtt_ms, DeviceBudget::UNLIMITED, EndpointLoad::NOMINAL)
 }
 
 #[cfg(test)]
@@ -131,5 +312,110 @@ mod tests {
         };
         // 1e6 B = 8 Mbit at 100 Mbps = 80 ms; + rtt/2 = 5; + 10 + 100
         assert!((partition_cost(&p, 100.0, 10.0) - 195.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_catalog_degrades_to_edge_only_instead_of_panicking() {
+        // regression: plan() used to index partitions[best] unguarded —
+        // with budget filtering an empty catalog is a reachable state and
+        // must degrade deterministically, not panic
+        let empty = FamilyProfile {
+            family: ModelFamily::OpenVlaAr,
+            chunk_len: 4,
+            edge_ms_scale: 1.0,
+            action_quant: 0.0,
+            partitions: Vec::new(),
+        };
+        let p = plan(&empty, 100.0, 10.0);
+        assert!(p.is_edge_only());
+        assert_eq!(p.partition_idx, EDGE_ONLY_SPLIT);
+        assert_eq!(p.payload_bytes, 0.0);
+        assert_eq!(p.cloud_compute_ms, 0.0);
+        // edge-side economics keep the family's real values
+        assert_eq!(p.chunk_len, 4);
+        assert_eq!(p.family, ModelFamily::OpenVlaAr);
+        assert_eq!(plan(&empty, 100.0, 10.0), p, "degrade is deterministic");
+    }
+
+    #[test]
+    fn over_budget_catalog_degrades_to_edge_only() {
+        // the `lite` class (2 GB) cannot host any OpenVLA split (2.4 GB
+        // shallowest): filtered-to-empty must yield the edge-only sentinel
+        let prof = FamilyProfile::of(ModelFamily::OpenVlaAr);
+        let p = plan_with(&prof, 100.0, 10.0, DeviceBudget::of("lite"), EndpointLoad::NOMINAL);
+        assert!(p.is_edge_only());
+        assert!(try_plan_with(&prof, 100.0, 10.0, DeviceBudget::of("lite"), EndpointLoad::NOMINAL)
+            .is_none());
+    }
+
+    #[test]
+    fn nan_link_never_wins_the_argmin_silently() {
+        // regression: NaN bandwidth/RTT made every cost NaN, strict '<'
+        // never updated, and index 0 won silently. Non-finite scores are
+        // now skipped, so an all-NaN catalog degrades to edge-only.
+        let prof = FamilyProfile::of(ModelFamily::Pi0Diffusion);
+        let p = plan(&prof, f64::NAN, 10.0);
+        assert!(p.is_edge_only(), "NaN link must not silently pick split 0: {p:?}");
+        let p = plan(&prof, 100.0, f64::NAN);
+        assert!(p.is_edge_only());
+        // infinite rtt likewise cannot produce a finite score
+        let p = plan(&prof, 100.0, f64::INFINITY);
+        assert!(p.is_edge_only());
+    }
+
+    #[test]
+    fn unlimited_budget_nominal_endpoint_reduces_to_single_factor() {
+        for fam in ModelFamily::ALL {
+            let prof = FamilyProfile::of(fam);
+            for (bw, rtt) in [(1000.0, 8.0), (50.0, 40.0), (5.0, 80.0), (77.7, 13.0)] {
+                let single = plan(&prof, bw, rtt);
+                let multi =
+                    plan_with(&prof, bw, rtt, DeviceBudget::UNLIMITED, EndpointLoad::NOMINAL);
+                assert_eq!(single, multi, "{fam:?} at {bw} Mbps");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_budget_filters_deep_splits() {
+        // nx class (3.5 GB / 30 ms): OpenVLA's deep split (4.8 GB / 65 ms)
+        // is infeasible even on a 5 Mbps link that would otherwise pick it
+        let prof = FamilyProfile::of(ModelFamily::OpenVlaAr);
+        let free = plan(&prof, 5.0, 80.0);
+        assert_eq!(free.partition_idx, 2);
+        let nx = plan_with(&prof, 5.0, 80.0, DeviceBudget::of("nx"), EndpointLoad::NOMINAL);
+        assert_eq!(nx.partition_idx, 1, "budget must stop at the mid split");
+        assert!(nx.edge_gb <= 3.5 && nx.edge_prefix_ms <= 30.0);
+    }
+
+    #[test]
+    fn endpoint_contention_pushes_the_split_deeper() {
+        // a loaded endpoint inflates the cloud term: the planner sheds
+        // cloud work by taking a deeper split than the idle-endpoint plan
+        let prof = FamilyProfile::of(ModelFamily::OpenVlaAr);
+        let idle = plan_with(&prof, 200.0, 20.0, DeviceBudget::UNLIMITED, EndpointLoad::NOMINAL);
+        let loaded = EndpointLoad { queue_depth: 12, capacity: 1.0, queue_weight: 0.05 };
+        let hot = plan_with(&prof, 200.0, 20.0, DeviceBudget::UNLIMITED, loaded);
+        assert!(
+            hot.partition_idx >= idle.partition_idx,
+            "contention may never move the split shallower: {} vs {}",
+            hot.partition_idx,
+            idle.partition_idx
+        );
+        assert!(hot.partition_idx > 0, "12 queued at weight 0.05 must move a 200 Mbps plan");
+        // a weak GPU (half capacity) acts the same way
+        let weak = EndpointLoad { queue_depth: 0, capacity: 0.5, queue_weight: 0.0 };
+        let w = plan_with(&prof, 200.0, 20.0, DeviceBudget::UNLIMITED, weak);
+        assert!(w.partition_idx >= idle.partition_idx);
+    }
+
+    #[test]
+    fn device_class_catalog_parses_and_falls_back() {
+        assert_eq!(DeviceBudget::of("cloudlet"), DeviceBudget::UNLIMITED);
+        assert_eq!(DeviceBudget::of("unknown-typo"), DeviceBudget::UNLIMITED);
+        let nx = DeviceBudget::of("nx");
+        assert!(nx.mem_gb < DeviceBudget::of("agx").mem_gb);
+        assert!(DeviceBudget::of("lite").mem_gb < nx.mem_gb);
+        assert_eq!(EndpointLoad::NOMINAL.multiplier(), 1.0);
     }
 }

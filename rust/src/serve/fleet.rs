@@ -182,6 +182,18 @@ pub struct FleetStats {
     /// departed) sessions — n_sessions for lockstep shapes, lower under
     /// staggered arrivals.
     pub max_active_sessions: usize,
+    // --- autoscaling control plane (all 0 with [autoscale] disabled) ---
+    /// Endpoint slots spawned by the autoscaler under sustained SLO
+    /// pressure.
+    pub scale_up_events: u64,
+    /// Endpoint slots drained by the autoscaler after sustained idleness.
+    pub scale_down_events: u64,
+    /// Ready polls admission-gated to edge-only serving by the shed
+    /// threshold (`autoscale.shed_queue`).
+    pub shed_polls: u64,
+    /// High-water mark of simultaneously active endpoints (the static
+    /// endpoint count with `[autoscale]` disabled).
+    pub max_endpoints_observed: usize,
 }
 
 /// Per-session outcome: every episode's metrics, in order.
@@ -282,6 +294,10 @@ impl FleetResult {
         r.set("faults/degraded_requests", s.degraded_requests);
         r.set("faults/outage_rounds", s.outage_rounds);
         r.set("spec_requests", s.spec_requests);
+        r.set("autoscale/scale_up", s.scale_up_events);
+        r.set("autoscale/scale_down", s.scale_down_events);
+        r.set("autoscale/shed_polls", s.shed_polls);
+        r.set("autoscale/max_endpoints", s.max_endpoints_observed as u64);
         r.set("cache/probes", self.cache.probes);
         r.set("cache/hits", self.cache.hits);
         r.set("cache/misses", self.cache.misses);
@@ -397,6 +413,33 @@ pub struct Fleet {
     /// only happen when it actually changes (the planner is pure, so a
     /// stable link means stable plans).
     planned_link: Option<(f64, f64)>,
+    // --- multi-factor placement (`[placement]`; off, the planner runs the
+    // single-factor path and every field below is inert) ---
+    /// Multi-factor placement active (`[placement] enabled`).
+    placement_on: bool,
+    /// Effective device budget (class catalog entry + overrides).
+    budget: planner::DeviceBudget,
+    /// Per-family endpoint-load snapshots the current zoo plans were
+    /// computed under (replan key alongside `planned_link`; empty with
+    /// placement off).
+    planned_loads: Vec<planner::EndpointLoad>,
+    // --- autoscaling control plane (`[autoscale]`; off, `ep_active` is
+    // all-true and every decision path below is inert) ---
+    /// Autoscaler active (`[autoscale] enabled`).
+    autoscale_on: bool,
+    /// Endpoint slot liveness: the router is pre-allocated at the scale
+    /// ceiling and slots toggle here (all true with autoscale off).
+    ep_active: Vec<bool>,
+    /// Drain floor / spawn ceiling (config values clamped to the router
+    /// size).
+    as_min: usize,
+    as_max: usize,
+    /// Consecutive rounds the SLO pressure signal has held.
+    pressure_streak: u64,
+    /// Consecutive rounds with zero queued and zero outstanding work.
+    idle_streak: u64,
+    /// No scale decision before this round (cooldown hysteresis).
+    cooldown_until: u64,
     family_batches: [u64; N_FAMILIES],
     family_requests: [u64; N_FAMILIES],
     endpoint_family_dispatches: Vec<[u64; N_FAMILIES]>,
@@ -493,10 +536,23 @@ impl Fleet {
     fn build(sys: &SystemConfig, task: TaskKind, kind: PolicyKind, mode: CloudMode) -> Fleet {
         let cfg = sys.fleet.clone();
         let base_seed = sys.episode.seed;
+        let autoscale_on = sys.autoscale.enabled;
+        // with autoscale on the router (and every per-endpoint vector) is
+        // pre-allocated at the scale ceiling; slots toggle `ep_active`
+        // instead of resizing anything mid-run. Remote mode can only
+        // scale over endpoints that actually connected.
         let endpoints = match &mode {
+            CloudMode::Local if autoscale_on => {
+                sys.autoscale.max_endpoints.max(sys.autoscale.min_endpoints).max(1)
+            }
             CloudMode::Local => cfg.endpoints.max(1),
             CloudMode::Remote(clients) => clients.len(),
         };
+        let as_max = if autoscale_on { sys.autoscale.max_endpoints.clamp(1, endpoints) } else { endpoints };
+        let as_min = if autoscale_on { sys.autoscale.min_endpoints.clamp(1, as_max) } else { endpoints };
+        let ep_active: Vec<bool> =
+            (0..endpoints).map(|e| !autoscale_on || e < as_min).collect();
+        let initial_active = ep_active.iter().filter(|&&b| b).count();
         let zoo_enabled = sys.models.enabled;
         // the workload engine compiles the session plan: arrivals, episode
         // counts and families. Disabled, it returns the lockstep plan
@@ -520,6 +576,12 @@ impl Fleet {
         };
         // round duration in µs of virtual control time
         let round_us = (sys.robot.dt * 1e6).max(1.0);
+        let mut router = Router::new(endpoints);
+        if sys.placement.enabled {
+            for e in 0..endpoints {
+                router.set_capacity(e, sys.placement.gpu_capacity);
+            }
+        }
         Fleet {
             sys: sys.clone(),
             task,
@@ -527,9 +589,9 @@ impl Fleet {
             base_seed,
             slots,
             batcher: Batcher::new(cfg.max_batch),
-            router: Router::new(endpoints),
+            router,
             mode,
-            stats: FleetStats::default(),
+            stats: FleetStats { max_endpoints_observed: initial_active, ..Default::default() },
             pending_age: 0,
             deadline_rounds: (cfg.batch_deadline_us as f64 / round_us).ceil() as u64,
             engine: FaultEngine::from_config(&sys.faults, base_seed),
@@ -543,6 +605,16 @@ impl Fleet {
             zoo_enabled,
             pending_family: ModelFamily::Surrogate,
             planned_link: None,
+            placement_on: sys.placement.enabled,
+            budget: sys.placement.budget(),
+            planned_loads: Vec::new(),
+            autoscale_on,
+            ep_active,
+            as_min,
+            as_max,
+            pressure_streak: 0,
+            idle_streak: 0,
+            cooldown_until: 0,
             family_batches: [0; N_FAMILIES],
             family_requests: [0; N_FAMILIES],
             endpoint_family_dispatches: vec![[0; N_FAMILIES]; endpoints],
@@ -587,8 +659,7 @@ impl Fleet {
         let family = spec.family;
         let mut state = EpisodeState::new(sys, task, crate::policy::build(kind, sys), seed, false);
         let (edge, cloud): (Box<dyn Backend>, Box<dyn Backend>) = if zoo {
-            let plan = planner::plan(&FamilyProfile::of(family), sys.link.bw_mbps, sys.link.rtt_ms);
-            state.set_family_plan(Some(plan));
+            state.set_family_plan(Some(Fleet::initial_plan(sys, family)));
             (Box::new(ZooBackend::edge(family, seed)), Box::new(ZooBackend::cloud(family, seed)))
         } else {
             (Box::new(AnalyticBackend::edge(seed)), Box::new(AnalyticBackend::cloud(seed)))
@@ -614,6 +685,154 @@ impl Fleet {
         self.router.advertise(endpoint, families);
     }
 
+    /// Build-time partition plan for a session's family under the nominal
+    /// link: single-factor with `[placement]` off (bit-identical to the
+    /// historical plan), multi-factor — device budget + an idle endpoint
+    /// at the configured GPU capacity — with it on.
+    fn initial_plan(sys: &SystemConfig, family: ModelFamily) -> FamilyPlan {
+        let prof = FamilyProfile::of(family);
+        if !sys.placement.enabled {
+            return planner::plan(&prof, sys.link.bw_mbps, sys.link.rtt_ms);
+        }
+        let load = planner::EndpointLoad {
+            queue_depth: 0,
+            capacity: sys.placement.gpu_capacity,
+            queue_weight: sys.placement.queue_weight,
+        };
+        planner::plan_with(&prof, sys.link.bw_mbps, sys.link.rtt_ms, sys.placement.budget(), load)
+    }
+
+    /// Endpoint-state factor for `family` right now: queue depth =
+    /// requests pending in the batcher for this family plus the
+    /// outstanding count of the least-loaded live advertiser (the
+    /// endpoint the router would pick), capacity = that endpoint's.
+    /// Falls back to the configured capacity when the family is
+    /// currently unroutable (the plan still filters by budget).
+    fn endpoint_load(&self, family: ModelFamily) -> planner::EndpointLoad {
+        let queue_weight = self.sys.placement.queue_weight;
+        let pending = if !self.batcher.is_empty() && self.pending_family == family {
+            self.batcher.len() as u64
+        } else {
+            0
+        };
+        let alive: Vec<bool> = (0..self.router.workers())
+            .map(|e| {
+                self.ep_active[e] && !self.io_dead[e] && self.engine.endpoint_up(e, self.cur_round)
+            })
+            .collect();
+        match self.router.load_for(&alive, family) {
+            Some((depth, capacity)) => {
+                planner::EndpointLoad { queue_depth: depth + pending, capacity, queue_weight }
+            }
+            None => planner::EndpointLoad {
+                queue_depth: pending,
+                capacity: self.sys.placement.gpu_capacity,
+                queue_weight,
+            },
+        }
+    }
+
+    /// Partition plan for `family` under the given link — the one planner
+    /// entry point every scheduler replan path goes through. Single-factor
+    /// with `[placement]` off; budget-filtered and endpoint-aware with it
+    /// on.
+    fn plan_family(&self, family: ModelFamily, bw: f64, rtt: f64) -> FamilyPlan {
+        let prof = FamilyProfile::of(family);
+        if !self.placement_on {
+            return planner::plan(&prof, bw, rtt);
+        }
+        planner::plan_with(&prof, bw, rtt, self.budget, self.endpoint_load(family))
+    }
+
+    /// Is per-round session context (link profile + zoo plans) being
+    /// maintained? True under an armed fault schedule (historical
+    /// behavior) and under endpoint-aware placement, whose plans follow
+    /// the queue state round to round.
+    fn ctx_armed(&self) -> bool {
+        !self.engine.is_empty() || (self.placement_on && self.zoo_enabled)
+    }
+
+    /// One deterministic autoscale decision per round, at round start. A
+    /// pure function of scheduler counters — queued cloud requests,
+    /// router outstanding, active endpoint count — with zero PRNG draws
+    /// and zero clock advances, so a scaled run replays bit-identically
+    /// under the same seed.
+    ///
+    /// * **scale up** when the backlog has exceeded `slo_queue × active`
+    ///   for `sustain_rounds` consecutive rounds: activate the
+    ///   lowest-index inactive slot (with `family_pools` on in a zoo
+    ///   fleet, it advertises only the family whose backlog tripped the
+    ///   signal);
+    /// * **scale down** when queue and outstanding have been zero for
+    ///   `idle_rounds` consecutive rounds: drain the highest-index active
+    ///   slot above the `min_endpoints` floor (LIFO), and only one with
+    ///   no outstanding work;
+    /// * after either decision, `cooldown_rounds` of hysteresis freeze
+    ///   the streak counters so scale events cannot oscillate.
+    fn autoscale_tick(&mut self, round: u64) {
+        if !self.autoscale_on {
+            return;
+        }
+        if round < self.cooldown_until {
+            return;
+        }
+        let active = self.ep_active.iter().filter(|&&b| b).count();
+        let backlog = self.batcher.len();
+        let outstanding: u64 =
+            (0..self.router.workers()).map(|e| self.router.outstanding(e)).sum();
+        let a = &self.sys.autoscale;
+        let (slo_queue, sustain, idle_need) = (a.slo_queue, a.sustain_rounds, a.idle_rounds);
+        let cooldown = a.cooldown_rounds;
+        let family_pools = a.family_pools;
+        let pressured = backlog > slo_queue * active;
+        if pressured {
+            self.pressure_streak += 1;
+            self.idle_streak = 0;
+        } else if backlog == 0 && outstanding == 0 {
+            self.idle_streak += 1;
+            self.pressure_streak = 0;
+        } else {
+            self.pressure_streak = 0;
+            self.idle_streak = 0;
+        }
+        if pressured && self.pressure_streak >= sustain.max(1) && active < self.as_max {
+            let Some(e) = self.ep_active.iter().position(|&b| !b) else { return };
+            self.ep_active[e] = true;
+            if family_pools && self.zoo_enabled {
+                // per-family pool: the spawned endpoint serves only the
+                // family whose backlog tripped the SLO signal (pressure
+                // implies a non-empty batcher, so `pending_family` is the
+                // backlog's family)
+                self.router.advertise(e, &[self.pending_family]);
+            }
+            self.stats.scale_up_events += 1;
+            self.stats.max_endpoints_observed =
+                self.stats.max_endpoints_observed.max(active + 1);
+            if let Some(fl) = self.flight.as_mut() {
+                fl.record_fleet(round, FlightKind::ScaleUp, e as u32, (active + 1) as u32);
+            }
+            self.pressure_streak = 0;
+            self.cooldown_until = round + cooldown;
+        } else if self.idle_streak >= idle_need.max(1) && active > self.as_min {
+            // LIFO drain: the newest spawned slot goes first, and only
+            // with zero outstanding work (an idle streak implies that,
+            // but the guard keeps the invariant local)
+            let Some(e) = (0..self.ep_active.len()).rev().find(|&e| self.ep_active[e]) else {
+                return;
+            };
+            if self.router.outstanding(e) > 0 {
+                return;
+            }
+            self.ep_active[e] = false;
+            self.stats.scale_down_events += 1;
+            if let Some(fl) = self.flight.as_mut() {
+                fl.record_fleet(round, FlightKind::ScaleDown, e as u32, (active - 1) as u32);
+            }
+            self.idle_streak = 0;
+            self.cooldown_until = round + cooldown;
+        }
+    }
+
     /// Effective link condition at the current round (a fault window's
     /// degraded profile, or the nominal config).
     fn effective_link(&self) -> (f64, f64) {
@@ -633,7 +852,7 @@ impl Fleet {
     fn arrival_context(&self, family: ModelFamily) -> (Option<LinkProfile>, Option<FamilyPlan>) {
         let plan = if self.zoo_enabled {
             let (bw, rtt) = self.effective_link();
-            Some(planner::plan(&FamilyProfile::of(family), bw, rtt))
+            Some(self.plan_family(family, bw, rtt))
         } else {
             None
         };
@@ -677,7 +896,7 @@ impl Fleet {
         // link condition in force this round (a new EpisodeState defaults
         // to no profile and a zoo session's plan defaults to the nominal
         // link)
-        if !self.engine.is_empty() {
+        if self.ctx_armed() {
             let (profile, plan) = self.arrival_context(family);
             state.on_fleet_arrival(profile, plan);
         }
@@ -729,7 +948,10 @@ impl Fleet {
         self.stats.rounds += 1;
         self.progressed = false;
         self.round_outage = false;
-        if !self.engine.is_empty() {
+        // scale decisions happen at round start, before context capture,
+        // so this round's plans already see the new endpoint set
+        self.autoscale_tick(t);
+        if self.ctx_armed() {
             // O(1) round start: record this round's context and bump the
             // epoch; arrived slots adopt it lazily on their next touch
             // (`sync_slot_context`) instead of an O(active) sweep here.
@@ -737,19 +959,24 @@ impl Fleet {
             // departure hook and are never synced again, so it cannot be
             // re-armed.
             self.cur_profile = self.engine.link_profile(self.cur_round);
-            // the planner is a pure function of (family, link), so replans
-            // are deterministic and only needed when the effective link
-            // actually changes: a degrade window moves every zoo session
-            // to a deeper split, and the next round under the same
-            // condition reuses the recorded plans
+            // the planner is a pure function of (family, link, budget,
+            // endpoint load), so replans are deterministic and only needed
+            // when an input actually changes: a degrade window moves every
+            // zoo session to a deeper split, endpoint pressure (placement
+            // on) does the same, and the next round under the same
+            // conditions reuses the recorded plans
             if self.zoo_enabled {
                 let (bw, rtt) = self.effective_link();
-                if self.planned_link != Some((bw, rtt)) {
+                let loads: Vec<planner::EndpointLoad> = if self.placement_on {
+                    ModelFamily::ALL.iter().map(|&f| self.endpoint_load(f)).collect()
+                } else {
+                    Vec::new()
+                };
+                if self.planned_link != Some((bw, rtt)) || loads != self.planned_loads {
                     self.planned_link = Some((bw, rtt));
-                    self.cur_plans = ModelFamily::ALL
-                        .iter()
-                        .map(|&f| planner::plan(&FamilyProfile::of(f), bw, rtt))
-                        .collect();
+                    self.cur_plans =
+                        ModelFamily::ALL.iter().map(|&f| self.plan_family(f, bw, rtt)).collect();
+                    self.planned_loads = loads;
                 }
             }
             self.link_epoch += 1;
@@ -804,7 +1031,7 @@ impl Fleet {
         self.stats.arrivals += 1;
         self.active_sessions += 1;
         self.stats.max_active_sessions = self.stats.max_active_sessions.max(self.active_sessions);
-        if !self.engine.is_empty() {
+        if self.ctx_armed() {
             let (profile, plan) = self.arrival_context(self.slots[i].family);
             self.slots[i].state.on_fleet_arrival(profile, plan);
         }
@@ -826,7 +1053,29 @@ impl Fleet {
         if self.slots[i].state.is_done() && !self.advance_episode(i) {
             return;
         }
-        let admit = !self.round_outage && self.batcher.len() < self.cfg.max_inflight.max(1);
+        // an edge-only plan (placement budget filtered the whole catalog)
+        // never offloads: its session serves every step from the resident
+        // edge slice via the deferred-offload machinery — a degrade, not
+        // a wedge
+        let edge_only =
+            self.slots[i].state.family_plan().map_or(false, |p| p.is_edge_only());
+        // admission shed: past the configured backlog the control plane
+        // stops admitting offloads before the queue can wedge (sessions
+        // fall back to the edge exactly like backpressure deferrals)
+        let shed = self.autoscale_on
+            && self.sys.autoscale.shed_queue > 0
+            && self.batcher.len() >= self.sys.autoscale.shed_queue;
+        if shed {
+            self.stats.shed_polls += 1;
+            if let Some(fl) = self.flight.as_mut() {
+                let qlen = self.batcher.len() as u32;
+                fl.record_fleet(self.cur_round, FlightKind::Shed, qlen, i as u32);
+            }
+        }
+        let admit = !self.round_outage
+            && !edge_only
+            && !shed
+            && self.batcher.len() < self.cfg.max_inflight.max(1);
         let round = self.cur_round;
         // the probe runs inside poll, before the admit gate: cache hits
         // keep serving through outage/backpressure windows
@@ -1109,7 +1358,12 @@ impl Fleet {
         let mut timeouts_charged = 0u32;
         while !outage && tries < max_tries && !served {
             let alive: Vec<bool> = (0..n_eps)
-                .map(|e| !excluded[e] && !self.io_dead[e] && self.engine.endpoint_up(e, round))
+                .map(|e| {
+                    self.ep_active[e]
+                        && !excluded[e]
+                        && !self.io_dead[e]
+                        && self.engine.endpoint_up(e, round)
+                })
                 .collect();
             let Some(endpoint) = self.router.pick_compatible(&alive, fam) else { break };
             self.endpoint_family_dispatches[endpoint][fam.id() as usize] += 1;
@@ -1670,6 +1924,126 @@ mod tests {
         assert!(fleet.advance_episode(0), "episode 2 must start, not depart");
         assert_eq!(fleet.slot_epoch[0], fleet.link_epoch);
         assert_eq!(fleet.slots[0].state.family_plan(), Some(&deep));
+    }
+
+    #[test]
+    fn autoscale_and_placement_disabled_with_hostile_knobs_are_inert() {
+        // the gate contract: enabled = false must be bit-identical no
+        // matter how hostile the other knobs are
+        let base_sys = sys_with(4, 4, 16);
+        let base = Fleet::local(&base_sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        let mut hostile = sys_with(4, 4, 16);
+        hostile.autoscale.enabled = false;
+        hostile.autoscale.min_endpoints = 7;
+        hostile.autoscale.max_endpoints = 1;
+        hostile.autoscale.slo_queue = 0;
+        hostile.autoscale.sustain_rounds = 0;
+        hostile.autoscale.idle_rounds = 0;
+        hostile.autoscale.cooldown_rounds = 0;
+        hostile.autoscale.shed_queue = 1;
+        hostile.autoscale.family_pools = true;
+        hostile.placement.enabled = false;
+        hostile.placement.device_class = "lite".into();
+        hostile.placement.queue_weight = 99.0;
+        hostile.placement.gpu_capacity = 0.01;
+        let h = Fleet::local(&hostile, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        assert_eq!(format!("{:?}", base.stats), format!("{:?}", h.stats));
+        assert_eq!(base.endpoint_dispatches, h.endpoint_dispatches);
+        assert_eq!(
+            base.summary().fleet.total_lat_mean.to_bits(),
+            h.summary().fleet.total_lat_mean.to_bits()
+        );
+        assert_eq!(base.stats.scale_up_events, 0);
+        assert_eq!(h.stats.shed_polls, 0);
+    }
+
+    #[test]
+    fn autoscaler_scales_up_under_pressure_and_drains_idle_slots() {
+        let mut sys = sys_with(8, 16, 32);
+        // a deadline window lets a partial batch survive to the next
+        // round start, where the scaler reads it as backlog (with an
+        // immediate flush every round the queue is empty at every tick)
+        sys.fleet.batch_deadline_us = 50_000;
+        sys.autoscale.enabled = true;
+        sys.autoscale.min_endpoints = 1;
+        sys.autoscale.max_endpoints = 3;
+        sys.autoscale.slo_queue = 2;
+        sys.autoscale.sustain_rounds = 1;
+        sys.autoscale.idle_rounds = 1;
+        sys.autoscale.cooldown_rounds = 0;
+        let run = || Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        let res = run();
+        // lockstep offload waves alternate backlog-8 and backlog-0 round
+        // starts: the loaded ticks (8 queued > 2 × active) must trip
+        // scale-up and the empty ticks between waves must drain
+        assert!(res.stats.scale_up_events > 0, "{:?}", res.stats);
+        assert!(res.stats.scale_down_events > 0, "{:?}", res.stats);
+        assert!(res.stats.max_endpoints_observed > 1);
+        assert!(res.stats.max_endpoints_observed <= 3);
+        // zero wedges: every session completes its episode in full
+        for s in &res.sessions {
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        }
+        // spawned endpoints actually served traffic
+        assert!(res.endpoint_dispatches.iter().filter(|&&d| d > 0).count() > 1);
+        // exact seeded replay: the control plane draws no PRNG and reads
+        // only deterministic counters
+        let again = run();
+        assert_eq!(format!("{:?}", res.stats), format!("{:?}", again.stats));
+        assert_eq!(res.endpoint_dispatches, again.endpoint_dispatches);
+        assert_eq!(
+            res.summary().fleet.total_lat_mean.to_bits(),
+            again.summary().fleet.total_lat_mean.to_bits()
+        );
+    }
+
+    #[test]
+    fn shed_gate_defers_offloads_past_the_backlog_threshold() {
+        let mut sys = sys_with(8, 16, 32);
+        sys.autoscale.enabled = true;
+        sys.autoscale.min_endpoints = 2;
+        sys.autoscale.max_endpoints = 2;
+        sys.autoscale.shed_queue = 2;
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        // with 8 lockstep sessions wanting the cloud and only 2 admitted
+        // per wave, the rest must shed to edge-only serving — and still
+        // complete
+        assert!(res.stats.shed_polls > 0, "{:?}", res.stats);
+        assert!(res.stats.deferred_offloads > 0, "{:?}", res.stats);
+        for s in &res.sessions {
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
+        }
+        // shed kept the backlog at the threshold: no batch ever exceeded it
+        assert!(res.stats.max_inflight_observed <= 2, "{:?}", res.stats);
+    }
+
+    #[test]
+    fn placement_budget_degrades_over_budget_families_to_edge_only() {
+        // the `lite` device class (2 GB) hosts no OpenVLA or Pi0 split:
+        // those sessions must degrade to edge-only serving (no offloads,
+        // no wedge) while EdgeQuant sessions keep offloading normally
+        let mut sys = sys_with(6, 4, 16);
+        sys.models.enabled = true;
+        sys.placement.enabled = true;
+        sys.placement.device_class = "lite".into();
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        for s in &res.sessions {
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len(), "session wedged");
+        }
+        for t in &res.families {
+            match t.family {
+                ModelFamily::EdgeQuant => {
+                    assert!(t.cloud_events > 0, "in-budget family must offload: {t:?}")
+                }
+                ModelFamily::OpenVlaAr | ModelFamily::Pi0Diffusion => {
+                    assert_eq!(t.cloud_events, 0, "over-budget family offloaded: {t:?}")
+                }
+                ModelFamily::Surrogate => {}
+            }
+        }
+        // deterministic replay of the degrade
+        let again = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_eq!(format!("{:?}", res.stats), format!("{:?}", again.stats));
     }
 
     #[test]

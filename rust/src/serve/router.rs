@@ -17,6 +17,10 @@ pub struct Router {
     totals: Vec<u64>,
     /// Advertised family support per worker (default: everything).
     supported: Vec<[bool; N_FAMILIES]>,
+    /// Relative GPU capacity per worker (default 1.0 = the nominal
+    /// device the family catalogs are calibrated on). Reporting input to
+    /// the multi-factor planner; never changes pick order.
+    capacity: Vec<f64>,
     rr: usize,
     pub dispatched: u64,
 }
@@ -28,6 +32,7 @@ impl Router {
             outstanding: vec![0; workers],
             totals: vec![0; workers],
             supported: vec![[true; N_FAMILIES]; workers],
+            capacity: vec![1.0; workers],
             rr: 0,
             dispatched: 0,
         }
@@ -114,6 +119,31 @@ impl Router {
 
     pub fn outstanding(&self, worker: usize) -> u64 {
         self.outstanding[worker]
+    }
+
+    /// Set a worker's relative GPU capacity (multi-factor planner input).
+    pub fn set_capacity(&mut self, worker: usize, capacity: f64) {
+        assert!(worker < self.capacity.len());
+        self.capacity[worker] = capacity.max(1e-6);
+    }
+
+    pub fn capacity(&self, worker: usize) -> f64 {
+        self.capacity[worker]
+    }
+
+    /// Endpoint-state snapshot for the multi-factor planner: the queue
+    /// depth and capacity of the least-loaded `alive` worker advertising
+    /// `family` — the worker [`Router::pick_compatible`] would target.
+    /// Read-only (no accounting, no rr rotation, no mutation): calling
+    /// it never perturbs subsequent picks. `None` when the family is
+    /// currently unroutable.
+    pub fn load_for(&self, alive: &[bool], family: ModelFamily) -> Option<(u64, f64)> {
+        assert_eq!(alive.len(), self.outstanding.len(), "alive mask arity");
+        let fid = family.id() as usize;
+        (0..self.outstanding.len())
+            .filter(|&w| alive[w] && self.supported[w][fid])
+            .map(|w| (self.outstanding[w], self.capacity[w]))
+            .min_by(|a, b| a.0.cmp(&b.0))
     }
 
     /// Max load imbalance across workers.
@@ -235,6 +265,32 @@ mod tests {
                 b.pick_alive(&alive)
             );
         }
+    }
+
+    #[test]
+    fn load_for_reports_the_least_loaded_advertiser_without_mutating() {
+        let mut r = Router::new(3);
+        r.advertise(0, &[ModelFamily::OpenVlaAr]);
+        r.set_capacity(2, 0.5);
+        // load worker 1 twice, worker 2 once
+        assert!(r.pick_alive(&[false, true, false]).is_some());
+        assert!(r.pick_alive(&[false, true, false]).is_some());
+        assert!(r.pick_alive(&[false, false, true]).is_some());
+        let alive = [true, true, true];
+        // Pi0 advertisers are 1 (depth 2) and 2 (depth 1, cap 0.5)
+        assert_eq!(r.load_for(&alive, ModelFamily::Pi0Diffusion), Some((1, 0.5)));
+        // AR can also land on idle worker 0 (depth 0, nominal cap)
+        assert_eq!(r.load_for(&alive, ModelFamily::OpenVlaAr), Some((0, 1.0)));
+        // unroutable family -> None
+        let mut r2 = Router::new(2);
+        r2.advertise(0, &[ModelFamily::EdgeQuant]);
+        r2.advertise(1, &[ModelFamily::EdgeQuant]);
+        assert_eq!(r2.load_for(&[true, true], ModelFamily::Surrogate), None);
+        // read-only: querying never changed pick state
+        let before = r.totals().to_vec();
+        let _ = r.load_for(&alive, ModelFamily::Surrogate);
+        assert_eq!(r.totals(), &before[..]);
+        assert_eq!(r.dispatched, 3);
     }
 
     #[test]

@@ -1,0 +1,379 @@
+//! Differential conformance suite for `[placement]` + `[autoscale]` —
+//! multi-factor placement and the deterministic autoscaling control
+//! plane.
+//!
+//! Three halves:
+//!
+//! * **Disabled ⇒ bit-identity.** `[placement]` and `[autoscale]`
+//!   sections that are absent or disabled — whatever the other knobs
+//!   say, however hostile — must leave the scheduler *exactly* the PR 8
+//!   event loop: per-episode trajectories, flush causes, cache counters
+//!   and fault-engine draws, across every serve path (plain fleets, the
+//!   reuse cache, the chaos schedule, the model zoo, pipelined
+//!   execution, dynamic arrivals).
+//! * **Neutral-knobs placement is inert.** `[placement]` enabled with
+//!   the unlimited device class, zero queue weight and nominal GPU
+//!   capacity must reduce the multi-factor score to the single-factor
+//!   cost bit-for-bit on the live zoo path.
+//! * **Enabled holds the line.** The composed chaos + Poisson-workload +
+//!   autoscale scenario completes with zero wedged sessions, both scale
+//!   counters move, the shed gate bounds the backlog, placement budgets
+//!   degrade over-budget families to edge-only serving, and every run
+//!   replays bit-identically under the same seed.
+
+use rapid::config::{FaultsConfig, PolicyKind, SystemConfig};
+use rapid::robot::TaskKind;
+use rapid::serve::{Fleet, FleetResult};
+use rapid::vla::ModelFamily;
+
+/// Full-strength bit-identity: scheduler counters, flush causes, router
+/// spread, cache counters, control-plane counters, and exact per-episode
+/// trajectory columns.
+fn assert_bit_identical(a: &FleetResult, b: &FleetResult, tag: &str) {
+    assert_eq!(a.stats.rounds, b.stats.rounds, "{tag}: rounds");
+    assert_eq!(a.stats.batches, b.stats.batches, "{tag}: batches");
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests, "{tag}: batched requests");
+    assert_eq!(
+        a.stats.multi_session_batches, b.stats.multi_session_batches,
+        "{tag}: multi-session batches"
+    );
+    assert_eq!(a.stats.max_batch_observed, b.stats.max_batch_observed, "{tag}: batch high-water");
+    assert_eq!(
+        a.stats.max_inflight_observed, b.stats.max_inflight_observed,
+        "{tag}: inflight high-water"
+    );
+    assert_eq!(a.stats.endpoint_errors, b.stats.endpoint_errors, "{tag}: endpoint errors");
+    assert_eq!(a.stats.mixed_family_batches, b.stats.mixed_family_batches, "{tag}: mixed batches");
+    assert_eq!(a.stats.spec_requests, b.stats.spec_requests, "{tag}: speculative requests");
+    assert_eq!(a.stats.arrivals, b.stats.arrivals, "{tag}: arrivals");
+    assert_eq!(
+        a.stats.max_active_sessions, b.stats.max_active_sessions,
+        "{tag}: active-session high-water"
+    );
+    assert_eq!(a.stats.full_flushes, b.stats.full_flushes, "{tag}: full flushes");
+    assert_eq!(a.stats.deadline_flushes, b.stats.deadline_flushes, "{tag}: deadline flushes");
+    assert_eq!(a.stats.drain_flushes, b.stats.drain_flushes, "{tag}: drain flushes");
+    assert_eq!(a.stats.family_flushes, b.stats.family_flushes, "{tag}: family flushes");
+    assert_eq!(a.stats.deferred_offloads, b.stats.deferred_offloads, "{tag}: deferred");
+    assert_eq!(a.stats.dropped_replies, b.stats.dropped_replies, "{tag}: dropped");
+    assert_eq!(a.stats.degraded_requests, b.stats.degraded_requests, "{tag}: degraded");
+    assert_eq!(a.stats.failover_redispatches, b.stats.failover_redispatches, "{tag}: failover");
+    assert_eq!(a.stats.outage_rounds, b.stats.outage_rounds, "{tag}: outage rounds");
+    assert_eq!(a.stats.scale_up_events, b.stats.scale_up_events, "{tag}: scale up");
+    assert_eq!(a.stats.scale_down_events, b.stats.scale_down_events, "{tag}: scale down");
+    assert_eq!(a.stats.shed_polls, b.stats.shed_polls, "{tag}: shed polls");
+    assert_eq!(
+        a.stats.max_endpoints_observed, b.stats.max_endpoints_observed,
+        "{tag}: endpoint high-water"
+    );
+    assert_eq!(a.endpoint_dispatches, b.endpoint_dispatches, "{tag}: router spread");
+    assert_eq!(a.mean_batch, b.mean_batch, "{tag}: mean batch");
+    assert_eq!(a.cache.hits, b.cache.hits, "{tag}: cache hits");
+    assert_eq!(a.cache.probes, b.cache.probes, "{tag}: cache probes");
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{tag}: session count");
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        assert_eq!(sa.family, sb.family, "{tag}: family");
+        assert_eq!(sa.arrival_round, sb.arrival_round, "{tag}: arrival round");
+        assert_eq!(sa.departure_round, sb.departure_round, "{tag}: departure round");
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "{tag}: episode count");
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "{tag}: latency columns");
+            assert_eq!(ma.cloud_events, mb.cloud_events, "{tag}: cloud events");
+            assert_eq!(ma.edge_events, mb.edge_events, "{tag}: edge events");
+            assert_eq!(ma.preemptions, mb.preemptions, "{tag}: preemptions");
+            assert_eq!(ma.failovers, mb.failovers, "{tag}: failovers");
+            assert_eq!(ma.cache_hits, mb.cache_hits, "{tag}: cache hits");
+            assert_eq!(ma.deferred_offloads, mb.deferred_offloads, "{tag}: deferrals");
+            assert_eq!(ma.rms_error, mb.rms_error, "{tag}: trajectory (rms)");
+            assert_eq!(ma.success, mb.success, "{tag}: success");
+        }
+    }
+}
+
+/// `[placement]` + `[autoscale]` sections that are present — with
+/// hostile knobs — but disabled. Must perturb nothing.
+fn hostile_disabled(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.placement.enabled = false;
+    s.placement.device_class = "lite".into();
+    s.placement.max_edge_gb = 0.1;
+    s.placement.prefix_ms_budget = 0.1;
+    s.placement.queue_weight = 99.0;
+    s.placement.gpu_capacity = 0.01;
+    s.autoscale.enabled = false;
+    s.autoscale.min_endpoints = 9;
+    s.autoscale.max_endpoints = 1;
+    s.autoscale.slo_queue = 0;
+    s.autoscale.sustain_rounds = 0;
+    s.autoscale.idle_rounds = 0;
+    s.autoscale.cooldown_rounds = 0;
+    s.autoscale.shed_queue = 1;
+    s.autoscale.family_pools = true;
+    s
+}
+
+/// The composed control-plane scenario: chaos fault schedule, Poisson
+/// open-loop arrivals, deadline batching (a held partial batch is the
+/// scaler's backlog signal), and the `[autoscale]` loop.
+fn composed(shed_queue: usize) -> SystemConfig {
+    let mut s = SystemConfig::default();
+    s.fleet.n_sessions = 8;
+    s.fleet.max_batch = 16;
+    s.fleet.max_inflight = 32;
+    s.fleet.batch_deadline_us = 50_000;
+    s.fleet.endpoints = 1;
+    s.faults = FaultsConfig::demo();
+    s.workload.enabled = true;
+    s.workload.arrivals = "poisson".into();
+    s.workload.interarrival_rounds = 3.0;
+    s.workload.seed = 17;
+    s.autoscale.enabled = true;
+    s.autoscale.min_endpoints = 1;
+    s.autoscale.max_endpoints = 3;
+    s.autoscale.slo_queue = 2;
+    s.autoscale.sustain_rounds = 1;
+    s.autoscale.idle_rounds = 1;
+    s.autoscale.cooldown_rounds = 0;
+    s.autoscale.shed_queue = shed_queue;
+    s
+}
+
+fn assert_all_completed(res: &FleetResult, tag: &str) {
+    let expect = TaskKind::PickPlace.seq_len();
+    for s in &res.sessions {
+        for m in &s.episodes {
+            assert_eq!(m.steps, expect, "{tag}: session {} wedged", s.session);
+        }
+    }
+}
+
+#[test]
+fn disabled_keeps_the_plain_fleet_bit_identical() {
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased] {
+        let mut sys = SystemConfig::default();
+        sys.fleet.n_sessions = 4;
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&hostile_disabled(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("plain/{kind:?}"));
+        assert_eq!(run.stats.scale_up_events, 0);
+        assert_eq!(run.stats.shed_polls, 0);
+    }
+}
+
+#[test]
+fn disabled_keeps_the_reuse_cache_bit_identical() {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.cache.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(base.cache.hits > 0, "the cached fleet must actually hit");
+    let run = Fleet::local(&hostile_disabled(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly)
+        .run();
+    assert_bit_identical(&base, &run, "cache");
+}
+
+#[test]
+fn disabled_keeps_the_chaos_path_bit_identical() {
+    // the fault engine's shared PRNG stream is the strictest differential:
+    // one extra (or missing) draw anywhere — e.g. a control-plane branch
+    // that consulted the engine — would shift every later drop decision
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.fleet.endpoints = 3;
+    sys.faults = FaultsConfig::demo();
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&hostile_disabled(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("chaos/{kind:?}"));
+    }
+}
+
+#[test]
+fn disabled_keeps_the_zoo_path_bit_identical() {
+    // the zoo replan path is where multi-factor placement plugs in: with
+    // [placement] off the planner inputs must stay (family, link) only
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.models.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(base.stats.family_flushes > 0, "the zoo fleet must exercise the family seal");
+    let run = Fleet::local(&hostile_disabled(&sys), TaskKind::PickPlace, PolicyKind::CloudOnly)
+        .run();
+    assert_bit_identical(&base, &run, "zoo");
+}
+
+#[test]
+fn disabled_keeps_the_pipeline_path_bit_identical() {
+    // stacked gates: [pipeline] fully on, [placement]/[autoscale] off —
+    // speculative resubmission must not observe the control plane
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.pipeline.enabled = true;
+    sys.pipeline.overlap = true;
+    sys.pipeline.speculate = true;
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&hostile_disabled(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("pipeline/{kind:?}"));
+    }
+}
+
+#[test]
+fn disabled_keeps_dynamic_arrivals_bit_identical() {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "poisson".into();
+    sys.workload.interarrival_rounds = 4.0;
+    sys.workload.seed = 23;
+    for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+        let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        let run = Fleet::local(&hostile_disabled(&sys), TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&base, &run, &format!("workload/{kind:?}"));
+    }
+}
+
+#[test]
+fn neutral_placement_is_inert_on_the_live_zoo_path() {
+    // [placement] enabled with the unlimited class, zero queue weight and
+    // nominal capacity: the multi-factor score collapses to the
+    // single-factor cost (x * 1.0 == x), so the live fleet must be
+    // bit-identical to placement-off — the fleet-level face of the
+    // planner-level reduction proptest
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.models.enabled = true;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    let mut neutral = sys.clone();
+    neutral.placement.enabled = true;
+    neutral.placement.device_class = "cloudlet".into();
+    neutral.placement.queue_weight = 0.0;
+    neutral.placement.gpu_capacity = 1.0;
+    let run = Fleet::local(&neutral, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&base, &run, "neutral placement");
+}
+
+#[test]
+fn composed_scenario_scales_completes_and_replays() {
+    let sys = composed(0);
+    for kind in [PolicyKind::CloudOnly, PolicyKind::Rapid] {
+        let res = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_all_completed(&res, &format!("composed/{kind:?}"));
+        if kind == PolicyKind::CloudOnly {
+            // the offload-everything policy generates sustained cloud
+            // pressure: both sides of the control loop must move (Rapid's
+            // chunked cadence makes its backlog shape workload-dependent,
+            // so only completion + replay are pinned there)
+            assert!(res.stats.scale_up_events > 0, "never scaled up: {:?}", res.stats);
+            assert!(res.stats.scale_down_events > 0, "never drained: {:?}", res.stats);
+            assert!(res.stats.max_endpoints_observed > 1, "high-water never moved");
+        }
+        assert!(res.stats.max_endpoints_observed <= 3, "{kind:?}: scaled past the ceiling");
+        // exact seeded replay: the scaler reads only deterministic
+        // counters — no clocks, no PRNG draws
+        let again = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+        assert_bit_identical(&res, &again, &format!("composed replay/{kind:?}"));
+    }
+}
+
+#[test]
+fn shed_gate_holds_the_backlog_and_nothing_wedges() {
+    let sys = composed(4);
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_all_completed(&res, "shed");
+    assert!(res.stats.shed_polls > 0, "the gate never engaged: {:?}", res.stats);
+    assert!(res.stats.deferred_offloads > 0, "shed sessions must defer to the edge");
+    // the batcher high-water mark respects the shed threshold
+    assert!(
+        res.stats.max_inflight_observed <= 4,
+        "backlog exceeded shed_queue: {:?}",
+        res.stats
+    );
+    let again = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&res, &again, "shed replay");
+}
+
+#[test]
+fn device_budget_degrades_over_budget_families_without_wedging() {
+    // the `lite` class hosts no OpenVLA or Pi0 split: those zoo sessions
+    // must serve every step edge-only (zero cloud events) and still
+    // complete; the quantized family keeps offloading
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.models.enabled = true;
+    sys.placement.enabled = true;
+    sys.placement.device_class = "lite".into();
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_all_completed(&res, "budget");
+    let mut saw_edge_only = false;
+    let mut saw_offload = false;
+    for t in &res.families {
+        match t.family {
+            ModelFamily::EdgeQuant => {
+                assert!(t.cloud_events > 0, "in-budget family must offload: {t:?}");
+                saw_offload = true;
+            }
+            ModelFamily::OpenVlaAr | ModelFamily::Pi0Diffusion => {
+                assert_eq!(t.cloud_events, 0, "over-budget family offloaded: {t:?}");
+                saw_edge_only = true;
+            }
+            ModelFamily::Surrogate => {}
+        }
+    }
+    assert!(saw_edge_only && saw_offload, "zoo mix must cover both outcomes");
+    let again = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&res, &again, "budget replay");
+}
+
+#[test]
+fn shipped_configs_keep_the_control_plane_disabled() {
+    for name in ["configs/libero.toml", "configs/realworld.toml", "configs/stress_noise.toml",
+        "configs/chaos.toml"]
+    {
+        let src = std::fs::read_to_string(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let sys = SystemConfig::from_toml(&src).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!sys.placement.enabled, "{name} must ship [placement] disabled");
+        assert!(!sys.autoscale.enabled, "{name} must ship [autoscale] disabled");
+        assert!(sys.autoscale.min_endpoints >= 1, "{name}: drain floor below 1");
+        assert!(
+            sys.autoscale.max_endpoints >= sys.autoscale.min_endpoints,
+            "{name}: scale ceiling below the floor"
+        );
+    }
+}
+
+#[test]
+fn family_pools_restrict_spawned_endpoints_and_replay() {
+    // zoo + family_pools, lockstep: block assignment puts the EdgeQuant
+    // pair last in scheduler order, so round 0 ends holding a 2-request
+    // EdgeQuant batch — with slo_queue 1 that backlog deterministically
+    // spawns a pool endpoint advertising only the pressured family. The
+    // two family-seal flushes of round 0 happen before any spawn, so
+    // endpoint 0's dispatch row must cover at least two families.
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.fleet.max_batch = 16;
+    sys.fleet.max_inflight = 32;
+    sys.fleet.batch_deadline_us = 50_000;
+    sys.models.enabled = true;
+    sys.autoscale.enabled = true;
+    sys.autoscale.min_endpoints = 1;
+    sys.autoscale.max_endpoints = 3;
+    sys.autoscale.slo_queue = 1;
+    sys.autoscale.sustain_rounds = 1;
+    sys.autoscale.idle_rounds = 1;
+    sys.autoscale.cooldown_rounds = 0;
+    sys.autoscale.family_pools = true;
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_all_completed(&res, "pools");
+    assert!(res.stats.scale_up_events > 0, "pools scenario never scaled: {:?}", res.stats);
+    let ep0_families =
+        res.endpoint_family_dispatches[0].iter().filter(|&&d| d > 0).count();
+    assert!(ep0_families >= 2, "endpoint 0 must serve the unpooled families: {ep0_families}");
+    let again = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_bit_identical(&res, &again, "pools replay");
+    assert_eq!(
+        res.endpoint_family_dispatches, again.endpoint_family_dispatches,
+        "pools: family spread must replay"
+    );
+}

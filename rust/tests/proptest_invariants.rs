@@ -1306,3 +1306,97 @@ fn prop_traced_fleet_is_bit_identical() {
         Ok(())
     });
 }
+
+/// Invariant #31 (placement): the multi-factor planner reduces to the
+/// single-factor one when every new factor is neutral. With an unlimited
+/// device budget and a nominal endpoint — and equally with any queue
+/// depth under a zero queue weight at unit capacity, since the load
+/// multiplier is then exactly 1.0 — `plan_with` must return the
+/// bit-identical plan `plan` returns, for arbitrary families and links.
+#[test]
+fn prop_multi_factor_planner_reduces_to_single_factor() {
+    use rapid::policy::planner;
+    use rapid::vla::profile::{FamilyProfile, ModelFamily};
+    seeded_forall!("placement_reduction", 300, |rng: &mut Pcg32| {
+        let fam = ModelFamily::ALL[rng.below(4) as usize];
+        let prof = FamilyProfile::of(fam);
+        let bw = rng.range(0.5, 2000.0);
+        let rtt = rng.range(0.5, 150.0);
+        let base = planner::plan(&prof, bw, rtt);
+        let unlimited = planner::plan_with(
+            &prof,
+            bw,
+            rtt,
+            planner::DeviceBudget::UNLIMITED,
+            planner::EndpointLoad::NOMINAL,
+        );
+        if unlimited != base {
+            return Err(format!("{fam:?}: UNLIMITED/NOMINAL diverged: {unlimited:?} vs {base:?}"));
+        }
+        // a deep queue behind a zero weight still multiplies by exactly 1.0
+        let loaded = planner::EndpointLoad {
+            queue_depth: rng.below(64) as u64,
+            capacity: 1.0,
+            queue_weight: 0.0,
+        };
+        let neutral =
+            planner::plan_with(&prof, bw, rtt, planner::DeviceBudget::UNLIMITED, loaded);
+        if neutral != base {
+            return Err(format!("{fam:?}: zero-weight load perturbed the plan"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant #32 (placement): the budget filter is sound and complete.
+/// For random catalogs, budgets, and endpoint loads, a non-edge-only
+/// plan's chosen split always fits the device budget, and the planner
+/// degrades to the edge-only sentinel exactly when *no* split fits —
+/// never because of endpoint load, which reweights but cannot filter.
+#[test]
+fn prop_budget_filter_is_sound_and_complete() {
+    use rapid::policy::planner;
+    use rapid::vla::profile::{FamilyProfile, ModelFamily};
+    seeded_forall!("placement_budget", 300, |rng: &mut Pcg32| {
+        let fam = ModelFamily::ALL[rng.below(4) as usize];
+        let prof = FamilyProfile::of(fam);
+        let bw = rng.range(0.5, 2000.0);
+        let rtt = rng.range(0.5, 150.0);
+        let budget = planner::DeviceBudget {
+            mem_gb: rng.range(0.1, 9.0),
+            prefix_ms: rng.range(0.5, 90.0),
+        };
+        let load = planner::EndpointLoad {
+            queue_depth: rng.below(32) as u64,
+            capacity: rng.range(0.1, 4.0),
+            queue_weight: rng.range(0.0, 2.0),
+        };
+        let p = planner::plan_with(&prof, bw, rtt, budget, load);
+        let any_fits = prof.partitions.iter().any(|pt| budget.admits(pt));
+        if p.is_edge_only() {
+            if any_fits {
+                return Err(format!(
+                    "{fam:?}: degraded to edge-only with admissible splits ({budget:?})"
+                ));
+            }
+            return Ok(());
+        }
+        let chosen = &prof.partitions[p.partition_idx];
+        if chosen.edge_gb > budget.mem_gb {
+            return Err(format!(
+                "{fam:?}: chose edge_gb {} over budget {}",
+                chosen.edge_gb, budget.mem_gb
+            ));
+        }
+        if chosen.edge_prefix_ms > budget.prefix_ms {
+            return Err(format!(
+                "{fam:?}: chose prefix {} ms over budget {} ms",
+                chosen.edge_prefix_ms, budget.prefix_ms
+            ));
+        }
+        if !any_fits {
+            return Err(format!("{fam:?}: offloading plan with an empty admissible set"));
+        }
+        Ok(())
+    });
+}

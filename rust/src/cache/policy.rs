@@ -51,6 +51,21 @@ impl<'a> ReusePolicy<'a> {
         Signature::of(self.cfg, instr, frame, ev, family)
     }
 
+    /// [`ReusePolicy::signature`] discriminated by device class as well:
+    /// with the device zoo armed, a Lite robot's coarse-grid chunks must
+    /// never cross-serve an Agx session. The default class reproduces
+    /// `signature` exactly.
+    pub fn signature_for(
+        &self,
+        instr: usize,
+        frame: &SensorFrame,
+        ev: Option<&ReuseEvidence>,
+        family: crate::vla::profile::ModelFamily,
+        class: crate::runtime::DeviceClass,
+    ) -> Signature {
+        Signature::of_class(self.cfg, instr, frame, ev, family, class)
+    }
+
     /// True when this dispatch may be served from the store.
     pub fn probe_allowed(&self, ev: Option<&ReuseEvidence>) -> bool {
         zscore_gate_allows(ev, self.cfg.max_zscore)

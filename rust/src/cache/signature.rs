@@ -12,6 +12,7 @@
 use crate::config::CacheConfig;
 use crate::dispatcher::ReuseEvidence;
 use crate::robot::SensorFrame;
+use crate::runtime::DeviceClass;
 use crate::vla::profile::ModelFamily;
 use crate::N_JOINTS;
 
@@ -26,6 +27,12 @@ pub struct Signature {
     /// backends (zoo families, or any future edge/cloud variant split)
     /// must never share a cached answer.
     fam: u8,
+    /// Device-class discriminant — chunks never cross device classes
+    /// either: a Lite robot snaps its actions onto a coarse grid, so an
+    /// Agx chunk in the same kinematic bin would replay an incompatible
+    /// trajectory. 0 (Cloudlet) when the device zoo is off, keeping old
+    /// keys bit-identical.
+    dev: u8,
     /// Joint positions, binned at `cache.quant` rad.
     q: [i32; N_JOINTS],
     /// Velocity norm ‖q̇‖, binned at `cache.quant` rad/s.
@@ -56,6 +63,19 @@ impl Signature {
         ev: Option<&ReuseEvidence>,
         family: ModelFamily,
     ) -> Signature {
+        Signature::of_class(cfg, instr, frame, ev, family, DeviceClass::default())
+    }
+
+    /// [`Signature::of`] with an explicit device-class discriminant. The
+    /// default (Cloudlet) class produces exactly the keys `of` produces.
+    pub fn of_class(
+        cfg: &CacheConfig,
+        instr: usize,
+        frame: &SensorFrame,
+        ev: Option<&ReuseEvidence>,
+        family: ModelFamily,
+        class: DeviceClass,
+    ) -> Signature {
         let mut q = [0i32; N_JOINTS];
         for (i, b) in q.iter_mut().enumerate() {
             *b = bin(frame.q[i], cfg.quant);
@@ -64,12 +84,18 @@ impl Signature {
             Some(e) => (bin(e.m_acc_hat, cfg.z_quant), bin(e.m_tau_hat, cfg.z_quant)),
             None => (0, 0),
         };
-        Signature { instr, fam: family.id(), q, v: bin(frame.dq.norm(), cfg.quant), z_acc, z_tau }
+        let v = bin(frame.dq.norm(), cfg.quant);
+        Signature { instr, fam: family.id(), dev: class.id(), q, v, z_acc, z_tau }
     }
 
     /// The family discriminant baked into this key.
     pub fn family_id(&self) -> u8 {
         self.fam
+    }
+
+    /// The device-class discriminant baked into this key.
+    pub fn class_id(&self) -> u8 {
+        self.dev
     }
 }
 
@@ -129,6 +155,24 @@ mod tests {
         // same family still matches
         let c2 = Signature::of(&c, 1, &frame(0.3, 0.2), None, ModelFamily::OpenVlaAr);
         assert_eq!(c2, Signature::of(&c, 1, &frame(0.3, 0.2), None, ModelFamily::OpenVlaAr));
+    }
+
+    #[test]
+    fn device_class_is_a_hard_discriminant() {
+        // regression (PR 10): a Lite robot snaps actions onto a coarse
+        // grid, so its chunks must never cross-serve an Agx session even
+        // in an identical kinematic bin — and vice versa.
+        let c = cfg();
+        let base = Signature::of(&c, 1, &frame(0.3, 0.2), None, FAM);
+        assert_eq!(base.class_id(), 0, "plain `of` keys carry the no-op class");
+        for class in [DeviceClass::Agx, DeviceClass::Nx, DeviceClass::Lite] {
+            let b = Signature::of_class(&c, 1, &frame(0.3, 0.2), None, FAM, class);
+            assert_ne!(base, b, "{class:?} must not share the cloudlet's key");
+            assert_eq!(b.class_id(), class.id());
+        }
+        // the default class is exactly the legacy key
+        let d = Signature::of_class(&c, 1, &frame(0.3, 0.2), None, FAM, DeviceClass::default());
+        assert_eq!(base, d);
     }
 
     #[test]

@@ -202,6 +202,13 @@ pub struct DeviceConfig {
     pub obs_capture_ms: f64,
     /// Service-time jitter fraction.
     pub jitter: f64,
+    /// Device-heterogeneity zoo gate: comma-separated device-class names
+    /// (`cloudlet` | `agx` | `nx` | `lite`) assigned across fleet
+    /// sessions per `[workload] device_mix`. Empty (the default) disables
+    /// the zoo — every session is the implicit `cloudlet` no-op class and
+    /// serving is bit-identical to a class-free build. Unknown names are
+    /// a config-load error (never a silent fallback).
+    pub classes: String,
 }
 
 impl Default for DeviceConfig {
@@ -213,7 +220,31 @@ impl Default for DeviceConfig {
             preempt_ms: 25.0,
             obs_capture_ms: 5.0,
             jitter: 0.05,
+            classes: String::new(),
         }
+    }
+}
+
+impl DeviceConfig {
+    /// Is the device-heterogeneity zoo armed? (A non-empty class list.)
+    pub fn classes_enabled(&self) -> bool {
+        !self.classes.trim().is_empty()
+    }
+
+    /// Parse the class list. Validation at config load guarantees every
+    /// name is known for loaded configs; a programmatically-set unknown
+    /// name panics loudly here rather than silently degrading.
+    pub fn class_list(&self) -> Vec<crate::runtime::DeviceClass> {
+        use crate::runtime::DeviceClass;
+        self.classes
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                DeviceClass::parse(s).unwrap_or_else(|| {
+                    panic!("unknown device class {:?} (known: {})", s.trim(), DeviceClass::NAMES)
+                })
+            })
+            .collect()
     }
 }
 
@@ -496,7 +527,10 @@ pub struct PlacementConfig {
     pub enabled: bool,
     /// Edge device class (`cloudlet` | `agx` | `nx` | `lite`); selects a
     /// built-in [`crate::policy::planner::DeviceBudget`]. Unknown names
-    /// fall back to `cloudlet` (unlimited).
+    /// are rejected at config load (a typo used to silently fall back to
+    /// the unlimited `cloudlet` budget). With `[devices] classes` armed,
+    /// each slot's own class supplies the budget instead and this knob
+    /// only contributes its non-zero overrides.
     pub device_class: String,
     /// Override the class's edge memory budget (GB); 0 keeps the class
     /// value.
@@ -527,9 +561,38 @@ impl Default for PlacementConfig {
 
 impl PlacementConfig {
     /// Resolve the effective device budget: the class catalog entry with
-    /// non-zero overrides applied on top.
+    /// non-zero overrides applied on top. Validation at config load
+    /// guarantees the class name is known for loaded configs; a
+    /// programmatically-set unknown name panics loudly here rather than
+    /// silently removing every budget (the historical UNLIMITED
+    /// fallback).
     pub fn budget(&self) -> crate::policy::planner::DeviceBudget {
-        let mut b = crate::policy::planner::DeviceBudget::of(&self.device_class);
+        use crate::runtime::DeviceClass;
+        let mut b = crate::policy::planner::DeviceBudget::of(&self.device_class)
+            .unwrap_or_else(|| {
+                panic!(
+                    "unknown device class {:?} (known: {})",
+                    self.device_class,
+                    DeviceClass::NAMES
+                )
+            });
+        if self.max_edge_gb > 0.0 {
+            b.mem_gb = self.max_edge_gb;
+        }
+        if self.prefix_ms_budget > 0.0 {
+            b.prefix_ms = self.prefix_ms_budget;
+        }
+        b
+    }
+
+    /// [`PlacementConfig::budget`] for an explicit per-slot device class
+    /// (the device zoo's path): the class catalog entry with this
+    /// section's non-zero overrides applied on top.
+    pub fn budget_for(
+        &self,
+        class: crate::runtime::DeviceClass,
+    ) -> crate::policy::planner::DeviceBudget {
+        let mut b = crate::policy::planner::DeviceBudget::for_class(class);
         if self.max_edge_gb > 0.0 {
             b.mem_gb = self.max_edge_gb;
         }
@@ -682,6 +745,11 @@ pub struct WorkloadConfig {
     /// Family assignment: `blocks` (the lockstep contiguous-block rule) or
     /// `draw` (seeded uniform draw from the `[models]` family list).
     pub family_mix: String,
+    /// Device-class assignment when `[devices] classes` is non-empty:
+    /// `blocks` (contiguous balanced blocks, zero draws) or `draw`
+    /// (seeded uniform draw from the class list). Any other value is a
+    /// config-load error. Inert while the device zoo is disabled.
+    pub device_mix: String,
 }
 
 impl Default for WorkloadConfig {
@@ -699,6 +767,7 @@ impl Default for WorkloadConfig {
             episodes_min: 0,
             episodes_max: 0,
             family_mix: "blocks".into(),
+            device_mix: "blocks".into(),
         }
     }
 }
@@ -950,6 +1019,7 @@ impl SystemConfig {
         self.devices.obs_capture_ms =
             v.f64_or("devices.obs_capture_ms", self.devices.obs_capture_ms);
         self.devices.jitter = v.f64_or("devices.jitter", self.devices.jitter);
+        self.devices.classes = v.str_or("devices.classes", &self.devices.classes).to_string();
 
         self.dispatcher.theta_comp = v.f64_or("dispatcher.theta_comp", self.dispatcher.theta_comp);
         self.dispatcher.theta_red = v.f64_or("dispatcher.theta_red", self.dispatcher.theta_red);
@@ -999,6 +1069,7 @@ impl SystemConfig {
         w.episodes_min = v.usize_or("workload.episodes_min", w.episodes_min);
         w.episodes_max = v.usize_or("workload.episodes_max", w.episodes_max);
         w.family_mix = v.str_or("workload.family_mix", &w.family_mix).to_string();
+        w.device_mix = v.str_or("workload.device_mix", &w.device_mix).to_string();
 
         let f = &mut self.faults;
         f.enabled = v.bool_or("faults.enabled", f.enabled);
@@ -1082,10 +1153,61 @@ impl SystemConfig {
         self.episode.seed = v.f64_or("episode.seed", self.episode.seed as f64) as u64;
     }
 
+    /// Fallible semantic checks an overlay cannot express (`apply_value`
+    /// is infallible): device-class names and workload bounds that must
+    /// be rejected at load instead of silently changing fleet
+    /// composition. Returns the first problem as a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        use crate::runtime::DeviceClass;
+        if DeviceClass::parse(&self.placement.device_class).is_none() {
+            return Err(format!(
+                "[placement] device_class = {:?} is not a known device class (known: {})",
+                self.placement.device_class,
+                DeviceClass::NAMES
+            ));
+        }
+        for name in self.devices.classes.split(',').filter(|s| !s.trim().is_empty()) {
+            if DeviceClass::parse(name).is_none() {
+                return Err(format!(
+                    "[devices] classes names unknown device class {:?} (known: {})",
+                    name.trim(),
+                    DeviceClass::NAMES
+                ));
+            }
+        }
+        let mix = self.workload.device_mix.trim();
+        if !mix.eq_ignore_ascii_case("blocks") && !mix.eq_ignore_ascii_case("draw") {
+            return Err(format!(
+                "[workload] device_mix = {:?} is not a known assignment mode (known: blocks, \
+                 draw; classes: {})",
+                self.workload.device_mix,
+                DeviceClass::NAMES
+            ));
+        }
+        if self.workload.episodes_min > self.workload.episodes_max
+            && self.workload.episodes_max != 0
+        {
+            return Err(format!(
+                "[workload] episodes_min ({}) > episodes_max ({}): inverted episode bounds \
+                 (0/0 pins fleet.episodes_per_session)",
+                self.workload.episodes_min, self.workload.episodes_max
+            ));
+        }
+        if self.workload.episodes_min > 0 && self.workload.episodes_max == 0 {
+            return Err(format!(
+                "[workload] episodes_min ({}) with episodes_max = 0: set both bounds \
+                 (0/0 pins fleet.episodes_per_session)",
+                self.workload.episodes_min
+            ));
+        }
+        Ok(())
+    }
+
     pub fn from_toml(src: &str) -> Result<SystemConfig, super::parse::ParseError> {
         let v = super::parse::parse_toml(src)?;
         let mut cfg = SystemConfig::default();
         cfg.apply_value(&v);
+        cfg.validate().map_err(|msg| super::parse::ParseError::At(0, msg))?;
         Ok(cfg)
     }
 
@@ -1369,7 +1491,69 @@ mod tests {
         let mut d = SystemConfig::default();
         let v = super::super::parse::parse_toml("[placement]\ndevice_class = \"nx\"").unwrap();
         d.apply_value(&v);
-        assert_eq!(d.placement.budget(), crate::policy::planner::DeviceBudget::of("nx"));
+        assert_eq!(d.placement.budget(), crate::policy::planner::DeviceBudget::of("nx").unwrap());
+    }
+
+    #[test]
+    fn devices_classes_default_off_and_overlay() {
+        use crate::runtime::DeviceClass;
+        let c = SystemConfig::default();
+        assert!(!c.devices.classes_enabled(), "device zoo must default off (bit-identity)");
+        assert!(c.devices.class_list().is_empty());
+        assert_eq!(c.workload.device_mix, "blocks");
+        let mut c = SystemConfig::default();
+        let v = super::super::parse::parse_toml(
+            "[devices]\nclasses = \"lite, nx, agx\"\n[workload]\ndevice_mix = \"draw\"",
+        )
+        .unwrap();
+        c.apply_value(&v);
+        assert!(c.devices.classes_enabled());
+        assert_eq!(
+            c.devices.class_list(),
+            vec![DeviceClass::Lite, DeviceClass::Nx, DeviceClass::Agx]
+        );
+        assert_eq!(c.workload.device_mix, "draw");
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn unknown_device_class_names_are_a_load_error() {
+        // regression: a typo'd [placement] device_class used to fall back
+        // to the UNLIMITED cloudlet budget silently; it is now rejected
+        // at load with an error naming the valid classes
+        let err = SystemConfig::from_toml("[placement]\ndevice_class = \"orin-typo\"")
+            .expect_err("typo'd device_class must not load");
+        let msg = err.to_string();
+        assert!(msg.contains("orin-typo"), "{msg}");
+        assert!(msg.contains("cloudlet, agx, nx, lite"), "{msg}");
+        let err = SystemConfig::from_toml("[devices]\nclasses = \"lite, orin-typo\"")
+            .expect_err("typo'd [devices] classes must not load");
+        assert!(err.to_string().contains("cloudlet, agx, nx, lite"), "{err}");
+        let err = SystemConfig::from_toml("[workload]\ndevice_mix = \"shuffled\"")
+            .expect_err("unknown device_mix must not load");
+        assert!(err.to_string().contains("blocks"), "{err}");
+        // every valid name still loads
+        for name in ["cloudlet", "agx", "nx", "lite"] {
+            let src = format!("[placement]\ndevice_class = \"{name}\"");
+            assert!(SystemConfig::from_toml(&src).is_ok(), "{name} must load");
+        }
+        assert!(SystemConfig::from_toml("[devices]\nclasses = \"cloudlet\"").is_ok());
+    }
+
+    #[test]
+    fn inverted_episode_bounds_are_a_load_error() {
+        // regression: workload.plan used to silently raise episodes_max
+        // to episodes_min, pinning a count the config never asked for
+        let err = SystemConfig::from_toml("[workload]\nepisodes_min = 5\nepisodes_max = 2")
+            .expect_err("inverted bounds must not load");
+        assert!(err.to_string().contains("episodes_min"), "{err}");
+        let err = SystemConfig::from_toml("[workload]\nepisodes_min = 5\nepisodes_max = 0")
+            .expect_err("half-set bounds must not load");
+        assert!(err.to_string().contains("episodes_min"), "{err}");
+        // the 0/0 sentinel and ordered bounds still load
+        assert!(SystemConfig::from_toml("[workload]\nepisodes_min = 0\nepisodes_max = 0").is_ok());
+        assert!(SystemConfig::from_toml("[workload]\nepisodes_min = 1\nepisodes_max = 3").is_ok());
+        assert!(SystemConfig::from_toml("[workload]\nepisodes_min = 0\nepisodes_max = 3").is_ok());
     }
 
     #[test]

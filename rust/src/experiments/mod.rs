@@ -17,6 +17,7 @@ pub mod sweep;
 pub mod tab1;
 pub mod tab2;
 pub mod tab345;
+pub mod xpu;
 
 use crate::vla::{AnalyticBackend, Backend};
 

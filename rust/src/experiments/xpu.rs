@@ -1,0 +1,293 @@
+//! Device-heterogeneity (XPU) experiment: the same chaos + workload
+//! scenario served by a homogeneous cloudlet fleet vs a mixed
+//! lite/nx/agx zoo, for each policy in [`POLICIES`].
+//!
+//! Two arms share one seed, fault schedule, and arrival process; only
+//! `[devices] classes` differs:
+//!
+//! * **uniform** — the device zoo disabled: every slot is the implicit
+//!   cloudlet, bit-identical to the class-free scheduler.
+//! * **mixed** — `classes = "lite,nx,agx"`: block-assigned device
+//!   classes, each planning over its own (class, family, link) triple —
+//!   class budget filters the split catalog, class compute scale shifts
+//!   the argmin, and the lite/nx grids snap served actions.
+//!
+//! The point the table makes: the mixed fleet still completes (no class
+//! wedges the batcher), weak silicon pays visibly higher latency, and
+//! the partition matrix shows *why* — a lite robot provably picks a
+//! shallower split (or degrades to edge-only) where a cloudlet offloads
+//! deep. Classes change per-slot physics only, never the shared
+//! schedule, so seeded replays stay exact.
+
+use crate::config::{PolicyKind, SystemConfig};
+use crate::policy::planner;
+use crate::robot::TaskKind;
+use crate::runtime::DeviceClass;
+use crate::serve::Fleet;
+use crate::util::tablefmt::{ms, pct, Table};
+use crate::vla::profile::{FamilyProfile, ModelFamily};
+
+/// Policies compared by the XPU table (the paper's contrast pair:
+/// partitioned RAPID against the offload-everything baseline, which is
+/// blind to edge silicon and so shows the smallest class spread).
+pub const POLICIES: [PolicyKind; 2] = [PolicyKind::Rapid, PolicyKind::CloudOnly];
+
+/// Class mix the mixed arm runs (block-assigned across the fleet).
+pub const MIXED_CLASSES: &str = "lite,nx,agx";
+
+/// Per-class slice of one mixed-fleet run.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassLat {
+    pub class: DeviceClass,
+    pub sessions: usize,
+    pub steps: u64,
+    pub cloud_events: u64,
+    /// Mean emulated episode time (edge + cloud + overhead) per episode.
+    pub mean_ep_ms: f64,
+}
+
+/// Aggregate of one (policy, arm) fleet run.
+#[derive(Debug, Clone)]
+pub struct ArmStats {
+    /// Fleet-aggregate mean total latency per episode.
+    pub lat: f64,
+    /// Fleet task-success rate.
+    pub success: f64,
+    /// Cloud events (wire inferences).
+    pub cloud_events: u64,
+    /// Every episode of every session ran to its full step count.
+    pub completed: bool,
+    /// Per-class rollup (single cloudlet row on the uniform arm).
+    pub classes: Vec<ClassLat>,
+}
+
+pub struct XpuRow {
+    pub policy: PolicyKind,
+    /// `[devices]` disabled: the class-free scheduler verbatim.
+    pub uniform: ArmStats,
+    /// `classes = "lite,nx,agx"` over the same workload.
+    pub mixed: ArmStats,
+}
+
+/// One (class, family) cell of the partition matrix: the split index the
+/// planner picks under the nominal link, and whether the class budget
+/// degraded the family to edge-only.
+#[derive(Debug, Clone, Copy)]
+pub struct MatrixCell {
+    pub class: DeviceClass,
+    pub family: ModelFamily,
+    pub partition_idx: usize,
+    pub edge_only: bool,
+}
+
+fn arm(sys: &SystemConfig, task: TaskKind, kind: PolicyKind) -> ArmStats {
+    let res = Fleet::local(sys, task, kind).run();
+    let summary = res.summary();
+    let expect = task.seq_len();
+    let completed =
+        res.sessions.iter().flat_map(|s| s.episodes.iter()).all(|m| m.steps == expect);
+    let classes = res
+        .classes
+        .iter()
+        .map(|t| {
+            let (mut busy, mut eps) = (0.0, 0u64);
+            for s in res.sessions.iter().filter(|s| s.class == t.class) {
+                for m in &s.episodes {
+                    busy += m.edge_busy_ms + m.cloud_busy_ms + m.overhead_ms;
+                    eps += 1;
+                }
+            }
+            ClassLat {
+                class: t.class,
+                sessions: t.sessions,
+                steps: t.steps,
+                cloud_events: t.cloud_events,
+                mean_ep_ms: if eps > 0 { busy / eps as f64 } else { 0.0 },
+            }
+        })
+        .collect();
+    ArmStats {
+        lat: summary.fleet.total_lat_mean,
+        success: summary.fleet.success_rate,
+        cloud_events: res.total_cloud_events(),
+        completed,
+        classes,
+    }
+}
+
+/// The two arms from a base system config: `[devices]` cleared (the
+/// unmodified scheduler) and the [`MIXED_CLASSES`] zoo. Everything else
+/// — seed, faults, workload, `[models]` — is shared verbatim.
+pub fn arms(sys: &SystemConfig) -> [SystemConfig; 2] {
+    let mut uniform = sys.clone();
+    uniform.devices.classes.clear();
+    let mut mixed = sys.clone();
+    mixed.devices.classes = MIXED_CLASSES.into();
+    [uniform, mixed]
+}
+
+/// The (class × family) partition choices under the nominal link: the
+/// planner run once per cell with the class's catalog budget and compute
+/// scale, an idle nominal endpoint, and no overrides. Pure — zero fleet
+/// state — so the matrix doubles as planner documentation.
+pub fn partition_matrix(sys: &SystemConfig) -> Vec<MatrixCell> {
+    let (bw, rtt) = (sys.link.bw_mbps, sys.link.rtt_ms);
+    let mut cells = Vec::with_capacity(DeviceClass::ALL.len() * ModelFamily::ALL.len());
+    for &class in DeviceClass::ALL.iter() {
+        for &family in ModelFamily::ALL.iter() {
+            let prof = FamilyProfile::of(family);
+            let budget = planner::DeviceBudget::for_class(class);
+            let load = planner::EndpointLoad::NOMINAL;
+            let plan = planner::plan_for_class(&prof, class, bw, rtt, budget, load);
+            cells.push(MatrixCell {
+                class,
+                family,
+                partition_idx: plan.partition_idx,
+                edge_only: plan.is_edge_only(),
+            });
+        }
+    }
+    cells
+}
+
+/// Run the uniform-vs-mixed comparison for each policy in [`POLICIES`].
+pub fn run(sys: &SystemConfig, task: TaskKind) -> (Table, Vec<XpuRow>) {
+    let variants = arms(sys);
+    let mut rows = Vec::new();
+    for kind in POLICIES {
+        rows.push(XpuRow {
+            policy: kind,
+            uniform: arm(&variants[0], task, kind),
+            mixed: arm(&variants[1], task, kind),
+        });
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Device-heterogeneity zoo ({} × {} session(s), mixed = {})",
+            task.name(),
+            sys.fleet.n_sessions.max(1),
+            MIXED_CLASSES,
+        ),
+        &["Method", "Uniform", "Mixed", "Per-class (lite/nx/agx)", "Cloud (uni->mix)", "Success"],
+    );
+    for r in &rows {
+        let by = |c: DeviceClass| {
+            r.mixed
+                .classes
+                .iter()
+                .find(|t| t.class == c)
+                .map_or_else(|| "-".to_string(), |t| ms(t.mean_ep_ms))
+        };
+        t.row(&[
+            r.policy.name().to_string(),
+            ms(r.uniform.lat),
+            ms(r.mixed.lat),
+            format!("{}/{}/{}", by(DeviceClass::Lite), by(DeviceClass::Nx), by(DeviceClass::Agx)),
+            format!("{} -> {}", r.uniform.cloud_events, r.mixed.cloud_events),
+            format!("{} -> {}", pct(r.uniform.success), pct(r.mixed.success)),
+        ]);
+    }
+    t.footnote(
+        "Uniform runs [devices] disabled (the class-free scheduler verbatim); mixed block-assigns \
+         lite/nx/agx across the same workload. Each class plans over its own (class, family, \
+         link) triple: the class budget filters the split catalog, the class compute scale \
+         shifts the argmin toward shallower splits on weak silicon, and nx/lite snap served \
+         actions onto their NPU grids. Per-class columns are mean emulated episode time; classes \
+         change per-slot physics only, so seeded replays are exact.",
+    );
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemConfig {
+        let mut s = SystemConfig::default();
+        s.fleet.n_sessions = 6;
+        s.fleet.max_batch = 4;
+        s.fleet.max_inflight = 16;
+        s.models.enabled = true;
+        s
+    }
+
+    #[test]
+    fn uniform_arm_is_the_unmodified_scheduler() {
+        // arm 0 must be bit-identical to a plain run with [devices] left
+        // at its shipped default — the full differential acceptance pin
+        // lives in rust/tests/device_zoo.rs
+        let base = sys();
+        let (_, rows) = run(&base, TaskKind::PickPlace);
+        for kind in POLICIES {
+            let plain = arm(&base, TaskKind::PickPlace, kind);
+            let r = rows.iter().find(|r| r.policy == kind).unwrap();
+            assert_eq!(r.uniform.lat.to_bits(), plain.lat.to_bits(), "{kind:?}");
+            assert_eq!(r.uniform.cloud_events, plain.cloud_events, "{kind:?}");
+            assert_eq!(r.uniform.classes.len(), 1, "{kind:?}");
+            assert_eq!(r.uniform.classes[0].class, DeviceClass::Cloudlet);
+        }
+    }
+
+    #[test]
+    fn mixed_arm_completes_and_pays_per_class() {
+        let (_, rows) = run(&sys(), TaskKind::PickPlace);
+        for r in &rows {
+            assert!(r.mixed.completed, "{:?}: mixed fleet wedged", r.policy);
+            assert_eq!(r.mixed.classes.len(), 3, "{:?}", r.policy);
+            let steps: u64 = r.mixed.classes.iter().map(|t| t.steps).sum();
+            let uniform_steps: u64 = r.uniform.classes.iter().map(|t| t.steps).sum();
+            assert_eq!(steps, uniform_steps, "{:?}: same schedule of work", r.policy);
+        }
+        // RAPID actually exercises the edge, so weak silicon must cost
+        // more than the cloudlet fleet paid
+        let r = rows.iter().find(|r| r.policy == PolicyKind::Rapid).unwrap();
+        assert!(r.mixed.lat > r.uniform.lat, "{} <= {}", r.mixed.lat, r.uniform.lat);
+    }
+
+    #[test]
+    fn partition_matrix_degrades_with_silicon() {
+        // the constrained link regime (the paper's 120 Mbps / 20 ms edge
+        // uplink): deep splits pay off for strong silicon, so the class
+        // axis visibly moves the argmin. On the default 1 Gbps link the
+        // shallow split wins for every class and the matrix is flat.
+        let mut s = sys();
+        s.link.bw_mbps = 120.0;
+        s.link.rtt_ms = 20.0;
+        let cells = partition_matrix(&s);
+        let cell = |c: DeviceClass, f: ModelFamily| {
+            *cells.iter().find(|x| x.class == c && x.family == f).unwrap()
+        };
+        for &f in ModelFamily::ALL.iter() {
+            // cloudlet is never budget-degraded to edge-only
+            assert!(!cell(DeviceClass::Cloudlet, f).edge_only, "{f:?}");
+        }
+        // the 2 GB lite budget hosts no OpenVLA split at all
+        assert!(cell(DeviceClass::Lite, ModelFamily::OpenVlaAr).edge_only);
+        // and the classes pick provably different points for OpenVLA
+        let cloudlet = cell(DeviceClass::Cloudlet, ModelFamily::OpenVlaAr);
+        let nx = cell(DeviceClass::Nx, ModelFamily::OpenVlaAr);
+        assert_ne!(cloudlet.partition_idx, nx.partition_idx);
+    }
+
+    #[test]
+    fn runs_replay_exactly() {
+        let base = sys();
+        let (_, a) = run(&base, TaskKind::PickPlace);
+        let (_, b) = run(&base, TaskKind::PickPlace);
+        for (ra, rb) in a.iter().zip(b.iter()) {
+            assert_eq!(ra.mixed.lat.to_bits(), rb.mixed.lat.to_bits());
+            assert_eq!(ra.mixed.cloud_events, rb.mixed.cloud_events);
+        }
+    }
+
+    #[test]
+    fn table_renders_all_policies() {
+        let (t, rows) = run(&sys(), TaskKind::PickPlace);
+        assert_eq!(rows.len(), POLICIES.len());
+        let rendered = t.render();
+        for r in &rows {
+            assert!(rendered.contains(r.policy.name().split(' ').next().unwrap()));
+        }
+    }
+}

@@ -96,6 +96,19 @@
 //!   (SLO pressure / idle streaks, with hysteresis) and an admission
 //!   shed gates offloads to edge-only before queues can wedge. Both
 //!   ship disabled and bit-identical off; enabled runs replay exactly.
+//!   The config-gated `[devices] classes` **device-heterogeneity zoo**
+//!   ([`runtime::DeviceClass`]) block- or draw-assigns a catalog of
+//!   edge-silicon classes (cloudlet / agx / nx / lite) across fleet
+//!   sessions: each slot plans over its own (class, family, link)
+//!   triple — the class budget filters the split catalog, the compute
+//!   scale shifts the argmin toward shallower splits on weak silicon,
+//!   NPU classes snap served actions onto their grids, and reuse
+//!   signatures carry the class as a hard discriminant so cache hits
+//!   never cross a class boundary. Per-class rollups exactly partition
+//!   fleet totals; disabled (or cloudlet-only), every factor is an
+//!   exact no-op and serving is bit-identical to the class-free
+//!   scheduler. Unknown class names fail at config load — never a
+//!   silent unlimited budget.
 //! * [`obs`] — the observability layer, config-gated behind `[trace]`:
 //!   a deterministic virtual-time span tracer (Chrome trace-event JSON /
 //!   JSONL export, zero PRNG draws, zero clock advances — traced runs

@@ -5,7 +5,7 @@
 //!             [--noise standard|noise|distraction] [--episodes N] [--seed S]
 //!             [--analytic] [--trace out.csv] [--config file.toml]
 //! rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve|zoo
-//!             |workload|pipeline|scale|obs|all> [--json BENCH_serve.json] [--budget-ms MS]
+//!             |workload|pipeline|xpu|scale|obs|all> [--json BENCH_serve.json] [--budget-ms MS]
 //!             (scale also takes --sessions N: the Poisson fleet ladder
 //!              climbs to N in-process sessions, e.g. --sessions 100000)
 //! rapid serve [--addr 127.0.0.1:7070] [--batch 4] [--analytic]
@@ -18,6 +18,7 @@
 //!             [--arrivals fixed|poisson|bursty|trace] [--trace T] [--interarrival R]
 //! rapid pipeline [--sessions N] [--task T] [--seed S] [--config file.toml]
 //! rapid autoscale [--sessions N] [--task T] [--seed S] [--config file.toml]
+//! rapid xpu   [--sessions N] [--task T] [--seed S] [--config file.toml]
 //! rapid info
 //! ```
 //!
@@ -41,6 +42,7 @@ fn main() {
         Some("workload") => cmd_workload(&args[1..]),
         Some("pipeline") => cmd_pipeline(&args[1..]),
         Some("autoscale") => cmd_autoscale(&args[1..]),
+        Some("xpu") => cmd_xpu(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
@@ -62,7 +64,7 @@ fn print_help() {
          USAGE:\n  rapid run   [--preset P] [--policy K] [--task T] [--noise N] [--episodes E]\n\
          \x20             [--seed S] [--analytic] [--trace FILE] [--config FILE]\n\
          \x20 rapid bench <tab1|tab2|tab3|tab4|tab5|fig2|fig3|fig5|sweep|overhead|reuse|serve\n\
-         \x20             |zoo|workload|pipeline|autoscale|scale|obs|all>\n\
+         \x20             |zoo|workload|pipeline|autoscale|xpu|scale|obs|all>\n\
          \x20             [--config FILE] [--json FILE] [--budget-ms MS]\n\
          \x20             (serve: benchkit timings of the serve layer, written as\n\
          \x20              machine-readable JSON with --json, e.g. BENCH_serve.json;\n\
@@ -102,6 +104,11 @@ fn print_help() {
          \x20              chaos schedule with a Poisson workload and compares\n\
          \x20              static-min/static-max provisioning against the\n\
          \x20              [autoscale] loop, with and without admission shed)\n\
+         \x20 rapid xpu   [--sessions N] [--task T] [--seed S] [--config FILE]\n\
+         \x20             (device-heterogeneity zoo: class catalog, the\n\
+         \x20              class x family partition matrix, then the uniform\n\
+         \x20              cloudlet fleet vs a mixed lite/nx/agx fleet for\n\
+         \x20              RAPID vs Cloud-Only under the chaos schedule)\n\
          \x20 rapid trace [--sessions N] [--config FILE] [--out trace.json]\n\
          \x20             (deterministic trace demo: two fleets composed to hit\n\
          \x20              every span stage; writes Perfetto-loadable Chrome\n\
@@ -152,6 +159,13 @@ fn load_sys(flags: &Flags) -> SystemConfig {
     }
     if let Some(e) = flags.get("--episodes").and_then(|s| s.parse().ok()) {
         sys.episode.episodes = e;
+    }
+    // `from_toml` validates file loads; the overlay path (`apply_value` +
+    // CLI flags) must reject bad knob combinations too — an unknown
+    // device class must never fall through to a silent default
+    if let Err(msg) = sys.validate() {
+        eprintln!("config error: {msg}");
+        std::process::exit(2);
     }
     sys
 }
@@ -328,6 +342,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         "workload" => bench_workload(&sys, &flags, single),
         "pipeline" => bench_pipeline(&sys, &flags, single),
         "autoscale" => bench_autoscale(&sys, &flags, single),
+        "xpu" => bench_xpu(&sys, &flags, single),
         "scale" => bench_scale(&sys, &flags, single),
         "obs" => bench_obs(&sys, &flags, single),
         other => eprintln!("unknown bench {other}"),
@@ -343,7 +358,7 @@ fn cmd_bench(rest: &[String]) -> i32 {
         // default ladder is a deliberate long run; see the help text)
         for name in [
             "tab1", "tab2", "tab3", "tab4", "tab5", "fig2", "fig3", "fig5", "sweep", "overhead",
-            "reuse", "serve", "zoo", "workload", "pipeline", "autoscale", "obs",
+            "reuse", "serve", "zoo", "workload", "pipeline", "autoscale", "xpu", "obs",
         ] {
             println!("\n### {name}");
             run_one(name, &mut b);
@@ -652,7 +667,7 @@ fn bench_autoscale(sys: &SystemConfig, flags: &Flags, write_json: bool) {
 
     // multi-factor planner hot loop: one budget-filtered, endpoint-aware
     // plan per family per call (the replan path a loaded round pays)
-    let budget_nx = planner::DeviceBudget::of("nx");
+    let budget_nx = planner::DeviceBudget::of("nx").expect("nx is a catalog class");
     bench.run("planner/plan_with_all_families", || {
         for (i, fam) in ModelFamily::ALL.into_iter().enumerate() {
             let load = planner::EndpointLoad {
@@ -662,6 +677,66 @@ fn bench_autoscale(sys: &SystemConfig, flags: &Flags, write_json: bool) {
             };
             let p = planner::plan_with(&FamilyProfile::of(fam), 200.0, 20.0, budget_nx, load);
             std::hint::black_box(p.partition_idx);
+        }
+    });
+
+    if let Some(path) = flags.get("--json").filter(|_| write_json) {
+        match bench.save_json(path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// `rapid bench xpu`: benchkit timings of the device-zoo path — the
+/// uniform (class-free) fleet vs the mixed lite/nx/agx fleet for RAPID
+/// and Cloud-Only, plus the full (class × family) planner matrix —
+/// optionally written as machine-readable JSON (`--json BENCH_xpu.json`).
+/// The `uniform` cases double as a perf guard: the disabled-zoo fleet
+/// must not regress under the new class branches.
+fn bench_xpu(sys: &SystemConfig, flags: &Flags, write_json: bool) {
+    use rapid::policy::planner;
+    use rapid::robot::TaskKind;
+    use rapid::runtime::DeviceClass;
+    use rapid::vla::{FamilyProfile, ModelFamily};
+
+    let budget = flags.get("--budget-ms").and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let mut bench = rapid::benchkit::Bench::new().with_budget_ms(budget);
+    rapid::benchkit::header("device-heterogeneity zoo");
+
+    let mut zoo_sys = sys.clone();
+    zoo_sys.models.enabled = true;
+    let arms = rapid::experiments::xpu::arms(&zoo_sys);
+    let n = sys.fleet.n_sessions.max(1);
+    for (arm_idx, label) in [(0usize, "uniform"), (1usize, "mixed")] {
+        for kind in [PolicyKind::Rapid, PolicyKind::CloudOnly] {
+            let name = format!(
+                "xpu_fleet/{n}s/{label}/{}",
+                if kind == PolicyKind::Rapid { "rapid" } else { "cloud_only" }
+            );
+            let s = arms[arm_idx].clone();
+            bench.run(&name, || {
+                let res = rapid::serve::Fleet::local(&s, TaskKind::PickPlace, kind).run();
+                std::hint::black_box(res.total_steps());
+            });
+        }
+    }
+
+    // per-class planner hot loop: one budget-filtered, class-scaled plan
+    // per (class, family) cell — the full matrix replan a mixed fleet
+    // pays at every link edge
+    bench.run("planner/plan_for_class_matrix", || {
+        for class in DeviceClass::ALL {
+            let budget = planner::DeviceBudget::for_class(class);
+            for fam in ModelFamily::ALL {
+                let prof = FamilyProfile::of(fam);
+                let load = planner::EndpointLoad::NOMINAL;
+                let p = planner::plan_for_class(&prof, class, 200.0, 20.0, budget, load);
+                std::hint::black_box(p.partition_idx);
+            }
         }
     });
 
@@ -1507,6 +1582,97 @@ fn cmd_autoscale(rest: &[String]) -> i32 {
         eprintln!("WEDGED arms: {bad:?}");
         if let Some((arm_idx, kind)) = first_bad {
             dump_flight(&rapid::experiments::autoscale::arms(&sys)[arm_idx], task, kind);
+        }
+        1
+    }
+}
+
+/// `rapid xpu`: the device-heterogeneity zoo. Composes the chaos
+/// schedule (same fallback chain as `rapid autoscale`) with the model
+/// zoo — per-class partition choices only show once family plans are
+/// installed — prints the class catalog and the (class × family)
+/// partition matrix under the nominal link, then the uniform-vs-mixed
+/// fleet table. Exits 1 (dumping the flight ring) when any arm wedges.
+fn cmd_xpu(rest: &[String]) -> i32 {
+    use rapid::policy::planner;
+    use rapid::runtime::DeviceClass;
+
+    let flags = Flags(rest);
+    let mut sys = load_sys(&flags);
+    let explicit_config = flags.get("--config").is_some();
+    if !explicit_config {
+        if let Ok(src) = std::fs::read_to_string("configs/chaos.toml") {
+            match rapid::config::parse::parse_toml(&src) {
+                Ok(v) => {
+                    sys.apply_value(&v);
+                    println!("schedule: configs/chaos.toml");
+                }
+                Err(e) => {
+                    eprintln!("configs/chaos.toml parse error: {e}");
+                    return 2;
+                }
+            }
+        }
+    }
+    if !sys.faults.enabled {
+        sys.faults = rapid::config::FaultsConfig::demo();
+        println!("schedule: built-in demo (active config enables no faults)");
+    } else if explicit_config {
+        println!("schedule: --config");
+    }
+    if let Some(n) = flags.get("--sessions").and_then(|s| s.parse::<usize>().ok()) {
+        sys.fleet.n_sessions = n.max(1);
+        sys.workload.n_sessions = n.max(1);
+    }
+    let task = flags
+        .get("--task")
+        .and_then(TaskKind::parse)
+        .unwrap_or(rapid::robot::TaskKind::PickPlace);
+    sys.models.enabled = true;
+
+    println!("device classes (edge x / obs x / action grid / budget GB / budget ms):");
+    for &c in DeviceClass::ALL.iter() {
+        let b = planner::DeviceBudget::for_class(c);
+        println!(
+            "  {:<8} x{:<4} x{:<4} {:<9} {:<6} {}",
+            c.name(),
+            c.edge_scale(),
+            c.obs_scale(),
+            if c.action_quant() > 0.0 { format!("{:.4}", c.action_quant()) } else { "-".into() },
+            if b.mem_gb.is_finite() { format!("{}", b.mem_gb) } else { "inf".into() },
+            if b.prefix_ms.is_finite() { format!("{}", b.prefix_ms) } else { "inf".into() },
+        );
+    }
+    println!("partition matrix (class x family -> split idx, e = edge-only):");
+    for cell in rapid::experiments::xpu::partition_matrix(&sys) {
+        let pick =
+            if cell.edge_only { "e".to_string() } else { format!("{}", cell.partition_idx) };
+        println!("  {:<8} {:<10} {pick}", cell.class.name(), cell.family.name());
+    }
+
+    let t0 = std::time::Instant::now();
+    let (table, rows) = rapid::experiments::xpu::run(&sys, task);
+    print!("{}", table.render());
+    let mut bad: Vec<String> = Vec::new();
+    let mut first_bad: Option<(usize, PolicyKind)> = None;
+    for r in &rows {
+        for (arm_idx, label, a) in [(0usize, "uniform", &r.uniform), (1, "mixed", &r.mixed)] {
+            if !a.completed {
+                bad.push(format!("{}/{label} wedged", r.policy.name()));
+                first_bad.get_or_insert((arm_idx, r.policy));
+            }
+        }
+    }
+    if bad.is_empty() {
+        println!(
+            "all arms completed (zero wedged sessions); wall {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        0
+    } else {
+        eprintln!("WEDGED arms: {bad:?}");
+        if let Some((arm_idx, kind)) = first_bad {
+            dump_flight(&rapid::experiments::xpu::arms(&sys)[arm_idx], task, kind);
         }
         1
     }

@@ -42,6 +42,7 @@
 //! [`edge_only_plan`] sentinel: the session serves every step from its
 //! resident edge slice and never offloads (no wedge, no panic).
 
+use crate::runtime::device::DeviceClass;
 use crate::vla::profile::{FamilyProfile, ModelFamily, PartitionPoint};
 
 /// `partition_idx` sentinel of the edge-only degrade plan: no catalog
@@ -103,9 +104,8 @@ impl DeviceBudget {
     pub const UNLIMITED: DeviceBudget =
         DeviceBudget { mem_gb: f64::INFINITY, prefix_ms: f64::INFINITY };
 
-    /// Built-in device-class catalog (RoboECC-style anchors). Unknown
-    /// class names fall back to `cloudlet` (unlimited), so a typo can
-    /// never brick a fleet.
+    /// Built-in device-class catalog (RoboECC-style anchors), keyed by
+    /// [`DeviceClass`]:
     ///
     /// * `cloudlet` — wall-powered edge server: no budget.
     /// * `agx`      — embedded GPU module: 5 GB / 70 ms (excludes only
@@ -115,13 +115,22 @@ impl DeviceBudget {
     /// * `lite`     — battery CPU-only robot: 2 GB / 10 ms (only the
     ///   quantized family's shallow split fits; every other family
     ///   degrades to edge-only).
-    pub fn of(class: &str) -> DeviceBudget {
+    pub fn for_class(class: DeviceClass) -> DeviceBudget {
         match class {
-            "agx" => DeviceBudget { mem_gb: 5.0, prefix_ms: 70.0 },
-            "nx" => DeviceBudget { mem_gb: 3.5, prefix_ms: 30.0 },
-            "lite" => DeviceBudget { mem_gb: 2.0, prefix_ms: 10.0 },
-            _ => DeviceBudget::UNLIMITED,
+            DeviceClass::Cloudlet => DeviceBudget::UNLIMITED,
+            DeviceClass::Agx => DeviceBudget { mem_gb: 5.0, prefix_ms: 70.0 },
+            DeviceClass::Nx => DeviceBudget { mem_gb: 3.5, prefix_ms: 30.0 },
+            DeviceClass::Lite => DeviceBudget { mem_gb: 2.0, prefix_ms: 10.0 },
         }
+    }
+
+    /// [`DeviceBudget::for_class`] from a config-file class name. Returns
+    /// `None` for unknown names — callers must reject, not default. (The
+    /// historical fallback to `UNLIMITED` meant a typo'd
+    /// `[placement] device_class` silently removed every budget; config
+    /// load now validates names against [`DeviceClass::NAMES`].)
+    pub fn of(class: &str) -> Option<DeviceBudget> {
+        DeviceClass::parse(class).map(DeviceBudget::for_class)
     }
 
     /// Is `p` inside this budget?
@@ -264,6 +273,78 @@ pub fn plan(profile: &FamilyProfile, bw_mbps: f64, rtt_ms: f64) -> FamilyPlan {
     plan_with(profile, bw_mbps, rtt_ms, DeviceBudget::UNLIMITED, EndpointLoad::NOMINAL)
 }
 
+/// [`partition_score`] with the edge-prefix term scaled by the device
+/// class's compute factor: weaker silicon pays more for the same split
+/// activations, so the argmin shifts toward shallower splits (or cloud
+/// work) on weak devices. `prefix_scale == 1.0` is bit-identical to
+/// [`partition_score`] (`x * 1.0 == x`, same summation order).
+pub fn partition_score_for_class(
+    p: &PartitionPoint,
+    prefix_scale: f64,
+    bw_mbps: f64,
+    rtt_ms: f64,
+    load_mult: f64,
+) -> f64 {
+    let bw = bw_mbps.max(1e-3);
+    p.edge_prefix_ms * prefix_scale
+        + p.payload_bytes * 8.0 / (bw * 1e6) * 1e3
+        + rtt_ms / 2.0
+        + p.cloud_compute_ms * load_mult
+}
+
+/// Plan over a (device class, family, link) triple: [`plan_with`]'s
+/// budget-filtered, endpoint-aware argmin with the edge-prefix term
+/// scaled by the class's compute factor, and the chosen plan's
+/// `edge_prefix_ms` carrying that class-scaled cost (what the driver
+/// actually charges per offload). The budget still filters on the
+/// *unscaled* catalog values (memory is class-independent). For
+/// [`DeviceClass::Cloudlet`] (scale exactly 1.0) this is bit-identical
+/// to [`plan_with`]. A catalog filtered to empty degrades to
+/// [`edge_only_plan`] — on a `lite` robot most families land here.
+pub fn plan_for_class(
+    profile: &FamilyProfile,
+    class: DeviceClass,
+    bw_mbps: f64,
+    rtt_ms: f64,
+    budget: DeviceBudget,
+    load: EndpointLoad,
+) -> FamilyPlan {
+    let scale = class.edge_scale();
+    let load_mult = load.multiplier();
+    let mut best: Option<usize> = None;
+    let mut best_cost = f64::INFINITY;
+    for (i, p) in profile.partitions.iter().enumerate() {
+        if !budget.admits(p) {
+            continue;
+        }
+        let c = partition_score_for_class(p, scale, bw_mbps, rtt_ms, load_mult);
+        if !c.is_finite() {
+            continue;
+        }
+        // strict '<' + shallow-to-deep catalog order: ties keep the
+        // earlier (larger-payload) point, as in `try_plan_with`
+        if c < best_cost {
+            best = Some(i);
+            best_cost = c;
+        }
+    }
+    let Some(best) = best else {
+        return edge_only_plan(profile);
+    };
+    let p = profile.partitions[best];
+    FamilyPlan {
+        family: profile.family,
+        chunk_len: profile.chunk_len,
+        edge_ms_scale: profile.edge_ms_scale,
+        edge_prefix_ms: p.edge_prefix_ms * scale,
+        payload_bytes: p.payload_bytes,
+        cloud_compute_ms: p.cloud_compute_ms,
+        full_cloud_ms: profile.partitions[0].cloud_compute_ms,
+        edge_gb: p.edge_gb,
+        partition_idx: best,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,10 +423,10 @@ mod tests {
         // the `lite` class (2 GB) cannot host any OpenVLA split (2.4 GB
         // shallowest): filtered-to-empty must yield the edge-only sentinel
         let prof = FamilyProfile::of(ModelFamily::OpenVlaAr);
-        let p = plan_with(&prof, 100.0, 10.0, DeviceBudget::of("lite"), EndpointLoad::NOMINAL);
+        let lite = DeviceBudget::for_class(DeviceClass::Lite);
+        let p = plan_with(&prof, 100.0, 10.0, lite, EndpointLoad::NOMINAL);
         assert!(p.is_edge_only());
-        assert!(try_plan_with(&prof, 100.0, 10.0, DeviceBudget::of("lite"), EndpointLoad::NOMINAL)
-            .is_none());
+        assert!(try_plan_with(&prof, 100.0, 10.0, lite, EndpointLoad::NOMINAL).is_none());
     }
 
     #[test]
@@ -383,7 +464,13 @@ mod tests {
         let prof = FamilyProfile::of(ModelFamily::OpenVlaAr);
         let free = plan(&prof, 5.0, 80.0);
         assert_eq!(free.partition_idx, 2);
-        let nx = plan_with(&prof, 5.0, 80.0, DeviceBudget::of("nx"), EndpointLoad::NOMINAL);
+        let nx = plan_with(
+            &prof,
+            5.0,
+            80.0,
+            DeviceBudget::for_class(DeviceClass::Nx),
+            EndpointLoad::NOMINAL,
+        );
         assert_eq!(nx.partition_idx, 1, "budget must stop at the mid split");
         assert!(nx.edge_gb <= 3.5 && nx.edge_prefix_ms <= 30.0);
     }
@@ -410,12 +497,74 @@ mod tests {
     }
 
     #[test]
-    fn device_class_catalog_parses_and_falls_back() {
-        assert_eq!(DeviceBudget::of("cloudlet"), DeviceBudget::UNLIMITED);
-        assert_eq!(DeviceBudget::of("unknown-typo"), DeviceBudget::UNLIMITED);
-        let nx = DeviceBudget::of("nx");
-        assert!(nx.mem_gb < DeviceBudget::of("agx").mem_gb);
-        assert!(DeviceBudget::of("lite").mem_gb < nx.mem_gb);
+    fn device_class_catalog_parses_and_rejects_unknown_names() {
+        // regression (flipped pin): `of` used to fall back to UNLIMITED
+        // for any unrecognized string, so a typo'd [placement]
+        // device_class silently removed every budget. Unknown names are
+        // now rejected — config load turns this None into a hard error.
+        assert_eq!(DeviceBudget::of("unknown-typo"), None);
+        assert_eq!(DeviceBudget::of(""), None);
+        assert_eq!(DeviceBudget::of("cloudlet"), Some(DeviceBudget::UNLIMITED));
+        let nx = DeviceBudget::of("nx").unwrap();
+        assert!(nx.mem_gb < DeviceBudget::of("agx").unwrap().mem_gb);
+        assert!(DeviceBudget::of("lite").unwrap().mem_gb < nx.mem_gb);
+        for c in DeviceClass::ALL {
+            assert_eq!(DeviceBudget::of(c.name()), Some(DeviceBudget::for_class(c)));
+        }
         assert_eq!(EndpointLoad::NOMINAL.multiplier(), 1.0);
+    }
+
+    #[test]
+    fn cloudlet_class_plan_is_bit_identical_to_plan_with() {
+        for fam in ModelFamily::ALL {
+            let prof = FamilyProfile::of(fam);
+            for (bw, rtt) in [(1000.0, 8.0), (50.0, 40.0), (5.0, 80.0), (77.7, 13.0)] {
+                let base =
+                    plan_with(&prof, bw, rtt, DeviceBudget::UNLIMITED, EndpointLoad::NOMINAL);
+                let cls = plan_for_class(
+                    &prof,
+                    DeviceClass::Cloudlet,
+                    bw,
+                    rtt,
+                    DeviceBudget::UNLIMITED,
+                    EndpointLoad::NOMINAL,
+                );
+                assert_eq!(base, cls, "{fam:?} at {bw} Mbps");
+            }
+        }
+    }
+
+    #[test]
+    fn classes_pick_provably_different_partition_points() {
+        // the device-zoo acceptance shape at the default 120 Mbps / 20 ms
+        // link: cloudlet takes OpenVLA's deep split, nx is budget-stopped
+        // at the mid split, lite can host no OpenVLA split at all
+        let prof = FamilyProfile::of(ModelFamily::OpenVlaAr);
+        let plan_of = |class: DeviceClass| {
+            let budget = DeviceBudget::for_class(class);
+            plan_for_class(&prof, class, 120.0, 20.0, budget, EndpointLoad::NOMINAL)
+        };
+        let cloudlet = plan_of(DeviceClass::Cloudlet);
+        let nx = plan_of(DeviceClass::Nx);
+        let lite = plan_of(DeviceClass::Lite);
+        assert!(lite.is_edge_only(), "lite must degrade to edge-only: {lite:?}");
+        assert!(!cloudlet.is_edge_only() && !nx.is_edge_only());
+        assert!(
+            nx.partition_idx < cloudlet.partition_idx,
+            "nx must stop shallower than cloudlet: {} vs {}",
+            nx.partition_idx,
+            cloudlet.partition_idx
+        );
+        // the class-scaled prefix is what the plan carries
+        let scaled = plan_for_class(
+            &prof,
+            DeviceClass::Nx,
+            120.0,
+            20.0,
+            DeviceBudget::UNLIMITED,
+            EndpointLoad::NOMINAL,
+        );
+        let raw = prof.partitions[scaled.partition_idx].edge_prefix_ms;
+        assert_eq!(scaled.edge_prefix_ms, raw * DeviceClass::Nx.edge_scale());
     }
 }

@@ -9,6 +9,119 @@
 use crate::config::{DeviceConfig, SystemConfig};
 use crate::util::Pcg32;
 
+/// Number of device classes in the catalog ([`DeviceClass::ALL`]).
+pub const N_CLASSES: usize = 4;
+
+/// Edge-device class catalog (the XPU heterogeneity axis): what silicon a
+/// fleet slot actually is. Each class carries the runtime factors the
+/// planner and driver need — edge-compute scale, obs-capture cost, and
+/// action-grid quantization — while its memory/prefix *budget* lives in
+/// [`crate::policy::planner::DeviceBudget::for_class`]. The default
+/// `Cloudlet` class is an exact no-op (every scale 1.0, grid off, budget
+/// unlimited): a fleet of cloudlets is bit-identical to a class-free run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DeviceClass {
+    /// Wall-powered edge server: the calibration anchor, exact no-op.
+    #[default]
+    Cloudlet,
+    /// Embedded GPU module (Orin AGX style): near-anchor compute.
+    Agx,
+    /// Mid-tier embedded module (Orin NX style): slower prefix, coarse
+    /// NPU action grid.
+    Nx,
+    /// Battery CPU-only robot: slowest compute, coarsest grid.
+    Lite,
+}
+
+impl DeviceClass {
+    /// Catalog order == `id()` order.
+    pub const ALL: [DeviceClass; N_CLASSES] =
+        [DeviceClass::Cloudlet, DeviceClass::Agx, DeviceClass::Nx, DeviceClass::Lite];
+
+    /// Valid class names, for config-error messages.
+    pub const NAMES: &'static str = "cloudlet, agx, nx, lite";
+
+    /// Stable wire/signature discriminant (`Cloudlet == 0`, so legacy
+    /// class-free signatures and reports read as cloudlet).
+    pub fn id(self) -> u8 {
+        match self {
+            DeviceClass::Cloudlet => 0,
+            DeviceClass::Agx => 1,
+            DeviceClass::Nx => 2,
+            DeviceClass::Lite => 3,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Option<DeviceClass> {
+        DeviceClass::ALL.get(id as usize).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceClass::Cloudlet => "cloudlet",
+            DeviceClass::Agx => "agx",
+            DeviceClass::Nx => "nx",
+            DeviceClass::Lite => "lite",
+        }
+    }
+
+    /// Parse a config-file class name (trimmed, case-insensitive).
+    pub fn parse(s: &str) -> Option<DeviceClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cloudlet" | "default" => Some(DeviceClass::Cloudlet),
+            "agx" => Some(DeviceClass::Agx),
+            "nx" => Some(DeviceClass::Nx),
+            "lite" => Some(DeviceClass::Lite),
+            _ => None,
+        }
+    }
+
+    /// Multiplier on edge-slice inference time (weaker silicon is slower
+    /// at the same resident GB). `Cloudlet` is exactly 1.0 — the no-op.
+    pub fn edge_scale(self) -> f64 {
+        match self {
+            DeviceClass::Cloudlet => 1.0,
+            DeviceClass::Agx => 1.25,
+            DeviceClass::Nx => 1.6,
+            DeviceClass::Lite => 2.2,
+        }
+    }
+
+    /// Multiplier on camera observation-capture latency (slower ISP /
+    /// CPU-bound encode on weaker devices). `Cloudlet` is exactly 1.0.
+    pub fn obs_scale(self) -> f64 {
+        match self {
+            DeviceClass::Cloudlet => 1.0,
+            DeviceClass::Agx => 1.1,
+            DeviceClass::Nx => 1.25,
+            DeviceClass::Lite => 1.5,
+        }
+    }
+
+    /// Action-grid quantization step (rad/s) the device's NPU/CPU
+    /// inference path snaps served actions to; 0.0 = continuous output
+    /// (no snapping — the no-op for `cloudlet`/`agx`).
+    pub fn action_quant(self) -> f64 {
+        match self {
+            DeviceClass::Cloudlet | DeviceClass::Agx => 0.0,
+            DeviceClass::Nx => 1.0 / 128.0,
+            DeviceClass::Lite => 1.0 / 64.0,
+        }
+    }
+}
+
+/// Deterministic block assignment of device classes across a fleet
+/// (mirrors `vla::zoo::assign_families`): session `i` of `n` gets
+/// `classes[i * classes.len() / n]` — contiguous balanced blocks, zero
+/// PRNG draws. An empty list yields the default class.
+pub fn assign_classes(classes: &[DeviceClass], n_sessions: usize, session: usize) -> DeviceClass {
+    if classes.is_empty() || n_sessions == 0 {
+        return DeviceClass::default();
+    }
+    let i = session.min(n_sessions - 1);
+    classes[(i * classes.len()) / n_sessions]
+}
+
 #[derive(Debug, Clone)]
 pub struct DeviceClock {
     cfg: DeviceConfig,
@@ -77,7 +190,14 @@ impl DeviceClock {
     }
 
     pub fn obs_capture(&mut self) -> f64 {
-        let t = self.jittered(self.cfg.obs_capture_ms);
+        self.obs_capture_scaled(1.0)
+    }
+
+    /// [`DeviceClock::obs_capture`] under a device-class time multiplier.
+    /// Scale 1.0 is bit-identical to the unscaled call — one jitter draw
+    /// either way (same pattern as [`DeviceClock::edge_infer_scaled`]).
+    pub fn obs_capture_scaled(&mut self, scale: f64) -> f64 {
+        let t = self.jittered(self.cfg.obs_capture_ms) * scale;
         self.now_ms += t;
         t
     }
@@ -144,5 +264,61 @@ mod tests {
             assert!(c.preempt() >= 0.0);
             assert!(c.obs_capture() >= 0.0);
         }
+    }
+
+    #[test]
+    fn class_catalog_roundtrips_and_defaults_to_the_noop() {
+        assert_eq!(DeviceClass::default(), DeviceClass::Cloudlet);
+        for (i, c) in DeviceClass::ALL.into_iter().enumerate() {
+            assert_eq!(c.id() as usize, i, "ALL order must match id()");
+            assert_eq!(DeviceClass::from_id(c.id()), Some(c));
+            assert_eq!(DeviceClass::parse(c.name()), Some(c));
+            assert_eq!(DeviceClass::parse(&format!("  {}  ", c.name().to_uppercase())), Some(c));
+        }
+        assert_eq!(DeviceClass::parse("default"), Some(DeviceClass::Cloudlet));
+        assert_eq!(DeviceClass::parse("orin-typo"), None);
+        assert_eq!(DeviceClass::from_id(99), None);
+        // the default class is an exact no-op at every runtime factor
+        assert_eq!(DeviceClass::Cloudlet.edge_scale(), 1.0);
+        assert_eq!(DeviceClass::Cloudlet.obs_scale(), 1.0);
+        assert_eq!(DeviceClass::Cloudlet.action_quant(), 0.0);
+        // weaker silicon is monotonically slower
+        assert!(DeviceClass::Agx.edge_scale() < DeviceClass::Nx.edge_scale());
+        assert!(DeviceClass::Nx.edge_scale() < DeviceClass::Lite.edge_scale());
+        assert!(DeviceClass::Nx.action_quant() < DeviceClass::Lite.action_quant());
+    }
+
+    #[test]
+    fn obs_capture_scale_one_is_bit_identical() {
+        let sys = SystemConfig::default();
+        let mut a = DeviceClock::new(&sys.devices, 6);
+        let mut b = DeviceClock::new(&sys.devices, 6);
+        for _ in 0..100 {
+            assert_eq!(a.obs_capture(), b.obs_capture_scaled(1.0));
+            assert_eq!(a.now_ms, b.now_ms);
+        }
+        // a non-unit scale consumes exactly one draw too: streams stay
+        // aligned across class boundaries
+        let ta = a.obs_capture();
+        let tb = b.obs_capture_scaled(1.5);
+        assert_eq!(tb, ta * 1.5);
+    }
+
+    #[test]
+    fn block_assignment_is_contiguous_and_covers_all_classes() {
+        let list = [DeviceClass::Lite, DeviceClass::Nx, DeviceClass::Agx];
+        let n = 9;
+        let got: Vec<DeviceClass> = (0..n).map(|i| assign_classes(&list, n, i)).collect();
+        assert_eq!(got[0], DeviceClass::Lite);
+        assert_eq!(got[n - 1], DeviceClass::Agx);
+        // contiguous: class index never decreases
+        let ids: Vec<u8> =
+            got.iter().map(|c| list.iter().position(|x| x == c).unwrap() as u8).collect();
+        assert!(ids.windows(2).all(|w| w[0] <= w[1]), "{ids:?}");
+        for c in list {
+            assert!(got.contains(&c), "{c:?} missing from {got:?}");
+        }
+        assert_eq!(assign_classes(&[], 4, 2), DeviceClass::Cloudlet);
+        assert_eq!(assign_classes(&list, 0, 0), DeviceClass::Cloudlet);
     }
 }

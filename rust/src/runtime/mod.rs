@@ -12,6 +12,6 @@ pub mod executor;
 pub use artifact::{ArtifactMeta, VariantMeta};
 #[cfg(feature = "pjrt")]
 pub use client::RuntimeClient;
-pub use device::DeviceClock;
+pub use device::{assign_classes, DeviceClass, DeviceClock, N_CLASSES};
 #[cfg(feature = "pjrt")]
 pub use executor::PolicyExecutable;

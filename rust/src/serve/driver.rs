@@ -31,7 +31,7 @@ use crate::net::Link;
 use crate::obs::{Stage, Tracer, NO_ENDPOINT};
 use crate::policy::{DecisionCtx, FamilyPlan, Route, Strategy};
 use crate::robot::{RobotSim, SensorFrame, TaskKind};
-use crate::runtime::DeviceClock;
+use crate::runtime::{DeviceClass, DeviceClock};
 use crate::scene::{NoiseModel, Renderer};
 use crate::util::timeline::Timeline;
 use crate::vla::profile::ModelFamily;
@@ -143,6 +143,11 @@ pub struct EpisodeState {
     /// Model-zoo serving plan (None without `[models]`: every path below
     /// is then bit-identical to a plan-free build).
     family_plan: Option<FamilyPlan>,
+    /// Device class of the robot running this session (`[devices]`
+    /// classes). The default (Cloudlet) class is an exact no-op: unit
+    /// compute/capture scales and a zero action grid, so every path below
+    /// is bit-identical to a class-free build.
+    device_class: DeviceClass,
 }
 
 impl EpisodeState {
@@ -179,6 +184,7 @@ impl EpisodeState {
             awaiting: false,
             spec: None,
             family_plan: None,
+            device_class: DeviceClass::default(),
         }
     }
 
@@ -197,6 +203,19 @@ impl EpisodeState {
     /// The installed model-zoo serving plan (`None` without `[models]`).
     pub fn family_plan(&self) -> Option<&FamilyPlan> {
         self.family_plan.as_ref()
+    }
+
+    /// Install the robot's device class (`[devices]` classes). Setting the
+    /// default class leaves the step machine bit-identical to a run that
+    /// never called this — the same contract as
+    /// [`EpisodeState::set_family_plan`].
+    pub fn set_device_class(&mut self, class: DeviceClass) {
+        self.device_class = class;
+    }
+
+    /// Device class of the robot running this session.
+    pub fn device_class(&self) -> DeviceClass {
+        self.device_class
     }
 
     /// True while a `NeedCloud` request is outstanding.
@@ -360,11 +379,12 @@ impl EpisodeState {
                 // its reply must not be admitted either, or the store fills
                 // with entries no future (equally-gated) probe can ever hit
                 if pol.probe_allowed(ev.as_ref()) {
-                    let s = pol.signature(
+                    let s = pol.signature_for(
                         self.task.instr_id(),
                         &self.last_frame,
                         ev.as_ref(),
                         self.family(),
+                        self.device_class,
                     );
                     match store.probe(&s, round, owner) {
                         ProbeOutcome::Hit(out) => {
@@ -428,7 +448,7 @@ impl EpisodeState {
                         self.metrics.preemptions += 1;
                         self.metrics.overhead_ms += self.clock.preempt();
                     }
-                    let t_cap = self.clock.obs_capture();
+                    let t_cap = self.clock.obs_capture_scaled(self.device_class.obs_scale());
                     if let Some(c) = span.as_mut() {
                         c.emit(Stage::Capture, t_cap, 0);
                     }
@@ -609,7 +629,7 @@ impl EpisodeState {
                 self.side.push_back((out.entropy(i), out.mass[i]));
             }
             let step = self.sim.step_index();
-            self.queue.overwrite(&out.actions[consumed..], ChunkSource::Cloud, step);
+            self.overwrite_snapped(&out.actions[consumed..], ChunkSource::Cloud, step);
             self.metrics.discarded_actions = self.queue.discarded;
         }
         self.charge_repartitions();
@@ -698,7 +718,10 @@ impl EpisodeState {
     ) {
         let gb = self.strategy.edge_gb(sys);
         let fam_scale = self.family_plan.as_ref().map_or(1.0, |p| p.edge_ms_scale);
-        let t_infer = self.clock.edge_infer_scaled(sys, gb, fam_scale);
+        // weaker edge silicon multiplies on top of the family's slice
+        // economics (class scale 1.0 — the default — is an exact no-op)
+        let scale = fam_scale * self.device_class.edge_scale();
+        let t_infer = self.clock.edge_infer_scaled(sys, gb, scale);
         self.metrics.edge_busy_ms += t_infer;
         self.metrics.edge_events += 1;
         if self.strategy.needs_entropy() {
@@ -723,8 +746,27 @@ impl EpisodeState {
         for i in 0..out.actions.len() {
             self.side.push_back((out.entropy(i), out.mass[i]));
         }
-        self.queue.overwrite(&out.actions, source, t);
+        self.overwrite_snapped(&out.actions, source, t);
         self.metrics.discarded_actions = self.queue.discarded;
+    }
+
+    /// Queue-overwrite funnel with the class action grid applied: every
+    /// chunk a session executes — edge refills, cloud replies, cache hits,
+    /// speculative suffixes — passes through here, so Lite/Nx grid
+    /// snapping can never be bypassed. A zero grid step (the default
+    /// class, and every run with the device zoo off) takes the untouched
+    /// branch: not a single float op on the actions.
+    fn overwrite_snapped(&mut self, actions: &[crate::robot::Jv], source: ChunkSource, t: usize) {
+        let step = self.device_class.action_quant();
+        if step > 0.0 {
+            let snapped: Vec<crate::robot::Jv> = actions
+                .iter()
+                .map(|a| crate::robot::Jv::from_fn(|j| (a[j] / step).round() * step))
+                .collect();
+            self.queue.overwrite(&snapped, source, t);
+        } else {
+            self.queue.overwrite(actions, source, t);
+        }
     }
 
     /// Split re-partitions (vision baseline): charge each change.
@@ -1263,6 +1305,70 @@ mod tests {
         assert_eq!(m.latency_columns(), base.latency_columns());
         assert_eq!(m.cloud_events, base.cloud_events);
         assert_eq!(m.rms_error, base.rms_error);
+    }
+
+    #[test]
+    fn default_device_class_is_bit_identical() {
+        // installing the Cloudlet class explicitly must not move a single
+        // metric relative to a run that never called set_device_class
+        use crate::runtime::DeviceClass;
+        let base = run(PolicyKind::Rapid, TaskKind::PickPlace, 18);
+        let sys = SystemConfig::default();
+        let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
+        let mut edge = AnalyticBackend::edge(18);
+        let mut cloud = AnalyticBackend::cloud(18);
+        let mut st = EpisodeState::new(&sys, TaskKind::PickPlace, strategy, 18, false);
+        st.set_device_class(DeviceClass::default());
+        assert_eq!(st.device_class(), DeviceClass::Cloudlet);
+        loop {
+            match st.poll(&sys, &mut edge, &mut cloud, true) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(req) => {
+                    let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                    st.complete_cloud(&sys, out, 0.0);
+                }
+            }
+        }
+        let m = st.finish(&sys).metrics;
+        assert_eq!(m.latency_columns(), base.latency_columns());
+        assert_eq!(m.cloud_events, base.cloud_events);
+        assert_eq!(m.rms_error, base.rms_error);
+        assert_eq!(m.success, base.success);
+    }
+
+    #[test]
+    fn lite_class_pays_for_its_weaker_silicon() {
+        // a Lite robot's episode still completes, but edge compute and
+        // capture run slower (2.2× / 1.5×) and its actions execute on the
+        // coarse grid, so the trajectory genuinely differs
+        use crate::runtime::DeviceClass;
+        let base = run(PolicyKind::Rapid, TaskKind::PickPlace, 19);
+        let sys = SystemConfig::default();
+        let strategy = crate::policy::build(PolicyKind::Rapid, &sys);
+        let mut edge = AnalyticBackend::edge(19);
+        let mut cloud = AnalyticBackend::cloud(19);
+        let mut st = EpisodeState::new(&sys, TaskKind::PickPlace, strategy, 19, false);
+        st.set_device_class(DeviceClass::Lite);
+        loop {
+            match st.poll(&sys, &mut edge, &mut cloud, true) {
+                StepEvent::Stepped => {}
+                StepEvent::Done => break,
+                StepEvent::NeedCloud(req) => {
+                    let out = cloud.infer(&req.obs, &req.proprio, req.instr);
+                    st.complete_cloud(&sys, out, 0.0);
+                }
+            }
+        }
+        let m = st.finish(&sys).metrics;
+        assert_eq!(m.steps, TaskKind::PickPlace.seq_len(), "lite episodes still complete");
+        assert!(
+            m.latency_columns().2 > base.latency_columns().2,
+            "weaker silicon must cost time: {} vs {}",
+            m.latency_columns().2,
+            base.latency_columns().2
+        );
+        assert_ne!(m.rms_error, base.rms_error, "grid-snapped actions move the trajectory");
     }
 
     #[test]

@@ -101,6 +101,7 @@ use crate::net::proto::InferRequest;
 use crate::net::CloudClient;
 use crate::policy::{planner, FamilyPlan};
 use crate::robot::TaskKind;
+use crate::runtime::{DeviceClass, N_CLASSES};
 use crate::vla::profile::{FamilyProfile, ModelFamily, N_FAMILIES};
 use crate::vla::{AnalyticBackend, Backend, ZooBackend};
 use std::time::Instant;
@@ -204,6 +205,9 @@ pub struct SessionReport {
     /// Model family this session served for its whole run
     /// ([`ModelFamily::Surrogate`] with `[models]` disabled).
     pub family: ModelFamily,
+    /// Device class of the robot for its whole run (the implicit
+    /// [`DeviceClass::Cloudlet`] no-op with the device zoo disabled).
+    pub class: DeviceClass,
     /// Scheduler round the session joined the fleet (0 in lockstep runs).
     pub arrival_round: u64,
     /// Scheduler round the session departed (sealed its last episode).
@@ -225,6 +229,19 @@ pub struct FamilyTotals {
     pub batched_requests: u64,
 }
 
+/// Fleet totals for one device class — the device-axis mirror of
+/// [`FamilyTotals`]. Summed over every class present, these exactly
+/// partition the fleet-wide totals (each session belongs to exactly one
+/// class), pinned by the device-zoo differential suite.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassTotals {
+    pub class: DeviceClass,
+    pub sessions: usize,
+    pub steps: u64,
+    pub cloud_events: u64,
+    pub cache_hits: u64,
+}
+
 pub struct FleetResult {
     pub policy: PolicyKind,
     pub task: TaskKind,
@@ -241,6 +258,9 @@ pub struct FleetResult {
     pub cache: CacheStats,
     /// Per-family rollup (a single surrogate row with `[models]` off).
     pub families: Vec<FamilyTotals>,
+    /// Per-device-class rollup (a single cloudlet row with the device
+    /// zoo off).
+    pub classes: Vec<ClassTotals>,
     /// Span tracer of the run (`Some` only with `[trace]` enabled).
     pub trace: Option<Tracer>,
     /// Flight recorder of the run (`Some` only with `[trace]` enabled).
@@ -313,6 +333,13 @@ impl FleetResult {
             r.set(&format!("family/{f}/cache_hits"), t.cache_hits);
             r.set(&format!("family/{f}/batches"), t.batches);
         }
+        for t in &self.classes {
+            let c = t.class.name();
+            r.set(&format!("class/{c}/sessions"), t.sessions as u64);
+            r.set(&format!("class/{c}/steps"), t.steps);
+            r.set(&format!("class/{c}/cloud_events"), t.cloud_events);
+            r.set(&format!("class/{c}/cache_hits"), t.cache_hits);
+        }
         if let Some(tr) = &self.trace {
             let multi = self.families.len() > 1;
             for sp in tr.spans() {
@@ -359,6 +386,9 @@ struct SessionSlot {
     cloud: Box<dyn Backend>,
     /// Zoo family (fixed for the session's whole run).
     family: ModelFamily,
+    /// Device class (fixed for the session's whole run; the implicit
+    /// cloudlet no-op with the device zoo off).
+    class: DeviceClass,
     /// Scheduler round the session joins the fleet.
     arrival: u64,
     /// Set once the arrival event has been processed.
@@ -406,6 +436,10 @@ pub struct Fleet {
     /// Model zoo active (`[models] enabled`). Off, every zoo path below is
     /// skipped and the scheduler is bit-identical to the PR 3 scheduler.
     zoo_enabled: bool,
+    /// Device-heterogeneity zoo active (`[devices] classes` non-empty).
+    /// Off, every class path collapses to the implicit cloudlet no-op and
+    /// the scheduler is bit-identical to the class-free build.
+    classes_on: bool,
     /// Family of the requests currently pending in the batcher (only
     /// meaningful while it is non-empty).
     pending_family: ModelFamily,
@@ -603,6 +637,7 @@ impl Fleet {
             io_dead: vec![false; endpoints],
             cur_round: 0,
             zoo_enabled,
+            classes_on: sys.devices.classes_enabled(),
             pending_family: ModelFamily::Surrogate,
             planned_link: None,
             placement_on: sys.placement.enabled,
@@ -657,9 +692,13 @@ impl Fleet {
         spec: &workload::SessionSpec,
     ) -> SessionSlot {
         let family = spec.family;
+        let class = spec.class;
         let mut state = EpisodeState::new(sys, task, crate::policy::build(kind, sys), seed, false);
+        // installing the default class is an exact no-op (the driver is
+        // born with it), so this never perturbs a zoo-off run
+        state.set_device_class(class);
         let (edge, cloud): (Box<dyn Backend>, Box<dyn Backend>) = if zoo {
-            state.set_family_plan(Some(Fleet::initial_plan(sys, family)));
+            state.set_family_plan(Some(Fleet::initial_plan(sys, family, class)));
             (Box::new(ZooBackend::edge(family, seed)), Box::new(ZooBackend::cloud(family, seed)))
         } else {
             (Box::new(AnalyticBackend::edge(seed)), Box::new(AnalyticBackend::cloud(seed)))
@@ -669,6 +708,7 @@ impl Fleet {
             edge,
             cloud,
             family,
+            class,
             arrival: spec.arrival_round,
             arrived: false,
             episodes_target: spec.episodes.max(1),
@@ -685,21 +725,36 @@ impl Fleet {
         self.router.advertise(endpoint, families);
     }
 
-    /// Build-time partition plan for a session's family under the nominal
-    /// link: single-factor with `[placement]` off (bit-identical to the
-    /// historical plan), multi-factor — device budget + an idle endpoint
-    /// at the configured GPU capacity — with it on.
-    fn initial_plan(sys: &SystemConfig, family: ModelFamily) -> FamilyPlan {
+    /// Build-time partition plan for a session's (family, class) under
+    /// the nominal link: single-factor with both `[placement]` and the
+    /// device zoo off (bit-identical to the historical plan); with the
+    /// device zoo armed the class supplies the budget and the edge-prefix
+    /// compute scale, so a Lite robot provably picks a shallower split.
+    fn initial_plan(sys: &SystemConfig, family: ModelFamily, class: DeviceClass) -> FamilyPlan {
         let prof = FamilyProfile::of(family);
-        if !sys.placement.enabled {
-            return planner::plan(&prof, sys.link.bw_mbps, sys.link.rtt_ms);
+        let (bw, rtt) = (sys.link.bw_mbps, sys.link.rtt_ms);
+        let classes_on = sys.devices.classes_enabled();
+        if !classes_on && !sys.placement.enabled {
+            return planner::plan(&prof, bw, rtt);
         }
-        let load = planner::EndpointLoad {
-            queue_depth: 0,
-            capacity: sys.placement.gpu_capacity,
-            queue_weight: sys.placement.queue_weight,
+        let load = if sys.placement.enabled {
+            planner::EndpointLoad {
+                queue_depth: 0,
+                capacity: sys.placement.gpu_capacity,
+                queue_weight: sys.placement.queue_weight,
+            }
+        } else {
+            planner::EndpointLoad::NOMINAL
         };
-        planner::plan_with(&prof, sys.link.bw_mbps, sys.link.rtt_ms, sys.placement.budget(), load)
+        if classes_on {
+            let budget = if sys.placement.enabled {
+                sys.placement.budget_for(class)
+            } else {
+                planner::DeviceBudget::for_class(class)
+            };
+            return planner::plan_for_class(&prof, class, bw, rtt, budget, load);
+        }
+        planner::plan_with(&prof, bw, rtt, sys.placement.budget(), load)
     }
 
     /// Endpoint-state factor for `family` right now: queue depth =
@@ -732,16 +787,51 @@ impl Fleet {
         }
     }
 
-    /// Partition plan for `family` under the given link — the one planner
-    /// entry point every scheduler replan path goes through. Single-factor
-    /// with `[placement]` off; budget-filtered and endpoint-aware with it
-    /// on.
-    fn plan_family(&self, family: ModelFamily, bw: f64, rtt: f64) -> FamilyPlan {
+    /// Partition plan for `(family, class)` under the given link — the
+    /// one planner entry point every scheduler replan path goes through.
+    /// Single-factor with `[placement]` and the device zoo off;
+    /// budget-filtered and endpoint-aware with placement on; per-class
+    /// (class budget + edge-prefix scale) with the device zoo armed.
+    fn plan_family(&self, family: ModelFamily, class: DeviceClass, bw: f64, rtt: f64) -> FamilyPlan {
         let prof = FamilyProfile::of(family);
+        if self.classes_on {
+            let budget = if self.placement_on {
+                self.sys.placement.budget_for(class)
+            } else {
+                planner::DeviceBudget::for_class(class)
+            };
+            let load = if self.placement_on {
+                self.endpoint_load(family)
+            } else {
+                planner::EndpointLoad::NOMINAL
+            };
+            return planner::plan_for_class(&prof, class, bw, rtt, budget, load);
+        }
         if !self.placement_on {
             return planner::plan(&prof, bw, rtt);
         }
         planner::plan_with(&prof, bw, rtt, self.budget, self.endpoint_load(family))
+    }
+
+    /// Rows in the `cur_plans` table: one per device class with the
+    /// device zoo armed, the single historical row otherwise.
+    fn plan_rows(&self) -> usize {
+        if self.classes_on {
+            N_CLASSES
+        } else {
+            1
+        }
+    }
+
+    /// Index of `(class, family)` in the `cur_plans` table. With the
+    /// device zoo off this ignores the class and reproduces the
+    /// historical family-indexed layout exactly.
+    fn plan_idx(&self, class: DeviceClass, family: ModelFamily) -> usize {
+        if self.classes_on {
+            class.id() as usize * N_FAMILIES + family.id() as usize
+        } else {
+            family.id() as usize
+        }
     }
 
     /// Is per-round session context (link profile + zoo plans) being
@@ -849,10 +939,14 @@ impl Fleet {
     /// link profile in force this round and, for zoo sessions, the
     /// partition plan under the effective link. One definition for both
     /// call sites so the arrival and rollover paths can never drift.
-    fn arrival_context(&self, family: ModelFamily) -> (Option<LinkProfile>, Option<FamilyPlan>) {
+    fn arrival_context(
+        &self,
+        family: ModelFamily,
+        class: DeviceClass,
+    ) -> (Option<LinkProfile>, Option<FamilyPlan>) {
         let plan = if self.zoo_enabled {
             let (bw, rtt) = self.effective_link();
-            Some(self.plan_family(family, bw, rtt))
+            Some(self.plan_family(family, class, bw, rtt))
         } else {
             None
         };
@@ -884,10 +978,12 @@ impl Fleet {
         self.slots[i].completed.push(metrics);
         let seed = fleet_seed(self.base_seed, i, next);
         let family = self.slots[i].family;
+        let class = self.slots[i].class;
         let spec = workload::SessionSpec {
             arrival_round: self.slots[i].arrival,
             episodes: self.slots[i].episodes_target,
             family,
+            class,
         };
         let fresh =
             Fleet::make_slot(&self.sys, self.task, self.kind, self.zoo_enabled, seed, next, &spec);
@@ -897,7 +993,7 @@ impl Fleet {
         // to no profile and a zoo session's plan defaults to the nominal
         // link)
         if self.ctx_armed() {
-            let (profile, plan) = self.arrival_context(family);
+            let (profile, plan) = self.arrival_context(family, class);
             state.on_fleet_arrival(profile, plan);
         }
         // the rollover hook installed this round's context
@@ -974,8 +1070,16 @@ impl Fleet {
                 };
                 if self.planned_link != Some((bw, rtt)) || loads != self.planned_loads {
                     self.planned_link = Some((bw, rtt));
-                    self.cur_plans =
-                        ModelFamily::ALL.iter().map(|&f| self.plan_family(f, bw, rtt)).collect();
+                    // (class × family) table with the device zoo armed,
+                    // the single historical family row otherwise
+                    let mut plans = Vec::with_capacity(self.plan_rows() * N_FAMILIES);
+                    for c in 0..self.plan_rows() {
+                        let class = DeviceClass::from_id(c as u8).unwrap_or_default();
+                        for &f in ModelFamily::ALL.iter() {
+                            plans.push(self.plan_family(f, class, bw, rtt));
+                        }
+                    }
+                    self.cur_plans = plans;
                     self.planned_loads = loads;
                 }
             }
@@ -1014,10 +1118,11 @@ impl Fleet {
             return;
         }
         self.slot_epoch[i] = self.link_epoch;
+        let idx = self.plan_idx(self.slots[i].class, self.slots[i].family);
         let slot = &mut self.slots[i];
         slot.state.set_link_profile(self.cur_profile);
         if self.zoo_enabled && !self.cur_plans.is_empty() {
-            let plan = self.cur_plans[slot.family.id() as usize].clone();
+            let plan = self.cur_plans[idx].clone();
             slot.state.set_family_plan(Some(plan));
         }
     }
@@ -1032,7 +1137,7 @@ impl Fleet {
         self.active_sessions += 1;
         self.stats.max_active_sessions = self.stats.max_active_sessions.max(self.active_sessions);
         if self.ctx_armed() {
-            let (profile, plan) = self.arrival_context(self.slots[i].family);
+            let (profile, plan) = self.arrival_context(self.slots[i].family, self.slots[i].class);
             self.slots[i].state.on_fleet_arrival(profile, plan);
         }
         // the arrival hook installed this round's context
@@ -1197,6 +1302,7 @@ impl Fleet {
                 session: i,
                 seed0: fleet_seed(base_seed, i, 0),
                 family: s.family,
+                class: s.class,
                 arrival_round: s.arrival,
                 departure_round: s.departure,
                 episodes: s.completed,
@@ -1234,6 +1340,30 @@ impl Fleet {
         }
         let families: Vec<FamilyTotals> =
             totals.into_iter().filter(|t| t.sessions > 0 || t.batches > 0).collect();
+        // per-class rollup, same contract on the device axis: sums over
+        // these rows exactly partition the fleet totals (each session
+        // belongs to exactly one class). A zoo-off fleet yields the
+        // single implicit cloudlet row.
+        let mut ctotals: Vec<ClassTotals> = DeviceClass::ALL
+            .iter()
+            .map(|&class| ClassTotals {
+                class,
+                sessions: 0,
+                steps: 0,
+                cloud_events: 0,
+                cache_hits: 0,
+            })
+            .collect();
+        for s in &sessions {
+            let t = &mut ctotals[s.class.id() as usize];
+            t.sessions += 1;
+            for m in &s.episodes {
+                t.steps += m.steps as u64;
+                t.cloud_events += m.cloud_events;
+                t.cache_hits += m.cache_hits;
+            }
+        }
+        let classes: Vec<ClassTotals> = ctotals.into_iter().filter(|t| t.sessions > 0).collect();
         FleetResult {
             policy: self.kind,
             task: self.task,
@@ -1244,6 +1374,7 @@ impl Fleet {
             mean_batch,
             cache,
             families,
+            classes,
             trace,
             flight,
         }
@@ -1717,6 +1848,44 @@ mod tests {
         assert_eq!(res.stats.mixed_family_batches, 0);
         for s in &res.sessions {
             assert_eq!(s.family, ModelFamily::Surrogate);
+        }
+    }
+
+    #[test]
+    fn device_zoo_off_reports_a_single_cloudlet_row() {
+        let sys = sys_with(3, 4, 16);
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+        assert_eq!(res.classes.len(), 1);
+        let t = &res.classes[0];
+        assert_eq!(t.class, DeviceClass::Cloudlet);
+        assert_eq!(t.sessions, 3);
+        assert_eq!(t.steps, res.total_steps());
+        assert_eq!(t.cloud_events, res.total_cloud_events());
+        for s in &res.sessions {
+            assert_eq!(s.class, DeviceClass::Cloudlet);
+        }
+    }
+
+    #[test]
+    fn mixed_class_fleet_rolls_up_by_class_and_partitions_totals() {
+        let mut sys = sys_with(6, 4, 16);
+        sys.devices.classes = "lite,nx,agx".into();
+        let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+        // blocks assignment: 6 sessions over 3 classes = 2 each
+        assert_eq!(res.classes.len(), 3);
+        for t in &res.classes {
+            assert_eq!(t.sessions, 2, "{:?}", t.class);
+        }
+        // rollup rows exactly partition the fleet totals
+        assert_eq!(res.classes.iter().map(|t| t.steps).sum::<u64>(), res.total_steps());
+        assert_eq!(
+            res.classes.iter().map(|t| t.cloud_events).sum::<u64>(),
+            res.total_cloud_events()
+        );
+        // every session completed its full episode despite weaker silicon
+        for s in &res.sessions {
+            assert_eq!(s.episodes.len(), 1);
+            assert_eq!(s.episodes[0].steps, TaskKind::PickPlace.seq_len());
         }
     }
 

@@ -24,16 +24,19 @@
 //!
 //! The engine owns a private PRNG (`[workload] seed`, or derived from the
 //! episode seed) and draws in a fixed documented order: arrival gaps
-//! first (Poisson only), then per-session episode counts, then families.
-//! Draw-free shapes (fixed / bursty / trace, pinned episode counts,
-//! block family assignment) consume nothing, so a `[workload]` section
-//! configured to the lockstep degenerate shape — everyone at t = 0, fleet
-//! episode count, block families — produces a plan whose execution is
+//! first (Poisson only), then per-session episode counts, then families,
+//! then device classes (the device zoo's `device_mix`, appended last so
+//! pre-class draw streams never shift). Draw-free shapes (fixed / bursty
+//! / trace, pinned episode counts, block family assignment, block class
+//! assignment) consume nothing, so a `[workload]` section configured to
+//! the lockstep degenerate shape — everyone at t = 0, fleet episode
+//! count, block families — produces a plan whose execution is
 //! **bit-identical** to the disabled-workload scheduler (the same
-//! contract `[faults]`/`[cache]`/`[models]` honour; pinned by
-//! `rust/tests/workload_arrivals.rs`).
+//! contract `[faults]`/`[cache]`/`[models]`/`[devices]` honour; pinned by
+//! `rust/tests/workload_arrivals.rs` and `rust/tests/device_zoo.rs`).
 
 use crate::config::SystemConfig;
+use crate::runtime::{assign_classes, DeviceClass};
 use crate::util::Pcg32;
 use crate::vla::assign_families;
 use crate::vla::profile::ModelFamily;
@@ -78,6 +81,9 @@ pub struct SessionSpec {
     pub episodes: usize,
     /// Model family the session serves for its whole run.
     pub family: ModelFamily,
+    /// Edge device class the session runs on ([`DeviceClass::Cloudlet`]
+    /// — the exact no-op — whenever `[devices] classes` is empty).
+    pub class: DeviceClass,
 }
 
 /// The compiled plan: one spec per session, session index = vec index.
@@ -208,7 +214,10 @@ pub fn plan(sys: &SystemConfig) -> WorkloadPlan {
             .collect(),
     };
 
-    // 2) episode counts (0/0 pins the fleet knob; min == max draws nothing)
+    // 2) episode counts (0/0 pins the fleet knob; min == max draws
+    // nothing). Inverted bounds are rejected at config load
+    // (`SystemConfig::validate`); the `.max(lo)` clamp below only guards
+    // programmatically-built configs that skipped validation.
     let fleet_eps = sys.fleet.episodes_per_session.max(1);
     let (lo, hi) = if w.episodes_min == 0 && w.episodes_max == 0 {
         (fleet_eps, fleet_eps)
@@ -216,9 +225,11 @@ pub fn plan(sys: &SystemConfig) -> WorkloadPlan {
         let lo = w.episodes_min.max(1);
         (lo, w.episodes_max.max(lo))
     };
-    let episodes: Vec<usize> = (0..n)
-        .map(|_| if lo == hi { lo } else { lo + rng.below((hi - lo + 1) as u32) as usize })
-        .collect();
+    // the draw span is clamped into u32 range explicitly — a pathological
+    // [1, usize::MAX] config must not truncate silently in the cast
+    let span = (hi - lo + 1).min(u32::MAX as usize) as u32;
+    let episodes: Vec<usize> =
+        (0..n).map(|_| if lo == hi { lo } else { lo + rng.below(span) as usize }).collect();
 
     // 3) families ("blocks" is draw-free and equals the lockstep
     // assignment; sessions serve the surrogate whenever the zoo is off)
@@ -236,25 +247,60 @@ pub fn plan(sys: &SystemConfig) -> WorkloadPlan {
         })
         .collect();
 
+    // 4) device classes — appended AFTER every pre-existing stage so the
+    // arrival/episode/family draw streams never shift ([devices] off, or
+    // the draw-free "blocks" mix, consumes nothing)
+    let classes = session_classes(sys, &mut rng, n);
+
     let specs = (0..n)
         .map(|i| SessionSpec {
             arrival_round: arrivals[i],
             episodes: episodes[i],
             family: families[i],
+            class: classes[i],
         })
         .collect();
     WorkloadPlan { specs, kind }
 }
 
-/// The degenerate all-at-t0 plan the disabled path compiles to.
+/// Per-session device classes for stage 4 of [`plan`]: the implicit
+/// no-op `cloudlet` when the device zoo is off, block assignment
+/// (draw-free, mirrors the family rule) or seeded uniform draws per
+/// `[workload] device_mix` when it is on.
+fn session_classes(sys: &SystemConfig, rng: &mut Pcg32, n: usize) -> Vec<DeviceClass> {
+    if !sys.devices.classes_enabled() {
+        return vec![DeviceClass::default(); n];
+    }
+    let list = sys.devices.class_list();
+    let draw = sys.workload.device_mix.trim().eq_ignore_ascii_case("draw");
+    (0..n)
+        .map(|i| {
+            if list.is_empty() {
+                DeviceClass::default()
+            } else if draw {
+                list[rng.below(list.len() as u32) as usize]
+            } else {
+                assign_classes(&list, n, i)
+            }
+        })
+        .collect()
+}
+
+/// The degenerate all-at-t0 plan the disabled path compiles to. Device
+/// classes use the draw-free block assignment (there is no PRNG on this
+/// path at all), so an armed `[devices]` section still mixes silicon
+/// under a lockstep workload.
 fn lockstep_plan(sys: &SystemConfig, n: usize) -> WorkloadPlan {
     let fams = if sys.models.enabled { sys.models.family_list() } else { Vec::new() };
+    let classes =
+        if sys.devices.classes_enabled() { sys.devices.class_list() } else { Vec::new() };
     let episodes = sys.fleet.episodes_per_session.max(1);
     let specs = (0..n)
         .map(|i| SessionSpec {
             arrival_round: 0,
             episodes,
             family: assign_families(&fams, n, i),
+            class: assign_classes(&classes, n, i),
         })
         .collect();
     WorkloadPlan { specs, kind: ArrivalKind::Fixed }
@@ -378,6 +424,65 @@ mod tests {
         for (i, s) in p.specs.iter().enumerate() {
             assert_eq!(s.family, assign_families(&fams, 24, i));
         }
+    }
+
+    #[test]
+    fn device_classes_default_to_the_noop_and_blocks_draw_nothing() {
+        // [devices] off: every spec carries the implicit cloudlet no-op
+        let p = plan(&SystemConfig::default());
+        assert!(p.specs.iter().all(|s| s.class == DeviceClass::Cloudlet));
+
+        // the class stage is appended last: arming [devices] with the
+        // draw-free "blocks" mix must not shift any pre-class field
+        let mut sys = wsys();
+        sys.workload.arrivals = "poisson".into();
+        sys.workload.interarrival_rounds = 3.0;
+        sys.workload.n_sessions = 12;
+        sys.workload.episodes_min = 1;
+        sys.workload.episodes_max = 3;
+        sys.workload.seed = 11;
+        let base = plan(&sys);
+        sys.devices.classes = "lite,nx,agx".into();
+        let mixed = plan(&sys);
+        for (a, b) in base.specs.iter().zip(mixed.specs.iter()) {
+            assert_eq!(a.arrival_round, b.arrival_round, "blocks mix must be draw-free");
+            assert_eq!(a.episodes, b.episodes);
+            assert_eq!(a.family, b.family);
+        }
+        // block assignment equals the lockstep assignment function
+        let list = sys.devices.class_list();
+        for (i, s) in mixed.specs.iter().enumerate() {
+            assert_eq!(s.class, crate::runtime::assign_classes(&list, 12, i));
+        }
+    }
+
+    #[test]
+    fn device_class_draws_cover_the_list_and_replay() {
+        let mut sys = wsys();
+        sys.workload.n_sessions = 24;
+        sys.workload.seed = 13;
+        sys.devices.classes = "lite,nx,agx".into();
+        sys.workload.device_mix = "draw".into();
+        let p = plan(&sys);
+        let list = sys.devices.class_list();
+        assert!(p.specs.iter().all(|s| list.contains(&s.class)));
+        assert!(p.specs.iter().any(|s| s.class != p.specs[0].class), "24 draws must mix");
+        assert_eq!(plan(&sys), p, "seeded class draws must replay exactly");
+    }
+
+    #[test]
+    fn lockstep_plan_assigns_classes_in_blocks() {
+        let mut sys = SystemConfig::default();
+        sys.devices.classes = "lite,agx".into();
+        sys.fleet.n_sessions = 8;
+        let p = plan(&sys);
+        assert!(p.is_lockstep());
+        let list = sys.devices.class_list();
+        for (i, s) in p.specs.iter().enumerate() {
+            assert_eq!(s.class, crate::runtime::assign_classes(&list, 8, i));
+        }
+        assert_eq!(p.specs[0].class, DeviceClass::Lite);
+        assert_eq!(p.specs[7].class, DeviceClass::Agx);
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Differential conformance suite for the device-heterogeneity zoo
+//! (`[devices] classes` + `[workload] device_mix`).
+//!
+//! Three halves:
+//!
+//! * **Disabled ⇒ bit-identity.** A `[devices]` section left disabled —
+//!   whatever the other knobs say, however hostile — must leave the
+//!   scheduler *exactly* the PR 9 event loop: per-episode trajectories,
+//!   flush causes, cache counters and fault-engine draws, across every
+//!   serve path (plain fleets, the reuse cache, the chaos schedule, the
+//!   model zoo, pipelined execution, dynamic arrivals).
+//! * **Default-class-only ⇒ bit-identity.** `classes = "cloudlet"`
+//!   *enabled* must also perturb nothing: every cloudlet factor is an
+//!   exact no-op (`x * 1.0 == x`, grid off, unlimited budget), so the
+//!   armed code path itself is proven inert before any real class runs.
+//! * **Enabled holds the line.** A mixed lite/nx/agx fleet completes
+//!   under chaos, replays bit-identically, rolls totals up by class
+//!   (exactly partitioning the fleet totals), plans provably different
+//!   partition points per class (edge-only on lite), and never serves a
+//!   cache hit across a class boundary. Unknown class names and bad
+//!   `device_mix` values are config-load errors, never silent defaults.
+
+use rapid::config::{FaultsConfig, PolicyKind, SystemConfig};
+use rapid::robot::TaskKind;
+use rapid::runtime::DeviceClass;
+use rapid::serve::{Fleet, FleetResult};
+use rapid::vla::ModelFamily;
+
+/// Full-strength bit-identity: scheduler counters, flush causes, router
+/// spread, cache counters, and exact per-episode trajectory columns.
+fn assert_bit_identical(a: &FleetResult, b: &FleetResult, tag: &str) {
+    assert_eq!(a.stats.rounds, b.stats.rounds, "{tag}: rounds");
+    assert_eq!(a.stats.batches, b.stats.batches, "{tag}: batches");
+    assert_eq!(a.stats.batched_requests, b.stats.batched_requests, "{tag}: batched requests");
+    assert_eq!(
+        a.stats.multi_session_batches, b.stats.multi_session_batches,
+        "{tag}: multi-session batches"
+    );
+    assert_eq!(a.stats.max_batch_observed, b.stats.max_batch_observed, "{tag}: batch high-water");
+    assert_eq!(
+        a.stats.max_inflight_observed, b.stats.max_inflight_observed,
+        "{tag}: inflight high-water"
+    );
+    assert_eq!(a.stats.endpoint_errors, b.stats.endpoint_errors, "{tag}: endpoint errors");
+    assert_eq!(a.stats.mixed_family_batches, b.stats.mixed_family_batches, "{tag}: mixed batches");
+    assert_eq!(a.stats.spec_requests, b.stats.spec_requests, "{tag}: speculative requests");
+    assert_eq!(a.stats.arrivals, b.stats.arrivals, "{tag}: arrivals");
+    assert_eq!(
+        a.stats.max_active_sessions, b.stats.max_active_sessions,
+        "{tag}: active-session high-water"
+    );
+    assert_eq!(a.stats.full_flushes, b.stats.full_flushes, "{tag}: full flushes");
+    assert_eq!(a.stats.deadline_flushes, b.stats.deadline_flushes, "{tag}: deadline flushes");
+    assert_eq!(a.stats.drain_flushes, b.stats.drain_flushes, "{tag}: drain flushes");
+    assert_eq!(a.stats.family_flushes, b.stats.family_flushes, "{tag}: family flushes");
+    assert_eq!(a.stats.deferred_offloads, b.stats.deferred_offloads, "{tag}: deferred");
+    assert_eq!(a.stats.dropped_replies, b.stats.dropped_replies, "{tag}: dropped");
+    assert_eq!(a.stats.degraded_requests, b.stats.degraded_requests, "{tag}: degraded");
+    assert_eq!(a.stats.failover_redispatches, b.stats.failover_redispatches, "{tag}: failover");
+    assert_eq!(a.stats.outage_rounds, b.stats.outage_rounds, "{tag}: outage rounds");
+    assert_eq!(a.stats.scale_up_events, b.stats.scale_up_events, "{tag}: scale up");
+    assert_eq!(a.stats.scale_down_events, b.stats.scale_down_events, "{tag}: scale down");
+    assert_eq!(a.stats.shed_polls, b.stats.shed_polls, "{tag}: shed polls");
+    assert_eq!(a.endpoint_dispatches, b.endpoint_dispatches, "{tag}: router spread");
+    assert_eq!(a.mean_batch, b.mean_batch, "{tag}: mean batch");
+    assert_eq!(a.cache.hits, b.cache.hits, "{tag}: cache hits");
+    assert_eq!(a.cache.probes, b.cache.probes, "{tag}: cache probes");
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{tag}: session count");
+    for (sa, sb) in a.sessions.iter().zip(b.sessions.iter()) {
+        assert_eq!(sa.family, sb.family, "{tag}: family");
+        assert_eq!(sa.class, sb.class, "{tag}: device class");
+        assert_eq!(sa.arrival_round, sb.arrival_round, "{tag}: arrival round");
+        assert_eq!(sa.departure_round, sb.departure_round, "{tag}: departure round");
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "{tag}: episode count");
+        for (ma, mb) in sa.episodes.iter().zip(sb.episodes.iter()) {
+            assert_eq!(ma.latency_columns(), mb.latency_columns(), "{tag}: latency columns");
+            assert_eq!(ma.cloud_events, mb.cloud_events, "{tag}: cloud events");
+            assert_eq!(ma.edge_events, mb.edge_events, "{tag}: edge events");
+            assert_eq!(ma.preemptions, mb.preemptions, "{tag}: preemptions");
+            assert_eq!(ma.failovers, mb.failovers, "{tag}: failovers");
+            assert_eq!(ma.cache_hits, mb.cache_hits, "{tag}: cache hits");
+            assert_eq!(ma.deferred_offloads, mb.deferred_offloads, "{tag}: deferrals");
+            assert_eq!(ma.rms_error, mb.rms_error, "{tag}: trajectory (rms)");
+            assert_eq!(ma.success, mb.success, "{tag}: success");
+        }
+    }
+}
+
+/// `[devices]` left disabled (empty class list) while every knob that
+/// *could* interact is hostile: draw-mode device mix, hostile (but
+/// disabled) placement. Must perturb nothing.
+fn hostile_disabled(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.devices.classes = String::new();
+    s.workload.device_mix = "draw".into();
+    s.placement.enabled = false;
+    s.placement.device_class = "lite".into();
+    s.placement.max_edge_gb = 0.1;
+    s.placement.prefix_ms_budget = 0.1;
+    s.placement.queue_weight = 99.0;
+    s.placement.gpu_capacity = 0.01;
+    s
+}
+
+/// `classes = "cloudlet"` — the device zoo *armed* but populated only by
+/// the no-op class. Every class-aware branch executes and must still be
+/// bit-identical.
+fn cloudlet_only(sys: &SystemConfig) -> SystemConfig {
+    let mut s = sys.clone();
+    s.devices.classes = "cloudlet".into();
+    s
+}
+
+fn assert_all_completed(res: &FleetResult, tag: &str) {
+    let expect = TaskKind::PickPlace.seq_len();
+    for s in &res.sessions {
+        for m in &s.episodes {
+            assert_eq!(m.steps, expect, "{tag}: session {} wedged", s.session);
+        }
+    }
+}
+
+/// The serve-path matrix both bit-identity halves are checked over.
+fn scenarios() -> Vec<(&'static str, SystemConfig, Vec<PolicyKind>)> {
+    let mut plain = SystemConfig::default();
+    plain.fleet.n_sessions = 4;
+    let mut cache = SystemConfig::default();
+    cache.fleet.n_sessions = 8;
+    cache.cache.enabled = true;
+    let mut chaos = SystemConfig::default();
+    chaos.fleet.n_sessions = 6;
+    chaos.fleet.endpoints = 3;
+    chaos.faults = FaultsConfig::demo();
+    let mut zoo = SystemConfig::default();
+    zoo.fleet.n_sessions = 8;
+    zoo.models.enabled = true;
+    let mut pipeline = SystemConfig::default();
+    pipeline.fleet.n_sessions = 6;
+    pipeline.pipeline.enabled = true;
+    pipeline.pipeline.overlap = true;
+    pipeline.pipeline.speculate = true;
+    let mut workload = SystemConfig::default();
+    workload.fleet.n_sessions = 6;
+    workload.workload.enabled = true;
+    workload.workload.arrivals = "poisson".into();
+    workload.workload.interarrival_rounds = 4.0;
+    workload.workload.seed = 23;
+    let mut autoscale = SystemConfig::default();
+    autoscale.fleet.n_sessions = 8;
+    autoscale.fleet.max_batch = 16;
+    autoscale.fleet.max_inflight = 32;
+    autoscale.fleet.batch_deadline_us = 50_000;
+    autoscale.fleet.endpoints = 1;
+    autoscale.autoscale.enabled = true;
+    autoscale.autoscale.min_endpoints = 1;
+    autoscale.autoscale.max_endpoints = 3;
+    autoscale.autoscale.slo_queue = 2;
+    autoscale.autoscale.sustain_rounds = 1;
+    autoscale.autoscale.idle_rounds = 1;
+    autoscale.autoscale.cooldown_rounds = 0;
+    vec![
+        ("plain", plain, vec![PolicyKind::Rapid, PolicyKind::CloudOnly, PolicyKind::VisionBased]),
+        ("cache", cache, vec![PolicyKind::CloudOnly]),
+        ("chaos", chaos, vec![PolicyKind::Rapid, PolicyKind::CloudOnly]),
+        ("zoo", zoo, vec![PolicyKind::CloudOnly]),
+        ("pipeline", pipeline, vec![PolicyKind::Rapid, PolicyKind::CloudOnly]),
+        ("workload", workload, vec![PolicyKind::Rapid, PolicyKind::CloudOnly]),
+        ("autoscale", autoscale, vec![PolicyKind::CloudOnly]),
+    ]
+}
+
+#[test]
+fn disabled_with_hostile_knobs_is_bit_identical_everywhere() {
+    for (path, sys, kinds) in scenarios() {
+        for kind in kinds {
+            let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+            let run = Fleet::local(&hostile_disabled(&sys), TaskKind::PickPlace, kind).run();
+            assert_bit_identical(&base, &run, &format!("disabled/{path}/{kind:?}"));
+        }
+    }
+}
+
+#[test]
+fn cloudlet_only_enabled_is_bit_identical_everywhere() {
+    // the armed-but-no-op half: every class branch (per-class plan table,
+    // class-tagged signatures, scaled clocks, the snap funnel) actually
+    // executes, with factors that reduce to exact identities
+    for (path, sys, kinds) in scenarios() {
+        for kind in kinds {
+            let base = Fleet::local(&sys, TaskKind::PickPlace, kind).run();
+            let run = Fleet::local(&cloudlet_only(&sys), TaskKind::PickPlace, kind).run();
+            assert_bit_identical(&base, &run, &format!("cloudlet/{path}/{kind:?}"));
+        }
+    }
+}
+
+#[test]
+fn mixed_class_chaos_fleet_completes_replays_and_partitions_totals() {
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 9;
+    sys.fleet.endpoints = 2;
+    sys.models.enabled = true;
+    sys.cache.enabled = true;
+    sys.faults = FaultsConfig::demo();
+    sys.devices.classes = "lite,nx,agx".into();
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_all_completed(&res, "mixed chaos");
+    // blocks assignment: 9 sessions over 3 classes = 3 each
+    assert_eq!(res.classes.len(), 3, "{:?}", res.classes);
+    for t in &res.classes {
+        assert_eq!(t.sessions, 3, "{:?}", t.class);
+        assert_ne!(t.class, DeviceClass::Cloudlet);
+    }
+    // per-class rollups exactly partition the fleet totals
+    assert_eq!(res.classes.iter().map(|t| t.steps).sum::<u64>(), res.total_steps());
+    assert_eq!(
+        res.classes.iter().map(|t| t.cloud_events).sum::<u64>(),
+        res.total_cloud_events()
+    );
+    let hits: u64 =
+        res.sessions.iter().flat_map(|s| s.episodes.iter()).map(|m| m.cache_hits).sum();
+    assert_eq!(res.classes.iter().map(|t| t.cache_hits).sum::<u64>(), hits);
+    // exact seeded replay: classes change per-slot physics, never draws
+    let again = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_bit_identical(&res, &again, "mixed chaos replay");
+}
+
+#[test]
+fn classes_plan_different_partition_points_on_the_live_fleet() {
+    // one family (OpenVLA) across three classes: the 2 GB lite budget
+    // hosts no split at all, so its sessions serve every step edge-only
+    // even under Cloud-Only; nx and cloudlet keep offloading — the
+    // fleet-level face of the planner's per-class argmin
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 9;
+    sys.models.enabled = true;
+    sys.models.families = "openvla".into();
+    sys.devices.classes = "lite,nx,cloudlet".into();
+    let res = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_all_completed(&res, "per-class plans");
+    let by = |c: DeviceClass| res.classes.iter().find(|t| t.class == c).unwrap();
+    assert_eq!(by(DeviceClass::Lite).cloud_events, 0, "lite must degrade to edge-only");
+    assert!(by(DeviceClass::Nx).cloud_events > 0, "nx must keep offloading");
+    assert!(by(DeviceClass::Cloudlet).cloud_events > 0, "cloudlet must keep offloading");
+    for s in &res.sessions {
+        assert_eq!(s.family, ModelFamily::OpenVlaAr);
+    }
+}
+
+#[test]
+fn cache_hits_never_cross_a_class_boundary() {
+    // direct key check: same kinematic bin, different class, disjoint keys
+    let cfg = rapid::config::CacheConfig::default();
+    let frame = rapid::robot::SensorFrame {
+        step: 0,
+        q: rapid::robot::Jv::splat(0.3),
+        dq: rapid::robot::Jv::splat(0.2),
+        tau: rapid::robot::Jv::ZERO,
+    };
+    let base = rapid::cache::Signature::of(&cfg, 1, &frame, None, ModelFamily::Surrogate);
+    for class in [DeviceClass::Agx, DeviceClass::Nx, DeviceClass::Lite] {
+        let tagged = rapid::cache::Signature::of_class(
+            &cfg,
+            1,
+            &frame,
+            None,
+            ModelFamily::Surrogate,
+            class,
+        );
+        assert_ne!(base, tagged, "{class:?} must not share the cloudlet key");
+    }
+    // fleet-level face: the lockstep Cloud-Only fleet whose 8 identical
+    // sessions cross-serve each other from the shared store stops doing
+    // so across a class split — fewer hits, more wire inferences
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 8;
+    sys.cache.enabled = true;
+    let uniform = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert!(uniform.cache.hits > 0, "uniform fleet must cross-serve: {:?}", uniform.cache);
+    let mut split = sys.clone();
+    // agx has no action grid and identical kinematics — only the key
+    // differs, so any hit delta is pure class discrimination
+    split.devices.classes = "cloudlet,agx".into();
+    let mixed = Fleet::local(&split, TaskKind::PickPlace, PolicyKind::CloudOnly).run();
+    assert_all_completed(&mixed, "split cache");
+    assert!(
+        mixed.cache.hits < uniform.cache.hits,
+        "class split must break cross-class reuse: {} vs {}",
+        mixed.cache.hits,
+        uniform.cache.hits
+    );
+    assert!(
+        mixed.total_cloud_events() > uniform.total_cloud_events(),
+        "broken reuse must show up as extra wire inferences"
+    );
+}
+
+#[test]
+fn blocks_device_mix_is_draw_free() {
+    // enabling the device zoo in blocks mode must not consume a single
+    // workload draw: arrivals, episode counts and families stay exactly
+    // the classes-off plan
+    let mut sys = SystemConfig::default();
+    sys.fleet.n_sessions = 6;
+    sys.models.enabled = true;
+    sys.workload.enabled = true;
+    sys.workload.arrivals = "poisson".into();
+    sys.workload.interarrival_rounds = 3.0;
+    sys.workload.seed = 17;
+    let base = Fleet::local(&sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    let mut mixed_sys = sys.clone();
+    mixed_sys.devices.classes = "lite,nx,agx".into();
+    mixed_sys.workload.device_mix = "blocks".into();
+    let mixed = Fleet::local(&mixed_sys, TaskKind::PickPlace, PolicyKind::Rapid).run();
+    assert_eq!(base.sessions.len(), mixed.sessions.len());
+    for (sa, sb) in base.sessions.iter().zip(mixed.sessions.iter()) {
+        assert_eq!(sa.arrival_round, sb.arrival_round, "arrival schedule shifted");
+        assert_eq!(sa.family, sb.family, "family assignment shifted");
+        assert_eq!(sa.episodes.len(), sb.episodes.len(), "episode draws shifted");
+        assert_eq!(sa.class, DeviceClass::Cloudlet);
+        assert_ne!(sb.class, DeviceClass::Cloudlet, "mixed run must assign real classes");
+    }
+}
+
+#[test]
+fn unknown_class_names_and_bad_mix_are_load_errors() {
+    // regression (the PR's headline bugfix): DeviceBudget::of used to
+    // fall back to UNLIMITED for unrecognized strings — a typo silently
+    // removed every budget. All three class-name surfaces now reject at
+    // config load, naming the valid classes.
+    let err = SystemConfig::from_toml("[devices]\nclasses = \"orin\"\n").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("orin"), "error must name the bad class: {msg}");
+    for known in ["cloudlet", "agx", "nx", "lite"] {
+        assert!(msg.contains(known), "error must list valid classes: {msg}");
+    }
+    SystemConfig::from_toml("[placement]\ndevice_class = \"typo\"\n")
+        .expect_err("placement typo must be a load error");
+    SystemConfig::from_toml("[workload]\ndevice_mix = \"weird\"\n")
+        .expect_err("bad device_mix must be a load error");
+    // the happy paths still load
+    let ok = SystemConfig::from_toml("[devices]\nclasses = \"lite, nx\"\n").unwrap();
+    assert!(ok.devices.classes_enabled());
+    assert_eq!(ok.devices.class_list(), vec![DeviceClass::Lite, DeviceClass::Nx]);
+}
+
+#[test]
+fn shipped_configs_keep_the_device_zoo_disabled() {
+    for name in ["configs/libero.toml", "configs/realworld.toml", "configs/stress_noise.toml",
+        "configs/chaos.toml"]
+    {
+        let src = std::fs::read_to_string(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let sys = SystemConfig::from_toml(&src).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!sys.devices.classes_enabled(), "{name} must ship [devices] disabled");
+        assert_eq!(sys.workload.device_mix, "blocks", "{name}: device_mix default");
+    }
+}
